@@ -1,0 +1,53 @@
+//! Memory-stability check for the execute_b runtime path (regression
+//! guard for the upstream execute() input-buffer leak — see
+//! runtime/executable.rs). Run: cargo run --release --example leak_check
+use lexi_moe::eval::RunConfig;
+use lexi_moe::runtime::{Manifest, ModelRuntime, Runtime};
+
+fn rss_mb() -> f64 {
+    let s = std::fs::read_to_string("/proc/self/status").unwrap();
+    s.lines()
+        .find(|l| l.starts_with("VmRSS"))
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|v| v.parse::<f64>().ok())
+        .map(|kb| kb / 1024.0)
+        .unwrap_or(0.0)
+}
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::cpu()?;
+    let m = Manifest::load(Manifest::default_dir())?;
+    let model = ModelRuntime::load(&rt, &m, "deepseek-vl2-tiny")?;
+    let e = model.entry.clone();
+    let rc = RunConfig::baseline(&e);
+    let tokens: Vec<i32> = (0..e.batch * e.prefill_len)
+        .map(|i| 42 + (i as i32 % 128))
+        .collect();
+    let start = rss_mb();
+    println!("start rss {start:.0} MB");
+    for i in 0..60 {
+        let out = model.prefill(&tokens, &rc.k_vec, &rc.gate_bias)?;
+        drop(out);
+        if i % 20 == 19 {
+            println!("prefill iter {i}: rss {:.0} MB", rss_mb());
+        }
+    }
+    let pre = model.prefill(&tokens, &rc.k_vec, &rc.gate_bias)?;
+    let toks = vec![50i32; e.batch];
+    let pos = vec![40i32; e.batch];
+    let mut kv = pre.kv;
+    for i in 0..60 {
+        let d = model.decode(&kv, &toks, &pos, &rc.k_vec, &rc.gate_bias)?;
+        kv = d.kv;
+        if i % 20 == 19 {
+            println!("decode iter {i}: rss {:.0} MB", rss_mb());
+        }
+    }
+    let end = rss_mb();
+    println!("end rss {end:.0} MB (grew {:.0} MB over 120 forwards)", end - start);
+    if end - start > 300.0 {
+        anyhow::bail!("leak detected: {:.0} MB growth", end - start);
+    }
+    println!("leak check OK");
+    Ok(())
+}

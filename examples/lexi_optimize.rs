@@ -1,0 +1,110 @@
+//! The full LExI pipeline on one model, end to end:
+//!
+//!   Stage 1  — data-free Monte-Carlo sensitivity profiling (Alg. 1)
+//!   Stage 2  — evolutionary allocation search per budget (Alg. 2)
+//!   Validate — measured accuracy (probe suite) + modeled H100 throughput
+//!              for baseline vs LExI vs uniform-k ablation
+//!
+//!     cargo run --release --example lexi_optimize -- [model] [iters]
+
+use anyhow::Result;
+use lexi_moe::config::experiment::ExperimentConfig;
+use lexi_moe::config::model::spec;
+use lexi_moe::eval::{multiple_choice as mc, EvalSuite, RunConfig};
+use lexi_moe::lexi::pipeline::{stage1, stage2, table_path};
+use lexi_moe::moe::allocation::Allocation;
+use lexi_moe::moe::transform::Transform;
+use lexi_moe::perfmodel::PerfModel;
+use lexi_moe::runtime::{Manifest, ModelRuntime, Runtime};
+
+fn main() -> Result<()> {
+    let model_name = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "qwen1.5-moe-a2.7b".to_string());
+    let mut cfg = ExperimentConfig::default();
+    if let Some(it) = std::env::args().nth(2) {
+        cfg.sensitivity_iters = it.parse()?;
+    }
+
+    let rt = Runtime::cpu()?;
+    let manifest = Manifest::load(Manifest::default_dir())?;
+    let model = ModelRuntime::load(&rt, &manifest, &model_name)?;
+    let mspec = spec(&model_name)?;
+    let entry = model.entry.clone();
+
+    // Stage 1 (cached in artifacts/<model>/sensitivity.json).
+    let t0 = std::time::Instant::now();
+    let table = stage1(
+        &model,
+        &cfg,
+        Some(&table_path(&manifest.root, &model_name)),
+        false,
+    )?;
+    println!(
+        "stage 1: {} layers x k<={} in {:.1}s ({} iters/layer)",
+        table.n_layers(),
+        table.k_base,
+        t0.elapsed().as_secs_f64(),
+        table.iters
+    );
+
+    // Stage 2 per budget + validation.
+    let suite = EvalSuite::load(&manifest)?;
+    let pm = PerfModel::new(mspec.clone(), cfg.seed);
+    println!(
+        "\n{:<24} {:>8} {:>13} {:>10}",
+        "config", "budget", "tok/s (H100)", "probe acc"
+    );
+
+    let eval_cfg = |rc: &RunConfig| -> Result<f64> {
+        let scores = mc::task_suite(&model, &suite, &mc::lmeval_tasks(&suite), rc)?;
+        Ok(mc::mean_accuracy(&scores))
+    };
+
+    let base_rc = RunConfig::baseline(&entry);
+    let base_t = pm.throughput(&Transform::Baseline, 16, 1024, 512);
+    println!(
+        "{:<24} {:>8} {:>13.1} {:>10.3}",
+        "baseline",
+        mspec.baseline_budget(),
+        base_t.throughput_tok_s,
+        eval_cfg(&base_rc)?
+    );
+
+    for budget in mspec.budget_sweep() {
+        let t1 = std::time::Instant::now();
+        let res = stage2(&table, budget as u32, &cfg)?;
+        let lexi = Transform::Lexi {
+            allocation: res.best.clone(),
+        };
+        let rc = RunConfig::for_transform(&entry, &lexi, None)?;
+        let tput = pm.throughput(&lexi, 16, 1024, 512);
+        println!(
+            "{:<24} {:>8} {:>13.1} {:>10.3}   (search {:.2}s, {} evals)",
+            format!("lexi B={budget}"),
+            budget,
+            tput.throughput_tok_s,
+            eval_cfg(&rc)?,
+            t1.elapsed().as_secs_f64(),
+            res.evaluations
+        );
+        println!("  allocation: {}", res.best);
+
+        // ablation: uniform allocation at (roughly) the same budget
+        let uni_k = ((budget as f64 / mspec.n_layers as f64).round().max(1.0) as u32)
+            .min(mspec.top_k as u32);
+        let uni = Transform::Lexi {
+            allocation: Allocation::uniform(mspec.n_layers, uni_k),
+        };
+        let urc = RunConfig::for_transform(&entry, &uni, None)?;
+        let utput = pm.throughput(&uni, 16, 1024, 512);
+        println!(
+            "{:<24} {:>8} {:>13.1} {:>10.3}",
+            format!("uniform k={uni_k}"),
+            uni_k as usize * mspec.n_layers,
+            utput.throughput_tok_s,
+            eval_cfg(&urc)?
+        );
+    }
+    Ok(())
+}

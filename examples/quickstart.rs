@@ -1,0 +1,57 @@
+//! Quickstart: load an analogue model through the PJRT runtime, submit a
+//! prompt to the serving engine, and print the generated tokens.
+//!
+//!     cargo run --release --example quickstart -- [model]
+//!
+//! Requires `make artifacts` (trains the tiny analogues once).
+
+use anyhow::Result;
+use lexi_moe::config::serving::ServingConfig;
+use lexi_moe::engine::{Engine, SamplingParams, Tokenizer};
+use lexi_moe::eval::{EvalSuite, RunConfig};
+use lexi_moe::runtime::{Manifest, ModelRuntime, Runtime};
+
+fn main() -> Result<()> {
+    let model_name = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "mixtral-8x7b".to_string());
+
+    // 1. Load the AOT artifacts (HLO text + trained weights).
+    let rt = Runtime::cpu()?;
+    let manifest = Manifest::load(Manifest::default_dir())?;
+    let model = ModelRuntime::load(&rt, &manifest, &model_name)?;
+    let entry = model.entry.clone();
+    println!(
+        "loaded {} ({} layers, {} experts, top-{}) on {}",
+        entry.name, entry.n_layers, entry.n_experts, entry.top_k,
+        rt.platform()
+    );
+
+    // 2. Start a serving engine at the baseline configuration.
+    let scfg = ServingConfig {
+        batch: entry.batch,
+        max_seq: entry.max_seq,
+        prefill_len: entry.prefill_len,
+        ..Default::default()
+    };
+    let rc = RunConfig::baseline(&entry);
+    let mut engine = Engine::new(&model, scfg, rc.k_vec, rc.gate_bias)?;
+
+    // 3. Submit a prompt from the held-out corpus and generate.
+    let suite = EvalSuite::load(&manifest)?;
+    let prompt = suite.ppl_seqs("c4")?.row(0)[..32].to_vec();
+    let tok = Tokenizer::new(manifest.vocab.clone());
+    println!("prompt:    {}", tok.render_seq(&prompt));
+    engine.submit(
+        prompt,
+        SamplingParams {
+            max_new_tokens: 12,
+            stop_on_eos: false,
+            ..Default::default()
+        },
+    )?;
+    let outs = engine.run_until_complete()?;
+    println!("generated: {}", tok.render_seq(&outs[0].tokens));
+    println!("\n{}", engine.metrics.summary());
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! ASCII rendering of the Fig. 3 sensitivity heatmap for one model:
+//! per-layer normalized top-k perturbation loss (Alg. 1).
+//!
+//!     cargo run --release --example sensitivity_heatmap -- [model] [iters]
+
+use anyhow::Result;
+use lexi_moe::config::experiment::ExperimentConfig;
+use lexi_moe::lexi::pipeline::{stage1, table_path};
+use lexi_moe::runtime::{Manifest, ModelRuntime, Runtime};
+
+const SHADES: [char; 10] = [' ', '.', ':', '-', '=', '+', '*', '#', '%', '@'];
+
+fn main() -> Result<()> {
+    let model_name = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "olmoe-1b-7b".to_string());
+    let mut cfg = ExperimentConfig::default();
+    if let Some(it) = std::env::args().nth(2) {
+        cfg.sensitivity_iters = it.parse()?;
+    }
+
+    let rt = Runtime::cpu()?;
+    let manifest = Manifest::load(Manifest::default_dir())?;
+    let model = ModelRuntime::load(&rt, &manifest, &model_name)?;
+    let table = stage1(
+        &model,
+        &cfg,
+        Some(&table_path(&manifest.root, &model_name)),
+        false,
+    )?;
+
+    println!(
+        "top-k sensitivity heatmap: {} (rows = k, cols = layer; darker = larger Δ)",
+        table.model
+    );
+    // global normalization so depth structure is visible
+    let max = table
+        .loss
+        .iter()
+        .flatten()
+        .cloned()
+        .fold(f64::MIN, f64::max)
+        .max(1e-12);
+    for k in 1..=table.k_base {
+        let mut row = String::new();
+        for layer in 0..table.n_layers() {
+            let v = table.d(layer, k) / max;
+            let idx = ((v * (SHADES.len() - 1) as f64).round() as usize).min(SHADES.len() - 1);
+            row.push(SHADES[idx]);
+        }
+        println!("k={k:<2} |{row}|");
+    }
+    println!(
+        "      {}",
+        (0..table.n_layers())
+            .map(|l| if l % 10 == 0 { '|' } else { ' ' })
+            .collect::<String>()
+    );
+    println!("layer 0..{}", table.n_layers() - 1);
+
+    // depth profile summary (which end of the model is sensitive?)
+    let l = table.n_layers();
+    let front: f64 = table.loss[..l / 3].iter().map(|r| r[0]).sum::<f64>() / (l / 3) as f64;
+    let back: f64 = table.loss[l - l / 3..].iter().map(|r| r[0]).sum::<f64>() / (l / 3) as f64;
+    let mid: f64 = table.loss[l / 3..l - l / 3]
+        .iter()
+        .map(|r| r[0])
+        .sum::<f64>()
+        / (l - 2 * (l / 3)) as f64;
+    println!("\nΔ(k=1) depth profile: front {front:.2}  mid {mid:.2}  back {back:.2}");
+    Ok(())
+}

@@ -1,0 +1,204 @@
+"""AOT exporter: trains the analogues (once) and lowers the inference
+graphs to HLO *text* for the Rust/PJRT runtime.
+
+HLO text — NOT `.serialize()` — is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` 0.1.6 crate links) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+Env:    LEXI_MODELS=qwen1.5-moe-a2.7b,...   subset of models
+        LEXI_STEPS=250                       training-step override
+        LEXI_FORCE=1                         retrain even if cached
+
+Python runs only here (build time); the Rust binary is self-contained
+afterwards.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import configs as C
+from . import data as D
+from . import model as M
+from . import train as T
+
+PROFILE_TOKENS = 128  # token count of the Stage-1 moe_layer graph
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def param_specs(cfg: C.ModelConfig):
+    """ShapeDtypeStructs mirroring model.init_params (no RNG cost)."""
+    params = jax.eval_shape(lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+    return jax.tree_util.tree_map(lambda s: _spec(s.shape, s.dtype), params)
+
+
+def export_model_graphs(cfg: C.ModelConfig, out_dir: str):
+    """Lower prefill / decode / moe_layer for one model; return file map."""
+    L, E, H, F = cfg.n_layers, cfg.n_experts, cfg.hidden, cfg.ffn
+    B, Tp = cfg.batch, cfg.prefill_len
+    nh, hd = cfg.n_heads, cfg.head_dim
+    p_specs = param_specs(cfg)
+    kvec_s = _spec((L,), jnp.int32)
+    bias_s = _spec((L, E), jnp.float32)
+
+    files = {}
+
+    def prefill(params, tokens, k_vec, gate_bias):
+        logits, kv = M.forward_prefill(params, tokens, k_vec, gate_bias, cfg,
+                                       use_kernels=True)
+        return logits, kv
+
+    lowered = jax.jit(prefill).lower(
+        p_specs, _spec((B, Tp), jnp.int32), kvec_s, bias_s)
+    files["prefill"] = "prefill.hlo.txt"
+    with open(os.path.join(out_dir, files["prefill"]), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    kv_s = _spec((L, 2, B, cfg.max_seq, nh, hd), jnp.float32)
+
+    def decode(params, kv, tokens, pos, k_vec, gate_bias):
+        return M.forward_decode(params, kv, tokens, pos, k_vec, gate_bias,
+                                cfg, use_kernels=True)
+
+    lowered = jax.jit(decode).lower(
+        p_specs, kv_s, _spec((B,), jnp.int32), _spec((B,), jnp.int32),
+        kvec_s, bias_s)
+    files["decode"] = "decode.hlo.txt"
+    with open(os.path.join(out_dir, files["decode"]), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    def moe_layer(x, gate_w, gate_bias, w1, w3, w2, k):
+        return (M.moe_layer_forward(x, gate_w, gate_bias, w1, w3, w2, k, cfg,
+                                    use_kernels=True),)
+
+    lowered = jax.jit(moe_layer).lower(
+        _spec((PROFILE_TOKENS, H)), _spec((H, E)), _spec((E,)),
+        _spec((E, H, F)), _spec((E, H, F)), _spec((E, F, H)),
+        _spec((), jnp.int32))
+    files["moe_layer"] = "moe_layer.hlo.txt"
+    with open(os.path.join(out_dir, files["moe_layer"]), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    return files
+
+
+def load_params_npz(cfg: C.ModelConfig, path: str):
+    """Inverse of train.save_params_npz (for cached re-export)."""
+    npz = np.load(path)
+    specs = param_specs(cfg)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(specs)
+    leaves = []
+    for p, spec in flat:
+        name = "/".join(str(k.key) for k in p)
+        leaves.append(jnp.asarray(npz[name]))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def build_model(cfg: C.ModelConfig, out_root: str, steps: int | None,
+                force: bool):
+    out_dir = os.path.join(out_root, cfg.name)
+    os.makedirs(out_dir, exist_ok=True)
+    params_path = os.path.join(out_dir, "params.npz")
+
+    if force or not os.path.exists(params_path):
+        params, log = T.train_model(cfg, steps=steps)
+        T.save_params_npz(params, params_path)
+        T.save_log(log, os.path.join(out_dir, "train_log.json"))
+    else:
+        print(f"[{cfg.name}] cached params found, skipping training")
+        params = load_params_npz(cfg, params_path)
+
+    calib_path = os.path.join(out_dir, "calib.npz")
+    if force or not os.path.exists(calib_path):
+        stats = T.calibration_stats(params, cfg)
+        np.savez(calib_path, **stats)
+
+    files = export_model_graphs(cfg, out_dir)
+    files["params"] = "params.npz"
+    files["calib"] = "calib.npz"
+    files["train_log"] = "train_log.json"
+
+    specs = param_specs(cfg)
+    flat = jax.tree_util.tree_flatten_with_path(specs)[0]
+    order, shapes = [], {}
+    for p, spec in flat:
+        name = "/".join(str(k.key) for k in p)
+        order.append(name)
+        shapes[name] = list(spec.shape)
+
+    entry = cfg.to_dict()
+    entry["files"] = files
+    entry["param_order"] = order
+    entry["param_shapes"] = shapes
+    entry["profile_tokens"] = PROFILE_TOKENS
+    return entry
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default=os.environ.get("LEXI_MODELS", ""))
+    ap.add_argument("--steps", type=int,
+                    default=int(os.environ.get("LEXI_STEPS", "0")) or None)
+    ap.add_argument("--force", action="store_true",
+                    default=os.environ.get("LEXI_FORCE", "") == "1")
+    args = ap.parse_args()
+
+    names = [n for n in args.models.split(",") if n] or C.ALL_NAMES
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"models": {}, "vocab": {
+        "size": C.VOCAB, "pad": C.PAD, "bos": C.BOS, "eos": C.EOS,
+        "key": C.KEY, "qry": C.QRY, "fact": C.FACT, "ask": C.ASK,
+        "ans": C.ANS, "sep": C.SEP, "img": C.IMG,
+        "val_base": C.VAL_BASE, "n_vals": C.N_VALS,
+        "text_base": C.TEXT_BASE, "n_text": C.N_TEXT,
+        "img_base": C.IMG_BASE, "n_img": C.N_IMG,
+    }}
+
+    for name in names:
+        cfg = C.MODELS[name]
+        print(f"=== building {name} (L={cfg.n_layers} E={cfg.n_experts} "
+              f"k={cfg.top_k}) ===", flush=True)
+        manifest["models"][name] = build_model(cfg, args.out, args.steps,
+                                               args.force)
+
+    corp_dir = os.path.join(args.out, "corpora")
+    if args.force or not os.path.exists(os.path.join(corp_dir, "meta.json")):
+        meta = D.write_eval_suite(corp_dir, seq_len=C.MODELS[names[0]].prefill_len)
+        print(f"eval suite: {len(meta['tasks'])} tasks")
+    manifest["corpora_dir"] = "corpora"
+
+    # Merge with an existing manifest so per-model subsets compose.
+    man_path = os.path.join(args.out, "manifest.json")
+    if os.path.exists(man_path) and not args.force:
+        with open(man_path) as f:
+            old = json.load(f)
+        old_models = old.get("models", {})
+        old_models.update(manifest["models"])
+        manifest["models"] = old_models
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {man_path} ({len(manifest['models'])} models)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Tiny analogue configs of the paper's Table-1 MoE models.
+
+Each analogue preserves the *structural* quantities LExI depends on —
+layer count, expert count, baseline top-k — while shrinking hidden/FFN
+dims so the models can be trained and evaluated on a single CPU core.
+The paper-scale dims (for the H100 performance model on the Rust side)
+live in rust/src/config/model.rs; the two sides share `name` keys.
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    # Identity (matches rust/src/config/model.rs keys)
+    name: str
+    # Structure copied from the paper's Table 1
+    n_layers: int
+    n_experts: int
+    top_k: int  # baseline pretrained top-k (k_base)
+    # Tiny-analogue dims (paper-scale dims live on the Rust side)
+    hidden: int = 32
+    ffn: int = 64
+    n_heads: int = 4
+    vocab: int = 256
+    # Sequence geometry shared with the Rust engine
+    max_seq: int = 128          # KV-cache capacity
+    prefill_len: int = 96       # static prefill graph length
+    batch: int = 8              # static batch (shared by prefill + decode)
+    # Build-time training
+    train_seq: int = 96
+    train_batch: int = 2
+    train_steps: int = 500
+    lr: float = 3e-3
+    is_vlm: bool = False
+
+    @property
+    def head_dim(self) -> int:
+        return self.hidden // self.n_heads
+
+    def to_dict(self):
+        d = asdict(self)
+        d["head_dim"] = self.head_dim
+        return d
+
+
+# Table 1 of the paper (layer / expert / top-k structure preserved):
+#   Model                       #Layers  #Experts  TopK
+#   DeepSeek VL2-Tiny              12       64       6
+#   OLMoE-1B-7B-0125-Instruct      16       64       8
+#   Qwen1.5-MoE-A2.7B-Chat         24       60       4
+#   DeepSeek-V2-Lite-Chat          27       64       6
+#   MiniCPM-MoE-8x2B               40        8       2
+#   Mixtral-8x7B-Instruct-v0.1     32        8       2
+MODELS = {
+    "deepseek-vl2-tiny": ModelConfig(
+        name="deepseek-vl2-tiny", n_layers=12, n_experts=64, top_k=6,
+        is_vlm=True,
+    ),
+    "olmoe-1b-7b": ModelConfig(
+        name="olmoe-1b-7b", n_layers=16, n_experts=64, top_k=8,
+    ),
+    "qwen1.5-moe-a2.7b": ModelConfig(
+        name="qwen1.5-moe-a2.7b", n_layers=24, n_experts=60, top_k=4,
+    ),
+    "deepseek-v2-lite": ModelConfig(
+        name="deepseek-v2-lite", n_layers=27, n_experts=64, top_k=6,
+    ),
+    "minicpm-moe-8x2b": ModelConfig(
+        name="minicpm-moe-8x2b", n_layers=40, n_experts=8, top_k=2, ffn=96,
+    ),
+    "mixtral-8x7b": ModelConfig(
+        name="mixtral-8x7b", n_layers=32, n_experts=8, top_k=2, ffn=96,
+    ),
+}
+
+# The five LLMs used in Figs. 4-7 (the VLM is Fig. 8).
+LLM_NAMES = [
+    "olmoe-1b-7b",
+    "qwen1.5-moe-a2.7b",
+    "deepseek-v2-lite",
+    "minicpm-moe-8x2b",
+    "mixtral-8x7b",
+]
+VLM_NAME = "deepseek-vl2-tiny"
+ALL_NAMES = LLM_NAMES + [VLM_NAME]
+
+
+# ---------------------------------------------------------------------------
+# Shared vocabulary layout (mirrored in rust/src/engine/tokenizer.rs)
+# ---------------------------------------------------------------------------
+PAD, BOS, EOS = 0, 1, 2
+KEY, QRY, FACT, ASK, ANS, SEP, IMG = 3, 4, 5, 6, 7, 8, 9
+VAL_BASE, N_VALS = 10, 32          # "digit"/value tokens 10..41
+TEXT_BASE, N_TEXT = 42, 128        # Markov text tokens 42..169
+IMG_BASE, N_IMG = 170, 64          # image patch tokens 170..233
+VOCAB = 256

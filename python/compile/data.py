@@ -1,0 +1,496 @@
+"""Synthetic corpora + evaluation task suites (DESIGN.md §3 substitutions).
+
+Each generator stands in for one of the paper's datasets and measures the
+same capability axis:
+
+  * three Markov corpora with distinct statistics  -> C4 / PTB / WikiText ppl
+  * passkey-in-garbage retrieval                   -> passkey task (Fig. 6)
+  * scattered FACT/ASK extractive QA (token F1)    -> Qasper / LongBench (Fig. 5)
+  * nine structured probe tasks (4-way MC)         -> LM-Eval 9-task avg (Fig. 4)
+  * three image-token-prefix probe tasks           -> MME / MMMU / ScienceQA (Fig. 8)
+
+Everything is emitted as int32 npz arrays + a JSON sidecar so the Rust
+harness can replay them without Python.
+"""
+
+import json
+
+import numpy as np
+
+from . import configs as C
+
+# ---------------------------------------------------------------------------
+# Markov corpora ("C4", "PTB", "WikiText" analogues)
+# ---------------------------------------------------------------------------
+
+
+def _zipf_probs(rng, n, alpha):
+    """Zipf-ish row with a random permutation so rows differ."""
+    p = 1.0 / np.arange(1, n + 1) ** alpha
+    rng.shuffle(p)
+    return p / p.sum()
+
+
+class MarkovCorpus:
+    """Order-1 or order-2 Markov chain over the text-token range."""
+
+    def __init__(self, seed: int, order: int, alpha: float,
+                 motif: bool = False):
+        self.order = order
+        self.alpha = alpha
+        self.motif = motif
+        rng = np.random.default_rng(seed)
+        n = C.N_TEXT
+        if order == 1:
+            self.trans = np.stack([_zipf_probs(rng, n, alpha) for _ in range(n)])
+        else:
+            # Factored order-2: P(x_t | x_{t-1}, x_{t-2}) mixes two order-1
+            # tables — full n^2 x n tables would be 2M rows of noise.
+            self.t1 = np.stack([_zipf_probs(rng, n, alpha) for _ in range(n)])
+            self.t2 = np.stack([_zipf_probs(rng, n, alpha) for _ in range(n)])
+        self.init = _zipf_probs(rng, 1.2, n) if False else _zipf_probs(rng, n, 1.1)
+        # Optional periodic motif ("wikitext" headers): a fixed 6-token
+        # phrase injected every ~24 tokens.
+        self.motif_toks = rng.integers(0, n, size=6)
+
+    def sample(self, rng, length: int) -> np.ndarray:
+        n = C.N_TEXT
+        out = np.empty(length, dtype=np.int64)
+        out[0] = rng.choice(n, p=self.init)
+        if self.order >= 2:
+            out[1] = rng.choice(n, p=self.t1[out[0]]) if length > 1 else 0
+        start = 1 if self.order == 1 else 2
+        for t in range(start, length):
+            if self.order == 1:
+                p = self.trans[out[t - 1]]
+            else:
+                p = 0.5 * self.t1[out[t - 1]] + 0.5 * self.t2[out[t - 2]]
+            out[t] = rng.choice(n, p=p)
+        if self.motif:
+            m = len(self.motif_toks)
+            for pos in range(8, length - m, 24):
+                out[pos:pos + m] = self.motif_toks
+        return out + C.TEXT_BASE
+
+    def next_probs(self, prev1: int, prev2: int) -> np.ndarray:
+        """True next-token distribution (text-range indices)."""
+        if self.order == 1:
+            return self.trans[prev1 - C.TEXT_BASE]
+        return 0.5 * self.t1[prev1 - C.TEXT_BASE] + 0.5 * self.t2[prev2 - C.TEXT_BASE]
+
+
+def corpora():
+    """The three eval corpora; 'c4' also dominates the training mixture."""
+    return {
+        "c4": MarkovCorpus(seed=101, order=2, alpha=1.1),
+        "ptb": MarkovCorpus(seed=202, order=1, alpha=1.6),
+        "wikitext": MarkovCorpus(seed=303, order=2, alpha=0.9, motif=True),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Task sequence formats (shared by training mixture and eval suites)
+# ---------------------------------------------------------------------------
+
+
+def make_passkey(rng, corpus, seq_len: int, depth_frac: float):
+    """[BOS] garbage... QRY KEY v1 v2 v3 garbage... QRY KEY -> v1 v2 v3 [EOS].
+
+    The retrieval cue (QRY KEY) is *repeated* at query time, making the
+    task a pure induction pattern (match the earlier cue, copy what
+    followed) — the mechanism tiny transformers actually learn. Faithful
+    to the paper's passkey task: the model must retrieve an exact value
+    planted at a controlled depth inside distractor text."""
+    vals = rng.integers(C.VAL_BASE, C.VAL_BASE + C.N_VALS, size=3)
+    answer_len = 3
+    tail = answer_len + 3  # QRY KEY + answer + EOS
+    body_len = seq_len - 1 - tail
+    garbage = corpus.sample(rng, body_len)
+    key_pos = 1 + int(depth_frac * (body_len - 6))
+    seq = np.empty(seq_len, dtype=np.int64)
+    seq[0] = C.BOS
+    seq[1:1 + body_len] = garbage
+    seq[key_pos] = C.QRY
+    seq[key_pos + 1] = C.KEY
+    seq[key_pos + 2:key_pos + 5] = vals
+    q = 1 + body_len
+    seq[q] = C.QRY
+    seq[q + 1] = C.KEY
+    seq[q + 2:q + 5] = vals
+    seq[q + 5] = C.EOS
+    prompt_len = q + 2  # prompt ends after the repeated QRY KEY cue
+    return seq, prompt_len, vals
+
+
+def make_longqa(rng, corpus, seq_len: int, n_facts: int = 4):
+    """Scattered FACT <name> <v1> <v2> pairs; ASK <name> -> ANS <v1> <v2>."""
+    names = rng.choice(C.N_VALS, size=n_facts, replace=False) + C.VAL_BASE
+    vals = rng.integers(C.VAL_BASE, C.VAL_BASE + C.N_VALS, size=(n_facts, 2))
+    tail = 6  # ASK name ANS v1 v2 EOS
+    body_len = seq_len - 1 - tail
+    seq = np.empty(seq_len, dtype=np.int64)
+    seq[0] = C.BOS
+    seq[1:1 + body_len] = corpus.sample(rng, body_len)
+    positions = np.sort(rng.choice(np.arange(2, body_len - 4), size=n_facts,
+                                   replace=False))
+    for i, p in enumerate(positions):
+        seq[1 + p] = C.FACT
+        seq[2 + p] = names[i]
+        seq[3 + p:5 + p] = vals[i]
+    qi = rng.integers(0, n_facts)
+    q = 1 + body_len
+    seq[q] = C.ASK
+    seq[q + 1] = names[qi]
+    seq[q + 2] = C.ANS
+    seq[q + 3:q + 5] = vals[qi]
+    seq[q + 5] = C.EOS
+    prompt_len = q + 3  # prompt ends after ANS; model emits the 2 values
+    return seq, prompt_len, vals[qi]
+
+
+# --- the nine LM-Eval probe tasks -----------------------------------------
+# Each returns (full_seq, prompt_len, candidates [4, clen], label).
+# Candidates are scored by total log-prob of the continuation (exactly the
+# lm-eval multiple-choice protocol); the "correct" candidate is the one the
+# training distribution makes most likely / the task's ground truth.
+
+
+def _mc_from_distribution(rng, probs, answer_len=1):
+    """True answer = distribution mode; distractors = low-prob tokens."""
+    order = np.argsort(-probs)
+    true_tok = order[0]
+    distract = order[len(order) // 2:]
+    picks = rng.choice(distract, size=3, replace=False)
+    cands = np.array([[true_tok], [picks[0]], [picks[1]], [picks[2]]]) + C.TEXT_BASE
+    perm = rng.permutation(4)
+    return cands[perm], int(np.where(perm == 0)[0][0])
+
+
+def probe_bigram(rng, corpora_d, seq_len):
+    c = corpora_d["c4"]
+    ctx = c.sample(rng, seq_len - 1)
+    seq = np.concatenate([[C.BOS], ctx])
+    probs = c.next_probs(ctx[-1], ctx[-2])
+    cands, label = _mc_from_distribution(rng, probs)
+    return seq, len(seq), cands, label
+
+
+def probe_peaked(rng, corpora_d, seq_len):
+    c = corpora_d["ptb"]
+    ctx = c.sample(rng, seq_len - 1)
+    seq = np.concatenate([[C.BOS], ctx])
+    probs = c.next_probs(ctx[-1], ctx[-1])
+    cands, label = _mc_from_distribution(rng, probs)
+    return seq, len(seq), cands, label
+
+
+def probe_motif(rng, corpora_d, seq_len):
+    """Complete the wikitext motif phrase."""
+    c = corpora_d["wikitext"]
+    ctx = c.sample(rng, seq_len - 1)
+    # cut right before the last motif token
+    m = c.motif_toks + C.TEXT_BASE
+    # find last motif occurrence
+    pos = None
+    for p in range(len(ctx) - 6, 0, -1):
+        if np.array_equal(ctx[p:p + 5], m[:5]):
+            pos = p
+            break
+    if pos is None:  # fall back to bigram probe
+        return probe_bigram(rng, corpora_d, seq_len)
+    seq = np.concatenate([[C.BOS], ctx[:pos + 5]])
+    true_tok = m[5]
+    others = rng.choice(C.N_TEXT, size=3, replace=False) + C.TEXT_BASE
+    others = np.where(others == true_tok, (others + 1 - C.TEXT_BASE) % C.N_TEXT + C.TEXT_BASE, others)
+    cands = np.stack([[true_tok], [others[0]], [others[1]], [others[2]]])
+    perm = rng.permutation(4)
+    return seq, len(seq), cands[perm], int(np.where(perm == 0)[0][0])
+
+
+def _copy_probe(rng, corpora_d, seq_len, pair_dist):
+    """a b ... SEP a -> b  (induction-head copy at distance pair_dist)."""
+    c = corpora_d["c4"]
+    ctx = c.sample(rng, seq_len - 4)
+    a = rng.integers(C.TEXT_BASE, C.TEXT_BASE + C.N_TEXT)
+    b = rng.integers(C.TEXT_BASE, C.TEXT_BASE + C.N_TEXT)
+    pos = max(1, len(ctx) - pair_dist)
+    ctx[pos - 1] = a
+    ctx[pos] = b
+    seq = np.concatenate([[C.BOS], ctx, [C.SEP, a]])
+    others = rng.choice(C.N_TEXT, size=3, replace=False) + C.TEXT_BASE
+    others = np.where(others == b, (others + 1 - C.TEXT_BASE) % C.N_TEXT + C.TEXT_BASE, others)
+    cands = np.stack([[b], [others[0]], [others[1]], [others[2]]])
+    perm = rng.permutation(4)
+    return seq, len(seq), cands[perm], int(np.where(perm == 0)[0][0])
+
+
+def probe_copy_near(rng, d, n):
+    return _copy_probe(rng, d, n, pair_dist=8)
+
+
+def probe_copy_far(rng, d, n):
+    return _copy_probe(rng, d, n, pair_dist=32)
+
+
+def probe_induction(rng, d, n):
+    return _copy_probe(rng, d, n, pair_dist=16)
+
+
+def probe_retrieval(rng, corpora_d, seq_len):
+    """Short passkey as MC: KEY v ... QRY -> v."""
+    c = corpora_d["c4"]
+    seq, plen, vals = make_passkey(rng, c, seq_len, rng.uniform(0.1, 0.9))
+    seq = seq[:plen + 1]  # prompt + first answer token
+    true_tok = vals[0]
+    others = rng.choice(C.N_VALS, size=3, replace=False) + C.VAL_BASE
+    others = np.where(others == true_tok, (others - C.VAL_BASE + 1) % C.N_VALS + C.VAL_BASE, others)
+    cands = np.stack([[true_tok], [others[0]], [others[1]], [others[2]]])
+    perm = rng.permutation(4)
+    return seq[:plen], plen, cands[perm], int(np.where(perm == 0)[0][0])
+
+
+def probe_factqa(rng, corpora_d, seq_len):
+    c = corpora_d["c4"]
+    seq, plen, vals = make_longqa(rng, c, seq_len)
+    true_tok = vals[0]
+    others = rng.choice(C.N_VALS, size=3, replace=False) + C.VAL_BASE
+    others = np.where(others == true_tok, (others - C.VAL_BASE + 1) % C.N_VALS + C.VAL_BASE, others)
+    cands = np.stack([[true_tok], [others[0]], [others[1]], [others[2]]])
+    perm = rng.permutation(4)
+    return seq[:plen], plen, cands[perm], int(np.where(perm == 0)[0][0])
+
+
+def probe_trigram(rng, corpora_d, seq_len):
+    c = corpora_d["c4"]
+    ctx = c.sample(rng, seq_len - 1)
+    seq = np.concatenate([[C.BOS], ctx])
+    probs = c.next_probs(ctx[-1], ctx[-2])
+    # two-token continuation: mode then mode-of-mode
+    t1 = int(np.argmax(probs))
+    p2 = c.next_probs(t1 + C.TEXT_BASE, ctx[-1])
+    t2 = int(np.argmax(p2))
+    true = np.array([t1, t2]) + C.TEXT_BASE
+    cands = [true]
+    for _ in range(3):
+        cands.append(rng.choice(C.N_TEXT, size=2) + C.TEXT_BASE)
+    cands = np.stack(cands)
+    perm = rng.permutation(4)
+    return seq, len(seq), cands[perm], int(np.where(perm == 0)[0][0])
+
+
+# Names roughly paired with the paper's nine LM-Eval tasks.
+PROBE_TASKS = {
+    "arc_c": probe_trigram,      # multi-step completion
+    "arc_e": probe_bigram,       # single-step completion
+    "boolq": probe_peaked,       # peaked / low-entropy judgement
+    "hellaswag": probe_motif,    # continuation of a seen pattern
+    "mmlu": probe_factqa,        # knowledge lookup
+    "obqa": probe_copy_near,     # short-range binding
+    "rte": probe_induction,      # mid-range binding
+    "winogrande": probe_copy_far,  # long-range binding
+    "retrieval": probe_retrieval,  # precise value retrieval
+}
+
+
+# --- VLM probes (Fig. 8) ----------------------------------------------------
+# "Image" = IMG + 16 patch tokens from the image range; question afterwards.
+
+
+def vlm_majority(rng, seq_len):
+    """'MME': which of 4 patch classes dominates the image."""
+    classes = rng.choice(C.N_IMG // 4, size=4, replace=False)
+    counts = np.array([7, 4, 3, 2])
+    rng.shuffle(counts)
+    label_cls = int(np.argmax(counts))
+    patches = np.concatenate([
+        np.full(c, C.IMG_BASE + classes[i] * 4) for i, c in enumerate(counts)
+    ])
+    rng.shuffle(patches)
+    seq = np.concatenate([[C.BOS, C.IMG], patches, [C.ASK]])
+    cands = np.stack([[C.IMG_BASE + classes[i] * 4] for i in range(4)])
+    return seq, len(seq), cands, label_cls
+
+
+def vlm_pattern(rng, seq_len):
+    """'MMMU': alternating vs constant vs blockwise vs random pattern."""
+    a, b = rng.choice(C.N_IMG, size=2, replace=False) + C.IMG_BASE
+    kind = rng.integers(0, 4)
+    if kind == 0:
+        patches = np.tile([a, b], 8)
+    elif kind == 1:
+        patches = np.full(16, a)
+    elif kind == 2:
+        patches = np.concatenate([np.full(8, a), np.full(8, b)])
+    else:
+        patches = rng.choice(C.N_IMG, size=16) + C.IMG_BASE
+    seq = np.concatenate([[C.BOS, C.IMG], patches, [C.ASK]])
+    # answer encoded as a value token per pattern class
+    cands = np.stack([[C.VAL_BASE + i] for i in range(4)])
+    return seq, len(seq), cands, int(kind)
+
+
+def vlm_count(rng, seq_len):
+    """'ScienceQA': is the count of target patches above threshold (binary)."""
+    target = C.IMG_BASE
+    n = int(rng.integers(2, 15))
+    patches = np.concatenate([
+        np.full(n, target),
+        rng.choice(np.arange(C.IMG_BASE + 4, C.IMG_BASE + C.N_IMG), size=16 - n),
+    ])
+    rng.shuffle(patches)
+    seq = np.concatenate([[C.BOS, C.IMG], patches, [C.QRY]])
+    label = int(n > 8)
+    cands = np.stack([[C.VAL_BASE], [C.VAL_BASE + 1]])  # no / yes
+    return seq, len(seq), cands, label
+
+
+VLM_TASKS = {"mme": vlm_majority, "mmmu": vlm_pattern, "scienceqa": vlm_count}
+
+
+# ---------------------------------------------------------------------------
+# Training mixture + eval suite emission
+# ---------------------------------------------------------------------------
+
+
+def training_batch(rng, corpora_d, batch, seq_len, vlm: bool):
+    """One [batch, seq_len] LM batch from the task mixture."""
+    out = np.zeros((batch, seq_len), dtype=np.int64)
+    for i in range(batch):
+        r = rng.uniform()
+        if vlm and r < 0.30:
+            fn = list(VLM_TASKS.values())[rng.integers(0, 3)]
+            seq, plen, cands, label = fn(rng, seq_len)
+            full = np.concatenate([seq, cands[label], [C.EOS]])
+            out[i, :min(len(full), seq_len)] = full[:seq_len]
+        elif r < 0.18:
+            seq, _, _ = make_passkey(rng, corpora_d["c4"], seq_len,
+                                     rng.uniform(0.05, 0.95))
+            out[i] = seq
+        elif r < 0.32:
+            seq, _, _ = make_longqa(rng, corpora_d["c4"], seq_len)
+            out[i] = seq
+        elif r < 0.44:
+            name = list(PROBE_TASKS)[rng.integers(0, 9)]
+            seq, plen, cands, label = PROBE_TASKS[name](rng, corpora_d, seq_len - 4)
+            full = np.concatenate([seq, cands[label], [C.EOS]])
+            out[i, :min(len(full), seq_len)] = full[:seq_len]
+        else:
+            name = ["c4", "c4", "c4", "ptb", "wikitext"][rng.integers(0, 5)]
+            seq = corpora_d[name].sample(rng, seq_len - 1)
+            out[i] = np.concatenate([[C.BOS], seq])
+    return out
+
+
+def _pad_to(arr_list, width, pad=0):
+    out = np.full((len(arr_list), width), pad, dtype=np.int32)
+    for i, a in enumerate(arr_list):
+        out[i, :len(a)] = a[:width]
+    return out
+
+
+def build_eval_suite(seq_len: int, seed: int = 7,
+                     n_ppl: int = 8, ppl_len: int = 96,
+                     n_passkey: int = 16, n_longqa: int = 12,
+                     n_probe: int = 16, n_vlm: int = 16):
+    """All eval arrays (int32) + metadata dict, for npz + json emission."""
+    rng = np.random.default_rng(seed)
+    corp = corpora()
+    arrays, meta = {}, {"tasks": {}}
+
+    for name, c in corp.items():
+        seqs = np.stack([np.concatenate([[C.BOS], c.sample(rng, ppl_len - 1)])
+                         for _ in range(n_ppl)]).astype(np.int32)
+        arrays[f"ppl_{name}"] = seqs
+        meta["tasks"][f"ppl_{name}"] = {"kind": "perplexity", "n": n_ppl,
+                                        "len": ppl_len}
+
+    # Passkey across a depth grid (paper: varying depths, 100 iterations —
+    # scaled down for one CPU core; n configurable at harness level).
+    pk_seq, pk_plen, pk_ans, pk_depth = [], [], [], []
+    depths = np.linspace(0.1, 0.9, 5)
+    for d in depths:
+        for _ in range(n_passkey // len(depths) + 1):
+            seq, plen, vals = make_passkey(rng, corp["c4"], seq_len, d)
+            pk_seq.append(seq[:plen])
+            pk_plen.append(plen)
+            pk_ans.append(vals)
+            pk_depth.append(d)
+    arrays["passkey_prompts"] = _pad_to(pk_seq, seq_len)
+    arrays["passkey_plen"] = np.array(pk_plen, dtype=np.int32)
+    arrays["passkey_answers"] = np.array(pk_ans, dtype=np.int32)
+    arrays["passkey_depth_pct"] = (np.array(pk_depth) * 100).astype(np.int32)
+    meta["tasks"]["passkey"] = {"kind": "generate_exact", "answer_len": 3,
+                                "n": len(pk_seq)}
+
+    lq_seq, lq_plen, lq_ans = [], [], []
+    for _ in range(n_longqa):
+        seq, plen, vals = make_longqa(rng, corp["c4"], seq_len)
+        lq_seq.append(seq[:plen])
+        lq_plen.append(plen)
+        lq_ans.append(vals)
+    arrays["longqa_prompts"] = _pad_to(lq_seq, seq_len)
+    arrays["longqa_plen"] = np.array(lq_plen, dtype=np.int32)
+    arrays["longqa_answers"] = np.array(lq_ans, dtype=np.int32)
+    meta["tasks"]["longqa"] = {"kind": "generate_f1", "answer_len": 2,
+                               "n": n_longqa}
+
+    for tname, fn in PROBE_TASKS.items():
+        p_seq, p_plen, p_cands, p_label = [], [], [], []
+        for _ in range(n_probe):
+            seq, plen, cands, label = fn(rng, corp, seq_len - 6)
+            p_seq.append(seq[:plen])
+            p_plen.append(plen)
+            # pad candidates to uniform length 2
+            cpad = np.zeros((4, 2), dtype=np.int32)
+            clen = np.zeros(4, dtype=np.int32)
+            for j in range(4):
+                cc = np.atleast_1d(cands[j])
+                cpad[j, :len(cc)] = cc
+                clen[j] = len(cc)
+            p_cands.append(cpad)
+            p_label.append(label)
+        arrays[f"probe_{tname}_prompts"] = _pad_to(p_seq, seq_len)
+        arrays[f"probe_{tname}_plen"] = np.array(p_plen, dtype=np.int32)
+        arrays[f"probe_{tname}_cands"] = np.stack(p_cands).astype(np.int32)
+        arrays[f"probe_{tname}_labels"] = np.array(p_label, dtype=np.int32)
+        meta["tasks"][f"probe_{tname}"] = {"kind": "multiple_choice",
+                                           "n": n_probe, "n_cands": 4}
+
+    for tname, fn in VLM_TASKS.items():
+        v_seq, v_plen, v_cands, v_label = [], [], [], []
+        for _ in range(n_vlm):
+            seq, plen, cands, label = fn(rng, seq_len)
+            v_seq.append(seq[:plen])
+            v_plen.append(plen)
+            ncand = cands.shape[0]
+            cpad = np.zeros((4, 2), dtype=np.int32)
+            clen = np.zeros(4, dtype=np.int32)
+            for j in range(ncand):
+                cpad[j, :cands.shape[1]] = cands[j]
+                clen[j] = cands.shape[1]
+            v_seq[-1] = seq[:plen]
+            v_cands.append(cpad)
+            v_label.append(label)
+        arrays[f"vlm_{tname}_prompts"] = _pad_to(v_seq, seq_len)
+        arrays[f"vlm_{tname}_plen"] = np.array(v_plen, dtype=np.int32)
+        arrays[f"vlm_{tname}_cands"] = np.stack(v_cands).astype(np.int32)
+        arrays[f"vlm_{tname}_labels"] = np.array(v_label, dtype=np.int32)
+        n_c = 2 if tname == "scienceqa" else 4
+        meta["tasks"][f"vlm_{tname}"] = {"kind": "multiple_choice",
+                                         "n": n_vlm, "n_cands": n_c}
+
+    meta["probe_tasks"] = list(PROBE_TASKS)
+    meta["vlm_tasks"] = list(VLM_TASKS)
+    meta["ppl_corpora"] = list(corp)
+    meta["seq_len"] = seq_len
+    return arrays, meta
+
+
+def write_eval_suite(out_dir: str, seq_len: int, **kw):
+    import os
+    os.makedirs(out_dir, exist_ok=True)
+    arrays, meta = build_eval_suite(seq_len, **kw)
+    np.savez(os.path.join(out_dir, "eval_suite.npz"), **arrays)
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    return meta

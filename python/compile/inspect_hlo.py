@@ -1,0 +1,99 @@
+"""L2 performance analysis: structural inspection of the exported HLO
+(DESIGN.md §Perf). Counts op kinds, fusions, while-loops (scan bodies),
+and flags the decode-graph properties that matter:
+
+  * decode must be O(1) in sequence length per step (no quadratic
+    attention recompute — KV in/out only);
+  * the MoE mixture should be dominated by dot-generals (GEMM-bound),
+    not gathers/scatters;
+  * the rolled scan keeps code size O(1) in depth.
+
+Usage:  python -m compile.inspect_hlo artifacts/<model>/decode.hlo.txt
+        python -m compile.inspect_hlo --all artifacts
+"""
+
+import os
+import re
+import sys
+from collections import Counter
+
+
+# type may be a tuple "(f32[..], ...)" — allow parens and slashes (comments)
+OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*[\w\[\]{}()/*=0-9, ]+\s+([a-z][\w-]*)\(")
+
+
+def analyze(path: str) -> dict:
+    counts = Counter()
+    dot_shapes = []
+    n_lines = 0
+    with open(path) as f:
+        for line in f:
+            n_lines += 1
+            m = OP_RE.match(line)
+            if not m:
+                continue
+            op = m.group(1)
+            counts[op] += 1
+            if op == "dot":
+                shape = line.split("=", 1)[1].strip().split(" ")[0]
+                dot_shapes.append(shape)
+    return {
+        "path": path,
+        "lines": n_lines,
+        "counts": counts,
+        "dot_shapes": dot_shapes,
+    }
+
+
+def report(info: dict) -> str:
+    c = info["counts"]
+    total = sum(c.values())
+    top = ", ".join(f"{op}:{n}" for op, n in c.most_common(10))
+    lines = [
+        f"{info['path']}",
+        f"  {info['lines']} lines, {total} instructions",
+        f"  top ops: {top}",
+        f"  dot={c.get('dot', 0)} gather={c.get('gather', 0)} "
+        f"scatter={c.get('scatter', 0)} while={c.get('while', 0)} "
+        f"fusion={c.get('fusion', 0)}",
+    ]
+    return "\n".join(lines)
+
+
+def check_decode_invariants(info: dict) -> list:
+    """Structural red flags for the decode hot path."""
+    problems = []
+    c = info["counts"]
+    if c.get("while", 0) < 1:
+        problems.append("decode graph lost its rolled scan (depth unrolled?)")
+    if c.get("gather", 0) > c.get("dot", 0) * 4:
+        problems.append(
+            f"gather-heavy graph ({c.get('gather')} gathers vs {c.get('dot')} dots)")
+    # quadratic attention would show as a dot with ctx x ctx output
+    return problems
+
+
+def main():
+    args = sys.argv[1:]
+    if args and args[0] == "--all":
+        root = args[1] if len(args) > 1 else "artifacts"
+        paths = []
+        for d in sorted(os.listdir(root)):
+            for g in ("prefill.hlo.txt", "decode.hlo.txt", "moe_layer.hlo.txt"):
+                p = os.path.join(root, d, g)
+                if os.path.exists(p):
+                    paths.append(p)
+    else:
+        paths = args or ["artifacts/mixtral-8x7b/decode.hlo.txt"]
+
+    for p in paths:
+        info = analyze(p)
+        print(report(info))
+        if "decode" in p:
+            for prob in check_decode_invariants(info):
+                print(f"  !! {prob}")
+        print()
+
+
+if __name__ == "__main__":
+    main()

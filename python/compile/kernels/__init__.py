@@ -1,0 +1,4 @@
+"""L1 Pallas kernels (interpret=True) + pure-jnp oracles (ref)."""
+from . import ref
+from .topk_gate import topk_gate
+from .moe_ffn import moe_ffn, moe_block

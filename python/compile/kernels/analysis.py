@@ -1,0 +1,169 @@
+"""L1 performance analysis: VMEM footprint + MXU-utilization *estimates*
+for the Pallas kernels' BlockSpecs (DESIGN.md §Perf).
+
+interpret=True wall-clock is CPU-numpy time, NOT a TPU proxy — so the L1
+optimization loop reasons structurally: does each grid step fit VMEM
+(~16 MiB/core on TPU v4), and what fraction of its time would the MXU be
+busy (arithmetic intensity vs the 128x128 systolic array's balance point)?
+
+Run as a module for the per-model table:
+    python -m compile.kernels.analysis
+"""
+
+from dataclasses import dataclass
+
+# TPU v4-ish envelope used for the estimates.
+VMEM_BYTES = 16 * 1024 * 1024
+MXU_FLOPS = 137e12          # BF16 peak per core
+HBM_BW = 1.2e12             # B/s per core
+F32 = 4
+
+
+@dataclass
+class KernelEstimate:
+    name: str
+    grid: tuple
+    vmem_bytes: int
+    flops_per_step: float
+    hbm_bytes_per_step: float
+
+    @property
+    def fits_vmem(self) -> bool:
+        return self.vmem_bytes <= VMEM_BYTES
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.flops_per_step / max(self.hbm_bytes_per_step, 1)
+
+    @property
+    def mxu_utilization(self) -> float:
+        """Roofline estimate: fraction of peak MXU the step can sustain
+        given its HBM traffic (1.0 = compute-bound at peak)."""
+        t_compute = self.flops_per_step / MXU_FLOPS
+        t_memory = self.hbm_bytes_per_step / HBM_BW
+        return t_compute / max(t_compute, t_memory)
+
+
+def moe_ffn_estimate(t: int, h: int, f: int, e: int, block_t: int,
+                     block_e: int, block_f: int | None = None,
+                     dtype_bytes: int = F32) -> KernelEstimate:
+    """Estimate one (token-block, expert-block[, ffn-block]) grid step of
+    kernels.moe_ffn.
+
+    VMEM residency per step: x block, W1/W3/W2 panels, gate block, the
+    [bt, be, bf] activation scratch, and the output block. The exported
+    analogue kernel keeps F unblocked (their panels are tiny); the
+    paper-scale mapping tiles F as a third grid axis (Mixtral's
+    4096x14336 panels are ~118 MiB each in BF16, far beyond VMEM).
+    """
+    bt, be = min(block_t, t), min(block_e, e)
+    bf = min(block_f or f, f)
+    vmem = (
+        bt * h                      # x block
+        + 2 * be * h * bf           # W1 + W3 panels
+        + be * bf * h               # W2 panel
+        + bt * be                   # gate weights block
+        + bt * be * bf              # activation scratch
+        + bt * h                    # output block
+    ) * dtype_bytes
+    flops = 3 * 2 * bt * be * h * bf + 2 * bt * be * bf
+    # HBM per step: weight panels stream in; x/out blocks amortize over
+    # the expert/ffn axes (revisited), gate block is tiny.
+    hbm = (3 * be * h * bf + bt * be) * dtype_bytes \
+        + (2 * bt * h * dtype_bytes) / max((e // be) * (f // bf), 1)
+    name = f"moe_ffn[bt={bt},be={be}" + (f",bf={bf}]" if bf < f else "]")
+    return KernelEstimate(
+        name=name,
+        grid=(max(t // bt, 1), max(e // be, 1), max(f // bf, 1)),
+        vmem_bytes=int(vmem),
+        flops_per_step=float(flops),
+        hbm_bytes_per_step=float(hbm),
+    )
+
+
+def topk_gate_estimate(t: int, e: int, block_t: int,
+                       dtype_bytes: int = F32) -> KernelEstimate:
+    """One token-block step of kernels.topk_gate (VPU work, no MXU)."""
+    bt = min(block_t, t)
+    vmem = (bt * e          # scores block
+            + bt * e * e    # rank compare tensor
+            + bt * e        # output
+            ) * dtype_bytes
+    flops = bt * e * e * 2 + 4 * bt * e
+    hbm = 2 * bt * e * dtype_bytes
+    return KernelEstimate(
+        name=f"topk_gate[bt={bt}]",
+        grid=(max(t // bt, 1),),
+        vmem_bytes=int(vmem),
+        flops_per_step=float(flops),
+        hbm_bytes_per_step=float(hbm),
+    )
+
+
+def sweep_block_sizes(t: int, h: int, f: int, e: int,
+                      dtype_bytes: int = F32):
+    """Best MoE-FFN block config: maximize MXU utilization subject to
+    VMEM fit (the structural L1 optimization loop)."""
+    best = None
+    for bt in (32, 64, 128, 256):
+        for be in (1, 2, 4, 8, 16):
+            if e % min(be, e):
+                continue
+            for bf in (128, 256, 512, 1024, 2048, f):
+                if bf > f:
+                    continue
+                est = moe_ffn_estimate(t, h, f, e, bt, be, block_f=bf,
+                                       dtype_bytes=dtype_bytes)
+                if not est.fits_vmem:
+                    continue
+                if best is None or est.mxu_utilization > best.mxu_utilization:
+                    best = est
+    return best
+
+
+def paper_scale_table():
+    """Estimates at the paper-scale dims of Table 1 (for DESIGN §Perf)."""
+    rows = []
+    paper = {
+        "mixtral-8x7b": (4096, 14336, 8),
+        "qwen1.5-moe-a2.7b": (2048, 1408, 60),
+        "olmoe-1b-7b": (2048, 1024, 64),
+        "deepseek-v2-lite": (2048, 1408, 64),
+        "minicpm-moe-8x2b": (2304, 5760, 8),
+        "deepseek-vl2-tiny": (1280, 896, 64),
+    }
+    for name, (h, f, e) in paper.items():
+        best = sweep_block_sizes(t=1024, h=h, f=f, e=e, dtype_bytes=2)
+        rows.append((name, best))
+    return rows
+
+
+def analogue_table():
+    from .. import configs as C
+    rows = []
+    for name, cfg in C.MODELS.items():
+        est = moe_ffn_estimate(cfg.batch * cfg.prefill_len, cfg.hidden,
+                               cfg.ffn, cfg.n_experts, 128, 8)
+        rows.append((name, est))
+    return rows
+
+
+def main():
+    print(f"VMEM budget {VMEM_BYTES >> 20} MiB, MXU {MXU_FLOPS/1e12:.0f} TF, "
+          f"HBM {HBM_BW/1e12:.1f} TB/s\n")
+    print("== tiny analogues (as exported, f32, interpret) ==")
+    for name, est in analogue_table():
+        print(f"{name:<22} {est.name:<24} grid {str(est.grid):<10} "
+              f"vmem {est.vmem_bytes/1024:8.0f} KiB  "
+              f"AI {est.arithmetic_intensity:6.1f}  "
+              f"mxu~{est.mxu_utilization*100:5.1f}%")
+    print("\n== paper scale (bf16-ready), best block config by sweep ==")
+    for name, est in paper_scale_table():
+        print(f"{name:<22} {est.name:<24} grid {str(est.grid):<10} "
+              f"vmem {est.vmem_bytes/1024:8.0f} KiB  "
+              f"AI {est.arithmetic_intensity:6.1f}  "
+              f"mxu~{est.mxu_utilization*100:5.1f}%")
+
+
+if __name__ == "__main__":
+    main()

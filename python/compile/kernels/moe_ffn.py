@@ -1,0 +1,101 @@
+"""Pallas kernel: weighted SwiGLU expert mixture — the MoE compute hot-spot.
+
+Hardware adaptation (DESIGN.md §4): vLLM's FusedMoE assigns CUDA threadblocks
+to (expert, token-tile) pairs reading expert panels from HBM through shared
+memory. The TPU-shaped schedule below expresses the same thing with a Pallas
+grid over (token-block, expert-block): each grid step holds one token block
+[bt, H] and one expert panel W1/W3 [be, H, F] + W2 [be, F, H] in VMEM, runs
+the SwiGLU contractions on the MXU, scales by the gate weights (zero for
+non-routed experts), and *accumulates* into the revisited output block —
+Pallas' sequential-grid revisiting plays the role of the CUDA atomics /
+split-K reduction.
+
+VMEM per grid step (f32 words): bt*H + 2*be*H*F + be*F*H + bt*be*F + bt*H.
+The default blocks keep this under ~1 MiB for every Table-1 analogue; the
+paper-scale estimate lives in DESIGN.md §Perf.
+
+interpret=True: CPU PJRT cannot run Mosaic custom-calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _moe_ffn_kernel(x_ref, w1_ref, w3_ref, w2_ref, wts_ref, o_ref):
+    """Grid step (i=token block, j=expert block), accumulate into o_ref."""
+    j = pl.program_id(1)
+    x = x_ref[...]                        # [bt, H]
+    w1 = w1_ref[...]                      # [be, H, F]
+    w3 = w3_ref[...]
+    w2 = w2_ref[...]                      # [be, F, H]
+    wts = wts_ref[...]                    # [bt, be]
+    # SwiGLU contractions over the expert panel (MXU-shaped matmuls).
+    h1 = jnp.einsum("th,ehf->tef", x, w1)
+    h3 = jnp.einsum("th,ehf->tef", x, w3)
+    act = jax.nn.silu(h1) * h3            # [bt, be, F]
+    act = act * wts[:, :, None]           # gate-scale (0 for unrouted)
+    part = jnp.einsum("tef,efh->th", act, w2)
+
+    # First expert block initializes the revisited output block; later
+    # blocks accumulate (sequential grid => no write races).
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(j > 0)
+    def _acc():
+        o_ref[...] += part
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_e"))
+def moe_ffn(x: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array,
+            weights: jax.Array, block_t: int = 128,
+            block_e: int = 8) -> jax.Array:
+    """y[T, H] = sum_e weights[:, e] * SwiGLU_e(x).
+
+    x: [T, H]; w1, w3: [E, H, F]; w2: [E, F, H]; weights: [T, E] dense gate
+    (zeros for non-selected experts, produced by kernels.topk_gate).
+    Block sizes are clamped to the largest divisors of T / E not above the
+    requested values (Table-1 expert counts include 60).
+    """
+    T, H = x.shape
+    E, _, F = w1.shape
+    bt = min(block_t, T)
+    while T % bt:
+        bt -= 1
+    be = min(block_e, E)
+    while E % be:
+        be -= 1
+    assert T % bt == 0 and E % be == 0, (T, bt, E, be)
+    grid = (T // bt, E // be)
+    return pl.pallas_call(
+        _moe_ffn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, H), lambda i, j: (i, 0)),
+            pl.BlockSpec((be, H, F), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((be, H, F), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((be, F, H), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((bt, be), lambda i, j: (i, j)),
+        ],
+        # Output block revisited across j => accumulation schedule.
+        out_specs=pl.BlockSpec((bt, H), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, H), x.dtype),
+        interpret=True,
+    )(x, w1, w3, w2, weights)
+
+
+def moe_block(x, gate_w, gate_bias, w1, w3, w2, k, k_base,
+              block_t: int = 128, block_e: int = 8):
+    """Full MoE module on the kernel path: router + weighted mixture.
+
+    Mirrors ref.moe_block_ref; returns (y [T, H], weights [T, E]).
+    """
+    from .topk_gate import topk_gate
+    scores = x @ gate_w + gate_bias[None, :]
+    weights = topk_gate(scores, k, k_base=k_base, block_t=block_t)
+    return moe_ffn(x, w1, w3, w2, weights,
+                   block_t=block_t, block_e=block_e), weights

@@ -1,0 +1,68 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the ground-truth semantics; pytest/hypothesis asserts the Pallas
+kernels (interpret=True) match them elementwise. The training path also uses
+these (they trace to fewer HLO ops than interpret-mode Pallas, which matters
+on a single CPU core), while the exported inference graphs use the kernels —
+the equality tests make the two paths interchangeable.
+"""
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e9
+
+
+def topk_gate_ref(scores: jax.Array, k, k_base: int) -> jax.Array:
+    """Paper gating: G(x) = Softmax(TopK(x . Wg)) with *runtime* k.
+
+    scores: [T, E] raw router logits (gate bias already added).
+    k:      scalar i32, number of active experts, 1 <= k <= k_base.
+    k_base: static baseline top-k (defines the nested selection order).
+
+    Returns dense weights [T, E]: softmax over the top-k experts per token,
+    zero elsewhere. Selection is by score rank with index tie-break, so the
+    top-k sets are nested in k — the property LExI's Stage-1 monotonicity
+    relies on.
+    """
+    T, E = scores.shape
+    # rank[t, e] = number of experts strictly better than e for token t
+    # (ties broken by lower expert index winning).
+    s_i = scores[:, :, None]  # candidate e
+    s_j = scores[:, None, :]  # competitor j
+    better = (s_j > s_i) | (
+        (s_j == s_i)
+        & (jnp.arange(E)[None, None, :] < jnp.arange(E)[None, :, None])
+    )
+    rank = jnp.sum(better, axis=-1)  # [T, E]
+    active = rank < jnp.asarray(k, dtype=rank.dtype)
+    masked = jnp.where(active, scores, NEG_INF)
+    w = jax.nn.softmax(masked, axis=-1)
+    return jnp.where(active, w, 0.0)
+
+
+def moe_ffn_ref(x: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array,
+                weights: jax.Array) -> jax.Array:
+    """Weighted SwiGLU mixture: y = sum_e weights[:,e] * FFN_e(x).
+
+    x: [T, H]; w1,w3: [E, H, F]; w2: [E, F, H]; weights: [T, E] (dense gate).
+    Computed densely over experts as two big GEMMs so XLA hits the GEMM
+    kernel; gate weights of non-selected experts are exactly zero.
+    """
+    T, H = x.shape
+    E, _, F = w1.shape
+    h1 = x @ jnp.transpose(w1, (1, 0, 2)).reshape(H, E * F)   # [T, E*F]
+    h3 = x @ jnp.transpose(w3, (1, 0, 2)).reshape(H, E * F)
+    act = jax.nn.silu(h1) * h3
+    act = act.reshape(T, E, F) * weights[:, :, None]
+    y = act.reshape(T, E * F) @ w2.reshape(E * F, H)
+    return y
+
+
+def moe_block_ref(x, gate_w, gate_bias, w1, w3, w2, k, k_base):
+    """Full MoE module: router + weighted expert mixture. x: [T, H].
+
+    Returns (y [T, H], weights [T, E])."""
+    scores = x @ gate_w + gate_bias[None, :]
+    weights = topk_gate_ref(scores, k, k_base)
+    return moe_ffn_ref(x, w1, w3, w2, weights), weights

@@ -1,0 +1,66 @@
+"""Pallas kernel: top-k gating with runtime k (LExI's per-layer active-expert
+count is a *runtime* input so one compiled executable serves every allocation).
+
+Hardware adaptation (DESIGN.md §4): instead of the CUDA warp-shuffle top-k
+vLLM uses, the TPU-shaped formulation computes the full rank matrix with an
+O(E^2) broadcast-compare on the VPU — E <= 64 in every Table-1 model, so the
+[block_T, E, E] compare tensor stays comfortably in VMEM and needs no sort
+network or cross-lane shuffles. Selection is rank < k, which makes the
+selected sets nested in k (the monotonicity LExI Stage-1 relies on).
+
+interpret=True: CPU PJRT cannot execute Mosaic custom-calls; numerics are
+identical to the TPU lowering.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e9
+
+
+def _gate_kernel(k_ref, scores_ref, out_ref):
+    """One token-block: scores [bt, E] -> dense softmax-top-k weights."""
+    scores = scores_ref[...]
+    bt, e = scores.shape
+    k = k_ref[0]
+    idx = jax.lax.broadcasted_iota(jnp.int32, (1, e), 1)
+    s_i = scores[:, :, None]          # candidate expert e
+    s_j = scores[:, None, :]          # competitor expert j
+    better = (s_j > s_i) | ((s_j == s_i) & (idx[:, None, :] < idx[:, :, None]))
+    rank = jnp.sum(better.astype(jnp.int32), axis=-1)      # [bt, E]
+    active = rank < k
+    masked = jnp.where(active, scores, NEG_INF)
+    # Numerically-stable softmax over the active set only.
+    m = jnp.max(masked, axis=-1, keepdims=True)
+    ex = jnp.exp(masked - m)
+    ex = jnp.where(active, ex, 0.0)
+    out_ref[...] = ex / jnp.sum(ex, axis=-1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("k_base", "block_t"))
+def topk_gate(scores: jax.Array, k: jax.Array, k_base: int = 8,
+              block_t: int = 128) -> jax.Array:
+    """Dense gate weights [T, E] from router logits [T, E] and runtime k.
+
+    k_base is static and only bounds the search space (k <= k_base); the
+    kernel itself is generic in k. block_t tiles the token axis so each grid
+    step's [block_t, E, E] compare tensor fits VMEM.
+    """
+    T, E = scores.shape
+    bt = min(block_t, T)
+    assert T % bt == 0, f"token count {T} not divisible by block {bt}"
+    k_arr = jnp.reshape(jnp.asarray(k, dtype=jnp.int32), (1,))
+    return pl.pallas_call(
+        _gate_kernel,
+        grid=(T // bt,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),          # runtime k (scalar)
+            pl.BlockSpec((bt, E), lambda i: (i, 0)),     # token block
+        ],
+        out_specs=pl.BlockSpec((bt, E), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, E), scores.dtype),
+        interpret=True,
+    )(k_arr, scores)

@@ -1,0 +1,260 @@
+"""L2: MoE transformer LM in JAX with *runtime* per-layer top-k.
+
+Architecture (per analogue config): tied-embedding decoder with RMSNorm,
+RoPE multi-head attention, and a softmax-top-k MoE SwiGLU FFN in every
+layer. The per-layer active-expert counts `k_vec[L]` and router biases
+`gate_bias[L, E]` are *runtime inputs*, so a single AOT-compiled executable
+serves the baseline model, every LExI allocation, and every pruning
+baseline (inter-pruning = -1e9 gate bias; intra-pruning = zeroed FFN
+columns in the weights).
+
+Three graphs are exported by aot.py:
+  prefill: tokens[B,T] -> logits[B,T,V] + KV cache
+  decode:  kv, token[B], pos[B]  -> logits[B,V] + kv'   (O(1) per step)
+  moe_layer: x[T,H] + one layer's weights + k -> y[T,H] (Stage-1 profiling)
+
+The exported graphs run the Pallas kernel path (kernels.moe_block); the
+build-time training path runs the pure-jnp oracle (kernels.ref) — pytest
+asserts the two are numerically interchangeable.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import configs as C
+from .kernels import ref as kref
+from .kernels.moe_ffn import moe_block as _kernel_moe_block
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: C.ModelConfig, key: jax.Array):
+    """Stacked-layer parameter pytree (leading axis = layer) for lax.scan."""
+    L, H, F, E, V = cfg.n_layers, cfg.hidden, cfg.ffn, cfg.n_experts, cfg.vocab
+    ks = jax.random.split(key, 10)
+
+    def norm(k, shape, scale):
+        return (jax.random.normal(k, shape) * scale).astype(jnp.float32)
+
+    h_sc = H ** -0.5
+    f_sc = F ** -0.5
+    return {
+        "embed": norm(ks[0], (V, H), 0.05),
+        "ln_f": jnp.ones((H,)),
+        "layers": {
+            "ln1": jnp.ones((L, H)),
+            "wq": norm(ks[1], (L, H, H), h_sc),
+            "wk": norm(ks[2], (L, H, H), h_sc),
+            "wv": norm(ks[3], (L, H, H), h_sc),
+            "wo": norm(ks[4], (L, H, H), h_sc),
+            "ln2": jnp.ones((L, H)),
+            "gate": norm(ks[5], (L, H, E), h_sc),
+            "w1": norm(ks[6], (L, E, H, F), h_sc),
+            "w3": norm(ks[7], (L, E, H, F), h_sc),
+            "w2": norm(ks[8], (L, E, F, H), f_sc),
+        },
+    }
+
+
+def param_leaf_names(params):
+    """Flattened leaf names in jax's traversal order (manifest / Rust I/O)."""
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    return ["/".join(str(p.key) for p in path) for path, _ in flat]
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, g, eps=1e-6):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps) * g
+
+
+def rope(x, pos):
+    """Rotary embedding. x: [..., T, nh, hd]; pos: [..., T] absolute."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 10000.0 ** (-jnp.arange(half) / half)           # [half]
+    ang = pos[..., None] * freqs                            # [..., T, half]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _block_e(cfg) -> int:
+    """Expert-block size of the exported kernels.
+
+    §Perf L1 iteration: at analogue scale the full expert panel fits VMEM
+    (kernels/analysis.py: <= 708 KiB of the 16 MiB budget), so the default
+    is be = E — one grid step per token block instead of E/8, which cuts
+    the interpret-mode grid overhead ~8x on the decode hot path. Paper-
+    scale panels would NOT fit; set LEXI_BLOCK_E=8 to export the tiled
+    schedule the analysis sweep selects for real hardware.
+    """
+    want = os.environ.get("LEXI_BLOCK_E", "")
+    if want:
+        be = int(want)
+        while cfg.n_experts % be:
+            be -= 1
+        return be
+    return cfg.n_experts
+
+
+def _moe(x2d, lp, k, bias_row, cfg, use_kernels):
+    """MoE FFN on flattened tokens x2d [N, H] -> ([N, H], weights [N, E])."""
+    if use_kernels:
+        # Pallas path (exported inference graphs). Block sizes: largest
+        # power-of-two token block <= 128 dividing N; expert block from
+        # the §Perf policy above.
+        n = x2d.shape[0]
+        bt = 128
+        while n % bt:
+            bt //= 2
+        return _kernel_moe_block(x2d, lp["gate"], bias_row, lp["w1"],
+                                 lp["w3"], lp["w2"], k, cfg.top_k,
+                                 block_t=bt, block_e=_block_e(cfg))
+    return kref.moe_block_ref(x2d, lp["gate"], bias_row, lp["w1"], lp["w3"],
+                              lp["w2"], k, cfg.top_k)
+
+
+def _attn_prefill(x, lp, cfg):
+    """Causal self-attention over [B, T, H]; returns (y, k_cache, v_cache)."""
+    B, T, H = x.shape
+    nh, hd = cfg.n_heads, cfg.head_dim
+    q = (x @ lp["wq"]).reshape(B, T, nh, hd)
+    k = (x @ lp["wk"]).reshape(B, T, nh, hd)
+    v = (x @ lp["wv"]).reshape(B, T, nh, hd)
+    pos = jnp.arange(T)[None, :].astype(jnp.float32)
+    q, k = rope(q, pos), rope(k, pos)
+    att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / hd ** 0.5
+    mask = jnp.tril(jnp.ones((T, T), dtype=bool))
+    att = jnp.where(mask[None, None], att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    y = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(B, T, H)
+    return y @ lp["wo"], k, v
+
+
+def _attn_decode(x, lp, kc, vc, pos, cfg):
+    """One-token attention. x: [B, H]; kc/vc: [B, maxT, nh, hd]; pos: [B]."""
+    B, H = x.shape
+    nh, hd = cfg.n_heads, cfg.head_dim
+    maxT = kc.shape[1]
+    q = (x @ lp["wq"]).reshape(B, 1, nh, hd)
+    k = (x @ lp["wk"]).reshape(B, 1, nh, hd)
+    v = (x @ lp["wv"]).reshape(B, 1, nh, hd)
+    posf = pos.astype(jnp.float32)[:, None]
+    q, k = rope(q, posf), rope(k, posf)
+    # Write this step's K/V at index pos[b] (one-hot blend keeps the graph
+    # free of per-batch dynamic slices).
+    onehot = (jnp.arange(maxT)[None, :] == pos[:, None]).astype(kc.dtype)
+    kc = kc * (1 - onehot)[..., None, None] + onehot[..., None, None] * k
+    vc = vc * (1 - onehot)[..., None, None] + onehot[..., None, None] * v
+    att = jnp.einsum("bqhd,bkhd->bhqk", q, kc)[:, :, 0] / hd ** 0.5  # [B,nh,maxT]
+    valid = jnp.arange(maxT)[None, :] <= pos[:, None]
+    att = jnp.where(valid[:, None], att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    y = jnp.einsum("bhk,bkhd->bhd", att, vc).reshape(B, H)
+    return y @ lp["wo"], kc, vc
+
+
+# ---------------------------------------------------------------------------
+# Full-model graphs
+# ---------------------------------------------------------------------------
+
+
+def forward_prefill(params, tokens, k_vec, gate_bias, cfg: C.ModelConfig,
+                    use_kernels: bool = True, collect_router: bool = False):
+    """tokens [B, T] -> (logits [B, T, V], kv [L, 2, B, maxT, nh, hd]).
+
+    Router stats (mean full-softmax prob, top-k selection frequency and
+    gate mass per expert) are additionally returned when
+    collect_router=True (training aux loss + NAEE calibration stats).
+    """
+    B, T = tokens.shape
+    x = params["embed"][tokens]
+
+    def body(x, xs):
+        lp, kj, bj = xs
+        a, kc, vc = _attn_prefill(rmsnorm(x, lp["ln1"]), lp, cfg)
+        x = x + a
+        h = rmsnorm(x, lp["ln2"]).reshape(B * T, cfg.hidden)
+        y, w = _moe(h, lp, kj, bj, cfg, use_kernels)
+        x = x + y.reshape(B, T, cfg.hidden)
+        if collect_router:
+            scores = h @ lp["gate"] + bj[None, :]
+            full_p = jax.nn.softmax(scores, axis=-1)
+            aux = (jnp.mean(full_p, axis=0),
+                   jnp.mean((w > 0).astype(jnp.float32), axis=0),
+                   jnp.sum(w, axis=0))
+        else:
+            aux = jnp.zeros((0,))
+        return x, (kc, vc, aux)
+
+    xs = (params["layers"], k_vec, gate_bias)
+    x, (kcs, vcs, aux) = jax.lax.scan(body, x, xs)
+    x = rmsnorm(x, params["ln_f"])
+    logits = x @ params["embed"].T
+    # Pad caches T -> max_seq so prefill and decode share the cache shape.
+    pad = cfg.max_seq - T
+    kcs = jnp.pad(kcs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    vcs = jnp.pad(vcs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    kv = jnp.stack([kcs, vcs], axis=1)  # [L, 2, B, maxT, nh, hd]
+    return (logits, kv, aux) if collect_router else (logits, kv)
+
+
+def forward_decode(params, kv, tokens, pos, k_vec, gate_bias,
+                   cfg: C.ModelConfig, use_kernels: bool = True):
+    """One decode step. tokens [B], pos [B] -> (logits [B, V], kv')."""
+    x = params["embed"][tokens]
+
+    def body(x, xs):
+        lp, kvj, kj, bj = xs
+        a, kc, vc = _attn_decode(rmsnorm(x, lp["ln1"]), lp, kvj[0], kvj[1],
+                                 pos, cfg)
+        x = x + a
+        h = rmsnorm(x, lp["ln2"])
+        y, _ = _moe(h, lp, kj, bj, cfg, use_kernels)
+        return x + y, jnp.stack([kc, vc])
+
+    xs = (params["layers"], kv, k_vec, gate_bias)
+    x, kv2 = jax.lax.scan(body, x, xs)
+    x = rmsnorm(x, params["ln_f"])
+    return x @ params["embed"].T, kv2
+
+
+def moe_layer_forward(x, gate_w, gate_bias, w1, w3, w2, k,
+                      cfg: C.ModelConfig, use_kernels: bool = True):
+    """Standalone MoE module for Stage-1 sensitivity profiling. x: [T, H]."""
+    lp = {"gate": gate_w, "w1": w1, "w3": w3, "w2": w2}
+    y, _ = _moe(x, lp, k, gate_bias, cfg, use_kernels)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Training objective (build-time only)
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(params, tokens, cfg: C.ModelConfig, aux_coef: float = 0.01):
+    """Next-token CE over non-PAD targets + Switch-style load-balance aux."""
+    k_vec = jnp.full((cfg.n_layers,), cfg.top_k, dtype=jnp.int32)
+    gate_bias = jnp.zeros((cfg.n_layers, cfg.n_experts))
+    logits, _, aux = forward_prefill(params, tokens, k_vec, gate_bias, cfg,
+                                     use_kernels=False, collect_router=True)
+    mean_p, sel_freq, _ = aux  # each [L, E]
+    tgt = tokens[:, 1:]
+    lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+    mask = (tgt != C.PAD).astype(jnp.float32)
+    ce = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    # Load balance: E * sum_e f_e p_e per layer (Switch Transformer eq. 4);
+    # f_e normalized by top_k so a perfectly uniform router scores 1.
+    balance = cfg.n_experts * jnp.mean(jnp.sum(sel_freq / cfg.top_k * mean_p,
+                                               axis=-1))
+    return ce + aux_coef * balance, (ce, balance)

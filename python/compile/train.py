@@ -1,0 +1,127 @@
+"""Build-time training of the tiny analogue models (DESIGN.md §3).
+
+Runs ONCE under `make artifacts`; never on the request path. Each analogue
+is trained with Adam on the synthetic task mixture until the loss curve is
+clearly descending (a few hundred steps — the point is real, structured
+weights whose routers have learned token-dependent expert preferences, not
+SOTA quality). The loss curve is logged to train_log.json and summarized
+in EXPERIMENTS.md.
+"""
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import configs as C
+from . import data as D
+from . import model as M
+
+
+def adam_init(params):
+    z = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.95, eps=1e-8,
+                clip=1.0):
+    """Adam with global-norm gradient clipping."""
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in jax.tree_util.tree_leaves(grads)))
+    scale = jnp.minimum(1.0, clip / (gnorm + 1e-9))
+    grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g,
+                               state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g,
+                               state["v"], grads)
+    tf = t.astype(jnp.float32)
+    mhat_sc = 1.0 / (1 - b1 ** tf)
+    vhat_sc = 1.0 / (1 - b2 ** tf)
+    new_p = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_sc) / (jnp.sqrt(v_ * vhat_sc) + eps),
+        params, m, v)
+    return new_p, {"m": m, "v": v, "t": t}
+
+
+def train_model(cfg: C.ModelConfig, seed: int = 0, steps: int | None = None,
+                log_every: int = 10, progress: bool = True):
+    """Train one analogue; returns (params, log dict)."""
+    steps = steps or cfg.train_steps
+    rng = np.random.default_rng(seed + 17)
+    corp = D.corpora()
+    key = jax.random.PRNGKey(seed)
+    params = M.init_params(cfg, key)
+    opt = adam_init(params)
+
+    @jax.jit
+    def step(params, opt, tokens):
+        (loss, (ce, bal)), grads = jax.value_and_grad(
+            M.loss_fn, has_aux=True)(params, tokens, cfg)
+        params, opt = adam_update(params, grads, opt, cfg.lr)
+        return params, opt, loss, ce, bal
+
+    log = {"model": cfg.name, "steps": steps, "loss": [], "ce": [],
+           "balance": [], "step_ids": []}
+    t0 = time.time()
+    for i in range(steps):
+        batch = D.training_batch(rng, corp, cfg.train_batch, cfg.train_seq,
+                                 vlm=cfg.is_vlm)
+        params, opt, loss, ce, bal = step(params, opt, jnp.asarray(batch))
+        if i % log_every == 0 or i == steps - 1:
+            log["loss"].append(float(loss))
+            log["ce"].append(float(ce))
+            log["balance"].append(float(bal))
+            log["step_ids"].append(i)
+            if progress:
+                print(f"[{cfg.name}] step {i:4d} loss {float(loss):.4f} "
+                      f"ce {float(ce):.4f} bal {float(bal):.3f}", flush=True)
+    log["wall_s"] = time.time() - t0
+    return params, log
+
+
+def calibration_stats(params, cfg: C.ModelConfig, n_batches: int = 4,
+                      seed: int = 1234):
+    """Per-layer expert stats on sampled data for the *baseline* methods.
+
+    This is exactly the calibration-set dependence LExI avoids: NAEE-style
+    inter-pruning ranks experts by how much router mass / selection
+    frequency they receive on real data. Returns dict of [L, E] arrays.
+    """
+    rng = np.random.default_rng(seed)
+    corp = D.corpora()
+    k_vec = jnp.full((cfg.n_layers,), cfg.top_k, dtype=jnp.int32)
+    bias = jnp.zeros((cfg.n_layers, cfg.n_experts))
+
+    fwd = jax.jit(lambda p, t: M.forward_prefill(
+        p, t, k_vec, bias, cfg, use_kernels=False, collect_router=True)[2])
+    mean_p = np.zeros((cfg.n_layers, cfg.n_experts))
+    sel_freq = np.zeros_like(mean_p)
+    gate_mass = np.zeros_like(mean_p)
+    for _ in range(n_batches):
+        batch = D.training_batch(rng, corp, cfg.train_batch, cfg.train_seq,
+                                 vlm=cfg.is_vlm)
+        p, f, g = fwd(params, jnp.asarray(batch))
+        mean_p += np.asarray(p) / n_batches
+        sel_freq += np.asarray(f) / n_batches
+        gate_mass += np.asarray(g) / n_batches
+    return {"mean_prob": mean_p.astype(np.float32),
+            "sel_freq": sel_freq.astype(np.float32),
+            "gate_mass": gate_mass.astype(np.float32)}
+
+
+def save_params_npz(params, path: str):
+    """Flatten the pytree to name->array and save; names match manifest."""
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    arrays = {}
+    for p, leaf in flat:
+        name = "/".join(str(k.key) for k in p)
+        arrays[name] = np.asarray(leaf, dtype=np.float32)
+    np.savez(path, **arrays)
+
+
+def save_log(log: dict, path: str):
+    with open(path, "w") as f:
+        json.dump(log, f, indent=1)

@@ -1,0 +1,118 @@
+"""Synthetic corpora/task generators: structural invariants the Rust
+harness depends on (prompt lengths, answer placement, vocab ranges)."""
+
+import numpy as np
+import pytest
+
+from compile import configs as C, data as D
+
+
+@pytest.fixture(scope="module")
+def corp():
+    return D.corpora()
+
+
+def test_corpus_tokens_in_text_range(corp):
+    rng = np.random.default_rng(0)
+    for name, c in corp.items():
+        seq = c.sample(rng, 200)
+        assert seq.min() >= C.TEXT_BASE
+        assert seq.max() < C.TEXT_BASE + C.N_TEXT
+
+
+def test_corpora_have_distinct_statistics(corp):
+    """PTB analogue is peaked (low entropy), C4 flatter — ppl separation."""
+    rng = np.random.default_rng(1)
+
+    def bigram_entropy(c):
+        seq = c.sample(rng, 4000) - C.TEXT_BASE
+        counts = np.zeros((C.N_TEXT, C.N_TEXT)) + 1e-9
+        for a, b in zip(seq, seq[1:]):
+            counts[a, b] += 1
+        p = counts / counts.sum(1, keepdims=True)
+        rows = -np.sum(p * np.log(p), axis=1)
+        w = counts.sum(1) / counts.sum()
+        return float(np.sum(rows * w))
+
+    h = {n: bigram_entropy(c) for n, c in corp.items()}
+    assert h["ptb"] < h["c4"], h
+
+
+def test_corpus_deterministic_given_seed():
+    a = D.MarkovCorpus(seed=5, order=2, alpha=1.1)
+    b = D.MarkovCorpus(seed=5, order=2, alpha=1.1)
+    r1, r2 = np.random.default_rng(3), np.random.default_rng(3)
+    assert np.array_equal(a.sample(r1, 64), b.sample(r2, 64))
+
+
+def test_passkey_structure(corp):
+    rng = np.random.default_rng(2)
+    for depth in [0.1, 0.5, 0.9]:
+        seq, plen, vals = D.make_passkey(rng, corp["c4"], 96, depth)
+        assert seq[0] == C.BOS
+        assert seq[plen - 2] == C.QRY and seq[plen - 1] == C.KEY
+        assert np.array_equal(seq[plen:plen + 3], vals)
+        assert seq[plen + 3] == C.EOS
+        kpos = np.where(seq == C.KEY)[0]
+        assert len(kpos) == 2  # planted cue + query-time cue
+        assert np.array_equal(seq[kpos[0] + 1:kpos[0] + 4], vals)
+
+
+def test_passkey_depth_ordering(corp):
+    rng = np.random.default_rng(3)
+    s1, _, _ = D.make_passkey(rng, corp["c4"], 96, 0.1)
+    s2, _, _ = D.make_passkey(rng, corp["c4"], 96, 0.9)
+    assert np.where(s1 == C.KEY)[0][0] < np.where(s2 == C.KEY)[0][0]
+
+
+def test_longqa_answer_matches_fact(corp):
+    rng = np.random.default_rng(4)
+    for _ in range(10):
+        seq, plen, ans = D.make_longqa(rng, corp["c4"], 96)
+        # the asked name appears as a FACT whose values equal the answer
+        name = seq[plen - 2]
+        fact_pos = [p for p in np.where(seq == C.FACT)[0] if seq[p + 1] == name]
+        assert fact_pos, "asked name not present as FACT"
+        assert any(np.array_equal(seq[p + 2:p + 4], ans) for p in fact_pos)
+        assert np.array_equal(seq[plen:plen + 2], ans)
+
+
+def test_probe_tasks_label_candidates(corp):
+    rng = np.random.default_rng(5)
+    for name, fn in D.PROBE_TASKS.items():
+        seq, plen, cands, label = fn(rng, corp, 64)
+        assert 0 <= label < 4, name
+        assert cands.shape[0] == 4, name
+        assert plen <= len(seq) + 1
+
+
+def test_vlm_tasks(corp):
+    rng = np.random.default_rng(6)
+    for name, fn in D.VLM_TASKS.items():
+        seq, plen, cands, label = fn(rng, 96)
+        assert seq[1] == C.IMG
+        assert 0 <= label < cands.shape[0], name
+
+
+def test_training_batch_shape_and_range(corp):
+    rng = np.random.default_rng(7)
+    b = D.training_batch(rng, corp, 4, 96, vlm=True)
+    assert b.shape == (4, 96)
+    assert b.min() >= 0 and b.max() < C.VOCAB
+
+
+def test_eval_suite_arrays_complete():
+    arrays, meta = D.build_eval_suite(seq_len=96, n_ppl=2, n_passkey=5,
+                                      n_longqa=3, n_probe=2, n_vlm=2)
+    for t in meta["tasks"]:
+        kind = meta["tasks"][t]["kind"]
+        if kind == "perplexity":
+            assert t in arrays
+        elif kind == "multiple_choice":
+            for suffix in ["prompts", "plen", "cands", "labels"]:
+                assert f"{t}_{suffix}" in arrays, (t, suffix)
+    assert arrays["passkey_prompts"].dtype == np.int32
+    # prompt lengths are consistent with the padded arrays
+    pk = arrays["passkey_prompts"]
+    for i, plen in enumerate(arrays["passkey_plen"]):
+        assert pk[i, plen - 1] == C.KEY and pk[i, plen - 2] == C.QRY

@@ -1,0 +1,203 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (the CORE signal).
+
+Hypothesis sweeps shapes/dtypes/k; every property the Rust side relies on
+(nested selection, zero-weight off-expert, monotone router mass) is pinned
+here.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.moe_ffn import moe_ffn, moe_block
+from compile.kernels.topk_gate import topk_gate
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+# ---------------------------------------------------------------------------
+# topk_gate
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    t=st.sampled_from([8, 32, 128]),
+    e=st.sampled_from([8, 60, 64]),
+    k=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=2 ** 16),
+)
+def test_gate_matches_ref(t, e, k, seed):
+    k = min(k, e)
+    scores = rand(seed, (t, e))
+    got = topk_gate(scores, k, k_base=k)
+    want = ref.topk_gate_ref(scores, k, k)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    t=st.sampled_from([16, 64]),
+    e=st.sampled_from([8, 60]),
+    seed=st.integers(min_value=0, max_value=2 ** 16),
+)
+def test_gate_rows_sum_to_one(t, e, seed):
+    scores = rand(seed, (t, e))
+    for k in range(1, min(e, 8) + 1):
+        w = np.asarray(topk_gate(scores, k, k_base=8))
+        np.testing.assert_allclose(w.sum(-1), np.ones(t), rtol=1e-5)
+        # exactly k strictly-positive entries per row
+        assert (w > 0).sum(-1).tolist() == [k] * t
+
+
+def test_gate_nested_selection():
+    """Top-k sets are nested in k (Stage-1 monotonicity foundation)."""
+    scores = rand(3, (32, 16))
+    prev = None
+    for k in range(1, 9):
+        sel = np.asarray(topk_gate(scores, k, k_base=8)) > 0
+        if prev is not None:
+            assert np.all(sel | ~prev), f"selection not nested at k={k}"
+        prev = sel
+
+
+def test_gate_full_k_equals_softmax():
+    scores = rand(7, (16, 8))
+    w = np.asarray(topk_gate(scores, 8, k_base=8))
+    want = np.asarray(jax.nn.softmax(scores, axis=-1))
+    np.testing.assert_allclose(w, want, rtol=1e-5, atol=1e-6)
+
+
+def test_gate_tie_break_deterministic():
+    scores = jnp.zeros((4, 8))  # all tied -> lowest indices win
+    w = np.asarray(topk_gate(scores, 3, k_base=8))
+    assert np.all(w[:, :3] > 0) and np.all(w[:, 3:] == 0)
+
+
+def test_gate_block_t_invariance():
+    scores = rand(11, (128, 8))
+    a = np.asarray(topk_gate(scores, 2, k_base=2, block_t=128))
+    b = np.asarray(topk_gate(scores, 2, k_base=2, block_t=32))
+    np.testing.assert_allclose(a, b, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# moe_ffn
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    t=st.sampled_from([8, 64, 128]),
+    e=st.sampled_from([4, 8, 60]),
+    h=st.sampled_from([16, 32]),
+    f=st.sampled_from([32, 64]),
+    k=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=2 ** 16),
+)
+def test_moe_ffn_matches_ref(t, e, h, f, k, seed):
+    k = min(k, e)
+    x = rand(seed, (t, h))
+    w1 = rand(seed + 1, (e, h, f), 0.1)
+    w3 = rand(seed + 2, (e, h, f), 0.1)
+    w2 = rand(seed + 3, (e, f, h), 0.1)
+    weights = ref.topk_gate_ref(rand(seed + 4, (t, e)), k, k)
+    got = moe_ffn(x, w1, w3, w2, weights)
+    want = ref.moe_ffn_ref(x, w1, w3, w2, weights)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-4, atol=3e-5)
+
+
+def test_moe_ffn_block_shape_invariance():
+    """Accumulation across expert blocks must not change the result."""
+    t, e, h, f = 64, 8, 16, 32
+    x = rand(0, (t, h))
+    w1, w3 = rand(1, (e, h, f), 0.1), rand(2, (e, h, f), 0.1)
+    w2 = rand(3, (e, f, h), 0.1)
+    weights = ref.topk_gate_ref(rand(4, (t, e)), 2, 2)
+    base = np.asarray(moe_ffn(x, w1, w3, w2, weights, block_t=64, block_e=8))
+    for bt, be in [(32, 8), (64, 4), (16, 2), (64, 1)]:
+        got = np.asarray(moe_ffn(x, w1, w3, w2, weights, block_t=bt, block_e=be))
+        np.testing.assert_allclose(got, base, rtol=1e-5, atol=1e-6)
+
+
+def test_moe_ffn_zero_weights_zero_output():
+    t, e, h, f = 16, 4, 8, 16
+    x = rand(0, (t, h))
+    out = moe_ffn(x, rand(1, (e, h, f)), rand(2, (e, h, f)),
+                  rand(3, (e, f, h)), jnp.zeros((t, e)))
+    np.testing.assert_allclose(np.asarray(out), 0.0, atol=1e-7)
+
+
+def test_moe_ffn_single_expert_is_plain_swiglu():
+    t, h, f = 16, 8, 16
+    x = rand(0, (t, h))
+    w1, w3, w2 = rand(1, (1, h, f), 0.2), rand(2, (1, h, f), 0.2), rand(3, (1, f, h), 0.2)
+    weights = jnp.ones((t, 1))
+    got = np.asarray(moe_ffn(x, w1, w3, w2, weights))
+    want = (jax.nn.silu(x @ w1[0]) * (x @ w3[0])) @ w2[0]
+    np.testing.assert_allclose(got, np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# moe_block (router + FFN composed)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    k=st.integers(min_value=1, max_value=6),
+    seed=st.integers(min_value=0, max_value=2 ** 16),
+)
+def test_moe_block_matches_ref(k, seed):
+    t, e, h, f, kb = 32, 8, 16, 32, 6
+    k = min(k, kb)
+    x = rand(seed, (t, h))
+    gate = rand(seed + 1, (h, e), 0.5)
+    bias = jnp.zeros((e,))
+    w1, w3 = rand(seed + 2, (e, h, f), 0.1), rand(seed + 3, (e, h, f), 0.1)
+    w2 = rand(seed + 4, (e, f, h), 0.1)
+    got, gw = moe_block(x, gate, bias, w1, w3, w2, k, kb, block_t=32, block_e=4)
+    want, ww = ref.moe_block_ref(x, gate, bias, w1, w3, w2, k, kb)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(ww), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-4, atol=3e-5)
+
+
+def test_moe_block_gate_bias_excludes_experts():
+    """-1e9 gate bias (inter-pruning) must make experts unreachable."""
+    t, e, h, f, kb = 16, 8, 16, 32, 4
+    x = rand(0, (t, h))
+    gate = rand(1, (h, e), 0.5)
+    bias = jnp.zeros((e,)).at[jnp.array([2, 5])].set(-1e9)
+    w1, w3 = rand(2, (e, h, f), 0.1), rand(3, (e, h, f), 0.1)
+    w2 = rand(4, (e, f, h), 0.1)
+    _, gw = moe_block(x, gate, bias, w1, w3, w2, 4, kb, block_t=16, block_e=8)
+    gw = np.asarray(gw)
+    assert np.all(gw[:, [2, 5]] == 0), "pruned experts received gate mass"
+    np.testing.assert_allclose(gw.sum(-1), np.ones(t), rtol=1e-5)
+
+
+def test_moe_block_delta_monotone_in_k():
+    """‖y_k − y_base‖_F non-increasing in k — LExI Stage-1's key property."""
+    t, e, h, f, kb = 64, 16, 16, 32, 8
+    x = rand(0, (t, h))
+    gate = rand(1, (h, e), 0.5)
+    bias = jnp.zeros((e,))
+    w1, w3 = rand(2, (e, h, f), 0.1), rand(3, (e, h, f), 0.1)
+    w2 = rand(4, (e, f, h), 0.1)
+    base, _ = moe_block(x, gate, bias, w1, w3, w2, kb, kb, block_t=64, block_e=8)
+    deltas = []
+    for k in range(1, kb + 1):
+        y, _ = moe_block(x, gate, bias, w1, w3, w2, k, kb, block_t=64, block_e=8)
+        deltas.append(float(jnp.linalg.norm(y - base)))
+    assert deltas[-1] < 1e-4, "delta at k_base must be ~0"
+    for a, b in zip(deltas, deltas[1:]):
+        assert b <= a + 1e-5, f"delta not monotone: {deltas}"

@@ -1,0 +1,147 @@
+"""L2 correctness: shapes, prefill/decode consistency, runtime-k semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs as C, data as D, model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = C.ModelConfig(name="mini", n_layers=3, n_experts=8, top_k=2,
+                    hidden=32, ffn=64)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    rng = np.random.default_rng(0)
+    return jnp.asarray(D.training_batch(rng, D.corpora(), CFG.batch,
+                                        CFG.prefill_len, vlm=False))
+
+
+def _full_k():
+    return jnp.full((CFG.n_layers,), CFG.top_k, jnp.int32)
+
+
+def _zero_bias():
+    return jnp.zeros((CFG.n_layers, CFG.n_experts))
+
+
+def test_param_shapes(params):
+    lp = params["layers"]
+    L, E, H, F = CFG.n_layers, CFG.n_experts, CFG.hidden, CFG.ffn
+    assert params["embed"].shape == (CFG.vocab, H)
+    assert lp["gate"].shape == (L, H, E)
+    assert lp["w1"].shape == (L, E, H, F)
+    assert lp["w2"].shape == (L, E, F, H)
+
+
+def test_param_leaf_names_are_stable(params):
+    names = M.param_leaf_names(params)
+    assert names[0] == "embed" and "layers/gate" in names
+    assert len(names) == len(set(names)) == 12
+
+
+def test_prefill_shapes(params, tokens):
+    logits, kv = M.forward_prefill(params, tokens, _full_k(), _zero_bias(),
+                                   CFG, use_kernels=False)
+    assert logits.shape == (CFG.batch, CFG.prefill_len, CFG.vocab)
+    assert kv.shape == (CFG.n_layers, 2, CFG.batch, CFG.max_seq,
+                        CFG.n_heads, CFG.head_dim)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_decode_matches_prefill_logits(params, tokens):
+    """Teacher-forced decode must reproduce prefill logits step by step."""
+    k_vec, bias = _full_k(), _zero_bias()
+    logits, _ = M.forward_prefill(params, tokens, k_vec, bias, CFG,
+                                  use_kernels=False)
+    # prefill the first T-3 tokens, then decode 3 teacher-forced steps
+    cut = CFG.prefill_len - 3
+    pref = tokens.at[:, cut:].set(0)
+    _, kv = M.forward_prefill(params, pref, k_vec, bias, CFG,
+                              use_kernels=False)
+    mask = (jnp.arange(CFG.max_seq) < cut).astype(jnp.float32)
+    kv = kv * mask[None, None, None, :, None, None]
+    for step in range(3):
+        pos = jnp.full((CFG.batch,), cut + step, jnp.int32)
+        dl, kv = M.forward_decode(params, kv, tokens[:, cut + step], pos,
+                                  k_vec, bias, CFG, use_kernels=False)
+        np.testing.assert_allclose(np.asarray(dl),
+                                   np.asarray(logits[:, cut + step]),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_kernel_and_ref_paths_agree(params, tokens):
+    k_vec, bias = _full_k(), _zero_bias()
+    l1, kv1 = M.forward_prefill(params, tokens, k_vec, bias, CFG,
+                                use_kernels=False)
+    l2, kv2 = M.forward_prefill(params, tokens, k_vec, bias, CFG,
+                                use_kernels=True)
+    np.testing.assert_allclose(np.asarray(l2), np.asarray(l1),
+                               rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(kv2), np.asarray(kv1),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_k_vector_is_per_layer(params, tokens):
+    """Changing one layer's k changes the output; k=k_base reproduces base."""
+    bias = _zero_bias()
+    base, _ = M.forward_prefill(params, tokens, _full_k(), bias, CFG,
+                                use_kernels=False)
+    k2 = _full_k().at[1].set(1)
+    red, _ = M.forward_prefill(params, tokens, k2, bias, CFG,
+                               use_kernels=False)
+    assert not np.allclose(np.asarray(red), np.asarray(base))
+    again, _ = M.forward_prefill(params, tokens, _full_k(), bias, CFG,
+                                 use_kernels=False)
+    np.testing.assert_allclose(np.asarray(again), np.asarray(base))
+
+
+def test_gate_bias_prunes_experts(params, tokens):
+    """Inter-pruning bias changes outputs but keeps them finite/normalized."""
+    bias = _zero_bias().at[:, :4].set(-1e9)  # prune half the experts
+    logits, _ = M.forward_prefill(params, tokens, _full_k(), bias, CFG,
+                                  use_kernels=False)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_moe_layer_forward_profiles(params):
+    """Stage-1 graph: delta monotone in k on real layer weights."""
+    lp = jax.tree_util.tree_map(lambda a: a[0], params["layers"])
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, CFG.hidden))
+    bias = jnp.zeros((CFG.n_experts,))
+    base = M.moe_layer_forward(x, lp["gate"], bias, lp["w1"], lp["w3"],
+                               lp["w2"], CFG.top_k, CFG, use_kernels=True)
+    deltas = []
+    for k in range(1, CFG.top_k + 1):
+        y = M.moe_layer_forward(x, lp["gate"], bias, lp["w1"], lp["w3"],
+                                lp["w2"], k, CFG, use_kernels=True)
+        deltas.append(float(jnp.linalg.norm(y - base)))
+    assert deltas[-1] < 1e-4
+    assert deltas[0] >= deltas[-1]
+
+
+def test_loss_decreases_quickly():
+    """A few Adam steps on the mixture must reduce the loss (trainability)."""
+    from compile import train as T
+    cfg = C.ModelConfig(name="mini", n_layers=2, n_experts=4, top_k=2,
+                        hidden=16, ffn=32, train_batch=2, train_seq=48)
+    _, log = T.train_model(cfg, steps=12, log_every=1, progress=False)
+    assert log["loss"][-1] < log["loss"][0], log["loss"]
+
+
+def test_loss_masks_padding():
+    cfg = C.ModelConfig(name="mini", n_layers=2, n_experts=4, top_k=2,
+                        hidden=16, ffn=32)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jnp.full((cfg.batch, 32), C.PAD, jnp.int32).at[:, 0].set(C.BOS)
+    toks = toks.at[:, 1:4].set(50)
+    (loss, (ce, bal)) = M.loss_fn(params, toks, cfg)
+    assert np.isfinite(float(loss)) and float(ce) > 0

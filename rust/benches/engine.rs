@@ -1,0 +1,93 @@
+//! Serving-stack benchmarks over the real PJRT executables: prefill /
+//! decode step latency, KV splice, sampler, end-to-end engine loop.
+//! Skips gracefully when artifacts are absent (CI without `make
+//! artifacts`).
+
+use lexi_moe::config::serving::ServingConfig;
+use lexi_moe::engine::{Engine, SamplingParams};
+use lexi_moe::eval::RunConfig;
+use lexi_moe::runtime::{Manifest, ModelRuntime, Runtime};
+use lexi_moe::util::bench::{bench, header};
+use lexi_moe::util::Pcg32;
+
+fn main() {
+    let dir = Manifest::default_dir();
+    let manifest = match Manifest::load(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping engine bench (no artifacts at {dir:?}): {e}");
+            return;
+        }
+    };
+    let rt = Runtime::cpu().expect("pjrt cpu client");
+
+    // Smallest analogue = fastest per-step; also bench the largest.
+    for name in ["deepseek-vl2-tiny", "qwen1.5-moe-a2.7b"] {
+        if !manifest.models.contains_key(name) {
+            continue;
+        }
+        let model = ModelRuntime::load(&rt, &manifest, name).expect("load model");
+        let entry = model.entry.clone();
+        let rc = RunConfig::baseline(&entry);
+        header(&format!("runtime hot path — {name}"));
+
+        let mut rng = Pcg32::seeded(3);
+        let tokens: Vec<i32> = (0..entry.batch * entry.prefill_len)
+            .map(|_| 42 + rng.gen_range(128) as i32)
+            .collect();
+        let pre = model.prefill(&tokens, &rc.k_vec, &rc.gate_bias).unwrap();
+        bench("prefill_batch8x96", || {
+            std::hint::black_box(model.prefill(&tokens, &rc.k_vec, &rc.gate_bias).unwrap());
+        });
+
+        let dtoks = vec![50i32; entry.batch];
+        let dpos: Vec<i32> = (0..entry.batch).map(|i| 40 + i as i32).collect();
+        bench("decode_step_batch8", || {
+            std::hint::black_box(
+                model
+                    .decode(&pre.kv, &dtoks, &dpos, &rc.k_vec, &rc.gate_bias)
+                    .unwrap(),
+            );
+        });
+
+        bench("moe_layer_probe(stage1 unit)", || {
+            let x = vec![0.1f32; entry.profile_tokens * entry.hidden];
+            std::hint::black_box(model.moe_layer(0, &x, 1).unwrap());
+        });
+
+        // Engine end-to-end: 8 requests through continuous batching.
+        bench("engine_8req_e2e", || {
+            let scfg = ServingConfig {
+                batch: entry.batch,
+                max_seq: entry.max_seq,
+                prefill_len: entry.prefill_len,
+                ..Default::default()
+            };
+            let mut engine =
+                Engine::new(&model, scfg, rc.k_vec.clone(), rc.gate_bias.clone()).unwrap();
+            for i in 0..8 {
+                engine
+                    .submit(
+                        tokens[i * 24..(i + 1) * 24].to_vec(),
+                        SamplingParams {
+                            max_new_tokens: 4,
+                            stop_on_eos: false,
+                            ..Default::default()
+                        },
+                    )
+                    .unwrap();
+            }
+            std::hint::black_box(engine.run_until_complete().unwrap());
+        });
+    }
+
+    header("sampler / host-side microbenches");
+    let mut rng = Pcg32::seeded(5);
+    let logits: Vec<f32> = (0..256).map(|_| rng.gen_normal() as f32).collect();
+    bench("sampler_greedy_v256", || {
+        std::hint::black_box(lexi_moe::engine::sampler::argmax(&logits));
+    });
+    bench("sampler_logprob_v256", || {
+        std::hint::black_box(lexi_moe::engine::sampler::log_prob(&logits, 100));
+    });
+}

@@ -1,0 +1,52 @@
+//! Stage-2 GA benchmarks: candidate-evaluation rate, full-search wall
+//! time per model scale, exact-DP comparison. (In-crate harness; criterion
+//! is unavailable offline.)
+
+use lexi_moe::config::model::registry;
+use lexi_moe::lexi::evolution::{evolve, exact_dp, EvolutionParams};
+use lexi_moe::lexi::SensitivityTable;
+use lexi_moe::moe::allocation::Bounds;
+use lexi_moe::util::bench::{bench, header};
+
+fn main() {
+    header("lexi stage 2 (Alg. 2) — evolutionary search");
+
+    for spec in registry() {
+        let table = SensitivityTable::synthetic(
+            spec.name,
+            spec.n_layers,
+            spec.top_k as u32,
+            |x| 1.0 + 2.0 * (2.0 * (x - 0.5)).powi(2),
+            7,
+        );
+        let budget = (spec.baseline_budget() as f64 * 0.65) as u32;
+        let bounds = Bounds::paper(spec.top_k as u32);
+        let params = EvolutionParams::default();
+        bench(&format!("ga_400gen/{}", spec.name), || {
+            let r = evolve(&table, budget, bounds, &params).unwrap();
+            std::hint::black_box(r.best_fitness);
+        });
+    }
+
+    // fitness-evaluation microbenchmark (the GA inner loop)
+    let table = SensitivityTable::synthetic("micro", 40, 8, |x| 1.0 + x, 3);
+    let alloc: Vec<u32> = (0..40).map(|i| 1 + (i % 8) as u32).collect();
+    bench("fitness_eval_40layers", || {
+        std::hint::black_box(table.fitness(&alloc));
+    });
+
+    header("exact DP reference solver");
+    for spec in registry().into_iter().take(3) {
+        let table = SensitivityTable::synthetic(
+            spec.name,
+            spec.n_layers,
+            spec.top_k as u32,
+            |x| 1.0 + x,
+            9,
+        );
+        let budget = (spec.baseline_budget() as f64 * 0.65) as u32;
+        bench(&format!("dp_exact/{}", spec.name), || {
+            std::hint::black_box(exact_dp(&table, budget, Bounds::paper(spec.top_k as u32)));
+        });
+    }
+}

@@ -1,0 +1,40 @@
+//! Figure-harness benchmarks: wall time to regenerate each deliverable
+//! (table 1, Fig. 2 full; Stage-1-dependent figures benched at fast
+//! settings when artifacts exist).
+
+use lexi_moe::config::experiment::ExperimentConfig;
+use lexi_moe::figures;
+use lexi_moe::runtime::{Manifest, ModelRuntime, Runtime};
+use lexi_moe::util::bench::{bench, bench_with_budget, header};
+
+fn main() {
+    let out = std::env::temp_dir().join("lexi_bench_figs");
+    header("figure regeneration (analytic figures)");
+    bench("table1", || {
+        std::hint::black_box(figures::table1::run(&out).unwrap());
+    });
+    let cfg = ExperimentConfig::default();
+    bench("fig2_full_6models", || {
+        std::hint::black_box(figures::fig2::run(&out, &cfg).unwrap());
+    });
+
+    // Stage-1 figure at fast settings (needs artifacts).
+    let dir = Manifest::default_dir();
+    if let Ok(manifest) = Manifest::load(&dir) {
+        let rt = Runtime::cpu().unwrap();
+        header("stage-1 profiling (fast settings, smallest model)");
+        let fast = ExperimentConfig::fast();
+        let model = ModelRuntime::load(&rt, &manifest, "deepseek-vl2-tiny").unwrap();
+        bench_with_budget(
+            "stage1_profile_vl2_fast",
+            std::time::Duration::from_secs(10),
+            &mut || {
+                std::hint::black_box(
+                    lexi_moe::lexi::sensitivity::profile_model(&model, &fast, None).unwrap(),
+                );
+            },
+        );
+    } else {
+        eprintln!("(artifacts missing — skipping stage-1 figure bench)");
+    }
+}

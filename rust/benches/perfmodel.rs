@@ -1,0 +1,43 @@
+//! H100 performance-model benchmarks: per-config throughput evaluation
+//! cost and the full Fig. 2 sweep (perf target: full sweep < 1 s/model).
+
+use lexi_moe::config::experiment::ExperimentConfig;
+use lexi_moe::config::model::{registry, spec};
+use lexi_moe::figures::fig2;
+use lexi_moe::moe::allocation::Allocation;
+use lexi_moe::moe::transform::Transform;
+use lexi_moe::perfmodel::PerfModel;
+use lexi_moe::util::bench::{bench, header};
+
+fn main() {
+    header("perfmodel: single-config throughput evaluations");
+    for name in ["mixtral-8x7b", "olmoe-1b-7b", "qwen1.5-moe-a2.7b"] {
+        let pm = PerfModel::new(spec(name).unwrap(), 0);
+        bench(&format!("throughput/base/{name}"), || {
+            std::hint::black_box(pm.throughput(&Transform::Baseline, 16, 1024, 512));
+        });
+        bench(&format!("throughput/inter50/{name}"), || {
+            std::hint::black_box(pm.throughput(
+                &Transform::InterPrune { frac: 0.5 },
+                16,
+                1024,
+                512,
+            ));
+        });
+        let m = spec(name).unwrap();
+        let lexi = Transform::Lexi {
+            allocation: Allocation::uniform(m.n_layers, 2),
+        };
+        bench(&format!("throughput/lexi/{name}"), || {
+            std::hint::black_box(pm.throughput(&lexi, 16, 1024, 512));
+        });
+    }
+
+    header("perfmodel: full Fig. 2 sweep per model");
+    let cfg = ExperimentConfig::default();
+    for m in registry() {
+        bench(&format!("fig2_sweep/{}", m.name), || {
+            std::hint::black_box(fig2::sweep_model(&m, &cfg).unwrap());
+        });
+    }
+}

@@ -1,0 +1,63 @@
+//! Experiment-level knobs shared by the figure harness and the CLI.
+//!
+//! The defaults are sized for a single CPU core (see DESIGN.md §3); the
+//! paper's original counts are noted inline. `ExperimentConfig::fast()`
+//! shrinks everything further for tests/CI.
+
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Stage-1 Monte-Carlo iterations per (layer, k). Paper: "millions of
+    /// random input samples"; the estimator's std-err scales 1/sqrt(N·T)
+    /// and with 128 tokens/iter the heatmap stabilizes by ~16 iters.
+    pub sensitivity_iters: usize,
+    /// Tokens per Stage-1 probe batch (fixed by the moe_layer graph).
+    pub profile_tokens: usize,
+    /// Stage-2 GA population size.
+    pub ga_population: usize,
+    /// Stage-2 GA generations.
+    pub ga_generations: usize,
+    /// Stage-2 GA mutation rate (per-layer probability of a +/-1 swap).
+    pub ga_mutation: f64,
+    /// Pruning ratios evaluated for the baselines (paper: 12.5/25/50 %).
+    pub prune_fracs: Vec<f64>,
+    /// Monte-Carlo routing trials in the load-balance model.
+    pub routing_trials: usize,
+    /// Batch size of the paper's throughput runs.
+    pub paper_batch: usize,
+    /// Input/output sequence lengths of the paper's throughput runs.
+    pub paper_in_len: usize,
+    pub paper_out_len: usize,
+    /// RNG seed for every stochastic component.
+    pub seed: u64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            sensitivity_iters: 16,
+            profile_tokens: 128,
+            ga_population: 64,
+            ga_generations: 400,
+            ga_mutation: 0.3,
+            prune_fracs: vec![0.125, 0.25, 0.5],
+            routing_trials: 64,
+            paper_batch: 16,
+            paper_in_len: 1024,
+            paper_out_len: 512,
+            seed: 0,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Shrunk version for unit/integration tests.
+    pub fn fast() -> Self {
+        ExperimentConfig {
+            sensitivity_iters: 2,
+            ga_population: 16,
+            ga_generations: 40,
+            routing_trials: 8,
+            ..Default::default()
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! Configuration: model registry (Table 1), serving engine, experiments.
+
+pub mod experiment;
+pub mod model;
+pub mod serving;
+
+pub use experiment::ExperimentConfig;
+pub use model::{ModelSpec, PaperScale};
+pub use serving::ServingConfig;

@@ -1,0 +1,226 @@
+//! The paper's Table-1 model registry.
+//!
+//! Each entry carries (a) the *structural* quantities LExI operates on —
+//! layer count, expert count, baseline top-k — shared bit-for-bit with the
+//! tiny analogues trained at build time (python/compile/configs.py), and
+//! (b) the *paper-scale* dims used by the H100 performance model
+//! ([`crate::perfmodel`]) to reproduce the throughput axes of Figs. 2–8.
+
+/// Paper-scale dimensions of the real checkpoint (for the perf model only;
+/// the executables in `artifacts/` are the tiny analogues).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PaperScale {
+    /// Hidden (model) dimension.
+    pub hidden: usize,
+    /// Per-expert FFN intermediate dimension.
+    pub ffn: usize,
+    /// Attention heads.
+    pub n_heads: usize,
+    /// Total parameters, billions (Table 1 "#P (B)").
+    pub params_b: f64,
+    /// GPUs used in the paper's deployment (4 for most LLMs, 2 for the
+    /// DeepSeek models).
+    pub n_gpus: usize,
+    /// Vocabulary size of the real tokenizer (embedding traffic).
+    pub vocab: usize,
+}
+
+/// One Table-1 model: structure + paper-scale dims.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    /// Human-readable name as printed in the paper.
+    pub paper_name: &'static str,
+    pub n_layers: usize,
+    pub n_experts: usize,
+    /// Baseline pretrained top-k (k_base); the LExI search space is
+    /// {1, ..., k_base} per layer.
+    pub top_k: usize,
+    pub paper: PaperScale,
+    pub is_vlm: bool,
+}
+
+impl ModelSpec {
+    /// Total active-expert budget of the unmodified model: L * k_base.
+    pub fn baseline_budget(&self) -> usize {
+        self.n_layers * self.top_k
+    }
+
+    /// LExI budget sweep used in the figures: fractions of the baseline.
+    pub fn budget_sweep(&self) -> Vec<usize> {
+        let base = self.baseline_budget();
+        let mut out: Vec<usize> = [0.5, 0.65, 0.8]
+            .iter()
+            .map(|f| ((base as f64 * f).round() as usize).max(self.n_layers))
+            .collect();
+        out.dedup();
+        out
+    }
+}
+
+pub const MODEL_NAMES: [&str; 6] = [
+    "olmoe-1b-7b",
+    "qwen1.5-moe-a2.7b",
+    "deepseek-v2-lite",
+    "minicpm-moe-8x2b",
+    "mixtral-8x7b",
+    "deepseek-vl2-tiny",
+];
+
+/// The five LLMs of Figs. 4-7 (the VLM is evaluated in Fig. 8).
+pub const LLM_NAMES: [&str; 5] = [
+    "olmoe-1b-7b",
+    "qwen1.5-moe-a2.7b",
+    "deepseek-v2-lite",
+    "minicpm-moe-8x2b",
+    "mixtral-8x7b",
+];
+
+/// Full registry (paper Table 1).
+pub fn registry() -> Vec<ModelSpec> {
+    vec![
+        ModelSpec {
+            name: "deepseek-vl2-tiny",
+            paper_name: "DeepSeek VL2-Tiny",
+            n_layers: 12,
+            n_experts: 64,
+            top_k: 6,
+            paper: PaperScale {
+                hidden: 1280,
+                ffn: 896,
+                n_heads: 10,
+                params_b: 3.0,
+                n_gpus: 2,
+                vocab: 102_400,
+            },
+            is_vlm: true,
+        },
+        ModelSpec {
+            name: "olmoe-1b-7b",
+            paper_name: "OLMoE-1B-7B-0125-Instruct",
+            n_layers: 16,
+            n_experts: 64,
+            top_k: 8,
+            paper: PaperScale {
+                hidden: 2048,
+                ffn: 1024,
+                n_heads: 16,
+                params_b: 6.92,
+                n_gpus: 4,
+                vocab: 50_304,
+            },
+            is_vlm: false,
+        },
+        ModelSpec {
+            name: "qwen1.5-moe-a2.7b",
+            paper_name: "Qwen1.5-MoE-A2.7B-Chat",
+            n_layers: 24,
+            n_experts: 60,
+            top_k: 4,
+            paper: PaperScale {
+                hidden: 2048,
+                ffn: 1408,
+                n_heads: 16,
+                params_b: 14.3,
+                n_gpus: 4,
+                vocab: 151_936,
+            },
+            is_vlm: false,
+        },
+        ModelSpec {
+            name: "deepseek-v2-lite",
+            paper_name: "DeepSeek-V2-Lite-Chat",
+            n_layers: 27,
+            n_experts: 64,
+            top_k: 6,
+            paper: PaperScale {
+                hidden: 2048,
+                ffn: 1408,
+                n_heads: 16,
+                params_b: 15.7,
+                n_gpus: 2,
+                vocab: 102_400,
+            },
+            is_vlm: false,
+        },
+        ModelSpec {
+            name: "minicpm-moe-8x2b",
+            paper_name: "MiniCPM-MoE-8x2B",
+            n_layers: 40,
+            n_experts: 8,
+            top_k: 2,
+            paper: PaperScale {
+                hidden: 2304,
+                ffn: 5760,
+                n_heads: 36,
+                params_b: 17.0,
+                n_gpus: 4,
+                vocab: 122_753,
+            },
+            is_vlm: false,
+        },
+        ModelSpec {
+            name: "mixtral-8x7b",
+            paper_name: "Mixtral-8x7B-Instruct-v0.1",
+            n_layers: 32,
+            n_experts: 8,
+            top_k: 2,
+            paper: PaperScale {
+                hidden: 4096,
+                ffn: 14336,
+                n_heads: 32,
+                params_b: 46.7,
+                n_gpus: 4,
+                vocab: 32_000,
+            },
+            is_vlm: false,
+        },
+    ]
+}
+
+/// Look up one model by `name` key (shared with the Python configs).
+pub fn spec(name: &str) -> anyhow::Result<ModelSpec> {
+    registry()
+        .into_iter()
+        .find(|m| m.name == name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model '{name}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_matches_table1_structure() {
+        let t1: &[(&str, usize, usize, usize, f64)] = &[
+            ("deepseek-vl2-tiny", 12, 64, 6, 3.0),
+            ("olmoe-1b-7b", 16, 64, 8, 6.92),
+            ("qwen1.5-moe-a2.7b", 24, 60, 4, 14.3),
+            ("deepseek-v2-lite", 27, 64, 6, 15.7),
+            ("minicpm-moe-8x2b", 40, 8, 2, 17.0),
+            ("mixtral-8x7b", 32, 8, 2, 46.7),
+        ];
+        for (name, l, e, k, p) in t1 {
+            let m = spec(name).unwrap();
+            assert_eq!(m.n_layers, *l);
+            assert_eq!(m.n_experts, *e);
+            assert_eq!(m.top_k, *k);
+            assert!((m.paper.params_b - p).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn budgets_are_feasible() {
+        for m in registry() {
+            for b in m.budget_sweep() {
+                assert!(b >= m.n_layers, "budget below k=1 per layer");
+                assert!(b <= m.baseline_budget());
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        assert!(spec("gpt-5").is_err());
+    }
+}

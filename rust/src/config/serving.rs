@@ -1,0 +1,54 @@
+//! Serving-engine configuration (vLLM-lite; defaults mirror the paper's
+//! batch-16 H100 setup scaled to the tiny analogues).
+
+#[derive(Clone, Debug)]
+pub struct ServingConfig {
+    /// Static executable batch (slots per forward).
+    pub batch: usize,
+    /// KV-cache capacity per slot (tokens).
+    pub max_seq: usize,
+    /// Static prefill graph length.
+    pub prefill_len: usize,
+    /// KV block size for the block-granular cache accounting.
+    pub kv_block: usize,
+    /// Total KV blocks available (admission control / preemption).
+    pub kv_blocks_total: usize,
+    /// Max requests admitted to the waiting queue before rejection.
+    pub queue_cap: usize,
+    /// Max new tokens per request unless the request says otherwise.
+    pub max_new_tokens: usize,
+    /// Scheduler: max decode steps between prefill opportunities.
+    pub decode_burst: usize,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            batch: 8,
+            max_seq: 128,
+            prefill_len: 96,
+            kv_block: 16,
+            kv_blocks_total: 64, // 8 slots * 128 tokens / 16
+            queue_cap: 256,
+            max_new_tokens: 16,
+            decode_burst: 8,
+        }
+    }
+}
+
+impl ServingConfig {
+    pub fn blocks_per_seq(&self) -> usize {
+        self.max_seq.div_ceil(self.kv_block)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_blocks_cover_all_slots() {
+        let c = ServingConfig::default();
+        assert!(c.kv_blocks_total >= c.batch * c.blocks_per_seq());
+    }
+}

@@ -1,0 +1,149 @@
+//! Continuous batcher: waiting queue + fixed decode slots.
+//!
+//! New requests are admitted into free slots whenever the KV manager has
+//! capacity (prefill happens alongside in-flight decodes — the vLLM
+//! scheduling discipline); finished slots free immediately.
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, Result};
+
+use super::request::{Request, Tracked};
+
+/// One occupied decode slot.
+#[derive(Debug)]
+pub struct Slot {
+    pub tracked: Tracked,
+    /// Next cache write position (= tokens currently in context).
+    pub pos: usize,
+    /// Last sampled token (input to the next decode step).
+    pub last: i32,
+}
+
+#[derive(Debug)]
+pub struct Batcher {
+    pub waiting: VecDeque<Tracked>,
+    pub slots: Vec<Option<Slot>>,
+    queue_cap: usize,
+}
+
+impl Batcher {
+    pub fn new(n_slots: usize, queue_cap: usize) -> Self {
+        Batcher {
+            waiting: VecDeque::new(),
+            slots: (0..n_slots).map(|_| None).collect(),
+            queue_cap,
+        }
+    }
+
+    pub fn push(&mut self, req: Request) -> Result<()> {
+        if self.waiting.len() >= self.queue_cap {
+            bail!("queue full ({} waiting)", self.queue_cap);
+        }
+        self.waiting.push_back(Tracked::new(req));
+        Ok(())
+    }
+
+    pub fn free_slot_indices(&self) -> Vec<usize> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.is_none())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn n_active(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.waiting.is_empty() && self.n_active() == 0
+    }
+
+    /// Pop the next waiting request if `admit` approves it; the caller
+    /// places it into a slot after prefill.
+    pub fn pop_admissible<F: FnMut(&Tracked) -> bool>(
+        &mut self,
+        mut admit: F,
+    ) -> Option<Tracked> {
+        match self.waiting.front() {
+            Some(t) if admit(t) => self.waiting.pop_front(),
+            _ => None,
+        }
+    }
+
+    pub fn occupy(&mut self, idx: usize, slot: Slot) {
+        debug_assert!(self.slots[idx].is_none(), "slot {idx} already occupied");
+        self.slots[idx] = Some(slot);
+    }
+
+    pub fn vacate(&mut self, idx: usize) -> Option<Slot> {
+        self.slots[idx].take()
+    }
+
+    /// Consistency invariant: a request id appears at most once anywhere.
+    pub fn check_invariant(&self) -> Result<()> {
+        let mut ids = std::collections::HashSet::new();
+        for t in &self.waiting {
+            anyhow::ensure!(ids.insert(t.req.id), "duplicate id {} in queue", t.req.id);
+        }
+        for s in self.slots.iter().flatten() {
+            anyhow::ensure!(
+                ids.insert(s.tracked.req.id),
+                "id {} both queued and running",
+                s.tracked.req.id
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::request::SamplingParams;
+
+    fn req(id: u64) -> Request {
+        Request::new(id, vec![1, 2, 3], SamplingParams::default())
+    }
+
+    #[test]
+    fn queue_cap_enforced() {
+        let mut b = Batcher::new(2, 2);
+        b.push(req(1)).unwrap();
+        b.push(req(2)).unwrap();
+        assert!(b.push(req(3)).is_err());
+    }
+
+    #[test]
+    fn admit_occupy_vacate_cycle() {
+        let mut b = Batcher::new(2, 8);
+        b.push(req(1)).unwrap();
+        b.push(req(2)).unwrap();
+        assert_eq!(b.free_slot_indices(), vec![0, 1]);
+        let t = b.pop_admissible(|_| true).unwrap();
+        b.occupy(
+            0,
+            Slot {
+                tracked: t,
+                pos: 3,
+                last: 5,
+            },
+        );
+        b.check_invariant().unwrap();
+        assert_eq!(b.free_slot_indices(), vec![1]);
+        assert_eq!(b.n_active(), 1);
+        let s = b.vacate(0).unwrap();
+        assert_eq!(s.tracked.req.id, 1);
+        assert!(!b.is_idle()); // one still waiting
+    }
+
+    #[test]
+    fn pop_respects_admission() {
+        let mut b = Batcher::new(1, 8);
+        b.push(req(1)).unwrap();
+        assert!(b.pop_admissible(|_| false).is_none());
+        assert_eq!(b.waiting.len(), 1);
+    }
+}

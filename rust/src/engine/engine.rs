@@ -1,0 +1,316 @@
+//! The serving engine: continuous batching over the PJRT runtime.
+//!
+//! One `step()` either (a) admits waiting requests into free slots — a
+//! batched prefill whose per-slot KV rows are spliced into the running
+//! cache, alongside in-flight decodes — or (b) advances every active slot
+//! one decode step. `run_until_complete` drains the queue; the paper's
+//! serving-throughput comparisons (examples/serve_benchmark.rs) replay a
+//! Poisson trace through this loop under each transform.
+
+use anyhow::Result;
+
+use crate::config::serving::ServingConfig;
+use crate::runtime::executable::KvState;
+use crate::runtime::ModelRuntime;
+use crate::util::Pcg32;
+
+use super::batcher::{Batcher, Slot};
+use super::kv_manager::KvBlockManager;
+use super::metrics::EngineMetrics;
+use super::request::{FinishReason, Request, RequestId, RequestOutput, SamplingParams};
+use super::sampler;
+
+/// Per-model serving engine bound to one transform configuration
+/// (k_vec + gate_bias + already-edited weights inside `model`).
+pub struct Engine<'m> {
+    pub model: &'m ModelRuntime,
+    pub cfg: ServingConfig,
+    k_vec: Vec<i32>,
+    gate_bias: Vec<f32>,
+    batcher: Batcher,
+    kv_mgr: KvBlockManager,
+    /// Running KV cache (literal handed to the decode graph by
+    /// reference; host-copied only when splicing in fresh prefills).
+    kv: KvState,
+    pub metrics: EngineMetrics,
+    rng: Pcg32,
+    next_id: RequestId,
+    outputs: Vec<RequestOutput>,
+}
+
+impl<'m> Engine<'m> {
+    pub fn new(
+        model: &'m ModelRuntime,
+        cfg: ServingConfig,
+        k_vec: Vec<i32>,
+        gate_bias: Vec<f32>,
+    ) -> Result<Self> {
+        let e = &model.entry;
+        anyhow::ensure!(cfg.batch == e.batch, "config batch != graph batch");
+        anyhow::ensure!(k_vec.len() == e.n_layers);
+        anyhow::ensure!(gate_bias.len() == e.n_layers * e.n_experts);
+        let kv = KvState::Host(
+            crate::runtime::tensor::HostTensor::zeros(e.kv_dims().to_vec()).to_literal()?,
+        );
+        Ok(Engine {
+            model,
+            batcher: Batcher::new(cfg.batch, cfg.queue_cap),
+            kv_mgr: KvBlockManager::new(cfg.kv_blocks_total, cfg.kv_block),
+            kv,
+            metrics: EngineMetrics::default(),
+            rng: Pcg32::seeded(0x5e41),
+            next_id: 0,
+            outputs: Vec::new(),
+            k_vec,
+            gate_bias,
+            cfg,
+        })
+    }
+
+    /// Enqueue a request; returns its id.
+    pub fn submit(&mut self, prompt: Vec<i32>, sampling: SamplingParams) -> Result<RequestId> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let mut prompt = prompt;
+        let max_prompt = self.cfg.prefill_len;
+        if prompt.len() > max_prompt {
+            prompt.drain(0..prompt.len() - max_prompt); // keep the tail
+        }
+        self.batcher.push(Request::new(id, prompt, sampling))?;
+        Ok(id)
+    }
+
+    pub fn idle(&self) -> bool {
+        self.batcher.is_idle()
+    }
+
+    /// Drive the engine until every submitted request has completed.
+    pub fn run_until_complete(&mut self) -> Result<Vec<RequestOutput>> {
+        self.metrics.start();
+        while !self.idle() {
+            self.step()?;
+        }
+        self.metrics.finish();
+        Ok(std::mem::take(&mut self.outputs))
+    }
+
+    /// One scheduling step. Returns false when there was nothing to do.
+    pub fn step(&mut self) -> Result<bool> {
+        if self.try_admit()? {
+            return Ok(true);
+        }
+        if self.batcher.n_active() > 0 {
+            self.decode_step()?;
+            return Ok(true);
+        }
+        Ok(false)
+    }
+
+    // ----------------------------------------------------------------
+    // prefill path
+    // ----------------------------------------------------------------
+
+    /// Admit as many waiting requests as slots + KV blocks allow; run one
+    /// batched prefill for all of them.
+    fn try_admit(&mut self) -> Result<bool> {
+        let free = self.batcher.free_slot_indices();
+        if free.is_empty() || self.batcher.waiting.is_empty() {
+            return Ok(false);
+        }
+        let e = self.model.entry.clone();
+        let mut admitted: Vec<(usize, super::request::Tracked)> = Vec::new();
+        for &slot_idx in &free {
+            let kv_mgr = &mut self.kv_mgr;
+            let max_seq = self.cfg.max_seq;
+            let popped = self.batcher.pop_admissible(|t| {
+                let demand = (t.req.prompt.len() + t.req.sampling.max_new_tokens).min(max_seq);
+                kv_mgr.can_admit(demand)
+            });
+            match popped {
+                Some(t) => {
+                    let demand = (t.req.prompt.len() + t.req.sampling.max_new_tokens)
+                        .min(self.cfg.max_seq);
+                    self.kv_mgr.admit(t.req.id, demand)?;
+                    admitted.push((slot_idx, t));
+                }
+                None => break,
+            }
+        }
+        if admitted.is_empty() {
+            return Ok(false);
+        }
+
+        // Build the padded token matrix.
+        let mut tokens = vec![0i32; e.batch * e.prefill_len];
+        for (slot_idx, t) in &admitted {
+            let p = &t.req.prompt;
+            tokens[slot_idx * e.prefill_len..slot_idx * e.prefill_len + p.len()]
+                .copy_from_slice(p);
+        }
+        let out = self
+            .model
+            .prefill(&tokens, &self.k_vec, &self.gate_bias)?;
+        self.metrics.prefill_calls += 1;
+
+        // Splice the admitted slots' cache rows into the running cache
+        // (the only host-side KV copy in the engine; decode steps pass
+        // the literal through by reference — §Perf L3).
+        let kv_new = out.kv.to_host()?;
+        let mut kv_run = self.kv.to_host()?;
+        let row = e.max_seq * e.n_heads * e.head_dim;
+        let per_lane = e.batch * row; // one (layer, k/v) lane
+        for (slot_idx, _) in &admitted {
+            for lane in 0..e.n_layers * 2 {
+                let off = lane * per_lane + slot_idx * row;
+                kv_run.data[off..off + row].copy_from_slice(&kv_new.data[off..off + row]);
+            }
+        }
+        self.kv = self.model.upload_kv(&kv_run)?;
+
+        for (slot_idx, mut t) in admitted {
+            let plen = t.req.prompt.len();
+            // first token from the last prompt position's logits
+            let row = &out.logits
+                [(slot_idx * e.prefill_len + plen - 1) * e.vocab..][..e.vocab];
+            let tok = sampler::sample(row, &t.req.sampling, &mut self.rng);
+            t.first_token = Some(std::time::Instant::now());
+            t.generated.push(tok);
+            self.batcher.occupy(
+                slot_idx,
+                Slot {
+                    tracked: t,
+                    pos: plen,
+                    last: tok,
+                },
+            );
+            // single-token requests finish immediately
+            self.maybe_finish(slot_idx)?;
+        }
+        Ok(true)
+    }
+
+    // ----------------------------------------------------------------
+    // decode path
+    // ----------------------------------------------------------------
+
+    fn decode_step(&mut self) -> Result<()> {
+        let e = self.model.entry.clone();
+        let mut tokens = vec![0i32; e.batch];
+        let mut pos = vec![(e.max_seq - 1) as i32; e.batch]; // inactive parking
+        let mut active = Vec::new();
+        for (i, s) in self.batcher.slots.iter().enumerate() {
+            if let Some(slot) = s {
+                tokens[i] = slot.last;
+                pos[i] = slot.pos as i32;
+                active.push(i);
+            }
+        }
+        let out = self
+            .model
+            .decode(&self.kv, &tokens, &pos, &self.k_vec, &self.gate_bias)?;
+        self.metrics
+            .record_decode_step(active.len(), e.batch);
+        self.kv = out.kv;
+
+        for i in active {
+            let row = &out.logits[i * e.vocab..(i + 1) * e.vocab];
+            let (tok, max_new, _eos) = {
+                let slot = self.batcher.slots[i].as_mut().unwrap();
+                let tok = sampler::sample(row, &slot.tracked.req.sampling, &mut self.rng);
+                slot.pos += 1;
+                slot.last = tok;
+                slot.tracked.generated.push(tok);
+                (
+                    tok,
+                    slot.tracked.req.sampling.max_new_tokens,
+                    slot.tracked.req.sampling.stop_on_eos,
+                )
+            };
+            let _ = (tok, max_new);
+            self.maybe_finish(i)?;
+        }
+        Ok(())
+    }
+
+    /// Finish the slot if EOS / token budget / KV capacity says so.
+    fn maybe_finish(&mut self, idx: usize) -> Result<()> {
+        let e = &self.model.entry;
+        let (done, reason) = {
+            let slot = self.batcher.slots[idx].as_ref().unwrap();
+            let t = &slot.tracked;
+            let sp = &t.req.sampling;
+            if sp.stop_on_eos && t.generated.last() == Some(&EOS_TOKEN) {
+                (true, FinishReason::Eos)
+            } else if t.generated.len() >= sp.max_new_tokens {
+                (true, FinishReason::MaxTokens)
+            } else if slot.pos + 1 >= e.max_seq {
+                (true, FinishReason::CapacityTruncated)
+            } else {
+                (false, FinishReason::MaxTokens)
+            }
+        };
+        if !done {
+            return Ok(());
+        }
+        let slot = self.batcher.vacate(idx).unwrap();
+        let t = slot.tracked;
+        self.kv_mgr.release(t.req.id);
+        let now = std::time::Instant::now();
+        let first = t.first_token.unwrap_or(now);
+        let out = RequestOutput {
+            id: t.req.id,
+            prompt_len: t.req.prompt.len(),
+            tokens: t.generated,
+            finish: reason,
+            ttft_s: (first - t.enqueued).as_secs_f64(),
+            e2e_s: (now - t.enqueued).as_secs_f64(),
+        };
+        self.metrics.record(out.clone());
+        self.outputs.push(out);
+        Ok(())
+    }
+
+    /// Raw single-shot generation helper used by the eval harness: fills
+    /// up to `batch` prompts, greedy-decodes `n_new` tokens each, returns
+    /// the generated ids per prompt. Bypasses queueing/metrics.
+    pub fn generate_batch(
+        model: &ModelRuntime,
+        prompts: &[&[i32]],
+        n_new: usize,
+        k_vec: &[i32],
+        gate_bias: &[f32],
+    ) -> Result<Vec<Vec<i32>>> {
+        let e = &model.entry;
+        anyhow::ensure!(prompts.len() <= e.batch);
+        let mut tokens = vec![0i32; e.batch * e.prefill_len];
+        for (i, p) in prompts.iter().enumerate() {
+            anyhow::ensure!(p.len() <= e.prefill_len, "prompt too long");
+            tokens[i * e.prefill_len..i * e.prefill_len + p.len()].copy_from_slice(p);
+        }
+        let out = model.prefill(&tokens, k_vec, gate_bias)?;
+        let mut gen: Vec<Vec<i32>> = vec![Vec::new(); prompts.len()];
+        let mut last = vec![0i32; e.batch];
+        let mut pos = vec![(e.max_seq - 1) as i32; e.batch];
+        for (i, p) in prompts.iter().enumerate() {
+            let row = &out.logits[(i * e.prefill_len + p.len() - 1) * e.vocab..][..e.vocab];
+            last[i] = sampler::argmax(row);
+            pos[i] = p.len() as i32;
+            gen[i].push(last[i]);
+        }
+        let mut kv = out.kv;
+        for _ in 1..n_new {
+            let d = model.decode(&kv, &last, &pos, k_vec, gate_bias)?;
+            for (i, g) in gen.iter_mut().enumerate() {
+                let row = &d.logits[i * e.vocab..(i + 1) * e.vocab];
+                last[i] = sampler::argmax(row);
+                pos[i] += 1;
+                g.push(last[i]);
+            }
+            kv = d.kv;
+        }
+        Ok(gen)
+    }
+}
+
+/// EOS id of the shared vocabulary (python/compile/configs.py).
+pub const EOS_TOKEN: i32 = 2;

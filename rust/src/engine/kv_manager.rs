@@ -1,0 +1,146 @@
+//! Block-granular KV-cache accounting (vLLM-style).
+//!
+//! The compiled decode graph owns a dense per-slot cache; this manager
+//! does the *allocator's* job: admission control (a sequence may only be
+//! scheduled when its worst-case block demand fits), per-sequence
+//! bookkeeping, and preemption (release everything a victim holds).
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug)]
+pub struct KvBlockManager {
+    block_size: usize,
+    total_blocks: usize,
+    free_blocks: usize,
+    /// seq id -> blocks held.
+    held: HashMap<u64, usize>,
+}
+
+impl KvBlockManager {
+    pub fn new(total_blocks: usize, block_size: usize) -> Self {
+        assert!(block_size > 0 && total_blocks > 0);
+        KvBlockManager {
+            block_size,
+            total_blocks,
+            free_blocks: total_blocks,
+            held: HashMap::new(),
+        }
+    }
+
+    pub fn blocks_for_tokens(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_size)
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free_blocks
+    }
+
+    pub fn held_by(&self, seq: u64) -> usize {
+        self.held.get(&seq).copied().unwrap_or(0)
+    }
+
+    /// Can a sequence with this worst-case token demand be admitted now?
+    pub fn can_admit(&self, max_tokens: usize) -> bool {
+        self.blocks_for_tokens(max_tokens) <= self.free_blocks
+    }
+
+    /// Reserve blocks for `seq` to cover `max_tokens` tokens.
+    pub fn admit(&mut self, seq: u64, max_tokens: usize) -> Result<()> {
+        if self.held.contains_key(&seq) {
+            bail!("sequence {seq} already admitted");
+        }
+        let need = self.blocks_for_tokens(max_tokens);
+        if need > self.free_blocks {
+            bail!("kv capacity: need {need} blocks, {} free", self.free_blocks);
+        }
+        self.free_blocks -= need;
+        self.held.insert(seq, need);
+        Ok(())
+    }
+
+    /// Grow a running sequence's reservation (decode past the estimate).
+    pub fn extend(&mut self, seq: u64, new_total_tokens: usize) -> Result<()> {
+        let need = self.blocks_for_tokens(new_total_tokens);
+        let have = self.held_by(seq);
+        if need <= have {
+            return Ok(());
+        }
+        let extra = need - have;
+        if extra > self.free_blocks {
+            bail!(
+                "kv capacity: extend needs {extra} blocks, {} free",
+                self.free_blocks
+            );
+        }
+        self.free_blocks -= extra;
+        self.held.insert(seq, need);
+        Ok(())
+    }
+
+    /// Release everything a sequence holds (finish or preemption).
+    pub fn release(&mut self, seq: u64) -> usize {
+        let n = self.held.remove(&seq).unwrap_or(0);
+        self.free_blocks += n;
+        debug_assert!(self.free_blocks <= self.total_blocks);
+        n
+    }
+
+    /// Allocator invariant: free + held == total.
+    pub fn check_invariant(&self) -> Result<()> {
+        let held: usize = self.held.values().sum();
+        anyhow::ensure!(
+            held + self.free_blocks == self.total_blocks,
+            "leak: held {held} + free {} != total {}",
+            self.free_blocks,
+            self.total_blocks
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admit_and_release_roundtrip() {
+        let mut m = KvBlockManager::new(8, 16);
+        m.admit(1, 100).unwrap(); // 7 blocks
+        assert_eq!(m.free_blocks(), 1);
+        assert!(m.admit(2, 32).is_err()); // needs 2
+        m.admit(3, 16).unwrap();
+        assert_eq!(m.free_blocks(), 0);
+        assert_eq!(m.release(1), 7);
+        assert_eq!(m.free_blocks(), 7);
+        m.check_invariant().unwrap();
+    }
+
+    #[test]
+    fn double_admit_rejected() {
+        let mut m = KvBlockManager::new(8, 16);
+        m.admit(1, 16).unwrap();
+        assert!(m.admit(1, 16).is_err());
+    }
+
+    #[test]
+    fn extend_grows_reservation() {
+        let mut m = KvBlockManager::new(4, 16);
+        m.admit(1, 16).unwrap();
+        m.extend(1, 48).unwrap(); // 1 -> 3 blocks
+        assert_eq!(m.held_by(1), 3);
+        assert_eq!(m.free_blocks(), 1);
+        m.extend(1, 32).unwrap(); // shrink request is a no-op
+        assert_eq!(m.held_by(1), 3);
+        assert!(m.extend(1, 1000).is_err());
+        m.check_invariant().unwrap();
+    }
+
+    #[test]
+    fn release_unknown_is_zero() {
+        let mut m = KvBlockManager::new(4, 16);
+        assert_eq!(m.release(99), 0);
+        m.check_invariant().unwrap();
+    }
+}

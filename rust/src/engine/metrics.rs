@@ -1,0 +1,147 @@
+//! Serving metrics: latency percentiles, token throughput, utilization.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::percentile;
+
+use super::request::RequestOutput;
+
+#[derive(Debug, Default)]
+pub struct EngineMetrics {
+    pub completed: Vec<RequestOutput>,
+    pub prefill_calls: u64,
+    pub decode_calls: u64,
+    pub decode_steps_active_slots: u64,
+    pub decode_steps_total_slots: u64,
+    started: Option<Instant>,
+    finished: Option<Instant>,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct MetricsSummary {
+    pub n_requests: usize,
+    pub wall_s: f64,
+    /// Generated tokens per second.
+    pub gen_tok_s: f64,
+    /// (prompt + generated) tokens per second — the paper's metric.
+    pub total_tok_s: f64,
+    pub ttft_p50_s: f64,
+    pub ttft_p99_s: f64,
+    pub e2e_p50_s: f64,
+    pub e2e_p99_s: f64,
+    /// Mean fraction of decode-batch slots doing useful work.
+    pub slot_utilization: f64,
+    pub prefill_calls: u64,
+    pub decode_calls: u64,
+}
+
+impl EngineMetrics {
+    pub fn start(&mut self) {
+        self.started = Some(Instant::now());
+    }
+
+    pub fn finish(&mut self) {
+        self.finished = Some(Instant::now());
+    }
+
+    pub fn record(&mut self, out: RequestOutput) {
+        self.completed.push(out);
+    }
+
+    pub fn record_decode_step(&mut self, active: usize, total: usize) {
+        self.decode_calls += 1;
+        self.decode_steps_active_slots += active as u64;
+        self.decode_steps_total_slots += total as u64;
+    }
+
+    pub fn wall(&self) -> Duration {
+        match (self.started, self.finished) {
+            (Some(s), Some(f)) => f - s,
+            (Some(s), None) => s.elapsed(),
+            _ => Duration::ZERO,
+        }
+    }
+
+    pub fn summary(&self) -> MetricsSummary {
+        let wall = self.wall().as_secs_f64().max(1e-9);
+        let gen_tokens: usize = self.completed.iter().map(|o| o.tokens.len()).sum();
+        let total_tokens: usize = self
+            .completed
+            .iter()
+            .map(|o| o.tokens.len() + o.prompt_len)
+            .sum();
+        let ttft: Vec<f64> = self.completed.iter().map(|o| o.ttft_s).collect();
+        let e2e: Vec<f64> = self.completed.iter().map(|o| o.e2e_s).collect();
+        MetricsSummary {
+            n_requests: self.completed.len(),
+            wall_s: wall,
+            gen_tok_s: gen_tokens as f64 / wall,
+            total_tok_s: total_tokens as f64 / wall,
+            ttft_p50_s: percentile(&ttft, 50.0),
+            ttft_p99_s: percentile(&ttft, 99.0),
+            e2e_p50_s: percentile(&e2e, 50.0),
+            e2e_p99_s: percentile(&e2e, 99.0),
+            slot_utilization: if self.decode_steps_total_slots > 0 {
+                self.decode_steps_active_slots as f64 / self.decode_steps_total_slots as f64
+            } else {
+                0.0
+            },
+            prefill_calls: self.prefill_calls,
+            decode_calls: self.decode_calls,
+        }
+    }
+}
+
+impl std::fmt::Display for MetricsSummary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "requests={} wall={:.2}s throughput={:.1} tok/s (gen {:.1} tok/s)",
+            self.n_requests, self.wall_s, self.total_tok_s, self.gen_tok_s
+        )?;
+        writeln!(
+            f,
+            "ttft p50={:.1}ms p99={:.1}ms  e2e p50={:.1}ms p99={:.1}ms",
+            self.ttft_p50_s * 1e3,
+            self.ttft_p99_s * 1e3,
+            self.e2e_p50_s * 1e3,
+            self.e2e_p99_s * 1e3
+        )?;
+        write!(
+            f,
+            "prefill_calls={} decode_calls={} slot_util={:.0}%",
+            self.prefill_calls,
+            self.decode_calls,
+            self.slot_utilization * 100.0
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::request::FinishReason;
+
+    #[test]
+    fn summary_aggregates() {
+        let mut m = EngineMetrics::default();
+        m.start();
+        for i in 0..4 {
+            m.record(RequestOutput {
+                id: i,
+                prompt_len: 10,
+                tokens: vec![1, 2, 3],
+                finish: FinishReason::MaxTokens,
+                ttft_s: 0.1 * (i + 1) as f64,
+                e2e_s: 0.2 * (i + 1) as f64,
+            });
+        }
+        m.record_decode_step(6, 8);
+        m.record_decode_step(2, 8);
+        m.finish();
+        let s = m.summary();
+        assert_eq!(s.n_requests, 4);
+        assert!((s.slot_utilization - 0.5).abs() < 1e-9);
+        assert!(s.ttft_p50_s > 0.0 && s.e2e_p99_s >= s.e2e_p50_s);
+    }
+}

@@ -1,0 +1,17 @@
+//! vLLM-lite serving stack: continuous batching, KV accounting, sampling,
+//! metrics — all over the compiled PJRT executables.
+
+pub mod batcher;
+#[allow(clippy::module_inception)]
+pub mod engine;
+pub mod kv_manager;
+pub mod metrics;
+pub mod request;
+pub mod sampler;
+pub mod tokenizer;
+
+pub use engine::Engine;
+pub use kv_manager::KvBlockManager;
+pub use metrics::MetricsSummary;
+pub use request::{FinishReason, Request, RequestId, RequestOutput, SamplingParams};
+pub use tokenizer::Tokenizer;

@@ -1,0 +1,89 @@
+//! Request/response types of the serving engine.
+
+use std::time::Instant;
+
+pub type RequestId = u64;
+
+/// Sampling settings per request.
+#[derive(Clone, Copy, Debug)]
+pub struct SamplingParams {
+    /// 0.0 = greedy.
+    pub temperature: f32,
+    /// Top-p nucleus mass (1.0 = disabled).
+    pub top_p: f32,
+    pub max_new_tokens: usize,
+    /// Stop at EOS (disable for fixed-length probes).
+    pub stop_on_eos: bool,
+    pub seed: u64,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams {
+            temperature: 0.0,
+            top_p: 1.0,
+            max_new_tokens: 16,
+            stop_on_eos: true,
+            seed: 0,
+        }
+    }
+}
+
+/// An inference request (prompt tokens in, generated tokens out).
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: RequestId,
+    pub prompt: Vec<i32>,
+    pub sampling: SamplingParams,
+}
+
+impl Request {
+    pub fn new(id: RequestId, prompt: Vec<i32>, sampling: SamplingParams) -> Self {
+        Request {
+            id,
+            prompt,
+            sampling,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    Eos,
+    MaxTokens,
+    /// KV capacity exhausted mid-generation.
+    CapacityTruncated,
+}
+
+/// Completed request with timing metadata.
+#[derive(Clone, Debug)]
+pub struct RequestOutput {
+    pub id: RequestId,
+    pub prompt_len: usize,
+    pub tokens: Vec<i32>,
+    pub finish: FinishReason,
+    /// Queue-entry -> first-token latency (s).
+    pub ttft_s: f64,
+    /// Queue-entry -> completion latency (s).
+    pub e2e_s: f64,
+}
+
+/// Engine-internal per-request state.
+#[derive(Debug)]
+pub(crate) struct Tracked {
+    pub req: Request,
+    pub enqueued: Instant,
+    pub first_token: Option<Instant>,
+    pub generated: Vec<i32>,
+}
+
+impl Tracked {
+    pub fn new(req: Request) -> Self {
+        Tracked {
+            req,
+            enqueued: Instant::now(),
+            first_token: None,
+            generated: Vec::new(),
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! Synthetic-vocabulary tokenizer.
+//!
+//! The analogue models speak the structured vocabulary defined in
+//! python/compile/configs.py (special markers, value tokens, Markov text
+//! tokens, image patches). This tokenizer renders ids readably for demos
+//! and maps ASCII text into the text-token range for ad-hoc prompts.
+
+use crate::runtime::manifest::VocabLayout;
+
+pub struct Tokenizer {
+    pub vocab: VocabLayout,
+}
+
+impl Tokenizer {
+    pub fn new(vocab: VocabLayout) -> Self {
+        Tokenizer { vocab }
+    }
+
+    /// Human-readable rendering of one token id.
+    pub fn render(&self, tok: i32) -> String {
+        let v = &self.vocab;
+        match tok {
+            t if t == v.pad => "<pad>".into(),
+            t if t == v.bos => "<bos>".into(),
+            t if t == v.eos => "<eos>".into(),
+            t if t == v.key => "<key>".into(),
+            t if t == v.qry => "<qry>".into(),
+            t if t == v.fact => "<fact>".into(),
+            t if t == v.ask => "<ask>".into(),
+            t if t == v.ans => "<ans>".into(),
+            t if t == v.sep => "<sep>".into(),
+            t if t == v.img => "<img>".into(),
+            t if t >= v.val_base && t < v.val_base + v.n_vals => {
+                format!("v{}", t - v.val_base)
+            }
+            t if t >= v.text_base && t < v.text_base + v.n_text => {
+                format!("w{}", t - v.text_base)
+            }
+            t if t >= v.img_base && t < v.img_base + v.n_img => {
+                format!("p{}", t - v.img_base)
+            }
+            t => format!("?{t}"),
+        }
+    }
+
+    pub fn render_seq(&self, toks: &[i32]) -> String {
+        toks.iter()
+            .map(|&t| self.render(t))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    /// Map arbitrary ASCII text into the text-token range (deterministic,
+    /// for demo prompts only — the models were trained on Markov data).
+    pub fn encode_text(&self, text: &str) -> Vec<i32> {
+        let v = &self.vocab;
+        let mut out = vec![v.bos];
+        for w in text.split_whitespace() {
+            let mut h = 1469598103934665603u64;
+            for b in w.bytes() {
+                h = (h ^ b as u64).wrapping_mul(1099511628211);
+            }
+            out.push(v.text_base + (h % v.n_text as u64) as i32);
+        }
+        out
+    }
+
+    /// Is the token a value token (answer alphabet of the tasks)?
+    pub fn is_value(&self, tok: i32) -> bool {
+        tok >= self.vocab.val_base && tok < self.vocab.val_base + self.vocab.n_vals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vocab() -> VocabLayout {
+        VocabLayout {
+            size: 256,
+            pad: 0,
+            bos: 1,
+            eos: 2,
+            key: 3,
+            qry: 4,
+            fact: 5,
+            ask: 6,
+            ans: 7,
+            sep: 8,
+            img: 9,
+            val_base: 10,
+            n_vals: 32,
+            text_base: 42,
+            n_text: 128,
+            img_base: 170,
+            n_img: 64,
+        }
+    }
+
+    #[test]
+    fn renders_specials_and_ranges() {
+        let t = Tokenizer::new(vocab());
+        assert_eq!(t.render(1), "<bos>");
+        assert_eq!(t.render(10), "v0");
+        assert_eq!(t.render(42), "w0");
+        assert_eq!(t.render(170), "p0");
+        assert_eq!(t.render_seq(&[1, 10, 2]), "<bos> v0 <eos>");
+    }
+
+    #[test]
+    fn encode_text_in_range_and_deterministic() {
+        let t = Tokenizer::new(vocab());
+        let a = t.encode_text("hello moe world");
+        let b = t.encode_text("hello moe world");
+        assert_eq!(a, b);
+        assert_eq!(a[0], 1);
+        for &tok in &a[1..] {
+            assert!((42..170).contains(&tok));
+        }
+    }
+
+    #[test]
+    fn value_range_check() {
+        let t = Tokenizer::new(vocab());
+        assert!(t.is_value(10) && t.is_value(41));
+        assert!(!t.is_value(42) && !t.is_value(9));
+    }
+}

@@ -1,0 +1,90 @@
+//! Generation tasks: passkey retrieval (exact match, Fig. 6) and
+//! long-context QA (token F1, Fig. 5) via greedy decoding through the
+//! prefill+decode graphs.
+
+use anyhow::Result;
+
+use crate::engine::engine::Engine;
+use crate::runtime::ModelRuntime;
+use crate::util::stats::token_f1;
+
+use super::suite::EvalSuite;
+use super::RunConfig;
+
+/// Passkey retrieval: greedy-decode `answer_len` tokens after the QRY
+/// marker; exact match on all positions. Returns (accuracy, per-depth
+/// accuracy pairs (depth_pct, acc)).
+pub fn passkey(
+    model: &ModelRuntime,
+    suite: &EvalSuite,
+    rc: &RunConfig,
+) -> Result<(f64, Vec<(i32, f64)>)> {
+    let t = suite.gen_task("passkey")?;
+    let depth = suite.array("passkey_depth_pct")?;
+    let alen = t.answer_len();
+    let n = t.n();
+    let e = &model.entry;
+
+    let mut hits = vec![false; n];
+    let mut start = 0;
+    while start < n {
+        let group = (n - start).min(e.batch);
+        let prompts: Vec<&[i32]> = (0..group)
+            .map(|i| {
+                let q = start + i;
+                let plen = t.plen.scalar(q) as usize;
+                &t.prompts.row(q)[..plen]
+            })
+            .collect();
+        let gen = Engine::generate_batch(model, &prompts, alen, &rc.k_vec, &rc.gate_bias)?;
+        for i in 0..group {
+            let q = start + i;
+            hits[q] = gen[i] == t.answers.row(q);
+        }
+        start += group;
+    }
+
+    let acc = hits.iter().filter(|&&h| h).count() as f64 / n as f64;
+    // group by depth percentage
+    let mut depths: Vec<i32> = (0..n).map(|i| depth.scalar(i)).collect();
+    depths.sort_unstable();
+    depths.dedup();
+    let per_depth = depths
+        .into_iter()
+        .map(|d| {
+            let idx: Vec<usize> = (0..n).filter(|&i| depth.scalar(i) == d).collect();
+            let a = idx.iter().filter(|&&i| hits[i]).count() as f64 / idx.len() as f64;
+            (d, a)
+        })
+        .collect();
+    Ok((acc, per_depth))
+}
+
+/// Long-context QA: greedy-decode the answer and score token-level F1
+/// (the Qasper/LongBench metric).
+pub fn longqa_f1(model: &ModelRuntime, suite: &EvalSuite, rc: &RunConfig) -> Result<f64> {
+    let t = suite.gen_task("longqa")?;
+    let alen = t.answer_len();
+    let n = t.n();
+    let e = &model.entry;
+
+    let mut total = 0.0f64;
+    let mut start = 0;
+    while start < n {
+        let group = (n - start).min(e.batch);
+        let prompts: Vec<&[i32]> = (0..group)
+            .map(|i| {
+                let q = start + i;
+                let plen = t.plen.scalar(q) as usize;
+                &t.prompts.row(q)[..plen]
+            })
+            .collect();
+        let gen = Engine::generate_batch(model, &prompts, alen, &rc.k_vec, &rc.gate_bias)?;
+        for i in 0..group {
+            let q = start + i;
+            total += token_f1(&gen[i], t.answers.row(q));
+        }
+        start += group;
+    }
+    Ok(total / n as f64)
+}

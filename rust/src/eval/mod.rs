@@ -1,0 +1,101 @@
+//! Evaluation harness over the artifacts' synthetic task suites
+//! (DESIGN.md §3: each task is the capability-axis proxy for one of the
+//! paper's benchmarks).
+
+pub mod generate;
+pub mod multiple_choice;
+pub mod perplexity;
+pub mod scoring;
+pub mod suite;
+
+pub use suite::EvalSuite;
+
+use anyhow::Result;
+
+use crate::moe::transform::Transform;
+use crate::runtime::weights::CalibStats;
+use crate::runtime::ManifestModel;
+
+/// Runtime inputs realizing one [`Transform`] on the compiled graphs:
+/// the per-layer k vector and per-expert gate bias. (Intra-pruning's
+/// weight edit happens separately via `pruning::intra_prune_params`.)
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub k_vec: Vec<i32>,
+    pub gate_bias: Vec<f32>,
+    pub label: String,
+}
+
+impl RunConfig {
+    pub fn baseline(entry: &ManifestModel) -> Self {
+        RunConfig {
+            k_vec: vec![entry.top_k as i32; entry.n_layers],
+            gate_bias: vec![0.0; entry.n_layers * entry.n_experts],
+            label: "base".into(),
+        }
+    }
+
+    /// Build the runtime inputs for a transform. `calib` is required for
+    /// inter-pruning (its expert ranking is calibration-dependent).
+    pub fn for_transform(
+        entry: &ManifestModel,
+        t: &Transform,
+        calib: Option<&CalibStats>,
+    ) -> Result<Self> {
+        let mut rc = Self::baseline(entry);
+        rc.label = t.label();
+        match t {
+            Transform::Baseline | Transform::IntraPrune { .. } => {}
+            Transform::Lexi { allocation } => {
+                anyhow::ensure!(allocation.k.len() == entry.n_layers);
+                rc.k_vec = allocation.to_i32();
+            }
+            Transform::InterPrune { frac } => {
+                let calib =
+                    calib.ok_or_else(|| anyhow::anyhow!("inter-pruning needs calib stats"))?;
+                rc.gate_bias = crate::pruning::inter_prune_bias(calib, *frac);
+                // top-k may saturate if fewer experts survive than k_base
+                let kept = entry.n_experts
+                    - ((entry.n_experts as f64 * frac).round() as usize).min(entry.n_experts - 1);
+                let k = entry.top_k.min(kept) as i32;
+                rc.k_vec = vec![k; entry.n_layers];
+            }
+            Transform::LexiPlusInter { allocation, frac } => {
+                let calib = calib
+                    .ok_or_else(|| anyhow::anyhow!("combined transform needs calib stats"))?;
+                anyhow::ensure!(allocation.k.len() == entry.n_layers);
+                rc.gate_bias = crate::pruning::inter_prune_bias(calib, *frac);
+                let kept = entry.n_experts
+                    - ((entry.n_experts as f64 * frac).round() as usize).min(entry.n_experts - 1);
+                rc.k_vec = allocation
+                    .k
+                    .iter()
+                    .map(|&k| (k as usize).min(kept) as i32)
+                    .collect();
+            }
+            Transform::DynamicSkip { .. } => {
+                anyhow::bail!("dynamic skipping is token-adaptive; not expressible as RunConfig")
+            }
+        }
+        Ok(rc)
+    }
+}
+
+/// Scores of one (model, transform) evaluation — the accuracy axis of
+/// Figs. 4-8.
+#[derive(Clone, Debug, Default)]
+pub struct EvalScores {
+    /// Mean accuracy over the nine probe tasks (Fig. 4 y-axis).
+    pub lmeval_avg: f64,
+    /// Per-task accuracies.
+    pub lmeval: Vec<(String, f64)>,
+    /// Token-F1 on the long-context QA task (Fig. 5).
+    pub longqa_f1: f64,
+    /// Passkey exact-match accuracy (Fig. 6).
+    pub passkey_acc: f64,
+    /// Perplexity per corpus (Fig. 7).
+    pub perplexity: Vec<(String, f64)>,
+    /// Mean accuracy over the VLM tasks (Fig. 8).
+    pub vlm_avg: f64,
+    pub vlm: Vec<(String, f64)>,
+}

@@ -1,0 +1,134 @@
+//! Multiple-choice scoring (the lm-eval protocol): each candidate
+//! continuation is scored by total log-probability given the prompt;
+//! accuracy = fraction of questions where the gold candidate wins.
+//! Used for the nine probe tasks (Fig. 4) and the VLM tasks (Fig. 8).
+
+use anyhow::Result;
+
+use crate::runtime::ModelRuntime;
+
+use super::scoring;
+use super::suite::EvalSuite;
+use super::RunConfig;
+
+/// Accuracy on one multiple-choice task.
+pub fn accuracy(
+    model: &ModelRuntime,
+    suite: &EvalSuite,
+    task: &str,
+    rc: &RunConfig,
+) -> Result<f64> {
+    let t = suite.mc_task(task)?;
+    let e = &model.entry;
+    let n = t.n();
+    let mut correct = 0usize;
+
+    let mut start = 0;
+    while start < n {
+        let group = (n - start).min(e.batch);
+        // one prefill for the whole group of questions
+        let mut tokens = vec![0i32; e.batch * e.prefill_len];
+        for i in 0..group {
+            let q = start + i;
+            let plen = t.plen.scalar(q) as usize;
+            tokens[i * e.prefill_len..i * e.prefill_len + plen]
+                .copy_from_slice(&t.prompts.row(q)[..plen]);
+        }
+        let out = model.prefill(&tokens, &rc.k_vec, &rc.gate_bias)?;
+
+        // score candidates; first token from prefill logits, second token
+        // (when present) from one decode step per candidate index
+        let n_cands = t.n_cands();
+        let mut scores = vec![vec![f64::NEG_INFINITY; n_cands]; group];
+        for c in 0..n_cands {
+            // first-token log-probs
+            let mut needs_second = false;
+            for i in 0..group {
+                let q = start + i;
+                let cand = t.cand(q, c);
+                if cand[0] == 0 {
+                    continue; // candidate slot unused (binary tasks)
+                }
+                let plen = t.plen.scalar(q) as usize;
+                let row = scoring::prefill_row(&out.logits, i, plen - 1, e.prefill_len, e.vocab);
+                scores[i][c] = scoring::log_prob(row, cand[0]);
+                if cand.len() > 1 && cand[1] != 0 {
+                    needs_second = true;
+                }
+            }
+            if needs_second {
+                // decode step: feed candidate token c at each slot's plen
+                let mut toks = vec![0i32; e.batch];
+                let mut pos = vec![(e.max_seq - 1) as i32; e.batch];
+                for i in 0..group {
+                    let q = start + i;
+                    let cand = t.cand(q, c);
+                    if cand[0] != 0 {
+                        toks[i] = cand[0];
+                        pos[i] = t.plen.scalar(q);
+                    }
+                }
+                let d = model.decode(&out.kv, &toks, &pos, &rc.k_vec, &rc.gate_bias)?;
+                for i in 0..group {
+                    let q = start + i;
+                    let cand = t.cand(q, c);
+                    if cand[0] != 0 && cand.len() > 1 && cand[1] != 0 {
+                        let row = scoring::decode_row(&d.logits, i, e.vocab);
+                        scores[i][c] += scoring::log_prob(row, cand[1]);
+                    }
+                }
+            }
+        }
+
+        for i in 0..group {
+            let q = start + i;
+            let best = (0..n_cands)
+                .max_by(|&a, &b| scores[i][a].partial_cmp(&scores[i][b]).unwrap())
+                .unwrap();
+            if best as i32 == t.labels.scalar(q) {
+                correct += 1;
+            }
+        }
+        start += group;
+    }
+    Ok(correct as f64 / n as f64)
+}
+
+/// Mean accuracy over a list of MC tasks (prefixed names in the suite).
+pub fn task_suite(
+    model: &ModelRuntime,
+    suite: &EvalSuite,
+    tasks: &[(String, String)],
+    rc: &RunConfig,
+) -> Result<Vec<(String, f64)>> {
+    tasks
+        .iter()
+        .map(|(short, full)| Ok((short.clone(), accuracy(model, suite, full, rc)?)))
+        .collect()
+}
+
+/// The nine lm-eval probe tasks (Fig. 4).
+pub fn lmeval_tasks(suite: &EvalSuite) -> Vec<(String, String)> {
+    suite
+        .probe_tasks
+        .iter()
+        .map(|t| (t.clone(), format!("probe_{t}")))
+        .collect()
+}
+
+/// The VLM tasks (Fig. 8).
+pub fn vlm_tasks(suite: &EvalSuite) -> Vec<(String, String)> {
+    suite
+        .vlm_tasks
+        .iter()
+        .map(|t| (t.clone(), format!("vlm_{t}")))
+        .collect()
+}
+
+/// Convenience: mean of per-task accuracies.
+pub fn mean_accuracy(scores: &[(String, f64)]) -> f64 {
+    if scores.is_empty() {
+        return 0.0;
+    }
+    scores.iter().map(|(_, a)| a).sum::<f64>() / scores.len() as f64
+}

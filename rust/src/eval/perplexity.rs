@@ -1,0 +1,64 @@
+//! Perplexity on the held-out synthetic corpora (Fig. 7's y-axis; the
+//! C4 / PTB / WikiText substitution of DESIGN.md §3).
+
+use anyhow::Result;
+
+use crate::runtime::ModelRuntime;
+
+use super::scoring;
+use super::suite::EvalSuite;
+use super::RunConfig;
+
+/// Perplexity of the model on one corpus' held-out sequences.
+pub fn perplexity(
+    model: &ModelRuntime,
+    suite: &EvalSuite,
+    corpus: &str,
+    rc: &RunConfig,
+) -> Result<f64> {
+    let e = &model.entry;
+    let seqs = suite.ppl_seqs(corpus)?;
+    let (n, len) = (seqs.n_rows(), seqs.shape[1]);
+    anyhow::ensure!(len <= e.prefill_len, "ppl seq longer than prefill graph");
+
+    let mut total_nll = 0.0f64;
+    let mut total_tok = 0usize;
+    let mut start = 0;
+    while start < n {
+        let group = (n - start).min(e.batch);
+        let mut tokens = vec![0i32; e.batch * e.prefill_len];
+        for i in 0..group {
+            tokens[i * e.prefill_len..i * e.prefill_len + len]
+                .copy_from_slice(seqs.row(start + i));
+        }
+        let out = model.prefill(&tokens, &rc.k_vec, &rc.gate_bias)?;
+        for i in 0..group {
+            let row_seq = seqs.row(start + i);
+            for pos in 0..len - 1 {
+                let target = row_seq[pos + 1];
+                if target == 0 {
+                    break; // padding
+                }
+                let row =
+                    scoring::prefill_row(&out.logits, i, pos, e.prefill_len, e.vocab);
+                total_nll += -scoring::log_prob(row, target);
+                total_tok += 1;
+            }
+        }
+        start += group;
+    }
+    Ok((total_nll / total_tok.max(1) as f64).exp())
+}
+
+/// All corpora at once (Fig. 7 row for one model+transform).
+pub fn all_corpora(
+    model: &ModelRuntime,
+    suite: &EvalSuite,
+    rc: &RunConfig,
+) -> Result<Vec<(String, f64)>> {
+    suite
+        .ppl_corpora
+        .iter()
+        .map(|c| Ok((c.clone(), perplexity(model, suite, c, rc)?)))
+        .collect()
+}

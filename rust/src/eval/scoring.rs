@@ -1,0 +1,49 @@
+//! Logit-scoring helpers shared by the eval tasks.
+
+/// Log-softmax probability of `token` in a logits row.
+pub fn log_prob(logits: &[f32], token: i32) -> f64 {
+    crate::engine::sampler::log_prob(logits, token)
+}
+
+/// View one position's logits row out of a flattened prefill output
+/// [B, T, V].
+pub fn prefill_row<'a>(
+    logits: &'a [f32],
+    slot: usize,
+    pos: usize,
+    t: usize,
+    v: usize,
+) -> &'a [f32] {
+    &logits[(slot * t + pos) * v..(slot * t + pos + 1) * v]
+}
+
+/// View one slot's logits row out of a flattened decode output [B, V].
+pub fn decode_row<'a>(logits: &'a [f32], slot: usize, v: usize) -> &'a [f32] {
+    &logits[slot * v..(slot + 1) * v]
+}
+
+/// Mean negative log-likelihood of `targets[i]` at `rows[i]`; used by the
+/// perplexity task.
+pub fn mean_nll(pairs: &[(f64, usize)]) -> f64 {
+    if pairs.is_empty() {
+        return 0.0;
+    }
+    let (sum, n) = pairs
+        .iter()
+        .fold((0.0, 0usize), |(s, n), &(nll, c)| (s + nll, n + c));
+    sum / n.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_views() {
+        // B=2, T=2, V=3
+        let logits: Vec<f32> = (0..12).map(|x| x as f32).collect();
+        assert_eq!(prefill_row(&logits, 1, 0, 2, 3), &[6.0, 7.0, 8.0]);
+        let dec: Vec<f32> = (0..6).map(|x| x as f32).collect();
+        assert_eq!(decode_row(&dec, 1, 3), &[3.0, 4.0, 5.0]);
+    }
+}

@@ -1,0 +1,144 @@
+//! Loader for the synthetic eval suite (artifacts/corpora/eval_suite.npz
+//! + meta.json) written by python/compile/data.py.
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+use xla::FromRawBytes;
+
+use crate::runtime::Manifest;
+use crate::util::json::parse_file;
+
+/// An int32 array with shape (all eval data is token ids / labels).
+#[derive(Clone, Debug)]
+pub struct I32Array {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl I32Array {
+    pub fn row(&self, i: usize) -> &[i32] {
+        let w: usize = self.shape[1..].iter().product();
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.shape[0]
+    }
+
+    pub fn scalar(&self, i: usize) -> i32 {
+        self.data[i]
+    }
+}
+
+/// The full task suite.
+pub struct EvalSuite {
+    arrays: HashMap<String, I32Array>,
+    pub seq_len: usize,
+    pub ppl_corpora: Vec<String>,
+    pub probe_tasks: Vec<String>,
+    pub vlm_tasks: Vec<String>,
+}
+
+impl EvalSuite {
+    pub fn load(manifest: &Manifest) -> Result<Self> {
+        let npz = manifest.corpora_path("eval_suite.npz");
+        let raw = xla::Literal::read_npz(&npz, &())
+            .map_err(|e| anyhow::anyhow!("reading {npz:?}: {e:?}"))?;
+        let mut arrays = HashMap::new();
+        for (name, lit) in raw {
+            let shape: Vec<usize> = lit
+                .array_shape()
+                .map_err(|e| anyhow::anyhow!("{e:?}"))?
+                .dims()
+                .iter()
+                .map(|&d| d as usize)
+                .collect();
+            let data = lit
+                .to_vec::<i32>()
+                .map_err(|e| anyhow::anyhow!("array '{name}': {e:?}"))?;
+            arrays.insert(name, I32Array { shape, data });
+        }
+        let meta = parse_file(&manifest.corpora_path("meta.json"))?;
+        Ok(EvalSuite {
+            arrays,
+            seq_len: meta.get("seq_len")?.as_usize()?,
+            ppl_corpora: meta.get("ppl_corpora")?.str_vec()?,
+            probe_tasks: meta.get("probe_tasks")?.str_vec()?,
+            vlm_tasks: meta.get("vlm_tasks")?.str_vec()?,
+        })
+    }
+
+    pub fn array(&self, name: &str) -> Result<&I32Array> {
+        self.arrays
+            .get(name)
+            .with_context(|| format!("eval array '{name}' missing"))
+    }
+
+    /// Held-out LM sequences for one perplexity corpus.
+    pub fn ppl_seqs(&self, corpus: &str) -> Result<&I32Array> {
+        self.array(&format!("ppl_{corpus}"))
+    }
+
+    /// Multiple-choice task view (probe_* and vlm_* tasks).
+    pub fn mc_task(&self, task: &str) -> Result<McTask<'_>> {
+        Ok(McTask {
+            prompts: self.array(&format!("{task}_prompts"))?,
+            plen: self.array(&format!("{task}_plen"))?,
+            cands: self.array(&format!("{task}_cands"))?,
+            labels: self.array(&format!("{task}_labels"))?,
+        })
+    }
+
+    /// Generation task view (passkey / longqa).
+    pub fn gen_task(&self, task: &str) -> Result<GenTask<'_>> {
+        Ok(GenTask {
+            prompts: self.array(&format!("{task}_prompts"))?,
+            plen: self.array(&format!("{task}_plen"))?,
+            answers: self.array(&format!("{task}_answers"))?,
+        })
+    }
+}
+
+/// Multiple-choice task data: prompts [n, T], plen [n], cands [n, 4, clen],
+/// labels [n].
+pub struct McTask<'a> {
+    pub prompts: &'a I32Array,
+    pub plen: &'a I32Array,
+    pub cands: &'a I32Array,
+    pub labels: &'a I32Array,
+}
+
+impl McTask<'_> {
+    pub fn n(&self) -> usize {
+        self.prompts.n_rows()
+    }
+
+    /// Candidate tokens for question i, candidate c (0-padded tail).
+    pub fn cand(&self, i: usize, c: usize) -> &[i32] {
+        let (nc, cl) = (self.cands.shape[1], self.cands.shape[2]);
+        let base = (i * nc + c) * cl;
+        &self.cands.data[base..base + cl]
+    }
+
+    pub fn n_cands(&self) -> usize {
+        self.cands.shape[1]
+    }
+}
+
+/// Generation task data: prompts [n, T], plen [n], answers [n, alen].
+pub struct GenTask<'a> {
+    pub prompts: &'a I32Array,
+    pub plen: &'a I32Array,
+    pub answers: &'a I32Array,
+}
+
+impl GenTask<'_> {
+    pub fn n(&self) -> usize {
+        self.prompts.n_rows()
+    }
+
+    pub fn answer_len(&self) -> usize {
+        self.answers.shape[1]
+    }
+}

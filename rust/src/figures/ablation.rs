@@ -1,0 +1,221 @@
+//! Ablation studies beyond the paper's main figures:
+//!
+//! 1. **Allocation quality** — LExI's GA vs the exact DP optimum vs
+//!    uniform vs random feasible allocations at the same budget
+//!    (validates that Stage 2's search quality is not the bottleneck).
+//! 2. **Limitations table** — expert-weight memory per transform: LExI
+//!    keeps the full footprint (the paper's stated limitation), pruning
+//!    shrinks it, and the combined transform gets both levers.
+//! 3. **Dynamic-skip comparison** — NAEE's token-adaptive skipping vs
+//!    LExI static allocations on the top-2 models.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::config::experiment::ExperimentConfig;
+use crate::config::model::{registry, spec};
+use crate::lexi::evolution::{evolve, exact_dp, EvolutionParams};
+use crate::lexi::SensitivityTable;
+use crate::moe::allocation::{Allocation, Bounds};
+use crate::moe::transform::Transform;
+use crate::perfmodel::PerfModel;
+use crate::util::Pcg32;
+
+use super::series::{f, FigureOutput};
+
+/// Allocation-quality ablation over a sensitivity table (measured or
+/// synthetic). Emits fitness of GA / DP / uniform / random per budget.
+pub fn allocation_quality(
+    out_dir: &Path,
+    table: &SensitivityTable,
+    cfg: &ExperimentConfig,
+) -> Result<FigureOutput> {
+    let mut fig = FigureOutput::new(
+        &format!("ablation_allocation_quality_{}", table.model),
+        &["budget", "method", "fitness", "evals"],
+    );
+    let bounds = Bounds::paper(table.k_base);
+    let l = table.n_layers() as u32;
+    let full = l * table.k_base;
+    let mut rng = Pcg32::seeded(cfg.seed ^ 0xab1a);
+    for fracs in [0.5, 0.65, 0.8] {
+        let budget = ((full as f64 * fracs) as u32).max(l);
+        let params = EvolutionParams {
+            population: cfg.ga_population,
+            generations: cfg.ga_generations,
+            mutation_rate: cfg.ga_mutation,
+            tournament: 4,
+            seed: cfg.seed,
+        };
+        if let Some(ga) = evolve(table, budget, bounds, &params) {
+            fig.row(vec![
+                budget.to_string(),
+                "lexi-ga".into(),
+                f(ga.best_fitness),
+                ga.evaluations.to_string(),
+            ]);
+        }
+        if let Some(dp) = exact_dp(table, budget, bounds) {
+            fig.row(vec![
+                budget.to_string(),
+                "exact-dp".into(),
+                f(table.fitness(&dp.k)),
+                "-".into(),
+            ]);
+        }
+        // uniform at the nearest feasible per-layer k
+        let uni_k = (budget as f64 / l as f64).floor() as u32;
+        if uni_k >= 1 {
+            let mut uni = Allocation::uniform(l as usize, uni_k);
+            uni.project(bounds, budget, &mut rng);
+            fig.row(vec![
+                budget.to_string(),
+                "uniform".into(),
+                f(table.fitness(&uni.k)),
+                "1".into(),
+            ]);
+        }
+        // mean of random feasible allocations
+        let mut sum = 0.0;
+        let n_rand = 32;
+        for _ in 0..n_rand {
+            let r = Allocation::random_feasible(l as usize, bounds, budget, &mut rng).unwrap();
+            sum += table.fitness(&r.k);
+        }
+        fig.row(vec![
+            budget.to_string(),
+            "random-mean".into(),
+            f(sum / n_rand as f64),
+            n_rand.to_string(),
+        ]);
+    }
+    fig.emit(out_dir)?;
+    Ok(fig)
+}
+
+/// Limitations table: memory footprint + throughput per transform
+/// (paper §6: LExI optimizes compute, not memory; combination fixes it).
+pub fn limitations_memory(out_dir: &Path, cfg: &ExperimentConfig) -> Result<FigureOutput> {
+    let mut fig = FigureOutput::new(
+        "ablation_memory_limitations",
+        &["model", "transform", "expert_mem_gib", "tok_s", "reduces_memory"],
+    );
+    for m in registry() {
+        let pm = PerfModel::new(m.clone(), cfg.seed);
+        let half_k = Allocation::uniform(m.n_layers, ((m.top_k + 1) / 2) as u32);
+        let transforms = vec![
+            Transform::Baseline,
+            Transform::InterPrune { frac: 0.5 },
+            Transform::IntraPrune { frac: 0.5 },
+            Transform::Lexi {
+                allocation: half_k.clone(),
+            },
+            Transform::LexiPlusInter {
+                allocation: half_k,
+                frac: 0.5,
+            },
+        ];
+        for t in transforms {
+            let b = pm.throughput(&t, cfg.paper_batch, cfg.paper_in_len, cfg.paper_out_len);
+            fig.row(vec![
+                m.name.to_string(),
+                t.label(),
+                f(t.expert_memory_gib(&m)),
+                f(b.throughput_tok_s),
+                t.reduces_memory().to_string(),
+            ]);
+        }
+    }
+    fig.emit(out_dir)?;
+    Ok(fig)
+}
+
+/// NAEE dynamic skipping vs LExI static allocation on the top-2 models
+/// (the paper restricts skipping to k_base = 2).
+pub fn dynamic_skip_comparison(out_dir: &Path, cfg: &ExperimentConfig) -> Result<FigureOutput> {
+    let mut fig = FigureOutput::new(
+        "ablation_dynamic_skip",
+        &["model", "transform", "expected_k", "tok_s"],
+    );
+    for name in ["mixtral-8x7b", "minicpm-moe-8x2b"] {
+        let m = spec(name)?;
+        let pm = PerfModel::new(m.clone(), cfg.seed);
+        for thr in [0.2, 0.4, 0.6] {
+            let t = Transform::DynamicSkip { threshold: thr };
+            let b = pm.throughput(&t, cfg.paper_batch, cfg.paper_in_len, cfg.paper_out_len);
+            fig.row(vec![
+                name.to_string(),
+                t.label(),
+                f(t.expected_k(&m, thr * 0.8)),
+                f(b.throughput_tok_s),
+            ]);
+        }
+        for k in 1..=2u32 {
+            let t = Transform::Lexi {
+                allocation: Allocation::uniform(m.n_layers, k),
+            };
+            let b = pm.throughput(&t, cfg.paper_batch, cfg.paper_in_len, cfg.paper_out_len);
+            fig.row(vec![
+                name.to_string(),
+                t.label(),
+                k.to_string(),
+                f(b.throughput_tok_s),
+            ]);
+        }
+    }
+    fig.emit(out_dir)?;
+    Ok(fig)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocation_quality_orders_methods() {
+        let table = SensitivityTable::synthetic("test", 16, 8, |x| 1.0 + 2.0 * x, 3);
+        let out = std::env::temp_dir().join("lexi_ablation_test");
+        let cfg = ExperimentConfig::fast();
+        let fig = allocation_quality(&out, &table, &cfg).unwrap();
+        // for each budget: dp <= ga <= random-mean
+        for budget in ["64", "83", "102"] {
+            let get = |m: &str| {
+                fig.rows
+                    .iter()
+                    .find(|r| r[0] == budget && r[1] == m)
+                    .map(|r| r[2].parse::<f64>().unwrap())
+            };
+            if let (Some(dp), Some(ga), Some(rnd)) =
+                (get("exact-dp"), get("lexi-ga"), get("random-mean"))
+            {
+                assert!(dp <= ga + 1e-9, "budget {budget}");
+                assert!(ga <= rnd + 1e-9, "budget {budget}: ga {ga} rnd {rnd}");
+            }
+        }
+    }
+
+    #[test]
+    fn limitations_lexi_keeps_memory() {
+        let out = std::env::temp_dir().join("lexi_ablation_mem");
+        let cfg = ExperimentConfig::fast();
+        let fig = limitations_memory(&out, &cfg).unwrap();
+        let mixtral_base = fig
+            .rows
+            .iter()
+            .find(|r| r[0] == "mixtral-8x7b" && r[1] == "base")
+            .unwrap();
+        let mixtral_lexi = fig
+            .rows
+            .iter()
+            .find(|r| r[0] == "mixtral-8x7b" && r[1].starts_with("lexi-B") && !r[1].contains('+'))
+            .unwrap();
+        assert_eq!(mixtral_base[2], mixtral_lexi[2], "LExI must not change memory");
+        let combined = fig
+            .rows
+            .iter()
+            .find(|r| r[0] == "mixtral-8x7b" && r[1].contains('+'))
+            .unwrap();
+        assert!(combined[2].parse::<f64>().unwrap() < mixtral_base[2].parse::<f64>().unwrap());
+    }
+}

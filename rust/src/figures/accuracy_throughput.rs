@@ -1,0 +1,294 @@
+//! Figures 4-8: measured accuracy (tiny analogues through the PJRT stack)
+//! vs modeled H100 throughput, for baseline / inter / intra / LExI.
+//!
+//! Shared harness: each (model, transform) pair is evaluated once and its
+//! scores reused across the per-figure CSVs (Fig. 4 probes, Fig. 5 longqa
+//! F1, Fig. 6 passkey, Fig. 7 perplexity, Fig. 8 VLM).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::config::experiment::ExperimentConfig;
+use crate::config::model::{spec, LLM_NAMES};
+use crate::eval::{generate, multiple_choice as mc, perplexity, EvalScores, EvalSuite, RunConfig};
+use crate::lexi::pipeline::{stage1, stage2, table_path};
+use crate::moe::transform::Transform;
+use crate::perfmodel::PerfModel;
+use crate::pruning;
+use crate::runtime::weights::CalibStats;
+use crate::runtime::{Manifest, ModelRuntime, Runtime};
+
+use super::series::{f, FigureOutput};
+
+/// One evaluated configuration.
+pub struct ConfigResult {
+    pub model: String,
+    pub transform: Transform,
+    pub label: String,
+    pub throughput_tok_s: f64,
+    pub scores: EvalScores,
+}
+
+/// Evaluate every transform for one model. `sel` selects the score
+/// groups to compute (saves wall-clock for single-figure runs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ScoreSel {
+    pub lmeval: bool,
+    pub longqa: bool,
+    pub passkey: bool,
+    pub ppl: bool,
+    pub vlm: bool,
+}
+
+impl ScoreSel {
+    pub fn all() -> Self {
+        ScoreSel {
+            lmeval: true,
+            longqa: true,
+            passkey: true,
+            ppl: true,
+            vlm: false,
+        }
+    }
+}
+
+pub fn evaluate_model(
+    rt: &Runtime,
+    manifest: &Manifest,
+    suite: &EvalSuite,
+    model_name: &str,
+    cfg: &ExperimentConfig,
+    sel: ScoreSel,
+) -> Result<Vec<ConfigResult>> {
+    let mspec = spec(model_name)?;
+    let entry = manifest.model(model_name)?.clone();
+    let calib = CalibStats::load_npz(
+        manifest.model_dir(model_name).join(&entry.files.calib),
+        entry.n_layers,
+        entry.n_experts,
+    )?;
+    let model = ModelRuntime::load(rt, manifest, model_name)?;
+    let pm = PerfModel::new(mspec.clone(), cfg.seed).with_calibration(&calib.sel_freq);
+
+    // Stage 1 once per model; Stage 2 per budget.
+    let cache = table_path(&manifest.root, model_name);
+    let table = stage1(&model, cfg, Some(&cache), false)?;
+
+    let mut results = Vec::new();
+
+    // baseline + pruning transforms
+    let mut transforms: Vec<Transform> = vec![Transform::Baseline];
+    for &frac in &cfg.prune_fracs {
+        transforms.push(Transform::InterPrune { frac });
+        transforms.push(Transform::IntraPrune { frac });
+    }
+    for b in mspec.budget_sweep() {
+        let alloc = stage2(&table, b as u32, cfg)?.best;
+        transforms.push(Transform::Lexi { allocation: alloc });
+    }
+
+    for t in transforms {
+        eprintln!("  [{}] eval {}", model_name, t.label());
+        // intra-pruning edits weights -> dedicated runtime
+        let scores = match &t {
+            Transform::IntraPrune { frac } => {
+                let mut params =
+                    crate::runtime::weights::HostParams::load_npz(
+                        manifest.model_dir(model_name).join(&entry.files.params),
+                        &entry,
+                    )?;
+                pruning::intra_prune_params(&mut params, *frac)?;
+                let pruned_model = model.reload_with_params(params)?;
+                let rc = RunConfig::for_transform(&entry, &t, Some(&calib))?;
+                eval_scores(&pruned_model, suite, &rc, sel)?
+            }
+            _ => {
+                let rc = RunConfig::for_transform(&entry, &t, Some(&calib))?;
+                eval_scores(&model, suite, &rc, sel)?
+            }
+        };
+        let tput = pm
+            .throughput(&t, cfg.paper_batch, cfg.paper_in_len, cfg.paper_out_len)
+            .throughput_tok_s;
+        results.push(ConfigResult {
+            model: model_name.to_string(),
+            label: t.label(),
+            transform: t,
+            throughput_tok_s: tput,
+            scores,
+        });
+    }
+    Ok(results)
+}
+
+fn eval_scores(
+    model: &ModelRuntime,
+    suite: &EvalSuite,
+    rc: &RunConfig,
+    sel: ScoreSel,
+) -> Result<EvalScores> {
+    let mut s = EvalScores::default();
+    if sel.lmeval {
+        s.lmeval = mc::task_suite(model, suite, &mc::lmeval_tasks(suite), rc)?;
+        s.lmeval_avg = mc::mean_accuracy(&s.lmeval);
+    }
+    if sel.longqa {
+        s.longqa_f1 = generate::longqa_f1(model, suite, rc)?;
+    }
+    if sel.passkey {
+        s.passkey_acc = generate::passkey(model, suite, rc)?.0;
+    }
+    if sel.ppl {
+        s.perplexity = perplexity::all_corpora(model, suite, rc)?;
+    }
+    if sel.vlm {
+        s.vlm = mc::task_suite(model, suite, &mc::vlm_tasks(suite), rc)?;
+        s.vlm_avg = mc::mean_accuracy(&s.vlm);
+    }
+    Ok(s)
+}
+
+/// Emit Figs. 4-7 from LLM results and Fig. 8 from the VLM result.
+pub fn emit_figures(
+    out_dir: &Path,
+    llm_results: &[ConfigResult],
+    vlm_results: &[ConfigResult],
+) -> Result<Vec<FigureOutput>> {
+    let mut figs = Vec::new();
+
+    // Fig. 4: avg accuracy vs throughput (9 probe tasks).
+    let mut fig4 = FigureOutput::new(
+        "fig4_lmeval_accuracy_vs_throughput",
+        &["model", "transform", "tok_s", "avg_accuracy"],
+    );
+    for r in llm_results {
+        fig4.row(vec![
+            r.model.clone(),
+            r.label.clone(),
+            f(r.throughput_tok_s),
+            f(r.scores.lmeval_avg),
+        ]);
+    }
+    fig4.emit(out_dir)?;
+    figs.push(fig4);
+
+    // Fig. 5: Qasper-analogue F1 vs throughput (3 models in the paper).
+    let fig5_models = ["qwen1.5-moe-a2.7b", "deepseek-v2-lite", "olmoe-1b-7b"];
+    let mut fig5 = FigureOutput::new(
+        "fig5_longqa_f1_vs_throughput",
+        &["model", "transform", "tok_s", "f1"],
+    );
+    for r in llm_results.iter().filter(|r| fig5_models.contains(&r.model.as_str())) {
+        fig5.row(vec![
+            r.model.clone(),
+            r.label.clone(),
+            f(r.throughput_tok_s),
+            f(r.scores.longqa_f1),
+        ]);
+    }
+    fig5.emit(out_dir)?;
+    figs.push(fig5);
+
+    // Fig. 6: passkey retrieval vs throughput (5 models).
+    let mut fig6 = FigureOutput::new(
+        "fig6_passkey_vs_throughput",
+        &["model", "transform", "tok_s", "passkey_acc"],
+    );
+    for r in llm_results {
+        fig6.row(vec![
+            r.model.clone(),
+            r.label.clone(),
+            f(r.throughput_tok_s),
+            f(r.scores.passkey_acc),
+        ]);
+    }
+    fig6.emit(out_dir)?;
+    figs.push(fig6);
+
+    // Fig. 7: perplexity vs throughput per corpus.
+    let mut fig7 = FigureOutput::new(
+        "fig7_perplexity_vs_throughput",
+        &["model", "transform", "corpus", "tok_s", "ppl"],
+    );
+    for r in llm_results {
+        for (corpus, ppl) in &r.scores.perplexity {
+            fig7.row(vec![
+                r.model.clone(),
+                r.label.clone(),
+                corpus.clone(),
+                f(r.throughput_tok_s),
+                f(*ppl),
+            ]);
+        }
+    }
+    fig7.emit(out_dir)?;
+    figs.push(fig7);
+
+    // Fig. 8: VLM ablation.
+    let mut fig8 = FigureOutput::new(
+        "fig8_vlm_accuracy_vs_throughput",
+        &["model", "transform", "task", "tok_s", "accuracy"],
+    );
+    for r in vlm_results {
+        for (task, acc) in &r.scores.vlm {
+            fig8.row(vec![
+                r.model.clone(),
+                r.label.clone(),
+                task.clone(),
+                f(r.throughput_tok_s),
+                f(*acc),
+            ]);
+        }
+        fig8.row(vec![
+            r.model.clone(),
+            r.label.clone(),
+            "avg".into(),
+            f(r.throughput_tok_s),
+            f(r.scores.vlm_avg),
+        ]);
+    }
+    fig8.emit(out_dir)?;
+    figs.push(fig8);
+
+    Ok(figs)
+}
+
+/// Full Figs. 4-8 pipeline over all models.
+pub fn run_all(
+    out_dir: &Path,
+    rt: &Runtime,
+    manifest: &Manifest,
+    cfg: &ExperimentConfig,
+    models: Option<&[&str]>,
+) -> Result<()> {
+    let suite = EvalSuite::load(manifest)?;
+    let mut llm_results = Vec::new();
+    let llms: Vec<&str> = models
+        .map(|m| m.to_vec())
+        .unwrap_or_else(|| LLM_NAMES.to_vec());
+    for name in &llms {
+        eprintln!("[figs4-7] {name}");
+        llm_results.extend(evaluate_model(rt, manifest, &suite, name, cfg, ScoreSel::all())?);
+    }
+    let vlm_sel = ScoreSel {
+        lmeval: false,
+        longqa: false,
+        passkey: false,
+        ppl: false,
+        vlm: true,
+    };
+    let vlm_results = if models.is_none() || models.unwrap().contains(&"deepseek-vl2-tiny") {
+        eprintln!("[fig8] deepseek-vl2-tiny");
+        evaluate_model(rt, manifest, &suite, "deepseek-vl2-tiny", cfg, vlm_sel)?
+    } else {
+        Vec::new()
+    };
+    emit_figures(out_dir, &llm_results, &vlm_results)?;
+    let verdicts = super::pareto::summarize(out_dir, &llm_results, &vlm_results)?;
+    eprintln!(
+        "pareto: LExI dominates {:.0}% of pruning points across models/metrics",
+        super::pareto::domination_rate(&verdicts) * 100.0
+    );
+    Ok(())
+}

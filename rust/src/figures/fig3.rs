@@ -1,0 +1,66 @@
+//! Figures 3 & 9: per-layer top-k sensitivity heatmaps (Alg. 1 output on
+//! the trained analogues, normalized per layer as in the paper's plots).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::config::experiment::ExperimentConfig;
+use crate::lexi::pipeline::{stage1, table_path};
+use crate::lexi::SensitivityTable;
+use crate::runtime::{Manifest, ModelRuntime, Runtime};
+
+use super::series::{f, FigureOutput};
+
+/// Fig. 3's four models; Fig. 9 (appendix) adds the remaining two.
+pub const FIG3_MODELS: [&str; 4] = [
+    "mixtral-8x7b",
+    "qwen1.5-moe-a2.7b",
+    "olmoe-1b-7b",
+    "deepseek-vl2-tiny",
+];
+pub const FIG9_MODELS: [&str; 2] = ["minicpm-moe-8x2b", "deepseek-v2-lite"];
+
+pub fn heatmap_rows(table: &SensitivityTable) -> Vec<(usize, u32, f64, f64)> {
+    let norm = table.normalized();
+    let mut rows = Vec::new();
+    for (layer, (raw_row, norm_row)) in table.loss.iter().zip(&norm).enumerate() {
+        for k in 1..=table.k_base {
+            rows.push((
+                layer,
+                k,
+                raw_row[(k - 1) as usize],
+                norm_row[(k - 1) as usize],
+            ));
+        }
+    }
+    rows
+}
+
+pub fn run(
+    out_dir: &Path,
+    rt: &Runtime,
+    manifest: &Manifest,
+    models: &[&str],
+    cfg: &ExperimentConfig,
+    name: &str,
+) -> Result<FigureOutput> {
+    let mut fig = FigureOutput::new(name, &["model", "layer", "k", "delta", "delta_norm"]);
+    for model_name in models {
+        eprintln!("[{name}] profiling {model_name}...");
+        let model = ModelRuntime::load(rt, manifest, model_name)?;
+        let cache = table_path(&manifest.root, model_name);
+        let table = stage1(&model, cfg, Some(&cache), false)?;
+        for (layer, k, raw, norm) in heatmap_rows(&table) {
+            fig.row(vec![
+                model_name.to_string(),
+                layer.to_string(),
+                k.to_string(),
+                f(raw),
+                f(norm),
+            ]);
+        }
+    }
+    fig.emit(out_dir)?;
+    Ok(fig)
+}

@@ -1,0 +1,12 @@
+//! Regeneration harness for every table and figure in the paper
+//! (experiment index: DESIGN.md §6).
+
+pub mod ablation;
+pub mod accuracy_throughput;
+pub mod fig2;
+pub mod fig3;
+pub mod pareto;
+pub mod series;
+pub mod table1;
+
+pub use series::FigureOutput;

@@ -1,0 +1,205 @@
+//! Pareto analysis of the accuracy-vs-throughput results — the paper's
+//! headline reading of Figs. 4-8 ("LExI Pareto-dominates pruning").
+//!
+//! Consumes [`super::accuracy_throughput::ConfigResult`]s and reports,
+//! per model and metric: which configurations are on the Pareto front,
+//! and whether every pruning point is dominated by some LExI point
+//! (higher-or-equal accuracy AND higher-or-equal throughput, one strict).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::accuracy_throughput::ConfigResult;
+use super::series::FigureOutput;
+
+/// One (label, throughput, accuracy-like score) point; higher is better
+/// on both axes (perplexity callers should negate).
+#[derive(Clone, Debug)]
+pub struct Point {
+    pub label: String,
+    pub tput: f64,
+    pub score: f64,
+}
+
+pub fn dominates(a: &Point, b: &Point) -> bool {
+    (a.tput >= b.tput && a.score >= b.score) && (a.tput > b.tput || a.score > b.score)
+}
+
+/// Indices of the Pareto-optimal points.
+pub fn pareto_front(points: &[Point]) -> Vec<usize> {
+    (0..points.len())
+        .filter(|&i| !points.iter().any(|p| dominates(p, &points[i])))
+        .collect()
+}
+
+/// Verdict for one (model, metric): is every pruning point dominated by
+/// some LExI point (or the baseline)?
+#[derive(Clone, Debug)]
+pub struct Verdict {
+    pub model: String,
+    pub metric: String,
+    pub lexi_on_front: usize,
+    pub pruning_on_front: usize,
+    pub pruning_points_dominated_by_lexi: usize,
+    pub pruning_points_total: usize,
+}
+
+pub fn analyze(model: &str, metric: &str, points: &[Point]) -> Verdict {
+    let front = pareto_front(points);
+    let is_lexi = |l: &str| l.starts_with("lexi");
+    let is_prune = |l: &str| l.starts_with("inter") || l.starts_with("intra");
+    let lexi_pts: Vec<&Point> = points.iter().filter(|p| is_lexi(&p.label)).collect();
+    let prune_idx: Vec<usize> = (0..points.len())
+        .filter(|&i| is_prune(&points[i].label))
+        .collect();
+    let dominated = prune_idx
+        .iter()
+        .filter(|&&i| lexi_pts.iter().any(|l| dominates(l, &points[i])))
+        .count();
+    Verdict {
+        model: model.to_string(),
+        metric: metric.to_string(),
+        lexi_on_front: front.iter().filter(|&&i| is_lexi(&points[i].label)).count(),
+        pruning_on_front: front
+            .iter()
+            .filter(|&&i| is_prune(&points[i].label))
+            .count(),
+        pruning_points_dominated_by_lexi: dominated,
+        pruning_points_total: prune_idx.len(),
+    }
+}
+
+/// Extract metric points from evaluated configs.
+pub fn points_for_metric(results: &[ConfigResult], model: &str, metric: &str) -> Vec<Point> {
+    results
+        .iter()
+        .filter(|r| r.model == model)
+        .map(|r| Point {
+            label: r.label.clone(),
+            tput: r.throughput_tok_s,
+            score: match metric {
+                "lmeval" => r.scores.lmeval_avg,
+                "longqa" => r.scores.longqa_f1,
+                "passkey" => r.scores.passkey_acc,
+                "vlm" => r.scores.vlm_avg,
+                // mean negative ppl across corpora (higher = better)
+                "ppl" => {
+                    -r.scores.perplexity.iter().map(|(_, p)| p).sum::<f64>()
+                        / r.scores.perplexity.len().max(1) as f64
+                }
+                _ => f64::NAN,
+            },
+        })
+        .collect()
+}
+
+/// Emit the Pareto summary for a full Figs. 4-8 run.
+pub fn summarize(
+    out_dir: &Path,
+    llm_results: &[ConfigResult],
+    vlm_results: &[ConfigResult],
+) -> Result<Vec<Verdict>> {
+    let mut fig = FigureOutput::new(
+        "pareto_summary",
+        &[
+            "model",
+            "metric",
+            "lexi_on_front",
+            "pruning_on_front",
+            "pruning_dominated_by_lexi",
+            "pruning_total",
+        ],
+    );
+    let mut verdicts = Vec::new();
+    let mut models: Vec<String> = llm_results.iter().map(|r| r.model.clone()).collect();
+    models.dedup();
+    for model in &models {
+        for metric in ["lmeval", "longqa", "passkey", "ppl"] {
+            let pts = points_for_metric(llm_results, model, metric);
+            if pts.iter().all(|p| p.score == 0.0) {
+                continue; // metric not collected in this run
+            }
+            let v = analyze(model, metric, &pts);
+            fig.row(vec![
+                v.model.clone(),
+                v.metric.clone(),
+                v.lexi_on_front.to_string(),
+                v.pruning_on_front.to_string(),
+                v.pruning_points_dominated_by_lexi.to_string(),
+                v.pruning_points_total.to_string(),
+            ]);
+            verdicts.push(v);
+        }
+    }
+    let mut vlm_models: Vec<String> = vlm_results.iter().map(|r| r.model.clone()).collect();
+    vlm_models.dedup();
+    for model in &vlm_models {
+        let pts = points_for_metric(vlm_results, model, "vlm");
+        if !pts.is_empty() {
+            let v = analyze(model, "vlm", &pts);
+            fig.row(vec![
+                v.model.clone(),
+                v.metric.clone(),
+                v.lexi_on_front.to_string(),
+                v.pruning_on_front.to_string(),
+                v.pruning_points_dominated_by_lexi.to_string(),
+                v.pruning_points_total.to_string(),
+            ]);
+            verdicts.push(v);
+        }
+    }
+    fig.emit(out_dir)?;
+    Ok(verdicts)
+}
+
+/// Convenience used by EXPERIMENTS.md: fraction of pruning points that
+/// some LExI point dominates, across all verdicts.
+pub fn domination_rate(verdicts: &[Verdict]) -> f64 {
+    let (dom, tot) = verdicts.iter().fold((0usize, 0usize), |(d, t), v| {
+        (
+            d + v.pruning_points_dominated_by_lexi,
+            t + v.pruning_points_total,
+        )
+    });
+    dom as f64 / tot.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(label: &str, tput: f64, score: f64) -> Point {
+        Point {
+            label: label.into(),
+            tput,
+            score,
+        }
+    }
+
+    #[test]
+    fn front_excludes_dominated() {
+        let pts = vec![
+            pt("base", 100.0, 0.9),
+            pt("inter50.0", 130.0, 0.5), // fast but inaccurate: on the front
+            pt("lexi-B8", 120.0, 0.85),
+            pt("intra25.0", 105.0, 0.6), // dominated by lexi
+        ];
+        let front = pareto_front(&pts);
+        assert!(front.contains(&0) && front.contains(&1) && front.contains(&2));
+        assert!(!front.contains(&3));
+        let v = analyze("m", "x", &pts);
+        assert_eq!(v.pruning_points_total, 2);
+        assert_eq!(v.pruning_points_dominated_by_lexi, 1); // intra only
+        assert_eq!(v.lexi_on_front, 1);
+        assert_eq!(v.pruning_on_front, 1);
+    }
+
+    #[test]
+    fn dominates_requires_strictness() {
+        let a = pt("a", 1.0, 1.0);
+        assert!(!dominates(&a, &a));
+        assert!(dominates(&pt("b", 1.0, 1.1), &a));
+        assert!(!dominates(&pt("c", 0.9, 1.1), &a));
+    }
+}

@@ -1,0 +1,103 @@
+//! Figure output plumbing: every experiment emits a CSV into `results/`
+//! plus a human-readable table on stdout (same rows the paper plots).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::util::csv::CsvWriter;
+
+pub struct FigureOutput {
+    pub name: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl FigureOutput {
+    pub fn new(name: &str, header: &[&str]) -> Self {
+        FigureOutput {
+            name: name.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, fields: Vec<String>) {
+        debug_assert_eq!(fields.len(), self.header.len());
+        self.rows.push(fields);
+    }
+
+    pub fn csv_path(&self, out_dir: &Path) -> PathBuf {
+        out_dir.join(format!("{}.csv", self.name))
+    }
+
+    /// Write the CSV and print the table.
+    pub fn emit(&self, out_dir: &Path) -> Result<()> {
+        let header_refs: Vec<&str> = self.header.iter().map(|s| s.as_str()).collect();
+        let mut w = CsvWriter::create(self.csv_path(out_dir), &header_refs)?;
+        for r in &self.rows {
+            w.row(r)?;
+        }
+        self.print();
+        println!("  -> {}", self.csv_path(out_dir).display());
+        Ok(())
+    }
+
+    pub fn print(&self) {
+        println!("\n### {} ###", self.name);
+        let widths: Vec<usize> = self
+            .header
+            .iter()
+            .enumerate()
+            .map(|(i, h)| {
+                self.rows
+                    .iter()
+                    .map(|r| r[i].len())
+                    .chain([h.len()])
+                    .max()
+                    .unwrap_or(0)
+            })
+            .collect();
+        let line = |fields: &[String]| {
+            fields
+                .iter()
+                .enumerate()
+                .map(|(i, f)| format!("{:>w$}", f, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("{}", line(&self.header));
+        for r in &self.rows {
+            println!("{}", line(r));
+        }
+    }
+}
+
+/// Shared float formatting for figure rows.
+pub fn f(v: f64) -> String {
+    if v == 0.0 {
+        "0".into()
+    } else if v.abs() >= 100.0 {
+        format!("{v:.1}")
+    } else if v.abs() >= 1.0 {
+        format!("{v:.3}")
+    } else {
+        format!("{v:.5}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn emits_csv() {
+        let mut fig = FigureOutput::new("test_fig", &["a", "b"]);
+        fig.row(vec!["x".into(), f(1.23456)]);
+        let dir = std::env::temp_dir().join("lexi_fig_test");
+        fig.emit(&dir).unwrap();
+        let text = std::fs::read_to_string(dir.join("test_fig.csv")).unwrap();
+        assert!(text.starts_with("a,b\n"));
+        assert!(text.contains("1.235"));
+    }
+}

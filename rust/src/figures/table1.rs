@@ -1,0 +1,54 @@
+//! Table 1: the MoE model registry (structure + paper-scale dims).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::config::model::registry;
+
+use super::series::FigureOutput;
+
+pub fn run(out_dir: &Path) -> Result<FigureOutput> {
+    let mut fig = FigureOutput::new(
+        "table1_models",
+        &[
+            "model", "params_b", "layers", "experts", "topk", "ffn_dim", "hidden", "gpus",
+        ],
+    );
+    for m in registry() {
+        fig.row(vec![
+            m.paper_name.to_string(),
+            format!("{}", m.paper.params_b),
+            m.n_layers.to_string(),
+            m.n_experts.to_string(),
+            m.top_k.to_string(),
+            m.paper.ffn.to_string(),
+            m.paper.hidden.to_string(),
+            m.paper.n_gpus.to_string(),
+        ]);
+    }
+    fig.emit(out_dir)?;
+    Ok(fig)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_has_six_models() {
+        let dir = std::env::temp_dir().join("lexi_t1_test");
+        let fig = run(&dir).unwrap();
+        assert_eq!(fig.rows.len(), 6);
+        // paper Table 1 row: Mixtral 46.7B, 32 layers, 8 experts, top-2
+        let mix = fig
+            .rows
+            .iter()
+            .find(|r| r[0].contains("Mixtral"))
+            .unwrap();
+        assert_eq!(&mix[1], "46.7");
+        assert_eq!(&mix[2], "32");
+        assert_eq!(&mix[3], "8");
+        assert_eq!(&mix[4], "2");
+    }
+}

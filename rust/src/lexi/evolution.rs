@@ -1,0 +1,261 @@
+//! Stage 2 (Alg. 2): evolutionary top-k allocation optimization.
+//!
+//! GA over feasible allocations: tournament selection, uniform crossover
+//! (per-layer Bernoulli(0.5) parent choice), budget-preserving mutation
+//! (paired +1/-1 so `sum_j Δ_j = 0`), and projection back to the feasible
+//! set. The fitness is the Stage-1 proxy `phi(k) = sum_j D_j(k_j)` — no
+//! model execution inside the loop, which is what makes the search
+//! "computationally efficient ... without needing to load the actual
+//! model" (paper §4).
+
+use crate::moe::allocation::{Allocation, Bounds};
+use crate::util::Pcg32;
+
+use super::proxy::SensitivityTable;
+
+#[derive(Clone, Copy, Debug)]
+pub struct EvolutionParams {
+    pub population: usize,
+    pub generations: usize,
+    /// Per-layer probability of receiving a paired +/-1 mutation.
+    pub mutation_rate: f64,
+    /// Tournament size for parent selection.
+    pub tournament: usize,
+    pub seed: u64,
+}
+
+impl Default for EvolutionParams {
+    fn default() -> Self {
+        EvolutionParams {
+            population: 64,
+            generations: 400,
+            mutation_rate: 0.3,
+            tournament: 4,
+            seed: 0,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct EvolutionResult {
+    pub best: Allocation,
+    pub best_fitness: f64,
+    /// Best fitness per generation (convergence curve).
+    pub history: Vec<f64>,
+    pub evaluations: usize,
+}
+
+/// Run Alg. 2 for one budget. Returns None iff the budget is infeasible
+/// under the bounds.
+pub fn evolve(
+    table: &SensitivityTable,
+    budget: u32,
+    bounds: Bounds,
+    params: &EvolutionParams,
+) -> Option<EvolutionResult> {
+    let n_layers = table.n_layers();
+    let mut rng = Pcg32::seeded(params.seed ^ budget as u64);
+
+    // Population init: random feasible allocations.
+    let mut pop: Vec<Allocation> = (0..params.population)
+        .map(|_| Allocation::random_feasible(n_layers, bounds, budget, &mut rng))
+        .collect::<Option<Vec<_>>>()?;
+    let mut fit: Vec<f64> = pop.iter().map(|a| table.fitness(&a.k)).collect();
+    let mut evaluations = pop.len();
+
+    let mut history = Vec::with_capacity(params.generations);
+    for _gen in 0..params.generations {
+        // Tournament selection of two parents.
+        let pick = |rng: &mut Pcg32, fit: &[f64]| -> usize {
+            let mut best = rng.gen_usize(fit.len());
+            for _ in 1..params.tournament {
+                let c = rng.gen_usize(fit.len());
+                if fit[c] < fit[best] {
+                    best = c;
+                }
+            }
+            best
+        };
+        let p1 = pick(&mut rng, &fit);
+        let p2 = pick(&mut rng, &fit);
+
+        // Uniform crossover: k'_j from parent 1 or 2 with prob 1/2.
+        let mut child: Vec<u32> = (0..n_layers)
+            .map(|j| {
+                if rng.gen_f64() < 0.5 {
+                    pop[p1].k[j]
+                } else {
+                    pop[p2].k[j]
+                }
+            })
+            .collect();
+
+        // Budget-preserving mutation: paired +1/-1 moves (sum Δ_j = 0).
+        let n_pairs = ((n_layers as f64 * params.mutation_rate / 2.0).ceil()) as usize;
+        for _ in 0..n_pairs {
+            if rng.gen_f64() > params.mutation_rate {
+                continue;
+            }
+            let up: Vec<usize> = (0..n_layers).filter(|&j| child[j] < bounds.k_max).collect();
+            let dn: Vec<usize> = (0..n_layers).filter(|&j| child[j] > bounds.k_min).collect();
+            if up.is_empty() || dn.is_empty() {
+                break;
+            }
+            let u = up[rng.gen_usize(up.len())];
+            let d = dn[rng.gen_usize(dn.len())];
+            if u != d {
+                child[u] += 1;
+                child[d] -= 1;
+            }
+        }
+
+        // Projection (crossover can break the budget even when both
+        // parents satisfy it).
+        let mut child = Allocation::new(child);
+        child.project(bounds, budget, &mut rng);
+        debug_assert!(child.satisfies(bounds, budget));
+
+        // Steady-state replacement: child replaces the current worst if
+        // it improves on it.
+        let cf = table.fitness(&child.k);
+        evaluations += 1;
+        let worst = (0..fit.len())
+            .max_by(|&a, &b| fit[a].partial_cmp(&fit[b]).unwrap())
+            .unwrap();
+        if cf < fit[worst] {
+            pop[worst] = child;
+            fit[worst] = cf;
+        }
+        let best = fit.iter().cloned().fold(f64::INFINITY, f64::min);
+        history.push(best);
+    }
+
+    let best_idx = (0..fit.len())
+        .min_by(|&a, &b| fit[a].partial_cmp(&fit[b]).unwrap())
+        .unwrap();
+    Some(EvolutionResult {
+        best: pop[best_idx].clone(),
+        best_fitness: fit[best_idx],
+        history,
+        evaluations,
+    })
+}
+
+/// Exhaustive optimum by dynamic programming over (layer, remaining
+/// budget) — O(L * B * k_base). Used to validate GA quality in tests and
+/// as an exact solver for small models.
+pub fn exact_dp(table: &SensitivityTable, budget: u32, bounds: Bounds) -> Option<Allocation> {
+    let l = table.n_layers();
+    let b = budget as usize;
+    let lo = bounds.k_min as usize;
+    let hi = bounds.k_max as usize;
+    if b < lo * l || b > hi * l {
+        return None;
+    }
+    const INF: f64 = f64::INFINITY;
+    // dp[j][r] = min cost of layers j.. with r budget remaining
+    let mut dp = vec![vec![INF; b + 1]; l + 1];
+    dp[l][0] = 0.0;
+    for j in (0..l).rev() {
+        for r in 0..=b {
+            let mut best = INF;
+            for k in lo..=hi.min(r) {
+                let rest = r - k;
+                if dp[j + 1][rest].is_finite() {
+                    let c = table.d(j, k as u32) + dp[j + 1][rest];
+                    if c < best {
+                        best = c;
+                    }
+                }
+            }
+            dp[j][r] = best;
+        }
+    }
+    if !dp[0][b].is_finite() {
+        return None;
+    }
+    // reconstruct
+    let mut k_out = Vec::with_capacity(l);
+    let mut r = b;
+    for j in 0..l {
+        for k in lo..=hi.min(r) {
+            let rest = r - k;
+            if (table.d(j, k as u32) + dp[j + 1][rest] - dp[j][r]).abs() < 1e-9 {
+                k_out.push(k as u32);
+                r = rest;
+                break;
+            }
+        }
+    }
+    debug_assert_eq!(k_out.len(), l);
+    Some(Allocation::new(k_out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> SensitivityTable {
+        SensitivityTable::synthetic("t", 16, 8, |x| 1.0 + 3.0 * x, 3)
+    }
+
+    #[test]
+    fn ga_returns_feasible_best() {
+        let t = table();
+        let bounds = Bounds::paper(8);
+        let params = EvolutionParams {
+            generations: 300,
+            ..Default::default()
+        };
+        let res = evolve(&t, 80, bounds, &params).unwrap();
+        assert!(res.best.satisfies(bounds, 80));
+        // convergence curve is non-increasing
+        for w in res.history.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12);
+        }
+    }
+
+    #[test]
+    fn ga_close_to_exact_dp() {
+        let t = table();
+        let bounds = Bounds::paper(8);
+        let params = EvolutionParams {
+            generations: 2000,
+            ..Default::default()
+        };
+        let ga = evolve(&t, 64, bounds, &params).unwrap();
+        let dp = exact_dp(&t, 64, bounds).unwrap();
+        let opt = t.fitness(&dp.k);
+        assert!(
+            ga.best_fitness <= opt * 1.05 + 1e-9,
+            "GA {} vs DP {}",
+            ga.best_fitness,
+            opt
+        );
+    }
+
+    #[test]
+    fn ga_allocates_k_to_sensitive_layers() {
+        // deep layers 4x more sensitive -> they should keep higher k
+        let t = SensitivityTable::synthetic("t", 12, 4, |x| 0.5 + 4.0 * x, 9);
+        let res = evolve(&t, 30, Bounds::paper(4), &EvolutionParams::default()).unwrap();
+        let front: u32 = res.best.k[..6].iter().sum();
+        let back: u32 = res.best.k[6..].iter().sum();
+        assert!(back > front, "k {:?}", res.best.k);
+    }
+
+    #[test]
+    fn infeasible_budget_is_none() {
+        let t = table();
+        assert!(evolve(&t, 5, Bounds::paper(8), &EvolutionParams::default()).is_none());
+        assert!(exact_dp(&t, 5, Bounds::paper(8)).is_none());
+    }
+
+    #[test]
+    fn full_budget_recovers_baseline() {
+        let t = table();
+        let res = evolve(&t, 16 * 8, Bounds::paper(8), &EvolutionParams::default()).unwrap();
+        assert_eq!(res.best.k, vec![8; 16]);
+        assert!(res.best_fitness.abs() < 1e-9);
+    }
+}

@@ -1,0 +1,17 @@
+//! The paper's contribution: LExI's two-stage pipeline.
+//!
+//! Stage 1 ([`sensitivity`]) — Alg. 1: data-free Monte-Carlo profiling of
+//! each MoE layer's output deviation (Frobenius norm) under every
+//! candidate top-k, using only the model's weights and N(0,1) inputs.
+//!
+//! Stage 2 ([`evolution`]) — Alg. 2: evolutionary search over per-layer
+//! allocations under a global active-expert budget, using the Stage-1
+//! table as a fitness proxy (no model loads inside the loop).
+
+pub mod evolution;
+pub mod pipeline;
+pub mod proxy;
+pub mod sensitivity;
+
+pub use evolution::{EvolutionParams, EvolutionResult, evolve};
+pub use proxy::SensitivityTable;

@@ -1,0 +1,74 @@
+//! The end-to-end LExI pipeline: Stage 1 (profile, cached) -> Stage 2
+//! (evolutionary search) -> per-layer allocation.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::config::experiment::ExperimentConfig;
+use crate::moe::allocation::{Allocation, Bounds};
+use crate::runtime::ModelRuntime;
+
+use super::evolution::{evolve, EvolutionParams, EvolutionResult};
+use super::proxy::SensitivityTable;
+use super::sensitivity::{profile_model, verify_table};
+
+/// Stage-1 result cache location for a model.
+pub fn table_path(artifacts: &std::path::Path, model: &str) -> PathBuf {
+    artifacts.join(model).join("sensitivity.json")
+}
+
+/// Run (or load cached) Stage 1 for a loaded model.
+pub fn stage1(
+    model: &ModelRuntime,
+    cfg: &ExperimentConfig,
+    cache: Option<&std::path::Path>,
+    force: bool,
+) -> Result<SensitivityTable> {
+    if let Some(path) = cache {
+        if !force && path.exists() {
+            let t = SensitivityTable::load_json(path)?;
+            if t.iters >= cfg.sensitivity_iters && t.n_layers() == model.entry.n_layers {
+                return Ok(t);
+            }
+        }
+    }
+    let t = profile_model(model, cfg, None)?;
+    verify_table(&t)?;
+    if let Some(path) = cache {
+        t.save_json(path)?;
+    }
+    Ok(t)
+}
+
+/// Run Stage 2 for one budget on a Stage-1 table.
+pub fn stage2(
+    table: &SensitivityTable,
+    budget: u32,
+    cfg: &ExperimentConfig,
+) -> Result<EvolutionResult> {
+    let bounds = Bounds::paper(table.k_base);
+    let params = EvolutionParams {
+        population: cfg.ga_population,
+        generations: cfg.ga_generations,
+        mutation_rate: cfg.ga_mutation,
+        tournament: 4,
+        seed: cfg.seed,
+    };
+    evolve(table, budget, bounds, &params)
+        .ok_or_else(|| anyhow::anyhow!("budget {budget} infeasible for {}", table.model))
+}
+
+/// Full pipeline for a budget sweep. Returns (budget, allocation) pairs.
+pub fn optimize(
+    model: &ModelRuntime,
+    budgets: &[u32],
+    cfg: &ExperimentConfig,
+    cache: Option<&std::path::Path>,
+) -> Result<Vec<(u32, Allocation)>> {
+    let table = stage1(model, cfg, cache, false)?;
+    budgets
+        .iter()
+        .map(|&b| Ok((b, stage2(&table, b, cfg)?.best)))
+        .collect()
+}

@@ -1,0 +1,159 @@
+//! Stage-1 output: the per-layer top-k perturbation-loss table
+//! `D[layer][k]` (Alg. 1's `D̄_k` per layer), the proxy Stage 2 minimizes.
+
+use crate::util::json::Json;
+use crate::util::Pcg32;
+
+/// `loss[j][k-1]` = mean Frobenius deviation of layer j at top-k = k,
+/// relative to the layer's baseline top-k output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SensitivityTable {
+    pub model: String,
+    pub k_base: u32,
+    /// [n_layers][k_base]; entry (j, k-1) is D_j(k).
+    pub loss: Vec<Vec<f64>>,
+    /// Monte-Carlo iterations behind each entry.
+    pub iters: usize,
+}
+
+impl SensitivityTable {
+    pub fn n_layers(&self) -> usize {
+        self.loss.len()
+    }
+
+    /// D_j(k); k is 1-based as in the paper.
+    pub fn d(&self, layer: usize, k: u32) -> f64 {
+        self.loss[layer][(k - 1) as usize]
+    }
+
+    /// Alg. 2 fitness: phi(k) = sum_j D_j(k_j).
+    pub fn fitness(&self, alloc: &[u32]) -> f64 {
+        debug_assert_eq!(alloc.len(), self.n_layers());
+        alloc
+            .iter()
+            .enumerate()
+            .map(|(j, &k)| self.d(j, k))
+            .sum()
+    }
+
+    /// Row-normalized copy for heatmap rendering (Fig. 3/9 plots
+    /// "normalized sensitivity").
+    pub fn normalized(&self) -> Vec<Vec<f64>> {
+        self.loss
+            .iter()
+            .map(|row| {
+                let max = row.iter().cloned().fold(f64::MIN, f64::max).max(1e-12);
+                row.iter().map(|v| v / max).collect()
+            })
+            .collect()
+    }
+
+    /// Synthetic table with a chosen depth profile — used by unit tests and
+    /// benches so Stage 2 can be exercised without artifacts. `profile`
+    /// maps normalized depth in [0,1] to a layer sensitivity scale.
+    pub fn synthetic<F: Fn(f64) -> f64>(
+        model: &str,
+        n_layers: usize,
+        k_base: u32,
+        profile: F,
+        seed: u64,
+    ) -> Self {
+        let mut rng = Pcg32::seeded(seed);
+        let loss = (0..n_layers)
+            .map(|j| {
+                let x = j as f64 / (n_layers.max(2) - 1) as f64;
+                let scale = profile(x).max(1e-3);
+                (1..=k_base)
+                    .map(|k| {
+                        // deviation decreases in k and vanishes at k_base
+                        let gap = (k_base - k) as f64 / k_base as f64;
+                        scale * gap.powf(1.3) * (1.0 + 0.05 * rng.gen_normal())
+                    })
+                    .map(|v| v.max(0.0))
+                    .collect()
+            })
+            .collect();
+        SensitivityTable {
+            model: model.to_string(),
+            k_base,
+            loss,
+            iters: 0,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("k_base", Json::Num(self.k_base as f64)),
+            ("iters", Json::Num(self.iters as f64)),
+            (
+                "loss",
+                Json::Arr(self.loss.iter().map(|row| Json::from_f64s(row)).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<Self> {
+        Ok(SensitivityTable {
+            model: v.get("model")?.as_str()?.to_string(),
+            k_base: v.get("k_base")?.as_usize()? as u32,
+            iters: v.get("iters")?.as_usize()?,
+            loss: v
+                .get("loss")?
+                .as_arr()?
+                .iter()
+                .map(|row| row.f64_vec())
+                .collect::<anyhow::Result<_>>()?,
+        })
+    }
+
+    pub fn save_json(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    pub fn load_json(path: &std::path::Path) -> anyhow::Result<Self> {
+        Self::from_json(&crate::util::json::parse_file(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fitness_sums_rows() {
+        let t = SensitivityTable {
+            model: "m".into(),
+            k_base: 2,
+            loss: vec![vec![3.0, 0.0], vec![5.0, 0.0]],
+            iters: 1,
+        };
+        assert_eq!(t.fitness(&[1, 1]), 8.0);
+        assert_eq!(t.fitness(&[2, 2]), 0.0);
+        assert_eq!(t.fitness(&[1, 2]), 3.0);
+    }
+
+    #[test]
+    fn synthetic_monotone_and_zero_at_kbase() {
+        let t = SensitivityTable::synthetic("m", 8, 6, |x| 1.0 + x, 0);
+        for row in &t.loss {
+            assert!(row[5].abs() < 1e-9);
+            for w in row.windows(2) {
+                assert!(w[0] >= w[1] - 1e-9, "not monotone: {row:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = SensitivityTable::synthetic("m", 4, 3, |_| 1.0, 1);
+        let path = std::env::temp_dir().join("lexi_proxy_test.json");
+        t.save_json(&path).unwrap();
+        let u = SensitivityTable::load_json(&path).unwrap();
+        assert_eq!(t, u);
+    }
+}

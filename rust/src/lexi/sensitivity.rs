@@ -1,0 +1,87 @@
+//! Stage 1 (Alg. 1): per-layer top-k perturbation profiling.
+//!
+//! For each layer j and candidate k, feed `N_iter` batches of
+//! `X ~ N(0,1)^{T x H}` through the layer's compiled MoE graph at the
+//! baseline top-k and at k, and average the Frobenius deviation
+//! `Δ = ||Y_k - Y_base||_F`. Entirely data-free: only the model weights
+//! (inside the executable inputs) and synthetic Gaussians are used.
+
+use anyhow::Result;
+
+use crate::config::experiment::ExperimentConfig;
+use crate::runtime::ModelRuntime;
+use crate::util::{stats::frobenius_diff, Pcg32};
+
+use super::proxy::SensitivityTable;
+
+/// Progress callback: (layer, n_layers).
+pub type Progress<'a> = Option<&'a dyn Fn(usize, usize)>;
+
+/// Run Alg. 1 on a loaded model. `cfg.sensitivity_iters` Monte-Carlo
+/// iterations per layer; every iteration evaluates all candidate k on the
+/// SAME input (paired estimator — lower variance than independent draws).
+pub fn profile_model(
+    model: &ModelRuntime,
+    cfg: &ExperimentConfig,
+    progress: Progress,
+) -> Result<SensitivityTable> {
+    let e = &model.entry;
+    let k_base = e.top_k as u32;
+    let t = e.profile_tokens;
+    let h = e.hidden;
+    let mut loss = vec![vec![0.0f64; k_base as usize]; e.n_layers];
+
+    let mut x = vec![0.0f32; t * h];
+    for layer in 0..e.n_layers {
+        if let Some(p) = progress {
+            p(layer, e.n_layers);
+        }
+        // Deterministic per-layer stream so layers are comparable and the
+        // table is reproducible regardless of evaluation order.
+        let mut rng = Pcg32::new(cfg.seed, 0xA16_0001 + layer as u64);
+        for _ in 0..cfg.sensitivity_iters {
+            rng.fill_normal_f32(&mut x);
+            let y_base = model.moe_layer(layer, &x, k_base as i32)?;
+            for k in 1..=k_base {
+                if k == k_base {
+                    continue; // Δ is 0 by construction
+                }
+                let y_k = model.moe_layer(layer, &x, k as i32)?;
+                loss[layer][(k - 1) as usize] += frobenius_diff(&y_k, &y_base);
+            }
+        }
+        for v in loss[layer].iter_mut() {
+            *v /= cfg.sensitivity_iters as f64;
+        }
+    }
+
+    Ok(SensitivityTable {
+        model: e.name.clone(),
+        k_base,
+        loss,
+        iters: cfg.sensitivity_iters,
+    })
+}
+
+/// Sanity checks on a measured table (used by integration tests and the
+/// CLI's `--verify` flag): Δ at k_base is 0 and Δ is non-increasing in k
+/// (selection sets are nested — see kernels/topk_gate.py).
+pub fn verify_table(table: &SensitivityTable) -> Result<()> {
+    for (j, row) in table.loss.iter().enumerate() {
+        let last = *row.last().unwrap();
+        anyhow::ensure!(
+            last.abs() < 1e-3,
+            "layer {j}: Δ at k_base = {last}, expected ~0"
+        );
+        for (k, w) in row.windows(2).enumerate() {
+            anyhow::ensure!(
+                w[1] <= w[0] * 1.05 + 1e-6,
+                "layer {j}: Δ not monotone at k={}: {} -> {}",
+                k + 1,
+                w[0],
+                w[1]
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,39 @@
+//! # lexi-moe
+//!
+//! Full-system reproduction of **LExI: Layer-Adaptive Active Experts for
+//! Efficient MoE Model Inference** (Chitty-Venkata et al., 2025) as a
+//! three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate is the Layer-3 coordinator: a vLLM-like serving engine, the
+//! LExI optimizer (Stage-1 Monte-Carlo sensitivity profiling + Stage-2
+//! evolutionary allocation search), the pruning baselines the paper
+//! compares against, an analytical H100 performance model, the evaluation
+//! harness, and the per-figure experiment drivers. Model compute runs in
+//! AOT-compiled XLA executables loaded via PJRT (`runtime`); Python is
+//! never on the request path.
+//!
+//! Module map (see DESIGN.md §5):
+//! - [`config`]  — model / serving / experiment configuration
+//! - [`moe`]     — MoE architecture substrate (geometry, allocations, routing)
+//! - [`lexi`]    — the paper's contribution (Alg. 1 + Alg. 2)
+//! - [`pruning`] — inter / intra / dynamic-skip baselines
+//! - [`perfmodel`] — H100 roofline + load-balance + comm simulator
+//! - [`runtime`] — PJRT bridge (HLO text -> compiled executables)
+//! - [`engine`]  — continuous-batching serving stack
+//! - [`eval`]    — task harness (ppl, passkey, longqa, probes, VLM)
+//! - [`figures`] — regeneration of every paper table/figure
+//! - [`util`]    — rng, stats, csv
+
+pub mod config;
+pub mod engine;
+pub mod eval;
+pub mod figures;
+pub mod lexi;
+pub mod moe;
+pub mod perfmodel;
+pub mod pruning;
+pub mod runtime;
+pub mod util;
+
+pub use config::model::{ModelSpec, PaperScale, MODEL_NAMES};
+pub use moe::allocation::Allocation;

@@ -1,0 +1,380 @@
+//! `lexi` CLI — the Layer-3 coordinator entry point.
+//!
+//! Subcommands (hand-rolled parsing; clap is unavailable offline):
+//!   lexi table1                         print + CSV Table 1
+//!   lexi profile  --model M             Stage-1 sensitivity profiling
+//!   lexi search   --model M --budget B  Stage-2 allocation search
+//!   lexi optimize --model M             full LExI pipeline (budget sweep)
+//!   lexi eval     --model M [--lexi B|--inter F|--intra F]
+//!   lexi serve    --model M [--requests N]
+//!   lexi figures  --exp fig2|fig3|fig9|figs4-8|table1|all
+//!
+//! Global flags: --artifacts DIR (default ./artifacts), --out DIR
+//! (default ./results), --iters N, --fast.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use lexi_moe::config::experiment::ExperimentConfig;
+use lexi_moe::config::model::spec;
+use lexi_moe::config::serving::ServingConfig;
+use lexi_moe::engine::{Engine, SamplingParams};
+use lexi_moe::eval::{EvalSuite, RunConfig};
+use lexi_moe::figures;
+use lexi_moe::lexi::pipeline::{stage1, stage2, table_path};
+use lexi_moe::moe::transform::Transform;
+use lexi_moe::runtime::{Manifest, ModelRuntime, Runtime};
+use lexi_moe::util::Pcg32;
+
+struct Args {
+    cmd: String,
+    flags: HashMap<String, String>,
+}
+
+fn parse_args() -> Result<Args> {
+    let mut it = std::env::args().skip(1);
+    let cmd = it.next().unwrap_or_else(|| "help".to_string());
+    let mut flags = HashMap::new();
+    while let Some(a) = it.next() {
+        if let Some(name) = a.strip_prefix("--") {
+            let val = match name {
+                "fast" | "force" | "verify" => "1".to_string(),
+                _ => it.next().with_context(|| format!("--{name} needs a value"))?,
+            };
+            flags.insert(name.to_string(), val);
+        } else {
+            bail!("unexpected argument '{a}'");
+        }
+    }
+    Ok(Args { cmd, flags })
+}
+
+impl Args {
+    fn get(&self, k: &str) -> Option<&str> {
+        self.flags.get(k).map(|s| s.as_str())
+    }
+
+    fn model(&self) -> Result<&str> {
+        self.get("model").context("--model <name> required")
+    }
+
+    fn out_dir(&self) -> PathBuf {
+        PathBuf::from(self.get("out").unwrap_or("results"))
+    }
+
+    fn artifacts(&self) -> PathBuf {
+        self.get("artifacts")
+            .map(PathBuf::from)
+            .unwrap_or_else(Manifest::default_dir)
+    }
+
+    fn experiment_cfg(&self) -> ExperimentConfig {
+        let mut cfg = if self.get("fast").is_some() {
+            ExperimentConfig::fast()
+        } else {
+            ExperimentConfig::default()
+        };
+        if let Some(i) = self.get("iters") {
+            cfg.sensitivity_iters = i.parse().unwrap_or(cfg.sensitivity_iters);
+        }
+        if let Some(s) = self.get("seed") {
+            cfg.seed = s.parse().unwrap_or(0);
+        }
+        cfg
+    }
+}
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = parse_args()?;
+    match args.cmd.as_str() {
+        "table1" => {
+            figures::table1::run(&args.out_dir())?;
+        }
+        "profile" => cmd_profile(&args)?,
+        "search" => cmd_search(&args)?,
+        "optimize" => cmd_optimize(&args)?,
+        "eval" => cmd_eval(&args)?,
+        "serve" => cmd_serve(&args)?,
+        "figures" => cmd_figures(&args)?,
+        "help" | "--help" | "-h" => print_help(),
+        other => {
+            print_help();
+            bail!("unknown command '{other}'");
+        }
+    }
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        "lexi — LExI MoE inference coordinator\n\
+         commands: table1 | profile | search | optimize | eval | serve | figures\n\
+         flags: --model M --budget B --artifacts DIR --out DIR --iters N --fast\n\
+         figures: --exp table1|fig2|fig3|fig9|figs4-8|ablations|all [--models a,b]"
+    );
+}
+
+fn load_model(args: &Args) -> Result<(Runtime, Manifest, ModelRuntime)> {
+    let rt = Runtime::cpu()?;
+    let manifest = Manifest::load(args.artifacts())?;
+    let model = ModelRuntime::load(&rt, &manifest, args.model()?)?;
+    Ok((rt, manifest, model))
+}
+
+fn cmd_profile(args: &Args) -> Result<()> {
+    let (_rt, manifest, model) = load_model(args)?;
+    let cfg = args.experiment_cfg();
+    let cache = table_path(&manifest.root, args.model()?);
+    let force = args.get("force").is_some();
+    let t0 = std::time::Instant::now();
+    let table = if force {
+        let t = lexi_moe::lexi::sensitivity::profile_model(
+            &model,
+            &cfg,
+            Some(&|l, n| eprint!("\rlayer {}/{n}", l + 1)),
+        )?;
+        eprintln!();
+        t.save_json(&cache)?;
+        t
+    } else {
+        stage1(&model, &cfg, Some(&cache), false)?
+    };
+    println!(
+        "sensitivity table for {} ({} layers x k<={}, {} iters) in {:.1}s",
+        table.model,
+        table.n_layers(),
+        table.k_base,
+        table.iters,
+        t0.elapsed().as_secs_f64()
+    );
+    for (j, row) in table.loss.iter().enumerate() {
+        let cells: Vec<String> = row.iter().map(|v| format!("{v:8.3}")).collect();
+        println!("layer {j:>2}: {}", cells.join(" "));
+    }
+    println!("cached at {}", cache.display());
+    Ok(())
+}
+
+fn cmd_search(args: &Args) -> Result<()> {
+    let (_rt, manifest, model) = load_model(args)?;
+    let cfg = args.experiment_cfg();
+    let budget: u32 = args
+        .get("budget")
+        .context("--budget <B> required")?
+        .parse()?;
+    let cache = table_path(&manifest.root, args.model()?);
+    let table = stage1(&model, &cfg, Some(&cache), false)?;
+    let res = stage2(&table, budget, &cfg)?;
+    println!(
+        "best allocation for budget {budget}: {}\nfitness {:.4} after {} evaluations",
+        res.best, res.best_fitness, res.evaluations
+    );
+    Ok(())
+}
+
+fn cmd_optimize(args: &Args) -> Result<()> {
+    let (_rt, manifest, model) = load_model(args)?;
+    let cfg = args.experiment_cfg();
+    let mspec = spec(args.model()?)?;
+    let cache = table_path(&manifest.root, args.model()?);
+    let budgets: Vec<u32> = mspec.budget_sweep().iter().map(|&b| b as u32).collect();
+    let allocs = lexi_moe::lexi::pipeline::optimize(&model, &budgets, &cfg, Some(&cache))?;
+    println!(
+        "LExI allocations for {} (baseline B={}):",
+        mspec.name,
+        mspec.baseline_budget()
+    );
+    for (b, a) in allocs {
+        println!("  B={b:>4}: {a}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let (_rt, manifest, model) = load_model(args)?;
+    let cfg = args.experiment_cfg();
+    let suite = EvalSuite::load(&manifest)?;
+    let entry = model.entry.clone();
+    let calib = lexi_moe::runtime::weights::CalibStats::load_npz(
+        manifest.model_dir(args.model()?).join(&entry.files.calib),
+        entry.n_layers,
+        entry.n_experts,
+    )?;
+
+    let transform = if let Some(b) = args.get("lexi") {
+        let budget: u32 = b.parse()?;
+        let cache = table_path(&manifest.root, args.model()?);
+        let table = stage1(&model, &cfg, Some(&cache), false)?;
+        Transform::Lexi {
+            allocation: stage2(&table, budget, &cfg)?.best,
+        }
+    } else if let Some(f) = args.get("inter") {
+        Transform::InterPrune { frac: f.parse()? }
+    } else if let Some(f) = args.get("intra") {
+        Transform::IntraPrune { frac: f.parse()? }
+    } else {
+        Transform::Baseline
+    };
+
+    let rc = RunConfig::for_transform(&entry, &transform, Some(&calib))?;
+    println!("evaluating {} under {} ...", entry.name, transform.label());
+    let t0 = std::time::Instant::now();
+    if entry.is_vlm {
+        let vlm = lexi_moe::eval::multiple_choice::task_suite(
+            &model,
+            &suite,
+            &lexi_moe::eval::multiple_choice::vlm_tasks(&suite),
+            &rc,
+        )?;
+        for (t, a) in &vlm {
+            println!("vlm {t:<12} {a:.3}");
+        }
+    } else {
+        let lmeval = lexi_moe::eval::multiple_choice::task_suite(
+            &model,
+            &suite,
+            &lexi_moe::eval::multiple_choice::lmeval_tasks(&suite),
+            &rc,
+        )?;
+        println!(
+            "lmeval avg: {:.3}",
+            lexi_moe::eval::multiple_choice::mean_accuracy(&lmeval)
+        );
+        for (t, a) in &lmeval {
+            println!("  {t:<12} {a:.3}");
+        }
+        println!(
+            "longqa F1: {:.3}",
+            lexi_moe::eval::generate::longqa_f1(&model, &suite, &rc)?
+        );
+        let (acc, per_depth) = lexi_moe::eval::generate::passkey(&model, &suite, &rc)?;
+        println!("passkey: {acc:.3} per-depth {per_depth:?}");
+        for (c, p) in lexi_moe::eval::perplexity::all_corpora(&model, &suite, &rc)? {
+            println!("ppl[{c}]: {p:.3}");
+        }
+    }
+    println!("eval wall: {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let (_rt, manifest, model) = load_model(args)?;
+    let n_requests: usize = args.get("requests").unwrap_or("16").parse()?;
+    let entry = model.entry.clone();
+    let scfg = ServingConfig {
+        batch: entry.batch,
+        max_seq: entry.max_seq,
+        prefill_len: entry.prefill_len,
+        ..Default::default()
+    };
+    let rc = RunConfig::baseline(&entry);
+    let mut engine = Engine::new(&model, scfg, rc.k_vec, rc.gate_bias)?;
+
+    // synthetic prompt trace from the eval corpus
+    let suite = EvalSuite::load(&manifest)?;
+    let seqs = suite.ppl_seqs("c4")?;
+    let mut rng = Pcg32::seeded(7);
+    for i in 0..n_requests {
+        let row = seqs.row(i % seqs.n_rows());
+        let plen = 16 + rng.gen_usize(48);
+        engine.submit(
+            row[..plen.min(row.len())].to_vec(),
+            SamplingParams {
+                max_new_tokens: 8 + rng.gen_usize(8),
+                stop_on_eos: false,
+                ..Default::default()
+            },
+        )?;
+    }
+    let outs = engine.run_until_complete()?;
+    println!("{}", engine.metrics.summary());
+    println!("sample output: {:?}", outs.first().map(|o| &o.tokens));
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let exp = args.get("exp").unwrap_or("all");
+    let out = args.out_dir();
+    let cfg = args.experiment_cfg();
+    let models_owned: Option<Vec<String>> = args
+        .get("models")
+        .map(|s| s.split(',').map(|x| x.to_string()).collect());
+    let models: Option<Vec<&str>> = models_owned
+        .as_ref()
+        .map(|v| v.iter().map(|s| s.as_str()).collect());
+
+    let needs_runtime = matches!(exp, "fig3" | "fig9" | "figs4-8" | "ablations" | "all");
+    let (rt, manifest) = if needs_runtime {
+        (
+            Some(Runtime::cpu()?),
+            Some(Manifest::load(args.artifacts())?),
+        )
+    } else {
+        (None, None)
+    };
+
+    if matches!(exp, "table1" | "all") {
+        figures::table1::run(&out)?;
+    }
+    if matches!(exp, "fig2" | "all") {
+        figures::fig2::run(&out, &cfg)?;
+    }
+    if matches!(exp, "fig3" | "all") {
+        figures::fig3::run(
+            &out,
+            rt.as_ref().unwrap(),
+            manifest.as_ref().unwrap(),
+            &figures::fig3::FIG3_MODELS,
+            &cfg,
+            "fig3_sensitivity_heatmaps",
+        )?;
+    }
+    if matches!(exp, "fig9" | "all") {
+        figures::fig3::run(
+            &out,
+            rt.as_ref().unwrap(),
+            manifest.as_ref().unwrap(),
+            &figures::fig3::FIG9_MODELS,
+            &cfg,
+            "fig9_sensitivity_heatmaps",
+        )?;
+    }
+    if matches!(exp, "ablations" | "all") {
+        figures::ablation::limitations_memory(&out, &cfg)?;
+        figures::ablation::dynamic_skip_comparison(&out, &cfg)?;
+        // allocation-quality ablation over measured tables when present
+        if let (Some(rt_ref), Some(man)) = (rt.as_ref(), manifest.as_ref()) {
+            for name in ["qwen1.5-moe-a2.7b", "olmoe-1b-7b"] {
+                if man.models.contains_key(name) {
+                    let model = ModelRuntime::load(rt_ref, man, name)?;
+                    let table = stage1(
+                        &model,
+                        &cfg,
+                        Some(&table_path(&man.root, name)),
+                        false,
+                    )?;
+                    figures::ablation::allocation_quality(&out, &table, &cfg)?;
+                }
+            }
+        }
+    }
+    if matches!(exp, "figs4-8" | "all") {
+        figures::accuracy_throughput::run_all(
+            &out,
+            rt.as_ref().unwrap(),
+            manifest.as_ref().unwrap(),
+            &cfg,
+            models.as_deref(),
+        )?;
+    }
+    Ok(())
+}

@@ -1,0 +1,175 @@
+//! Per-layer active-expert allocations — the object LExI optimizes.
+//!
+//! An [`Allocation`] is the vector `k = (k_1, ..., k_L)` of Alg. 2, with
+//! the paper's feasibility constraints: a total budget `sum k_j = B` and
+//! per-layer bounds `k_min <= k_j <= k_max`.
+
+use crate::util::Pcg32;
+
+/// Per-layer bounds of the Alg. 2 search space.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Bounds {
+    pub k_min: u32,
+    pub k_max: u32,
+}
+
+impl Bounds {
+    pub fn new(k_min: u32, k_max: u32) -> Self {
+        assert!(k_min >= 1 && k_min <= k_max);
+        Bounds { k_min, k_max }
+    }
+
+    /// The paper's search space: every integer 1..=k_base.
+    pub fn paper(k_base: u32) -> Self {
+        Bounds::new(1, k_base)
+    }
+}
+
+/// A per-layer top-k vector.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Allocation {
+    pub k: Vec<u32>,
+}
+
+impl Allocation {
+    pub fn new(k: Vec<u32>) -> Self {
+        Allocation { k }
+    }
+
+    /// Uniform baseline: every layer at k_base.
+    pub fn uniform(n_layers: usize, k: u32) -> Self {
+        Allocation { k: vec![k; n_layers] }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.k.len()
+    }
+
+    /// Total active-expert budget `sum_j k_j`.
+    pub fn budget(&self) -> u32 {
+        self.k.iter().sum()
+    }
+
+    /// Mean active experts per layer (the x-axis of several figures).
+    pub fn mean_k(&self) -> f64 {
+        self.budget() as f64 / self.k.len() as f64
+    }
+
+    pub fn satisfies(&self, bounds: Bounds, budget: u32) -> bool {
+        self.budget() == budget
+            && self
+                .k
+                .iter()
+                .all(|&k| k >= bounds.k_min && k <= bounds.k_max)
+    }
+
+    /// Random feasible allocation: start at k_min everywhere and spread the
+    /// remaining budget uniformly at random (Alg. 2 population init).
+    pub fn random_feasible(
+        n_layers: usize,
+        bounds: Bounds,
+        budget: u32,
+        rng: &mut Pcg32,
+    ) -> Option<Self> {
+        let lo = bounds.k_min * n_layers as u32;
+        let hi = bounds.k_max * n_layers as u32;
+        if budget < lo || budget > hi {
+            return None;
+        }
+        let mut k = vec![bounds.k_min; n_layers];
+        let mut rest = budget - lo;
+        while rest > 0 {
+            let j = rng.gen_usize(n_layers);
+            if k[j] < bounds.k_max {
+                k[j] += 1;
+                rest -= 1;
+            }
+        }
+        Some(Allocation { k })
+    }
+
+    /// Project onto the feasible set: clamp to bounds, then repair the
+    /// budget with +/-1 steps on randomly chosen adjustable layers
+    /// (Alg. 2 `Proj`). Idempotent on already-feasible points.
+    pub fn project(&mut self, bounds: Bounds, budget: u32, rng: &mut Pcg32) {
+        for k in self.k.iter_mut() {
+            *k = (*k).clamp(bounds.k_min, bounds.k_max);
+        }
+        loop {
+            let cur = self.budget();
+            match cur.cmp(&budget) {
+                std::cmp::Ordering::Equal => break,
+                std::cmp::Ordering::Less => {
+                    let candidates: Vec<usize> = (0..self.k.len())
+                        .filter(|&j| self.k[j] < bounds.k_max)
+                        .collect();
+                    let j = candidates[rng.gen_usize(candidates.len())];
+                    self.k[j] += 1;
+                }
+                std::cmp::Ordering::Greater => {
+                    let candidates: Vec<usize> = (0..self.k.len())
+                        .filter(|&j| self.k[j] > bounds.k_min)
+                        .collect();
+                    let j = candidates[rng.gen_usize(candidates.len())];
+                    self.k[j] -= 1;
+                }
+            }
+        }
+    }
+
+    /// i32 vector for the runtime graphs' `k_vec` input.
+    pub fn to_i32(&self) -> Vec<i32> {
+        self.k.iter().map(|&k| k as i32).collect()
+    }
+}
+
+impl std::fmt::Display for Allocation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[")?;
+        for (i, k) in self.k.iter().enumerate() {
+            if i > 0 {
+                write!(f, " ")?;
+            }
+            write!(f, "{k}")?;
+        }
+        write!(f, "] (B={})", self.budget())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_feasible_satisfies_constraints() {
+        let mut rng = Pcg32::seeded(0);
+        let b = Bounds::paper(6);
+        for budget in [27, 80, 162] {
+            let a = Allocation::random_feasible(27, b, budget, &mut rng).unwrap();
+            assert!(a.satisfies(b, budget));
+        }
+        // infeasible budgets
+        assert!(Allocation::random_feasible(27, b, 26, &mut rng).is_none());
+        assert!(Allocation::random_feasible(27, b, 163, &mut rng).is_none());
+    }
+
+    #[test]
+    fn project_repairs_budget() {
+        let mut rng = Pcg32::seeded(1);
+        let b = Bounds::paper(8);
+        let mut a = Allocation::new(vec![9, 0, 4, 4]); // out of bounds
+        a.project(b, 16, &mut rng);
+        assert!(a.satisfies(b, 16));
+        // idempotent
+        let before = a.clone();
+        a.project(b, 16, &mut rng);
+        assert_eq!(a, before);
+    }
+
+    #[test]
+    fn uniform_budget() {
+        let a = Allocation::uniform(24, 4);
+        assert_eq!(a.budget(), 96);
+        assert!((a.mean_k() - 4.0).abs() < 1e-12);
+    }
+}

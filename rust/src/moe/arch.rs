@@ -1,0 +1,117 @@
+//! Model geometry: FLOP and byte counts per component, parameterized so
+//! the same formulas serve the paper-scale perf model and the analogues.
+
+use crate::config::model::ModelSpec;
+/// Geometry of one transformer layer at a given scale.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerGeom {
+    pub hidden: usize,
+    /// Per-expert FFN intermediate dim (possibly reduced by intra-pruning).
+    pub ffn: usize,
+    pub n_heads: usize,
+    /// Experts present in the layer (possibly reduced by inter-pruning).
+    pub n_experts: usize,
+}
+
+impl LayerGeom {
+    /// FLOPs for the attention block per token at context length `ctx`
+    /// (QKVO projections + score/value matmuls; 2 FLOPs per MAC).
+    pub fn attn_flops_per_token(&self, ctx: usize) -> f64 {
+        let h = self.hidden as f64;
+        let proj = 4.0 * 2.0 * h * h;
+        let scores = 2.0 * 2.0 * h * ctx as f64;
+        proj + scores
+    }
+
+    /// FLOPs for ONE expert's SwiGLU FFN per token (3 GEMMs).
+    pub fn expert_flops_per_token(&self) -> f64 {
+        3.0 * 2.0 * self.hidden as f64 * self.ffn as f64
+    }
+
+    /// Router GEMM FLOPs per token.
+    pub fn router_flops_per_token(&self) -> f64 {
+        2.0 * self.hidden as f64 * self.n_experts as f64
+    }
+
+    /// Bytes of one expert's weights (W1, W3, W2) at `dtype_bytes`.
+    pub fn expert_weight_bytes(&self, dtype_bytes: usize) -> f64 {
+        (3 * self.hidden * self.ffn * dtype_bytes) as f64
+    }
+
+    /// Bytes of the attention weights at `dtype_bytes`.
+    pub fn attn_weight_bytes(&self, dtype_bytes: usize) -> f64 {
+        (4 * self.hidden * self.hidden * dtype_bytes) as f64
+    }
+}
+
+/// Whole-model geometry (uniform layers, per Table 1).
+#[derive(Clone, Debug)]
+pub struct ModelGeom {
+    pub n_layers: usize,
+    pub layer: LayerGeom,
+    pub vocab: usize,
+    pub top_k: usize,
+}
+
+impl ModelGeom {
+    /// Paper-scale geometry of a registry model.
+    pub fn paper_scale(spec: &ModelSpec) -> Self {
+        ModelGeom {
+            n_layers: spec.n_layers,
+            layer: LayerGeom {
+                hidden: spec.paper.hidden,
+                ffn: spec.paper.ffn,
+                n_heads: spec.paper.n_heads,
+                n_experts: spec.n_experts,
+            },
+            vocab: spec.paper.vocab,
+            top_k: spec.top_k,
+        }
+    }
+
+    /// Model FLOPs per token with `k_j` active experts in layer j.
+    pub fn flops_per_token(&self, k_per_layer: &[u32], ctx: usize) -> f64 {
+        assert_eq!(k_per_layer.len(), self.n_layers);
+        let l = &self.layer;
+        let mut total = 0.0;
+        for &k in k_per_layer {
+            total += l.attn_flops_per_token(ctx)
+                + l.router_flops_per_token()
+                + k as f64 * l.expert_flops_per_token();
+        }
+        total + 2.0 * self.layer.hidden as f64 * self.vocab as f64
+    }
+
+    /// Total expert parameters (the "up to 96% of the model" the paper
+    /// cites for Mixtral).
+    pub fn expert_param_count(&self) -> f64 {
+        (self.n_layers * self.layer.n_experts * 3 * self.layer.hidden * self.layer.ffn)
+            as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model::spec;
+
+    #[test]
+    fn mixtral_experts_dominate_params() {
+        let g = ModelGeom::paper_scale(&spec("mixtral-8x7b").unwrap());
+        let experts = g.expert_param_count();
+        let total = 46.7e9;
+        assert!(experts / total > 0.9, "expert share {}", experts / total);
+    }
+
+    #[test]
+    fn flops_monotone_in_k() {
+        let g = ModelGeom::paper_scale(&spec("qwen1.5-moe-a2.7b").unwrap());
+        let base = g.flops_per_token(&vec![4; 24], 1024);
+        let less = g.flops_per_token(&vec![2; 24], 1024);
+        assert!(less < base);
+        // halving k roughly halves the expert term
+        let l = g.layer;
+        let expert_term = 24.0 * 2.0 * l.expert_flops_per_token();
+        assert!((base - less - expert_term).abs() / base < 1e-9);
+    }
+}

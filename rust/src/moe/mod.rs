@@ -1,0 +1,12 @@
+//! MoE architecture substrate: geometry, per-layer top-k allocations,
+//! routing/load simulation, and model transforms (pruning / LExI).
+
+pub mod allocation;
+pub mod arch;
+pub mod routing;
+pub mod transform;
+
+pub use allocation::Allocation;
+pub use arch::ModelGeom;
+pub use routing::RoutingSim;
+pub use transform::Transform;

@@ -1,0 +1,165 @@
+//! Token-to-expert routing simulation: per-expert loads and the load
+//! imbalance that makes pruning throughput-neutral (the paper's §1/§3
+//! observation and the mechanism behind Fig. 2's flat/degrading curves).
+
+use crate::util::Pcg32;
+
+/// Simulates a batch of tokens selecting top-k experts from a popularity
+/// distribution. Popularity is drawn once per instance (a softmax of
+/// N(0, spread) logits), standing in for the trained router's preferences;
+/// `spread`=0 gives a uniform router, larger values give the skewed
+/// routing real models exhibit.
+#[derive(Clone, Debug)]
+pub struct RoutingSim {
+    /// Routing probability per expert (sums to 1).
+    pub popularity: Vec<f64>,
+}
+
+impl RoutingSim {
+    pub fn new(n_experts: usize, spread: f64, rng: &mut Pcg32) -> Self {
+        let logits: Vec<f64> = (0..n_experts).map(|_| rng.gen_normal() * spread).collect();
+        let m = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let exps: Vec<f64> = logits.iter().map(|l| (l - m).exp()).collect();
+        let z: f64 = exps.iter().sum();
+        RoutingSim {
+            popularity: exps.iter().map(|e| e / z).collect(),
+        }
+    }
+
+    /// From measured calibration frequencies (the NAEE-style data path).
+    pub fn from_frequencies(freq: &[f32]) -> Self {
+        let z: f64 = freq.iter().map(|&f| f as f64).sum::<f64>().max(1e-12);
+        RoutingSim {
+            popularity: freq.iter().map(|&f| f as f64 / z).collect(),
+        }
+    }
+
+    pub fn n_experts(&self) -> usize {
+        self.popularity.len()
+    }
+
+    /// Restrict to a surviving-expert subset (inter-pruning): removed
+    /// experts' probability mass is redistributed onto survivors by
+    /// renormalization — the "remaining experts absorb the pruned experts'
+    /// tokens" effect.
+    pub fn pruned(&self, keep: &[bool]) -> Self {
+        assert_eq!(keep.len(), self.popularity.len());
+        let kept_mass: f64 = self
+            .popularity
+            .iter()
+            .zip(keep)
+            .filter(|(_, &k)| k)
+            .map(|(p, _)| p)
+            .sum();
+        RoutingSim {
+            popularity: self
+                .popularity
+                .iter()
+                .zip(keep)
+                .map(|(p, &k)| if k { p / kept_mass } else { 0.0 })
+                .collect(),
+        }
+    }
+
+    /// Sample per-expert token loads: `tokens` tokens each select `k`
+    /// *distinct* experts (weighted without replacement). Returns counts
+    /// of length n_experts; the counts sum to tokens*k.
+    pub fn sample_loads(&self, tokens: usize, k: usize, rng: &mut Pcg32) -> Vec<u64> {
+        let e = self.n_experts();
+        assert!(k <= self.popularity.iter().filter(|&&p| p > 0.0).count());
+        let mut loads = vec![0u64; e];
+        let mut w = vec![0.0f64; e];
+        for _ in 0..tokens {
+            w.copy_from_slice(&self.popularity);
+            for _ in 0..k {
+                let j = rng.sample_weighted(&w);
+                loads[j] += 1;
+                w[j] = 0.0; // without replacement within a token
+            }
+        }
+        loads
+    }
+
+    /// Load statistics over Monte-Carlo trials.
+    pub fn load_stats(&self, tokens: usize, k: usize, trials: usize, seed: u64) -> LoadStats {
+        let mut rng = Pcg32::seeded(seed);
+        let mut max_sum = 0.0;
+        let mut nonzero_sum = 0.0;
+        for _ in 0..trials {
+            let loads = self.sample_loads(tokens, k, &mut rng);
+            let max = *loads.iter().max().unwrap() as f64;
+            max_sum += max;
+            nonzero_sum += loads.iter().filter(|&&l| l > 0).count() as f64;
+        }
+        let mean_load = (tokens * k) as f64 / self.n_experts() as f64;
+        let exp_max = max_sum / trials as f64;
+        LoadStats {
+            mean_load,
+            expected_max_load: exp_max,
+            imbalance: exp_max / mean_load.max(1e-12),
+            expected_active_experts: nonzero_sum / trials as f64,
+        }
+    }
+}
+
+/// Summary of a routing simulation.
+#[derive(Clone, Copy, Debug)]
+pub struct LoadStats {
+    /// tokens * k / E.
+    pub mean_load: f64,
+    /// E[max_e load_e] over trials.
+    pub expected_max_load: f64,
+    /// expected_max_load / mean_load; >= 1, equality iff perfectly uniform.
+    pub imbalance: f64,
+    /// Expected number of experts that received at least one token
+    /// (drives decode-phase weight traffic).
+    pub expected_active_experts: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_sum_to_tokens_times_k() {
+        let mut rng = Pcg32::seeded(0);
+        let sim = RoutingSim::new(8, 1.0, &mut rng);
+        let loads = sim.sample_loads(100, 2, &mut rng);
+        assert_eq!(loads.iter().sum::<u64>(), 200);
+    }
+
+    #[test]
+    fn imbalance_at_least_one() {
+        let mut rng = Pcg32::seeded(1);
+        for spread in [0.0, 0.5, 2.0] {
+            let sim = RoutingSim::new(16, spread, &mut rng);
+            let s = sim.load_stats(256, 4, 16, 7);
+            assert!(s.imbalance >= 1.0 - 1e-9, "imbalance {}", s.imbalance);
+        }
+    }
+
+    #[test]
+    fn skew_increases_imbalance() {
+        let mut rng = Pcg32::seeded(2);
+        let flat = RoutingSim::new(32, 0.0, &mut rng).load_stats(256, 4, 32, 9);
+        let skew = RoutingSim::new(32, 2.0, &mut rng).load_stats(256, 4, 32, 9);
+        assert!(skew.imbalance > flat.imbalance);
+    }
+
+    #[test]
+    fn pruning_concentrates_load() {
+        let mut rng = Pcg32::seeded(3);
+        let sim = RoutingSim::new(8, 1.0, &mut rng);
+        let mut keep = vec![true; 8];
+        keep[0] = false;
+        keep[1] = false;
+        let pruned = sim.pruned(&keep);
+        let z: f64 = pruned.popularity.iter().sum();
+        assert!((z - 1.0).abs() < 1e-9);
+        assert_eq!(pruned.popularity[0], 0.0);
+        // per-surviving-expert mean load grows
+        let base = sim.load_stats(256, 2, 16, 11);
+        let after = pruned.load_stats(256, 2, 16, 11);
+        assert!(after.expected_max_load >= base.expected_max_load * 0.99);
+    }
+}

@@ -1,0 +1,200 @@
+//! Model transforms: everything Figs. 2 & 4-8 compare.
+//!
+//! A [`Transform`] describes how a pretrained MoE is modified post-training.
+//! Each variant maps onto the shared runtime mechanism (DESIGN.md §3):
+//! per-layer `k_vec` input, per-expert `gate_bias` input (-1e9 = removed),
+//! and in-memory weight edits (intra-pruning zeroes FFN columns) — so ONE
+//! compiled executable serves every configuration.
+
+use crate::config::model::ModelSpec;
+use crate::moe::allocation::Allocation;
+
+pub const PRUNE_BIAS: f32 = -1e9;
+
+/// A post-training model configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Transform {
+    /// Unmodified pretrained model (uniform k_base everywhere).
+    Baseline,
+    /// NAEE-style inter-expert pruning: remove `frac` of the experts in
+    /// every layer (lowest calibration importance first). Token top-k is
+    /// unchanged — survivors absorb the removed experts' tokens.
+    InterPrune { frac: f64 },
+    /// MoE-I2-style intra-expert pruning: shrink every expert's FFN
+    /// intermediate dim by `frac` (smallest-magnitude columns first).
+    IntraPrune { frac: f64 },
+    /// NAEE dynamic expert skipping: drop the weakest of the top-2 experts
+    /// when its gate weight is below `threshold` x the top-1 weight.
+    /// Only defined for k_base = 2 (the paper notes it "cannot work
+    /// beyond top-k = 2"); modeled in the perf model.
+    DynamicSkip { threshold: f64 },
+    /// LExI: static per-layer active-expert allocation.
+    Lexi { allocation: Allocation },
+    /// LExI combined with inter-expert pruning — the joint compute +
+    /// memory optimization the paper's Limitations section proposes
+    /// ("our method can be effectively combined with existing MoE
+    /// pruning methods").
+    LexiPlusInter { allocation: Allocation, frac: f64 },
+}
+
+impl Transform {
+    /// Effective per-layer k for the runtime `k_vec` input and FLOP model.
+    /// (DynamicSkip's *expected* k is input-dependent; callers use
+    /// [`Transform::expected_k`] for it.)
+    pub fn k_per_layer(&self, spec: &ModelSpec) -> Vec<u32> {
+        match self {
+            Transform::Lexi { allocation } => allocation.k.clone(),
+            Transform::LexiPlusInter { allocation, .. } => {
+                let kept = self.experts_kept(spec) as u32;
+                allocation.k.iter().map(|&k| k.min(kept)).collect()
+            }
+            // Inter/intra pruning keep the pretrained top-k. If inter
+            // pruning leaves fewer experts than k_base, top-k saturates.
+            Transform::InterPrune { .. } => {
+                let kept = self.experts_kept(spec);
+                vec![(spec.top_k as u32).min(kept as u32); spec.n_layers]
+            }
+            _ => vec![spec.top_k as u32; spec.n_layers],
+        }
+    }
+
+    /// Experts remaining per layer after the transform.
+    pub fn experts_kept(&self, spec: &ModelSpec) -> usize {
+        match self {
+            Transform::InterPrune { frac } | Transform::LexiPlusInter { frac, .. } => {
+                let removed = (spec.n_experts as f64 * frac).round() as usize;
+                (spec.n_experts - removed).max(1)
+            }
+            _ => spec.n_experts,
+        }
+    }
+
+    /// Per-expert FFN dim after the transform (paper-scale `ffn` input).
+    pub fn ffn_dim(&self, ffn: usize) -> usize {
+        match self {
+            Transform::IntraPrune { frac } => {
+                ((ffn as f64 * (1.0 - frac)).round() as usize).max(1)
+            }
+            _ => ffn,
+        }
+    }
+
+    /// Expected active experts per token per layer (drives the FLOP term).
+    /// For DynamicSkip this is the expected value under the gate-weight
+    /// distribution summarized by `skip_prob` (probability the 2nd expert
+    /// is skipped); everything else is deterministic.
+    pub fn expected_k(&self, spec: &ModelSpec, skip_prob: f64) -> f64 {
+        match self {
+            Transform::DynamicSkip { .. } => spec.top_k as f64 - skip_prob,
+            Transform::Lexi { allocation }
+            | Transform::LexiPlusInter { allocation, .. } => allocation.mean_k(),
+            _ => self.k_per_layer(spec).iter().sum::<u32>() as f64
+                / spec.n_layers as f64,
+        }
+    }
+
+    /// Does this transform shrink the weight memory footprint?
+    /// (The paper's Limitations section: LExI does NOT.)
+    pub fn reduces_memory(&self) -> bool {
+        matches!(
+            self,
+            Transform::InterPrune { .. }
+                | Transform::IntraPrune { .. }
+                | Transform::LexiPlusInter { .. }
+        )
+    }
+
+    /// Expert-weight memory at paper scale in GiB under this transform
+    /// (dtype bytes = 2, BF16). The paper's Limitations section: LExI
+    /// does NOT reduce the footprint; pruning does.
+    pub fn expert_memory_gib(&self, spec: &ModelSpec) -> f64 {
+        let kept = self.experts_kept(spec) as f64;
+        let ffn = self.ffn_dim(spec.paper.ffn) as f64;
+        spec.n_layers as f64 * kept * 3.0 * spec.paper.hidden as f64 * ffn * 2.0
+            / (1u64 << 30) as f64
+    }
+
+    /// Short label used in figure CSVs.
+    pub fn label(&self) -> String {
+        match self {
+            Transform::Baseline => "base".into(),
+            Transform::InterPrune { frac } => format!("inter{:.1}", frac * 100.0),
+            Transform::IntraPrune { frac } => format!("intra{:.1}", frac * 100.0),
+            Transform::DynamicSkip { threshold } => format!("skip{threshold:.2}"),
+            Transform::Lexi { allocation } => format!("lexi-B{}", allocation.budget()),
+            Transform::LexiPlusInter { allocation, frac } => {
+                format!("lexi-B{}+inter{:.0}", allocation.budget(), frac * 100.0)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model::spec;
+
+    #[test]
+    fn inter_prune_keeps_topk_until_saturation() {
+        let m = spec("qwen1.5-moe-a2.7b").unwrap(); // E=60, k=4
+        let t = Transform::InterPrune { frac: 0.5 };
+        assert_eq!(t.experts_kept(&m), 30);
+        assert_eq!(t.k_per_layer(&m), vec![4; 24]);
+        // saturation: pruning mixtral (E=8, k=2) at 93% leaves 1 expert
+        let mx = spec("mixtral-8x7b").unwrap();
+        let t = Transform::InterPrune { frac: 0.9 };
+        assert_eq!(t.experts_kept(&mx), 1);
+        assert_eq!(t.k_per_layer(&mx), vec![1; 32]);
+    }
+
+    #[test]
+    fn intra_prune_shrinks_ffn_only() {
+        let m = spec("mixtral-8x7b").unwrap();
+        let t = Transform::IntraPrune { frac: 0.25 };
+        assert_eq!(t.ffn_dim(14336), 10752);
+        assert_eq!(t.experts_kept(&m), 8);
+        assert_eq!(t.k_per_layer(&m), vec![2; 32]);
+    }
+
+    #[test]
+    fn lexi_k_is_the_allocation() {
+        let m = spec("mixtral-8x7b").unwrap();
+        let alloc = Allocation::new(vec![1; 16].into_iter().chain(vec![2; 16]).collect());
+        let t = Transform::Lexi { allocation: alloc.clone() };
+        assert_eq!(t.k_per_layer(&m), alloc.k);
+        assert!((t.expected_k(&m, 0.0) - 1.5).abs() < 1e-12);
+        assert!(!t.reduces_memory());
+    }
+
+    #[test]
+    fn combined_transform_composes_both_levers() {
+        let m = spec("olmoe-1b-7b").unwrap(); // E=64, k=8, L=16
+        let alloc = Allocation::uniform(16, 4);
+        let t = Transform::LexiPlusInter { allocation: alloc, frac: 0.5 };
+        assert_eq!(t.experts_kept(&m), 32);
+        assert_eq!(t.k_per_layer(&m), vec![4; 16]);
+        assert!(t.reduces_memory());
+        // memory halves relative to baseline
+        let base = Transform::Baseline.expert_memory_gib(&m);
+        assert!((t.expert_memory_gib(&m) / base - 0.5).abs() < 1e-9);
+        // while plain LExI keeps the full footprint (the Limitation)
+        let lexi = Transform::Lexi { allocation: Allocation::uniform(16, 4) };
+        assert!((lexi.expert_memory_gib(&m) / base - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mixtral_memory_matches_param_count() {
+        // 32 layers x 8 experts x 3 x 4096 x 14336 x 2B ≈ 84 GiB of
+        // expert weights (BF16) — the bulk of 46.7B params.
+        let m = spec("mixtral-8x7b").unwrap();
+        let gib = Transform::Baseline.expert_memory_gib(&m);
+        assert!((gib - 84.0).abs() < 2.0, "{gib}");
+    }
+
+    #[test]
+    fn dynamic_skip_expected_k() {
+        let m = spec("mixtral-8x7b").unwrap();
+        let t = Transform::DynamicSkip { threshold: 0.3 };
+        assert!((t.expected_k(&m, 0.4) - 1.6).abs() < 1e-12);
+    }
+}

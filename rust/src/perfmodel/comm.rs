@@ -1,0 +1,50 @@
+//! Inter-GPU communication model: tensor-parallel all-reduce and the MoE
+//! dispatch/combine traffic (the "all-reduce and broadcast volume grows
+//! with active experts" cost the paper cites in §1).
+
+use super::hardware::Hardware;
+
+/// Ring all-reduce of `bytes` across `n_gpus`: 2(G-1)/G traffic factor.
+pub fn allreduce_time(hw: &Hardware, bytes: f64, n_gpus: usize) -> f64 {
+    if n_gpus <= 1 {
+        return 0.0;
+    }
+    let g = n_gpus as f64;
+    let wire = bytes * 2.0 * (g - 1.0) / g / hw.nvlink_bw;
+    wire + hw.allreduce_latency
+}
+
+/// MoE dispatch + combine: routing `tokens` activations of width `hidden`
+/// to `k` experts and gathering the weighted results back. On the TP
+/// deployment this is HBM traffic (scatter/gather through the fused
+/// kernel); volume scales with k — LExI's communication lever.
+pub fn dispatch_combine_bytes(hw: &Hardware, tokens: usize, hidden: usize, k: f64) -> f64 {
+    2.0 * tokens as f64 * k * hidden as f64 * hw.dtype_bytes as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allreduce_zero_for_single_gpu() {
+        let hw = Hardware::h100();
+        assert_eq!(allreduce_time(&hw, 1e9, 1), 0.0);
+        assert!(allreduce_time(&hw, 1e9, 4) > 0.0);
+    }
+
+    #[test]
+    fn allreduce_grows_with_gpus() {
+        let hw = Hardware::h100();
+        // traffic factor 2(G-1)/G increases in G
+        assert!(allreduce_time(&hw, 1e9, 8) > allreduce_time(&hw, 1e9, 2));
+    }
+
+    #[test]
+    fn dispatch_scales_with_k() {
+        let hw = Hardware::h100();
+        let b1 = dispatch_combine_bytes(&hw, 1024, 4096, 2.0);
+        let b2 = dispatch_combine_bytes(&hw, 1024, 4096, 4.0);
+        assert!((b2 / b1 - 2.0).abs() < 1e-12);
+    }
+}

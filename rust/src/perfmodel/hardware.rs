@@ -1,0 +1,60 @@
+//! Accelerator constants (NVIDIA H100 SXM5, the paper's testbed).
+
+#[derive(Clone, Copy, Debug)]
+pub struct Hardware {
+    /// Peak dense BF16 tensor-core throughput (FLOP/s).
+    pub peak_flops: f64,
+    /// HBM3 bandwidth (B/s).
+    pub hbm_bw: f64,
+    /// NVLink per-direction bandwidth per GPU (B/s).
+    pub nvlink_bw: f64,
+    /// Achievable fraction of peak FLOPs for large GEMMs.
+    pub gemm_eff: f64,
+    /// Achievable fraction of HBM bandwidth for streaming reads.
+    pub mem_eff: f64,
+    /// Fixed kernel-launch / scheduling overhead per fused kernel (s).
+    pub kernel_overhead: f64,
+    /// Collective latency per all-reduce (s).
+    pub allreduce_latency: f64,
+    /// Row-tile granularity of the grouped expert GEMM (tokens): each
+    /// active expert's token group is padded to a multiple of this.
+    pub moe_tile_rows: usize,
+    /// Parallel execution lanes for independent expert GEMM tiles
+    /// (SM groups available to the fused MoE kernel).
+    pub sm_lanes: usize,
+    /// Weight dtype bytes (BF16).
+    pub dtype_bytes: usize,
+}
+
+impl Default for Hardware {
+    fn default() -> Self {
+        Hardware::h100()
+    }
+}
+
+impl Hardware {
+    pub fn h100() -> Self {
+        Hardware {
+            peak_flops: 989e12,
+            hbm_bw: 3.35e12,
+            nvlink_bw: 450e9,
+            gemm_eff: 0.65,
+            mem_eff: 0.80,
+            kernel_overhead: 5e-6,
+            allreduce_latency: 12e-6,
+            moe_tile_rows: 64,
+            sm_lanes: 32,
+            dtype_bytes: 2,
+        }
+    }
+
+    /// Effective compute rate (FLOP/s) after GEMM efficiency.
+    pub fn eff_flops(&self) -> f64 {
+        self.peak_flops * self.gemm_eff
+    }
+
+    /// Effective memory bandwidth (B/s).
+    pub fn eff_bw(&self) -> f64 {
+        self.hbm_bw * self.mem_eff
+    }
+}

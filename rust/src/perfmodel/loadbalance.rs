@@ -1,0 +1,146 @@
+//! Per-layer load-balance summaries feeding the MoE kernel time model.
+
+use crate::moe::routing::{LoadStats, RoutingSim};
+use crate::util::Pcg32;
+
+/// Per-layer routing environment: one popularity distribution per layer,
+/// seeded deterministically so every figure run sees the same "model".
+pub struct LayerRouting {
+    pub sims: Vec<RoutingSim>,
+}
+
+impl LayerRouting {
+    /// Synthetic trained-router popularity: skew varies smoothly with
+    /// depth (mid layers route more uniformly — matching the observation
+    /// that expert specialization concentrates near the ends).
+    pub fn synthetic(n_layers: usize, n_experts: usize, seed: u64) -> Self {
+        let mut sims = Vec::with_capacity(n_layers);
+        for j in 0..n_layers {
+            let x = j as f64 / (n_layers.max(2) - 1) as f64;
+            let spread = 0.4 + 0.8 * (2.0 * (x - 0.5)).powi(2); // U-shape
+            let mut rng = Pcg32::new(seed, 1000 + j as u64);
+            sims.push(RoutingSim::new(n_experts, spread, &mut rng));
+        }
+        LayerRouting { sims }
+    }
+
+    /// From measured calibration frequencies ([L][E], the analogue's
+    /// router statistics exported by the build step).
+    pub fn from_calibration(freq: &[Vec<f32>]) -> Self {
+        LayerRouting {
+            sims: freq.iter().map(|f| RoutingSim::from_frequencies(f)).collect(),
+        }
+    }
+
+    /// Inter-pruning applied per layer: keep the top (1-frac) experts by
+    /// popularity (the calibration-importance ranking NAEE uses).
+    pub fn pruned(&self, frac: f64) -> Self {
+        let sims = self
+            .sims
+            .iter()
+            .map(|sim| {
+                let e = sim.n_experts();
+                let remove = (e as f64 * frac).round() as usize;
+                let mut order: Vec<usize> = (0..e).collect();
+                order.sort_by(|&a, &b| {
+                    sim.popularity[a]
+                        .partial_cmp(&sim.popularity[b])
+                        .unwrap()
+                });
+                let mut keep = vec![true; e];
+                for &i in order.iter().take(remove.min(e - 1)) {
+                    keep[i] = false;
+                }
+                sim.pruned(&keep)
+            })
+            .collect();
+        LayerRouting { sims }
+    }
+
+    /// Load stats for layer `j` with `tokens` tokens and top-`k`.
+    pub fn stats(&self, j: usize, tokens: usize, k: usize, trials: usize, seed: u64) -> LoadStats {
+        let kept = self.sims[j]
+            .popularity
+            .iter()
+            .filter(|&&p| p > 0.0)
+            .count();
+        self.sims[j].stats_capped(tokens, k.min(kept), trials, seed)
+    }
+
+    /// Probability that the 2nd-ranked gate weight falls below
+    /// `threshold` x the 1st — the NAEE dynamic-skip trigger rate.
+    /// Estimated by sampling token gate vectors from the layer popularity.
+    pub fn skip_probability(&self, j: usize, threshold: f64, trials: usize, seed: u64) -> f64 {
+        let sim = &self.sims[j];
+        let mut rng = Pcg32::seeded(seed ^ 0x517b_ab1e);
+        let mut skipped = 0usize;
+        for _ in 0..trials {
+            // token gate logits: log popularity + Gumbel-ish noise
+            let mut best = (f64::NEG_INFINITY, f64::NEG_INFINITY);
+            for &p in &sim.popularity {
+                if p <= 0.0 {
+                    continue;
+                }
+                let w = p.ln() + rng.gen_normal();
+                if w > best.0 {
+                    best = (w, best.0);
+                } else if w > best.1 {
+                    best.1 = w;
+                }
+            }
+            let (w1, w2) = (best.0.exp(), best.1.exp());
+            let (g1, g2) = (w1 / (w1 + w2), w2 / (w1 + w2));
+            if g2 < threshold * g1 {
+                skipped += 1;
+            }
+        }
+        skipped as f64 / trials as f64
+    }
+}
+
+impl RoutingSim {
+    fn stats_capped(&self, tokens: usize, k: usize, trials: usize, seed: u64) -> LoadStats {
+        self.load_stats(tokens, k.max(1), trials, seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_layers_differ() {
+        let lr = LayerRouting::synthetic(8, 16, 3);
+        assert_eq!(lr.sims.len(), 8);
+        assert_ne!(lr.sims[0].popularity, lr.sims[4].popularity);
+    }
+
+    #[test]
+    fn pruning_removes_lowest_popularity() {
+        let lr = LayerRouting::synthetic(2, 8, 5);
+        let pruned = lr.pruned(0.25);
+        for (orig, after) in lr.sims.iter().zip(&pruned.sims) {
+            let removed: Vec<usize> = (0..8)
+                .filter(|&i| after.popularity[i] == 0.0)
+                .collect();
+            assert_eq!(removed.len(), 2);
+            // removed ones were the least popular
+            let min_kept = (0..8)
+                .filter(|&i| after.popularity[i] > 0.0)
+                .map(|i| orig.popularity[i])
+                .fold(f64::INFINITY, f64::min);
+            for i in removed {
+                assert!(orig.popularity[i] <= min_kept + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn skip_probability_monotone_in_threshold() {
+        let lr = LayerRouting::synthetic(1, 8, 7);
+        let lo = lr.skip_probability(0, 0.1, 400, 1);
+        let hi = lr.skip_probability(0, 0.9, 400, 1);
+        assert!(hi >= lo);
+        assert!((0.0..=1.0).contains(&lo) && (0.0..=1.0).contains(&hi));
+    }
+}

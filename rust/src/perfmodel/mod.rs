@@ -1,0 +1,22 @@
+//! Analytical H100 performance model (DESIGN.md §3 substitution).
+//!
+//! Replaces the paper's 4x/2x H100 + vLLM testbed. It reproduces the
+//! first-order mechanisms the paper's throughput numbers are made of:
+//!
+//! 1. compute ∝ sum_j k_j (expert GEMM FLOPs)            — LExI's lever
+//! 2. grouped-GEMM tile quantization + load imbalance    — why pruning
+//!    does not translate into speedups (Fig. 2)
+//! 3. decode is HBM-bandwidth-bound on (active) expert weights
+//! 4. tensor-parallel all-reduce + dispatch/combine traffic
+//!
+//! Absolute tok/s differ from the paper's testbed; the *shape* (who wins,
+//! crossovers) is what the figure harness asserts.
+
+pub mod comm;
+pub mod hardware;
+pub mod loadbalance;
+pub mod model;
+pub mod roofline;
+
+pub use hardware::Hardware;
+pub use model::{PerfBreakdown, PerfModel};

@@ -1,0 +1,81 @@
+//! Expert-importance scoring from calibration statistics.
+//!
+//! NAEE ranks experts by their contribution on a calibration set; our
+//! build step exports per-(layer, expert) router statistics from real
+//! forward passes over the training mixture (python/compile/train.py
+//! `calibration_stats`). Importance = selection frequency x mean gate
+//! mass — experts that are rarely routed to, or receive little weight
+//! when they are, score low and are pruned first.
+
+use crate::runtime::weights::CalibStats;
+
+/// Importance score per (layer, expert); higher = keep.
+pub fn expert_importance(calib: &CalibStats) -> Vec<Vec<f64>> {
+    calib
+        .sel_freq
+        .iter()
+        .zip(&calib.gate_mass)
+        .map(|(freq, mass)| {
+            freq.iter()
+                .zip(mass)
+                .map(|(&f, &m)| f as f64 * (1e-9 + m as f64))
+                .collect()
+        })
+        .collect()
+}
+
+/// Per-layer keep-masks removing the `frac` least-important experts
+/// (never pruning below one survivor).
+pub fn keep_masks(importance: &[Vec<f64>], frac: f64) -> Vec<Vec<bool>> {
+    importance
+        .iter()
+        .map(|scores| {
+            let e = scores.len();
+            let remove = ((e as f64 * frac).round() as usize).min(e - 1);
+            let mut order: Vec<usize> = (0..e).collect();
+            order.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+            let mut keep = vec![true; e];
+            for &i in order.iter().take(remove) {
+                keep[i] = false;
+            }
+            keep
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn calib(freq: Vec<Vec<f32>>, mass: Vec<Vec<f32>>) -> CalibStats {
+        CalibStats {
+            mean_prob: freq.clone(),
+            sel_freq: freq,
+            gate_mass: mass,
+        }
+    }
+
+    #[test]
+    fn importance_orders_by_usage() {
+        let c = calib(
+            vec![vec![0.9, 0.1, 0.5, 0.0]],
+            vec![vec![1.0, 1.0, 1.0, 1.0]],
+        );
+        let imp = expert_importance(&c);
+        assert!(imp[0][0] > imp[0][2] && imp[0][2] > imp[0][1] && imp[0][1] > imp[0][3]);
+    }
+
+    #[test]
+    fn keep_masks_remove_least_important() {
+        let imp = vec![vec![0.9, 0.1, 0.5, 0.3]];
+        let keep = keep_masks(&imp, 0.5);
+        assert_eq!(keep[0], vec![true, false, true, false]);
+    }
+
+    #[test]
+    fn keep_masks_never_remove_all() {
+        let imp = vec![vec![0.1, 0.2]];
+        let keep = keep_masks(&imp, 1.0);
+        assert_eq!(keep[0].iter().filter(|&&k| k).count(), 1);
+    }
+}

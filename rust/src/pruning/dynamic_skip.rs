@@ -1,0 +1,68 @@
+//! NAEE dynamic expert skipping (Lu et al. 2024, §inference-time policy).
+//!
+//! Token-adaptive: for a top-2 model, skip the 2nd expert when its gate
+//! weight is below `threshold` x the top-1 weight. The paper notes this
+//! "cannot work beyond top-k = 2"; we enforce that. Because the decision
+//! is per token it cannot be expressed through the static `k_vec` input;
+//! its *performance* effect is the expected-k model in `perfmodel`, and
+//! its *accuracy* effect is approximated by the k distribution it induces
+//! (evaluated in the ablation bench, not the main figures — matching the
+//! paper, which excludes it from Figs. 4-8).
+
+use anyhow::Result;
+
+/// Skip decision for one token given its sorted top-2 gate weights.
+pub fn should_skip(g1: f32, g2: f32, threshold: f64) -> bool {
+    (g2 as f64) < threshold * g1 as f64
+}
+
+/// Expected skip rate over a set of (g1, g2) samples.
+pub fn skip_rate(gates: &[(f32, f32)], threshold: f64) -> f64 {
+    if gates.is_empty() {
+        return 0.0;
+    }
+    gates
+        .iter()
+        .filter(|&&(g1, g2)| should_skip(g1, g2, threshold))
+        .count() as f64
+        / gates.len() as f64
+}
+
+/// Validate applicability: the paper restricts the policy to k_base = 2.
+pub fn check_applicable(k_base: usize) -> Result<()> {
+    anyhow::ensure!(
+        k_base == 2,
+        "dynamic skipping is only defined for top-2 models (got k_base={k_base})"
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn skip_threshold_semantics() {
+        assert!(should_skip(0.8, 0.1, 0.5)); // 0.1 < 0.4
+        assert!(!should_skip(0.6, 0.4, 0.5)); // 0.4 >= 0.3
+    }
+
+    #[test]
+    fn rate_monotone_in_threshold() {
+        let gates: Vec<(f32, f32)> = (0..100)
+            .map(|i| {
+                let g2 = 0.5 * (i as f32) / 100.0;
+                (1.0 - g2, g2)
+            })
+            .collect();
+        let lo = skip_rate(&gates, 0.2);
+        let hi = skip_rate(&gates, 0.8);
+        assert!(hi > lo);
+    }
+
+    #[test]
+    fn only_top2_models() {
+        assert!(check_applicable(2).is_ok());
+        assert!(check_applicable(4).is_err());
+    }
+}

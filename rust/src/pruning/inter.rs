@@ -1,0 +1,79 @@
+//! NAEE-style inter-expert pruning (Lu et al. 2024).
+//!
+//! Removes whole experts per layer. At runtime this is expressed as a
+//! -1e9 gate-bias on the pruned experts: the router can never select
+//! them, and the surviving experts absorb their tokens — exactly the
+//! mechanism behind the paper's load-imbalance observation. Memory
+//! savings are modeled in `perfmodel` (the executable keeps the weights;
+//! the *accuracy* consequence is exact).
+
+use anyhow::Result;
+
+use crate::moe::transform::PRUNE_BIAS;
+use crate::runtime::weights::CalibStats;
+
+use super::calibration::{expert_importance, keep_masks};
+
+/// Build the [L*E] gate-bias vector implementing `frac` inter-pruning.
+pub fn inter_prune_bias(calib: &CalibStats, frac: f64) -> Vec<f32> {
+    let importance = expert_importance(calib);
+    let masks = keep_masks(&importance, frac);
+    masks
+        .iter()
+        .flat_map(|layer| {
+            layer
+                .iter()
+                .map(|&keep| if keep { 0.0 } else { PRUNE_BIAS })
+        })
+        .collect()
+}
+
+/// Validate a bias vector: correct count pruned per layer, never all.
+pub fn validate_bias(bias: &[f32], n_layers: usize, n_experts: usize, frac: f64) -> Result<()> {
+    anyhow::ensure!(bias.len() == n_layers * n_experts);
+    let expect = ((n_experts as f64 * frac).round() as usize).min(n_experts - 1);
+    for l in 0..n_layers {
+        let row = &bias[l * n_experts..(l + 1) * n_experts];
+        let pruned = row.iter().filter(|&&b| b != 0.0).count();
+        anyhow::ensure!(
+            pruned == expect,
+            "layer {l}: pruned {pruned}, expected {expect}"
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn calib(l: usize, e: usize) -> CalibStats {
+        let mut freq = vec![vec![0.0f32; e]; l];
+        for (li, row) in freq.iter_mut().enumerate() {
+            for (ei, v) in row.iter_mut().enumerate() {
+                *v = ((li * 7 + ei * 13) % e) as f32 / e as f32 + 0.01;
+            }
+        }
+        CalibStats {
+            mean_prob: freq.clone(),
+            sel_freq: freq.clone(),
+            gate_mass: freq,
+        }
+    }
+
+    #[test]
+    fn bias_has_correct_prune_counts() {
+        let c = calib(4, 8);
+        for frac in [0.125, 0.25, 0.5] {
+            let bias = inter_prune_bias(&c, frac);
+            validate_bias(&bias, 4, 8, frac).unwrap();
+        }
+    }
+
+    #[test]
+    fn zero_frac_prunes_nothing() {
+        let c = calib(2, 8);
+        let bias = inter_prune_bias(&c, 0.0);
+        assert!(bias.iter().all(|&b| b == 0.0));
+    }
+}

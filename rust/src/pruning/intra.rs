@@ -1,0 +1,155 @@
+//! MoE-I²-style intra-expert pruning (Yang et al. 2024).
+//!
+//! Shrinks every expert's FFN intermediate dimension. The original uses
+//! low-rank decomposition; we implement the structured-magnitude variant:
+//! for each (layer, expert), rank FFN columns by the combined magnitude
+//! of their W1/W3 input columns and W2 output row, and zero the weakest
+//! `frac`. Zeroed columns are mathematically equivalent to removing them
+//! (SwiGLU of a zero column is zero), so the *accuracy* effect is exact
+//! while the compiled graph keeps its static shape; the FLOP effect is
+//! modeled in `perfmodel` with the reduced dim.
+
+use anyhow::Result;
+
+use crate::runtime::weights::HostParams;
+
+/// Zero the weakest `frac` FFN columns of every expert in-place.
+/// Expects stacked tensors: w1/w3 [L,E,H,F] and w2 [L,E,F,H].
+pub fn intra_prune_params(params: &mut HostParams, frac: f64) -> Result<usize> {
+    let shape = params.get("layers/w1")?.shape.clone();
+    let (l, e, h, f) = (shape[0], shape[1], shape[2], shape[3]);
+    let n_zero = ((f as f64 * frac).round() as usize).min(f - 1);
+    if n_zero == 0 {
+        return Ok(0);
+    }
+
+    // Column scores from the current weights.
+    let mut zeroed = 0usize;
+    let mut cols: Vec<(f64, usize)> = Vec::with_capacity(f);
+    for li in 0..l {
+        for ei in 0..e {
+            cols.clear();
+            {
+                let w1 = &params.get("layers/w1")?.data;
+                let w3 = &params.get("layers/w3")?.data;
+                let w2 = &params.get("layers/w2")?.data;
+                let base1 = (li * e + ei) * h * f;
+                let base2 = (li * e + ei) * f * h;
+                for fi in 0..f {
+                    let mut s = 0.0f64;
+                    for hi in 0..h {
+                        let c1 = w1[base1 + hi * f + fi] as f64;
+                        let c3 = w3[base1 + hi * f + fi] as f64;
+                        s += c1 * c1 + c3 * c3;
+                    }
+                    for hi in 0..h {
+                        let c2 = w2[base2 + fi * h + hi] as f64;
+                        s += c2 * c2;
+                    }
+                    cols.push((s, fi));
+                }
+            }
+            cols.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            let kill: Vec<usize> = cols.iter().take(n_zero).map(|&(_, fi)| fi).collect();
+            {
+                let base1 = (li * e + ei) * h * f;
+                let w1 = &mut params.get_mut("layers/w1")?.data;
+                for &fi in &kill {
+                    for hi in 0..h {
+                        w1[base1 + hi * f + fi] = 0.0;
+                    }
+                }
+                let w3 = &mut params.get_mut("layers/w3")?.data;
+                for &fi in &kill {
+                    for hi in 0..h {
+                        w3[base1 + hi * f + fi] = 0.0;
+                    }
+                }
+                let base2 = (li * e + ei) * f * h;
+                let w2 = &mut params.get_mut("layers/w2")?.data;
+                for &fi in &kill {
+                    for hi in 0..h {
+                        w2[base2 + fi * h + hi] = 0.0;
+                    }
+                }
+            }
+            zeroed += kill.len();
+        }
+    }
+    Ok(zeroed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::tensor::HostTensor;
+
+    fn toy_params(l: usize, e: usize, h: usize, f: usize) -> HostParams {
+        let mut p = HostParams::default();
+        let n1 = l * e * h * f;
+        let mk = |n: usize, seed: u64| -> Vec<f32> {
+            let mut rng = crate::util::Pcg32::seeded(seed);
+            (0..n).map(|_| rng.gen_normal() as f32).collect()
+        };
+        p.tensors.insert(
+            "layers/w1".into(),
+            HostTensor::new(vec![l, e, h, f], mk(n1, 1)),
+        );
+        p.tensors.insert(
+            "layers/w3".into(),
+            HostTensor::new(vec![l, e, h, f], mk(n1, 2)),
+        );
+        p.tensors.insert(
+            "layers/w2".into(),
+            HostTensor::new(vec![l, e, f, h], mk(n1, 3)),
+        );
+        p
+    }
+
+    #[test]
+    fn zeroes_expected_column_count() {
+        let mut p = toy_params(2, 3, 4, 8);
+        let zeroed = intra_prune_params(&mut p, 0.25).unwrap();
+        assert_eq!(zeroed, 2 * 3 * 2); // 25% of 8 = 2 per (layer, expert)
+        // verify a zeroed column is fully zero in w1, w3, w2
+        let w1 = p.get("layers/w1").unwrap();
+        let f = 8;
+        let h = 4;
+        let mut zero_cols = 0;
+        for fi in 0..f {
+            let col_zero = (0..h).all(|hi| w1.data[hi * f + fi] == 0.0);
+            if col_zero {
+                zero_cols += 1;
+            }
+        }
+        assert_eq!(zero_cols, 2);
+    }
+
+    #[test]
+    fn zero_frac_is_noop() {
+        let mut p = toy_params(1, 2, 4, 8);
+        let before = p.get("layers/w1").unwrap().data.clone();
+        assert_eq!(intra_prune_params(&mut p, 0.0).unwrap(), 0);
+        assert_eq!(p.get("layers/w1").unwrap().data, before);
+    }
+
+    #[test]
+    fn prunes_weakest_columns_first() {
+        let mut p = toy_params(1, 1, 2, 4);
+        // make column 2 tiny everywhere
+        for t in ["layers/w1", "layers/w3"] {
+            let w = &mut p.get_mut(t).unwrap().data;
+            for hi in 0..2 {
+                w[hi * 4 + 2] = 1e-6;
+            }
+        }
+        let w2 = &mut p.get_mut("layers/w2").unwrap().data;
+        for hi in 0..2 {
+            w2[2 * 2 + hi] = 1e-6;
+        }
+        intra_prune_params(&mut p, 0.25).unwrap();
+        let w1 = &p.get("layers/w1").unwrap().data;
+        assert!((0..2).all(|hi| w1[hi * 4 + 2] == 0.0));
+        assert!((0..2).any(|hi| w1[hi * 4] != 0.0));
+    }
+}

@@ -1,0 +1,13 @@
+//! Baseline post-training optimizations the paper compares against:
+//! NAEE inter-expert pruning, MoE-I² intra-expert pruning, and NAEE
+//! dynamic expert skipping. All of them (unlike LExI) depend on
+//! calibration data, consumed here as the build-time router statistics
+//! in `calib.npz`.
+
+pub mod calibration;
+pub mod dynamic_skip;
+pub mod inter;
+pub mod intra;
+
+pub use inter::inter_prune_bias;
+pub use intra::intra_prune_params;

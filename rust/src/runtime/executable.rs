@@ -1,0 +1,331 @@
+//! Compiled-model runtime: prefill / decode / moe_layer execution with
+//! device-resident weights and KV caches.
+//!
+//! §Perf L3 iteration 3 (the big one): all execution goes through
+//! `execute_b` with *caller-owned* device buffers. The crate's literal
+//! `execute` path leaks every input device buffer per call
+//! (`BufferFromHostLiteral(...).release()` without a matching delete in
+//! xla_rs.cc) — at ~20 MB of inputs per forward this OOM-killed long
+//! figure runs. With `execute_b`:
+//!   * weights upload ONCE per model (not per call),
+//!   * per-call activations are owned `PjRtBuffer`s dropped after the
+//!     call,
+//!   * the KV cache stays device-resident between decode steps.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+use super::manifest::{Manifest, ManifestModel};
+use super::tensor::HostTensor;
+use super::weights::HostParams;
+use super::Runtime;
+
+fn xerr<T>(r: xla::Result<T>) -> Result<T> {
+    r.map_err(|e| anyhow::anyhow!("{e:?}"))
+}
+
+/// KV-cache state between decode steps. Device-resident in the steady
+/// state; host literals appear only around engine-side slot splicing.
+pub enum KvState {
+    Device(xla::PjRtBuffer),
+    Host(xla::Literal),
+}
+
+impl KvState {
+    pub fn to_host(&self) -> Result<HostTensor> {
+        match self {
+            KvState::Device(buf) => HostTensor::from_literal(&xerr(buf.to_literal_sync())?),
+            KvState::Host(lit) => HostTensor::from_literal(lit),
+        }
+    }
+}
+
+/// Output of one prefill call.
+pub struct PrefillOut {
+    /// Logits [B, T, V] flattened.
+    pub logits: Vec<f32>,
+    pub kv: KvState,
+}
+
+/// Output of one decode step.
+pub struct DecodeOut {
+    /// Logits [B, V] flattened.
+    pub logits: Vec<f32>,
+    pub kv: KvState,
+}
+
+/// Compiled graphs of one model (shared across weight variants — §Perf
+/// L3 iteration 2: intra-pruning sweeps re-upload weights without
+/// recompiling the HLO).
+pub struct Executables {
+    prefill: xla::PjRtLoadedExecutable,
+    decode: xla::PjRtLoadedExecutable,
+    moe_layer: xla::PjRtLoadedExecutable,
+}
+
+/// One model's compiled executables + device-resident weights.
+pub struct ModelRuntime {
+    pub entry: ManifestModel,
+    client: xla::PjRtClient,
+    exes: std::rc::Rc<Executables>,
+    /// Host copy of (possibly edited) weights — needed for layer slicing.
+    pub params: HostParams,
+    /// Device-resident weights in execute order (uploaded once).
+    param_buffers: Vec<xla::PjRtBuffer>,
+    /// Lazily-uploaded per-layer MoE weight slices for Stage-1 probing.
+    layer_cache: RefCell<HashMap<usize, Vec<xla::PjRtBuffer>>>,
+    /// (prefill, decode) call counters for metrics.
+    pub calls: std::cell::Cell<(u64, u64)>,
+}
+
+impl ModelRuntime {
+    /// Load + compile one model from the artifacts directory with
+    /// unmodified weights.
+    pub fn load(rt: &Runtime, manifest: &Manifest, name: &str) -> Result<Self> {
+        let entry = manifest.model(name)?.clone();
+        let dir = manifest.model_dir(name);
+        let params = HostParams::load_npz(dir.join(&entry.files.params), &entry)?;
+        Self::with_params(rt, manifest, name, params)
+    }
+
+    /// Load with externally edited weights (intra-pruning etc.).
+    pub fn with_params(
+        rt: &Runtime,
+        manifest: &Manifest,
+        name: &str,
+        params: HostParams,
+    ) -> Result<Self> {
+        let entry = manifest.model(name)?.clone();
+        let dir = manifest.model_dir(name);
+        let compile = |file: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = dir.join(file);
+            let proto = xerr(xla::HloModuleProto::from_text_file(&path))
+                .with_context(|| format!("parsing {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            xerr(rt.client.compile(&comp))
+        };
+        let exes = std::rc::Rc::new(Executables {
+            prefill: compile(&entry.files.prefill)?,
+            decode: compile(&entry.files.decode)?,
+            moe_layer: compile(&entry.files.moe_layer)?,
+        });
+        let client = rt.client.clone();
+        let param_buffers = upload_params(&client, &params, &entry)?;
+        Ok(ModelRuntime {
+            entry,
+            client,
+            exes,
+            params,
+            param_buffers,
+            layer_cache: RefCell::new(HashMap::new()),
+            calls: std::cell::Cell::new((0, 0)),
+        })
+    }
+
+    /// A weight-variant view sharing this model's compiled executables
+    /// (no recompilation — used by the intra-pruning sweeps).
+    pub fn reload_with_params(&self, params: HostParams) -> Result<Self> {
+        let param_buffers = upload_params(&self.client, &params, &self.entry)?;
+        Ok(ModelRuntime {
+            entry: self.entry.clone(),
+            client: self.client.clone(),
+            exes: self.exes.clone(),
+            params,
+            param_buffers,
+            layer_cache: RefCell::new(HashMap::new()),
+            calls: std::cell::Cell::new((0, 0)),
+        })
+    }
+
+    /// Upload a host KV tensor as a device-resident cache state (used by
+    /// the engine after slot splicing so subsequent decode steps stay
+    /// upload-free).
+    pub fn upload_kv(&self, t: &HostTensor) -> Result<KvState> {
+        Ok(KvState::Device(self.up_f32(&t.shape, &t.data)?))
+    }
+
+    /// Re-upload parameters after an in-place weight edit.
+    pub fn refresh_params(&mut self) -> Result<()> {
+        self.param_buffers = upload_params(&self.client, &self.params, &self.entry)?;
+        self.layer_cache.borrow_mut().clear();
+        Ok(())
+    }
+
+    // ----------------------------------------------------------------
+    // upload helpers
+    // ----------------------------------------------------------------
+
+    fn up_f32(&self, dims: &[usize], data: &[f32]) -> Result<xla::PjRtBuffer> {
+        xerr(self.client.buffer_from_host_buffer(data, dims, None))
+    }
+
+    fn up_i32(&self, dims: &[usize], data: &[i32]) -> Result<xla::PjRtBuffer> {
+        xerr(self.client.buffer_from_host_buffer(data, dims, None))
+    }
+
+    /// Execute with param buffers + borrowed extra buffers; unpack
+    /// `n_outputs` (handles both untupled and single-tuple returns).
+    fn exec(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        extra: Vec<&xla::PjRtBuffer>,
+        n_outputs: usize,
+    ) -> Result<Vec<OutBuf>> {
+        let mut args: Vec<&xla::PjRtBuffer> = self.param_buffers.iter().collect();
+        args.extend(extra);
+        let mut outs = xerr(exe.execute_b::<&xla::PjRtBuffer>(&args))?;
+        let bufs = std::mem::take(&mut outs[0]);
+        if bufs.len() == n_outputs {
+            Ok(bufs.into_iter().map(OutBuf::Device).collect())
+        } else {
+            // return_tuple=True graphs come back as one tuple buffer
+            anyhow::ensure!(bufs.len() == 1, "unexpected output arity {}", bufs.len());
+            let mut lit = xerr(bufs[0].to_literal_sync())?;
+            let parts = xerr(lit.decompose_tuple())?;
+            anyhow::ensure!(
+                parts.len() == n_outputs,
+                "expected {n_outputs} outputs, got {}",
+                parts.len()
+            );
+            Ok(parts.into_iter().map(OutBuf::Host).collect())
+        }
+    }
+
+    /// Prefill: tokens [B*T] (row-major [B, T]), per-layer k, gate bias
+    /// [L*E]. Returns full logits + the KV cache.
+    pub fn prefill(&self, tokens: &[i32], k_vec: &[i32], gate_bias: &[f32]) -> Result<PrefillOut> {
+        let e = &self.entry;
+        anyhow::ensure!(tokens.len() == e.batch * e.prefill_len);
+        anyhow::ensure!(k_vec.len() == e.n_layers);
+        anyhow::ensure!(gate_bias.len() == e.n_layers * e.n_experts);
+        let b_tokens = self.up_i32(&[e.batch, e.prefill_len], tokens)?;
+        let b_k = self.up_i32(&[e.n_layers], k_vec)?;
+        let b_bias = self.up_f32(&[e.n_layers, e.n_experts], gate_bias)?;
+        let mut outs = self.exec(&self.exes.prefill, vec![&b_tokens, &b_k, &b_bias], 2)?;
+        let kv = outs.pop().unwrap().into_kv();
+        let logits = outs.pop().unwrap().to_f32()?;
+        let (c0, c1) = self.calls.get();
+        self.calls.set((c0 + 1, c1));
+        Ok(PrefillOut { logits, kv })
+    }
+
+    /// One decode step over all batch slots. The cache flows through as
+    /// a device buffer — no host copies in the steady-state loop.
+    pub fn decode(
+        &self,
+        kv: &KvState,
+        tokens: &[i32],
+        pos: &[i32],
+        k_vec: &[i32],
+        gate_bias: &[f32],
+    ) -> Result<DecodeOut> {
+        let e = &self.entry;
+        anyhow::ensure!(tokens.len() == e.batch && pos.len() == e.batch);
+        let kv_uploaded; // keep alive when the input was a host literal
+        let kv_ref: &xla::PjRtBuffer = match kv {
+            KvState::Device(buf) => buf,
+            KvState::Host(lit) => {
+                kv_uploaded = xerr(self.client.buffer_from_host_literal(None, lit))?;
+                &kv_uploaded
+            }
+        };
+        let b_tokens = self.up_i32(&[e.batch], tokens)?;
+        let b_pos = self.up_i32(&[e.batch], pos)?;
+        let b_k = self.up_i32(&[e.n_layers], k_vec)?;
+        let b_bias = self.up_f32(&[e.n_layers, e.n_experts], gate_bias)?;
+        let mut outs = self.exec(
+            &self.exes.decode,
+            vec![kv_ref, &b_tokens, &b_pos, &b_k, &b_bias],
+            2,
+        )?;
+        let kv = outs.pop().unwrap().into_kv();
+        let logits = outs.pop().unwrap().to_f32()?;
+        let (c0, c1) = self.calls.get();
+        self.calls.set((c0, c1 + 1));
+        Ok(DecodeOut { logits, kv })
+    }
+
+    /// Stage-1 probe: run one MoE layer on host-provided activations.
+    /// x is [profile_tokens * hidden]; returns y of the same size. The
+    /// layer's weight slices are uploaded once and cached.
+    pub fn moe_layer(&self, layer: usize, x: &[f32], k: i32) -> Result<Vec<f32>> {
+        let e = &self.entry;
+        anyhow::ensure!(layer < e.n_layers);
+        anyhow::ensure!(x.len() == e.profile_tokens * e.hidden);
+        {
+            let mut cache = self.layer_cache.borrow_mut();
+            if !cache.contains_key(&layer) {
+                let (gate, w1, w3, w2) = self.params.moe_layer_slices(layer)?;
+                let bias = HostTensor::zeros(vec![e.n_experts]);
+                cache.insert(
+                    layer,
+                    vec![
+                        self.up_f32(&gate.shape, &gate.data)?,
+                        self.up_f32(&bias.shape, &bias.data)?,
+                        self.up_f32(&w1.shape, &w1.data)?,
+                        self.up_f32(&w3.shape, &w3.data)?,
+                        self.up_f32(&w2.shape, &w2.data)?,
+                    ],
+                );
+            }
+        }
+        let b_x = self.up_f32(&[e.profile_tokens, e.hidden], x)?;
+        let b_k = self.up_i32(&[], &[k])?;
+        let cache = self.layer_cache.borrow();
+        let lw = &cache[&layer];
+        let args: Vec<&xla::PjRtBuffer> =
+            vec![&b_x, &lw[0], &lw[1], &lw[2], &lw[3], &lw[4], &b_k];
+        let mut outs = xerr(self.exes.moe_layer.execute_b::<&xla::PjRtBuffer>(&args))?;
+        let bufs = std::mem::take(&mut outs[0]);
+        let lit = if bufs.len() == 1 {
+            let mut l = xerr(bufs[0].to_literal_sync())?;
+            match l.decompose_tuple() {
+                Ok(mut parts) if !parts.is_empty() => parts.remove(0),
+                _ => l,
+            }
+        } else {
+            xerr(bufs[0].to_literal_sync())?
+        };
+        Ok(xerr(lit.to_vec::<f32>())?)
+    }
+}
+
+/// Upload all parameters as device buffers in manifest execute order.
+fn upload_params(
+    client: &xla::PjRtClient,
+    params: &HostParams,
+    entry: &ManifestModel,
+) -> Result<Vec<xla::PjRtBuffer>> {
+    entry
+        .param_order
+        .iter()
+        .map(|n| {
+            let t = params.get(n)?;
+            xerr(client.buffer_from_host_buffer(&t.data, &t.shape, None))
+        })
+        .collect()
+}
+
+/// One graph output: device buffer (untupled) or host literal (tuple).
+enum OutBuf {
+    Device(xla::PjRtBuffer),
+    Host(xla::Literal),
+}
+
+impl OutBuf {
+    fn into_kv(self) -> KvState {
+        match self {
+            OutBuf::Device(b) => KvState::Device(b),
+            OutBuf::Host(l) => KvState::Host(l),
+        }
+    }
+
+    fn to_f32(&self) -> Result<Vec<f32>> {
+        match self {
+            OutBuf::Device(b) => Ok(xerr(xerr(b.to_literal_sync())?.to_vec::<f32>())?),
+            OutBuf::Host(l) => Ok(xerr(l.to_vec::<f32>())?),
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! `artifacts/manifest.json` schema — the contract between `aot.py` and
+//! the Rust runtime (graph shapes, parameter ordering, file layout).
+//! Parsed with the in-crate JSON module (no serde offline).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{parse_file, Json};
+
+#[derive(Clone, Debug)]
+pub struct ManifestFiles {
+    pub params: String,
+    pub prefill: String,
+    pub decode: String,
+    pub moe_layer: String,
+    pub calib: String,
+    pub train_log: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct ManifestModel {
+    pub name: String,
+    pub n_layers: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub hidden: usize,
+    pub ffn: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub prefill_len: usize,
+    pub batch: usize,
+    pub is_vlm: bool,
+    pub profile_tokens: usize,
+    pub files: ManifestFiles,
+    /// Flattened param names in jax traversal order — execute() input order.
+    pub param_order: Vec<String>,
+    pub param_shapes: HashMap<String, Vec<usize>>,
+}
+
+impl ManifestModel {
+    fn from_json(name: &str, v: &Json) -> Result<Self> {
+        let files = v.get("files")?;
+        let mut param_shapes = HashMap::new();
+        for (k, shape) in v.get("param_shapes")?.as_obj()? {
+            param_shapes.insert(k.clone(), shape.usize_vec()?);
+        }
+        Ok(ManifestModel {
+            name: name.to_string(),
+            n_layers: v.get("n_layers")?.as_usize()?,
+            n_experts: v.get("n_experts")?.as_usize()?,
+            top_k: v.get("top_k")?.as_usize()?,
+            hidden: v.get("hidden")?.as_usize()?,
+            ffn: v.get("ffn")?.as_usize()?,
+            n_heads: v.get("n_heads")?.as_usize()?,
+            head_dim: v.get("head_dim")?.as_usize()?,
+            vocab: v.get("vocab")?.as_usize()?,
+            max_seq: v.get("max_seq")?.as_usize()?,
+            prefill_len: v.get("prefill_len")?.as_usize()?,
+            batch: v.get("batch")?.as_usize()?,
+            is_vlm: v.get("is_vlm")?.as_bool()?,
+            profile_tokens: v.get("profile_tokens")?.as_usize()?,
+            files: ManifestFiles {
+                params: files.get("params")?.as_str()?.into(),
+                prefill: files.get("prefill")?.as_str()?.into(),
+                decode: files.get("decode")?.as_str()?.into(),
+                moe_layer: files.get("moe_layer")?.as_str()?.into(),
+                calib: files.get("calib")?.as_str()?.into(),
+                train_log: files.get("train_log")?.as_str()?.into(),
+            },
+            param_order: v.get("param_order")?.str_vec()?,
+            param_shapes,
+        })
+    }
+
+    /// KV cache element count: [L, 2, B, maxT, nh, hd].
+    pub fn kv_len(&self) -> usize {
+        self.n_layers * 2 * self.batch * self.max_seq * self.n_heads * self.head_dim
+    }
+
+    pub fn kv_dims(&self) -> [usize; 6] {
+        [
+            self.n_layers,
+            2,
+            self.batch,
+            self.max_seq,
+            self.n_heads,
+            self.head_dim,
+        ]
+    }
+}
+
+/// Special-token layout shared with python/compile/configs.py.
+#[derive(Clone, Debug)]
+pub struct VocabLayout {
+    pub size: usize,
+    pub pad: i32,
+    pub bos: i32,
+    pub eos: i32,
+    pub key: i32,
+    pub qry: i32,
+    pub fact: i32,
+    pub ask: i32,
+    pub ans: i32,
+    pub sep: i32,
+    pub img: i32,
+    pub val_base: i32,
+    pub n_vals: i32,
+    pub text_base: i32,
+    pub n_text: i32,
+    pub img_base: i32,
+    pub n_img: i32,
+}
+
+impl VocabLayout {
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(VocabLayout {
+            size: v.get("size")?.as_usize()?,
+            pad: v.get("pad")?.as_i32()?,
+            bos: v.get("bos")?.as_i32()?,
+            eos: v.get("eos")?.as_i32()?,
+            key: v.get("key")?.as_i32()?,
+            qry: v.get("qry")?.as_i32()?,
+            fact: v.get("fact")?.as_i32()?,
+            ask: v.get("ask")?.as_i32()?,
+            ans: v.get("ans")?.as_i32()?,
+            sep: v.get("sep")?.as_i32()?,
+            img: v.get("img")?.as_i32()?,
+            val_base: v.get("val_base")?.as_i32()?,
+            n_vals: v.get("n_vals")?.as_i32()?,
+            text_base: v.get("text_base")?.as_i32()?,
+            n_text: v.get("n_text")?.as_i32()?,
+            img_base: v.get("img_base")?.as_i32()?,
+            n_img: v.get("n_img")?.as_i32()?,
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub models: HashMap<String, ManifestModel>,
+    pub vocab: VocabLayout,
+    pub corpora_dir: String,
+    pub root: PathBuf,
+}
+
+impl Manifest {
+    pub fn load<P: AsRef<Path>>(artifacts_dir: P) -> Result<Self> {
+        let root = artifacts_dir.as_ref().to_path_buf();
+        let path = root.join("manifest.json");
+        let v = parse_file(&path)
+            .with_context(|| format!("loading {path:?} — run `make artifacts` first"))?;
+        let mut models = HashMap::new();
+        for (name, entry) in v.get("models")?.as_obj()? {
+            models.insert(name.clone(), ManifestModel::from_json(name, entry)?);
+        }
+        Ok(Manifest {
+            models,
+            vocab: VocabLayout::from_json(v.get("vocab")?)?,
+            corpora_dir: v.get("corpora_dir")?.as_str()?.into(),
+            root,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ManifestModel> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("model '{name}' not in manifest"))
+    }
+
+    pub fn model_dir(&self, name: &str) -> PathBuf {
+        self.root.join(name)
+    }
+
+    pub fn corpora_path(&self, file: &str) -> PathBuf {
+        self.root.join(&self.corpora_dir).join(file)
+    }
+
+    /// Default artifacts location: $LEXI_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("LEXI_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}

@@ -1,0 +1,35 @@
+//! PJRT runtime bridge: loads the AOT artifacts (HLO text + npz weights)
+//! and executes them on the request path. Python is never involved here.
+//!
+//! Flow: `manifest.json` -> [`manifest::Manifest`] -> [`ModelRuntime`]
+//! (compile prefill/decode/moe_layer, upload weights once as device
+//! buffers) -> `prefill`/`decode`/`moe_layer` calls from the engine, the
+//! LExI profiler, and the eval harness.
+
+pub mod executable;
+pub mod manifest;
+pub mod tensor;
+pub mod weights;
+
+pub use executable::{KvState, ModelRuntime};
+pub use manifest::{Manifest, ManifestModel};
+pub use tensor::HostTensor;
+pub use weights::HostParams;
+
+use anyhow::Result;
+
+/// Shared PJRT client (CPU). One per process.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}

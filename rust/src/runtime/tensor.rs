@@ -1,0 +1,103 @@
+//! Minimal host tensor (f32/i32 + shape) used for weight edits, layer
+//! slicing, and literal marshalling. Deliberately tiny — the heavy math
+//! lives in the XLA executables.
+
+use anyhow::Result;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        HostTensor {
+            shape,
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Slice index `j` of the leading axis (e.g. one layer of a stacked
+    /// [L, ...] parameter).
+    pub fn slice_leading(&self, j: usize) -> HostTensor {
+        assert!(j < self.shape[0], "index {j} out of {}", self.shape[0]);
+        let inner: usize = self.shape[1..].iter().product();
+        HostTensor {
+            shape: self.shape[1..].to_vec(),
+            data: self.data[j * inner..(j + 1) * inner].to_vec(),
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt()
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(self.data.as_ptr() as *const u8, self.data.len() * 4)
+        };
+        xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, &self.shape, bytes)
+            .map_err(|e| anyhow::anyhow!("{e:?}"))
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit
+            .array_shape()
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?
+            .dims()
+            .iter()
+            .map(|&d| d as usize)
+            .collect();
+        let data = lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        Ok(HostTensor::new(shape, data))
+    }
+}
+
+/// i32 literal from a slice + shape (tokens, k_vec, positions).
+pub fn i32_literal(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    assert_eq!(shape.iter().product::<usize>(), data.len());
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, shape, bytes)
+        .map_err(|e| anyhow::anyhow!("{e:?}"))
+}
+
+/// Scalar i32 literal.
+pub fn i32_scalar(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slice_leading_extracts_layer() {
+        let t = HostTensor::new(vec![3, 2], vec![0., 1., 2., 3., 4., 5.]);
+        let s = t.slice_leading(1);
+        assert_eq!(s.shape, vec![2]);
+        assert_eq!(s.data, vec![2., 3.]);
+    }
+
+    #[test]
+    fn fro_norm() {
+        let t = HostTensor::new(vec![2], vec![3.0, 4.0]);
+        assert!((t.fro_norm() - 5.0).abs() < 1e-12);
+    }
+}

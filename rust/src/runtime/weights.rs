@@ -1,0 +1,137 @@
+//! Weight loading + in-memory editing.
+//!
+//! `params.npz` (written by `train.save_params_npz`) is read into
+//! [`HostParams`]; transforms (intra-pruning's FFN-column zeroing) edit it
+//! in memory; [`super::ModelRuntime`] then uploads each array once as a
+//! device buffer. One npz on disk serves every configuration.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+use xla::FromRawBytes;
+
+use super::manifest::ManifestModel;
+use super::tensor::HostTensor;
+
+#[derive(Clone, Debug, Default)]
+pub struct HostParams {
+    pub tensors: HashMap<String, HostTensor>,
+}
+
+impl HostParams {
+    pub fn load_npz<P: AsRef<Path>>(path: P, entry: &ManifestModel) -> Result<Self> {
+        let arrays = xla::Literal::read_npz(path.as_ref(), &())
+            .map_err(|e| anyhow::anyhow!("reading npz: {e:?}"))?;
+        let mut tensors = HashMap::new();
+        for (name, lit) in arrays {
+            tensors.insert(name, HostTensor::from_literal(&lit)?);
+        }
+        // validate against the manifest
+        for name in &entry.param_order {
+            let t = tensors
+                .get(name)
+                .with_context(|| format!("param '{name}' missing from npz"))?;
+            let want = &entry.param_shapes[name];
+            anyhow::ensure!(
+                &t.shape == want,
+                "param '{name}' shape {:?} != manifest {:?}",
+                t.shape,
+                want
+            );
+        }
+        Ok(HostParams { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&HostTensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("param '{name}' not loaded"))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut HostTensor> {
+        self.tensors
+            .get_mut(name)
+            .ok_or_else(|| anyhow::anyhow!("param '{name}' not loaded"))
+    }
+
+    /// Literals in manifest execute() order.
+    pub fn literals_in_order(&self, entry: &ManifestModel) -> Result<Vec<xla::Literal>> {
+        entry
+            .param_order
+            .iter()
+            .map(|n| self.get(n)?.to_literal())
+            .collect()
+    }
+
+    /// One layer's MoE weights (for the Stage-1 moe_layer graph):
+    /// (gate [H,E], w1 [E,H,F], w3 [E,H,F], w2 [E,F,H]).
+    pub fn moe_layer_slices(
+        &self,
+        layer: usize,
+    ) -> Result<(HostTensor, HostTensor, HostTensor, HostTensor)> {
+        Ok((
+            self.get("layers/gate")?.slice_leading(layer),
+            self.get("layers/w1")?.slice_leading(layer),
+            self.get("layers/w3")?.slice_leading(layer),
+            self.get("layers/w2")?.slice_leading(layer),
+        ))
+    }
+}
+
+/// Calibration statistics exported at build time (calib.npz): the
+/// data-dependent signal the NAEE-style baselines consume (and LExI does
+/// not need).
+#[derive(Clone, Debug)]
+pub struct CalibStats {
+    /// Mean full-softmax router probability per (layer, expert).
+    pub mean_prob: Vec<Vec<f32>>,
+    /// Top-k selection frequency per (layer, expert).
+    pub sel_freq: Vec<Vec<f32>>,
+    /// Total gate mass per (layer, expert).
+    pub gate_mass: Vec<Vec<f32>>,
+}
+
+impl CalibStats {
+    pub fn load_npz<P: AsRef<Path>>(path: P, n_layers: usize, n_experts: usize) -> Result<Self> {
+        let arrays = xla::Literal::read_npz(path.as_ref(), &())
+            .map_err(|e| anyhow::anyhow!("reading calib npz: {e:?}"))?;
+        let mut by_name: HashMap<String, Vec<f32>> = HashMap::new();
+        for (name, lit) in arrays {
+            by_name.insert(name, lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?);
+        }
+        let reshape = |name: &str| -> Result<Vec<Vec<f32>>> {
+            let flat = by_name
+                .get(name)
+                .ok_or_else(|| anyhow::anyhow!("calib '{name}' missing"))?;
+            anyhow::ensure!(flat.len() == n_layers * n_experts);
+            Ok(flat
+                .chunks(n_experts)
+                .map(|c| c.to_vec())
+                .collect())
+        };
+        Ok(CalibStats {
+            mean_prob: reshape("mean_prob")?,
+            sel_freq: reshape("sel_freq")?,
+            gate_mass: reshape("gate_mass")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_params_accessors() {
+        let mut p = HostParams::default();
+        p.tensors.insert(
+            "layers/gate".into(),
+            HostTensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]),
+        );
+        assert!(p.get("layers/gate").is_ok());
+        assert!(p.get("nope").is_err());
+        p.get_mut("layers/gate").unwrap().data[0] = 9.0;
+        assert_eq!(p.get("layers/gate").unwrap().data[0], 9.0);
+    }
+}

@@ -1,0 +1,104 @@
+//! Tiny benchmark harness (no criterion offline — see Cargo.toml).
+//! Auto-calibrates iteration counts, reports mean / p50 / p95 wall time.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} {:>12} {:>12} {:>12}  ({} iters)",
+            self.name,
+            fmt_dur(self.mean),
+            fmt_dur(self.p50),
+            fmt_dur(self.p95),
+            self.iters
+        )
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Run `f` repeatedly for ~`budget` (default 2 s), after a warmup.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    bench_with_budget(name, Duration::from_secs(2), &mut f)
+}
+
+pub fn bench_with_budget<F: FnMut()>(
+    name: &str,
+    budget: Duration,
+    f: &mut F,
+) -> BenchResult {
+    // Warmup + iteration estimation.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().max(Duration::from_nanos(50));
+    let target = (budget.as_nanos() / once.as_nanos()).clamp(3, 10_000) as usize;
+
+    let mut samples = Vec::with_capacity(target);
+    for _ in 0..target {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    samples.sort();
+    let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+    let p50 = samples[samples.len() / 2];
+    let p95 = samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)];
+    let r = BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean,
+        p50,
+        p95,
+    };
+    println!("{r}");
+    r
+}
+
+/// Header line for bench tables.
+pub fn header(title: &str) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<44} {:>12} {:>12} {:>12}",
+        "benchmark", "mean", "p50", "p95"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut x = 0u64;
+        let r = bench_with_budget(
+            "noop",
+            Duration::from_millis(20),
+            &mut || {
+                x = x.wrapping_add(1);
+            },
+        );
+        assert!(r.iters >= 3);
+        assert!(r.p95 >= r.p50);
+    }
+}

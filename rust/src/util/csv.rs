@@ -1,0 +1,60 @@
+//! Minimal CSV writer for figure series (results/*.csv).
+
+use std::io::Write;
+use std::path::Path;
+
+pub struct CsvWriter {
+    file: std::fs::File,
+    cols: usize,
+}
+
+impl CsvWriter {
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> anyhow::Result<Self> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut file = std::fs::File::create(path)?;
+        writeln!(file, "{}", header.join(","))?;
+        Ok(CsvWriter {
+            file,
+            cols: header.len(),
+        })
+    }
+
+    pub fn row(&mut self, fields: &[String]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            fields.len() == self.cols,
+            "row has {} fields, header has {}",
+            fields.len(),
+            self.cols
+        );
+        writeln!(self.file, "{}", fields.join(","))?;
+        Ok(())
+    }
+}
+
+/// Convenience macro: csv_row!(w, model, 1.5, "x") stringifies each field.
+#[macro_export]
+macro_rules! csv_row {
+    ($w:expr, $($f:expr),+ $(,)?) => {
+        $w.row(&[$(format!("{}", $f)),+])
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let dir = std::env::temp_dir().join("lexi_csv_test");
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            w.row(&["1".into(), "2".into()]).unwrap();
+            assert!(w.row(&["1".into()]).is_err());
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2\n");
+    }
+}

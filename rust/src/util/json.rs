@@ -1,0 +1,409 @@
+//! Minimal JSON parser/emitter (the build environment has no serde_json;
+//! see Cargo.toml). Supports the full JSON grammar we exchange with the
+//! Python build step: objects, arrays, strings with escapes, numbers,
+//! bools, null.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    // ---------------- accessors ----------------
+    pub fn get(&self, key: &str) -> Result<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key).with_context(|| format!("missing key '{key}'")),
+            _ => bail!("not an object (looking up '{key}')"),
+        }
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Json::Num(n) => Ok(*n),
+            _ => bail!("not a number: {self:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let n = self.as_f64()?;
+        anyhow::ensure!(n >= 0.0 && n.fract() == 0.0, "not a usize: {n}");
+        Ok(n as usize)
+    }
+
+    pub fn as_i32(&self) -> Result<i32> {
+        let n = self.as_f64()?;
+        anyhow::ensure!(n.fract() == 0.0, "not an integer: {n}");
+        Ok(n as i32)
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Json::Str(s) => Ok(s),
+            _ => bail!("not a string: {self:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            _ => bail!("not a bool: {self:?}"),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&[Json]> {
+        match self {
+            Json::Arr(a) => Ok(a),
+            _ => bail!("not an array: {self:?}"),
+        }
+    }
+
+    pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Ok(m),
+            _ => bail!("not an object: {self:?}"),
+        }
+    }
+
+    pub fn usize_vec(&self) -> Result<Vec<usize>> {
+        self.as_arr()?.iter().map(|v| v.as_usize()).collect()
+    }
+
+    pub fn f64_vec(&self) -> Result<Vec<f64>> {
+        self.as_arr()?.iter().map(|v| v.as_f64()).collect()
+    }
+
+    pub fn str_vec(&self) -> Result<Vec<String>> {
+        self.as_arr()?
+            .iter()
+            .map(|v| v.as_str().map(|s| s.to_string()))
+            .collect()
+    }
+
+    // ---------------- constructors ----------------
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn from_f64s(xs: &[f64]) -> Json {
+        Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
+    }
+
+    pub fn from_u32s(xs: &[u32]) -> Json {
+        Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+    }
+
+    // ---------------- emission ----------------
+    pub fn to_string_pretty(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s, 0, true);
+        s
+    }
+
+    pub fn to_string_compact(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s, 0, false);
+        s
+    }
+
+    fn write(&self, out: &mut String, indent: usize, pretty: bool) {
+        let pad = |out: &mut String, n: usize| {
+            if pretty {
+                out.push('\n');
+                for _ in 0..n {
+                    out.push(' ');
+                }
+            }
+        };
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 1e15 {
+                    let _ = write!(out, "{}", *n as i64);
+                } else {
+                    let _ = write!(out, "{n}");
+                }
+            }
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    pad(out, indent + 1);
+                    v.write(out, indent + 1, pretty);
+                }
+                if !a.is_empty() {
+                    pad(out, indent);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    pad(out, indent + 1);
+                    write_escaped(out, k);
+                    out.push(':');
+                    if pretty {
+                        out.push(' ');
+                    }
+                    v.write(out, indent + 1, pretty);
+                }
+                if !m.is_empty() {
+                    pad(out, indent);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+// ---------------- parsing ----------------
+
+pub fn parse(text: &str) -> Result<Json> {
+    let bytes = text.as_bytes();
+    let mut pos = 0;
+    let v = parse_value(bytes, &mut pos)?;
+    skip_ws(bytes, &mut pos);
+    anyhow::ensure!(pos == bytes.len(), "trailing characters at byte {pos}");
+    Ok(v)
+}
+
+pub fn parse_file(path: &std::path::Path) -> Result<Json> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+    parse(&text).with_context(|| format!("parsing {path:?}"))
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json> {
+    skip_ws(b, pos);
+    anyhow::ensure!(*pos < b.len(), "unexpected end of input");
+    match b[*pos] {
+        b'{' => parse_obj(b, pos),
+        b'[' => parse_arr(b, pos),
+        b'"' => Ok(Json::Str(parse_string(b, pos)?)),
+        b't' => {
+            expect(b, pos, "true")?;
+            Ok(Json::Bool(true))
+        }
+        b'f' => {
+            expect(b, pos, "false")?;
+            Ok(Json::Bool(false))
+        }
+        b'n' => {
+            expect(b, pos, "null")?;
+            Ok(Json::Null)
+        }
+        _ => parse_number(b, pos),
+    }
+}
+
+fn expect(b: &[u8], pos: &mut usize, word: &str) -> Result<()> {
+    anyhow::ensure!(
+        b[*pos..].starts_with(word.as_bytes()),
+        "expected '{word}' at byte {pos}"
+    );
+    *pos += word.len();
+    Ok(())
+}
+
+fn parse_obj(b: &[u8], pos: &mut usize) -> Result<Json> {
+    *pos += 1; // '{'
+    let mut m = BTreeMap::new();
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == b'}' {
+        *pos += 1;
+        return Ok(Json::Obj(m));
+    }
+    loop {
+        skip_ws(b, pos);
+        let key = parse_string(b, pos)?;
+        skip_ws(b, pos);
+        anyhow::ensure!(*pos < b.len() && b[*pos] == b':', "expected ':' at {pos}");
+        *pos += 1;
+        let val = parse_value(b, pos)?;
+        m.insert(key, val);
+        skip_ws(b, pos);
+        anyhow::ensure!(*pos < b.len(), "unterminated object");
+        match b[*pos] {
+            b',' => *pos += 1,
+            b'}' => {
+                *pos += 1;
+                return Ok(Json::Obj(m));
+            }
+            c => bail!("expected ',' or '}}' at byte {pos}, got '{}'", c as char),
+        }
+    }
+}
+
+fn parse_arr(b: &[u8], pos: &mut usize) -> Result<Json> {
+    *pos += 1; // '['
+    let mut a = Vec::new();
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == b']' {
+        *pos += 1;
+        return Ok(Json::Arr(a));
+    }
+    loop {
+        a.push(parse_value(b, pos)?);
+        skip_ws(b, pos);
+        anyhow::ensure!(*pos < b.len(), "unterminated array");
+        match b[*pos] {
+            b',' => *pos += 1,
+            b']' => {
+                *pos += 1;
+                return Ok(Json::Arr(a));
+            }
+            c => bail!("expected ',' or ']' at byte {pos}, got '{}'", c as char),
+        }
+    }
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String> {
+    anyhow::ensure!(*pos < b.len() && b[*pos] == b'"', "expected string at {pos}");
+    *pos += 1;
+    let mut s = String::new();
+    while *pos < b.len() {
+        match b[*pos] {
+            b'"' => {
+                *pos += 1;
+                return Ok(s);
+            }
+            b'\\' => {
+                *pos += 1;
+                anyhow::ensure!(*pos < b.len(), "unterminated escape");
+                match b[*pos] {
+                    b'"' => s.push('"'),
+                    b'\\' => s.push('\\'),
+                    b'/' => s.push('/'),
+                    b'n' => s.push('\n'),
+                    b't' => s.push('\t'),
+                    b'r' => s.push('\r'),
+                    b'b' => s.push('\u{8}'),
+                    b'f' => s.push('\u{c}'),
+                    b'u' => {
+                        anyhow::ensure!(*pos + 4 < b.len(), "bad \\u escape");
+                        let hex = std::str::from_utf8(&b[*pos + 1..*pos + 5])?;
+                        let code = u32::from_str_radix(hex, 16)?;
+                        s.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        *pos += 4;
+                    }
+                    c => bail!("bad escape '\\{}'", c as char),
+                }
+                *pos += 1;
+            }
+            _ => {
+                // copy a full UTF-8 sequence
+                let start = *pos;
+                let len = utf8_len(b[*pos]);
+                *pos += len;
+                s.push_str(std::str::from_utf8(&b[start..*pos])?);
+            }
+        }
+    }
+    bail!("unterminated string")
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0x00..=0x7f => 1,
+        0xc0..=0xdf => 2,
+        0xe0..=0xef => 3,
+        _ => 4,
+    }
+}
+
+fn parse_number(b: &[u8], pos: &mut usize) -> Result<Json> {
+    let start = *pos;
+    while *pos < b.len()
+        && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+    {
+        *pos += 1;
+    }
+    let text = std::str::from_utf8(&b[start..*pos])?;
+    Ok(Json::Num(text.parse::<f64>().with_context(|| {
+        format!("bad number '{text}' at byte {start}")
+    })?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_nested() {
+        let text = r#"{"a": [1, 2.5, -3e2], "b": {"c": "x\ny", "d": true, "e": null}}"#;
+        let v = parse(text).unwrap();
+        assert_eq!(v.get("a").unwrap().f64_vec().unwrap(), vec![1.0, 2.5, -300.0]);
+        assert_eq!(v.get("b").unwrap().get("c").unwrap().as_str().unwrap(), "x\ny");
+        let re = parse(&v.to_string_pretty()).unwrap();
+        assert_eq!(v, re);
+        let re2 = parse(&v.to_string_compact()).unwrap();
+        assert_eq!(v, re2);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("nul").is_err());
+        assert!(parse("{} x").is_err());
+    }
+
+    #[test]
+    fn unicode_strings() {
+        let v = parse(r#""café — ok""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "café — ok");
+    }
+
+    #[test]
+    fn integers_emit_without_decimal() {
+        assert_eq!(Json::Num(42.0).to_string_compact(), "42");
+        assert_eq!(Json::Num(1.5).to_string_compact(), "1.5");
+    }
+}

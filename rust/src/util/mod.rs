@@ -1,0 +1,10 @@
+//! Small self-contained utilities: deterministic RNG, statistics, CSV.
+
+pub mod bench;
+pub mod csv;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Pcg32;
+pub use stats::{mean, percentile, std_dev};

@@ -1,0 +1,150 @@
+//! PCG32: small, fast, reproducible RNG (O'Neill 2014). Dependency-free so
+//! every experiment in the repo is bit-reproducible from a seed.
+
+#[derive(Clone, Debug)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg32 {
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg32 {
+            state: 0,
+            inc: (stream << 1) | 1,
+        };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0xda3e_39cb_94b9_5bdb)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Uniform in [0, n) without modulo bias (Lemire's method).
+    #[inline]
+    pub fn gen_range(&mut self, n: u32) -> u32 {
+        assert!(n > 0);
+        let mut x = self.next_u32();
+        let mut m = (x as u64) * (n as u64);
+        let mut l = m as u32;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u32();
+                m = (x as u64) * (n as u64);
+                l = m as u32;
+            }
+        }
+        (m >> 32) as u32
+    }
+
+    #[inline]
+    pub fn gen_usize(&mut self, n: usize) -> usize {
+        self.gen_range(n as u32) as usize
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn gen_f64(&mut self) -> f64 {
+        (self.next_u32() as f64) / (u32::MAX as f64 + 1.0)
+    }
+
+    /// Standard normal via Box-Muller (used for Alg. 1's X ~ N(0,1)).
+    pub fn gen_normal(&mut self) -> f64 {
+        let u1 = (self.gen_f64()).max(1e-12);
+        let u2 = self.gen_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Fill a buffer with N(0,1) f32 samples.
+    pub fn fill_normal_f32(&mut self, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = self.gen_normal() as f32;
+        }
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_usize(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample an index from unnormalized non-negative weights.
+    pub fn sample_weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        let mut r = self.gen_f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            r -= w;
+            if r <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Exponential variate with the given rate (Poisson inter-arrivals).
+    pub fn gen_exp(&mut self, rate: f64) -> f64 {
+        -(1.0 - self.gen_f64()).ln() / rate
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Pcg32::seeded(42);
+        let mut b = Pcg32::seeded(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn range_bounds() {
+        let mut r = Pcg32::seeded(1);
+        for _ in 0..1000 {
+            assert!(r.gen_range(7) < 7);
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg32::seeded(2);
+        let n = 20000;
+        let xs: Vec<f64> = (0..n).map(|_| r.gen_normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn weighted_sampling_prefers_heavy() {
+        let mut r = Pcg32::seeded(3);
+        let w = [0.0, 0.9, 0.1];
+        let mut counts = [0usize; 3];
+        for _ in 0..2000 {
+            counts[r.sample_weighted(&w)] += 1;
+        }
+        assert_eq!(counts[0], 0);
+        assert!(counts[1] > counts[2] * 4);
+    }
+}

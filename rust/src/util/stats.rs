@@ -1,0 +1,101 @@
+//! Scalar statistics helpers shared by metrics and the perf model.
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Linear-interpolated percentile (p in [0, 100]); input need not be sorted.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (s.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        s[lo] + (rank - lo as f64) * (s[hi] - s[lo])
+    }
+}
+
+/// Frobenius norm of the difference of two equal-length vectors.
+pub fn frobenius_diff(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| {
+            let d = (*x - *y) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// Token-level F1 between predicted and gold token multisets (Qasper metric).
+pub fn token_f1(pred: &[i32], gold: &[i32]) -> f64 {
+    if pred.is_empty() || gold.is_empty() {
+        return if pred.is_empty() && gold.is_empty() { 1.0 } else { 0.0 };
+    }
+    let mut gold_counts = std::collections::HashMap::new();
+    for t in gold {
+        *gold_counts.entry(*t).or_insert(0i32) += 1;
+    }
+    let mut overlap = 0;
+    for t in pred {
+        if let Some(c) = gold_counts.get_mut(t) {
+            if *c > 0 {
+                *c -= 1;
+                overlap += 1;
+            }
+        }
+    }
+    if overlap == 0 {
+        return 0.0;
+    }
+    let precision = overlap as f64 / pred.len() as f64;
+    let recall = overlap as f64 / gold.len() as f64;
+    2.0 * precision * recall / (precision + recall)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn f1_exact_match() {
+        assert!((token_f1(&[1, 2], &[1, 2]) - 1.0).abs() < 1e-9);
+        assert_eq!(token_f1(&[3, 4], &[1, 2]), 0.0);
+        let half = token_f1(&[1, 9], &[1, 2]);
+        assert!((half - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn frobenius_zero_for_equal() {
+        let a = [1.0f32, -2.0, 3.0];
+        assert_eq!(frobenius_diff(&a, &a), 0.0);
+        let b = [1.0f32, -2.0, 4.0];
+        assert!((frobenius_diff(&a, &b) - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,280 @@
+//! Property-based tests (hand-rolled randomized harness; proptest is
+//! unavailable offline). Each property runs against a few hundred random
+//! cases from a seeded PCG stream — failures print the offending seed.
+
+use lexi_moe::engine::kv_manager::KvBlockManager;
+use lexi_moe::lexi::evolution::{evolve, exact_dp, EvolutionParams};
+use lexi_moe::lexi::SensitivityTable;
+use lexi_moe::moe::allocation::{Allocation, Bounds};
+use lexi_moe::moe::routing::RoutingSim;
+use lexi_moe::util::json;
+use lexi_moe::util::stats::token_f1;
+use lexi_moe::util::Pcg32;
+
+/// Run `f` on `cases` seeded random cases.
+fn property<F: FnMut(u64, &mut Pcg32)>(name: &str, cases: u64, mut f: F) {
+    for seed in 0..cases {
+        let mut rng = Pcg32::seeded(seed * 7919 + 13);
+        f(seed, &mut rng);
+    }
+    println!("property '{name}' held over {cases} cases");
+}
+
+// ---------------------------------------------------------------------
+// Allocation / GA invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_random_feasible_always_satisfies() {
+    property("random_feasible_satisfies", 300, |seed, rng| {
+        let n_layers = 1 + rng.gen_usize(48);
+        let k_max = 1 + rng.gen_range(8);
+        let bounds = Bounds::paper(k_max);
+        let lo = n_layers as u32;
+        let hi = k_max * n_layers as u32;
+        let budget = lo + rng.gen_range(hi - lo + 1);
+        let a = Allocation::random_feasible(n_layers, bounds, budget, rng)
+            .unwrap_or_else(|| panic!("seed {seed}: feasible budget rejected"));
+        assert!(a.satisfies(bounds, budget), "seed {seed}");
+    });
+}
+
+#[test]
+fn prop_projection_repairs_and_is_idempotent() {
+    property("projection", 300, |seed, rng| {
+        let n_layers = 2 + rng.gen_usize(40);
+        let k_max = 1 + rng.gen_range(8);
+        let bounds = Bounds::paper(k_max);
+        let budget = n_layers as u32 + rng.gen_range((k_max - 1) * n_layers as u32 + 1);
+        // arbitrary garbage vector (possibly wildly out of bounds)
+        let mut a = Allocation::new(
+            (0..n_layers).map(|_| rng.gen_range(k_max * 3 + 1)).collect(),
+        );
+        a.project(bounds, budget, rng);
+        assert!(a.satisfies(bounds, budget), "seed {seed}: {a:?}");
+        let before = a.clone();
+        a.project(bounds, budget, rng);
+        assert_eq!(a, before, "seed {seed}: projection not idempotent");
+    });
+}
+
+#[test]
+fn prop_ga_never_returns_infeasible_and_beats_init() {
+    property("ga_feasible_and_improving", 25, |seed, rng| {
+        let n_layers = 4 + rng.gen_usize(28);
+        let k_base = 2 + rng.gen_range(7);
+        let table = SensitivityTable::synthetic(
+            "p",
+            n_layers,
+            k_base,
+            |x| 0.5 + 2.0 * x,
+            seed,
+        );
+        let bounds = Bounds::paper(k_base);
+        let budget = n_layers as u32 + rng.gen_range((k_base - 1) * n_layers as u32 + 1);
+        let params = EvolutionParams {
+            population: 16,
+            generations: 80,
+            seed,
+            ..Default::default()
+        };
+        let res = evolve(&table, budget, bounds, &params).unwrap();
+        assert!(res.best.satisfies(bounds, budget), "seed {seed}");
+        // monotone convergence curve
+        for w in res.history.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12, "seed {seed}: fitness regressed");
+        }
+        // uniform-feasible baseline is never better than the GA best by >5%
+        if budget % n_layers as u32 == 0 {
+            let uni = Allocation::uniform(n_layers, budget / n_layers as u32);
+            assert!(
+                res.best_fitness <= table.fitness(&uni.k) + 1e-9,
+                "seed {seed}: GA worse than uniform"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_ga_matches_dp_within_tolerance() {
+    property("ga_vs_dp", 10, |seed, _rng| {
+        let table = SensitivityTable::synthetic("p", 12, 6, |x| 1.0 + 3.0 * (1.0 - x), seed);
+        let bounds = Bounds::paper(6);
+        let budget = 40;
+        let params = EvolutionParams {
+            generations: 1500,
+            seed,
+            ..Default::default()
+        };
+        let ga = evolve(&table, budget, bounds, &params).unwrap();
+        let dp = exact_dp(&table, budget, bounds).unwrap();
+        let opt = table.fitness(&dp.k);
+        assert!(
+            ga.best_fitness <= opt * 1.10 + 1e-9,
+            "seed {seed}: GA {} vs optimum {}",
+            ga.best_fitness,
+            opt
+        );
+    });
+}
+
+// ---------------------------------------------------------------------
+// Routing invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_routing_loads_conserve_mass() {
+    property("routing_mass", 60, |seed, rng| {
+        let e = 2 + rng.gen_usize(62);
+        let k = 1 + rng.gen_usize(e.min(8));
+        let tokens = 1 + rng.gen_usize(256);
+        let sim = RoutingSim::new(e, rng.gen_f64() * 2.0, rng);
+        let loads = sim.sample_loads(tokens, k, rng);
+        assert_eq!(
+            loads.iter().sum::<u64>(),
+            (tokens * k) as u64,
+            "seed {seed}"
+        );
+        // popularity stays a distribution after pruning
+        let mut keep = vec![true; e];
+        keep[rng.gen_usize(e)] = e > 1;
+        let pruned = sim.pruned(&keep);
+        let z: f64 = pruned.popularity.iter().sum();
+        assert!((z - 1.0).abs() < 1e-9, "seed {seed}: mass {z}");
+    });
+}
+
+#[test]
+fn prop_imbalance_at_least_one() {
+    property("imbalance_ge_1", 40, |seed, rng| {
+        let e = 2 + rng.gen_usize(30);
+        let sim = RoutingSim::new(e, rng.gen_f64() * 3.0, rng);
+        let s = sim.load_stats(64 + rng.gen_usize(256), 1 + rng.gen_usize(4), 4, seed);
+        assert!(s.imbalance >= 1.0 - 1e-9, "seed {seed}: {}", s.imbalance);
+        assert!(s.expected_active_experts <= e as f64 + 1e-9, "seed {seed}");
+    });
+}
+
+// ---------------------------------------------------------------------
+// KV allocator invariants under random op sequences
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_kv_manager_never_leaks() {
+    property("kv_no_leak", 120, |seed, rng| {
+        let total = 4 + rng.gen_usize(60);
+        let block = 1 + rng.gen_usize(31);
+        let mut m = KvBlockManager::new(total, block);
+        let mut live: Vec<u64> = Vec::new();
+        let mut next_id = 0u64;
+        for _ in 0..200 {
+            match rng.gen_range(4) {
+                0 => {
+                    let demand = 1 + rng.gen_usize(block * 6);
+                    if m.admit(next_id, demand).is_ok() {
+                        live.push(next_id);
+                    }
+                    next_id += 1;
+                }
+                1 => {
+                    if !live.is_empty() {
+                        let idx = rng.gen_usize(live.len());
+                        let id = live.swap_remove(idx);
+                        m.release(id);
+                    }
+                }
+                2 => {
+                    if !live.is_empty() {
+                        let id = live[rng.gen_usize(live.len())];
+                        let _ = m.extend(id, 1 + rng.gen_usize(block * 8));
+                    }
+                }
+                _ => {
+                    // double admit of a live id must fail
+                    if !live.is_empty() {
+                        let id = live[rng.gen_usize(live.len())];
+                        assert!(m.admit(id, 1).is_err(), "seed {seed}: double admit");
+                    }
+                }
+            }
+            m.check_invariant()
+                .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        }
+        for id in live {
+            m.release(id);
+        }
+        m.check_invariant().unwrap();
+        assert_eq!(m.free_blocks(), total, "seed {seed}: blocks lost");
+    });
+}
+
+// ---------------------------------------------------------------------
+// Scoring + JSON fuzz
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_token_f1_bounds_and_symmetry() {
+    property("token_f1", 200, |seed, rng| {
+        let n = rng.gen_usize(6);
+        let m = rng.gen_usize(6);
+        let a: Vec<i32> = (0..n).map(|_| rng.gen_range(8) as i32).collect();
+        let b: Vec<i32> = (0..m).map(|_| rng.gen_range(8) as i32).collect();
+        let f = token_f1(&a, &b);
+        assert!((0.0..=1.0).contains(&f), "seed {seed}: f1 {f}");
+        assert!(
+            (token_f1(&a, &b) - token_f1(&b, &a)).abs() < 1e-12,
+            "seed {seed}: asymmetric"
+        );
+        assert!((token_f1(&a, &a) - if a.is_empty() { 1.0 } else { 1.0 }).abs() < 1e-12);
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn random_json(rng: &mut Pcg32, depth: usize) -> json::Json {
+        match if depth > 2 { rng.gen_range(4) } else { rng.gen_range(6) } {
+            0 => json::Json::Null,
+            1 => json::Json::Bool(rng.gen_f64() < 0.5),
+            2 => json::Json::Num((rng.gen_f64() * 2e6).round() / 4.0 - 1e5),
+            3 => json::Json::Str(format!("s{}-\"q\"\n{}", rng.next_u32(), rng.gen_range(100))),
+            4 => json::Json::Arr((0..rng.gen_usize(5)).map(|_| random_json(rng, depth + 1)).collect()),
+            _ => json::Json::Obj(
+                (0..rng.gen_usize(5))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth + 1)))
+                    .collect(),
+            ),
+        }
+    }
+    property("json_roundtrip", 200, |seed, rng| {
+        let v = random_json(rng, 0);
+        let pretty = json::parse(&v.to_string_pretty())
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(v, pretty, "seed {seed}");
+        let compact = json::parse(&v.to_string_compact()).unwrap();
+        assert_eq!(v, compact, "seed {seed}");
+    });
+}
+
+// ---------------------------------------------------------------------
+// Sensitivity-table invariants feeding Stage 2
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_fitness_additive_and_monotone() {
+    property("fitness_monotone", 60, |seed, rng| {
+        let l = 2 + rng.gen_usize(30);
+        let kb = 2 + rng.gen_range(7);
+        let t = SensitivityTable::synthetic("p", l, kb, |x| 0.2 + x, seed);
+        // raising any single layer's k never increases fitness
+        let mut alloc: Vec<u32> = (0..l).map(|_| 1 + rng.gen_range(kb)).collect();
+        let base = t.fitness(&alloc);
+        let j = rng.gen_usize(l);
+        if alloc[j] < kb {
+            alloc[j] += 1;
+            assert!(
+                t.fitness(&alloc) <= base + 1e-9,
+                "seed {seed}: fitness rose with more experts"
+            );
+        }
+    });
+}

@@ -1,0 +1,319 @@
+//! End-to-end tests over the REAL artifacts (three-layer composition):
+//! HLO compile, weight upload, prefill/decode consistency, Stage-1
+//! monotonicity on trained weights, eval + engine smoke.
+//!
+//! Skipped (with a notice) when `make artifacts` has not run.
+
+use lexi_moe::config::experiment::ExperimentConfig;
+use lexi_moe::config::serving::ServingConfig;
+use lexi_moe::engine::{Engine, SamplingParams};
+use lexi_moe::eval::{EvalSuite, RunConfig};
+use lexi_moe::lexi::sensitivity::{profile_model, verify_table};
+use lexi_moe::runtime::{Manifest, ModelRuntime, Runtime};
+use lexi_moe::util::Pcg32;
+
+const MODEL: &str = "deepseek-vl2-tiny"; // smallest analogue -> fastest
+
+fn setup() -> Option<(Runtime, Manifest)> {
+    let dir = Manifest::default_dir();
+    match Manifest::load(&dir) {
+        Ok(m) => Some((Runtime::cpu().expect("pjrt cpu"), m)),
+        Err(_) => {
+            eprintln!("SKIP runtime_e2e: no artifacts at {dir:?} (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+#[test]
+fn prefill_decode_consistency() {
+    let Some((rt, manifest)) = setup() else { return };
+    let model = ModelRuntime::load(&rt, &manifest, MODEL).unwrap();
+    let e = model.entry.clone();
+    let rc = RunConfig::baseline(&e);
+
+    // random prompt in the text range
+    let mut rng = Pcg32::seeded(1);
+    let plen = 24usize;
+    let mut tokens = vec![0i32; e.batch * e.prefill_len];
+    for b in 0..e.batch {
+        for p in 0..plen {
+            tokens[b * e.prefill_len + p] = 42 + rng.gen_range(128) as i32;
+        }
+    }
+    let full = model.prefill(&tokens, &rc.k_vec, &rc.gate_bias).unwrap();
+
+    // teacher-forced decode from a shorter prefill must reproduce the
+    // prefill logits at each step (cache correctness across the stack)
+    let cut = plen - 2;
+    let mut short = tokens.clone();
+    for b in 0..e.batch {
+        for p in cut..e.prefill_len {
+            short[b * e.prefill_len + p] = 0;
+        }
+    }
+    let pre = model.prefill(&short, &rc.k_vec, &rc.gate_bias).unwrap();
+    // zero cache rows at positions >= cut (prefill wrote pad-token k/v)
+    let mut kv = pre.kv.to_host().unwrap();
+    let row = e.n_heads * e.head_dim;
+    for lane in 0..e.n_layers * 2 {
+        for b in 0..e.batch {
+            let base = ((lane * e.batch) + b) * e.max_seq * row;
+            for t in cut..e.max_seq {
+                kv.data[base + t * row..base + (t + 1) * row].fill(0.0);
+            }
+        }
+    }
+    let mut kv_state = lexi_moe::runtime::executable::KvState::Host(kv.to_literal().unwrap());
+
+    for step in 0..2 {
+        let toks: Vec<i32> = (0..e.batch)
+            .map(|b| tokens[b * e.prefill_len + cut + step])
+            .collect();
+        let pos = vec![(cut + step) as i32; e.batch];
+        let out = model
+            .decode(&kv_state, &toks, &pos, &rc.k_vec, &rc.gate_bias)
+            .unwrap();
+        for b in 0..e.batch {
+            let want =
+                &full.logits[(b * e.prefill_len + cut + step) * e.vocab..][..e.vocab];
+            let got = &out.logits[b * e.vocab..(b + 1) * e.vocab];
+            for (g, w) in got.iter().zip(want) {
+                assert!(
+                    (g - w).abs() < 2e-3 * w.abs().max(1.0),
+                    "slot {b} step {step}: {g} vs {w}"
+                );
+            }
+        }
+        kv_state = out.kv;
+    }
+}
+
+#[test]
+fn stage1_monotone_on_trained_weights() {
+    let Some((rt, manifest)) = setup() else { return };
+    let model = ModelRuntime::load(&rt, &manifest, MODEL).unwrap();
+    let cfg = ExperimentConfig {
+        sensitivity_iters: 2,
+        ..Default::default()
+    };
+    let table = profile_model(&model, &cfg, None).unwrap();
+    verify_table(&table).unwrap();
+    // every layer must show a real deviation at k=1 (trained routers are
+    // not degenerate)
+    for (j, row) in table.loss.iter().enumerate() {
+        assert!(row[0] > 0.0, "layer {j} has zero k=1 deviation");
+    }
+}
+
+#[test]
+fn runtime_k_vector_changes_outputs() {
+    let Some((rt, manifest)) = setup() else { return };
+    let model = ModelRuntime::load(&rt, &manifest, MODEL).unwrap();
+    let e = model.entry.clone();
+    let mut rng = Pcg32::seeded(3);
+    let tokens: Vec<i32> = (0..e.batch * e.prefill_len)
+        .map(|_| 42 + rng.gen_range(128) as i32)
+        .collect();
+    let base_rc = RunConfig::baseline(&e);
+    let a = model.prefill(&tokens, &base_rc.k_vec, &base_rc.gate_bias).unwrap();
+    let mut k1 = base_rc.k_vec.clone();
+    for k in k1.iter_mut() {
+        *k = 1;
+    }
+    let b = model.prefill(&tokens, &k1, &base_rc.gate_bias).unwrap();
+    let diff: f64 = a
+        .logits
+        .iter()
+        .zip(&b.logits)
+        .map(|(x, y)| ((x - y) as f64).abs())
+        .sum();
+    assert!(diff > 1.0, "k vector had no effect (diff {diff})");
+    // determinism: same inputs -> same outputs
+    let c = model.prefill(&tokens, &base_rc.k_vec, &base_rc.gate_bias).unwrap();
+    assert_eq!(a.logits, c.logits);
+}
+
+#[test]
+fn gate_bias_prunes_experts_at_runtime() {
+    let Some((rt, manifest)) = setup() else { return };
+    let model = ModelRuntime::load(&rt, &manifest, MODEL).unwrap();
+    let e = model.entry.clone();
+    let mut rng = Pcg32::seeded(4);
+    let tokens: Vec<i32> = (0..e.batch * e.prefill_len)
+        .map(|_| 42 + rng.gen_range(128) as i32)
+        .collect();
+    let rc = RunConfig::baseline(&e);
+    let base = model.prefill(&tokens, &rc.k_vec, &rc.gate_bias).unwrap();
+    // prune half the experts everywhere
+    let mut bias = rc.gate_bias.clone();
+    for l in 0..e.n_layers {
+        for ex in 0..e.n_experts / 2 {
+            bias[l * e.n_experts + ex] = -1e9;
+        }
+    }
+    let pruned = model.prefill(&tokens, &rc.k_vec, &bias).unwrap();
+    assert!(pruned.logits.iter().all(|v| v.is_finite()));
+    assert_ne!(base.logits, pruned.logits);
+}
+
+#[test]
+fn engine_serves_mixed_lengths_with_continuous_batching() {
+    let Some((rt, manifest)) = setup() else { return };
+    let model = ModelRuntime::load(&rt, &manifest, MODEL).unwrap();
+    let e = model.entry.clone();
+    let scfg = ServingConfig {
+        batch: e.batch,
+        max_seq: e.max_seq,
+        prefill_len: e.prefill_len,
+        ..Default::default()
+    };
+    let rc = RunConfig::baseline(&e);
+    let mut engine = Engine::new(&model, scfg, rc.k_vec, rc.gate_bias).unwrap();
+    let mut rng = Pcg32::seeded(5);
+    let n = e.batch + 4; // force a second admission wave
+    for i in 0..n {
+        let plen = 8 + rng.gen_usize(32);
+        let prompt: Vec<i32> = (0..plen).map(|_| 42 + rng.gen_range(128) as i32).collect();
+        engine
+            .submit(
+                prompt,
+                SamplingParams {
+                    max_new_tokens: 2 + (i % 5),
+                    stop_on_eos: false,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+    }
+    let outs = engine.run_until_complete().unwrap();
+    assert_eq!(outs.len(), n);
+    for o in &outs {
+        assert!(!o.tokens.is_empty());
+        assert!(o.e2e_s >= o.ttft_s);
+    }
+    let s = engine.metrics.summary();
+    assert!(s.prefill_calls >= 2, "expected a second admission wave");
+    assert!(s.total_tok_s > 0.0);
+}
+
+#[test]
+fn eval_suite_and_perplexity_sane() {
+    let Some((rt, manifest)) = setup() else { return };
+    let suite = EvalSuite::load(&manifest).unwrap();
+    assert_eq!(suite.probe_tasks.len(), 9, "paper uses nine LM-Eval tasks");
+    assert_eq!(suite.vlm_tasks.len(), 3);
+    assert_eq!(suite.ppl_corpora.len(), 3);
+
+    let model = ModelRuntime::load(&rt, &manifest, MODEL).unwrap();
+    let rc = RunConfig::baseline(&model.entry);
+    let ppl =
+        lexi_moe::eval::perplexity::perplexity(&model, &suite, "c4", &rc).unwrap();
+    // trained model must beat the uniform bound (= vocab size)
+    assert!(ppl < 256.0, "ppl {ppl} not better than random");
+    assert!(ppl > 1.0);
+}
+
+#[test]
+fn intra_pruned_weights_change_outputs_but_stay_finite() {
+    let Some((rt, manifest)) = setup() else { return };
+    let entry = manifest.model(MODEL).unwrap().clone();
+    let mut params = lexi_moe::runtime::weights::HostParams::load_npz(
+        manifest.model_dir(MODEL).join(&entry.files.params),
+        &entry,
+    )
+    .unwrap();
+    let zeroed = lexi_moe::pruning::intra_prune_params(&mut params, 0.25).unwrap();
+    assert!(zeroed > 0);
+    let model = ModelRuntime::with_params(&rt, &manifest, MODEL, params).unwrap();
+    let rc = RunConfig::baseline(&model.entry);
+    let mut rng = Pcg32::seeded(6);
+    let tokens: Vec<i32> = (0..entry.batch * entry.prefill_len)
+        .map(|_| 42 + rng.gen_range(128) as i32)
+        .collect();
+    let out = model.prefill(&tokens, &rc.k_vec, &rc.gate_bias).unwrap();
+    assert!(out.logits.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn engine_truncates_at_kv_capacity() {
+    let Some((rt, manifest)) = setup() else { return };
+    let model = ModelRuntime::load(&rt, &manifest, MODEL).unwrap();
+    let e = model.entry.clone();
+    let scfg = ServingConfig {
+        batch: e.batch,
+        max_seq: e.max_seq,
+        prefill_len: e.prefill_len,
+        ..Default::default()
+    };
+    let rc = RunConfig::baseline(&e);
+    let mut engine = Engine::new(&model, scfg, rc.k_vec, rc.gate_bias).unwrap();
+    // prompt nearly filling the cache + unbounded generation demand
+    let prompt: Vec<i32> = (0..e.prefill_len).map(|i| 42 + (i as i32 % 128)).collect();
+    engine
+        .submit(
+            prompt,
+            SamplingParams {
+                max_new_tokens: 10_000,
+                stop_on_eos: false,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    let outs = engine.run_until_complete().unwrap();
+    assert_eq!(outs.len(), 1);
+    assert_eq!(
+        outs[0].finish,
+        lexi_moe::engine::FinishReason::CapacityTruncated
+    );
+    // generated exactly up to the cache boundary
+    assert!(outs[0].tokens.len() <= e.max_seq - e.prefill_len + 1);
+}
+
+#[test]
+fn engine_rejects_when_queue_full() {
+    let Some((rt, manifest)) = setup() else { return };
+    let model = ModelRuntime::load(&rt, &manifest, MODEL).unwrap();
+    let e = model.entry.clone();
+    let scfg = ServingConfig {
+        batch: e.batch,
+        max_seq: e.max_seq,
+        prefill_len: e.prefill_len,
+        queue_cap: 2,
+        ..Default::default()
+    };
+    let rc = RunConfig::baseline(&e);
+    let mut engine = Engine::new(&model, scfg, rc.k_vec, rc.gate_bias).unwrap();
+    engine.submit(vec![1, 50, 51], SamplingParams::default()).unwrap();
+    engine.submit(vec![1, 50, 52], SamplingParams::default()).unwrap();
+    assert!(engine
+        .submit(vec![1, 50, 53], SamplingParams::default())
+        .is_err());
+}
+
+#[test]
+fn lexi_allocation_beats_uniform_fitness_on_real_table() {
+    let Some((rt, manifest)) = setup() else { return };
+    let model = ModelRuntime::load(&rt, &manifest, MODEL).unwrap();
+    let cfg = ExperimentConfig {
+        sensitivity_iters: 2,
+        ..Default::default()
+    };
+    let table = profile_model(&model, &cfg, None).unwrap();
+    let l = table.n_layers() as u32;
+    let budget = l * table.k_base * 2 / 3;
+    let res = lexi_moe::lexi::pipeline::stage2(&table, budget, &cfg).unwrap();
+    // uniform at the same (floored) budget
+    let uni = lexi_moe::moe::allocation::Allocation::uniform(
+        l as usize,
+        (budget as f64 / l as f64).floor() as u32,
+    );
+    let uni_fit = table.fitness(&uni.k) - (budget - uni.budget()) as f64 * 0.0;
+    assert!(
+        res.best_fitness <= table.fitness(&uni.k) + 1e-9,
+        "GA {} vs uniform {} (uniform uses {} fewer experts)",
+        res.best_fitness,
+        uni_fit,
+        budget - uni.budget()
+    );
+}

@@ -1,80 +1,28 @@
-//! END-TO-END VALIDATION DRIVER (DESIGN.md §7).
+//! SERVING BENCHMARK DRIVER (DESIGN.md §7, now over `server::`).
 //!
-//! Loads a trained analogue through the full stack (manifest -> HLO
-//! compile -> weight upload -> continuous-batching engine), replays a
-//! Poisson request trace, and reports latency/throughput for:
+//! Replays every workload scenario (Poisson, bursty MMPP, diurnal ramp,
+//! closed loop) through the multi-replica front-end and reports, per
+//! transform:
 //!
-//!   * baseline        (uniform pretrained top-k)
-//!   * LExI            (Stage-1 + Stage-2 allocation at ~65% budget)
-//!   * inter-pruning   (50% experts removed, NAEE-style)
+//!   * baseline      (uniform pretrained top-k, fixed)
+//!   * lexi-fixed    (static Stage-2 allocation at the mid-ladder budget)
+//!   * lexi-ladder   (adaptive quality ladder: budget follows load)
+//!   * inter-prune   (50% experts removed, NAEE-style)
 //!
-//! Measured CPU numbers prove all layers compose; the H100 *modeled*
-//! throughput column shows the paper-scale effect of each transform.
-//! Results are recorded in EXPERIMENTS.md.
+//! Replicas run in virtual time against perf-model-calibrated service
+//! models, so the sweep needs no artifacts and is bit-reproducible from
+//! the seed. When a measured Stage-1 sensitivity table is cached in the
+//! artifacts dir it is used for the ladder's allocations; otherwise a
+//! synthetic depth profile stands in. Results land in
+//! results/bench_serve_<model>_<scenario>.{csv,json}.
 //!
 //!     cargo run --release --example serve_benchmark -- [model] [n_requests]
 
 use anyhow::Result;
-use lexi_moe::config::experiment::ExperimentConfig;
 use lexi_moe::config::model::spec;
-use lexi_moe::config::serving::ServingConfig;
-use lexi_moe::engine::{Engine, MetricsSummary, SamplingParams};
-use lexi_moe::eval::{EvalSuite, RunConfig};
-use lexi_moe::lexi::pipeline::{stage1, stage2, table_path};
-use lexi_moe::moe::transform::Transform;
-use lexi_moe::perfmodel::PerfModel;
-use lexi_moe::runtime::weights::CalibStats;
-use lexi_moe::runtime::{Manifest, ModelRuntime, Runtime};
-use lexi_moe::util::Pcg32;
-
-fn run_trace(
-    model: &ModelRuntime,
-    rc: &RunConfig,
-    n_requests: usize,
-    seed: u64,
-    suite: &EvalSuite,
-) -> Result<MetricsSummary> {
-    let entry = &model.entry;
-    let scfg = ServingConfig {
-        batch: entry.batch,
-        max_seq: entry.max_seq,
-        prefill_len: entry.prefill_len,
-        ..Default::default()
-    };
-    let mut engine = Engine::new(model, scfg, rc.k_vec.clone(), rc.gate_bias.clone())?;
-    let mut rng = Pcg32::seeded(seed);
-    let seqs = suite.ppl_seqs("c4")?;
-    // Poisson-ish arrivals: enqueue in bursts whose sizes follow the
-    // inter-arrival distribution (the single-threaded engine drains
-    // between bursts, so burst structure is what matters).
-    let mut submitted = 0usize;
-    engine.metrics.start();
-    while submitted < n_requests {
-        let burst = 1 + (rng.gen_exp(0.6) as usize).min(5);
-        for _ in 0..burst.min(n_requests - submitted) {
-            let row = seqs.row(submitted % seqs.n_rows());
-            let plen = 24 + rng.gen_usize(40);
-            engine.submit(
-                row[..plen.min(row.len())].to_vec(),
-                SamplingParams {
-                    max_new_tokens: 8 + rng.gen_usize(8),
-                    stop_on_eos: false,
-                    ..Default::default()
-                },
-            )?;
-            submitted += 1;
-        }
-        // drain a few steps between bursts (interleaves prefill + decode)
-        for _ in 0..4 {
-            engine.step()?;
-        }
-    }
-    while !engine.idle() {
-        engine.step()?;
-    }
-    engine.metrics.finish();
-    Ok(engine.metrics.summary())
-}
+use lexi_moe::config::server::{ScenarioKind, ServerConfig};
+use lexi_moe::runtime::Manifest;
+use lexi_moe::server::{self, report};
 
 fn main() -> Result<()> {
     let model_name = std::env::args()
@@ -84,63 +32,38 @@ fn main() -> Result<()> {
         .nth(2)
         .map(|s| s.parse())
         .transpose()?
-        .unwrap_or(24);
+        .unwrap_or(512);
 
-    let rt = Runtime::cpu()?;
-    let manifest = Manifest::load(Manifest::default_dir())?;
-    let suite = EvalSuite::load(&manifest)?;
     let mspec = spec(&model_name)?;
-    let cfg = ExperimentConfig::default();
+    let cfg_base = ServerConfig {
+        n_requests,
+        ..Default::default()
+    };
+    let artifacts = Manifest::default_dir();
+    let artifacts_opt = artifacts.exists().then_some(artifacts.as_path());
+    let out = std::path::PathBuf::from("results");
 
-    println!("=== serve_benchmark: {model_name}, {n_requests} requests ===\n");
-
-    // Build the three configurations.
-    let model = ModelRuntime::load(&rt, &manifest, &model_name)?;
-    let entry = model.entry.clone();
-    let calib = CalibStats::load_npz(
-        manifest.model_dir(&model_name).join(&entry.files.calib),
-        entry.n_layers,
-        entry.n_experts,
-    )?;
-    let table = stage1(
-        &model,
-        &cfg,
-        Some(&table_path(&manifest.root, &model_name)),
-        false,
-    )?;
-    let budget = (mspec.baseline_budget() as f64 * 0.65).round() as u32;
-    let lexi_alloc = stage2(&table, budget.max(mspec.n_layers as u32), &cfg)?.best;
-
-    let configs: Vec<(String, Transform)> = vec![
-        ("baseline".into(), Transform::Baseline),
-        (
-            format!("lexi B={}", lexi_alloc.budget()),
-            Transform::Lexi {
-                allocation: lexi_alloc,
-            },
-        ),
-        ("inter-prune 50%".into(), Transform::InterPrune { frac: 0.5 }),
-    ];
-
-    let pm = PerfModel::new(mspec.clone(), cfg.seed).with_calibration(&calib.sel_freq);
     println!(
-        "{:<18} {:>12} {:>12} {:>12} {:>12} {:>14}",
-        "config", "tok/s (CPU)", "p50 e2e ms", "p99 e2e ms", "slot util", "tok/s (H100*)"
+        "=== serve_benchmark: {model_name}, {} replicas x {} slots, policy {}, \
+         {n_requests} requests/scenario ===\n",
+        cfg_base.replicas,
+        cfg_base.slots_per_replica,
+        cfg_base.policy.label()
     );
-    for (label, t) in &configs {
-        let rc = RunConfig::for_transform(&entry, t, Some(&calib))?;
-        let s = run_trace(&model, &rc, n_requests, 42, &suite)?;
-        let modeled = pm.throughput(t, 16, 1024, 512).throughput_tok_s;
-        println!(
-            "{:<18} {:>12.1} {:>12.1} {:>12.1} {:>11.0}% {:>14.1}",
-            label,
-            s.total_tok_s,
-            s.e2e_p50_s * 1e3,
-            s.e2e_p99_s * 1e3,
-            s.slot_utilization * 100.0,
-            modeled
-        );
+    report::print_header();
+    for kind in ScenarioKind::all() {
+        let cfg = ServerConfig {
+            scenario: kind,
+            ..cfg_base.clone()
+        };
+        let reports = server::bench_serve(&mspec, &cfg, artifacts_opt, &out)?;
+        println!("-- {kind:?} --");
+        report::print_comparison(&reports);
     }
-    println!("\n* analytical H100 model at paper scale (DESIGN.md §3); CPU numbers are\n  the real measured three-layer stack on this machine's single core.");
+    println!(
+        "reports in {}/; service times are the analytical H100 model (DESIGN.md §3) —\n\
+         run `lexi serve` against compiled artifacts for the measured single-engine stack.",
+        out.display()
+    );
     Ok(())
 }

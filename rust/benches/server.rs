@@ -1,0 +1,76 @@
+//! Serving front-end benchmarks: scheduler admission throughput, router
+//! dispatch, and full cluster replay on a 10k-request synthetic trace.
+//! (Perf target: full 10k-request cluster replay well under 1 s — the
+//! front-end must never be the bottleneck next to model execution.)
+
+use lexi_moe::config::server::{PolicyKind, ScenarioKind};
+use lexi_moe::moe::allocation::Allocation;
+use lexi_moe::server::ladder::QualityLadder;
+use lexi_moe::server::replica::ServiceModel;
+use lexi_moe::server::router::Cluster;
+use lexi_moe::server::scheduler::{EdfQueue, QueuedRequest};
+use lexi_moe::server::workload::Scenario;
+use lexi_moe::util::bench::{bench, header};
+use lexi_moe::util::Pcg32;
+
+const N: usize = 10_000;
+
+fn synthetic_queue_load(rng: &mut Pcg32) -> Vec<QueuedRequest> {
+    (0..N as u64)
+        .map(|id| QueuedRequest {
+            id,
+            class: rng.gen_usize(4),
+            priority: rng.gen_usize(3) as u8,
+            arrival_s: id as f64 * 1e-3,
+            deadline_s: id as f64 * 1e-3 + 0.5 + rng.gen_f64(),
+            prompt_len: 64 + rng.gen_usize(512),
+            new_tokens: 16 + rng.gen_usize(256),
+        })
+        .collect()
+}
+
+fn main() {
+    let mut rng = Pcg32::seeded(0xbe9c);
+    let reqs = synthetic_queue_load(&mut rng);
+
+    header("scheduler: EDF admission on a 10k-request trace");
+    bench("edf/push_pop_10k", || {
+        let mut q = EdfQueue::new();
+        for r in &reqs {
+            q.push(r.clone());
+        }
+        let mut drained = 0usize;
+        while q.pop().is_some() {
+            drained += 1;
+        }
+        assert_eq!(drained, N);
+        std::hint::black_box(drained);
+    });
+
+    header("router: full cluster replay, 10k requests");
+    // fast synthetic service so the bench times ONLY the front-end
+    let scenarios: Vec<Scenario> = [ScenarioKind::Poisson, ScenarioKind::Bursty]
+        .into_iter()
+        .map(|k| {
+            let mut s = Scenario::from_kind(k, 2000.0);
+            s.resolve_slos(|tokens| 1e-7 * tokens as f64 + 1e-5, 2e-4);
+            s
+        })
+        .collect();
+    for policy in [PolicyKind::RoundRobin, PolicyKind::Jsq, PolicyKind::PowerOfTwo] {
+        for s in &scenarios {
+            let trace = s.generate(N, 1);
+            bench(&format!("cluster/{}/{}/10k", policy.label(), s.name), || {
+                let ladder = QualityLadder::fixed(
+                    "base",
+                    Allocation::uniform(4, 2),
+                    ServiceModel::synthetic("base", 1e-7, 1e-4, 16),
+                );
+                let mut c = Cluster::new(8, 16, policy, ladder, None, 4096, 4, 0.0, 0);
+                let res = c.run(s, &trace);
+                assert!(res.completed.len() + res.rejected_by_class.iter().sum::<u64>() as usize == N);
+                std::hint::black_box(res.completed.len());
+            });
+        }
+    }
+}

@@ -1,9 +1,12 @@
-//! Configuration: model registry (Table 1), serving engine, experiments.
+//! Configuration: model registry (Table 1), serving engine, the
+//! multi-replica front-end, experiments.
 
 pub mod experiment;
 pub mod model;
+pub mod server;
 pub mod serving;
 
 pub use experiment::ExperimentConfig;
 pub use model::{ModelSpec, PaperScale};
+pub use server::{PolicyKind, ScenarioKind, ServerConfig};
 pub use serving::ServingConfig;

@@ -1,0 +1,158 @@
+//! Multi-replica serving front-end configuration (`lexi bench-serve`).
+//!
+//! Declarative knobs only — the machinery lives in [`crate::server`].
+//! Rates are expressed *relative to estimated cluster capacity* so the
+//! same scenario stresses any model the perf model can describe.
+
+use anyhow::{bail, Result};
+
+/// Replica-routing policy of the cluster front door.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// Cycle through replicas regardless of load.
+    RoundRobin,
+    /// Join the shortest queue (token-weighted backlog).
+    Jsq,
+    /// Power-of-two-choices: sample two replicas, pick the lighter.
+    PowerOfTwo,
+}
+
+impl PolicyKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "rr" | "round-robin" => PolicyKind::RoundRobin,
+            "jsq" => PolicyKind::Jsq,
+            "p2c" | "power-of-two" => PolicyKind::PowerOfTwo,
+            other => bail!("unknown routing policy '{other}' (rr | jsq | p2c)"),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            PolicyKind::RoundRobin => "rr",
+            PolicyKind::Jsq => "jsq",
+            PolicyKind::PowerOfTwo => "p2c",
+        }
+    }
+}
+
+/// Arrival-trace scenario family (shapes live in `server::workload`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScenarioKind {
+    /// Stationary Poisson arrivals at ~70% of capacity.
+    Poisson,
+    /// Two-state MMPP: long calm phases, short 1.8x-capacity bursts.
+    Bursty,
+    /// Sinusoidal rate ramp crossing capacity at the peak.
+    Diurnal,
+    /// Fixed-concurrency closed loop with think times.
+    ClosedLoop,
+}
+
+impl ScenarioKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "poisson" => ScenarioKind::Poisson,
+            "bursty" => ScenarioKind::Bursty,
+            "diurnal" => ScenarioKind::Diurnal,
+            "closed-loop" | "closedloop" => ScenarioKind::ClosedLoop,
+            other => bail!(
+                "unknown scenario '{other}' (poisson | bursty | diurnal | closed-loop)"
+            ),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ScenarioKind::Poisson => "poisson",
+            ScenarioKind::Bursty => "bursty",
+            ScenarioKind::Diurnal => "diurnal",
+            ScenarioKind::ClosedLoop => "closed-loop",
+        }
+    }
+
+    pub fn all() -> [ScenarioKind; 4] {
+        [
+            ScenarioKind::Poisson,
+            ScenarioKind::Bursty,
+            ScenarioKind::Diurnal,
+            ScenarioKind::ClosedLoop,
+        ]
+    }
+}
+
+/// Front-end configuration: cluster shape, routing, workload, ladder.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Engine replicas behind the front door.
+    pub replicas: usize,
+    /// Decode slots per replica (continuous-batching batch size).
+    pub slots_per_replica: usize,
+    /// Global admission cap on outstanding (queued + running) requests.
+    pub queue_cap: usize,
+    pub policy: PolicyKind,
+    pub scenario: ScenarioKind,
+    /// Requests per trace.
+    pub n_requests: usize,
+    pub seed: u64,
+    /// LExI quality-ladder budgets as fractions of L * k_base, one rung
+    /// per entry (descending); the baseline (1.0) is always rung 0.
+    pub ladder_fracs: Vec<f64>,
+    /// Queue depth (requests) above which a replica steps DOWN a rung.
+    pub degrade_above: usize,
+    /// Queue depth below which a replica climbs back toward rung 0.
+    pub upgrade_below: usize,
+    /// Minimum virtual time between rung switches (hysteresis).
+    pub min_dwell_s: f64,
+    /// One-off virtual-time cost of swapping `k_vec` on a replica.
+    pub reconfig_penalty_s: f64,
+    /// Reference prompt/output lengths for service-model calibration.
+    pub service_in_len: usize,
+    pub service_out_len: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            replicas: 4,
+            slots_per_replica: 16,
+            queue_cap: 512,
+            policy: PolicyKind::Jsq,
+            scenario: ScenarioKind::Bursty,
+            n_requests: 512,
+            seed: 0,
+            ladder_fracs: vec![0.8, 0.65, 0.5],
+            degrade_above: 24,
+            upgrade_below: 4,
+            min_dwell_s: 0.5,
+            reconfig_penalty_s: 0.002,
+            service_in_len: 512,
+            service_out_len: 64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for p in [PolicyKind::RoundRobin, PolicyKind::Jsq, PolicyKind::PowerOfTwo] {
+            assert_eq!(PolicyKind::parse(p.label()).unwrap(), p);
+        }
+        for s in ScenarioKind::all() {
+            assert_eq!(ScenarioKind::parse(s.label()).unwrap(), s);
+        }
+        assert!(PolicyKind::parse("lifo").is_err());
+        assert!(ScenarioKind::parse("flash-crowd").is_err());
+    }
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = ServerConfig::default();
+        assert!(c.replicas >= 1 && c.slots_per_replica >= 1);
+        assert!(c.upgrade_below < c.degrade_above);
+        assert!(c.ladder_fracs.iter().all(|&f| f > 0.0 && f < 1.0));
+    }
+}

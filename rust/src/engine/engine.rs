@@ -67,16 +67,25 @@ impl<'m> Engine<'m> {
         })
     }
 
-    /// Enqueue a request; returns its id.
+    /// Enqueue a request; returns its id. Prompts longer than the static
+    /// prefill graph keep their tail; every truncation is counted in
+    /// [`EngineMetrics::truncated_prompts`] (and surfaced in the
+    /// summary) instead of disappearing silently.
     pub fn submit(&mut self, prompt: Vec<i32>, sampling: SamplingParams) -> Result<RequestId> {
         let id = self.next_id;
         self.next_id += 1;
         let mut prompt = prompt;
-        let max_prompt = self.cfg.prefill_len;
-        if prompt.len() > max_prompt {
-            prompt.drain(0..prompt.len() - max_prompt); // keep the tail
+        let dropped = prompt.len().saturating_sub(self.cfg.prefill_len);
+        if dropped > 0 {
+            prompt.drain(0..dropped); // keep the tail
         }
         self.batcher.push(Request::new(id, prompt, sampling))?;
+        // count only after admission: a queue-full rejection is not a
+        // served-and-truncated request
+        if dropped > 0 {
+            self.metrics.truncated_prompts += 1;
+            self.metrics.truncated_tokens += dropped as u64;
+        }
         Ok(id)
     }
 

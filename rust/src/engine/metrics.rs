@@ -13,6 +13,10 @@ pub struct EngineMetrics {
     pub decode_calls: u64,
     pub decode_steps_active_slots: u64,
     pub decode_steps_total_slots: u64,
+    /// Submitted prompts truncated to the static prefill length.
+    pub truncated_prompts: u64,
+    /// Total prompt tokens dropped by those truncations.
+    pub truncated_tokens: u64,
     started: Option<Instant>,
     finished: Option<Instant>,
 }
@@ -33,6 +37,8 @@ pub struct MetricsSummary {
     pub slot_utilization: f64,
     pub prefill_calls: u64,
     pub decode_calls: u64,
+    /// Prompts truncated at submit (prompt > prefill_len).
+    pub truncated_prompts: u64,
 }
 
 impl EngineMetrics {
@@ -88,6 +94,7 @@ impl EngineMetrics {
             },
             prefill_calls: self.prefill_calls,
             decode_calls: self.decode_calls,
+            truncated_prompts: self.truncated_prompts,
         }
     }
 }
@@ -109,10 +116,11 @@ impl std::fmt::Display for MetricsSummary {
         )?;
         write!(
             f,
-            "prefill_calls={} decode_calls={} slot_util={:.0}%",
+            "prefill_calls={} decode_calls={} slot_util={:.0}% truncated_prompts={}",
             self.prefill_calls,
             self.decode_calls,
-            self.slot_utilization * 100.0
+            self.slot_utilization * 100.0,
+            self.truncated_prompts
         )
     }
 }
@@ -143,5 +151,16 @@ mod tests {
         assert_eq!(s.n_requests, 4);
         assert!((s.slot_utilization - 0.5).abs() < 1e-9);
         assert!(s.ttft_p50_s > 0.0 && s.e2e_p99_s >= s.e2e_p50_s);
+        assert_eq!(s.truncated_prompts, 0);
+    }
+
+    #[test]
+    fn truncations_surface_in_summary() {
+        let mut m = EngineMetrics::default();
+        m.truncated_prompts = 3;
+        m.truncated_tokens = 120;
+        let s = m.summary();
+        assert_eq!(s.truncated_prompts, 3);
+        assert!(format!("{s}").contains("truncated_prompts=3"));
     }
 }

@@ -20,6 +20,8 @@
 //! - [`perfmodel`] — H100 roofline + load-balance + comm simulator
 //! - [`runtime`] — PJRT bridge (HLO text -> compiled executables)
 //! - [`engine`]  — continuous-batching serving stack
+//! - [`server`]  — multi-replica front-end: scenarios, SLO scheduling,
+//!   routing, adaptive LExI quality ladder
 //! - [`eval`]    — task harness (ppl, passkey, longqa, probes, VLM)
 //! - [`figures`] — regeneration of every paper table/figure
 //! - [`util`]    — rng, stats, csv
@@ -33,6 +35,7 @@ pub mod moe;
 pub mod perfmodel;
 pub mod pruning;
 pub mod runtime;
+pub mod server;
 pub mod util;
 
 pub use config::model::{ModelSpec, PaperScale, MODEL_NAMES};

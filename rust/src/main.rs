@@ -7,6 +7,8 @@
 //!   lexi optimize --model M             full LExI pipeline (budget sweep)
 //!   lexi eval     --model M [--lexi B|--inter F|--intra F]
 //!   lexi serve    --model M [--requests N]
+//!   lexi bench-serve [--scenario S] [--replicas N] [--policy P]
+//!                    [--model M] [--requests N]   multi-replica front-end
 //!   lexi figures  --exp fig2|fig3|fig9|figs4-8|table1|all
 //!
 //! Global flags: --artifacts DIR (default ./artifacts), --out DIR
@@ -104,6 +106,7 @@ fn run() -> Result<()> {
         "optimize" => cmd_optimize(&args)?,
         "eval" => cmd_eval(&args)?,
         "serve" => cmd_serve(&args)?,
+        "bench-serve" => cmd_bench_serve(&args)?,
         "figures" => cmd_figures(&args)?,
         "help" | "--help" | "-h" => print_help(),
         other => {
@@ -117,9 +120,11 @@ fn run() -> Result<()> {
 fn print_help() {
     println!(
         "lexi — LExI MoE inference coordinator\n\
-         commands: table1 | profile | search | optimize | eval | serve | figures\n\
+         commands: table1 | profile | search | optimize | eval | serve | bench-serve | figures\n\
          flags: --model M --budget B --artifacts DIR --out DIR --iters N --fast\n\
-         figures: --exp table1|fig2|fig3|fig9|figs4-8|ablations|all [--models a,b]"
+         figures: --exp table1|fig2|fig3|fig9|figs4-8|ablations|all [--models a,b]\n\
+         bench-serve: --scenario poisson|bursty|diurnal|closed-loop|all --replicas N\n\
+                      --policy rr|jsq|p2c --requests N --model M --seed S"
     );
 }
 
@@ -298,6 +303,54 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let outs = engine.run_until_complete()?;
     println!("{}", engine.metrics.summary());
     println!("sample output: {:?}", outs.first().map(|o| &o.tokens));
+    Ok(())
+}
+
+/// Multi-replica serving benchmark over the `server::` subsystem.
+/// Artifact-free: the ladder falls back to a synthetic Stage-1 table
+/// when no measured table is cached for the model.
+fn cmd_bench_serve(args: &Args) -> Result<()> {
+    use lexi_moe::config::server::{PolicyKind, ScenarioKind, ServerConfig};
+
+    let model_name = args.get("model").unwrap_or("qwen1.5-moe-a2.7b");
+    let mspec = spec(model_name)?;
+    let mut cfg = ServerConfig::default();
+    if let Some(n) = args.get("replicas") {
+        cfg.replicas = n.parse().context("--replicas must be an integer")?;
+        anyhow::ensure!(cfg.replicas >= 1, "--replicas must be >= 1");
+    }
+    if let Some(p) = args.get("policy") {
+        cfg.policy = PolicyKind::parse(p)?;
+    }
+    if let Some(n) = args.get("requests") {
+        cfg.n_requests = n.parse().context("--requests must be an integer")?;
+    }
+    if let Some(s) = args.get("seed") {
+        cfg.seed = s.parse().context("--seed must be an integer")?;
+    }
+    let scenario_flag = args.get("scenario").unwrap_or("bursty");
+    let scenarios: Vec<ScenarioKind> = if scenario_flag == "all" {
+        ScenarioKind::all().to_vec()
+    } else {
+        vec![ScenarioKind::parse(scenario_flag)?]
+    };
+
+    let out = args.out_dir();
+    let artifacts = args.artifacts();
+    let artifacts_opt = artifacts.exists().then_some(artifacts.as_path());
+    println!(
+        "=== bench-serve: {model_name}, {} replicas, policy {}, {} requests/scenario ===\n",
+        cfg.replicas,
+        cfg.policy.label(),
+        cfg.n_requests
+    );
+    lexi_moe::server::report::print_header();
+    for kind in scenarios {
+        cfg.scenario = kind;
+        let reports = lexi_moe::server::bench_serve(&mspec, &cfg, artifacts_opt, &out)?;
+        lexi_moe::server::report::print_comparison(&reports);
+    }
+    println!("reports written to {}", out.display());
     Ok(())
 }
 

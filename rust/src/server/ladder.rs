@@ -1,0 +1,248 @@
+//! Adaptive LExI quality ladder: precomputed Stage-2 allocations at
+//! descending budgets, swapped onto replicas under queue pressure.
+//!
+//! The paper optimizes ONE static per-layer allocation for a fixed
+//! budget. Serving load is not static — so the ladder extends Stage 2
+//! into the time dimension: rung 0 is the pretrained baseline (full
+//! budget, zero quality loss), deeper rungs are LExI allocations at 80 /
+//! 65 / 50 % budgets, each the `exact_dp` optimum of the Stage-1
+//! sensitivity table (deterministic, so every run and replica agrees on
+//! the ladder). A hysteretic controller degrades a replica one rung when
+//! its queue grows past a threshold and climbs back when it drains,
+//! trading bounded proxy-quality loss for decode speed exactly when the
+//! SLO is at risk.
+
+use anyhow::{Context, Result};
+
+use crate::config::model::ModelSpec;
+use crate::config::server::ServerConfig;
+use crate::lexi::evolution::exact_dp;
+use crate::lexi::SensitivityTable;
+use crate::moe::allocation::{Allocation, Bounds};
+use crate::moe::transform::Transform;
+use crate::perfmodel::PerfModel;
+
+use super::replica::ServiceModel;
+
+/// One quality level: allocation + calibrated service model + the
+/// Stage-1 proxy loss the allocation costs.
+#[derive(Clone, Debug)]
+pub struct Rung {
+    pub label: String,
+    pub allocation: Allocation,
+    pub service: ServiceModel,
+    /// Stage-1 proxy `phi(k) = sum_j D_j(k_j)`; 0 for the baseline.
+    /// NaN marks a transform whose loss is NOT on the Stage-1 scale
+    /// (e.g. expert pruning) — reports surface it as unknown, never 0.
+    pub quality_loss: f64,
+}
+
+/// Rungs ordered best-quality-first (rung 0 = baseline).
+#[derive(Clone, Debug)]
+pub struct QualityLadder {
+    pub rungs: Vec<Rung>,
+}
+
+impl QualityLadder {
+    /// Build the ladder for a model: baseline rung + one LExI rung per
+    /// budget fraction, allocations from `exact_dp` over the Stage-1
+    /// table (measured when cached, synthetic depth profile otherwise).
+    pub fn for_model(
+        spec: &ModelSpec,
+        table: &SensitivityTable,
+        cfg: &ServerConfig,
+        pm: &PerfModel,
+    ) -> Result<Self> {
+        let k_base = spec.top_k as u32;
+        let slots = cfg.slots_per_replica;
+        let baseline = Allocation::uniform(spec.n_layers, k_base);
+        let mut rungs = vec![Rung {
+            label: "base".to_string(),
+            service: ServiceModel::from_perf(
+                pm,
+                &Transform::Baseline,
+                slots,
+                cfg.service_in_len,
+                cfg.service_out_len,
+                "base",
+            ),
+            allocation: baseline,
+            quality_loss: 0.0,
+        }];
+        let bounds = Bounds::paper(k_base);
+        let mut fracs = cfg.ladder_fracs.clone();
+        fracs.sort_by(|a, b| b.partial_cmp(a).unwrap()); // descending budget
+        for frac in fracs {
+            let budget = ((spec.baseline_budget() as f64 * frac).round() as u32)
+                .max(spec.n_layers as u32);
+            let allocation = exact_dp(table, budget, bounds)
+                .with_context(|| format!("budget {budget} infeasible for {}", spec.name))?;
+            let label = format!("lexi-B{budget}");
+            let t = Transform::Lexi {
+                allocation: allocation.clone(),
+            };
+            rungs.push(Rung {
+                service: ServiceModel::from_perf(
+                    pm,
+                    &t,
+                    slots,
+                    cfg.service_in_len,
+                    cfg.service_out_len,
+                    &label,
+                ),
+                quality_loss: table.fitness(&allocation.k),
+                allocation,
+                label,
+            });
+        }
+        Ok(QualityLadder { rungs })
+    }
+
+    /// Single-rung ladder: a fixed transform, no adaptation.
+    pub fn fixed(label: &str, allocation: Allocation, service: ServiceModel) -> Self {
+        Self::fixed_with_loss(label, allocation, service, 0.0)
+    }
+
+    /// Single-rung ladder with an explicit Stage-1 proxy loss.
+    pub fn fixed_with_loss(
+        label: &str,
+        allocation: Allocation,
+        service: ServiceModel,
+        quality_loss: f64,
+    ) -> Self {
+        QualityLadder {
+            rungs: vec![Rung {
+                label: label.to_string(),
+                allocation,
+                service,
+                quality_loss,
+            }],
+        }
+    }
+
+    pub fn n_rungs(&self) -> usize {
+        self.rungs.len()
+    }
+
+    pub fn service(&self, rung: usize) -> &ServiceModel {
+        &self.rungs[rung.min(self.rungs.len() - 1)].service
+    }
+}
+
+/// Hysteretic rung controller (per replica, stateless policy).
+#[derive(Clone, Copy, Debug)]
+pub struct LadderPolicy {
+    /// Queue depth at which a replica degrades one rung.
+    pub degrade_above: usize,
+    /// Queue depth below which it climbs back toward rung 0.
+    pub upgrade_below: usize,
+    /// Minimum time between switches.
+    pub min_dwell_s: f64,
+}
+
+impl LadderPolicy {
+    pub fn from_config(cfg: &ServerConfig) -> Self {
+        LadderPolicy {
+            degrade_above: cfg.degrade_above,
+            upgrade_below: cfg.upgrade_below,
+            min_dwell_s: cfg.min_dwell_s,
+        }
+    }
+
+    /// Next rung for a replica given its queue depth. One step at a
+    /// time, hysteresis band between the thresholds, dwell time between
+    /// switches.
+    pub fn decide(
+        &self,
+        current: usize,
+        n_rungs: usize,
+        queue_len: usize,
+        now: f64,
+        last_switch_s: f64,
+    ) -> usize {
+        if n_rungs <= 1 || now - last_switch_s < self.min_dwell_s {
+            return current;
+        }
+        if queue_len > self.degrade_above && current + 1 < n_rungs {
+            current + 1
+        } else if queue_len < self.upgrade_below && current > 0 {
+            current - 1
+        } else {
+            current
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model::spec;
+
+    fn ladder() -> QualityLadder {
+        let m = spec("olmoe-1b-7b").unwrap();
+        let table = SensitivityTable::synthetic(m.name, m.n_layers, m.top_k as u32, |x| 0.8 + 2.4 * x, 0);
+        let cfg = ServerConfig {
+            slots_per_replica: 4,
+            service_in_len: 256,
+            service_out_len: 32,
+            ..Default::default()
+        };
+        let pm = PerfModel::new(m.clone(), 0);
+        QualityLadder::for_model(&m, &table, &cfg, &pm).unwrap()
+    }
+
+    #[test]
+    fn rungs_trade_quality_for_speed() {
+        let l = ladder();
+        assert_eq!(l.n_rungs(), 4); // base + 0.8 + 0.65 + 0.5
+        for w in l.rungs.windows(2) {
+            // monotone: each deeper rung loses quality...
+            assert!(
+                w[1].quality_loss > w[0].quality_loss - 1e-12,
+                "{} -> {}",
+                w[0].label,
+                w[1].label
+            );
+            // ...and buys decode speed (smaller budget, faster steps)
+            assert!(
+                w[1].service.step_time(4) < w[0].service.step_time(4) * 1.001,
+                "{} not faster than {}",
+                w[1].label,
+                w[0].label
+            );
+            assert!(w[1].allocation.budget() < w[0].allocation.budget());
+        }
+        assert_eq!(l.rungs[0].quality_loss, 0.0);
+    }
+
+    #[test]
+    fn ladder_is_deterministic() {
+        let a = ladder();
+        let b = ladder();
+        for (x, y) in a.rungs.iter().zip(&b.rungs) {
+            assert_eq!(x.allocation, y.allocation);
+            assert_eq!(x.quality_loss, y.quality_loss);
+        }
+    }
+
+    #[test]
+    fn policy_hysteresis_and_dwell() {
+        let p = LadderPolicy {
+            degrade_above: 10,
+            upgrade_below: 2,
+            min_dwell_s: 1.0,
+        };
+        // pressure -> degrade one step
+        assert_eq!(p.decide(0, 4, 11, 5.0, 0.0), 1);
+        // inside the band -> hold
+        assert_eq!(p.decide(1, 4, 5, 5.0, 0.0), 1);
+        // drained -> climb back
+        assert_eq!(p.decide(1, 4, 1, 5.0, 0.0), 0);
+        // dwell not elapsed -> hold even under pressure
+        assert_eq!(p.decide(0, 4, 100, 0.5, 0.0), 0);
+        // clamped at the deepest rung
+        assert_eq!(p.decide(3, 4, 100, 5.0, 0.0), 3);
+        // single-rung ladders never switch
+        assert_eq!(p.decide(0, 1, 100, 5.0, 0.0), 0);
+    }
+}

@@ -1,0 +1,224 @@
+//! Multi-replica serving front-end (the `lexi bench-serve` subsystem).
+//!
+//! The paper's claim is about *serving* efficiency, so this module puts
+//! LExI where it earns its keep: a cluster of N continuous-batching
+//! replicas behind admission control, SLO-aware EDF scheduling, and
+//! pluggable routing, driven by seeded workload scenarios. Replicas run
+//! in virtual time against perf-model-calibrated service models, so a
+//! full comparison sweep (baseline / fixed LExI / adaptive LExI ladder /
+//! inter-pruning, across four scenarios) needs no artifacts and is
+//! bit-reproducible from a seed.
+//!
+//! Module map:
+//! - [`workload`]  — arrival processes x request-shape profiles
+//! - [`scheduler`] — admission control + multi-class EDF queues
+//! - [`replica`]   — virtual-time continuous-batching replica
+//! - [`router`]    — cluster, routing policies, discrete-event loop
+//! - [`ladder`]    — adaptive LExI quality ladder (Stage-2 over time)
+//! - [`report`]    — TTFT/TPOT percentiles, goodput-under-SLO, CSV/JSON
+
+pub mod ladder;
+pub mod replica;
+pub mod report;
+pub mod router;
+pub mod scheduler;
+pub mod workload;
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::config::model::ModelSpec;
+use crate::config::server::ServerConfig;
+use crate::lexi::SensitivityTable;
+use crate::moe::allocation::Allocation;
+use crate::moe::transform::Transform;
+use crate::perfmodel::PerfModel;
+
+pub use ladder::{LadderPolicy, QualityLadder, Rung};
+pub use replica::{CompletedRequest, Replica, ServiceModel};
+pub use report::TransformReport;
+pub use router::{Cluster, RunResult};
+pub use scheduler::{AdmissionControl, EdfQueue, QueuedRequest};
+pub use workload::{Scenario, SloTarget, Trace, TraceRequest};
+
+/// Stage-1 table for ladder construction: measured table when cached in
+/// the artifacts dir, synthetic depth profile otherwise (deterministic
+/// either way).
+pub fn sensitivity_table(spec: &ModelSpec, artifacts: Option<&Path>, seed: u64) -> SensitivityTable {
+    if let Some(root) = artifacts {
+        let cache = crate::lexi::pipeline::table_path(root, spec.name);
+        if let Ok(t) = SensitivityTable::load_json(&cache) {
+            // both dims must match the spec: ladder construction searches
+            // Bounds::paper(spec.top_k), which indexes loss[j][k-1]
+            if t.n_layers() == spec.n_layers && t.k_base == spec.top_k as u32 {
+                return t;
+            }
+        }
+    }
+    SensitivityTable::synthetic(spec.name, spec.n_layers, spec.top_k as u32, |x| 0.8 + 2.4 * x, seed)
+}
+
+/// The transform line-up every serving comparison runs.
+struct Contender {
+    label: &'static str,
+    ladder: QualityLadder,
+    adaptive: bool,
+}
+
+fn contenders(
+    spec: &ModelSpec,
+    table: &SensitivityTable,
+    cfg: &ServerConfig,
+    pm: &PerfModel,
+) -> Result<Vec<Contender>> {
+    let full = QualityLadder::for_model(spec, table, cfg, pm)?;
+    // fixed mid-ladder rung: the paper's static ~65% deployment
+    let fixed_rung = full.rungs.get(full.n_rungs() / 2).unwrap_or(&full.rungs[0]);
+    let fixed = QualityLadder::fixed_with_loss(
+        &fixed_rung.label,
+        fixed_rung.allocation.clone(),
+        fixed_rung.service.clone(),
+        fixed_rung.quality_loss,
+    );
+    let baseline = QualityLadder::fixed(
+        "base",
+        full.rungs[0].allocation.clone(),
+        full.rungs[0].service.clone(),
+    );
+    // Expert removal's accuracy cost is not on the Stage-1 top-k scale:
+    // NaN -> the report shows quality loss as unknown, not as zero.
+    let inter = QualityLadder::fixed_with_loss(
+        "inter50",
+        Allocation::uniform(spec.n_layers, spec.top_k as u32),
+        ServiceModel::from_perf(
+            pm,
+            &Transform::InterPrune { frac: 0.5 },
+            cfg.slots_per_replica,
+            cfg.service_in_len,
+            cfg.service_out_len,
+            "inter50",
+        ),
+        f64::NAN,
+    );
+    Ok(vec![
+        Contender {
+            label: "baseline",
+            ladder: baseline,
+            adaptive: false,
+        },
+        Contender {
+            label: "lexi-fixed",
+            ladder: fixed,
+            adaptive: false,
+        },
+        Contender {
+            label: "lexi-ladder",
+            ladder: full,
+            adaptive: true,
+        },
+        Contender {
+            label: "inter-prune",
+            ladder: inter,
+            adaptive: false,
+        },
+    ])
+}
+
+/// Run the full serving comparison for one scenario and write the
+/// CSV/JSON reports. Returns the per-transform reports in line-up order
+/// (baseline, lexi-fixed, lexi-ladder, inter-prune).
+pub fn bench_serve(
+    spec: &ModelSpec,
+    cfg: &ServerConfig,
+    artifacts: Option<&Path>,
+    out_dir: &Path,
+) -> Result<Vec<TransformReport>> {
+    let table = sensitivity_table(spec, artifacts, cfg.seed);
+    let pm = PerfModel::new(spec.clone(), cfg.seed);
+    let line_up = contenders(spec, &table, cfg, &pm)?;
+    let base_svc = &line_up[0].ladder.rungs[0].service;
+
+    // Scenario rates + SLOs calibrated against the BASELINE service
+    // model so every contender faces the identical workload contract.
+    // TTFT reference = a full batched-cohort prefill of the class's
+    // prompts plus two decode steps of scheduling slack (what an
+    // unqueued arrival at a busy replica actually experiences).
+    let slack = 2.0 * base_svc.step_time(cfg.slots_per_replica);
+    let mut scenario = Scenario::from_kind(cfg.scenario, estimate_capacity(base_svc, cfg));
+    scenario.resolve_slos(
+        |tokens| base_svc.prefill_time(tokens * cfg.slots_per_replica) + slack,
+        base_svc.step_time(cfg.slots_per_replica),
+    );
+    let trace = scenario.generate(cfg.n_requests, cfg.seed);
+
+    let mut reports = Vec::new();
+    for c in &line_up {
+        let quality: Vec<f64> = c.ladder.rungs.iter().map(|r| r.quality_loss).collect();
+        let policy = c.adaptive.then(|| LadderPolicy::from_config(cfg));
+        let mut cluster = Cluster::new(
+            cfg.replicas,
+            cfg.slots_per_replica,
+            cfg.policy,
+            c.ladder.clone(),
+            policy,
+            cfg.queue_cap,
+            scenario.profiles.len(),
+            cfg.reconfig_penalty_s,
+            cfg.seed,
+        );
+        let res = cluster.run(&scenario, &trace);
+        reports.push(TransformReport::from_run(
+            &scenario,
+            c.label,
+            cfg.policy.label(),
+            &res,
+            &quality,
+        ));
+    }
+
+    let stem = format!("bench_serve_{}_{}", spec.name, scenario.name);
+    report::write_csv(&out_dir.join(format!("{stem}.csv")), &reports)?;
+    report::write_json(&out_dir.join(format!("{stem}.json")), &reports)?;
+    Ok(reports)
+}
+
+/// Cluster capacity estimate (requests/s) for scenario calibration.
+fn estimate_capacity(svc: &ServiceModel, cfg: &ServerConfig) -> f64 {
+    // mixture means of the standard profile catalog
+    let s = Scenario::from_kind(cfg.scenario, 1.0);
+    cfg.replicas as f64 * svc.capacity_rps(s.mean_prompt_tokens(), s.mean_gen_tokens())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model::spec;
+    use crate::config::server::ScenarioKind;
+
+    #[test]
+    fn bench_serve_emits_reports_and_files() {
+        let m = spec("minicpm-moe-8x2b").unwrap();
+        let cfg = ServerConfig {
+            replicas: 2,
+            slots_per_replica: 4,
+            n_requests: 48,
+            scenario: ScenarioKind::Poisson,
+            service_in_len: 256,
+            service_out_len: 32,
+            ..Default::default()
+        };
+        let out = std::env::temp_dir().join("lexi_bench_serve_test");
+        let _ = std::fs::remove_dir_all(&out);
+        let reports = bench_serve(&m, &cfg, None, &out).unwrap();
+        assert_eq!(reports.len(), 4);
+        let labels: Vec<&str> = reports.iter().map(|r| r.transform.as_str()).collect();
+        assert_eq!(labels, ["baseline", "lexi-fixed", "lexi-ladder", "inter-prune"]);
+        for r in &reports {
+            assert_eq!(r.n_completed as u64 + r.n_rejected, 48);
+            assert!(r.throughput_tok_s > 0.0);
+        }
+        assert!(out.join("bench_serve_minicpm-moe-8x2b_poisson.csv").exists());
+        assert!(out.join("bench_serve_minicpm-moe-8x2b_poisson.json").exists());
+    }
+}

@@ -1,0 +1,389 @@
+//! Serving reports: latency percentiles, goodput-under-SLO, utilization.
+//!
+//! One [`TransformReport`] summarizes one (scenario, transform, policy)
+//! cluster run. Emission reuses the repo-wide writers: `util::csv` for
+//! the per-row table, `util::json` for the full nested report (including
+//! per-replica utilization and the ladder's rung occupancy).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::csv_row;
+use crate::util::csv::CsvWriter;
+use crate::util::json::Json;
+use crate::util::stats::percentile_sorted;
+
+use super::replica::CompletedRequest;
+use super::router::RunResult;
+use super::workload::{Scenario, SloTarget};
+
+/// Aggregated serving metrics for one cluster run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TransformReport {
+    pub scenario: String,
+    pub transform: String,
+    pub policy: String,
+    pub replicas: usize,
+    pub n_completed: usize,
+    pub n_rejected: u64,
+    /// Completions meeting BOTH their class TTFT and TPOT SLOs.
+    pub n_slo_met: usize,
+    pub makespan_s: f64,
+    /// SLO-satisfying completions per second — the headline metric.
+    pub goodput_rps: f64,
+    /// (prompt + generated) tokens per second.
+    pub throughput_tok_s: f64,
+    pub ttft_p50_s: f64,
+    pub ttft_p95_s: f64,
+    pub ttft_p99_s: f64,
+    pub tpot_p50_s: f64,
+    pub tpot_p95_s: f64,
+    pub tpot_p99_s: f64,
+    pub mean_utilization: f64,
+    pub per_replica_utilization: Vec<f64>,
+    pub rung_switches: u64,
+    /// Fraction of busy time spent at the zero-loss baseline rung.
+    /// `None` when the ladder has no such rung (fixed degraded
+    /// transforms run 100% of their time at THEIR rung, not at full
+    /// quality — reporting 1.0 there would be a lie).
+    pub full_quality_frac: Option<f64>,
+    /// Busy-time-weighted mean Stage-1 proxy loss across rungs. `None`
+    /// when the transform's loss is not on the Stage-1 scale (NaN rung).
+    pub mean_quality_loss: Option<f64>,
+}
+
+/// Did a completion meet its class SLO?
+pub fn meets_slo(c: &CompletedRequest, slo: &SloTarget) -> bool {
+    c.ttft_s <= slo.ttft_s && c.tpot_s() <= slo.tpot_s
+}
+
+impl TransformReport {
+    pub fn from_run(
+        scenario: &Scenario,
+        transform: &str,
+        policy: &str,
+        res: &RunResult,
+        rung_quality_loss: &[f64],
+    ) -> Self {
+        let makespan = res.makespan_s.max(1e-9);
+        // sort once per metric; three percentiles each read the same slice
+        let mut ttft: Vec<f64> = res.completed.iter().map(|c| c.ttft_s).collect();
+        let mut tpot: Vec<f64> = res.completed.iter().map(|c| c.tpot_s()).collect();
+        ttft.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        tpot.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n_slo_met = res
+            .completed
+            .iter()
+            .filter(|c| meets_slo(c, &scenario.slos[c.class]))
+            .count();
+        let tokens: usize = res
+            .completed
+            .iter()
+            .map(|c| c.prompt_len + c.tokens)
+            .sum();
+        let util: Vec<f64> = res
+            .replica_busy_s
+            .iter()
+            .map(|b| (b / makespan).min(1.0))
+            .collect();
+        let busy_total: f64 = res.rung_time_s.iter().sum::<f64>().max(1e-12);
+        let weighted = res
+            .rung_time_s
+            .iter()
+            .zip(rung_quality_loss)
+            .map(|(t, q)| t * q)
+            .sum::<f64>()
+            / busy_total;
+        let mean_quality_loss = weighted.is_finite().then_some(weighted);
+        let full_quality_frac = (rung_quality_loss.first().copied() == Some(0.0))
+            .then(|| res.rung_time_s.first().copied().unwrap_or(0.0) / busy_total);
+        TransformReport {
+            scenario: scenario.name.to_string(),
+            transform: transform.to_string(),
+            policy: policy.to_string(),
+            replicas: res.replica_busy_s.len(),
+            n_completed: res.completed.len(),
+            n_rejected: res.rejected_by_class.iter().sum(),
+            n_slo_met,
+            makespan_s: makespan,
+            goodput_rps: n_slo_met as f64 / makespan,
+            throughput_tok_s: tokens as f64 / makespan,
+            ttft_p50_s: percentile_sorted(&ttft, 50.0),
+            ttft_p95_s: percentile_sorted(&ttft, 95.0),
+            ttft_p99_s: percentile_sorted(&ttft, 99.0),
+            tpot_p50_s: percentile_sorted(&tpot, 50.0),
+            tpot_p95_s: percentile_sorted(&tpot, 95.0),
+            tpot_p99_s: percentile_sorted(&tpot, 99.0),
+            mean_utilization: util.iter().sum::<f64>() / util.len().max(1) as f64,
+            per_replica_utilization: util,
+            rung_switches: res.rung_switches,
+            full_quality_frac,
+            mean_quality_loss,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("scenario", Json::Str(self.scenario.clone())),
+            ("transform", Json::Str(self.transform.clone())),
+            ("policy", Json::Str(self.policy.clone())),
+            ("replicas", Json::Num(self.replicas as f64)),
+            ("n_completed", Json::Num(self.n_completed as f64)),
+            ("n_rejected", Json::Num(self.n_rejected as f64)),
+            ("n_slo_met", Json::Num(self.n_slo_met as f64)),
+            ("makespan_s", Json::Num(self.makespan_s)),
+            ("goodput_rps", Json::Num(self.goodput_rps)),
+            ("throughput_tok_s", Json::Num(self.throughput_tok_s)),
+            (
+                "ttft_s",
+                Json::obj(vec![
+                    ("p50", Json::Num(self.ttft_p50_s)),
+                    ("p95", Json::Num(self.ttft_p95_s)),
+                    ("p99", Json::Num(self.ttft_p99_s)),
+                ]),
+            ),
+            (
+                "tpot_s",
+                Json::obj(vec![
+                    ("p50", Json::Num(self.tpot_p50_s)),
+                    ("p95", Json::Num(self.tpot_p95_s)),
+                    ("p99", Json::Num(self.tpot_p99_s)),
+                ]),
+            ),
+            ("mean_utilization", Json::Num(self.mean_utilization)),
+            (
+                "per_replica_utilization",
+                Json::from_f64s(&self.per_replica_utilization),
+            ),
+            ("rung_switches", Json::Num(self.rung_switches as f64)),
+            (
+                "full_quality_frac",
+                self.full_quality_frac.map_or(Json::Null, Json::Num),
+            ),
+            (
+                "mean_quality_loss",
+                self.mean_quality_loss.map_or(Json::Null, Json::Num),
+            ),
+        ])
+    }
+}
+
+pub const CSV_HEADER: [&str; 18] = [
+    "scenario",
+    "transform",
+    "policy",
+    "replicas",
+    "n_completed",
+    "n_rejected",
+    "n_slo_met",
+    "goodput_rps",
+    "throughput_tok_s",
+    "ttft_p50_ms",
+    "ttft_p95_ms",
+    "ttft_p99_ms",
+    "tpot_p50_ms",
+    "tpot_p95_ms",
+    "tpot_p99_ms",
+    "mean_utilization",
+    "rung_switches",
+    "makespan_s",
+];
+
+/// Write one CSV row per report.
+pub fn write_csv(path: &Path, reports: &[TransformReport]) -> Result<()> {
+    let mut w = CsvWriter::create(path, &CSV_HEADER)?;
+    for r in reports {
+        csv_row!(
+            w,
+            r.scenario,
+            r.transform,
+            r.policy,
+            r.replicas,
+            r.n_completed,
+            r.n_rejected,
+            r.n_slo_met,
+            format!("{:.4}", r.goodput_rps),
+            format!("{:.1}", r.throughput_tok_s),
+            format!("{:.2}", r.ttft_p50_s * 1e3),
+            format!("{:.2}", r.ttft_p95_s * 1e3),
+            format!("{:.2}", r.ttft_p99_s * 1e3),
+            format!("{:.3}", r.tpot_p50_s * 1e3),
+            format!("{:.3}", r.tpot_p95_s * 1e3),
+            format!("{:.3}", r.tpot_p99_s * 1e3),
+            format!("{:.3}", r.mean_utilization),
+            r.rung_switches,
+            format!("{:.2}", r.makespan_s),
+        )?;
+    }
+    Ok(())
+}
+
+/// Write the full nested report set as JSON.
+pub fn write_json(path: &Path, reports: &[TransformReport]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let v = Json::Arr(reports.iter().map(|r| r.to_json()).collect());
+    std::fs::write(path, v.to_string_pretty())?;
+    Ok(())
+}
+
+impl std::fmt::Display for TransformReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<14} {:<12} {:>5} {:>6} {:>8.3} {:>10.1} {:>9.1} {:>9.1} {:>8.2} {:>6.0}% {:>7}",
+            self.transform,
+            self.scenario,
+            self.n_completed,
+            self.n_rejected,
+            self.goodput_rps,
+            self.throughput_tok_s,
+            self.ttft_p50_s * 1e3,
+            self.ttft_p99_s * 1e3,
+            self.tpot_p50_s * 1e3,
+            self.mean_utilization * 100.0,
+            self.rung_switches,
+        )
+    }
+}
+
+/// Print one scenario's report set: a row per transform, then the
+/// ladder-vs-baseline goodput summary. Shared by `lexi bench-serve`
+/// and the serve_benchmark example.
+pub fn print_comparison(reports: &[TransformReport]) {
+    for r in reports {
+        println!("{r}");
+    }
+    let base = reports.iter().find(|r| r.transform == "baseline");
+    let ladder = reports.iter().find(|r| r.transform == "lexi-ladder");
+    if let (Some(base), Some(ladder)) = (base, ladder) {
+        println!(
+            "  -> ladder goodput {:.3} rps vs baseline {:.3} rps ({:+.0}%), \
+             full-quality time {}, mean proxy quality loss {}\n",
+            ladder.goodput_rps,
+            base.goodput_rps,
+            (ladder.goodput_rps / base.goodput_rps.max(1e-12) - 1.0) * 100.0,
+            ladder
+                .full_quality_frac
+                .map_or_else(|| "n/a".to_string(), |f| format!("{:.0}%", f * 100.0)),
+            ladder
+                .mean_quality_loss
+                .map_or_else(|| "n/a".to_string(), |q| format!("{q:.3}"))
+        );
+    }
+}
+
+/// Column header matching [`TransformReport`]'s `Display` row.
+pub fn print_header() {
+    println!(
+        "{:<14} {:<12} {:>5} {:>6} {:>8} {:>10} {:>9} {:>9} {:>8} {:>7} {:>7}",
+        "transform",
+        "scenario",
+        "done",
+        "rej",
+        "goodput",
+        "tok/s",
+        "ttft50ms",
+        "ttft99ms",
+        "tpot50ms",
+        "util",
+        "switch"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::server::ScenarioKind;
+
+    fn fake_run() -> RunResult {
+        let completed = (0..10)
+            .map(|i| CompletedRequest {
+                id: i,
+                class: 0,
+                arrival_s: i as f64,
+                prompt_len: 100,
+                tokens: 20,
+                ttft_s: 0.1 + 0.01 * i as f64,
+                e2e_s: 0.5 + 0.01 * i as f64,
+                finish_s: i as f64 + 0.5,
+                replica: (i % 2) as usize,
+            })
+            .collect();
+        RunResult {
+            completed,
+            rejected_by_class: vec![1, 0, 0, 0],
+            makespan_s: 10.0,
+            replica_busy_s: vec![8.0, 6.0],
+            rung_switches: 3,
+            rung_time_s: vec![10.0, 4.0],
+            prefill_calls: 5,
+            decode_steps: 100,
+        }
+    }
+
+    fn scenario() -> Scenario {
+        let mut s = Scenario::from_kind(ScenarioKind::Poisson, 10.0);
+        // generous SLOs: everything passes
+        s.resolve_slos(|_| 10.0, 10.0);
+        s
+    }
+
+    #[test]
+    fn report_aggregates_and_weights_quality() {
+        let s = scenario();
+        let r = TransformReport::from_run(&s, "ladder", "jsq", &fake_run(), &[0.0, 2.0]);
+        assert_eq!(r.n_completed, 10);
+        assert_eq!(r.n_rejected, 1);
+        assert_eq!(r.n_slo_met, 10);
+        assert!((r.goodput_rps - 1.0).abs() < 1e-12);
+        assert!((r.mean_utilization - 0.7).abs() < 1e-12);
+        // 14 busy-seconds total, 4 at quality loss 2.0
+        assert!((r.mean_quality_loss.unwrap() - 8.0 / 14.0).abs() < 1e-12);
+        assert!((r.full_quality_frac.unwrap() - 10.0 / 14.0).abs() < 1e-12);
+        assert!(r.ttft_p99_s >= r.ttft_p50_s);
+    }
+
+    #[test]
+    fn unknown_quality_scale_reports_none_not_zero() {
+        let s = scenario();
+        let r =
+            TransformReport::from_run(&s, "inter50", "rr", &fake_run(), &[f64::NAN, f64::NAN]);
+        assert!(r.mean_quality_loss.is_none());
+        // a ladder with no zero-loss rung never ran at "full quality"
+        assert!(r.full_quality_frac.is_none());
+        let j = r.to_json();
+        assert_eq!(*j.get("mean_quality_loss").unwrap(), Json::Null);
+        assert_eq!(*j.get("full_quality_frac").unwrap(), Json::Null);
+    }
+
+    #[test]
+    fn tight_slo_fails_requests() {
+        let mut s = scenario();
+        s.resolve_slos(|_| 0.05, 10.0); // ttft target below every ttft
+        let r = TransformReport::from_run(&s, "base", "rr", &fake_run(), &[0.0, 0.0]);
+        assert_eq!(r.n_slo_met, 0);
+        assert_eq!(r.goodput_rps, 0.0);
+    }
+
+    #[test]
+    fn csv_and_json_roundtrip() {
+        let s = scenario();
+        let r = TransformReport::from_run(&s, "ladder", "jsq", &fake_run(), &[0.0, 2.0]);
+        let dir = std::env::temp_dir().join("lexi_server_report_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        write_csv(&dir.join("serve.csv"), std::slice::from_ref(&r)).unwrap();
+        write_json(&dir.join("serve.json"), std::slice::from_ref(&r)).unwrap();
+        let csv = std::fs::read_to_string(dir.join("serve.csv")).unwrap();
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.starts_with("scenario,transform,policy"));
+        assert!(csv.contains("ladder"));
+        let json = crate::util::json::parse_file(&dir.join("serve.json")).unwrap();
+        let arr = json.as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("transform").unwrap().as_str().unwrap(), "ladder");
+        assert_eq!(arr[0].get("n_slo_met").unwrap().as_usize().unwrap(), 10);
+    }
+}

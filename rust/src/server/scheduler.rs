@@ -1,0 +1,219 @@
+//! SLO-aware scheduling: admission control + multi-class EDF queues.
+//!
+//! Every queued request carries a TTFT deadline (`arrival + class TTFT
+//! SLO`). Dispatch order is (priority class, earliest deadline, arrival
+//! id) — latency-critical classes always preempt batch traffic in the
+//! queue, and within a class the request closest to busting its SLO goes
+//! first. Deadlines are held as integer nanoseconds so the ordering is a
+//! total order (bit-reproducible across runs).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::workload::TraceRequest;
+
+/// A request admitted into the serving queue.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QueuedRequest {
+    pub id: u64,
+    pub class: usize,
+    pub priority: u8,
+    pub arrival_s: f64,
+    /// TTFT deadline (absolute virtual time).
+    pub deadline_s: f64,
+    pub prompt_len: usize,
+    pub new_tokens: usize,
+}
+
+impl QueuedRequest {
+    pub fn new(r: &TraceRequest, priority: u8, ttft_slo_s: f64) -> Self {
+        QueuedRequest {
+            id: r.id,
+            class: r.class,
+            priority,
+            arrival_s: r.arrival_s,
+            deadline_s: r.arrival_s + ttft_slo_s,
+            prompt_len: r.prompt_len,
+            new_tokens: r.new_tokens,
+        }
+    }
+
+    /// Token-weighted cost used for load-aware routing: decode steps
+    /// dominate, prefill tokens are batched and cheap per token.
+    pub fn cost(&self) -> u64 {
+        (self.prompt_len / 8 + self.new_tokens) as u64
+    }
+
+    fn key(&self) -> (u8, u64, u64) {
+        (self.priority, (self.deadline_s * 1e9) as u64, self.id)
+    }
+}
+
+#[derive(Clone, Debug)]
+struct Entry(QueuedRequest);
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.key() == other.0.key()
+    }
+}
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.key().cmp(&other.0.key())
+    }
+}
+
+/// Priority + earliest-deadline-first queue.
+#[derive(Clone, Debug, Default)]
+pub struct EdfQueue {
+    heap: BinaryHeap<Reverse<Entry>>,
+    pending_cost: u64,
+}
+
+impl EdfQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, req: QueuedRequest) {
+        self.pending_cost += req.cost();
+        self.heap.push(Reverse(Entry(req)));
+    }
+
+    /// Pop the (highest-priority, earliest-deadline) request.
+    pub fn pop(&mut self) -> Option<QueuedRequest> {
+        self.heap.pop().map(|Reverse(Entry(req))| {
+            self.pending_cost -= req.cost();
+            req
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Total token-weighted backlog (for JSQ / p2c routing).
+    pub fn pending_cost(&self) -> u64 {
+        self.pending_cost
+    }
+
+    /// Earliest deadline currently queued (None when empty).
+    pub fn earliest_deadline_s(&self) -> Option<f64> {
+        self.heap.peek().map(|Reverse(Entry(r))| r.deadline_s)
+    }
+}
+
+/// Global admission control: bound outstanding work, count rejections.
+#[derive(Clone, Debug)]
+pub struct AdmissionControl {
+    pub cap: usize,
+    pub admitted: u64,
+    pub rejected_by_class: Vec<u64>,
+}
+
+impl AdmissionControl {
+    pub fn new(cap: usize, n_classes: usize) -> Self {
+        AdmissionControl {
+            cap,
+            admitted: 0,
+            rejected_by_class: vec![0; n_classes],
+        }
+    }
+
+    /// Admit iff the cluster-wide outstanding count is below the cap.
+    pub fn try_admit(&mut self, outstanding: usize, class: usize) -> bool {
+        if outstanding >= self.cap {
+            self.rejected_by_class[class] += 1;
+            false
+        } else {
+            self.admitted += 1;
+            true
+        }
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.rejected_by_class.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, priority: u8, deadline_s: f64) -> QueuedRequest {
+        QueuedRequest {
+            id,
+            class: priority as usize,
+            priority,
+            arrival_s: 0.0,
+            deadline_s,
+            prompt_len: 80,
+            new_tokens: 40,
+        }
+    }
+
+    #[test]
+    fn edf_pops_earliest_deadline_first() {
+        let mut q = EdfQueue::new();
+        q.push(req(0, 0, 5.0));
+        q.push(req(1, 0, 1.0));
+        q.push(req(2, 0, 3.0));
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|r| r.id).collect();
+        assert_eq!(order, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn priority_class_preempts_deadline() {
+        let mut q = EdfQueue::new();
+        q.push(req(0, 2, 0.1)); // batch class, imminent deadline
+        q.push(req(1, 0, 9.0)); // interactive, far deadline
+        assert_eq!(q.pop().unwrap().id, 1, "priority must dominate deadline");
+        assert_eq!(q.pop().unwrap().id, 0);
+    }
+
+    #[test]
+    fn ties_break_by_arrival_id() {
+        let mut q = EdfQueue::new();
+        q.push(req(7, 1, 2.0));
+        q.push(req(3, 1, 2.0));
+        assert_eq!(q.pop().unwrap().id, 3);
+        assert_eq!(q.pop().unwrap().id, 7);
+    }
+
+    #[test]
+    fn pending_cost_tracks_push_pop() {
+        let mut q = EdfQueue::new();
+        assert_eq!(q.pending_cost(), 0);
+        q.push(req(0, 0, 1.0));
+        q.push(req(1, 0, 2.0));
+        let per = 80 / 8 + 40;
+        assert_eq!(q.pending_cost(), 2 * per as u64);
+        q.pop();
+        assert_eq!(q.pending_cost(), per as u64);
+        q.pop();
+        assert_eq!(q.pending_cost(), 0);
+        assert!(q.earliest_deadline_s().is_none());
+    }
+
+    #[test]
+    fn admission_caps_and_counts() {
+        let mut ac = AdmissionControl::new(2, 3);
+        assert!(ac.try_admit(0, 0));
+        assert!(ac.try_admit(1, 1));
+        assert!(!ac.try_admit(2, 2));
+        assert!(!ac.try_admit(5, 2));
+        assert_eq!(ac.admitted, 2);
+        assert_eq!(ac.rejected(), 2);
+        assert_eq!(ac.rejected_by_class, vec![0, 0, 2]);
+    }
+}

@@ -17,11 +17,17 @@ pub fn std_dev(xs: &[f64]) -> f64 {
 
 /// Linear-interpolated percentile (p in [0, 100]); input need not be sorted.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    if xs.is_empty() {
-        return 0.0;
-    }
     let mut s = xs.to_vec();
     s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&s, p)
+}
+
+/// [`percentile`] over an already-sorted slice — use when taking several
+/// percentiles of the same data (avoids re-cloning and re-sorting).
+pub fn percentile_sorted(s: &[f64], p: f64) -> f64 {
+    if s.is_empty() {
+        return 0.0;
+    }
     let rank = (p / 100.0) * (s.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;

@@ -1,0 +1,299 @@
+//! Integration tests for the multi-replica serving front-end: routing
+//! policies on skewed traffic, EDF scheduling under mixed classes,
+//! seeded end-to-end determinism, and the adaptive quality ladder's
+//! goodput advantage under bursty overload (the subsystem's acceptance
+//! criterion). Artifact-free: service times come from the perf model or
+//! synthetic fixtures.
+
+use lexi_moe::config::model::spec;
+use lexi_moe::config::server::{PolicyKind, ScenarioKind, ServerConfig};
+use lexi_moe::moe::allocation::Allocation;
+use lexi_moe::server::ladder::QualityLadder;
+use lexi_moe::server::replica::ServiceModel;
+use lexi_moe::server::router::Cluster;
+use lexi_moe::server::workload::{
+    ArrivalProcess, RequestProfile, Scenario, Trace, TraceRequest,
+};
+use lexi_moe::server::{self, report};
+
+// ---------------------------------------------------------------------
+// fixtures
+// ---------------------------------------------------------------------
+
+/// Two-class scenario: tiny interactive requests + huge batch requests.
+fn skewed_scenario() -> Scenario {
+    let mut s = Scenario {
+        name: "skewed",
+        kind: ScenarioKind::Poisson,
+        arrivals: ArrivalProcess::Poisson { rate: 1.0 },
+        profiles: vec![
+            RequestProfile {
+                name: "tiny",
+                prompt_lo: 32,
+                prompt_hi: 32,
+                gen_lo: 4,
+                gen_hi: 4,
+                priority: 0,
+                weight: 0.5,
+                ttft_mult: 4.0,
+                tpot_mult: 2.0,
+            },
+            RequestProfile {
+                name: "huge",
+                prompt_lo: 512,
+                prompt_hi: 512,
+                gen_lo: 400,
+                gen_hi: 400,
+                priority: 1,
+                weight: 0.5,
+                ttft_mult: 50.0,
+                tpot_mult: 10.0,
+            },
+        ],
+        slos: Vec::new(),
+    };
+    s.resolve_slos(|tokens| 1e-4 * tokens as f64, 0.01);
+    s
+}
+
+/// Alternating huge/tiny requests, all effectively arriving at once —
+/// round-robin deterministically dumps every huge request on the same
+/// replica; load-aware policies spread them.
+fn skewed_trace(n_pairs: usize) -> Trace {
+    let mut requests = Vec::new();
+    for i in 0..n_pairs {
+        for (j, class) in [(0usize, 1usize), (1, 0)] {
+            let id = (2 * i + j) as u64;
+            requests.push(TraceRequest {
+                id,
+                class,
+                arrival_s: 1e-6 * id as f64,
+                prompt_len: if class == 1 { 512 } else { 32 },
+                new_tokens: if class == 1 { 400 } else { 4 },
+            });
+        }
+    }
+    Trace {
+        scenario: "skewed",
+        requests,
+        closed_loop: None,
+    }
+}
+
+fn fixed_cluster(policy: PolicyKind, n_replicas: usize, slots: usize) -> Cluster {
+    let ladder = QualityLadder::fixed(
+        "base",
+        Allocation::uniform(4, 2),
+        ServiceModel::synthetic("base", 1e-5, 0.01, slots),
+    );
+    Cluster::new(n_replicas, slots, policy, ladder, None, 100_000, 2, 0.0, 1)
+}
+
+fn run_policy(policy: PolicyKind) -> server::RunResult {
+    let s = skewed_scenario();
+    let trace = skewed_trace(4);
+    fixed_cluster(policy, 2, 2).run(&s, &trace)
+}
+
+// ---------------------------------------------------------------------
+// routing policies
+// ---------------------------------------------------------------------
+
+#[test]
+fn jsq_beats_round_robin_on_skewed_trace() {
+    let rr = run_policy(PolicyKind::RoundRobin);
+    let jsq = run_policy(PolicyKind::Jsq);
+    assert_eq!(rr.completed.len(), 8);
+    assert_eq!(jsq.completed.len(), 8);
+    let mean_e2e = |r: &server::RunResult| {
+        r.completed.iter().map(|c| c.e2e_s).sum::<f64>() / r.completed.len() as f64
+    };
+    // RR piles all 4 huge requests on replica 0 while replica 1 idles;
+    // JSQ's token-weighted backlog spreads them 2/2.
+    assert!(
+        mean_e2e(&jsq) < mean_e2e(&rr),
+        "JSQ mean e2e {:.3}s not better than RR {:.3}s",
+        mean_e2e(&jsq),
+        mean_e2e(&rr)
+    );
+    assert!(jsq.makespan_s < rr.makespan_s);
+    // and the load split is visibly more even
+    let spread = |r: &server::RunResult| {
+        (r.replica_busy_s[0] - r.replica_busy_s[1]).abs()
+            / (r.replica_busy_s[0] + r.replica_busy_s[1])
+    };
+    assert!(spread(&jsq) < spread(&rr));
+}
+
+#[test]
+fn power_of_two_is_load_aware_too() {
+    let rr = run_policy(PolicyKind::RoundRobin);
+    let p2c = run_policy(PolicyKind::PowerOfTwo);
+    assert_eq!(p2c.completed.len(), 8);
+    let makespan_gain = rr.makespan_s / p2c.makespan_s;
+    assert!(
+        makespan_gain > 1.0,
+        "p2c makespan {:.3}s vs rr {:.3}s",
+        p2c.makespan_s,
+        rr.makespan_s
+    );
+}
+
+// ---------------------------------------------------------------------
+// EDF scheduling
+// ---------------------------------------------------------------------
+
+#[test]
+fn interactive_class_preempts_batch_in_queue() {
+    // One replica, one slot: service order is pure queue order. Submit
+    // a batch request first, then an interactive one — EDF must serve
+    // the interactive request's prefill before the earlier-arrived
+    // batch request whenever both are waiting.
+    let s = skewed_scenario();
+    let trace = Trace {
+        scenario: "skewed",
+        requests: vec![
+            // occupies the slot first
+            TraceRequest { id: 0, class: 0, arrival_s: 0.0, prompt_len: 32, new_tokens: 4 },
+            // batch arrives before interactive, both queue behind id 0
+            TraceRequest { id: 1, class: 1, arrival_s: 0.001, prompt_len: 512, new_tokens: 400 },
+            TraceRequest { id: 2, class: 0, arrival_s: 0.002, prompt_len: 32, new_tokens: 4 },
+        ],
+        closed_loop: None,
+    };
+    let res = fixed_cluster(PolicyKind::RoundRobin, 1, 1).run(&s, &trace);
+    assert_eq!(res.completed.len(), 3);
+    let finish = |id: u64| res.completed.iter().find(|c| c.id == id).unwrap().finish_s;
+    assert!(
+        finish(2) < finish(1),
+        "interactive id 2 finished at {:.3}s, after batch id 1 at {:.3}s",
+        finish(2),
+        finish(1)
+    );
+}
+
+// ---------------------------------------------------------------------
+// determinism
+// ---------------------------------------------------------------------
+
+#[test]
+fn bench_serve_is_bit_deterministic_across_runs() {
+    let m = spec("minicpm-moe-8x2b").unwrap();
+    let cfg = ServerConfig {
+        replicas: 2,
+        slots_per_replica: 4,
+        n_requests: 64,
+        scenario: ScenarioKind::Bursty,
+        service_in_len: 256,
+        service_out_len: 32,
+        seed: 9,
+        ..Default::default()
+    };
+    let out_a = std::env::temp_dir().join("lexi_server_det_a");
+    let out_b = std::env::temp_dir().join("lexi_server_det_b");
+    let _ = std::fs::remove_dir_all(&out_a);
+    let _ = std::fs::remove_dir_all(&out_b);
+    let a = server::bench_serve(&m, &cfg, None, &out_a).unwrap();
+    let b = server::bench_serve(&m, &cfg, None, &out_b).unwrap();
+    assert_eq!(a, b, "identical config + seed must reproduce bit-for-bit");
+    // the emitted artifacts agree byte-for-byte too
+    for f in [
+        "bench_serve_minicpm-moe-8x2b_bursty.csv",
+        "bench_serve_minicpm-moe-8x2b_bursty.json",
+    ] {
+        let x = std::fs::read(out_a.join(f)).unwrap();
+        let y = std::fs::read(out_b.join(f)).unwrap();
+        assert_eq!(x, y, "{f} differs between identical runs");
+    }
+    // and a different seed produces a different trace
+    let c = server::bench_serve(
+        &m,
+        &ServerConfig { seed: 10, ..cfg },
+        None,
+        &out_b,
+    )
+    .unwrap();
+    assert_ne!(a, c, "seed is ignored");
+}
+
+// ---------------------------------------------------------------------
+// adaptive quality ladder (acceptance criterion)
+// ---------------------------------------------------------------------
+
+#[test]
+fn ladder_beats_fixed_baseline_goodput_under_bursty_load() {
+    let m = spec("qwen1.5-moe-a2.7b").unwrap();
+    let cfg = ServerConfig {
+        replicas: 2,
+        slots_per_replica: 8,
+        n_requests: 400,
+        scenario: ScenarioKind::Bursty,
+        policy: PolicyKind::Jsq,
+        degrade_above: 8,
+        upgrade_below: 2,
+        service_in_len: 256,
+        service_out_len: 32,
+        seed: 3,
+        ..Default::default()
+    };
+    let out = std::env::temp_dir().join("lexi_server_ladder_test");
+    let _ = std::fs::remove_dir_all(&out);
+    let reports = server::bench_serve(&m, &cfg, None, &out).unwrap();
+    let get = |name: &str| reports.iter().find(|r| r.transform == name).unwrap();
+    let base = get("baseline");
+    let ladder = get("lexi-ladder");
+
+    // the controller actually adapted...
+    assert!(ladder.rung_switches > 0, "ladder never switched rungs");
+    let frac = ladder.full_quality_frac.expect("ladder rung 0 is the baseline");
+    assert!(
+        frac < 1.0 && frac > 0.0,
+        "ladder spent {}% at full quality — no adaptation observed",
+        frac * 100.0
+    );
+    // ...and bought strictly more goodput than the fixed-budget baseline
+    assert!(
+        ladder.goodput_rps > base.goodput_rps,
+        "ladder goodput {:.4} rps <= baseline {:.4} rps",
+        ladder.goodput_rps,
+        base.goodput_rps
+    );
+    // throughput ordering sanity: adaptively shedding budget can't be
+    // slower than never shedding it
+    assert!(ladder.throughput_tok_s >= base.throughput_tok_s * 0.98);
+}
+
+#[test]
+fn every_scenario_completes_with_all_transforms() {
+    let m = spec("olmoe-1b-7b").unwrap();
+    let out = std::env::temp_dir().join("lexi_server_scenarios_test");
+    let _ = std::fs::remove_dir_all(&out);
+    for kind in ScenarioKind::all() {
+        let cfg = ServerConfig {
+            replicas: 2,
+            slots_per_replica: 4,
+            n_requests: 48,
+            scenario: kind,
+            service_in_len: 256,
+            service_out_len: 32,
+            ..Default::default()
+        };
+        let reports = server::bench_serve(&m, &cfg, None, &out).unwrap();
+        assert_eq!(reports.len(), 4, "{kind:?}");
+        for r in &reports {
+            assert!(r.n_completed > 0, "{kind:?}/{}: nothing completed", r.transform);
+            assert!(
+                r.n_completed as u64 + r.n_rejected <= 48,
+                "{kind:?}/{}: conservation violated",
+                r.transform
+            );
+            assert!(r.mean_utilization > 0.0 && r.mean_utilization <= 1.0);
+            assert!(r.ttft_p99_s >= r.ttft_p50_s);
+            assert!(r.tpot_p99_s >= r.tpot_p50_s);
+        }
+        let csv = out.join(format!("bench_serve_olmoe-1b-7b_{}.csv", kind.label()));
+        let text = std::fs::read_to_string(&csv).unwrap();
+        assert_eq!(text.lines().count(), 5, "{kind:?}: header + 4 transforms");
+        assert_eq!(text.lines().next().unwrap(), report::CSV_HEADER.join(","));
+    }
+}

@@ -1,0 +1,169 @@
+//! Vendored minimal stand-in for the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so the repo ships the
+//! subset of anyhow's API the codebase actually uses: [`Error`] with a
+//! context chain, [`Result`], the [`Context`] extension trait for
+//! `Result`/`Option`, and the `anyhow!` / `bail!` / `ensure!` macros.
+//! `{e}` prints the outermost message, `{e:#}` the full chain joined by
+//! ": ", and `{e:?}` an anyhow-style "Caused by" listing.
+
+use std::fmt;
+
+/// Error with a most-recent-first context chain.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error {
+            chain: vec![m.to_string()],
+        }
+    }
+
+    /// Prepend a context layer (what `Context::context` attaches).
+    pub fn context<C: fmt::Display>(mut self, c: C) -> Self {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+
+    /// Outermost-first iterator over the message chain.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for c in &self.chain[1..] {
+                write!(f, "\n    {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Extension trait adding context to fallible values.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::core::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($t:tt)+) => {
+        if !($cond) {
+            $crate::bail!($($t)+);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("inner {}", 42);
+    }
+
+    #[test]
+    fn chain_formats() {
+        let e = fails().context("outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner 42");
+        assert!(format!("{e:?}").contains("Caused by"));
+    }
+
+    #[test]
+    fn std_error_converts_with_sources() {
+        let r: Result<i32> = "nope".parse::<i32>().context("parsing");
+        let e = r.unwrap_err();
+        assert!(format!("{e:#}").starts_with("parsing: "));
+    }
+
+    #[test]
+    fn ensure_and_option() {
+        fn f(x: usize) -> Result<usize> {
+            ensure!(x > 1);
+            ensure!(x > 2, "x too small: {x}");
+            Ok(x)
+        }
+        assert!(f(1).is_err());
+        assert!(format!("{}", f(2).unwrap_err()).contains("x too small"));
+        assert_eq!(f(3).unwrap(), 3);
+        let o: Option<i32> = None;
+        assert!(o.context("missing").is_err());
+    }
+}

@@ -1,0 +1,436 @@
+//! Vendored API-compatible stub for the `xla-rs` PJRT bindings.
+//!
+//! The container has no network access and no prebuilt XLA/PJRT shared
+//! library, so the real bindings cannot be fetched or linked. This stub
+//! keeps the whole crate compiling and testable:
+//!
+//! * host-side [`Literal`] operations (create / to_vec / shapes / npz
+//!   reading of uncompressed archives) are fully functional;
+//! * device operations ([`PjRtClient::compile`],
+//!   [`PjRtLoadedExecutable::execute_b`]) return a clear runtime error —
+//!   everything that does NOT touch a compiled executable (perf model,
+//!   LExI search over synthetic/cached tables, the serving simulator)
+//!   works end-to-end.
+//!
+//! Swapping in the real bindings is a one-line Cargo change; no call
+//! site needs to be edited.
+
+use std::fmt;
+use std::path::Path;
+
+const STUB_MSG: &str =
+    "PJRT unavailable: built against the vendored xla stub (rust/vendor/xla); \
+     artifact-backed execution requires the real xla-rs bindings";
+
+#[derive(Clone, Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn err<T>(msg: impl Into<String>) -> Result<T> {
+    Err(Error(msg.into()))
+}
+
+// --------------------------------------------------------------------
+// element types
+// --------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+impl ElementType {
+    pub fn byte_size(&self) -> usize {
+        4
+    }
+}
+
+/// Host-representable element types (f32 / i32 in this repo).
+pub trait ArrayElement: Copy {
+    const TY: ElementType;
+    fn from_le_bytes(b: [u8; 4]) -> Self;
+    fn to_le_bytes(self) -> [u8; 4];
+}
+
+impl ArrayElement for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn from_le_bytes(b: [u8; 4]) -> Self {
+        f32::from_le_bytes(b)
+    }
+    fn to_le_bytes(self) -> [u8; 4] {
+        self.to_le_bytes()
+    }
+}
+
+impl ArrayElement for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn from_le_bytes(b: [u8; 4]) -> Self {
+        i32::from_le_bytes(b)
+    }
+    fn to_le_bytes(self) -> [u8; 4] {
+        self.to_le_bytes()
+    }
+}
+
+// --------------------------------------------------------------------
+// shapes + literals (fully functional on the host)
+// --------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// A host tensor: element type + dims + little-endian bytes.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<i64>,
+    bytes: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Self> {
+        let n: usize = dims.iter().product();
+        if n * ty.byte_size() != data.len() {
+            return err(format!(
+                "literal size mismatch: shape {dims:?} needs {} bytes, got {}",
+                n * ty.byte_size(),
+                data.len()
+            ));
+        }
+        Ok(Literal {
+            ty,
+            dims: dims.iter().map(|&d| d as i64).collect(),
+            bytes: data.to_vec(),
+        })
+    }
+
+    pub fn scalar<T: ArrayElement>(v: T) -> Self {
+        Literal {
+            ty: T::TY,
+            dims: vec![],
+            bytes: v.to_le_bytes().to_vec(),
+        }
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape {
+            dims: self.dims.clone(),
+            ty: self.ty,
+        })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.bytes.len() / self.ty.byte_size()
+    }
+
+    pub fn to_vec<T: ArrayElement>(&self) -> Result<Vec<T>> {
+        if T::TY != self.ty {
+            return err(format!(
+                "element type mismatch: literal is {:?}, requested {:?}",
+                self.ty,
+                T::TY
+            ));
+        }
+        Ok(self
+            .bytes
+            .chunks_exact(4)
+            .map(|c| T::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// The stub never produces tuple literals, so there is nothing to
+    /// decompose.
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        err(format!("decompose_tuple: {STUB_MSG}"))
+    }
+}
+
+// --------------------------------------------------------------------
+// npz reading (uncompressed archives, as written by numpy.savez)
+// --------------------------------------------------------------------
+
+/// Loading literals from raw on-disk formats (the npz subset this repo
+/// exchanges with the Python build step).
+pub trait FromRawBytes: Sized {
+    /// Read every array of an UNCOMPRESSED npz archive, returning
+    /// `(name, literal)` pairs with the `.npy` suffix stripped.
+    fn read_npz<P: AsRef<Path>>(path: P, opts: &()) -> Result<Vec<(String, Self)>>;
+}
+
+impl FromRawBytes for Literal {
+    fn read_npz<P: AsRef<Path>>(path: P, _opts: &()) -> Result<Vec<(String, Self)>> {
+        let bytes = std::fs::read(path.as_ref())
+            .map_err(|e| Error(format!("reading {:?}: {e}", path.as_ref())))?;
+        read_npz_bytes(&bytes)
+    }
+}
+
+fn read_u16(b: &[u8], off: usize) -> u64 {
+    u16::from_le_bytes([b[off], b[off + 1]]) as u64
+}
+
+fn read_u32(b: &[u8], off: usize) -> u64 {
+    u32::from_le_bytes([b[off], b[off + 1], b[off + 2], b[off + 3]]) as u64
+}
+
+fn read_npz_bytes(b: &[u8]) -> Result<Vec<(String, Literal)>> {
+    const LOCAL_SIG: u64 = 0x0403_4b50;
+    let mut out = Vec::new();
+    let mut pos = 0usize;
+    while pos + 30 <= b.len() && read_u32(b, pos) == LOCAL_SIG {
+        let flags = read_u16(b, pos + 6);
+        let method = read_u16(b, pos + 8);
+        let csize = read_u32(b, pos + 18) as usize;
+        let name_len = read_u16(b, pos + 26) as usize;
+        let extra_len = read_u16(b, pos + 28) as usize;
+        let name_off = pos + 30;
+        if name_off + name_len + extra_len > b.len() {
+            return err("npz: truncated local header");
+        }
+        let name = String::from_utf8_lossy(&b[name_off..name_off + name_len]).into_owned();
+        let data_off = name_off + name_len + extra_len;
+        if method != 0 {
+            return err(format!(
+                "npz entry '{name}': compressed archives unsupported by the xla stub \
+                 (use numpy.savez, not savez_compressed)"
+            ));
+        }
+        if flags & 0x8 != 0 && csize == 0 {
+            return err(format!("npz entry '{name}': streamed sizes unsupported"));
+        }
+        if data_off + csize > b.len() {
+            return err(format!("npz entry '{name}': truncated data"));
+        }
+        let lit = parse_npy(&b[data_off..data_off + csize])
+            .map_err(|e| Error(format!("npz entry '{name}': {e}")))?;
+        out.push((name.trim_end_matches(".npy").to_string(), lit));
+        pos = data_off + csize;
+    }
+    if out.is_empty() {
+        return err("npz: no stored entries found (not a zip archive?)");
+    }
+    Ok(out)
+}
+
+fn parse_npy(b: &[u8]) -> Result<Literal> {
+    if b.len() < 10 || &b[..6] != b"\x93NUMPY" {
+        return err("bad npy magic");
+    }
+    let major = b[6];
+    let (hlen, hstart) = if major == 1 {
+        (read_u16(b, 8) as usize, 10)
+    } else {
+        if b.len() < 12 {
+            return err("truncated npy header");
+        }
+        (read_u32(b, 8) as usize, 12)
+    };
+    if hstart + hlen > b.len() {
+        return err("truncated npy header");
+    }
+    let header = String::from_utf8_lossy(&b[hstart..hstart + hlen]).into_owned();
+    let descr = field_str(&header, "descr").ok_or_else(|| Error("npy: no descr".into()))?;
+    let ty = match descr.as_str() {
+        "<f4" => ElementType::F32,
+        "<i4" => ElementType::S32,
+        other => return err(format!("npy dtype '{other}' unsupported (need <f4 or <i4)")),
+    };
+    if header.contains("'fortran_order': True") {
+        return err("npy: fortran order unsupported");
+    }
+    let shape = field_shape(&header).ok_or_else(|| Error("npy: no shape".into()))?;
+    let n: usize = shape.iter().product();
+    let data = &b[hstart + hlen..];
+    if data.len() < n * 4 {
+        return err(format!("npy: expected {} bytes, got {}", n * 4, data.len()));
+    }
+    Literal::create_from_shape_and_untyped_data(ty, &shape, &data[..n * 4])
+}
+
+/// Extract `'key': '<value>'` from an npy header dict.
+fn field_str(header: &str, key: &str) -> Option<String> {
+    let pat = format!("'{key}':");
+    let at = header.find(&pat)? + pat.len();
+    let rest = &header[at..];
+    let open = rest.find('\'')? + 1;
+    let close = open + rest[open..].find('\'')?;
+    Some(rest[open..close].to_string())
+}
+
+/// Extract the shape tuple `(a, b, ...)` from an npy header dict.
+fn field_shape(header: &str) -> Option<Vec<usize>> {
+    let at = header.find("'shape':")? + "'shape':".len();
+    let rest = &header[at..];
+    let open = rest.find('(')? + 1;
+    let close = open + rest[open..].find(')')?;
+    let inner = &rest[open..close];
+    let mut dims = Vec::new();
+    for part in inner.split(',') {
+        let p = part.trim();
+        if p.is_empty() {
+            continue;
+        }
+        dims.push(p.parse::<usize>().ok()?);
+    }
+    Some(dims)
+}
+
+// --------------------------------------------------------------------
+// PJRT surface (stubbed device path)
+// --------------------------------------------------------------------
+
+/// HLO module parsed from text — retained verbatim; only the real
+/// bindings can lower it.
+pub struct HloModuleProto {
+    pub text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| Error(format!("reading {:?}: {e}", path.as_ref())))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+/// Device buffer — in the stub, a host literal in disguise, so upload /
+/// download round-trips work without a device.
+pub struct PjRtBuffer(Literal);
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.0.clone())
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<T: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        err(format!("execute: {STUB_MSG}"))
+    }
+}
+
+#[derive(Clone)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub-cpu".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        err(format!("compile: {STUB_MSG}"))
+    }
+
+    pub fn buffer_from_host_buffer<T: ArrayElement>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        let mut bytes = Vec::with_capacity(data.len() * 4);
+        for v in data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        Ok(PjRtBuffer(Literal::create_from_shape_and_untyped_data(
+            T::TY, dims, &bytes,
+        )?))
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        lit: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Ok(PjRtBuffer(lit.clone()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let xs = [1.5f32, -2.0, 3.25];
+        let mut bytes = Vec::new();
+        for v in &xs {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), xs);
+        assert!(lit.to_vec::<i32>().is_err());
+        assert_eq!(lit.array_shape().unwrap().dims(), &[3]);
+    }
+
+    #[test]
+    fn scalar_and_buffer_roundtrip() {
+        let c = PjRtClient::cpu().unwrap();
+        let b = c.buffer_from_host_buffer(&[1i32, 2, 3, 4], &[2, 2], None).unwrap();
+        let lit = b.to_literal_sync().unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4]);
+        assert_eq!(Literal::scalar(7i32).to_vec::<i32>().unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn execute_reports_stub() {
+        let c = PjRtClient::cpu().unwrap();
+        assert!(c.compile(&XlaComputation).is_err());
+        let e = PjRtLoadedExecutable;
+        let args: Vec<&PjRtBuffer> = vec![];
+        assert!(e.execute_b::<&PjRtBuffer>(&args).is_err());
+    }
+
+    #[test]
+    fn npy_header_parsing() {
+        let h = "{'descr': '<f4', 'fortran_order': False, 'shape': (2, 3), }";
+        assert_eq!(field_str(h, "descr").unwrap(), "<f4");
+        assert_eq!(field_shape(h).unwrap(), vec![2, 3]);
+        let scalar = "{'descr': '<i4', 'fortran_order': False, 'shape': (), }";
+        assert_eq!(field_shape(scalar).unwrap(), Vec::<usize>::new());
+    }
+}

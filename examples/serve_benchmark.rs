@@ -1,26 +1,28 @@
 //! SERVING BENCHMARK DRIVER (DESIGN.md §7, now over `server::`).
 //!
 //! Replays every workload scenario (Poisson, bursty MMPP, diurnal ramp,
-//! closed loop) through the multi-replica front-end and reports, per
-//! transform:
+//! closed loop, flash crowd) through the multi-replica front-end and
+//! reports, per transform:
 //!
 //!   * baseline      (uniform pretrained top-k, fixed)
 //!   * lexi-fixed    (static Stage-2 allocation at the mid-ladder budget)
 //!   * lexi-ladder   (adaptive quality ladder: budget follows load)
 //!   * inter-prune   (50% experts removed, NAEE-style)
 //!
-//! Replicas run in virtual time against perf-model-calibrated service
-//! models, so the sweep needs no artifacts and is bit-reproducible from
-//! the seed. When a measured Stage-1 sensitivity table is cached in the
-//! artifacts dir it is used for the ladder's allocations; otherwise a
-//! synthetic depth profile stands in. Results land in
+//! With the default `sim` backend, replicas run in virtual time against
+//! perf-model-calibrated service models, so the sweep needs no artifacts
+//! and is bit-reproducible from the seed; the `engine` backend drives
+//! real `engine::Engine` replicas through the same front door. When a
+//! measured Stage-1 sensitivity table is cached in the artifacts dir it
+//! is used for the ladder's allocations; otherwise a synthetic depth
+//! profile stands in. Results land in
 //! results/bench_serve_<model>_<scenario>.{csv,json}.
 //!
-//!     cargo run --release --example serve_benchmark -- [model] [n_requests]
+//!     cargo run --release --example serve_benchmark -- [model] [n_requests] [sim|engine]
 
 use anyhow::Result;
 use lexi_moe::config::model::spec;
-use lexi_moe::config::server::{ScenarioKind, ServerConfig};
+use lexi_moe::config::server::{BackendKind, ScenarioKind, ServerConfig};
 use lexi_moe::runtime::Manifest;
 use lexi_moe::server::{self, report};
 
@@ -33,10 +35,15 @@ fn main() -> Result<()> {
         .map(|s| s.parse())
         .transpose()?
         .unwrap_or(512);
+    let backend = match std::env::args().nth(3) {
+        Some(b) => BackendKind::parse(&b)?,
+        None => BackendKind::Sim,
+    };
 
     let mspec = spec(&model_name)?;
     let cfg_base = ServerConfig {
         n_requests,
+        backend,
         ..Default::default()
     };
     let artifacts = Manifest::default_dir();
@@ -44,11 +51,12 @@ fn main() -> Result<()> {
     let out = std::path::PathBuf::from("results");
 
     println!(
-        "=== serve_benchmark: {model_name}, {} replicas x {} slots, policy {}, \
+        "=== serve_benchmark: {model_name}, {} replicas x {} slots, policy {}, backend {}, \
          {n_requests} requests/scenario ===\n",
         cfg_base.replicas,
         cfg_base.slots_per_replica,
-        cfg_base.policy.label()
+        cfg_base.policy.label(),
+        cfg_base.backend.label()
     );
     report::print_header();
     for kind in ScenarioKind::all() {

@@ -6,7 +6,8 @@
 
 use anyhow::{bail, Result};
 
-/// Replica-routing policy of the cluster front door.
+/// Replica-routing policy of the cluster front door. Each kind maps to
+/// a [`RoutingPolicy`](crate::server::router::RoutingPolicy) impl.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PolicyKind {
     /// Cycle through replicas regardless of load.
@@ -47,6 +48,9 @@ pub enum ScenarioKind {
     Diurnal,
     /// Fixed-concurrency closed loop with think times.
     ClosedLoop,
+    /// Step-function overload: calm, then an instantaneous 3x-capacity
+    /// spike, then calm again.
+    FlashCrowd,
 }
 
 impl ScenarioKind {
@@ -56,8 +60,9 @@ impl ScenarioKind {
             "bursty" => ScenarioKind::Bursty,
             "diurnal" => ScenarioKind::Diurnal,
             "closed-loop" | "closedloop" => ScenarioKind::ClosedLoop,
+            "flash-crowd" | "flashcrowd" => ScenarioKind::FlashCrowd,
             other => bail!(
-                "unknown scenario '{other}' (poisson | bursty | diurnal | closed-loop)"
+                "unknown scenario '{other}' (poisson | bursty | diurnal | closed-loop | flash-crowd)"
             ),
         })
     }
@@ -68,16 +73,107 @@ impl ScenarioKind {
             ScenarioKind::Bursty => "bursty",
             ScenarioKind::Diurnal => "diurnal",
             ScenarioKind::ClosedLoop => "closed-loop",
+            ScenarioKind::FlashCrowd => "flash-crowd",
         }
     }
 
-    pub fn all() -> [ScenarioKind; 4] {
+    pub fn all() -> [ScenarioKind; 5] {
         [
             ScenarioKind::Poisson,
             ScenarioKind::Bursty,
             ScenarioKind::Diurnal,
             ScenarioKind::ClosedLoop,
+            ScenarioKind::FlashCrowd,
         ]
+    }
+}
+
+/// Replica-backend family behind the cluster front door.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Virtual-time replicas calibrated from the analytical perf model
+    /// (deterministic, artifact-free).
+    Sim,
+    /// Real `engine::Engine` replicas: compiled PJRT runtime when
+    /// artifacts + real bindings exist, host-synthetic model otherwise.
+    Engine,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "sim" => BackendKind::Sim,
+            "engine" => BackendKind::Engine,
+            other => bail!("unknown backend '{other}' (sim | engine)"),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            BackendKind::Sim => "sim",
+            BackendKind::Engine => "engine",
+        }
+    }
+}
+
+/// Where the Stage-1 sensitivity table for ladder construction comes
+/// from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TableMode {
+    /// Measured table when cached in the artifacts dir, synthetic depth
+    /// profile otherwise.
+    Auto,
+    /// Always the synthetic depth profile.
+    Synthetic,
+    /// Require the measured table; error when it is missing or does not
+    /// match the model.
+    Measured,
+}
+
+impl TableMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "auto" => TableMode::Auto,
+            "synthetic" => TableMode::Synthetic,
+            "measured" => TableMode::Measured,
+            other => bail!("unknown table mode '{other}' (auto | synthetic | measured)"),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            TableMode::Auto => "auto",
+            TableMode::Synthetic => "synthetic",
+            TableMode::Measured => "measured",
+        }
+    }
+}
+
+/// Scope of the adaptive-ladder rung controller.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LadderScope {
+    /// Each replica follows its own queue-depth hysteresis (the PR 1
+    /// behavior, bit-for-bit).
+    PerReplica,
+    /// One controller reads aggregate pressure and staggers switches
+    /// across replicas.
+    Cluster,
+}
+
+impl LadderScope {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "replica" | "per-replica" => LadderScope::PerReplica,
+            "cluster" | "global" => LadderScope::Cluster,
+            other => bail!("unknown ladder scope '{other}' (replica | cluster)"),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            LadderScope::PerReplica => "replica",
+            LadderScope::Cluster => "cluster",
+        }
     }
 }
 
@@ -92,6 +188,10 @@ pub struct ServerConfig {
     pub queue_cap: usize,
     pub policy: PolicyKind,
     pub scenario: ScenarioKind,
+    /// Which replica implementation the cluster drives.
+    pub backend: BackendKind,
+    /// Stage-1 table source for ladder construction.
+    pub table_mode: TableMode,
     /// Requests per trace.
     pub n_requests: usize,
     pub seed: u64,
@@ -102,9 +202,13 @@ pub struct ServerConfig {
     pub degrade_above: usize,
     /// Queue depth below which a replica climbs back toward rung 0.
     pub upgrade_below: usize,
-    /// Minimum virtual time between rung switches (hysteresis).
+    /// Minimum event-loop time between rung switches (hysteresis).
     pub min_dwell_s: f64,
-    /// One-off virtual-time cost of swapping `k_vec` on a replica.
+    /// Per-replica rule vs. cluster-global co-optimization.
+    pub ladder_scope: LadderScope,
+    /// Cluster scope only: rung switches allowed per event-loop instant.
+    pub max_switches_per_instant: usize,
+    /// One-off event-loop cost of swapping `k_vec` on a replica.
     pub reconfig_penalty_s: f64,
     /// Reference prompt/output lengths for service-model calibration.
     pub service_in_len: usize,
@@ -119,12 +223,16 @@ impl Default for ServerConfig {
             queue_cap: 512,
             policy: PolicyKind::Jsq,
             scenario: ScenarioKind::Bursty,
+            backend: BackendKind::Sim,
+            table_mode: TableMode::Auto,
             n_requests: 512,
             seed: 0,
             ladder_fracs: vec![0.8, 0.65, 0.5],
             degrade_above: 24,
             upgrade_below: 4,
             min_dwell_s: 0.5,
+            ladder_scope: LadderScope::PerReplica,
+            max_switches_per_instant: 1,
             reconfig_penalty_s: 0.002,
             service_in_len: 512,
             service_out_len: 64,
@@ -144,8 +252,20 @@ mod tests {
         for s in ScenarioKind::all() {
             assert_eq!(ScenarioKind::parse(s.label()).unwrap(), s);
         }
+        for b in [BackendKind::Sim, BackendKind::Engine] {
+            assert_eq!(BackendKind::parse(b.label()).unwrap(), b);
+        }
+        for t in [TableMode::Auto, TableMode::Synthetic, TableMode::Measured] {
+            assert_eq!(TableMode::parse(t.label()).unwrap(), t);
+        }
+        for l in [LadderScope::PerReplica, LadderScope::Cluster] {
+            assert_eq!(LadderScope::parse(l.label()).unwrap(), l);
+        }
         assert!(PolicyKind::parse("lifo").is_err());
-        assert!(ScenarioKind::parse("flash-crowd").is_err());
+        assert!(ScenarioKind::parse("tsunami").is_err());
+        assert!(BackendKind::parse("quantum").is_err());
+        assert!(TableMode::parse("guess").is_err());
+        assert!(LadderScope::parse("galaxy").is_err());
     }
 
     #[test]
@@ -154,5 +274,8 @@ mod tests {
         assert!(c.replicas >= 1 && c.slots_per_replica >= 1);
         assert!(c.upgrade_below < c.degrade_above);
         assert!(c.ladder_fracs.iter().all(|&f| f > 0.0 && f < 1.0));
+        assert_eq!(c.backend, BackendKind::Sim);
+        assert_eq!(c.ladder_scope, LadderScope::PerReplica);
+        assert!(c.max_switches_per_instant >= 1);
     }
 }

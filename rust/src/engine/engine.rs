@@ -1,17 +1,24 @@
-//! The serving engine: continuous batching over the PJRT runtime.
+//! The serving engine: continuous batching over a model backend.
 //!
 //! One `step()` either (a) admits waiting requests into free slots — a
 //! batched prefill whose per-slot KV rows are spliced into the running
 //! cache, alongside in-flight decodes — or (b) advances every active slot
-//! one decode step. `run_until_complete` drains the queue; the paper's
-//! serving-throughput comparisons (examples/serve_benchmark.rs) replay a
-//! Poisson trace through this loop under each transform.
+//! one decode step. `run_until_complete` drains the queue;
+//! [`Engine::step_detail`] exposes the same scheduling step
+//! non-blockingly (which requests got their first token, which finished)
+//! so a replica backend can drive the engine from an event loop.
+//!
+//! The engine is generic over [`ModelBackend`]: the compiled PJRT
+//! [`ModelRuntime`] in artifact-backed deployments, or the host-side
+//! [`SyntheticModel`](crate::runtime::SyntheticModel) when no artifacts
+//! are available (the scheduling, KV accounting, and sampling paths are
+//! identical either way).
 
 use anyhow::Result;
 
 use crate::config::serving::ServingConfig;
 use crate::runtime::executable::KvState;
-use crate::runtime::ModelRuntime;
+use crate::runtime::{ModelBackend, ModelRuntime};
 use crate::util::Pcg32;
 
 use super::batcher::{Batcher, Slot};
@@ -20,10 +27,32 @@ use super::metrics::EngineMetrics;
 use super::request::{FinishReason, Request, RequestId, RequestOutput, SamplingParams};
 use super::sampler;
 
+/// What one scheduling step did.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepKind {
+    /// Admitted waiting requests with one batched prefill.
+    Prefill,
+    /// Advanced every active slot one decode step.
+    Decode,
+    /// Nothing to do.
+    Idle,
+}
+
+/// Outcome of one scheduling step — the non-blocking drain surface used
+/// by event-loop drivers (`server::EngineReplica`).
+#[derive(Debug)]
+pub struct StepOutcome {
+    pub kind: StepKind,
+    /// Requests whose first token was produced by this step.
+    pub first_tokens: Vec<RequestId>,
+    /// Requests that finished during this step.
+    pub finished: Vec<RequestOutput>,
+}
+
 /// Per-model serving engine bound to one transform configuration
 /// (k_vec + gate_bias + already-edited weights inside `model`).
-pub struct Engine<'m> {
-    pub model: &'m ModelRuntime,
+pub struct Engine<'m, M: ModelBackend = ModelRuntime> {
+    pub model: &'m M,
     pub cfg: ServingConfig,
     k_vec: Vec<i32>,
     gate_bias: Vec<f32>,
@@ -38,14 +67,14 @@ pub struct Engine<'m> {
     outputs: Vec<RequestOutput>,
 }
 
-impl<'m> Engine<'m> {
+impl<'m, M: ModelBackend> Engine<'m, M> {
     pub fn new(
-        model: &'m ModelRuntime,
+        model: &'m M,
         cfg: ServingConfig,
         k_vec: Vec<i32>,
         gate_bias: Vec<f32>,
     ) -> Result<Self> {
-        let e = &model.entry;
+        let e = model.entry();
         anyhow::ensure!(cfg.batch == e.batch, "config batch != graph batch");
         anyhow::ensure!(k_vec.len() == e.n_layers);
         anyhow::ensure!(gate_bias.len() == e.n_layers * e.n_experts);
@@ -93,6 +122,41 @@ impl<'m> Engine<'m> {
         self.batcher.is_idle()
     }
 
+    /// Requests currently occupying decode slots.
+    pub fn n_active(&self) -> usize {
+        self.batcher.n_active()
+    }
+
+    /// Requests waiting in the engine-internal queue.
+    pub fn n_waiting(&self) -> usize {
+        self.batcher.waiting.len()
+    }
+
+    /// Current per-layer active-expert budgets.
+    pub fn k_vec(&self) -> &[i32] {
+        &self.k_vec
+    }
+
+    /// Swap the per-layer active-expert budgets (LExI quality-ladder
+    /// rung reconfiguration). Takes effect from the next forward call —
+    /// no recompilation, k is a runtime graph argument.
+    pub fn set_k_vec(&mut self, k_vec: Vec<i32>) -> Result<()> {
+        anyhow::ensure!(
+            k_vec.len() == self.model.entry().n_layers,
+            "k_vec has {} entries, graph has {} layers",
+            k_vec.len(),
+            self.model.entry().n_layers
+        );
+        self.k_vec = k_vec;
+        Ok(())
+    }
+
+    /// Drain finished outputs without waiting for the queue to empty
+    /// (the non-blocking sibling of [`Engine::run_until_complete`]).
+    pub fn take_outputs(&mut self) -> Vec<RequestOutput> {
+        std::mem::take(&mut self.outputs)
+    }
+
     /// Drive the engine until every submitted request has completed.
     pub fn run_until_complete(&mut self) -> Result<Vec<RequestOutput>> {
         self.metrics.start();
@@ -105,14 +169,34 @@ impl<'m> Engine<'m> {
 
     /// One scheduling step. Returns false when there was nothing to do.
     pub fn step(&mut self) -> Result<bool> {
-        if self.try_admit()? {
-            return Ok(true);
-        }
-        if self.batcher.n_active() > 0 {
+        let outcome = self.step_detail()?;
+        let progressed = outcome.kind != StepKind::Idle;
+        // keep run_until_complete semantics: outputs accumulate until
+        // drained at the end
+        self.outputs.extend(outcome.finished);
+        Ok(progressed)
+    }
+
+    /// One scheduling step, reporting which requests got their first
+    /// token and which finished. Finished outputs are handed to the
+    /// caller (NOT retained for [`Engine::run_until_complete`]).
+    pub fn step_detail(&mut self) -> Result<StepOutcome> {
+        let before = self.outputs.len();
+        let first_tokens = self.try_admit()?;
+        let kind = if !first_tokens.is_empty() {
+            StepKind::Prefill
+        } else if self.batcher.n_active() > 0 {
             self.decode_step()?;
-            return Ok(true);
-        }
-        Ok(false)
+            StepKind::Decode
+        } else {
+            StepKind::Idle
+        };
+        let finished = self.outputs.split_off(before);
+        Ok(StepOutcome {
+            kind,
+            first_tokens,
+            finished,
+        })
     }
 
     // ----------------------------------------------------------------
@@ -120,13 +204,14 @@ impl<'m> Engine<'m> {
     // ----------------------------------------------------------------
 
     /// Admit as many waiting requests as slots + KV blocks allow; run one
-    /// batched prefill for all of them.
-    fn try_admit(&mut self) -> Result<bool> {
+    /// batched prefill for all of them. Returns the admitted request ids
+    /// (each produced its first token).
+    fn try_admit(&mut self) -> Result<Vec<RequestId>> {
         let free = self.batcher.free_slot_indices();
         if free.is_empty() || self.batcher.waiting.is_empty() {
-            return Ok(false);
+            return Ok(Vec::new());
         }
-        let e = self.model.entry.clone();
+        let e = self.model.entry().clone();
         let mut admitted: Vec<(usize, super::request::Tracked)> = Vec::new();
         for &slot_idx in &free {
             let kv_mgr = &mut self.kv_mgr;
@@ -146,7 +231,7 @@ impl<'m> Engine<'m> {
             }
         }
         if admitted.is_empty() {
-            return Ok(false);
+            return Ok(Vec::new());
         }
 
         // Build the padded token matrix.
@@ -176,8 +261,10 @@ impl<'m> Engine<'m> {
         }
         self.kv = self.model.upload_kv(&kv_run)?;
 
+        let mut ids = Vec::with_capacity(admitted.len());
         for (slot_idx, mut t) in admitted {
             let plen = t.req.prompt.len();
+            ids.push(t.req.id);
             // first token from the last prompt position's logits
             let row = &out.logits
                 [(slot_idx * e.prefill_len + plen - 1) * e.vocab..][..e.vocab];
@@ -195,7 +282,7 @@ impl<'m> Engine<'m> {
             // single-token requests finish immediately
             self.maybe_finish(slot_idx)?;
         }
-        Ok(true)
+        Ok(ids)
     }
 
     // ----------------------------------------------------------------
@@ -203,7 +290,7 @@ impl<'m> Engine<'m> {
     // ----------------------------------------------------------------
 
     fn decode_step(&mut self) -> Result<()> {
-        let e = self.model.entry.clone();
+        let e = self.model.entry().clone();
         let mut tokens = vec![0i32; e.batch];
         let mut pos = vec![(e.max_seq - 1) as i32; e.batch]; // inactive parking
         let mut active = Vec::new();
@@ -243,7 +330,7 @@ impl<'m> Engine<'m> {
 
     /// Finish the slot if EOS / token budget / KV capacity says so.
     fn maybe_finish(&mut self, idx: usize) -> Result<()> {
-        let e = &self.model.entry;
+        let e = self.model.entry();
         let (done, reason) = {
             let slot = self.batcher.slots[idx].as_ref().unwrap();
             let t = &slot.tracked;
@@ -283,13 +370,13 @@ impl<'m> Engine<'m> {
     /// up to `batch` prompts, greedy-decodes `n_new` tokens each, returns
     /// the generated ids per prompt. Bypasses queueing/metrics.
     pub fn generate_batch(
-        model: &ModelRuntime,
+        model: &M,
         prompts: &[&[i32]],
         n_new: usize,
         k_vec: &[i32],
         gate_bias: &[f32],
     ) -> Result<Vec<Vec<i32>>> {
-        let e = &model.entry;
+        let e = model.entry();
         anyhow::ensure!(prompts.len() <= e.batch);
         let mut tokens = vec![0i32; e.batch * e.prefill_len];
         for (i, p) in prompts.iter().enumerate() {

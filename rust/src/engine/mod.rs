@@ -10,7 +10,7 @@ pub mod request;
 pub mod sampler;
 pub mod tokenizer;
 
-pub use engine::Engine;
+pub use engine::{Engine, StepKind, StepOutcome};
 pub use kv_manager::KvBlockManager;
 pub use metrics::MetricsSummary;
 pub use request::{FinishReason, Request, RequestId, RequestOutput, SamplingParams};

@@ -18,10 +18,15 @@
 //! - [`lexi`]    — the paper's contribution (Alg. 1 + Alg. 2)
 //! - [`pruning`] — inter / intra / dynamic-skip baselines
 //! - [`perfmodel`] — H100 roofline + load-balance + comm simulator
-//! - [`runtime`] — PJRT bridge (HLO text -> compiled executables)
-//! - [`engine`]  — continuous-batching serving stack
+//! - [`runtime`] — model backends: the PJRT bridge (HLO text ->
+//!   compiled executables) and the synthetic host model, both behind
+//!   [`runtime::ModelBackend`]
+//! - [`engine`]  — continuous-batching serving stack (generic over the
+//!   model backend)
 //! - [`server`]  — multi-replica front-end: scenarios, SLO scheduling,
-//!   routing, adaptive LExI quality ladder
+//!   pluggable routing, the [`server::ReplicaBackend`] trait over
+//!   simulated/real replicas, and the cluster-global adaptive LExI
+//!   quality ladder
 //! - [`eval`]    — task harness (ppl, passkey, longqa, probes, VLM)
 //! - [`figures`] — regeneration of every paper table/figure
 //! - [`util`]    — rng, stats, csv

@@ -8,7 +8,9 @@
 //!   lexi eval     --model M [--lexi B|--inter F|--intra F]
 //!   lexi serve    --model M [--requests N]
 //!   lexi bench-serve [--scenario S] [--replicas N] [--policy P]
-//!                    [--model M] [--requests N]   multi-replica front-end
+//!                    [--backend sim|engine] [--table auto|synthetic|measured]
+//!                    [--ladder replica|cluster] [--model M] [--requests N]
+//!                    multi-replica front-end (sim or real engine replicas)
 //!   lexi figures  --exp fig2|fig3|fig9|figs4-8|table1|all
 //!
 //! Global flags: --artifacts DIR (default ./artifacts), --out DIR
@@ -123,8 +125,10 @@ fn print_help() {
          commands: table1 | profile | search | optimize | eval | serve | bench-serve | figures\n\
          flags: --model M --budget B --artifacts DIR --out DIR --iters N --fast\n\
          figures: --exp table1|fig2|fig3|fig9|figs4-8|ablations|all [--models a,b]\n\
-         bench-serve: --scenario poisson|bursty|diurnal|closed-loop|all --replicas N\n\
-                      --policy rr|jsq|p2c --requests N --model M --seed S"
+         bench-serve: --scenario poisson|bursty|diurnal|closed-loop|flash-crowd|all\n\
+                      --replicas N --slots N --policy rr|jsq|p2c --backend sim|engine\n\
+                      --table auto|synthetic|measured --ladder replica|cluster\n\
+                      --requests N --model M --seed S"
     );
 }
 
@@ -307,10 +311,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 /// Multi-replica serving benchmark over the `server::` subsystem.
-/// Artifact-free: the ladder falls back to a synthetic Stage-1 table
-/// when no measured table is cached for the model.
+/// `--backend sim` (default) replays perf-model-calibrated virtual-time
+/// replicas; `--backend engine` drives real `engine::Engine` replicas
+/// through the same front door. The ladder's Stage-1 table source is
+/// controlled by `--table` and logged per run.
 fn cmd_bench_serve(args: &Args) -> Result<()> {
-    use lexi_moe::config::server::{PolicyKind, ScenarioKind, ServerConfig};
+    use lexi_moe::config::server::{
+        BackendKind, LadderScope, PolicyKind, ScenarioKind, ServerConfig, TableMode,
+    };
 
     let model_name = args.get("model").unwrap_or("qwen1.5-moe-a2.7b");
     let mspec = spec(model_name)?;
@@ -319,8 +327,21 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
         cfg.replicas = n.parse().context("--replicas must be an integer")?;
         anyhow::ensure!(cfg.replicas >= 1, "--replicas must be >= 1");
     }
+    if let Some(n) = args.get("slots") {
+        cfg.slots_per_replica = n.parse().context("--slots must be an integer")?;
+        anyhow::ensure!(cfg.slots_per_replica >= 1, "--slots must be >= 1");
+    }
     if let Some(p) = args.get("policy") {
         cfg.policy = PolicyKind::parse(p)?;
+    }
+    if let Some(b) = args.get("backend") {
+        cfg.backend = BackendKind::parse(b)?;
+    }
+    if let Some(t) = args.get("table") {
+        cfg.table_mode = TableMode::parse(t)?;
+    }
+    if let Some(l) = args.get("ladder") {
+        cfg.ladder_scope = LadderScope::parse(l)?;
     }
     if let Some(n) = args.get("requests") {
         cfg.n_requests = n.parse().context("--requests must be an integer")?;
@@ -339,9 +360,13 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
     let artifacts = args.artifacts();
     let artifacts_opt = artifacts.exists().then_some(artifacts.as_path());
     println!(
-        "=== bench-serve: {model_name}, {} replicas, policy {}, {} requests/scenario ===\n",
+        "=== bench-serve: {model_name}, {} replicas x {} slots, policy {}, backend {}, \
+         ladder scope {}, {} requests/scenario ===\n",
         cfg.replicas,
+        cfg.slots_per_replica,
         cfg.policy.label(),
+        cfg.backend.label(),
+        cfg.ladder_scope.label(),
         cfg.n_requests
     );
     lexi_moe::server::report::print_header();

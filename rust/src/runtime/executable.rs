@@ -329,3 +329,28 @@ impl OutBuf {
         }
     }
 }
+
+impl super::ModelBackend for ModelRuntime {
+    fn entry(&self) -> &ManifestModel {
+        &self.entry
+    }
+
+    fn prefill(&self, tokens: &[i32], k_vec: &[i32], gate_bias: &[f32]) -> Result<PrefillOut> {
+        ModelRuntime::prefill(self, tokens, k_vec, gate_bias)
+    }
+
+    fn decode(
+        &self,
+        kv: &KvState,
+        tokens: &[i32],
+        pos: &[i32],
+        k_vec: &[i32],
+        gate_bias: &[f32],
+    ) -> Result<DecodeOut> {
+        ModelRuntime::decode(self, kv, tokens, pos, k_vec, gate_bias)
+    }
+
+    fn upload_kv(&self, t: &HostTensor) -> Result<KvState> {
+        ModelRuntime::upload_kv(self, t)
+    }
+}

@@ -8,15 +8,45 @@
 
 pub mod executable;
 pub mod manifest;
+pub mod synthetic;
 pub mod tensor;
 pub mod weights;
 
-pub use executable::{KvState, ModelRuntime};
+pub use executable::{DecodeOut, KvState, ModelRuntime, PrefillOut};
 pub use manifest::{Manifest, ManifestModel};
+pub use synthetic::SyntheticModel;
 pub use tensor::HostTensor;
 pub use weights::HostParams;
 
 use anyhow::Result;
+
+/// The executable-model surface the serving engine drives: prefill,
+/// decode, and KV upload against one model entry. Implemented by the
+/// compiled PJRT [`ModelRuntime`] (artifact-backed deployments) and by
+/// the host-side [`SyntheticModel`] (deterministic stand-in when no
+/// artifacts / real XLA bindings are available), so the whole
+/// engine + cluster stack is exercisable in both worlds.
+pub trait ModelBackend {
+    /// Graph shapes + vocabulary of the bound model.
+    fn entry(&self) -> &ManifestModel;
+
+    /// Batched prefill: tokens `[B*T]` row-major, per-layer active-expert
+    /// counts, gate bias `[L*E]`. Returns full logits + the KV cache.
+    fn prefill(&self, tokens: &[i32], k_vec: &[i32], gate_bias: &[f32]) -> Result<PrefillOut>;
+
+    /// One decode step over all batch slots.
+    fn decode(
+        &self,
+        kv: &KvState,
+        tokens: &[i32],
+        pos: &[i32],
+        k_vec: &[i32],
+        gate_bias: &[f32],
+    ) -> Result<DecodeOut>;
+
+    /// Upload a host KV tensor as the running cache state.
+    fn upload_kv(&self, t: &HostTensor) -> Result<KvState>;
+}
 
 /// Shared PJRT client (CPU). One per process.
 pub struct Runtime {

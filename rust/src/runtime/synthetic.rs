@@ -1,0 +1,205 @@
+//! Host-side synthetic model backend: the deterministic stand-in that
+//! lets the FULL engine stack (batcher, KV accounting, sampler, metrics,
+//! `server::EngineReplica`) run end-to-end without compiled artifacts or
+//! real XLA bindings.
+//!
+//! The "model" maps each `(last token, position)` pair to one hot logit
+//! via an integer hash, so greedy decoding yields reproducible token
+//! streams at negligible cost. The KV cache keeps the real layout
+//! ([`ManifestModel::kv_dims`]) with minimal head dims, so the engine's
+//! prefill-splice and upload paths execute unchanged. Quality numbers
+//! from this backend are meaningless by construction — it exists to
+//! exercise scheduling, not accuracy.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use super::executable::{DecodeOut, KvState, PrefillOut};
+use super::manifest::{ManifestFiles, ManifestModel};
+use super::tensor::HostTensor;
+use super::ModelBackend;
+
+/// A host-only model with real graph shapes and hash-derived logits.
+pub struct SyntheticModel {
+    entry: ManifestModel,
+}
+
+impl SyntheticModel {
+    /// Build a backend with the structural dims that matter to serving
+    /// (layer/expert counts drive `k_vec`/`gate_bias` shapes; batch and
+    /// sequence shapes drive slots and KV capacity). Head/hidden dims
+    /// are kept minimal so per-step KV traffic stays cheap.
+    pub fn new(
+        name: &str,
+        n_layers: usize,
+        n_experts: usize,
+        top_k: usize,
+        batch: usize,
+        prefill_len: usize,
+        max_seq: usize,
+    ) -> Self {
+        assert!(batch >= 1 && n_layers >= 1 && prefill_len >= 1);
+        assert!(max_seq > prefill_len, "max_seq must leave decode headroom");
+        let entry = ManifestModel {
+            name: name.to_string(),
+            n_layers,
+            n_experts,
+            top_k,
+            hidden: 8,
+            ffn: 8,
+            n_heads: 1,
+            head_dim: 2,
+            vocab: 128,
+            max_seq,
+            prefill_len,
+            batch,
+            is_vlm: false,
+            profile_tokens: 16,
+            files: ManifestFiles {
+                params: String::new(),
+                prefill: String::new(),
+                decode: String::new(),
+                moe_layer: String::new(),
+                calib: String::new(),
+                train_log: String::new(),
+            },
+            param_order: Vec::new(),
+            param_shapes: HashMap::new(),
+        };
+        SyntheticModel { entry }
+    }
+
+    /// One-hot "next token" for a `(token, pos)` pair: a fixed integer
+    /// mix, never landing on the special ids 0..3 (pad/bos/eos).
+    fn write_logit_row(&self, token: i32, pos: i32, row: &mut [f32]) {
+        let v = self.entry.vocab as u64;
+        let h = (token as u64)
+            .wrapping_mul(0x9e37_79b9)
+            .wrapping_add((pos as u64).wrapping_mul(0x85eb_ca6b))
+            .wrapping_add(0x27d4_eb2f);
+        row[3 + (h % (v - 3)) as usize] = 1.0;
+    }
+
+    /// A KV literal of the real layout (content carries no state the
+    /// synthetic logits depend on).
+    fn blank_kv(&self) -> Result<KvState> {
+        Ok(KvState::Host(
+            HostTensor::zeros(self.entry.kv_dims().to_vec()).to_literal()?,
+        ))
+    }
+}
+
+impl ModelBackend for SyntheticModel {
+    fn entry(&self) -> &ManifestModel {
+        &self.entry
+    }
+
+    fn prefill(&self, tokens: &[i32], k_vec: &[i32], gate_bias: &[f32]) -> Result<PrefillOut> {
+        let e = &self.entry;
+        anyhow::ensure!(tokens.len() == e.batch * e.prefill_len);
+        anyhow::ensure!(k_vec.len() == e.n_layers);
+        anyhow::ensure!(gate_bias.len() == e.n_layers * e.n_experts);
+        let mut logits = vec![0.0f32; e.batch * e.prefill_len * e.vocab];
+        for b in 0..e.batch {
+            for p in 0..e.prefill_len {
+                let at = b * e.prefill_len + p;
+                self.write_logit_row(
+                    tokens[at],
+                    p as i32,
+                    &mut logits[at * e.vocab..(at + 1) * e.vocab],
+                );
+            }
+        }
+        Ok(PrefillOut {
+            logits,
+            kv: self.blank_kv()?,
+        })
+    }
+
+    fn decode(
+        &self,
+        kv: &KvState,
+        tokens: &[i32],
+        pos: &[i32],
+        k_vec: &[i32],
+        gate_bias: &[f32],
+    ) -> Result<DecodeOut> {
+        let e = &self.entry;
+        anyhow::ensure!(tokens.len() == e.batch && pos.len() == e.batch);
+        anyhow::ensure!(k_vec.len() == e.n_layers);
+        anyhow::ensure!(gate_bias.len() == e.n_layers * e.n_experts);
+        let mut logits = vec![0.0f32; e.batch * e.vocab];
+        for b in 0..e.batch {
+            self.write_logit_row(
+                tokens[b],
+                pos[b],
+                &mut logits[b * e.vocab..(b + 1) * e.vocab],
+            );
+        }
+        // pass the cache through; its contents are inert here
+        let kv = match kv {
+            KvState::Host(lit) => KvState::Host(lit.clone()),
+            KvState::Device(_) => self.blank_kv()?,
+        };
+        Ok(DecodeOut { logits, kv })
+    }
+
+    fn upload_kv(&self, t: &HostTensor) -> Result<KvState> {
+        Ok(KvState::Host(t.to_literal()?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> SyntheticModel {
+        SyntheticModel::new("syn", 4, 8, 2, 2, 16, 32)
+    }
+
+    #[test]
+    fn shapes_match_the_manifest_contract() {
+        let m = model();
+        let e = m.entry();
+        assert_eq!(e.kv_len(), 4 * 2 * 2 * 32 * 1 * 2);
+        let tokens = vec![5i32; e.batch * e.prefill_len];
+        let k = vec![2i32; e.n_layers];
+        let bias = vec![0.0f32; e.n_layers * e.n_experts];
+        let out = ModelBackend::prefill(&m, &tokens, &k, &bias).unwrap();
+        assert_eq!(out.logits.len(), e.batch * e.prefill_len * e.vocab);
+        let host = out.kv.to_host().unwrap();
+        assert_eq!(host.len(), e.kv_len());
+    }
+
+    #[test]
+    fn decode_is_deterministic_and_avoids_special_tokens() {
+        let m = model();
+        let e = m.entry().clone();
+        let kv = m.upload_kv(&HostTensor::zeros(e.kv_dims().to_vec())).unwrap();
+        let k = vec![2i32; e.n_layers];
+        let bias = vec![0.0f32; e.n_layers * e.n_experts];
+        let a = ModelBackend::decode(&m, &kv, &[7, 9], &[3, 4], &k, &bias).unwrap();
+        let b = ModelBackend::decode(&m, &kv, &[7, 9], &[3, 4], &k, &bias).unwrap();
+        assert_eq!(a.logits, b.logits);
+        for slot in 0..e.batch {
+            let row = &a.logits[slot * e.vocab..(slot + 1) * e.vocab];
+            let arg = crate::engine::sampler::argmax(row) as usize;
+            assert!(arg >= 3, "special token {arg} sampled");
+            assert_eq!(row[arg], 1.0);
+        }
+        // different inputs move the argmax
+        let c = ModelBackend::decode(&m, &kv, &[8, 9], &[3, 4], &k, &bias).unwrap();
+        assert_ne!(a.logits, c.logits);
+    }
+
+    #[test]
+    fn bad_shapes_are_rejected() {
+        let m = model();
+        let e = m.entry().clone();
+        let bias = vec![0.0f32; e.n_layers * e.n_experts];
+        assert!(ModelBackend::prefill(&m, &[1, 2, 3], &[2; 4], &bias).is_err());
+        let kv = m.upload_kv(&HostTensor::zeros(e.kv_dims().to_vec())).unwrap();
+        assert!(ModelBackend::decode(&m, &kv, &[1, 2], &[0, 0], &[2; 3], &bias).is_err());
+    }
+}

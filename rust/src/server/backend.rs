@@ -1,0 +1,122 @@
+//! The replica-backend trait: one cluster front door for simulated and
+//! real engine replicas.
+//!
+//! [`Cluster`](super::router::Cluster) drives every replica through this
+//! surface — admit, start a phase, report the next completion time,
+//! finish the phase, reconfigure the quality-ladder rung — so the same
+//! routing policies, admission control, SLO scheduling, and
+//! cluster-global ladder controller apply whether the replica is the
+//! perf-model-calibrated virtual-time [`Replica`](super::replica::Replica)
+//! or an [`EngineReplica`](super::engine_backend::EngineReplica) wrapping
+//! the real continuous-batching [`Engine`](crate::engine::Engine).
+
+use super::scheduler::QueuedRequest;
+
+/// A finished request with its serving timeline (event-loop clock).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CompletedRequest {
+    pub id: u64,
+    pub class: usize,
+    pub arrival_s: f64,
+    pub prompt_len: usize,
+    pub tokens: usize,
+    pub ttft_s: f64,
+    pub e2e_s: f64,
+    pub finish_s: f64,
+    pub replica: usize,
+}
+
+impl CompletedRequest {
+    /// Mean time per output token after the first.
+    pub fn tpot_s(&self) -> f64 {
+        (self.e2e_s - self.ttft_s) / (self.tokens.saturating_sub(1).max(1)) as f64
+    }
+}
+
+/// Lifetime counters a backend reports after a run.
+#[derive(Clone, Debug, Default)]
+pub struct BackendStats {
+    pub busy_s: f64,
+    pub prefill_calls: u64,
+    pub decode_steps: u64,
+    pub rung_switches: u64,
+    /// Busy time accumulated per quality-ladder rung.
+    pub rung_time_s: Vec<f64>,
+}
+
+/// One replica behind the cluster front door.
+///
+/// The contract mirrors a discrete-event loop: the cluster calls
+/// [`try_start`](ReplicaBackend::try_start) on every idle backend, takes
+/// the earliest [`next_event_s`](ReplicaBackend::next_event_s) across
+/// backends and pending arrivals, and calls
+/// [`complete_phase`](ReplicaBackend::complete_phase) on every backend
+/// whose phase is due. Implementations map their own notion of time onto
+/// the loop's clock: the simulated replica computes phase durations from
+/// a calibrated service model, the engine-backed replica measures the
+/// wall-clock cost of each `Engine::step` and advances the loop by it.
+pub trait ReplicaBackend {
+    /// Stable replica index (= position in the cluster).
+    fn id(&self) -> usize;
+
+    /// Admit a routed request into the local queue.
+    fn admit(&mut self, req: QueuedRequest);
+
+    /// Requests waiting in the local queue (the ladder pressure signal).
+    fn queue_len(&self) -> usize;
+
+    /// Queued + running requests (the admission-control signal).
+    fn outstanding(&self) -> usize;
+
+    /// Token-weighted backlog (the JSQ / p2c routing signal).
+    fn load_cost(&self) -> u64;
+
+    /// Current quality-ladder rung (0 = full quality).
+    fn rung(&self) -> usize;
+
+    /// Event-loop time of the last rung switch (−∞ before the first).
+    fn last_switch_s(&self) -> f64;
+
+    /// Switch ladder rungs; `penalty_s` is charged to the next phase.
+    fn set_rung(&mut self, rung: usize, now: f64, penalty_s: f64);
+
+    /// Begin the next phase if idle. Returns false when there is
+    /// nothing to do.
+    fn try_start(&mut self, now: f64) -> bool;
+
+    /// Event-loop time at which the in-flight phase finishes (`None`
+    /// while idle).
+    fn next_event_s(&self) -> Option<f64>;
+
+    /// Finish the in-flight phase at `now`, appending completions.
+    fn complete_phase(&mut self, now: f64, out: &mut Vec<CompletedRequest>);
+
+    /// No queued, running, or in-flight work left.
+    fn is_drained(&self) -> bool;
+
+    /// Lifetime counters for the run report.
+    fn stats(&self) -> BackendStats;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tpot_guards_single_token_requests() {
+        let c = CompletedRequest {
+            id: 0,
+            class: 0,
+            arrival_s: 0.0,
+            prompt_len: 8,
+            tokens: 1,
+            ttft_s: 0.5,
+            e2e_s: 0.5,
+            finish_s: 0.5,
+            replica: 0,
+        };
+        assert_eq!(c.tpot_s(), 0.0);
+        let c2 = CompletedRequest { tokens: 5, e2e_s: 0.9, ..c };
+        assert!((c2.tpot_s() - 0.1).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,294 @@
+//! Engine-backed replica: the real continuous-batching `engine::Engine`
+//! behind the cluster front door.
+//!
+//! An [`EngineReplica`] keeps the cluster-side EDF queue (so class
+//! priorities and TTFT deadlines order dispatch exactly as on the
+//! simulated backend), feeds the engine one scheduling step at a time,
+//! and maps wall-clock onto the event loop: each `Engine::step` is
+//! measured with a monotonic clock and becomes one phase of `now +
+//! elapsed` in cluster time. Rung reconfiguration swaps the engine's
+//! per-layer `k_vec` from the shared [`QualityLadder`] (the LExI
+//! mechanism itself — active experts are a runtime argument, not a
+//! recompilation).
+//!
+//! Trace requests carry only shapes, so prompts are synthesized
+//! deterministically from the request id over the shared vocab layout
+//! (ids ≥ 3, clear of pad/bos/eos); with real artifacts the same path
+//! accepts tokenized text via `engine::Tokenizer`.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use crate::engine::{Engine, SamplingParams, StepKind, StepOutcome};
+use crate::runtime::ModelBackend;
+use crate::util::Pcg32;
+
+use super::backend::{BackendStats, CompletedRequest, ReplicaBackend};
+use super::ladder::QualityLadder;
+use super::scheduler::{EdfQueue, QueuedRequest};
+
+/// Cluster-side bookkeeping for a request inside the engine.
+struct Inflight {
+    trace_id: u64,
+    class: usize,
+    arrival_s: f64,
+    prompt_len: usize,
+    new_tokens: usize,
+    /// Event-loop time of the first token (set at the phase boundary of
+    /// the prefill that produced it).
+    first_token_s: Option<f64>,
+}
+
+/// One real engine replica driven through [`ReplicaBackend`].
+pub struct EngineReplica<'m, M: ModelBackend> {
+    id: usize,
+    engine: Engine<'m, M>,
+    ladder: Rc<QualityLadder>,
+    queue: EdfQueue,
+    slots: usize,
+    vocab: usize,
+    rung: usize,
+    last_switch_s: f64,
+    pending_penalty_s: f64,
+    /// In-flight phase: (event-loop end time, what the step did).
+    phase: Option<(f64, StepOutcome)>,
+    /// Engine request id -> cluster request metadata.
+    inflight: HashMap<u64, Inflight>,
+    /// Set when the engine errored mid-run: the replica drains itself
+    /// (remaining work is dropped and shows up as missing completions)
+    /// instead of taking the whole benchmark process down.
+    failed: bool,
+    // ---- counters ----
+    busy_s: f64,
+    prefill_calls: u64,
+    decode_steps: u64,
+    rung_switches: u64,
+    rung_time_s: Vec<f64>,
+}
+
+impl<'m, M: ModelBackend> EngineReplica<'m, M> {
+    /// Wrap an engine already configured with the ladder's rung-0
+    /// `k_vec` (see [`QualityLadder::k_vec`]).
+    pub fn new(id: usize, engine: Engine<'m, M>, ladder: Rc<QualityLadder>) -> Self {
+        let entry = engine.model.entry();
+        let slots = entry.batch;
+        let vocab = entry.vocab;
+        let n_rungs = ladder.n_rungs().max(1);
+        EngineReplica {
+            id,
+            engine,
+            ladder,
+            queue: EdfQueue::new(),
+            slots,
+            vocab,
+            rung: 0,
+            last_switch_s: f64::NEG_INFINITY,
+            pending_penalty_s: 0.0,
+            phase: None,
+            inflight: HashMap::new(),
+            failed: false,
+            busy_s: 0.0,
+            prefill_calls: 0,
+            decode_steps: 0,
+            rung_switches: 0,
+            rung_time_s: vec![0.0; n_rungs],
+        }
+    }
+
+    /// Move EDF-ordered requests from the cluster-side queue into the
+    /// engine, up to its free slot capacity.
+    fn submit_waiting(&mut self) {
+        let occupied = self.engine.n_active() + self.engine.n_waiting();
+        let mut free = self.slots.saturating_sub(occupied);
+        while free > 0 {
+            let Some(req) = self.queue.pop() else { break };
+            let prompt = synth_prompt(req.id, req.prompt_len, self.vocab);
+            let sampling = SamplingParams {
+                temperature: 0.0,
+                top_p: 1.0,
+                max_new_tokens: req.new_tokens.max(1),
+                stop_on_eos: false,
+                seed: req.id,
+            };
+            let engine_id = self
+                .engine
+                .submit(prompt, sampling)
+                .expect("engine queue must be sized above the cluster admission cap");
+            self.inflight.insert(
+                engine_id,
+                Inflight {
+                    trace_id: req.id,
+                    class: req.class,
+                    arrival_s: req.arrival_s,
+                    prompt_len: req.prompt_len,
+                    new_tokens: req.new_tokens,
+                    first_token_s: None,
+                },
+            );
+            free -= 1;
+        }
+    }
+}
+
+impl<'m, M: ModelBackend> ReplicaBackend for EngineReplica<'m, M> {
+    fn id(&self) -> usize {
+        self.id
+    }
+
+    fn admit(&mut self, req: QueuedRequest) {
+        if self.failed {
+            // dropped; surfaces as a missing completion in the report
+            return;
+        }
+        self.queue.push(req);
+    }
+
+    fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    fn outstanding(&self) -> usize {
+        self.queue.len() + self.inflight.len()
+    }
+
+    fn load_cost(&self) -> u64 {
+        // queued cost + the full decode budget of everything already
+        // inside the engine (per-token progress stays engine-internal)
+        self.queue.pending_cost()
+            + self
+                .inflight
+                .values()
+                .map(|m| m.new_tokens as u64)
+                .sum::<u64>()
+    }
+
+    fn rung(&self) -> usize {
+        self.rung
+    }
+
+    fn last_switch_s(&self) -> f64 {
+        self.last_switch_s
+    }
+
+    fn set_rung(&mut self, rung: usize, now: f64, penalty_s: f64) {
+        if rung == self.rung {
+            return;
+        }
+        let k_vec = self.ladder.k_vec(rung);
+        self.engine
+            .set_k_vec(k_vec)
+            .expect("ladder allocation layer count must match the engine graph");
+        self.rung = rung;
+        self.last_switch_s = now;
+        self.rung_switches += 1;
+        self.pending_penalty_s += penalty_s;
+    }
+
+    fn try_start(&mut self, now: f64) -> bool {
+        if self.phase.is_some() || self.failed {
+            return false;
+        }
+        self.submit_waiting();
+        if self.engine.idle() {
+            return false;
+        }
+        let wall = Instant::now();
+        let outcome = match self.engine.step_detail() {
+            Ok(o) => o,
+            Err(e) => {
+                // fail THIS replica, not the process: drop its remaining
+                // work so the event loop drains and the report surfaces
+                // the shortfall as missing completions
+                eprintln!("replica {}: engine step failed ({e:#}); dropping its workload", self.id);
+                self.failed = true;
+                while self.queue.pop().is_some() {}
+                self.inflight.clear();
+                return false;
+            }
+        };
+        let dt = wall.elapsed().as_secs_f64().max(1e-9);
+        match outcome.kind {
+            StepKind::Idle => return false,
+            StepKind::Prefill => self.prefill_calls += 1,
+            StepKind::Decode => self.decode_steps += 1,
+        }
+        let dur = self.pending_penalty_s + dt;
+        self.pending_penalty_s = 0.0;
+        self.busy_s += dur;
+        self.rung_time_s[self.rung.min(self.rung_time_s.len() - 1)] += dur;
+        self.phase = Some((now + dur, outcome));
+        true
+    }
+
+    fn next_event_s(&self) -> Option<f64> {
+        self.phase.as_ref().map(|(end_s, _)| *end_s)
+    }
+
+    fn complete_phase(&mut self, now: f64, out: &mut Vec<CompletedRequest>) {
+        let Some((_end_s, outcome)) = self.phase.take() else {
+            return;
+        };
+        // first tokens materialize at the phase boundary...
+        for id in &outcome.first_tokens {
+            if let Some(m) = self.inflight.get_mut(id) {
+                m.first_token_s = Some(now);
+            }
+        }
+        // ...so a request finishing in the same step still gets a
+        // well-ordered ttft <= e2e
+        for o in &outcome.finished {
+            if let Some(m) = self.inflight.remove(&o.id) {
+                let first = m.first_token_s.unwrap_or(now);
+                out.push(CompletedRequest {
+                    id: m.trace_id,
+                    class: m.class,
+                    arrival_s: m.arrival_s,
+                    prompt_len: m.prompt_len,
+                    tokens: o.tokens.len(),
+                    ttft_s: first - m.arrival_s,
+                    e2e_s: now - m.arrival_s,
+                    finish_s: now,
+                    replica: self.id,
+                });
+            }
+        }
+    }
+
+    fn is_drained(&self) -> bool {
+        self.phase.is_none() && self.queue.is_empty() && self.inflight.is_empty()
+    }
+
+    fn stats(&self) -> BackendStats {
+        BackendStats {
+            busy_s: self.busy_s,
+            prefill_calls: self.prefill_calls,
+            decode_steps: self.decode_steps,
+            rung_switches: self.rung_switches,
+            rung_time_s: self.rung_time_s.clone(),
+        }
+    }
+}
+
+/// Deterministic synthetic prompt for a trace request: seeded by the
+/// request id, token ids in `[3, vocab)` (clear of pad/bos/eos).
+pub fn synth_prompt(id: u64, len: usize, vocab: usize) -> Vec<i32> {
+    let mut rng = Pcg32::new(id.wrapping_add(1), 0x70a6_2026);
+    let span = vocab.saturating_sub(3).max(1) as u32;
+    (0..len).map(|_| 3 + rng.gen_range(span) as i32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synth_prompts_are_deterministic_and_in_vocab() {
+        let a = synth_prompt(7, 32, 128);
+        let b = synth_prompt(7, 32, 128);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 32);
+        assert!(a.iter().all(|&t| (3..128).contains(&t)));
+        assert_ne!(a, synth_prompt(8, 32, 128));
+    }
+}

@@ -7,15 +7,28 @@
 //! budget, zero quality loss), deeper rungs are LExI allocations at 80 /
 //! 65 / 50 % budgets, each the `exact_dp` optimum of the Stage-1
 //! sensitivity table (deterministic, so every run and replica agrees on
-//! the ladder). A hysteretic controller degrades a replica one rung when
-//! its queue grows past a threshold and climbs back when it drains,
-//! trading bounded proxy-quality loss for decode speed exactly when the
-//! SLO is at risk.
+//! the ladder).
+//!
+//! Rung decisions are made by ONE [`LadderController`] per cluster,
+//! observing every replica through the
+//! [`ReplicaBackend`](super::backend::ReplicaBackend) surface. It runs
+//! in two scopes:
+//!
+//! * [`LadderScope::PerReplica`] — each replica follows its own
+//!   hysteretic queue-depth rule (the original controller, preserved
+//!   bit-for-bit: degrade one rung past `degrade_above`, climb back
+//!   below `upgrade_below`, dwell between switches).
+//! * [`LadderScope::Cluster`] — the controller reads *aggregate* queue
+//!   pressure and co-optimizes the assignment: at most
+//!   `max_switches_per_instant` replicas move per event-loop instant,
+//!   deepest-queue replicas degrade first and shallowest-queue replicas
+//!   recover first, so a cluster under a burst staggers down the ladder
+//!   instead of flapping every replica simultaneously.
 
 use anyhow::{Context, Result};
 
 use crate::config::model::ModelSpec;
-use crate::config::server::ServerConfig;
+use crate::config::server::{LadderScope, ServerConfig};
 use crate::lexi::evolution::exact_dp;
 use crate::lexi::SensitivityTable;
 use crate::moe::allocation::{Allocation, Bounds};
@@ -127,17 +140,44 @@ impl QualityLadder {
     pub fn service(&self, rung: usize) -> &ServiceModel {
         &self.rungs[rung.min(self.rungs.len() - 1)].service
     }
+
+    /// Per-layer top-k vector of a rung, in the engine's `k_vec` format.
+    pub fn k_vec(&self, rung: usize) -> Vec<i32> {
+        self.rungs[rung.min(self.rungs.len() - 1)]
+            .allocation
+            .k
+            .iter()
+            .map(|&k| k as i32)
+            .collect()
+    }
 }
 
-/// Hysteretic rung controller (per replica, stateless policy).
+/// Hysteretic rung policy (stateless decision rule + controller scope).
 #[derive(Clone, Copy, Debug)]
 pub struct LadderPolicy {
     /// Queue depth at which a replica degrades one rung.
     pub degrade_above: usize,
     /// Queue depth below which it climbs back toward rung 0.
     pub upgrade_below: usize,
-    /// Minimum time between switches.
+    /// Minimum time between switches of one replica.
     pub min_dwell_s: f64,
+    /// Per-replica rule vs. cluster-global co-optimization.
+    pub scope: LadderScope,
+    /// Cluster scope only: replicas allowed to switch per event-loop
+    /// instant (the stagger knob).
+    pub max_switches_per_instant: usize,
+}
+
+impl Default for LadderPolicy {
+    fn default() -> Self {
+        LadderPolicy {
+            degrade_above: 24,
+            upgrade_below: 4,
+            min_dwell_s: 0.5,
+            scope: LadderScope::PerReplica,
+            max_switches_per_instant: 1,
+        }
+    }
 }
 
 impl LadderPolicy {
@@ -146,6 +186,8 @@ impl LadderPolicy {
             degrade_above: cfg.degrade_above,
             upgrade_below: cfg.upgrade_below,
             min_dwell_s: cfg.min_dwell_s,
+            scope: cfg.ladder_scope,
+            max_switches_per_instant: cfg.max_switches_per_instant,
         }
     }
 
@@ -170,6 +212,115 @@ impl LadderPolicy {
         } else {
             current
         }
+    }
+}
+
+/// One replica's controller-visible state, snapshotted by the cluster.
+#[derive(Clone, Copy, Debug)]
+pub struct ReplicaView {
+    pub rung: usize,
+    pub queue_len: usize,
+    pub last_switch_s: f64,
+}
+
+/// The cluster's single rung controller: turns replica snapshots into
+/// target rungs each event-loop instant.
+#[derive(Clone, Debug)]
+pub struct LadderController {
+    pub policy: LadderPolicy,
+    /// Event-loop instant of the last cluster-scope decision.
+    last_instant_s: f64,
+    /// Switches already spent at that instant.
+    switched_at_instant: usize,
+}
+
+impl LadderController {
+    pub fn new(policy: LadderPolicy) -> Self {
+        LadderController {
+            policy,
+            last_instant_s: f64::NEG_INFINITY,
+            switched_at_instant: 0,
+        }
+    }
+
+    /// Target rung per replica. The cluster applies any change via
+    /// [`ReplicaBackend::set_rung`](super::backend::ReplicaBackend::set_rung).
+    pub fn decide(&mut self, views: &[ReplicaView], n_rungs: usize, now: f64) -> Vec<usize> {
+        match self.policy.scope {
+            LadderScope::PerReplica => views
+                .iter()
+                .map(|v| {
+                    self.policy
+                        .decide(v.rung, n_rungs, v.queue_len, now, v.last_switch_s)
+                })
+                .collect(),
+            LadderScope::Cluster => self.decide_cluster(views, n_rungs, now),
+        }
+    }
+
+    /// Cluster-global co-optimization: one pressure reading for the
+    /// whole cluster, a bounded number of staggered moves per instant.
+    fn decide_cluster(&mut self, views: &[ReplicaView], n_rungs: usize, now: f64) -> Vec<usize> {
+        let mut targets: Vec<usize> = views.iter().map(|v| v.rung).collect();
+        if n_rungs <= 1 || views.is_empty() {
+            return targets;
+        }
+        // the instant budget makes staggering robust to the event loop
+        // revisiting the same timestamp (arrival and completion rounds)
+        if now != self.last_instant_s {
+            self.last_instant_s = now;
+            self.switched_at_instant = 0;
+        }
+        let mut budget = self
+            .policy
+            .max_switches_per_instant
+            .saturating_sub(self.switched_at_instant);
+        if budget == 0 {
+            return targets;
+        }
+        let total_q: usize = views.iter().map(|v| v.queue_len).sum();
+        let mean_q = total_q as f64 / views.len() as f64;
+        let mut order: Vec<usize> = (0..views.len()).collect();
+        if mean_q > self.policy.degrade_above as f64 {
+            // overload: spread degradation — highest-quality replicas
+            // first, deepest queue breaking ties
+            order.sort_by_key(|&i| (views[i].rung, std::cmp::Reverse(views[i].queue_len), i));
+            for i in order {
+                if budget == 0 {
+                    break;
+                }
+                let v = views[i];
+                if now - v.last_switch_s < self.policy.min_dwell_s {
+                    continue;
+                }
+                if v.rung + 1 < n_rungs {
+                    targets[i] = v.rung + 1;
+                    budget -= 1;
+                    self.switched_at_instant += 1;
+                }
+            }
+        } else if mean_q < self.policy.upgrade_below as f64 {
+            // drained: most-degraded replicas recover first, shallowest
+            // queue breaking ties
+            order.sort_by_key(|&i| {
+                (std::cmp::Reverse(views[i].rung), views[i].queue_len, i)
+            });
+            for i in order {
+                if budget == 0 {
+                    break;
+                }
+                let v = views[i];
+                if now - v.last_switch_s < self.policy.min_dwell_s {
+                    continue;
+                }
+                if v.rung > 0 {
+                    targets[i] = v.rung - 1;
+                    budget -= 1;
+                    self.switched_at_instant += 1;
+                }
+            }
+        }
+        targets
     }
 }
 
@@ -213,6 +364,10 @@ mod tests {
             assert!(w[1].allocation.budget() < w[0].allocation.budget());
         }
         assert_eq!(l.rungs[0].quality_loss, 0.0);
+        // k_vec export matches the allocation
+        let kv = l.k_vec(0);
+        assert_eq!(kv.len(), 16);
+        assert!(kv.iter().all(|&k| k == 8));
     }
 
     #[test]
@@ -231,6 +386,7 @@ mod tests {
             degrade_above: 10,
             upgrade_below: 2,
             min_dwell_s: 1.0,
+            ..Default::default()
         };
         // pressure -> degrade one step
         assert_eq!(p.decide(0, 4, 11, 5.0, 0.0), 1);
@@ -244,5 +400,66 @@ mod tests {
         assert_eq!(p.decide(3, 4, 100, 5.0, 0.0), 3);
         // single-rung ladders never switch
         assert_eq!(p.decide(0, 1, 100, 5.0, 0.0), 0);
+    }
+
+    fn view(rung: usize, queue_len: usize) -> ReplicaView {
+        ReplicaView {
+            rung,
+            queue_len,
+            last_switch_s: f64::NEG_INFINITY,
+        }
+    }
+
+    #[test]
+    fn per_replica_scope_reproduces_local_rule() {
+        let p = LadderPolicy {
+            degrade_above: 10,
+            upgrade_below: 2,
+            min_dwell_s: 0.0,
+            scope: LadderScope::PerReplica,
+            max_switches_per_instant: 1,
+        };
+        let mut ctl = LadderController::new(p);
+        // per-replica ignores the stagger budget: both degrade at once
+        let t = ctl.decide(&[view(0, 20), view(0, 20)], 4, 1.0);
+        assert_eq!(t, vec![1, 1]);
+    }
+
+    #[test]
+    fn cluster_scope_staggers_and_prioritizes_pressure() {
+        let p = LadderPolicy {
+            degrade_above: 10,
+            upgrade_below: 2,
+            min_dwell_s: 0.0,
+            scope: LadderScope::Cluster,
+            max_switches_per_instant: 1,
+        };
+        let mut ctl = LadderController::new(p);
+        // overload everywhere: only the deepest queue degrades now
+        let t = ctl.decide(&[view(0, 15), view(0, 40)], 4, 1.0);
+        assert_eq!(t, vec![0, 1]);
+        // same instant again: budget spent, nobody else moves
+        let t = ctl.decide(&[view(0, 15), view(1, 40)], 4, 1.0);
+        assert_eq!(t, vec![0, 1]);
+        // next instant: the other replica takes its step
+        let t = ctl.decide(&[view(0, 15), view(1, 40)], 4, 2.0);
+        assert_eq!(t, vec![1, 1]);
+        // drained cluster recovers shallowest-first, one per instant
+        let t = ctl.decide(&[view(2, 0), view(2, 1)], 4, 3.0);
+        assert_eq!(t, vec![1, 2]);
+    }
+
+    #[test]
+    fn cluster_scope_holds_in_the_hysteresis_band() {
+        let p = LadderPolicy {
+            degrade_above: 10,
+            upgrade_below: 2,
+            min_dwell_s: 0.0,
+            scope: LadderScope::Cluster,
+            max_switches_per_instant: 8,
+        };
+        let mut ctl = LadderController::new(p);
+        let t = ctl.decide(&[view(1, 5), view(1, 6)], 4, 1.0);
+        assert_eq!(t, vec![1, 1]);
     }
 }

@@ -3,20 +3,25 @@
 //! The paper's claim is about *serving* efficiency, so this module puts
 //! LExI where it earns its keep: a cluster of N continuous-batching
 //! replicas behind admission control, SLO-aware EDF scheduling, and
-//! pluggable routing, driven by seeded workload scenarios. Replicas run
-//! in virtual time against perf-model-calibrated service models, so a
-//! full comparison sweep (baseline / fixed LExI / adaptive LExI ladder /
-//! inter-pruning, across four scenarios) needs no artifacts and is
-//! bit-reproducible from a seed.
+//! pluggable routing, driven by seeded workload scenarios. The cluster
+//! is generic over [`ReplicaBackend`]: virtual-time replicas calibrated
+//! from the analytical perf model (deterministic, artifact-free,
+//! bit-reproducible from a seed), or real `engine::Engine` replicas
+//! behind the same front door (`--backend engine`), wall-clock mapped
+//! onto the event loop.
 //!
 //! Module map:
 //! - [`workload`]  — arrival processes x request-shape profiles
 //! - [`scheduler`] — admission control + multi-class EDF queues
+//! - [`backend`]   — the `ReplicaBackend` trait the cluster drives
 //! - [`replica`]   — virtual-time continuous-batching replica
-//! - [`router`]    — cluster, routing policies, discrete-event loop
-//! - [`ladder`]    — adaptive LExI quality ladder (Stage-2 over time)
+//! - [`engine_backend`] — real-engine replica (wall-clock phases)
+//! - [`router`]    — cluster, `RoutingPolicy` impls, the event loop
+//! - [`ladder`]    — LExI quality ladder + cluster-global controller
 //! - [`report`]    — TTFT/TPOT percentiles, goodput-under-SLO, CSV/JSON
 
+pub mod backend;
+pub mod engine_backend;
 pub mod ladder;
 pub mod replica;
 pub mod report;
@@ -24,39 +29,102 @@ pub mod router;
 pub mod scheduler;
 pub mod workload;
 
-use std::path::Path;
+use std::fmt;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::config::model::ModelSpec;
-use crate::config::server::ServerConfig;
+use crate::config::server::{BackendKind, ServerConfig, TableMode};
+use crate::config::serving::ServingConfig;
+use crate::engine::Engine;
 use crate::lexi::SensitivityTable;
 use crate::moe::allocation::Allocation;
 use crate::moe::transform::Transform;
 use crate::perfmodel::PerfModel;
+use crate::runtime::{Manifest, ModelBackend, ModelRuntime, Runtime, SyntheticModel};
 
-pub use ladder::{LadderPolicy, QualityLadder, Rung};
-pub use replica::{CompletedRequest, Replica, ServiceModel};
+pub use backend::{BackendStats, CompletedRequest, ReplicaBackend};
+pub use engine_backend::EngineReplica;
+pub use ladder::{LadderController, LadderPolicy, QualityLadder, ReplicaView, Rung};
+pub use replica::{Replica, ServiceModel};
 pub use report::TransformReport;
-pub use router::{Cluster, RunResult};
+pub use router::{Cluster, RoutingPolicy, RunResult};
 pub use scheduler::{AdmissionControl, EdfQueue, QueuedRequest};
 pub use workload::{Scenario, SloTarget, Trace, TraceRequest};
+
+/// Where the Stage-1 table used for ladder construction came from.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TableSource {
+    /// Measured table cached by `lexi profile` in the artifacts dir.
+    Measured(PathBuf),
+    /// Deterministic synthetic depth profile.
+    Synthetic,
+}
+
+impl fmt::Display for TableSource {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TableSource::Measured(p) => write!(f, "measured ({})", p.display()),
+            TableSource::Synthetic => write!(f, "synthetic depth profile"),
+        }
+    }
+}
 
 /// Stage-1 table for ladder construction: measured table when cached in
 /// the artifacts dir, synthetic depth profile otherwise (deterministic
 /// either way).
 pub fn sensitivity_table(spec: &ModelSpec, artifacts: Option<&Path>, seed: u64) -> SensitivityTable {
-    if let Some(root) = artifacts {
-        let cache = crate::lexi::pipeline::table_path(root, spec.name);
-        if let Ok(t) = SensitivityTable::load_json(&cache) {
-            // both dims must match the spec: ladder construction searches
-            // Bounds::paper(spec.top_k), which indexes loss[j][k-1]
-            if t.n_layers() == spec.n_layers && t.k_base == spec.top_k as u32 {
-                return t;
+    sensitivity_table_sourced(spec, artifacts, seed, TableMode::Auto)
+        .expect("auto table mode is infallible")
+        .0
+}
+
+/// [`sensitivity_table`] with an explicit source policy, reporting which
+/// source was actually used (`lexi bench-serve --table ...`).
+pub fn sensitivity_table_sourced(
+    spec: &ModelSpec,
+    artifacts: Option<&Path>,
+    seed: u64,
+    mode: TableMode,
+) -> Result<(SensitivityTable, TableSource)> {
+    if mode != TableMode::Synthetic {
+        if let Some(root) = artifacts {
+            let cache = crate::lexi::pipeline::table_path(root, spec.name);
+            if let Ok(t) = SensitivityTable::load_json(&cache) {
+                // both dims must match the spec: ladder construction
+                // searches Bounds::paper(spec.top_k), which indexes
+                // loss[j][k-1]
+                if t.n_layers() == spec.n_layers && t.k_base == spec.top_k as u32 {
+                    return Ok((t, TableSource::Measured(cache)));
+                }
+                if mode == TableMode::Measured {
+                    bail!(
+                        "cached table at {} does not match {} ({} layers x k<={} expected); \
+                         re-run `lexi profile --model {} --force`",
+                        cache.display(),
+                        spec.name,
+                        spec.n_layers,
+                        spec.top_k,
+                        spec.name
+                    );
+                }
+            } else if mode == TableMode::Measured {
+                bail!(
+                    "no measured sensitivity table at {}; run `lexi profile --model {}` first",
+                    cache.display(),
+                    spec.name
+                );
             }
+        } else if mode == TableMode::Measured {
+            bail!("--table measured needs an artifacts dir with a cached Stage-1 table");
         }
     }
-    SensitivityTable::synthetic(spec.name, spec.n_layers, spec.top_k as u32, |x| 0.8 + 2.4 * x, seed)
+    let t = SensitivityTable::synthetic(spec.name, spec.n_layers, spec.top_k as u32, |x| {
+        0.8 + 2.4 * x
+    }, seed);
+    Ok((t, TableSource::Synthetic))
 }
 
 /// The transform line-up every serving comparison runs.
@@ -134,7 +202,8 @@ pub fn bench_serve(
     artifacts: Option<&Path>,
     out_dir: &Path,
 ) -> Result<Vec<TransformReport>> {
-    let table = sensitivity_table(spec, artifacts, cfg.seed);
+    let (table, source) = sensitivity_table_sourced(spec, artifacts, cfg.seed, cfg.table_mode)?;
+    println!("ladder Stage-1 table source: {source}");
     let pm = PerfModel::new(spec.clone(), cfg.seed);
     let line_up = contenders(spec, &table, cfg, &pm)?;
     let base_svc = &line_up[0].ladder.rungs[0].service;
@@ -152,8 +221,41 @@ pub fn bench_serve(
     );
     let trace = scenario.generate(cfg.n_requests, cfg.seed);
 
+    let reports = match cfg.backend {
+        BackendKind::Sim => sim_reports(&line_up, &scenario, &trace, cfg),
+        BackendKind::Engine => match try_real_runtime(spec, artifacts) {
+            Some(model) => {
+                println!("engine backend: compiled PJRT runtime ({})", spec.name);
+                engine_reports(&model, &line_up, &scenario, &trace, cfg)?
+            }
+            None => {
+                let model = synthetic_engine_model(spec, cfg, &scenario);
+                engine_reports(&model, &line_up, &scenario, &trace, cfg)?
+            }
+        },
+    };
+
+    // sim keeps the PR 1 file names (bit-identical artifacts from the
+    // same seed); engine-backed runs get their own stem so the two
+    // backends' results can sit side by side for cross-validation
+    let stem = match cfg.backend {
+        BackendKind::Sim => format!("bench_serve_{}_{}", spec.name, scenario.name),
+        BackendKind::Engine => format!("bench_serve_{}_{}_engine", spec.name, scenario.name),
+    };
+    report::write_csv(&out_dir.join(format!("{stem}.csv")), &reports)?;
+    report::write_json(&out_dir.join(format!("{stem}.json")), &reports)?;
+    Ok(reports)
+}
+
+/// The PR 1 path: virtual-time replicas, bit-identical from the seed.
+fn sim_reports(
+    line_up: &[Contender],
+    scenario: &Scenario,
+    trace: &Trace,
+    cfg: &ServerConfig,
+) -> Vec<TransformReport> {
     let mut reports = Vec::new();
-    for c in &line_up {
+    for c in line_up {
         let quality: Vec<f64> = c.ladder.rungs.iter().map(|r| r.quality_loss).collect();
         let policy = c.adaptive.then(|| LadderPolicy::from_config(cfg));
         let mut cluster = Cluster::new(
@@ -167,20 +269,131 @@ pub fn bench_serve(
             cfg.reconfig_penalty_s,
             cfg.seed,
         );
-        let res = cluster.run(&scenario, &trace);
+        let res = cluster.run(scenario, trace);
         reports.push(TransformReport::from_run(
-            &scenario,
+            scenario,
             c.label,
             cfg.policy.label(),
             &res,
             &quality,
         ));
     }
+    reports
+}
 
-    let stem = format!("bench_serve_{}_{}", spec.name, scenario.name);
-    report::write_csv(&out_dir.join(format!("{stem}.csv")), &reports)?;
-    report::write_json(&out_dir.join(format!("{stem}.json")), &reports)?;
+/// Real engine replicas behind the same front door: every contender gets
+/// a fresh cluster of `Engine`s over `model`, phases timed by wall
+/// clock.
+fn engine_reports<M: ModelBackend>(
+    model: &M,
+    line_up: &[Contender],
+    scenario: &Scenario,
+    trace: &Trace,
+    cfg: &ServerConfig,
+) -> Result<Vec<TransformReport>> {
+    let entry = model.entry().clone();
+    if entry.batch != cfg.slots_per_replica {
+        // the compiled graph's static batch wins over --slots; say so,
+        // since capacity-relative arrival rates were calibrated for the
+        // configured slot count
+        println!(
+            "engine backend: graph batch {} overrides --slots {}",
+            entry.batch, cfg.slots_per_replica
+        );
+    }
+    let scfg = ServingConfig {
+        batch: entry.batch,
+        max_seq: entry.max_seq,
+        prefill_len: entry.prefill_len,
+        kv_block: 16,
+        kv_blocks_total: entry.batch * entry.max_seq.div_ceil(16),
+        // the cluster-level admission cap bounds outstanding work; the
+        // engine-internal queue only ever holds up to one batch
+        queue_cap: cfg.queue_cap + cfg.n_requests + 1,
+        max_new_tokens: 16,
+        decode_burst: 8,
+    };
+    let mut reports = Vec::new();
+    for c in line_up {
+        let quality: Vec<f64> = c.ladder.rungs.iter().map(|r| r.quality_loss).collect();
+        let ladder = Rc::new(c.ladder.clone());
+        let policy = c.adaptive.then(|| LadderPolicy::from_config(cfg));
+        let mut backends: Vec<Box<dyn ReplicaBackend + '_>> = Vec::new();
+        for i in 0..cfg.replicas {
+            let engine = Engine::new(
+                model,
+                scfg.clone(),
+                ladder.k_vec(0),
+                vec![0.0f32; entry.n_layers * entry.n_experts],
+            )?;
+            backends.push(Box::new(EngineReplica::new(i, engine, Rc::clone(&ladder))));
+        }
+        let mut cluster = Cluster::from_backends(
+            backends,
+            cfg.policy,
+            Rc::clone(&ladder),
+            policy,
+            cfg.queue_cap,
+            scenario.profiles.len(),
+            cfg.reconfig_penalty_s,
+            cfg.seed,
+        );
+        let res = cluster.run(scenario, trace);
+        reports.push(TransformReport::from_run(
+            scenario,
+            c.label,
+            cfg.policy.label(),
+            &res,
+            &quality,
+        ));
+    }
     Ok(reports)
+}
+
+/// Compiled runtime for `--backend engine` when artifacts AND real XLA
+/// bindings are available; `None` (with a notice) otherwise.
+fn try_real_runtime(spec: &ModelSpec, artifacts: Option<&Path>) -> Option<ModelRuntime> {
+    let root = artifacts?;
+    let load = || -> Result<ModelRuntime> {
+        let rt = Runtime::cpu()?;
+        let manifest = Manifest::load(root)?;
+        ModelRuntime::load(&rt, &manifest, spec.name)
+    };
+    match load() {
+        Ok(m) => Some(m),
+        Err(e) => {
+            println!(
+                "engine backend: compiled runtime unavailable ({e:#}); \
+                 driving engine::Engine over the synthetic host model"
+            );
+            None
+        }
+    }
+}
+
+/// Host-synthetic model sized so the scenario's largest request shape
+/// fits without truncation.
+fn synthetic_engine_model(
+    spec: &ModelSpec,
+    cfg: &ServerConfig,
+    scenario: &Scenario,
+) -> SyntheticModel {
+    let max_prompt = scenario
+        .profiles
+        .iter()
+        .map(|p| p.prompt_hi)
+        .max()
+        .unwrap_or(512);
+    let max_gen = scenario.profiles.iter().map(|p| p.gen_hi).max().unwrap_or(64);
+    SyntheticModel::new(
+        spec.name,
+        spec.n_layers,
+        spec.n_experts,
+        spec.top_k,
+        cfg.slots_per_replica,
+        max_prompt,
+        max_prompt + max_gen + 2,
+    )
 }
 
 /// Cluster capacity estimate (requests/s) for scenario calibration.
@@ -220,5 +433,27 @@ mod tests {
         }
         assert!(out.join("bench_serve_minicpm-moe-8x2b_poisson.csv").exists());
         assert!(out.join("bench_serve_minicpm-moe-8x2b_poisson.json").exists());
+    }
+
+    #[test]
+    fn table_source_policies_behave() {
+        let m = spec("olmoe-1b-7b").unwrap();
+        // no artifacts dir: auto + synthetic fall back, measured errors
+        let (_, src) = sensitivity_table_sourced(&m, None, 0, TableMode::Auto).unwrap();
+        assert_eq!(src, TableSource::Synthetic);
+        let (_, src) = sensitivity_table_sourced(&m, None, 0, TableMode::Synthetic).unwrap();
+        assert_eq!(src, TableSource::Synthetic);
+        assert!(sensitivity_table_sourced(&m, None, 0, TableMode::Measured).is_err());
+
+        // cache a measured-shaped table and watch auto pick it up
+        let root = std::env::temp_dir().join("lexi_table_source_test");
+        let _ = std::fs::remove_dir_all(&root);
+        let cache = crate::lexi::pipeline::table_path(&root, m.name);
+        let t = SensitivityTable::synthetic(m.name, m.n_layers, m.top_k as u32, |x| x, 3);
+        t.save_json(&cache).unwrap();
+        let (got, src) =
+            sensitivity_table_sourced(&m, Some(root.as_path()), 0, TableMode::Measured).unwrap();
+        assert_eq!(src, TableSource::Measured(cache));
+        assert_eq!(got.n_layers(), m.n_layers);
     }
 }

@@ -6,12 +6,20 @@
 //! durations from a [`ServiceModel`] calibrated against the analytical
 //! H100 perf model instead of executing XLA graphs. That makes cluster
 //! experiments deterministic, artifact-free, and fast enough to replay
-//! hundreds of thousands of virtual requests.
+//! hundreds of thousands of virtual requests. It is the default
+//! implementation of [`ReplicaBackend`]; the engine-backed twin lives in
+//! [`super::engine_backend`].
+
+use std::rc::Rc;
 
 use crate::moe::transform::Transform;
 use crate::perfmodel::PerfModel;
 
+use super::backend::{BackendStats, ReplicaBackend};
+use super::ladder::QualityLadder;
 use super::scheduler::EdfQueue;
+
+pub use super::backend::CompletedRequest;
 
 /// Step-time model of one replica under one transform / ladder rung.
 #[derive(Clone, Debug)]
@@ -93,27 +101,6 @@ pub struct SimSlot {
     pub produced: usize,
 }
 
-/// A finished request with its serving timeline.
-#[derive(Clone, Debug, PartialEq)]
-pub struct CompletedRequest {
-    pub id: u64,
-    pub class: usize,
-    pub arrival_s: f64,
-    pub prompt_len: usize,
-    pub tokens: usize,
-    pub ttft_s: f64,
-    pub e2e_s: f64,
-    pub finish_s: f64,
-    pub replica: usize,
-}
-
-impl CompletedRequest {
-    /// Mean time per output token after the first.
-    pub fn tpot_s(&self) -> f64 {
-        (self.e2e_s - self.ttft_s) / (self.tokens.saturating_sub(1).max(1)) as f64
-    }
-}
-
 #[derive(Clone, Debug)]
 enum Phase {
     Idle,
@@ -122,11 +109,14 @@ enum Phase {
 }
 
 /// One replica: local EDF queue + slots + phase clock + rung state.
+/// Rung → service-model resolution goes through the shared
+/// [`QualityLadder`].
 #[derive(Debug)]
 pub struct Replica {
     pub id: usize,
     pub queue: EdfQueue,
     pub slots: Vec<Option<SimSlot>>,
+    ladder: Rc<QualityLadder>,
     phase: Phase,
     /// Current quality-ladder rung (0 = full quality).
     pub rung: usize,
@@ -142,11 +132,13 @@ pub struct Replica {
 }
 
 impl Replica {
-    pub fn new(id: usize, slots: usize, n_rungs: usize) -> Self {
+    pub fn new(id: usize, slots: usize, ladder: Rc<QualityLadder>) -> Self {
+        let n_rungs = ladder.n_rungs();
         Replica {
             id,
             queue: EdfQueue::new(),
             slots: (0..slots).map(|_| None).collect(),
+            ladder,
             phase: Phase::Idle,
             rung: 0,
             last_switch_s: f64::NEG_INFINITY,
@@ -206,10 +198,12 @@ impl Replica {
     /// queued work exist (the vLLM admission discipline), else one decode
     /// step over the active slots. Returns false when there is nothing
     /// to do.
-    pub fn try_start(&mut self, now: f64, svc: &ServiceModel) -> bool {
+    pub fn try_start(&mut self, now: f64) -> bool {
         if !matches!(self.phase, Phase::Idle) {
             return false;
         }
+        let ladder = Rc::clone(&self.ladder);
+        let svc = ladder.service(self.rung);
         let free: Vec<usize> = self
             .slots
             .iter()
@@ -303,9 +297,70 @@ impl Replica {
     }
 }
 
+impl ReplicaBackend for Replica {
+    fn id(&self) -> usize {
+        self.id
+    }
+
+    fn admit(&mut self, req: super::scheduler::QueuedRequest) {
+        self.queue.push(req);
+    }
+
+    fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    fn outstanding(&self) -> usize {
+        Replica::outstanding(self)
+    }
+
+    fn load_cost(&self) -> u64 {
+        Replica::load_cost(self)
+    }
+
+    fn rung(&self) -> usize {
+        self.rung
+    }
+
+    fn last_switch_s(&self) -> f64 {
+        self.last_switch_s
+    }
+
+    fn set_rung(&mut self, rung: usize, now: f64, penalty_s: f64) {
+        Replica::set_rung(self, rung, now, penalty_s);
+    }
+
+    fn try_start(&mut self, now: f64) -> bool {
+        Replica::try_start(self, now)
+    }
+
+    fn next_event_s(&self) -> Option<f64> {
+        Replica::next_event_s(self)
+    }
+
+    fn complete_phase(&mut self, now: f64, out: &mut Vec<CompletedRequest>) {
+        Replica::complete_phase(self, now, out);
+    }
+
+    fn is_drained(&self) -> bool {
+        Replica::is_drained(self)
+    }
+
+    fn stats(&self) -> BackendStats {
+        BackendStats {
+            busy_s: self.busy_s,
+            prefill_calls: self.prefill_calls,
+            decode_steps: self.decode_steps,
+            rung_switches: self.rung_switches,
+            rung_time_s: self.rung_time_s.clone(),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::moe::allocation::Allocation;
     use crate::server::scheduler::QueuedRequest;
 
     fn queued(id: u64, prompt: usize, gen: usize) -> QueuedRequest {
@@ -320,14 +375,34 @@ mod tests {
         }
     }
 
+    /// Single-rung ladder around one synthetic service model.
+    fn fixed_ladder(step_s: f64, slots: usize) -> Rc<QualityLadder> {
+        Rc::new(QualityLadder::fixed(
+            "t",
+            Allocation::uniform(4, 2),
+            ServiceModel::synthetic("t", 1e-4, step_s, slots),
+        ))
+    }
+
+    /// `n`-rung ladder that reuses one service model per rung.
+    fn multi_rung_ladder(n: usize, slots: usize) -> Rc<QualityLadder> {
+        let base = QualityLadder::fixed(
+            "t",
+            Allocation::uniform(4, 2),
+            ServiceModel::synthetic("t", 1e-4, 0.01, slots),
+        );
+        Rc::new(QualityLadder {
+            rungs: (0..n).map(|_| base.rungs[0].clone()).collect(),
+        })
+    }
+
     #[test]
     fn phase_cycle_prefill_then_decode_to_completion() {
-        let svc = ServiceModel::synthetic("t", 1e-4, 0.01, 4);
-        let mut r = Replica::new(0, 4, 1);
+        let mut r = Replica::new(0, 4, fixed_ladder(0.01, 4));
         r.queue.push(queued(0, 100, 3));
         let mut done = Vec::new();
 
-        assert!(r.try_start(0.0, &svc));
+        assert!(r.try_start(0.0));
         let t1 = r.next_event_s().unwrap();
         assert!((t1 - 0.01).abs() < 1e-12); // 100 tokens * 1e-4
         r.complete_phase(t1, &mut done);
@@ -336,7 +411,7 @@ mod tests {
         // two decode steps finish the request
         let mut now = t1;
         for _ in 0..2 {
-            assert!(r.try_start(now, &svc));
+            assert!(r.try_start(now));
             now = r.next_event_s().unwrap();
             r.complete_phase(now, &mut done);
         }
@@ -352,11 +427,10 @@ mod tests {
 
     #[test]
     fn single_token_request_finishes_at_prefill() {
-        let svc = ServiceModel::synthetic("t", 1e-4, 0.01, 2);
-        let mut r = Replica::new(0, 2, 1);
+        let mut r = Replica::new(0, 2, fixed_ladder(0.01, 2));
         r.queue.push(queued(0, 50, 1));
         let mut done = Vec::new();
-        r.try_start(0.0, &svc);
+        r.try_start(0.0);
         r.complete_phase(r.next_event_s().unwrap(), &mut done);
         assert_eq!(done.len(), 1);
         assert_eq!(done[0].tokens, 1);
@@ -364,14 +438,13 @@ mod tests {
 
     #[test]
     fn load_cost_counts_queue_and_slots() {
-        let svc = ServiceModel::synthetic("t", 1e-4, 0.01, 2);
-        let mut r = Replica::new(0, 2, 1);
+        let mut r = Replica::new(0, 2, fixed_ladder(0.01, 2));
         r.queue.push(queued(0, 80, 40));
         r.queue.push(queued(1, 80, 40));
         r.queue.push(queued(2, 80, 40));
         let per = (80 / 8 + 40) as u64;
         assert_eq!(r.load_cost(), 3 * per);
-        r.try_start(0.0, &svc); // admits 2 into slots, 1 stays queued
+        r.try_start(0.0); // admits 2 into slots, 1 stays queued
         let mut done = Vec::new();
         r.complete_phase(r.next_event_s().unwrap(), &mut done);
         // queued: 1 full cost; running: 2 * (40 - 1) remaining tokens
@@ -381,13 +454,12 @@ mod tests {
 
     #[test]
     fn rung_switch_counts_and_charges_penalty() {
-        let svc = ServiceModel::synthetic("t", 1e-4, 0.01, 2);
-        let mut r = Replica::new(0, 2, 3);
+        let mut r = Replica::new(0, 2, multi_rung_ladder(3, 2));
         r.queue.push(queued(0, 100, 4));
         r.set_rung(2, 0.0, 0.5);
         r.set_rung(2, 0.0, 0.5); // no-op: already there
         assert_eq!(r.rung_switches, 1);
-        r.try_start(0.0, &svc);
+        r.try_start(0.0);
         // prefill = penalty 0.5 + 100 * 1e-4
         assert!((r.next_event_s().unwrap() - 0.51).abs() < 1e-9);
         assert!(r.rung_time_s[2] > 0.5);
@@ -397,7 +469,6 @@ mod tests {
     #[test]
     fn service_model_from_perf_orders_by_budget() {
         use crate::config::model::spec;
-        use crate::moe::allocation::Allocation;
         let m = spec("qwen1.5-moe-a2.7b").unwrap();
         let pm = PerfModel::new(m.clone(), 0);
         let base = ServiceModel::from_perf(&pm, &Transform::Baseline, 8, 256, 32, "base");

@@ -321,6 +321,7 @@ mod tests {
             rung_time_s: vec![10.0, 4.0],
             prefill_calls: 5,
             decode_steps: 100,
+            rung_switch_events: vec![(1, 0), (2, 1), (3, 0)],
         }
     }
 

@@ -1,23 +1,28 @@
-//! The cluster front door: N replicas, pluggable routing, virtual-time
+//! The cluster front door: N replica backends, pluggable routing, one
 //! discrete-event loop.
 //!
 //! Arrivals pass admission control, get a TTFT deadline from their class
-//! SLO, and are routed to a replica queue (round-robin /
-//! join-shortest-queue / power-of-two-choices). Each replica then runs
-//! the continuous-batching discipline of [`super::replica`]; the
-//! adaptive quality ladder (when enabled) retunes each replica's
-//! active-expert budget between phases. The loop is fully deterministic:
-//! ties in virtual time break by (arrival before completion, replica
-//! index, request id).
+//! SLO, and are routed to a replica queue by a [`RoutingPolicy`]
+//! (round-robin / join-shortest-queue / power-of-two-choices, pluggable
+//! impls instead of hardcoded branches). Replicas are driven through the
+//! [`ReplicaBackend`] trait, so the same loop serves the virtual-time
+//! [`Replica`](super::replica::Replica) and the engine-backed
+//! [`EngineReplica`](super::engine_backend::EngineReplica); the
+//! cluster-global [`LadderController`] retunes rung assignments between
+//! phases. The loop is fully deterministic for simulated backends: ties
+//! in virtual time break by (arrival before completion, replica index,
+//! request id).
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
+use std::rc::Rc;
 
 use crate::config::server::PolicyKind;
 use crate::util::Pcg32;
 
-use super::ladder::{LadderPolicy, QualityLadder};
-use super::replica::{CompletedRequest, Replica};
+use super::backend::{BackendStats, CompletedRequest, ReplicaBackend};
+use super::ladder::{LadderController, LadderPolicy, QualityLadder, ReplicaView};
+use super::replica::Replica;
 use super::scheduler::{AdmissionControl, QueuedRequest};
 use super::workload::{Scenario, Trace, TraceRequest};
 
@@ -26,7 +31,7 @@ use super::workload::{Scenario, Trace, TraceRequest};
 pub struct RunResult {
     pub completed: Vec<CompletedRequest>,
     pub rejected_by_class: Vec<u64>,
-    /// Virtual time at which the last request finished.
+    /// Event-loop time at which the last request finished.
     pub makespan_s: f64,
     pub replica_busy_s: Vec<f64>,
     pub rung_switches: u64,
@@ -34,6 +39,9 @@ pub struct RunResult {
     pub rung_time_s: Vec<f64>,
     pub prefill_calls: u64,
     pub decode_steps: u64,
+    /// Every applied rung switch as `(time key ns, replica index)` —
+    /// the flap-detection signal for the cluster-global controller.
+    pub rung_switch_events: Vec<(u64, usize)>,
 }
 
 /// Pending arrival, ordered by (time ns, id) for a deterministic heap.
@@ -61,20 +69,135 @@ fn time_key(t: f64) -> u64 {
     (t * 1e9) as u64
 }
 
-/// N engine replicas behind one routing policy.
-pub struct Cluster {
-    pub replicas: Vec<Replica>,
-    pub policy: PolicyKind,
-    pub ladder: QualityLadder,
+/// Replica-selection strategy of the front door. Implementations read
+/// per-replica load through the `load_cost` callback so they stay
+/// agnostic of the backend type.
+pub trait RoutingPolicy {
+    fn label(&self) -> &'static str;
+
+    /// Pick the replica for a new request. `load_cost(i)` is replica
+    /// `i`'s token-weighted backlog; `rng` is the cluster's seeded
+    /// stream (used only by randomized policies).
+    fn route(
+        &mut self,
+        n_replicas: usize,
+        load_cost: &mut dyn FnMut(usize) -> u64,
+        rng: &mut Pcg32,
+    ) -> usize;
+}
+
+/// Cycle through replicas regardless of load.
+#[derive(Debug, Default)]
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl RoutingPolicy for RoundRobin {
+    fn label(&self) -> &'static str {
+        "rr"
+    }
+
+    fn route(
+        &mut self,
+        n_replicas: usize,
+        _load_cost: &mut dyn FnMut(usize) -> u64,
+        _rng: &mut Pcg32,
+    ) -> usize {
+        let i = self.next % n_replicas;
+        self.next += 1;
+        i
+    }
+}
+
+/// Join the shortest queue (token-weighted backlog).
+#[derive(Debug, Default)]
+pub struct JoinShortestQueue;
+
+impl RoutingPolicy for JoinShortestQueue {
+    fn label(&self) -> &'static str {
+        "jsq"
+    }
+
+    fn route(
+        &mut self,
+        n_replicas: usize,
+        load_cost: &mut dyn FnMut(usize) -> u64,
+        _rng: &mut Pcg32,
+    ) -> usize {
+        argmin_load(0..n_replicas, load_cost)
+    }
+}
+
+/// Power-of-two-choices: sample two replicas, pick the lighter.
+#[derive(Debug, Default)]
+pub struct PowerOfTwoChoices;
+
+impl RoutingPolicy for PowerOfTwoChoices {
+    fn label(&self) -> &'static str {
+        "p2c"
+    }
+
+    fn route(
+        &mut self,
+        n_replicas: usize,
+        load_cost: &mut dyn FnMut(usize) -> u64,
+        rng: &mut Pcg32,
+    ) -> usize {
+        if n_replicas == 1 {
+            return 0;
+        }
+        let a = rng.gen_usize(n_replicas);
+        let mut b = rng.gen_usize(n_replicas - 1);
+        if b >= a {
+            b += 1;
+        }
+        argmin_load([a, b].into_iter(), load_cost)
+    }
+}
+
+impl PolicyKind {
+    /// Instantiate the routing-policy implementation for this kind.
+    pub fn build(self) -> Box<dyn RoutingPolicy> {
+        match self {
+            PolicyKind::RoundRobin => Box::new(RoundRobin::default()),
+            PolicyKind::Jsq => Box::new(JoinShortestQueue),
+            PolicyKind::PowerOfTwo => Box::new(PowerOfTwoChoices),
+        }
+    }
+}
+
+/// Index of the lightest replica among `candidates` (ties -> lowest id).
+fn argmin_load(
+    candidates: impl Iterator<Item = usize>,
+    load_cost: &mut dyn FnMut(usize) -> u64,
+) -> usize {
+    let mut best: Option<(u64, usize)> = None;
+    for i in candidates {
+        let cost = load_cost(i);
+        match best {
+            None => best = Some((cost, i)),
+            Some((bc, bi)) if (cost, i) < (bc, bi) => best = Some((cost, i)),
+            _ => {}
+        }
+    }
+    best.expect("no routing candidates").1
+}
+
+/// N replica backends behind one routing policy and one (optional)
+/// cluster-global ladder controller.
+pub struct Cluster<'a> {
+    pub backends: Vec<Box<dyn ReplicaBackend + 'a>>,
+    pub router: Box<dyn RoutingPolicy>,
+    pub ladder: Rc<QualityLadder>,
     /// None = fixed rung 0 (static allocation); Some = adaptive ladder.
-    pub ladder_policy: Option<LadderPolicy>,
+    pub controller: Option<LadderController>,
     pub admission: AdmissionControl,
     pub reconfig_penalty_s: f64,
-    rr_next: usize,
     rng: Pcg32,
 }
 
-impl Cluster {
+impl Cluster<'static> {
+    /// Simulated cluster: N virtual-time replicas sharing one ladder.
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         n_replicas: usize,
@@ -86,50 +209,66 @@ impl Cluster {
         n_classes: usize,
         reconfig_penalty_s: f64,
         seed: u64,
-    ) -> Self {
-        assert!(queue_cap > 0, "queue_cap must be >= 1");
-        let n_rungs = ladder.n_rungs();
-        Cluster {
-            replicas: (0..n_replicas)
-                .map(|i| Replica::new(i, slots_per_replica, n_rungs))
-                .collect(),
+    ) -> Cluster<'static> {
+        let ladder = Rc::new(ladder);
+        let backends: Vec<Box<dyn ReplicaBackend>> = (0..n_replicas)
+            .map(|i| {
+                Box::new(Replica::new(i, slots_per_replica, Rc::clone(&ladder)))
+                    as Box<dyn ReplicaBackend>
+            })
+            .collect();
+        Cluster::from_backends(
+            backends,
             policy,
             ladder,
             ladder_policy,
+            queue_cap,
+            n_classes,
+            reconfig_penalty_s,
+            seed,
+        )
+    }
+}
+
+impl<'a> Cluster<'a> {
+    /// Cluster over caller-built backends (e.g. engine-backed replicas).
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_backends(
+        backends: Vec<Box<dyn ReplicaBackend + 'a>>,
+        policy: PolicyKind,
+        ladder: Rc<QualityLadder>,
+        ladder_policy: Option<LadderPolicy>,
+        queue_cap: usize,
+        n_classes: usize,
+        reconfig_penalty_s: f64,
+        seed: u64,
+    ) -> Cluster<'a> {
+        assert!(queue_cap > 0, "queue_cap must be >= 1");
+        assert!(!backends.is_empty(), "cluster needs at least one replica");
+        Cluster {
+            backends,
+            router: policy.build(),
+            ladder,
+            controller: ladder_policy.map(LadderController::new),
             admission: AdmissionControl::new(queue_cap, n_classes),
             reconfig_penalty_s,
-            rr_next: 0,
             rng: Pcg32::new(seed, 0x0707_2026),
         }
     }
 
     /// Pick the replica for a new request under the configured policy.
     fn route(&mut self) -> usize {
-        match self.policy {
-            PolicyKind::RoundRobin => {
-                let i = self.rr_next % self.replicas.len();
-                self.rr_next += 1;
-                i
-            }
-            PolicyKind::Jsq => argmin_load(&self.replicas, self.replicas.iter().map(|r| r.id)),
-            PolicyKind::PowerOfTwo => {
-                let n = self.replicas.len();
-                if n == 1 {
-                    return 0;
-                }
-                let a = self.rng.gen_usize(n);
-                let mut b = self.rng.gen_usize(n - 1);
-                if b >= a {
-                    b += 1;
-                }
-                argmin_load(&self.replicas, [a, b].into_iter())
-            }
-        }
+        let backends = &self.backends;
+        self.router.route(
+            backends.len(),
+            &mut |i| backends[i].load_cost(),
+            &mut self.rng,
+        )
     }
 
     /// Total queued + running requests (admission-control signal).
     fn outstanding(&self) -> usize {
-        self.replicas.iter().map(|r| r.outstanding()).sum()
+        self.backends.iter().map(|b| b.outstanding()).sum()
     }
 
     /// Replay a trace to completion. Closed-loop traces re-issue
@@ -149,32 +288,40 @@ impl Cluster {
         let mut spawned = trace.requests.len();
         let mut next_id = trace.requests.iter().map(|r| r.id + 1).max().unwrap_or(0);
         let mut completed: Vec<CompletedRequest> = Vec::new();
+        let mut switch_events: Vec<(u64, usize)> = Vec::new();
         let mut now = 0.0f64;
 
         loop {
-            // 1. start work on every idle replica (rung decision first)
-            let ladder = &self.ladder;
-            let policy = self.ladder_policy;
-            for r in &mut self.replicas {
-                if let Some(p) = &policy {
-                    let rung = p.decide(
-                        r.rung,
-                        ladder.n_rungs(),
-                        r.queue.len(),
-                        now,
-                        r.last_switch_s,
-                    );
-                    r.set_rung(rung, now, self.reconfig_penalty_s);
+            // 1. rung decisions (one controller for the whole cluster),
+            // then start work on every idle replica
+            if let Some(ctl) = &mut self.controller {
+                let views: Vec<ReplicaView> = self
+                    .backends
+                    .iter()
+                    .map(|b| ReplicaView {
+                        rung: b.rung(),
+                        queue_len: b.queue_len(),
+                        last_switch_s: b.last_switch_s(),
+                    })
+                    .collect();
+                let targets = ctl.decide(&views, self.ladder.n_rungs(), now);
+                for (i, b) in self.backends.iter_mut().enumerate() {
+                    if targets[i] != b.rung() {
+                        b.set_rung(targets[i], now, self.reconfig_penalty_s);
+                        switch_events.push((time_key(now), i));
+                    }
                 }
-                r.try_start(now, ladder.service(r.rung));
+            }
+            for b in &mut self.backends {
+                b.try_start(now);
             }
 
             // 2. next event: earliest arrival or phase completion
             let next_arrival = arrivals.peek().map(|Reverse(PendingArrival(t, _))| *t);
             let next_completion = self
-                .replicas
+                .backends
                 .iter()
-                .filter_map(|r| r.next_event_s())
+                .filter_map(|b| b.next_event_s())
                 .map(time_key)
                 .min();
             let t_next = match (next_arrival, next_completion) {
@@ -213,7 +360,7 @@ impl Cluster {
                 let prio = scenario.profiles[req.class].priority;
                 let qr = QueuedRequest::new(&req, prio, slo.ttft_s);
                 let idx = self.route();
-                self.replicas[idx].queue.push(qr);
+                self.backends[idx].admit(qr);
             }
             if delivered {
                 continue;
@@ -221,10 +368,10 @@ impl Cluster {
 
             // 3b. complete every phase due now
             let before = completed.len();
-            for r in &mut self.replicas {
-                if let Some(t) = r.next_event_s() {
+            for b in &mut self.backends {
+                if let Some(t) = b.next_event_s() {
                     if time_key(t) <= t_next {
-                        r.complete_phase(now, &mut completed);
+                        b.complete_phase(now, &mut completed);
                     }
                 }
             }
@@ -248,37 +395,25 @@ impl Cluster {
             .map(|c| c.finish_s)
             .fold(0.0f64, f64::max)
             .max(now);
+        let stats: Vec<BackendStats> = self.backends.iter().map(|b| b.stats()).collect();
         let mut rung_time_s = vec![0.0; self.ladder.n_rungs()];
-        for r in &self.replicas {
-            for (i, t) in r.rung_time_s.iter().enumerate() {
-                rung_time_s[i.min(rung_time_s.len() - 1)] += t;
+        for s in &stats {
+            for (i, t) in s.rung_time_s.iter().enumerate() {
+                rung_time_s[i.min(rung_time_s.len() - 1)] += *t;
             }
         }
         RunResult {
             rejected_by_class: self.admission.rejected_by_class.clone(),
             makespan_s,
-            replica_busy_s: self.replicas.iter().map(|r| r.busy_s).collect(),
-            rung_switches: self.replicas.iter().map(|r| r.rung_switches).sum(),
+            replica_busy_s: stats.iter().map(|s| s.busy_s).collect(),
+            rung_switches: stats.iter().map(|s| s.rung_switches).sum(),
             rung_time_s,
-            prefill_calls: self.replicas.iter().map(|r| r.prefill_calls).sum(),
-            decode_steps: self.replicas.iter().map(|r| r.decode_steps).sum(),
+            prefill_calls: stats.iter().map(|s| s.prefill_calls).sum(),
+            decode_steps: stats.iter().map(|s| s.decode_steps).sum(),
+            rung_switch_events: switch_events,
             completed,
         }
     }
-}
-
-/// Index of the lightest replica among `candidates` (ties -> lowest id).
-fn argmin_load(replicas: &[Replica], candidates: impl Iterator<Item = usize>) -> usize {
-    let mut best = None;
-    for i in candidates {
-        let cost = replicas[i].load_cost();
-        match best {
-            None => best = Some((cost, i)),
-            Some((bc, bi)) if (cost, i) < (bc, bi) => best = Some((cost, i)),
-            _ => {}
-        }
-    }
-    best.expect("no routing candidates").1
 }
 
 #[cfg(test)]
@@ -302,7 +437,7 @@ mod tests {
         s
     }
 
-    fn cluster(policy: PolicyKind, n: usize) -> Cluster {
+    fn cluster(policy: PolicyKind, n: usize) -> Cluster<'static> {
         Cluster::new(n, 4, policy, fixed_ladder(0.01, 4), None, 10_000, 4, 0.0, 0)
     }
 
@@ -379,5 +514,31 @@ mod tests {
         let rung_total: f64 = res.rung_time_s.iter().sum();
         let busy_total: f64 = res.replica_busy_s.iter().sum();
         assert!((rung_total - busy_total).abs() < 1e-9);
+    }
+
+    #[test]
+    fn routing_policies_are_pluggable_objects() {
+        let mut rng = Pcg32::seeded(0);
+        let mut rr = PolicyKind::RoundRobin.build();
+        assert_eq!(rr.label(), "rr");
+        let mut flat = |_: usize| 0u64;
+        assert_eq!(rr.route(3, &mut flat, &mut rng), 0);
+        assert_eq!(rr.route(3, &mut flat, &mut rng), 1);
+        assert_eq!(rr.route(3, &mut flat, &mut rng), 2);
+        assert_eq!(rr.route(3, &mut flat, &mut rng), 0);
+
+        let mut jsq = PolicyKind::Jsq.build();
+        let loads = [5u64, 1, 9];
+        assert_eq!(jsq.route(3, &mut |i| loads[i], &mut rng), 1);
+        // ties break toward the lowest index
+        assert_eq!(jsq.route(3, &mut |_| 7, &mut rng), 0);
+
+        let mut p2c = PolicyKind::PowerOfTwo.build();
+        // single replica short-circuits without touching the rng
+        assert_eq!(p2c.route(1, &mut flat, &mut rng), 0);
+        for _ in 0..32 {
+            let i = p2c.route(4, &mut |i| loads.get(i).copied().unwrap_or(2), &mut rng);
+            assert!(i < 4);
+        }
     }
 }

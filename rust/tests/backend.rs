@@ -1,0 +1,239 @@
+//! Backend parity: the simulated virtual-time replica and the real
+//! `engine::Engine` replica (over the synthetic host model) sit behind
+//! the SAME cluster front door and agree on what was served — completion
+//! counts and per-request generated-token totals over one seeded trace.
+//! Latencies legitimately differ (perf-model time vs. wall-clock-mapped
+//! phases), so they are checked only for causal ordering.
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use lexi_moe::config::model::spec;
+use lexi_moe::config::server::{BackendKind, PolicyKind, ScenarioKind, ServerConfig};
+use lexi_moe::config::serving::ServingConfig;
+use lexi_moe::engine::Engine;
+use lexi_moe::moe::allocation::Allocation;
+use lexi_moe::runtime::SyntheticModel;
+use lexi_moe::server::workload::{ArrivalProcess, RequestProfile, Scenario, Trace};
+use lexi_moe::server::{
+    self, Cluster, EngineReplica, QualityLadder, ReplicaBackend, RunResult, ServiceModel,
+};
+
+const N_LAYERS: usize = 4;
+const N_EXPERTS: usize = 8;
+const SLOTS: usize = 4;
+const N_REQUESTS: usize = 40;
+
+/// One chat-shaped class whose largest request fits the engine graph
+/// without truncation (prompt <= 48 < prefill 64; prompt+gen < max_seq).
+fn parity_scenario() -> Scenario {
+    let mut s = Scenario {
+        name: "parity",
+        kind: ScenarioKind::Poisson,
+        arrivals: ArrivalProcess::Poisson { rate: 5.0 },
+        profiles: vec![RequestProfile {
+            name: "chat",
+            prompt_lo: 16,
+            prompt_hi: 48,
+            gen_lo: 4,
+            gen_hi: 12,
+            priority: 0,
+            weight: 1.0,
+            ttft_mult: 50.0,
+            tpot_mult: 10.0,
+        }],
+        slos: Vec::new(),
+    };
+    s.resolve_slos(|tokens| 1e-3 * tokens as f64, 0.05);
+    s
+}
+
+fn fixed_ladder() -> QualityLadder {
+    QualityLadder::fixed(
+        "base",
+        Allocation::uniform(N_LAYERS, 2),
+        ServiceModel::synthetic("base", 1e-5, 0.01, SLOTS),
+    )
+}
+
+fn run_sim(s: &Scenario, trace: &Trace) -> RunResult {
+    let mut c = Cluster::new(
+        2,
+        SLOTS,
+        PolicyKind::Jsq,
+        fixed_ladder(),
+        None,
+        10_000,
+        1,
+        0.0,
+        7,
+    );
+    c.run(s, trace)
+}
+
+fn run_engine(s: &Scenario, trace: &Trace) -> RunResult {
+    let model = SyntheticModel::new("parity", N_LAYERS, N_EXPERTS, 2, SLOTS, 64, 128);
+    let ladder = Rc::new(fixed_ladder());
+    let scfg = ServingConfig {
+        batch: SLOTS,
+        max_seq: 128,
+        prefill_len: 64,
+        kv_block: 16,
+        kv_blocks_total: SLOTS * 8,
+        queue_cap: 1024,
+        max_new_tokens: 16,
+        decode_burst: 8,
+    };
+    let mut backends: Vec<Box<dyn ReplicaBackend + '_>> = Vec::new();
+    for i in 0..2 {
+        let engine = Engine::new(
+            &model,
+            scfg.clone(),
+            ladder.k_vec(0),
+            vec![0.0f32; N_LAYERS * N_EXPERTS],
+        )
+        .unwrap();
+        backends.push(Box::new(EngineReplica::new(i, engine, Rc::clone(&ladder))));
+    }
+    let mut c = Cluster::from_backends(
+        backends,
+        PolicyKind::Jsq,
+        Rc::clone(&ladder),
+        None,
+        10_000,
+        1,
+        0.0,
+        7,
+    );
+    c.run(s, trace)
+}
+
+fn token_map(res: &RunResult) -> BTreeMap<u64, usize> {
+    res.completed.iter().map(|c| (c.id, c.tokens)).collect()
+}
+
+#[test]
+fn sim_and_engine_backends_agree_on_the_served_trace() {
+    let s = parity_scenario();
+    let trace = s.generate(N_REQUESTS, 11);
+    let sim = run_sim(&s, &trace);
+    let eng = run_engine(&s, &trace);
+
+    // both backends drain the identical trace completely
+    assert_eq!(sim.completed.len(), N_REQUESTS);
+    assert_eq!(eng.completed.len(), N_REQUESTS);
+    assert_eq!(sim.rejected_by_class.iter().sum::<u64>(), 0);
+    assert_eq!(eng.rejected_by_class.iter().sum::<u64>(), 0);
+
+    // ...and agree per request id on how many tokens were generated
+    assert_eq!(token_map(&sim), token_map(&eng));
+
+    // engine timelines are causally ordered on the event-loop clock
+    for c in &eng.completed {
+        assert!(c.ttft_s > 0.0, "request {} ttft {}", c.id, c.ttft_s);
+        assert!(c.e2e_s >= c.ttft_s - 1e-12);
+        assert!(c.finish_s >= c.arrival_s);
+    }
+    assert!(eng.makespan_s > 0.0);
+    assert!(eng.prefill_calls > 0 && eng.decode_steps > 0);
+}
+
+#[test]
+fn engine_backend_replays_are_count_deterministic() {
+    // wall-clock phase lengths vary run to run, but WHAT is served must
+    // not: same trace -> same completions and token totals
+    let s = parity_scenario();
+    let trace = s.generate(N_REQUESTS, 13);
+    let a = run_engine(&s, &trace);
+    let b = run_engine(&s, &trace);
+    assert_eq!(token_map(&a), token_map(&b));
+    assert!(a.prefill_calls > 0 && b.prefill_calls > 0);
+}
+
+#[test]
+fn bench_serve_engine_backend_end_to_end() {
+    // the full `lexi bench-serve --backend engine` path: real Engine
+    // replicas (synthetic host model), same report pipeline as sim
+    let m = spec("olmoe-1b-7b").unwrap();
+    let cfg = ServerConfig {
+        replicas: 2,
+        slots_per_replica: 4,
+        n_requests: 24,
+        scenario: ScenarioKind::Poisson,
+        backend: BackendKind::Engine,
+        service_in_len: 256,
+        service_out_len: 32,
+        ..Default::default()
+    };
+    let out = std::env::temp_dir().join("lexi_engine_backend_test");
+    let _ = std::fs::remove_dir_all(&out);
+    let reports = server::bench_serve(&m, &cfg, None, &out).unwrap();
+    assert_eq!(reports.len(), 4);
+    for r in &reports {
+        assert_eq!(r.n_completed as u64 + r.n_rejected, 24, "{}", r.transform);
+        assert!(r.throughput_tok_s > 0.0, "{}", r.transform);
+        assert!(r.makespan_s > 0.0);
+        assert!(r.mean_utilization > 0.0);
+    }
+    // engine runs get their own stem so they never clobber sim results
+    assert!(out.join("bench_serve_olmoe-1b-7b_poisson_engine.csv").exists());
+    assert!(out.join("bench_serve_olmoe-1b-7b_poisson_engine.json").exists());
+}
+
+#[test]
+fn engine_take_outputs_drains_non_blockingly() {
+    use lexi_moe::engine::{SamplingParams, StepKind};
+
+    let model = SyntheticModel::new("drain", N_LAYERS, N_EXPERTS, 2, 2, 32, 64);
+    let scfg = ServingConfig {
+        batch: 2,
+        max_seq: 64,
+        prefill_len: 32,
+        kv_block: 16,
+        kv_blocks_total: 8,
+        queue_cap: 16,
+        max_new_tokens: 4,
+        decode_burst: 8,
+    };
+    let mut engine = Engine::new(
+        &model,
+        scfg,
+        vec![2i32; N_LAYERS],
+        vec![0.0f32; N_LAYERS * N_EXPERTS],
+    )
+    .unwrap();
+    let sampling = SamplingParams {
+        temperature: 0.0,
+        max_new_tokens: 3,
+        stop_on_eos: false,
+        ..Default::default()
+    };
+    let a = engine.submit(vec![5, 6, 7], sampling).unwrap();
+    let b = engine.submit(vec![9, 10], sampling).unwrap();
+
+    // prefill step: both requests get their first token, none finished
+    let out = engine.step_detail().unwrap();
+    assert_eq!(out.kind, StepKind::Prefill);
+    assert_eq!(out.first_tokens, vec![a, b]);
+    assert!(out.finished.is_empty());
+    assert!(engine.take_outputs().is_empty());
+
+    // two decode steps finish both 3-token requests
+    let mut finished = Vec::new();
+    for _ in 0..2 {
+        let out = engine.step_detail().unwrap();
+        assert_eq!(out.kind, StepKind::Decode);
+        finished.extend(out.finished);
+    }
+    assert_eq!(finished.len(), 2);
+    assert!(finished.iter().all(|o| o.tokens.len() == 3));
+    assert!(engine.idle());
+
+    // the blocking drain path stays consistent: step() retains outputs
+    // until take_outputs / run_until_complete hands them over
+    let c = engine.submit(vec![4], sampling).unwrap();
+    while engine.step().unwrap() {}
+    let outs = engine.take_outputs();
+    assert_eq!(outs.len(), 1);
+    assert_eq!(outs[0].id, c);
+}

@@ -6,9 +6,9 @@
 //! synthetic fixtures.
 
 use lexi_moe::config::model::spec;
-use lexi_moe::config::server::{PolicyKind, ScenarioKind, ServerConfig};
+use lexi_moe::config::server::{LadderScope, PolicyKind, ScenarioKind, ServerConfig};
 use lexi_moe::moe::allocation::Allocation;
-use lexi_moe::server::ladder::QualityLadder;
+use lexi_moe::server::ladder::{LadderPolicy, QualityLadder, Rung};
 use lexi_moe::server::replica::ServiceModel;
 use lexi_moe::server::router::Cluster;
 use lexi_moe::server::workload::{
@@ -80,7 +80,7 @@ fn skewed_trace(n_pairs: usize) -> Trace {
     }
 }
 
-fn fixed_cluster(policy: PolicyKind, n_replicas: usize, slots: usize) -> Cluster {
+fn fixed_cluster(policy: PolicyKind, n_replicas: usize, slots: usize) -> Cluster<'static> {
     let ladder = QualityLadder::fixed(
         "base",
         Allocation::uniform(4, 2),
@@ -261,6 +261,129 @@ fn ladder_beats_fixed_baseline_goodput_under_bursty_load() {
     // throughput ordering sanity: adaptively shedding budget can't be
     // slower than never shedding it
     assert!(ladder.throughput_tok_s >= base.throughput_tok_s * 0.98);
+}
+
+// ---------------------------------------------------------------------
+// cluster-global ladder controller (no synchronized flapping)
+// ---------------------------------------------------------------------
+
+/// Three synthetic rungs: deeper = faster decode, higher proxy loss.
+fn three_rung_ladder(slots: usize) -> QualityLadder {
+    let rung = |label: &str, step_s: f64, loss: f64| Rung {
+        label: label.to_string(),
+        allocation: Allocation::uniform(4, 2),
+        service: ServiceModel::synthetic(label, 1e-5, step_s, slots),
+        quality_loss: loss,
+    };
+    QualityLadder {
+        rungs: vec![
+            rung("r0", 0.020, 0.0),
+            rung("r1", 0.012, 1.0),
+            rung("r2", 0.008, 2.0),
+        ],
+    }
+}
+
+fn burst_scenario() -> Scenario {
+    let mut s = Scenario {
+        name: "burst",
+        kind: ScenarioKind::Poisson,
+        arrivals: ArrivalProcess::Poisson { rate: 1.0 },
+        profiles: vec![RequestProfile {
+            name: "chat",
+            prompt_lo: 64,
+            prompt_hi: 64,
+            gen_lo: 32,
+            gen_hi: 32,
+            priority: 0,
+            weight: 1.0,
+            ttft_mult: 50.0,
+            tpot_mult: 10.0,
+        }],
+        slos: Vec::new(),
+    };
+    s.resolve_slos(|tokens| 1e-4 * tokens as f64, 0.02);
+    s
+}
+
+/// Every request lands at t=0: both rr-routed replicas cross the
+/// degrade threshold in the same event-loop instant.
+fn burst_trace(n: usize) -> Trace {
+    Trace {
+        scenario: "burst",
+        requests: (0..n as u64)
+            .map(|id| TraceRequest {
+                id,
+                class: 0,
+                arrival_s: 0.0,
+                prompt_len: 64,
+                new_tokens: 32,
+            })
+            .collect(),
+        closed_loop: None,
+    }
+}
+
+/// Largest number of rung switches sharing one event-loop instant.
+fn max_switches_at_one_instant(events: &[(u64, usize)]) -> usize {
+    let mut best = 0usize;
+    let mut i = 0;
+    while i < events.len() {
+        let t = events[i].0;
+        let n = events[i..].iter().take_while(|(tt, _)| *tt == t).count();
+        best = best.max(n);
+        i += n;
+    }
+    best
+}
+
+#[test]
+fn cluster_scope_staggers_rung_switches_under_bursty_load() {
+    let s = burst_scenario();
+    let trace = burst_trace(40);
+    let mk = |scope: LadderScope| {
+        let policy = LadderPolicy {
+            degrade_above: 8,
+            upgrade_below: 2,
+            min_dwell_s: 0.0,
+            scope,
+            max_switches_per_instant: 1,
+        };
+        Cluster::new(
+            2,
+            2,
+            PolicyKind::RoundRobin,
+            three_rung_ladder(2),
+            Some(policy),
+            100_000,
+            1,
+            0.0,
+            0,
+        )
+    };
+
+    // the per-replica rule reacts to the synchronized burst by flapping
+    // both replicas in the same instant...
+    let res = mk(LadderScope::PerReplica).run(&s, &trace);
+    assert_eq!(res.completed.len(), 40);
+    assert!(res.rung_switches > 0);
+    assert!(
+        max_switches_at_one_instant(&res.rung_switch_events) >= 2,
+        "per-replica controller never switched in sync: {:?}",
+        res.rung_switch_events
+    );
+
+    // ...the cluster-global controller adapts to the SAME burst but
+    // staggers: never more than one switch per instant
+    let res = mk(LadderScope::Cluster).run(&s, &trace);
+    assert_eq!(res.completed.len(), 40);
+    assert!(res.rung_switches > 0, "cluster controller never adapted");
+    assert_eq!(
+        max_switches_at_one_instant(&res.rung_switch_events),
+        1,
+        "synchronized flap under cluster scope: {:?}",
+        res.rung_switch_events
+    );
 }
 
 #[test]

@@ -1,0 +1,23 @@
+//! Default (stub) builds do nothing here. With `--features real`, link
+//! the prebuilt XLA extension + the xla-rs C shim from
+//! `$XLA_EXTENSION_DIR` (expected layout: `lib/libxla_extension.so` and
+//! `lib/libxla_rs.a|so`, as produced by an xla-rs build).
+
+fn main() {
+    println!("cargo:rerun-if-env-changed=XLA_EXTENSION_DIR");
+    if std::env::var_os("CARGO_FEATURE_REAL").is_none() {
+        return;
+    }
+    let dir = match std::env::var("XLA_EXTENSION_DIR") {
+        Ok(d) if !d.is_empty() => d,
+        _ => panic!(
+            "the `real` feature (xla-real) swaps in FFI bindings against a prebuilt \
+             xla_extension; set XLA_EXTENSION_DIR to its install root \
+             (containing lib/libxla_extension.* and the xla_rs C shim)"
+        ),
+    };
+    println!("cargo:rustc-link-search=native={dir}/lib");
+    println!("cargo:rustc-link-lib=dylib=xla_extension");
+    println!("cargo:rustc-link-lib=dylib=xla_rs");
+    println!("cargo:rustc-link-lib=dylib=stdc++");
+}

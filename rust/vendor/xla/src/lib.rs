@@ -9,11 +9,20 @@
 //! * device operations ([`PjRtClient::compile`],
 //!   [`PjRtLoadedExecutable::execute_b`]) return a clear runtime error —
 //!   everything that does NOT touch a compiled executable (perf model,
-//!   LExI search over synthetic/cached tables, the serving simulator)
-//!   works end-to-end.
+//!   LExI search over synthetic/cached tables, the serving simulator,
+//!   the synthetic-model engine backend) works end-to-end.
 //!
-//! Swapping in the real bindings is a one-line Cargo change; no call
-//! site needs to be edited.
+//! Opting into the **`real`** feature (crate feature `xla-real` at the
+//! workspace root) swaps the stubbed device path for FFI bindings
+//! against a prebuilt `xla_extension` + the xla-rs `xla_rs` C shim
+//! located via `XLA_EXTENSION_DIR` (see `build.rs` / `src/real.rs`);
+//! the host-side literal/npz code is shared by both modes and no call
+//! site changes either way.
+
+#[cfg(feature = "real")]
+mod real;
+#[cfg(feature = "real")]
+pub use real::{HloModuleProto, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
 use std::fmt;
 use std::path::Path;
@@ -148,6 +157,11 @@ impl Literal {
 
     pub fn element_count(&self) -> usize {
         self.bytes.len() / self.ty.byte_size()
+    }
+
+    /// Raw little-endian bytes (FFI marshalling in `real` mode).
+    pub fn raw_bytes(&self) -> &[u8] {
+        &self.bytes
     }
 
     pub fn to_vec<T: ArrayElement>(&self) -> Result<Vec<T>> {
@@ -303,15 +317,17 @@ fn field_shape(header: &str) -> Option<Vec<usize>> {
 }
 
 // --------------------------------------------------------------------
-// PJRT surface (stubbed device path)
+// PJRT surface (stubbed device path; feature `real` swaps in FFI)
 // --------------------------------------------------------------------
 
 /// HLO module parsed from text — retained verbatim; only the real
 /// bindings can lower it.
+#[cfg(not(feature = "real"))]
 pub struct HloModuleProto {
     pub text: String,
 }
 
+#[cfg(not(feature = "real"))]
 impl HloModuleProto {
     pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<Self> {
         let text = std::fs::read_to_string(path.as_ref())
@@ -320,8 +336,10 @@ impl HloModuleProto {
     }
 }
 
+#[cfg(not(feature = "real"))]
 pub struct XlaComputation;
 
+#[cfg(not(feature = "real"))]
 impl XlaComputation {
     pub fn from_proto(_proto: &HloModuleProto) -> Self {
         XlaComputation
@@ -330,16 +348,20 @@ impl XlaComputation {
 
 /// Device buffer — in the stub, a host literal in disguise, so upload /
 /// download round-trips work without a device.
+#[cfg(not(feature = "real"))]
 pub struct PjRtBuffer(Literal);
 
+#[cfg(not(feature = "real"))]
 impl PjRtBuffer {
     pub fn to_literal_sync(&self) -> Result<Literal> {
         Ok(self.0.clone())
     }
 }
 
+#[cfg(not(feature = "real"))]
 pub struct PjRtLoadedExecutable;
 
+#[cfg(not(feature = "real"))]
 impl PjRtLoadedExecutable {
     pub fn execute_b<T: std::borrow::Borrow<PjRtBuffer>>(
         &self,
@@ -349,9 +371,11 @@ impl PjRtLoadedExecutable {
     }
 }
 
+#[cfg(not(feature = "real"))]
 #[derive(Clone)]
 pub struct PjRtClient;
 
+#[cfg(not(feature = "real"))]
 impl PjRtClient {
     pub fn cpu() -> Result<Self> {
         Ok(PjRtClient)
@@ -407,6 +431,7 @@ mod tests {
         assert_eq!(lit.array_shape().unwrap().dims(), &[3]);
     }
 
+    #[cfg(not(feature = "real"))]
     #[test]
     fn scalar_and_buffer_roundtrip() {
         let c = PjRtClient::cpu().unwrap();
@@ -416,6 +441,7 @@ mod tests {
         assert_eq!(Literal::scalar(7i32).to_vec::<i32>().unwrap(), vec![7]);
     }
 
+    #[cfg(not(feature = "real"))]
     #[test]
     fn execute_reports_stub() {
         let c = PjRtClient::cpu().unwrap();

@@ -1,0 +1,352 @@
+//! FFI-backed PJRT surface (feature `real`).
+//!
+//! Binds the `xla_rs` C shim that the upstream xla-rs crate builds
+//! around `libxla_extension`, replacing the offline stub's erroring
+//! device path with real compilation and execution. The host-side
+//! [`Literal`](super::Literal) (+ npz reading) stays the crate's own —
+//! conversions copy bytes across the FFI boundary at upload/download,
+//! which is exactly where the engine already expects host copies.
+//!
+//! Expectations (checked at link time, not compile time):
+//! * `XLA_EXTENSION_DIR/lib` contains `libxla_extension` and the
+//!   `xla_rs` shim (see `build.rs`);
+//! * the shim exports the symbol set below (the stable subset of
+//!   xla-rs's `c_lib` used by this repo: client create/free, HLO text
+//!   parse, compile, untupled execute, literal upload/download).
+//!
+//! Status strings returned by the shim are malloc'd C strings; a null
+//! return means success.
+
+use std::ffi::{c_char, c_int, CStr, CString};
+use std::path::Path;
+use std::rc::Rc;
+
+use super::{ElementType, Error, Literal, Result};
+
+// ---------------------------------------------------------------------
+// opaque shim handles
+// ---------------------------------------------------------------------
+
+#[repr(C)]
+struct CClient {
+    _opaque: [u8; 0],
+}
+#[repr(C)]
+struct CBuffer {
+    _opaque: [u8; 0],
+}
+#[repr(C)]
+struct CExecutable {
+    _opaque: [u8; 0],
+}
+#[repr(C)]
+struct CLiteral {
+    _opaque: [u8; 0],
+}
+#[repr(C)]
+struct CHloProto {
+    _opaque: [u8; 0],
+}
+#[repr(C)]
+struct CComputation {
+    _opaque: [u8; 0],
+}
+
+/// XLA PrimitiveType values for the two dtypes this repo exchanges.
+const PRIMITIVE_S32: c_int = 4;
+const PRIMITIVE_F32: c_int = 11;
+
+type CStatus = *mut c_char;
+
+extern "C" {
+    fn pjrt_cpu_client_create(out: *mut *mut CClient) -> CStatus;
+    fn pjrt_client_free(client: *mut CClient);
+    fn pjrt_client_platform_name(client: *mut CClient) -> *mut c_char;
+
+    fn hlo_module_proto_parse_and_return_unverified_module(
+        text: *const c_char,
+        out: *mut *mut CHloProto,
+    ) -> CStatus;
+    fn hlo_module_proto_free(proto: *mut CHloProto);
+    fn xla_computation_from_hlo_module_proto(proto: *mut CHloProto) -> *mut CComputation;
+    fn xla_computation_free(computation: *mut CComputation);
+
+    fn compile(
+        client: *mut CClient,
+        computation: *const CComputation,
+        out: *mut *mut CExecutable,
+    ) -> CStatus;
+    fn pjrt_loaded_executable_free(exe: *mut CExecutable);
+    /// Outputs: null-terminated array (per device) of null-terminated
+    /// arrays of buffers; single-device in this repo.
+    fn execute_b(
+        exe: *mut CExecutable,
+        args: *const *mut CBuffer,
+        n_args: c_int,
+        out: *mut *mut *mut *mut CBuffer,
+    ) -> CStatus;
+
+    fn pjrt_buffer_from_host_literal(
+        client: *mut CClient,
+        device: c_int,
+        literal: *const CLiteral,
+        out: *mut *mut CBuffer,
+    ) -> CStatus;
+    fn pjrt_buffer_to_literal_sync(buffer: *mut CBuffer, out: *mut *mut CLiteral) -> CStatus;
+    fn pjrt_buffer_free(buffer: *mut CBuffer);
+
+    fn literal_create_from_shape_and_data(
+        ty: c_int,
+        dims: *const i64,
+        n_dims: usize,
+        data: *const u8,
+        size: usize,
+    ) -> *mut CLiteral;
+    fn literal_element_type(literal: *const CLiteral) -> c_int;
+    fn literal_num_dims(literal: *const CLiteral) -> c_int;
+    fn literal_shape_dims(literal: *const CLiteral, out: *mut i64);
+    fn literal_size_bytes(literal: *const CLiteral) -> i64;
+    fn literal_copy_to(literal: *const CLiteral, dst: *mut u8, size: usize);
+    fn literal_free(literal: *mut CLiteral);
+}
+
+/// Consume a shim status; `Ok` on null.
+fn check(status: CStatus) -> Result<()> {
+    if status.is_null() {
+        return Ok(());
+    }
+    let msg = unsafe { CStr::from_ptr(status) }
+        .to_string_lossy()
+        .into_owned();
+    unsafe { libc_free(status.cast()) };
+    Err(Error(msg))
+}
+
+extern "C" {
+    #[link_name = "free"]
+    fn libc_free(ptr: *mut std::ffi::c_void);
+}
+
+// ---------------------------------------------------------------------
+// literal marshalling
+// ---------------------------------------------------------------------
+
+/// Guard around a shim-owned literal.
+struct OwnedCLiteral(*mut CLiteral);
+
+impl Drop for OwnedCLiteral {
+    fn drop(&mut self) {
+        unsafe { literal_free(self.0) }
+    }
+}
+
+fn upload_literal(lit: &Literal) -> Result<OwnedCLiteral> {
+    let shape = lit.array_shape()?;
+    let dims = shape.dims().to_vec();
+    let ty = match shape.element_type() {
+        ElementType::F32 => PRIMITIVE_F32,
+        ElementType::S32 => PRIMITIVE_S32,
+    };
+    let bytes = lit.raw_bytes();
+    let ptr = unsafe {
+        literal_create_from_shape_and_data(ty, dims.as_ptr(), dims.len(), bytes.as_ptr(), bytes.len())
+    };
+    if ptr.is_null() {
+        return Err(Error("literal_create_from_shape_and_data failed".into()));
+    }
+    Ok(OwnedCLiteral(ptr))
+}
+
+fn download_literal(ptr: *mut CLiteral) -> Result<Literal> {
+    let guard = OwnedCLiteral(ptr);
+    let ty = match unsafe { literal_element_type(guard.0) } {
+        PRIMITIVE_F32 => ElementType::F32,
+        PRIMITIVE_S32 => ElementType::S32,
+        other => return Err(Error(format!("unsupported element type {other}"))),
+    };
+    let n_dims = unsafe { literal_num_dims(guard.0) } as usize;
+    let mut dims = vec![0i64; n_dims];
+    if n_dims > 0 {
+        unsafe { literal_shape_dims(guard.0, dims.as_mut_ptr()) };
+    }
+    let size = unsafe { literal_size_bytes(guard.0) } as usize;
+    let mut bytes = vec![0u8; size];
+    unsafe { literal_copy_to(guard.0, bytes.as_mut_ptr(), size) };
+    let udims: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
+    Literal::create_from_shape_and_untyped_data(ty, &udims, &bytes)
+}
+
+// ---------------------------------------------------------------------
+// public surface (same shapes as the stub)
+// ---------------------------------------------------------------------
+
+pub struct HloModuleProto {
+    raw: *mut CHloProto,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| Error(format!("reading {:?}: {e}", path.as_ref())))?;
+        let ctext = CString::new(text).map_err(|e| Error(format!("hlo text: {e}")))?;
+        let mut raw: *mut CHloProto = std::ptr::null_mut();
+        check(unsafe {
+            hlo_module_proto_parse_and_return_unverified_module(ctext.as_ptr(), &mut raw)
+        })?;
+        Ok(HloModuleProto { raw })
+    }
+}
+
+impl Drop for HloModuleProto {
+    fn drop(&mut self) {
+        unsafe { hlo_module_proto_free(self.raw) }
+    }
+}
+
+pub struct XlaComputation {
+    raw: *mut CComputation,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> Self {
+        XlaComputation {
+            raw: unsafe { xla_computation_from_hlo_module_proto(proto.raw) },
+        }
+    }
+}
+
+impl Drop for XlaComputation {
+    fn drop(&mut self) {
+        unsafe { xla_computation_free(self.raw) }
+    }
+}
+
+pub struct PjRtBuffer {
+    raw: *mut CBuffer,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        let mut out: *mut CLiteral = std::ptr::null_mut();
+        check(unsafe { pjrt_buffer_to_literal_sync(self.raw, &mut out) })?;
+        download_literal(out)
+    }
+}
+
+impl Drop for PjRtBuffer {
+    fn drop(&mut self) {
+        unsafe { pjrt_buffer_free(self.raw) }
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    raw: *mut CExecutable,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<T: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        let raw_args: Vec<*mut CBuffer> = args.iter().map(|a| a.borrow().raw).collect();
+        let mut out: *mut *mut *mut CBuffer = std::ptr::null_mut();
+        check(unsafe {
+            execute_b(self.raw, raw_args.as_ptr(), raw_args.len() as c_int, &mut out)
+        })?;
+        // null-terminated per-device array of null-terminated buffer arrays
+        let mut devices = Vec::new();
+        let mut d = out;
+        unsafe {
+            while !(*d).is_null() {
+                let mut bufs = Vec::new();
+                let mut b = *d;
+                while !(*b).is_null() {
+                    bufs.push(PjRtBuffer { raw: *b });
+                    b = b.add(1);
+                }
+                libc_free((*d).cast());
+                devices.push(bufs);
+                d = d.add(1);
+            }
+            libc_free(out.cast());
+        }
+        Ok(devices)
+    }
+}
+
+impl Drop for PjRtLoadedExecutable {
+    fn drop(&mut self) {
+        unsafe { pjrt_loaded_executable_free(self.raw) }
+    }
+}
+
+struct ClientHandle(*mut CClient);
+
+impl Drop for ClientHandle {
+    fn drop(&mut self) {
+        unsafe { pjrt_client_free(self.0) }
+    }
+}
+
+#[derive(Clone)]
+pub struct PjRtClient {
+    raw: Rc<ClientHandle>,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        let mut raw: *mut CClient = std::ptr::null_mut();
+        check(unsafe { pjrt_cpu_client_create(&mut raw) })?;
+        Ok(PjRtClient {
+            raw: Rc::new(ClientHandle(raw)),
+        })
+    }
+
+    pub fn platform_name(&self) -> String {
+        let ptr = unsafe { pjrt_client_platform_name(self.raw.0) };
+        if ptr.is_null() {
+            return "unknown".to_string();
+        }
+        let name = unsafe { CStr::from_ptr(ptr) }.to_string_lossy().into_owned();
+        unsafe { libc_free(ptr.cast()) };
+        name
+    }
+
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        let mut raw: *mut CExecutable = std::ptr::null_mut();
+        check(unsafe { compile(self.raw.0, comp.raw, &mut raw) })?;
+        Ok(PjRtLoadedExecutable { raw })
+    }
+
+    pub fn buffer_from_host_buffer<T: super::ArrayElement>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+        device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        let mut bytes = Vec::with_capacity(data.len() * 4);
+        for v in data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let lit = Literal::create_from_shape_and_untyped_data(T::TY, dims, &bytes)?;
+        self.buffer_from_host_literal(device, &lit)
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        device: Option<usize>,
+        lit: &Literal,
+    ) -> Result<PjRtBuffer> {
+        let clit = upload_literal(lit)?;
+        let mut raw: *mut CBuffer = std::ptr::null_mut();
+        check(unsafe {
+            pjrt_buffer_from_host_literal(
+                self.raw.0,
+                device.unwrap_or(0) as c_int,
+                clit.0,
+                &mut raw,
+            )
+        })?;
+        Ok(PjRtBuffer { raw })
+    }
+}

@@ -22,7 +22,9 @@
 
 use anyhow::Result;
 use lexi_moe::config::model::spec;
-use lexi_moe::config::server::{BackendKind, ScenarioKind, ServerConfig};
+use lexi_moe::config::server::{
+    BackendKind, LadderScope, PolicyKind, PressureMode, ScenarioKind, ServerConfig,
+};
 use lexi_moe::runtime::Manifest;
 use lexi_moe::server::{self, report};
 
@@ -68,8 +70,29 @@ fn main() -> Result<()> {
         println!("-- {kind:?} --");
         report::print_comparison(&reports);
     }
+    // Second pass: the telemetry-driven control plane (class-aware
+    // routing + EDF-slack ladder + work stealing) on the overload
+    // scenarios. Separate out dir: the default sweep's artifacts above
+    // stay bit-comparable across releases.
+    let cp_out = out.join("control_plane");
+    println!("\n=== control plane: classaware routing, slack ladder, stealing ===\n");
+    report::print_header();
+    for kind in [ScenarioKind::Bursty, ScenarioKind::FlashCrowd] {
+        let cfg = ServerConfig {
+            scenario: kind,
+            policy: PolicyKind::ClassAware,
+            pressure: PressureMode::Slack,
+            ladder_scope: LadderScope::Cluster,
+            steal_bound: 1,
+            ..cfg_base.clone()
+        };
+        let reports = server::bench_serve(&mspec, &cfg, artifacts_opt, &cp_out)?;
+        println!("-- {kind:?} --");
+        report::print_comparison(&reports);
+    }
     println!(
-        "reports in {}/; service times are the analytical H100 model (DESIGN.md §3) —\n\
+        "reports in {}/ (+ control_plane/); service times are the analytical H100 model \
+         (DESIGN.md §3) —\n\
          run `lexi serve` against compiled artifacts for the measured single-engine stack.",
         out.display()
     );

@@ -22,7 +22,7 @@ fn synthetic_queue_load(rng: &mut Pcg32) -> Vec<QueuedRequest> {
             class: rng.gen_usize(4),
             priority: rng.gen_usize(3) as u8,
             arrival_s: id as f64 * 1e-3,
-            deadline_s: id as f64 * 1e-3 + 0.5 + rng.gen_f64(),
+            deadline_ns: ((id as f64 * 1e-3 + 0.5 + rng.gen_f64()) * 1e9) as u64,
             prompt_len: 64 + rng.gen_usize(512),
             new_tokens: 16 + rng.gen_usize(256),
         })

@@ -4,6 +4,8 @@
 //! Rates are expressed *relative to estimated cluster capacity* so the
 //! same scenario stresses any model the perf model can describe.
 
+use std::path::PathBuf;
+
 use anyhow::{bail, Result};
 
 /// Replica-routing policy of the cluster front door. Each kind maps to
@@ -16,6 +18,10 @@ pub enum PolicyKind {
     Jsq,
     /// Power-of-two-choices: sample two replicas, pick the lighter.
     PowerOfTwo,
+    /// SLO-class-aware joint rung+routing: batch classes are steered to
+    /// degraded (deep-rung) replicas, interactive classes keep the
+    /// full-quality ones; load breaks ties (JSQ on a uniform cluster).
+    ClassAware,
 }
 
 impl PolicyKind {
@@ -24,7 +30,8 @@ impl PolicyKind {
             "rr" | "round-robin" => PolicyKind::RoundRobin,
             "jsq" => PolicyKind::Jsq,
             "p2c" | "power-of-two" => PolicyKind::PowerOfTwo,
-            other => bail!("unknown routing policy '{other}' (rr | jsq | p2c)"),
+            "classaware" | "class-aware" => PolicyKind::ClassAware,
+            other => bail!("unknown routing policy '{other}' (rr | jsq | p2c | classaware)"),
         })
     }
 
@@ -33,6 +40,35 @@ impl PolicyKind {
             PolicyKind::RoundRobin => "rr",
             PolicyKind::Jsq => "jsq",
             PolicyKind::PowerOfTwo => "p2c",
+            PolicyKind::ClassAware => "classaware",
+        }
+    }
+}
+
+/// Pressure signal driving the adaptive-ladder controller.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PressureMode {
+    /// Queue depth against the degrade/upgrade thresholds (the original
+    /// rule, bit-identical).
+    Queue,
+    /// Normalized EDF slack of queued interactive requests: degrade
+    /// when deadlines start collapsing, not when mean depth rises.
+    Slack,
+}
+
+impl PressureMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "queue" => PressureMode::Queue,
+            "slack" => PressureMode::Slack,
+            other => bail!("unknown pressure mode '{other}' (queue | slack)"),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            PressureMode::Queue => "queue",
+            PressureMode::Slack => "slack",
         }
     }
 }
@@ -51,6 +87,8 @@ pub enum ScenarioKind {
     /// Step-function overload: calm, then an instantaneous 3x-capacity
     /// spike, then calm again.
     FlashCrowd,
+    /// Replay of a recorded request log (`--trace-file <jsonl>`).
+    TraceReplay,
 }
 
 impl ScenarioKind {
@@ -61,8 +99,10 @@ impl ScenarioKind {
             "diurnal" => ScenarioKind::Diurnal,
             "closed-loop" | "closedloop" => ScenarioKind::ClosedLoop,
             "flash-crowd" | "flashcrowd" => ScenarioKind::FlashCrowd,
+            "trace-replay" | "replay" => ScenarioKind::TraceReplay,
             other => bail!(
-                "unknown scenario '{other}' (poisson | bursty | diurnal | closed-loop | flash-crowd)"
+                "unknown scenario '{other}' (poisson | bursty | diurnal | closed-loop | \
+                 flash-crowd | trace-replay)"
             ),
         })
     }
@@ -74,9 +114,12 @@ impl ScenarioKind {
             ScenarioKind::Diurnal => "diurnal",
             ScenarioKind::ClosedLoop => "closed-loop",
             ScenarioKind::FlashCrowd => "flash-crowd",
+            ScenarioKind::TraceReplay => "trace-replay",
         }
     }
 
+    /// The generative scenario catalog (`--scenario all`). Trace replay
+    /// is deliberately absent: it needs a `--trace-file`.
     pub fn all() -> [ScenarioKind; 5] {
         [
             ScenarioKind::Poisson,
@@ -208,6 +251,17 @@ pub struct ServerConfig {
     pub ladder_scope: LadderScope,
     /// Cluster scope only: rung switches allowed per event-loop instant.
     pub max_switches_per_instant: usize,
+    /// Ladder pressure signal: queue depth or interactive EDF slack.
+    pub pressure: PressureMode,
+    /// Slack mode: degrade when the worst queued interactive slack
+    /// fraction (slack / TTFT SLO) falls below this.
+    pub slack_degrade_frac: f64,
+    /// Slack mode: recover when it rises back above this.
+    pub slack_upgrade_frac: f64,
+    /// Cross-replica steals allowed per dispatch instant (0 = off).
+    pub steal_bound: usize,
+    /// Request log for `--scenario trace-replay`.
+    pub trace_file: Option<PathBuf>,
     /// One-off event-loop cost of swapping `k_vec` on a replica.
     pub reconfig_penalty_s: f64,
     /// Reference prompt/output lengths for service-model calibration.
@@ -233,6 +287,11 @@ impl Default for ServerConfig {
             min_dwell_s: 0.5,
             ladder_scope: LadderScope::PerReplica,
             max_switches_per_instant: 1,
+            pressure: PressureMode::Queue,
+            slack_degrade_frac: 0.25,
+            slack_upgrade_frac: 0.75,
+            steal_bound: 0,
+            trace_file: None,
             reconfig_penalty_s: 0.002,
             service_in_len: 512,
             service_out_len: 64,
@@ -261,11 +320,20 @@ mod tests {
         for l in [LadderScope::PerReplica, LadderScope::Cluster] {
             assert_eq!(LadderScope::parse(l.label()).unwrap(), l);
         }
+        for p in [PressureMode::Queue, PressureMode::Slack] {
+            assert_eq!(PressureMode::parse(p.label()).unwrap(), p);
+        }
+        assert_eq!(PolicyKind::parse("classaware").unwrap(), PolicyKind::ClassAware);
+        assert_eq!(
+            ScenarioKind::parse("trace-replay").unwrap(),
+            ScenarioKind::TraceReplay
+        );
         assert!(PolicyKind::parse("lifo").is_err());
         assert!(ScenarioKind::parse("tsunami").is_err());
         assert!(BackendKind::parse("quantum").is_err());
         assert!(TableMode::parse("guess").is_err());
         assert!(LadderScope::parse("galaxy").is_err());
+        assert!(PressureMode::parse("vibes").is_err());
     }
 
     #[test]
@@ -277,5 +345,11 @@ mod tests {
         assert_eq!(c.backend, BackendKind::Sim);
         assert_eq!(c.ladder_scope, LadderScope::PerReplica);
         assert!(c.max_switches_per_instant >= 1);
+        // extended control-plane features default OFF: the default
+        // feature set must stay bit-identical to earlier releases
+        assert_eq!(c.pressure, PressureMode::Queue);
+        assert_eq!(c.steal_bound, 0);
+        assert!(c.trace_file.is_none());
+        assert!(0.0 < c.slack_degrade_frac && c.slack_degrade_frac < c.slack_upgrade_frac);
     }
 }

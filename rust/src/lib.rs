@@ -23,10 +23,11 @@
 //!   [`runtime::ModelBackend`]
 //! - [`engine`]  — continuous-batching serving stack (generic over the
 //!   model backend)
-//! - [`server`]  — multi-replica front-end: scenarios, SLO scheduling,
-//!   pluggable routing, the [`server::ReplicaBackend`] trait over
-//!   simulated/real replicas, and the cluster-global adaptive LExI
-//!   quality ladder
+//! - [`server`]  — multi-replica front-end: scenarios + trace replay,
+//!   SLO scheduling, the [`server::ReplicaBackend`] trait over
+//!   simulated/real replicas, and a telemetry-driven control plane
+//!   ([`server::ClusterSnapshot`] → routing incl. SLO-class-aware,
+//!   queue/EDF-slack adaptive LExI ladder, cross-replica work stealing)
 //! - [`eval`]    — task harness (ppl, passkey, longqa, probes, VLM)
 //! - [`figures`] — regeneration of every paper table/figure
 //! - [`util`]    — rng, stats, csv

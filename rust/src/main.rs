@@ -7,9 +7,10 @@
 //!   lexi optimize --model M             full LExI pipeline (budget sweep)
 //!   lexi eval     --model M [--lexi B|--inter F|--intra F]
 //!   lexi serve    --model M [--requests N]
-//!   lexi bench-serve [--scenario S] [--replicas N] [--policy P]
+//!   lexi bench-serve [--scenario S] [--replicas N] [--route P]
 //!                    [--backend sim|engine] [--table auto|synthetic|measured]
-//!                    [--ladder replica|cluster] [--model M] [--requests N]
+//!                    [--ladder replica|cluster] [--pressure queue|slack]
+//!                    [--steal N] [--trace-file F] [--model M] [--requests N]
 //!                    multi-replica front-end (sim or real engine replicas)
 //!   lexi figures  --exp fig2|fig3|fig9|figs4-8|table1|all
 //!
@@ -125,9 +126,11 @@ fn print_help() {
          commands: table1 | profile | search | optimize | eval | serve | bench-serve | figures\n\
          flags: --model M --budget B --artifacts DIR --out DIR --iters N --fast\n\
          figures: --exp table1|fig2|fig3|fig9|figs4-8|ablations|all [--models a,b]\n\
-         bench-serve: --scenario poisson|bursty|diurnal|closed-loop|flash-crowd|all\n\
-                      --replicas N --slots N --policy rr|jsq|p2c --backend sim|engine\n\
+         bench-serve: --scenario poisson|bursty|diurnal|closed-loop|flash-crowd|trace-replay|all\n\
+                      --replicas N --slots N --route rr|jsq|p2c|classaware --backend sim|engine\n\
                       --table auto|synthetic|measured --ladder replica|cluster\n\
+                      --pressure queue|slack --steal N (steals/instant, 0=off)\n\
+                      --trace-file F (JSONL log for trace-replay)\n\
                       --requests N --model M --seed S"
     );
 }
@@ -314,10 +317,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// `--backend sim` (default) replays perf-model-calibrated virtual-time
 /// replicas; `--backend engine` drives real `engine::Engine` replicas
 /// through the same front door. The ladder's Stage-1 table source is
-/// controlled by `--table` and logged per run.
+/// controlled by `--table` and logged per run; `--route classaware`,
+/// `--pressure slack`, and `--steal N` switch on the telemetry-driven
+/// control-plane features.
 fn cmd_bench_serve(args: &Args) -> Result<()> {
     use lexi_moe::config::server::{
-        BackendKind, LadderScope, PolicyKind, ScenarioKind, ServerConfig, TableMode,
+        BackendKind, LadderScope, PolicyKind, PressureMode, ScenarioKind, ServerConfig, TableMode,
     };
 
     let model_name = args.get("model").unwrap_or("qwen1.5-moe-a2.7b");
@@ -331,7 +336,8 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
         cfg.slots_per_replica = n.parse().context("--slots must be an integer")?;
         anyhow::ensure!(cfg.slots_per_replica >= 1, "--slots must be >= 1");
     }
-    if let Some(p) = args.get("policy") {
+    // --route is the canonical routing flag; --policy stays as an alias
+    if let Some(p) = args.get("route").or_else(|| args.get("policy")) {
         cfg.policy = PolicyKind::parse(p)?;
     }
     if let Some(b) = args.get("backend") {
@@ -343,30 +349,51 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
     if let Some(l) = args.get("ladder") {
         cfg.ladder_scope = LadderScope::parse(l)?;
     }
+    if let Some(p) = args.get("pressure") {
+        cfg.pressure = PressureMode::parse(p)?;
+    }
+    if let Some(n) = args.get("steal") {
+        cfg.steal_bound = n.parse().context("--steal must be an integer (steals per instant)")?;
+    }
+    if let Some(f) = args.get("trace-file") {
+        cfg.trace_file = Some(PathBuf::from(f));
+    }
     if let Some(n) = args.get("requests") {
         cfg.n_requests = n.parse().context("--requests must be an integer")?;
     }
     if let Some(s) = args.get("seed") {
         cfg.seed = s.parse().context("--seed must be an integer")?;
     }
-    let scenario_flag = args.get("scenario").unwrap_or("bursty");
+    // a trace file implies replay when no scenario was named; naming a
+    // different one is a contradiction, not something to ignore
+    let scenario_flag = match args.get("scenario") {
+        Some(s) => s,
+        None if cfg.trace_file.is_some() => "trace-replay",
+        None => "bursty",
+    };
     let scenarios: Vec<ScenarioKind> = if scenario_flag == "all" {
         ScenarioKind::all().to_vec()
     } else {
         vec![ScenarioKind::parse(scenario_flag)?]
     };
+    anyhow::ensure!(
+        cfg.trace_file.is_none() || scenarios.contains(&ScenarioKind::TraceReplay),
+        "--trace-file only makes sense with --scenario trace-replay (got '{scenario_flag}')"
+    );
 
     let out = args.out_dir();
     let artifacts = args.artifacts();
     let artifacts_opt = artifacts.exists().then_some(artifacts.as_path());
     println!(
-        "=== bench-serve: {model_name}, {} replicas x {} slots, policy {}, backend {}, \
-         ladder scope {}, {} requests/scenario ===\n",
+        "=== bench-serve: {model_name}, {} replicas x {} slots, route {}, backend {}, \
+         ladder scope {}, pressure {}, steal {}, {} requests/scenario ===\n",
         cfg.replicas,
         cfg.slots_per_replica,
         cfg.policy.label(),
         cfg.backend.label(),
         cfg.ladder_scope.label(),
+        cfg.pressure.label(),
+        cfg.steal_bound,
         cfg.n_requests
     );
     lexi_moe::server::report::print_header();

@@ -4,13 +4,19 @@
 //! [`Cluster`](super::router::Cluster) drives every replica through this
 //! surface — admit, start a phase, report the next completion time,
 //! finish the phase, reconfigure the quality-ladder rung — so the same
-//! routing policies, admission control, SLO scheduling, and
-//! cluster-global ladder controller apply whether the replica is the
+//! routing policies, admission control, SLO scheduling, work stealing,
+//! and cluster-global ladder controller apply whether the replica is the
 //! perf-model-calibrated virtual-time [`Replica`](super::replica::Replica)
 //! or an [`EngineReplica`](super::engine_backend::EngineReplica) wrapping
 //! the real continuous-batching [`Engine`](crate::engine::Engine).
+//!
+//! Cluster-level *decisions* never read backend internals directly: each
+//! backend reports a structured [`ReplicaTelemetry`] and every policy
+//! (routing, ladder, stealing) consumes the resulting
+//! [`ClusterSnapshot`](super::telemetry::ClusterSnapshot).
 
 use super::scheduler::QueuedRequest;
+use super::telemetry::{ReplicaTelemetry, StepTimeSummary, TelemetryDetail};
 
 /// A finished request with its serving timeline (event-loop clock).
 #[derive(Clone, Debug, PartialEq)]
@@ -42,6 +48,9 @@ pub struct BackendStats {
     pub rung_switches: u64,
     /// Busy time accumulated per quality-ladder rung.
     pub rung_time_s: Vec<f64>,
+    /// Measured step-time distribution (engine backends only; the sim
+    /// replica's phases are model outputs, not measurements).
+    pub step_times: Option<StepTimeSummary>,
 }
 
 /// One replica behind the cluster front door.
@@ -62,23 +71,30 @@ pub trait ReplicaBackend {
     /// Admit a routed request into the local queue.
     fn admit(&mut self, req: QueuedRequest);
 
-    /// Requests waiting in the local queue (the ladder pressure signal).
-    fn queue_len(&self) -> usize;
+    /// Structured control-plane telemetry at `now_s` — the one signal
+    /// surface routing, the ladder controller, and work stealing read.
+    /// `detail` bounds the cost: [`TelemetryDetail::Load`] fills only
+    /// the O(1) fields (the per-arrival routing input),
+    /// [`TelemetryDetail::Full`] adds the O(queue) scan fields.
+    fn telemetry(&self, now_s: f64, detail: TelemetryDetail) -> ReplicaTelemetry;
 
     /// Queued + running requests (the admission-control signal).
     fn outstanding(&self) -> usize;
 
-    /// Token-weighted backlog (the JSQ / p2c routing signal).
-    fn load_cost(&self) -> u64;
-
-    /// Current quality-ladder rung (0 = full quality).
-    fn rung(&self) -> usize;
-
-    /// Event-loop time of the last rung switch (−∞ before the first).
-    fn last_switch_s(&self) -> f64;
+    /// Whether this replica can take on new work. A backend that has
+    /// failed mid-run reports false so the stealing pass never moves a
+    /// healthy replica's queued request INTO it (its `admit` would
+    /// silently drop the request, breaking steal conservation).
+    fn accepts_work(&self) -> bool {
+        true
+    }
 
     /// Switch ladder rungs; `penalty_s` is charged to the next phase.
     fn set_rung(&mut self, rung: usize, now: f64, penalty_s: f64);
+
+    /// Remove the queued request with the least absolute EDF slack (the
+    /// work-stealing donor operation). `None` when nothing is queued.
+    fn steal_request(&mut self) -> Option<QueuedRequest>;
 
     /// Begin the next phase if idle. Returns false when there is
     /// nothing to do.

@@ -22,11 +22,13 @@ use std::time::Instant;
 
 use crate::engine::{Engine, SamplingParams, StepKind, StepOutcome};
 use crate::runtime::ModelBackend;
+use crate::util::stats::percentile_sorted;
 use crate::util::Pcg32;
 
 use super::backend::{BackendStats, CompletedRequest, ReplicaBackend};
 use super::ladder::QualityLadder;
 use super::scheduler::{EdfQueue, QueuedRequest};
+use super::telemetry::{ReplicaTelemetry, StepTimeSummary, TelemetryDetail};
 
 /// Cluster-side bookkeeping for a request inside the engine.
 struct Inflight {
@@ -59,6 +61,11 @@ pub struct EngineReplica<'m, M: ModelBackend> {
     /// (remaining work is dropped and shows up as missing completions)
     /// instead of taking the whole benchmark process down.
     failed: bool,
+    /// EWMA of recent measured step times (telemetry signal).
+    step_ewma_s: f64,
+    /// Every measured `Engine::step` wall time, for the run report's
+    /// step-time histogram (sim `ServiceModel` calibration input).
+    step_samples_s: Vec<f64>,
     // ---- counters ----
     busy_s: f64,
     prefill_calls: u64,
@@ -88,6 +95,8 @@ impl<'m, M: ModelBackend> EngineReplica<'m, M> {
             phase: None,
             inflight: HashMap::new(),
             failed: false,
+            step_ewma_s: 0.0,
+            step_samples_s: Vec::new(),
             busy_s: 0.0,
             prefill_calls: 0,
             decode_steps: 0,
@@ -144,31 +153,48 @@ impl<'m, M: ModelBackend> ReplicaBackend for EngineReplica<'m, M> {
         self.queue.push(req);
     }
 
-    fn queue_len(&self) -> usize {
-        self.queue.len()
+    fn telemetry(&self, now_s: f64, detail: TelemetryDetail) -> ReplicaTelemetry {
+        // load: queued cost + the full decode budget of everything
+        // already inside the engine (per-token progress stays
+        // engine-internal)
+        let load_cost = self.queue.pending_cost()
+            + self
+                .inflight
+                .values()
+                .map(|m| m.new_tokens as u64)
+                .sum::<u64>();
+        let mut t = ReplicaTelemetry {
+            replica: self.id,
+            accepting: !self.failed,
+            rung: self.rung,
+            last_switch_s: self.last_switch_s,
+            queue_len: self.queue.len(),
+            active: self.inflight.len(),
+            load_cost,
+            class_occupancy: Vec::new(),
+            min_slack_s: None,
+            min_interactive_slack_frac: None,
+            step_ewma_s: self.step_ewma_s,
+        };
+        if detail == TelemetryDetail::Full {
+            t.fill_scans(&self.queue, self.inflight.values().map(|m| m.class), now_s);
+        }
+        t
     }
 
     fn outstanding(&self) -> usize {
         self.queue.len() + self.inflight.len()
     }
 
-    fn load_cost(&self) -> u64 {
-        // queued cost + the full decode budget of everything already
-        // inside the engine (per-token progress stays engine-internal)
-        self.queue.pending_cost()
-            + self
-                .inflight
-                .values()
-                .map(|m| m.new_tokens as u64)
-                .sum::<u64>()
+    fn accepts_work(&self) -> bool {
+        !self.failed
     }
 
-    fn rung(&self) -> usize {
-        self.rung
-    }
-
-    fn last_switch_s(&self) -> f64 {
-        self.last_switch_s
+    fn steal_request(&mut self) -> Option<QueuedRequest> {
+        if self.failed {
+            return None;
+        }
+        self.queue.pop_min_deadline()
     }
 
     fn set_rung(&mut self, rung: usize, now: f64, penalty_s: f64) {
@@ -213,6 +239,12 @@ impl<'m, M: ModelBackend> ReplicaBackend for EngineReplica<'m, M> {
             StepKind::Prefill => self.prefill_calls += 1,
             StepKind::Decode => self.decode_steps += 1,
         }
+        self.step_samples_s.push(dt);
+        self.step_ewma_s = if self.step_ewma_s == 0.0 {
+            dt
+        } else {
+            0.2 * dt + 0.8 * self.step_ewma_s
+        };
         let dur = self.pending_penalty_s + dt;
         self.pending_penalty_s = 0.0;
         self.busy_s += dur;
@@ -260,12 +292,23 @@ impl<'m, M: ModelBackend> ReplicaBackend for EngineReplica<'m, M> {
     }
 
     fn stats(&self) -> BackendStats {
+        let step_times = (!self.step_samples_s.is_empty()).then(|| {
+            let mut s = self.step_samples_s.clone();
+            s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            StepTimeSummary {
+                n: s.len() as u64,
+                p50_s: percentile_sorted(&s, 50.0),
+                p95_s: percentile_sorted(&s, 95.0),
+                max_s: *s.last().unwrap(),
+            }
+        });
         BackendStats {
             busy_s: self.busy_s,
             prefill_calls: self.prefill_calls,
             decode_steps: self.decode_steps,
             rung_switches: self.rung_switches,
             rung_time_s: self.rung_time_s.clone(),
+            step_times,
         }
     }
 }

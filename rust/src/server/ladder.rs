@@ -9,26 +9,37 @@
 //! sensitivity table (deterministic, so every run and replica agrees on
 //! the ladder).
 //!
-//! Rung decisions are made by ONE [`LadderController`] per cluster,
-//! observing every replica through the
-//! [`ReplicaBackend`](super::backend::ReplicaBackend) surface. It runs
-//! in two scopes:
+//! Rung decisions are made by ONE [`LadderController`] per cluster — a
+//! pure function of the [`ClusterSnapshot`] telemetry layer. It runs in
+//! two scopes:
 //!
 //! * [`LadderScope::PerReplica`] — each replica follows its own
-//!   hysteretic queue-depth rule (the original controller, preserved
+//!   hysteretic rule (the original queue-depth controller, preserved
 //!   bit-for-bit: degrade one rung past `degrade_above`, climb back
 //!   below `upgrade_below`, dwell between switches).
-//! * [`LadderScope::Cluster`] — the controller reads *aggregate* queue
+//! * [`LadderScope::Cluster`] — the controller reads *aggregate*
 //!   pressure and co-optimizes the assignment: at most
 //!   `max_switches_per_instant` replicas move per event-loop instant,
-//!   deepest-queue replicas degrade first and shallowest-queue replicas
+//!   most-pressured replicas degrade first and least-pressured replicas
 //!   recover first, so a cluster under a burst staggers down the ladder
 //!   instead of flapping every replica simultaneously.
+//!
+//! Both scopes support two pressure signals
+//! ([`PressureMode`], `--pressure queue|slack`):
+//!
+//! * `queue` — queue depth against the `degrade_above`/`upgrade_below`
+//!   thresholds (the PR 2 rule, bit-identical).
+//! * `slack` — normalized EDF slack of queued *interactive* requests:
+//!   degrade when the worst queued interactive request has burned more
+//!   than `1 - slack_degrade_frac` of its TTFT budget, recover when all
+//!   queued interactive slack is above `slack_upgrade_frac`. Reacts to
+//!   deadline collapse directly instead of waiting for mean depth to
+//!   rise, so a flash crowd is met before the SLO is already lost.
 
 use anyhow::{Context, Result};
 
 use crate::config::model::ModelSpec;
-use crate::config::server::{LadderScope, ServerConfig};
+use crate::config::server::{LadderScope, PressureMode, ServerConfig};
 use crate::lexi::evolution::exact_dp;
 use crate::lexi::SensitivityTable;
 use crate::moe::allocation::{Allocation, Bounds};
@@ -36,6 +47,7 @@ use crate::moe::transform::Transform;
 use crate::perfmodel::PerfModel;
 
 use super::replica::ServiceModel;
+use super::telemetry::{ClusterSnapshot, ReplicaTelemetry};
 
 /// One quality level: allocation + calibrated service model + the
 /// Stage-1 proxy loss the allocation costs.
@@ -166,6 +178,14 @@ pub struct LadderPolicy {
     /// Cluster scope only: replicas allowed to switch per event-loop
     /// instant (the stagger knob).
     pub max_switches_per_instant: usize,
+    /// Pressure signal: queue depth or interactive EDF slack.
+    pub pressure: PressureMode,
+    /// Slack mode: degrade when the worst queued interactive slack
+    /// fraction falls below this.
+    pub slack_degrade_frac: f64,
+    /// Slack mode: recover when the worst queued interactive slack
+    /// fraction rises above this (hysteresis band between the two).
+    pub slack_upgrade_frac: f64,
 }
 
 impl Default for LadderPolicy {
@@ -176,6 +196,9 @@ impl Default for LadderPolicy {
             min_dwell_s: 0.5,
             scope: LadderScope::PerReplica,
             max_switches_per_instant: 1,
+            pressure: PressureMode::Queue,
+            slack_degrade_frac: 0.25,
+            slack_upgrade_frac: 0.75,
         }
     }
 }
@@ -188,6 +211,9 @@ impl LadderPolicy {
             min_dwell_s: cfg.min_dwell_s,
             scope: cfg.ladder_scope,
             max_switches_per_instant: cfg.max_switches_per_instant,
+            pressure: cfg.pressure,
+            slack_degrade_frac: cfg.slack_degrade_frac,
+            slack_upgrade_frac: cfg.slack_upgrade_frac,
         }
     }
 
@@ -213,18 +239,33 @@ impl LadderPolicy {
             current
         }
     }
+
+    /// Slack-mode twin of [`decide`](LadderPolicy::decide): `frac` is
+    /// the replica's worst queued interactive slack fraction (+∞ when
+    /// none is queued).
+    pub fn decide_slack(
+        &self,
+        current: usize,
+        n_rungs: usize,
+        frac: f64,
+        now: f64,
+        last_switch_s: f64,
+    ) -> usize {
+        if n_rungs <= 1 || now - last_switch_s < self.min_dwell_s {
+            return current;
+        }
+        if frac < self.slack_degrade_frac && current + 1 < n_rungs {
+            current + 1
+        } else if frac > self.slack_upgrade_frac && current > 0 {
+            current - 1
+        } else {
+            current
+        }
+    }
 }
 
-/// One replica's controller-visible state, snapshotted by the cluster.
-#[derive(Clone, Copy, Debug)]
-pub struct ReplicaView {
-    pub rung: usize,
-    pub queue_len: usize,
-    pub last_switch_s: f64,
-}
-
-/// The cluster's single rung controller: turns replica snapshots into
-/// target rungs each event-loop instant.
+/// The cluster's single rung controller: a pure function from the
+/// telemetry snapshot to target rungs each event-loop instant.
 #[derive(Clone, Debug)]
 pub struct LadderController {
     pub policy: LadderPolicy,
@@ -243,24 +284,43 @@ impl LadderController {
         }
     }
 
+    /// Per-replica pressure reading for the configured signal: queued
+    /// interactive slack fraction under `slack`, +∞ when nothing
+    /// interactive is queued.
+    fn slack_frac(t: &ReplicaTelemetry) -> f64 {
+        t.min_interactive_slack_frac.unwrap_or(f64::INFINITY)
+    }
+
     /// Target rung per replica. The cluster applies any change via
     /// [`ReplicaBackend::set_rung`](super::backend::ReplicaBackend::set_rung).
-    pub fn decide(&mut self, views: &[ReplicaView], n_rungs: usize, now: f64) -> Vec<usize> {
+    pub fn decide(&mut self, snap: &ClusterSnapshot, n_rungs: usize) -> Vec<usize> {
+        let now = snap.now_s;
         match self.policy.scope {
-            LadderScope::PerReplica => views
+            LadderScope::PerReplica => snap
+                .replicas
                 .iter()
-                .map(|v| {
-                    self.policy
-                        .decide(v.rung, n_rungs, v.queue_len, now, v.last_switch_s)
+                .map(|t| match self.policy.pressure {
+                    PressureMode::Queue => self
+                        .policy
+                        .decide(t.rung, n_rungs, t.queue_len, now, t.last_switch_s),
+                    PressureMode::Slack => self.policy.decide_slack(
+                        t.rung,
+                        n_rungs,
+                        Self::slack_frac(t),
+                        now,
+                        t.last_switch_s,
+                    ),
                 })
                 .collect(),
-            LadderScope::Cluster => self.decide_cluster(views, n_rungs, now),
+            LadderScope::Cluster => self.decide_cluster(snap, n_rungs),
         }
     }
 
     /// Cluster-global co-optimization: one pressure reading for the
     /// whole cluster, a bounded number of staggered moves per instant.
-    fn decide_cluster(&mut self, views: &[ReplicaView], n_rungs: usize, now: f64) -> Vec<usize> {
+    fn decide_cluster(&mut self, snap: &ClusterSnapshot, n_rungs: usize) -> Vec<usize> {
+        let views = &snap.replicas;
+        let now = snap.now_s;
         let mut targets: Vec<usize> = views.iter().map(|v| v.rung).collect();
         if n_rungs <= 1 || views.is_empty() {
             return targets;
@@ -278,18 +338,45 @@ impl LadderController {
         if budget == 0 {
             return targets;
         }
-        let total_q: usize = views.iter().map(|v| v.queue_len).sum();
-        let mean_q = total_q as f64 / views.len() as f64;
+        // aggregate pressure + the stagger order for each direction
+        let (overloaded, drained) = match self.policy.pressure {
+            PressureMode::Queue => {
+                let total_q: usize = views.iter().map(|v| v.queue_len).sum();
+                let mean_q = total_q as f64 / views.len() as f64;
+                (
+                    mean_q > self.policy.degrade_above as f64,
+                    mean_q < self.policy.upgrade_below as f64,
+                )
+            }
+            PressureMode::Slack => {
+                let worst = snap.min_interactive_slack_frac();
+                (
+                    worst < self.policy.slack_degrade_frac,
+                    worst > self.policy.slack_upgrade_frac,
+                )
+            }
+        };
         let mut order: Vec<usize> = (0..views.len()).collect();
-        if mean_q > self.policy.degrade_above as f64 {
+        if overloaded {
             // overload: spread degradation — highest-quality replicas
-            // first, deepest queue breaking ties
-            order.sort_by_key(|&i| (views[i].rung, std::cmp::Reverse(views[i].queue_len), i));
+            // first, most-pressured breaking ties
+            match self.policy.pressure {
+                PressureMode::Queue => order.sort_by_key(|&i| {
+                    (views[i].rung, std::cmp::Reverse(views[i].queue_len), i)
+                }),
+                PressureMode::Slack => order.sort_by(|&a, &b| {
+                    views[a]
+                        .rung
+                        .cmp(&views[b].rung)
+                        .then(Self::slack_frac(&views[a]).total_cmp(&Self::slack_frac(&views[b])))
+                        .then(a.cmp(&b))
+                }),
+            }
             for i in order {
                 if budget == 0 {
                     break;
                 }
-                let v = views[i];
+                let v = &views[i];
                 if now - v.last_switch_s < self.policy.min_dwell_s {
                     continue;
                 }
@@ -299,17 +386,26 @@ impl LadderController {
                     self.switched_at_instant += 1;
                 }
             }
-        } else if mean_q < self.policy.upgrade_below as f64 {
-            // drained: most-degraded replicas recover first, shallowest
-            // queue breaking ties
-            order.sort_by_key(|&i| {
-                (std::cmp::Reverse(views[i].rung), views[i].queue_len, i)
-            });
+        } else if drained {
+            // drained: most-degraded replicas recover first,
+            // least-pressured breaking ties
+            match self.policy.pressure {
+                PressureMode::Queue => order.sort_by_key(|&i| {
+                    (std::cmp::Reverse(views[i].rung), views[i].queue_len, i)
+                }),
+                PressureMode::Slack => order.sort_by(|&a, &b| {
+                    views[b]
+                        .rung
+                        .cmp(&views[a].rung)
+                        .then(Self::slack_frac(&views[b]).total_cmp(&Self::slack_frac(&views[a])))
+                        .then(a.cmp(&b))
+                }),
+            }
             for i in order {
                 if budget == 0 {
                     break;
                 }
-                let v = views[i];
+                let v = &views[i];
                 if now - v.last_switch_s < self.policy.min_dwell_s {
                     continue;
                 }
@@ -402,11 +498,17 @@ mod tests {
         assert_eq!(p.decide(0, 1, 100, 5.0, 0.0), 0);
     }
 
-    fn view(rung: usize, queue_len: usize) -> ReplicaView {
-        ReplicaView {
-            rung,
-            queue_len,
-            last_switch_s: f64::NEG_INFINITY,
+    fn view(replica: usize, rung: usize, queue_len: usize) -> ReplicaTelemetry {
+        let mut t = ReplicaTelemetry::idle(replica);
+        t.rung = rung;
+        t.queue_len = queue_len;
+        t
+    }
+
+    fn snap(now_s: f64, views: Vec<ReplicaTelemetry>) -> ClusterSnapshot {
+        ClusterSnapshot {
+            now_s,
+            replicas: views,
         }
     }
 
@@ -418,10 +520,11 @@ mod tests {
             min_dwell_s: 0.0,
             scope: LadderScope::PerReplica,
             max_switches_per_instant: 1,
+            ..Default::default()
         };
         let mut ctl = LadderController::new(p);
         // per-replica ignores the stagger budget: both degrade at once
-        let t = ctl.decide(&[view(0, 20), view(0, 20)], 4, 1.0);
+        let t = ctl.decide(&snap(1.0, vec![view(0, 0, 20), view(1, 0, 20)]), 4);
         assert_eq!(t, vec![1, 1]);
     }
 
@@ -433,19 +536,20 @@ mod tests {
             min_dwell_s: 0.0,
             scope: LadderScope::Cluster,
             max_switches_per_instant: 1,
+            ..Default::default()
         };
         let mut ctl = LadderController::new(p);
         // overload everywhere: only the deepest queue degrades now
-        let t = ctl.decide(&[view(0, 15), view(0, 40)], 4, 1.0);
+        let t = ctl.decide(&snap(1.0, vec![view(0, 0, 15), view(1, 0, 40)]), 4);
         assert_eq!(t, vec![0, 1]);
         // same instant again: budget spent, nobody else moves
-        let t = ctl.decide(&[view(0, 15), view(1, 40)], 4, 1.0);
+        let t = ctl.decide(&snap(1.0, vec![view(0, 0, 15), view(1, 1, 40)]), 4);
         assert_eq!(t, vec![0, 1]);
         // next instant: the other replica takes its step
-        let t = ctl.decide(&[view(0, 15), view(1, 40)], 4, 2.0);
+        let t = ctl.decide(&snap(2.0, vec![view(0, 0, 15), view(1, 1, 40)]), 4);
         assert_eq!(t, vec![1, 1]);
         // drained cluster recovers shallowest-first, one per instant
-        let t = ctl.decide(&[view(2, 0), view(2, 1)], 4, 3.0);
+        let t = ctl.decide(&snap(3.0, vec![view(0, 2, 0), view(1, 2, 1)]), 4);
         assert_eq!(t, vec![1, 2]);
     }
 
@@ -457,9 +561,81 @@ mod tests {
             min_dwell_s: 0.0,
             scope: LadderScope::Cluster,
             max_switches_per_instant: 8,
+            ..Default::default()
         };
         let mut ctl = LadderController::new(p);
-        let t = ctl.decide(&[view(1, 5), view(1, 6)], 4, 1.0);
+        let t = ctl.decide(&snap(1.0, vec![view(0, 1, 5), view(1, 1, 6)]), 4);
+        assert_eq!(t, vec![1, 1]);
+    }
+
+    fn slack_view(replica: usize, rung: usize, frac: Option<f64>) -> ReplicaTelemetry {
+        let mut t = ReplicaTelemetry::idle(replica);
+        t.rung = rung;
+        t.min_interactive_slack_frac = frac;
+        t
+    }
+
+    #[test]
+    fn slack_pressure_degrades_on_deadline_collapse_not_depth() {
+        let p = LadderPolicy {
+            min_dwell_s: 0.0,
+            scope: LadderScope::PerReplica,
+            pressure: PressureMode::Slack,
+            slack_degrade_frac: 0.25,
+            slack_upgrade_frac: 0.75,
+            // queue thresholds irrelevant under slack pressure
+            degrade_above: 1_000_000,
+            upgrade_below: 0,
+            ..Default::default()
+        };
+        let mut ctl = LadderController::new(p);
+        // replica 0: slack collapsed -> degrade; replica 1: plenty of
+        // slack -> hold; replica 2: nothing interactive queued -> it
+        // may recover (but is already at rung 0)
+        let t = ctl.decide(
+            &snap(
+                1.0,
+                vec![
+                    slack_view(0, 0, Some(0.1)),
+                    slack_view(1, 0, Some(0.5)),
+                    slack_view(2, 0, None),
+                ],
+            ),
+            4,
+        );
+        assert_eq!(t, vec![1, 0, 0]);
+        // degraded replica recovers once slack is restored
+        let t = ctl.decide(&snap(2.0, vec![slack_view(0, 2, Some(0.9))]), 4);
+        assert_eq!(t, vec![1]);
+        // inside the hysteresis band: hold
+        let t = ctl.decide(&snap(3.0, vec![slack_view(0, 2, Some(0.5))]), 4);
+        assert_eq!(t, vec![2]);
+    }
+
+    #[test]
+    fn cluster_slack_scope_staggers_worst_slack_first() {
+        let p = LadderPolicy {
+            min_dwell_s: 0.0,
+            scope: LadderScope::Cluster,
+            max_switches_per_instant: 1,
+            pressure: PressureMode::Slack,
+            slack_degrade_frac: 0.25,
+            slack_upgrade_frac: 0.75,
+            ..Default::default()
+        };
+        let mut ctl = LadderController::new(p);
+        // aggregate slack collapsed: the worst-slack replica degrades
+        // first, one move per instant
+        let t = ctl.decide(
+            &snap(1.0, vec![slack_view(0, 0, Some(0.2)), slack_view(1, 0, Some(0.05))]),
+            4,
+        );
+        assert_eq!(t, vec![0, 1]);
+        // fully recovered cluster climbs back, most-degraded first
+        let t = ctl.decide(
+            &snap(2.0, vec![slack_view(0, 1, None), slack_view(1, 2, None)]),
+            4,
+        );
         assert_eq!(t, vec![1, 1]);
     }
 }

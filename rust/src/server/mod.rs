@@ -10,13 +10,26 @@
 //! behind the same front door (`--backend engine`), wall-clock mapped
 //! onto the event loop.
 //!
+//! Every cluster-level decision flows through one control plane: each
+//! replica reports a structured [`ReplicaTelemetry`], the event loop
+//! assembles a [`ClusterSnapshot`] per dispatch instant, and routing
+//! (including SLO-class-aware joint rung+routing), the quality-ladder
+//! controller (queue-depth or EDF-slack pressure), and bounded
+//! cross-replica work stealing are all pure functions of that snapshot.
+//!
 //! Module map:
-//! - [`workload`]  — arrival processes x request-shape profiles
+//! - [`workload`]  — arrival processes x request-shape profiles,
+//!   trace replay from recorded JSONL logs
 //! - [`scheduler`] — admission control + multi-class EDF queues
+//!   (integer-ns deadlines)
+//! - [`telemetry`] — `ReplicaTelemetry` / `ClusterSnapshot`, the one
+//!   signal surface every cluster policy consumes
 //! - [`backend`]   — the `ReplicaBackend` trait the cluster drives
 //! - [`replica`]   — virtual-time continuous-batching replica
-//! - [`engine_backend`] — real-engine replica (wall-clock phases)
-//! - [`router`]    — cluster, `RoutingPolicy` impls, the event loop
+//! - [`engine_backend`] — real-engine replica (wall-clock phases,
+//!   measured step-time histograms)
+//! - [`router`]    — cluster, `RoutingPolicy` impls, work stealing,
+//!   the event loop
 //! - [`ladder`]    — LExI quality ladder + cluster-global controller
 //! - [`report`]    — TTFT/TPOT percentiles, goodput-under-SLO, CSV/JSON
 
@@ -27,6 +40,7 @@ pub mod replica;
 pub mod report;
 pub mod router;
 pub mod scheduler;
+pub mod telemetry;
 pub mod workload;
 
 use std::fmt;
@@ -47,12 +61,13 @@ use crate::runtime::{Manifest, ModelBackend, ModelRuntime, Runtime, SyntheticMod
 
 pub use backend::{BackendStats, CompletedRequest, ReplicaBackend};
 pub use engine_backend::EngineReplica;
-pub use ladder::{LadderController, LadderPolicy, QualityLadder, ReplicaView, Rung};
+pub use ladder::{LadderController, LadderPolicy, QualityLadder, Rung};
 pub use replica::{Replica, ServiceModel};
 pub use report::TransformReport;
 pub use router::{Cluster, RoutingPolicy, RunResult};
 pub use scheduler::{AdmissionControl, EdfQueue, QueuedRequest};
-pub use workload::{Scenario, SloTarget, Trace, TraceRequest};
+pub use telemetry::{ClusterSnapshot, ReplicaTelemetry, StepTimeSummary, TelemetryDetail};
+pub use workload::{load_trace_jsonl, Scenario, SloTarget, Trace, TraceRequest};
 
 /// Where the Stage-1 table used for ladder construction came from.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -215,6 +230,14 @@ pub fn bench_serve(
     // unqueued arrival at a busy replica actually experiences).
     let slack = 2.0 * base_svc.step_time(cfg.slots_per_replica);
     let mut scenario = Scenario::from_kind(cfg.scenario, estimate_capacity(base_svc, cfg));
+    if cfg.scenario == crate::config::server::ScenarioKind::TraceReplay {
+        let path = cfg
+            .trace_file
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("--scenario trace-replay needs --trace-file <jsonl>"))?;
+        let n = scenario.load_replay(path)?;
+        println!("trace replay: {n} requests from {}", path.display());
+    }
     scenario.resolve_slos(
         |tokens| base_svc.prefill_time(tokens * cfg.slots_per_replica) + slack,
         base_svc.step_time(cfg.slots_per_replica),
@@ -268,7 +291,8 @@ fn sim_reports(
             scenario.profiles.len(),
             cfg.reconfig_penalty_s,
             cfg.seed,
-        );
+        )
+        .with_stealing(cfg.steal_bound);
         let res = cluster.run(scenario, trace);
         reports.push(TransformReport::from_run(
             scenario,
@@ -337,7 +361,8 @@ fn engine_reports<M: ModelBackend>(
             scenario.profiles.len(),
             cfg.reconfig_penalty_s,
             cfg.seed,
-        );
+        )
+        .with_stealing(cfg.steal_bound);
         let res = cluster.run(scenario, trace);
         reports.push(TransformReport::from_run(
             scenario,
@@ -378,13 +403,20 @@ fn synthetic_engine_model(
     cfg: &ServerConfig,
     scenario: &Scenario,
 ) -> SyntheticModel {
-    let max_prompt = scenario
+    let mut max_prompt = scenario
         .profiles
         .iter()
         .map(|p| p.prompt_hi)
         .max()
         .unwrap_or(512);
-    let max_gen = scenario.profiles.iter().map(|p| p.gen_hi).max().unwrap_or(64);
+    let mut max_gen = scenario.profiles.iter().map(|p| p.gen_hi).max().unwrap_or(64);
+    // replayed logs may exceed the catalog's shape envelope
+    if let workload::ArrivalProcess::Replay { requests } = &scenario.arrivals {
+        for r in requests {
+            max_prompt = max_prompt.max(r.prompt_len);
+            max_gen = max_gen.max(r.new_tokens);
+        }
+    }
     SyntheticModel::new(
         spec.name,
         spec.n_layers,

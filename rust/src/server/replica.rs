@@ -17,7 +17,8 @@ use crate::perfmodel::PerfModel;
 
 use super::backend::{BackendStats, ReplicaBackend};
 use super::ladder::QualityLadder;
-use super::scheduler::EdfQueue;
+use super::scheduler::{EdfQueue, QueuedRequest};
+use super::telemetry::{ReplicaTelemetry, TelemetryDetail};
 
 pub use super::backend::CompletedRequest;
 
@@ -122,6 +123,8 @@ pub struct Replica {
     pub rung: usize,
     pub last_switch_s: f64,
     pending_penalty_s: f64,
+    /// EWMA of recent phase durations (telemetry signal).
+    step_ewma_s: f64,
     // ---- counters ----
     pub busy_s: f64,
     pub prefill_calls: u64,
@@ -143,6 +146,7 @@ impl Replica {
             rung: 0,
             last_switch_s: f64::NEG_INFINITY,
             pending_penalty_s: 0.0,
+            step_ewma_s: 0.0,
             busy_s: 0.0,
             prefill_calls: 0,
             decode_steps: 0,
@@ -250,6 +254,32 @@ impl Replica {
     fn account(&mut self, dur: f64) {
         self.busy_s += dur;
         self.rung_time_s[self.rung.min(self.rung_time_s.len() - 1)] += dur;
+        self.step_ewma_s = if self.step_ewma_s == 0.0 {
+            dur
+        } else {
+            0.2 * dur + 0.8 * self.step_ewma_s
+        };
+    }
+
+    /// Control-plane telemetry at `now_s` (see [`ReplicaTelemetry`]).
+    pub fn telemetry(&self, now_s: f64, detail: TelemetryDetail) -> ReplicaTelemetry {
+        let mut t = ReplicaTelemetry {
+            replica: self.id,
+            accepting: true,
+            rung: self.rung,
+            last_switch_s: self.last_switch_s,
+            queue_len: self.queue.len(),
+            active: self.n_active(),
+            load_cost: self.load_cost(),
+            class_occupancy: Vec::new(),
+            min_slack_s: None,
+            min_interactive_slack_frac: None,
+            step_ewma_s: self.step_ewma_s,
+        };
+        if detail == TelemetryDetail::Full {
+            t.fill_scans(&self.queue, self.slots.iter().flatten().map(|s| s.req.class), now_s);
+        }
+        t
     }
 
     /// Finish the in-flight phase at `now`, emitting completed requests.
@@ -302,32 +332,24 @@ impl ReplicaBackend for Replica {
         self.id
     }
 
-    fn admit(&mut self, req: super::scheduler::QueuedRequest) {
+    fn admit(&mut self, req: QueuedRequest) {
         self.queue.push(req);
     }
 
-    fn queue_len(&self) -> usize {
-        self.queue.len()
+    fn telemetry(&self, now_s: f64, detail: TelemetryDetail) -> ReplicaTelemetry {
+        Replica::telemetry(self, now_s, detail)
     }
 
     fn outstanding(&self) -> usize {
         Replica::outstanding(self)
     }
 
-    fn load_cost(&self) -> u64 {
-        Replica::load_cost(self)
-    }
-
-    fn rung(&self) -> usize {
-        self.rung
-    }
-
-    fn last_switch_s(&self) -> f64 {
-        self.last_switch_s
-    }
-
     fn set_rung(&mut self, rung: usize, now: f64, penalty_s: f64) {
         Replica::set_rung(self, rung, now, penalty_s);
+    }
+
+    fn steal_request(&mut self) -> Option<QueuedRequest> {
+        self.queue.pop_min_deadline()
     }
 
     fn try_start(&mut self, now: f64) -> bool {
@@ -353,6 +375,7 @@ impl ReplicaBackend for Replica {
             decode_steps: self.decode_steps,
             rung_switches: self.rung_switches,
             rung_time_s: self.rung_time_s.clone(),
+            step_times: None,
         }
     }
 }
@@ -369,7 +392,7 @@ mod tests {
             class: 0,
             priority: 0,
             arrival_s: 0.0,
-            deadline_s: 10.0,
+            deadline_ns: 10_000_000_000,
             prompt_len: prompt,
             new_tokens: gen,
         }
@@ -464,6 +487,63 @@ mod tests {
         assert!((r.next_event_s().unwrap() - 0.51).abs() < 1e-9);
         assert!(r.rung_time_s[2] > 0.5);
         assert_eq!(r.rung_time_s[0], 0.0);
+    }
+
+    #[test]
+    fn telemetry_reports_queue_slots_and_slack() {
+        let mut r = Replica::new(3, 2, fixed_ladder(0.01, 2));
+        let t = r.telemetry(0.0, TelemetryDetail::Full);
+        assert_eq!(t.replica, 3);
+        assert_eq!(t.outstanding(), 0);
+        assert!(t.min_slack_s.is_none() && t.min_interactive_slack_frac.is_none());
+        assert_eq!(t.step_ewma_s, 0.0);
+
+        let mut a = queued(0, 80, 40); // interactive, deadline 10s
+        a.arrival_s = 0.0;
+        let mut b = queued(1, 80, 40);
+        b.class = 1;
+        b.priority = 2;
+        b.deadline_ns = 4_000_000_000; // batch, worst absolute slack
+        let c = queued(2, 80, 40);
+        r.queue.push(a);
+        r.queue.push(b);
+        r.queue.push(c);
+        r.try_start(0.0); // admits 2 into slots (EDF: batch id 1 waits)
+        let t = r.telemetry(1.0, TelemetryDetail::Full);
+        assert_eq!(t.queue_len, 1);
+        assert_eq!(t.active, 2);
+        assert_eq!(t.outstanding(), 3);
+        // queued: only the batch request remains
+        assert_eq!(t.class_occupancy, vec![2, 1]);
+        assert!((t.min_slack_s.unwrap() - 3.0).abs() < 1e-9);
+        // no interactive request queued -> no interactive slack signal
+        assert!(t.min_interactive_slack_frac.is_none());
+        assert!(t.step_ewma_s > 0.0);
+        assert!(t.load_cost > 0);
+
+        // the cheap routing level skips the scan fields but keeps the
+        // O(1) scheduling signals
+        let light = r.telemetry(1.0, TelemetryDetail::Load);
+        assert_eq!(light.load_cost, t.load_cost);
+        assert_eq!(light.queue_len, 1);
+        assert!(light.class_occupancy.is_empty());
+        assert!(light.min_slack_s.is_none());
+    }
+
+    #[test]
+    fn steal_request_takes_worst_slack_from_queue() {
+        let mut r = Replica::new(0, 1, fixed_ladder(0.01, 1));
+        let mut a = queued(0, 80, 40);
+        a.deadline_ns = 9_000_000_000;
+        let mut b = queued(1, 80, 40);
+        b.deadline_ns = 2_000_000_000;
+        r.queue.push(a);
+        r.queue.push(b);
+        let stolen = ReplicaBackend::steal_request(&mut r).unwrap();
+        assert_eq!(stolen.id, 1);
+        assert_eq!(r.queue.len(), 1);
+        assert!(ReplicaBackend::steal_request(&mut r).is_some());
+        assert!(ReplicaBackend::steal_request(&mut r).is_none());
     }
 
     #[test]

@@ -16,6 +16,7 @@ use crate::util::stats::percentile_sorted;
 
 use super::replica::CompletedRequest;
 use super::router::RunResult;
+use super::telemetry::StepTimeSummary;
 use super::workload::{Scenario, SloTarget};
 
 /// Aggregated serving metrics for one cluster run.
@@ -51,6 +52,17 @@ pub struct TransformReport {
     /// Busy-time-weighted mean Stage-1 proxy loss across rungs. `None`
     /// when the transform's loss is not on the Stage-1 scale (NaN rung).
     pub mean_quality_loss: Option<f64>,
+    /// Cross-replica work steals. `None` under the default feature set
+    /// (the default CSV/JSON artifacts stay byte-identical); populated
+    /// whenever stealing, slack pressure, or class-aware routing ran.
+    pub steals: Option<u64>,
+    /// Worst queued EDF slack observed at any control-plane snapshot
+    /// (same population rule as `steals`).
+    pub min_slack_s: Option<f64>,
+    /// Measured per-replica engine step-time histograms (p50/p95/max),
+    /// the sim `ServiceModel` calibration input. `None` on the sim
+    /// backend, whose step times are model outputs.
+    pub step_time_per_replica: Option<Vec<StepTimeSummary>>,
 }
 
 /// Did a completion meet its class SLO?
@@ -120,11 +132,23 @@ impl TransformReport {
             rung_switches: res.rung_switches,
             full_quality_frac,
             mean_quality_loss,
+            steals: res.steals,
+            min_slack_s: res.min_slack_s,
+            step_time_per_replica: res
+                .step_time_per_replica
+                .iter()
+                .any(|s| s.is_some())
+                .then(|| {
+                    res.step_time_per_replica
+                        .iter()
+                        .map(|s| s.clone().unwrap_or_default())
+                        .collect()
+                }),
         }
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("scenario", Json::Str(self.scenario.clone())),
             ("transform", Json::Str(self.transform.clone())),
             ("policy", Json::Str(self.policy.clone())),
@@ -165,7 +189,33 @@ impl TransformReport {
                 "mean_quality_loss",
                 self.mean_quality_loss.map_or(Json::Null, Json::Num),
             ),
-        ])
+        ];
+        // extended control-plane fields only appear when populated, so
+        // default-flag artifacts keep their historical byte layout
+        if let Some(n) = self.steals {
+            pairs.push(("steals", Json::Num(n as f64)));
+        }
+        if let Some(s) = self.min_slack_s {
+            pairs.push(("min_slack_s", Json::Num(s)));
+        }
+        if let Some(st) = &self.step_time_per_replica {
+            pairs.push((
+                "step_time_per_replica",
+                Json::Arr(
+                    st.iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("n", Json::Num(s.n as f64)),
+                                ("p50_s", Json::Num(s.p50_s)),
+                                ("p95_s", Json::Num(s.p95_s)),
+                                ("max_s", Json::Num(s.max_s)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        Json::obj(pairs)
     }
 }
 
@@ -322,6 +372,10 @@ mod tests {
             prefill_calls: 5,
             decode_steps: 100,
             rung_switch_events: vec![(1, 0), (2, 1), (3, 0)],
+            steal_events: Vec::new(),
+            steals: None,
+            min_slack_s: None,
+            step_time_per_replica: vec![None, None],
         }
     }
 
@@ -358,6 +412,46 @@ mod tests {
         let j = r.to_json();
         assert_eq!(*j.get("mean_quality_loss").unwrap(), Json::Null);
         assert_eq!(*j.get("full_quality_frac").unwrap(), Json::Null);
+    }
+
+    #[test]
+    fn extended_fields_stay_dark_by_default_and_emit_when_populated() {
+        let s = scenario();
+        // default feature set: no extended keys in the JSON at all
+        let dark = TransformReport::from_run(&s, "base", "jsq", &fake_run(), &[0.0, 2.0]);
+        assert!(dark.steals.is_none() && dark.min_slack_s.is_none());
+        assert!(dark.step_time_per_replica.is_none());
+        let j = dark.to_json();
+        assert!(j.opt("steals").is_none());
+        assert!(j.opt("min_slack_s").is_none());
+        assert!(j.opt("step_time_per_replica").is_none());
+
+        // extended run: steals + slack + measured step times all emit
+        let mut run = fake_run();
+        run.steals = Some(2);
+        run.steal_events = vec![(5, 0, 1), (9, 0, 1)];
+        run.min_slack_s = Some(0.125);
+        run.step_time_per_replica = vec![
+            Some(StepTimeSummary {
+                n: 10,
+                p50_s: 0.01,
+                p95_s: 0.02,
+                max_s: 0.05,
+            }),
+            None,
+        ];
+        let lit = TransformReport::from_run(&s, "base", "classaware", &run, &[0.0, 2.0]);
+        assert_eq!(lit.steals, Some(2));
+        assert_eq!(lit.min_slack_s, Some(0.125));
+        let st = lit.step_time_per_replica.as_ref().unwrap();
+        assert_eq!(st.len(), 2);
+        assert_eq!(st[1], StepTimeSummary::default()); // missing -> zeroed
+        let j = lit.to_json();
+        assert_eq!(j.get("steals").unwrap().as_usize().unwrap(), 2);
+        assert!((j.get("min_slack_s").unwrap().as_f64().unwrap() - 0.125).abs() < 1e-12);
+        let arr = j.get("step_time_per_replica").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert!((arr[0].get("p95_s").unwrap().as_f64().unwrap() - 0.02).abs() < 1e-12);
     }
 
     #[test]

@@ -3,27 +3,33 @@
 //!
 //! Arrivals pass admission control, get a TTFT deadline from their class
 //! SLO, and are routed to a replica queue by a [`RoutingPolicy`]
-//! (round-robin / join-shortest-queue / power-of-two-choices, pluggable
-//! impls instead of hardcoded branches). Replicas are driven through the
-//! [`ReplicaBackend`] trait, so the same loop serves the virtual-time
-//! [`Replica`](super::replica::Replica) and the engine-backed
-//! [`EngineReplica`](super::engine_backend::EngineReplica); the
-//! cluster-global [`LadderController`] retunes rung assignments between
-//! phases. The loop is fully deterministic for simulated backends: ties
-//! in virtual time break by (arrival before completion, replica index,
-//! request id).
+//! (round-robin / join-shortest-queue / power-of-two-choices /
+//! SLO-class-aware, pluggable impls instead of hardcoded branches).
+//! Replicas are driven through the [`ReplicaBackend`] trait, so the same
+//! loop serves the virtual-time [`Replica`](super::replica::Replica) and
+//! the engine-backed
+//! [`EngineReplica`](super::engine_backend::EngineReplica).
+//!
+//! All cluster-level decisions read ONE [`ClusterSnapshot`] telemetry
+//! surface: the cluster-global [`LadderController`] retunes rung
+//! assignments from it, routing policies pick replicas from it, and the
+//! bounded work-stealing pass moves the worst-slack queued request from
+//! the most pressured replica onto an idle one at dispatch instants. The
+//! loop is fully deterministic for simulated backends: ties in virtual
+//! time break by (arrival before completion, replica index, request id).
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 use std::rc::Rc;
 
-use crate::config::server::PolicyKind;
+use crate::config::server::{PolicyKind, PressureMode};
 use crate::util::Pcg32;
 
 use super::backend::{BackendStats, CompletedRequest, ReplicaBackend};
-use super::ladder::{LadderController, LadderPolicy, QualityLadder, ReplicaView};
+use super::ladder::{LadderController, LadderPolicy, QualityLadder};
 use super::replica::Replica;
 use super::scheduler::{AdmissionControl, QueuedRequest};
+use super::telemetry::{ClusterSnapshot, StepTimeSummary, TelemetryDetail};
 use super::workload::{Scenario, Trace, TraceRequest};
 
 /// Outcome of one cluster run over a trace.
@@ -42,6 +48,19 @@ pub struct RunResult {
     /// Every applied rung switch as `(time key ns, replica index)` —
     /// the flap-detection signal for the cluster-global controller.
     pub rung_switch_events: Vec<(u64, usize)>,
+    /// Every cross-replica steal as `(time key ns, victim, thief)`.
+    pub steal_events: Vec<(u64, usize, usize)>,
+    /// Requests stolen across replicas. `None` unless an extended
+    /// control-plane feature (stealing, slack pressure, class-aware
+    /// routing) was active — default runs keep the PR 2 report shape.
+    pub steals: Option<u64>,
+    /// Worst (minimum) queued EDF slack seen at any control-plane
+    /// snapshot. `None` under the default feature set, or when no
+    /// queued request was ever observed.
+    pub min_slack_s: Option<f64>,
+    /// Measured step-time summaries, one per replica (`None` entries
+    /// for virtual-time replicas, which have no measured steps).
+    pub step_time_per_replica: Vec<Option<StepTimeSummary>>,
 }
 
 /// Pending arrival, ordered by (time ns, id) for a deterministic heap.
@@ -69,21 +88,35 @@ fn time_key(t: f64) -> u64 {
     (t * 1e9) as u64
 }
 
-/// Replica-selection strategy of the front door. Implementations read
-/// per-replica load through the `load_cost` callback so they stay
-/// agnostic of the backend type.
+/// Replica-selection strategy of the front door: a pure function of the
+/// request and the [`ClusterSnapshot`], so every policy sees the same
+/// telemetry the ladder controller and the stealing pass see.
 pub trait RoutingPolicy {
     fn label(&self) -> &'static str;
 
-    /// Pick the replica for a new request. `load_cost(i)` is replica
-    /// `i`'s token-weighted backlog; `rng` is the cluster's seeded
-    /// stream (used only by randomized policies).
-    fn route(
-        &mut self,
-        n_replicas: usize,
-        load_cost: &mut dyn FnMut(usize) -> u64,
-        rng: &mut Pcg32,
-    ) -> usize;
+    /// Pick the replica for `req`. `rng` is the cluster's seeded stream
+    /// (used only by randomized policies).
+    fn route(&mut self, req: &QueuedRequest, snap: &ClusterSnapshot, rng: &mut Pcg32) -> usize;
+}
+
+/// Replicas currently accepting work (the routing candidate set). When
+/// none accepts, every replica is returned so the policies stay total —
+/// the requests are lost either way, and the report shows the
+/// shortfall. With every replica healthy (the sim backend always is)
+/// this is the identity set, so the policies behave bit-identically to
+/// their pre-health-aware versions.
+fn accepting_candidates(snap: &ClusterSnapshot) -> Vec<usize> {
+    let c: Vec<usize> = snap
+        .replicas
+        .iter()
+        .filter(|t| t.accepting)
+        .map(|t| t.replica)
+        .collect();
+    if c.is_empty() {
+        (0..snap.replicas.len()).collect()
+    } else {
+        c
+    }
 }
 
 /// Cycle through replicas regardless of load.
@@ -97,13 +130,9 @@ impl RoutingPolicy for RoundRobin {
         "rr"
     }
 
-    fn route(
-        &mut self,
-        n_replicas: usize,
-        _load_cost: &mut dyn FnMut(usize) -> u64,
-        _rng: &mut Pcg32,
-    ) -> usize {
-        let i = self.next % n_replicas;
+    fn route(&mut self, _req: &QueuedRequest, snap: &ClusterSnapshot, _rng: &mut Pcg32) -> usize {
+        let c = accepting_candidates(snap);
+        let i = c[self.next % c.len()];
         self.next += 1;
         i
     }
@@ -118,13 +147,8 @@ impl RoutingPolicy for JoinShortestQueue {
         "jsq"
     }
 
-    fn route(
-        &mut self,
-        n_replicas: usize,
-        load_cost: &mut dyn FnMut(usize) -> u64,
-        _rng: &mut Pcg32,
-    ) -> usize {
-        argmin_load(0..n_replicas, load_cost)
+    fn route(&mut self, _req: &QueuedRequest, snap: &ClusterSnapshot, _rng: &mut Pcg32) -> usize {
+        argmin_load(accepting_candidates(snap).into_iter(), snap)
     }
 }
 
@@ -137,21 +161,48 @@ impl RoutingPolicy for PowerOfTwoChoices {
         "p2c"
     }
 
-    fn route(
-        &mut self,
-        n_replicas: usize,
-        load_cost: &mut dyn FnMut(usize) -> u64,
-        rng: &mut Pcg32,
-    ) -> usize {
-        if n_replicas == 1 {
-            return 0;
+    fn route(&mut self, _req: &QueuedRequest, snap: &ClusterSnapshot, rng: &mut Pcg32) -> usize {
+        let c = accepting_candidates(snap);
+        if c.len() == 1 {
+            return c[0];
         }
-        let a = rng.gen_usize(n_replicas);
-        let mut b = rng.gen_usize(n_replicas - 1);
+        let a = rng.gen_usize(c.len());
+        let mut b = rng.gen_usize(c.len() - 1);
         if b >= a {
             b += 1;
         }
-        argmin_load([a, b].into_iter(), load_cost)
+        argmin_load([c[a], c[b]].into_iter(), snap)
+    }
+}
+
+/// SLO-class-aware joint rung+routing: batch-priority traffic is
+/// steered toward degraded (deep-rung) replicas, so they absorb the
+/// quality loss the ladder is selling, while interactive classes keep
+/// the full-quality replicas. Load breaks ties within a rung band, so
+/// with a uniform-rung cluster the policy collapses to JSQ exactly.
+#[derive(Debug, Default)]
+pub struct ClassAware;
+
+impl RoutingPolicy for ClassAware {
+    fn label(&self) -> &'static str {
+        "classaware"
+    }
+
+    fn route(&mut self, req: &QueuedRequest, snap: &ClusterSnapshot, _rng: &mut Pcg32) -> usize {
+        let c = accepting_candidates(snap);
+        let max_rung = c.iter().map(|&i| snap.replicas[i].rung).max().unwrap_or(0);
+        c.into_iter()
+            .map(|i| &snap.replicas[i])
+            .min_by_key(|t| {
+                let rung_pref = if req.priority == 0 {
+                    t.rung // interactive: best quality first
+                } else {
+                    max_rung - t.rung // batch: most degraded first
+                };
+                (rung_pref, t.load_cost, t.replica)
+            })
+            .expect("no routing candidates")
+            .replica
     }
 }
 
@@ -162,18 +213,16 @@ impl PolicyKind {
             PolicyKind::RoundRobin => Box::new(RoundRobin::default()),
             PolicyKind::Jsq => Box::new(JoinShortestQueue),
             PolicyKind::PowerOfTwo => Box::new(PowerOfTwoChoices),
+            PolicyKind::ClassAware => Box::new(ClassAware),
         }
     }
 }
 
 /// Index of the lightest replica among `candidates` (ties -> lowest id).
-fn argmin_load(
-    candidates: impl Iterator<Item = usize>,
-    load_cost: &mut dyn FnMut(usize) -> u64,
-) -> usize {
+fn argmin_load(candidates: impl Iterator<Item = usize>, snap: &ClusterSnapshot) -> usize {
     let mut best: Option<(u64, usize)> = None;
     for i in candidates {
-        let cost = load_cost(i);
+        let cost = snap.replicas[i].load_cost;
         match best {
             None => best = Some((cost, i)),
             Some((bc, bi)) if (cost, i) < (bc, bi) => best = Some((cost, i)),
@@ -183,16 +232,22 @@ fn argmin_load(
     best.expect("no routing candidates").1
 }
 
-/// N replica backends behind one routing policy and one (optional)
-/// cluster-global ladder controller.
+/// N replica backends behind one routing policy, one (optional)
+/// cluster-global ladder controller, and an optional bounded
+/// work-stealing pass — all consuming the same telemetry snapshot.
 pub struct Cluster<'a> {
     pub backends: Vec<Box<dyn ReplicaBackend + 'a>>,
     pub router: Box<dyn RoutingPolicy>,
+    /// The routing-policy kind the cluster was built with (report
+    /// gating reads this, not the policy object's display label).
+    pub policy_kind: PolicyKind,
     pub ladder: Rc<QualityLadder>,
     /// None = fixed rung 0 (static allocation); Some = adaptive ladder.
     pub controller: Option<LadderController>,
     pub admission: AdmissionControl,
     pub reconfig_penalty_s: f64,
+    /// Cross-replica steals allowed per dispatch instant (0 = off).
+    pub steal_bound: usize,
     rng: Pcg32,
 }
 
@@ -248,27 +303,95 @@ impl<'a> Cluster<'a> {
         Cluster {
             backends,
             router: policy.build(),
+            policy_kind: policy,
             ladder,
             controller: ladder_policy.map(LadderController::new),
             admission: AdmissionControl::new(queue_cap, n_classes),
             reconfig_penalty_s,
+            steal_bound: 0,
             rng: Pcg32::new(seed, 0x0707_2026),
         }
     }
 
-    /// Pick the replica for a new request under the configured policy.
-    fn route(&mut self) -> usize {
-        let backends = &self.backends;
-        self.router.route(
-            backends.len(),
-            &mut |i| backends[i].load_cost(),
-            &mut self.rng,
-        )
+    /// Enable cross-replica work stealing: up to `bound` steals per
+    /// dispatch instant (0 disables).
+    pub fn with_stealing(mut self, bound: usize) -> Self {
+        self.steal_bound = bound;
+        self
+    }
+
+    /// One telemetry snapshot of every replica at `now_s` — the single
+    /// input surface for routing, ladder, and stealing decisions.
+    /// `detail` bounds the cost: per-arrival routing reads only the
+    /// O(1) fields, control-plane instants pay for the queue scans.
+    pub fn snapshot(&self, now_s: f64, detail: TelemetryDetail) -> ClusterSnapshot {
+        ClusterSnapshot {
+            now_s,
+            replicas: self
+                .backends
+                .iter()
+                .map(|b| b.telemetry(now_s, detail))
+                .collect(),
+        }
     }
 
     /// Total queued + running requests (admission-control signal).
     fn outstanding(&self) -> usize {
         self.backends.iter().map(|b| b.outstanding()).sum()
+    }
+
+    /// Bounded work stealing at a dispatch instant: each fully idle
+    /// replica pulls the worst-slack queued request from the most
+    /// pressured busy replica (the one whose queued slack is most
+    /// collapsed; token backlog breaks ties). Requests only move
+    /// between queues, so completions are conserved exactly.
+    fn steal_pass(
+        &mut self,
+        now: f64,
+        events: &mut Vec<(u64, usize, usize)>,
+        min_slack_obs: &mut f64,
+    ) {
+        let mut budget = self.steal_bound;
+        for thief in 0..self.backends.len() {
+            if budget == 0 {
+                break;
+            }
+            let t = &self.backends[thief];
+            // the thief must be fully idle AND able to take work — a
+            // failed backend would silently drop the stolen request
+            if t.next_event_s().is_some() || t.outstanding() > 0 || !t.accepts_work() {
+                continue;
+            }
+            // refresh per steal: the previous move changed the picture
+            let snap = self.snapshot(now, TelemetryDetail::Full);
+            observe_min_slack(&snap, min_slack_obs);
+            let victim = snap
+                .replicas
+                .iter()
+                .filter(|v| {
+                    v.replica != thief
+                        && v.queue_len > 0
+                        // only steal from a replica whose queue sits
+                        // behind running or in-flight work; a fully idle
+                        // victim is about to start that work itself
+                        && (v.active > 0
+                            || self.backends[v.replica].next_event_s().is_some())
+                })
+                .min_by(|a, b| {
+                    let sa = a.min_slack_s.unwrap_or(f64::INFINITY);
+                    let sb = b.min_slack_s.unwrap_or(f64::INFINITY);
+                    sa.total_cmp(&sb)
+                        .then(b.load_cost.cmp(&a.load_cost))
+                        .then(a.replica.cmp(&b.replica))
+                })
+                .map(|v| v.replica);
+            let Some(victim) = victim else { break };
+            if let Some(req) = self.backends[victim].steal_request() {
+                events.push((time_key(now), victim, thief));
+                self.backends[thief].admit(req);
+                budget -= 1;
+            }
+        }
     }
 
     /// Replay a trace to completion. Closed-loop traces re-issue
@@ -289,28 +412,34 @@ impl<'a> Cluster<'a> {
         let mut next_id = trace.requests.iter().map(|r| r.id + 1).max().unwrap_or(0);
         let mut completed: Vec<CompletedRequest> = Vec::new();
         let mut switch_events: Vec<(u64, usize)> = Vec::new();
+        let mut steal_events: Vec<(u64, usize, usize)> = Vec::new();
+        let mut min_slack_obs = f64::INFINITY;
         let mut now = 0.0f64;
 
         loop {
-            // 1. rung decisions (one controller for the whole cluster),
-            // then start work on every idle replica
-            if let Some(ctl) = &mut self.controller {
-                let views: Vec<ReplicaView> = self
-                    .backends
-                    .iter()
-                    .map(|b| ReplicaView {
-                        rung: b.rung(),
-                        queue_len: b.queue_len(),
-                        last_switch_s: b.last_switch_s(),
-                    })
-                    .collect();
-                let targets = ctl.decide(&views, self.ladder.n_rungs(), now);
+            // 1. control plane: one snapshot feeds the rung controller
+            // and the stealing pass, then start work on every idle
+            // replica
+            if self.controller.is_some() {
+                // queue pressure reads only O(1) fields; the EDF-slack
+                // signal is the one that pays for the queue scans
+                let detail = match self.controller.as_ref().unwrap().policy.pressure {
+                    PressureMode::Queue => TelemetryDetail::Load,
+                    PressureMode::Slack => TelemetryDetail::Full,
+                };
+                let snap = self.snapshot(now, detail);
+                observe_min_slack(&snap, &mut min_slack_obs);
+                let n_rungs = self.ladder.n_rungs();
+                let targets = self.controller.as_mut().unwrap().decide(&snap, n_rungs);
                 for (i, b) in self.backends.iter_mut().enumerate() {
-                    if targets[i] != b.rung() {
+                    if targets[i] != snap.replicas[i].rung {
                         b.set_rung(targets[i], now, self.reconfig_penalty_s);
                         switch_events.push((time_key(now), i));
                     }
                 }
+            }
+            if self.steal_bound > 0 {
+                self.steal_pass(now, &mut steal_events, &mut min_slack_obs);
             }
             for b in &mut self.backends {
                 b.try_start(now);
@@ -359,7 +488,11 @@ impl<'a> Cluster<'a> {
                 let slo = scenario.slos[req.class];
                 let prio = scenario.profiles[req.class].priority;
                 let qr = QueuedRequest::new(&req, prio, slo.ttft_s);
-                let idx = self.route();
+                // a fresh LOAD-level snapshot per arrival: earlier
+                // admissions in this round are part of the next
+                // decision's input, and routing reads only O(1) fields
+                let snap = self.snapshot(now, TelemetryDetail::Load);
+                let idx = self.router.route(&qr, &snap, &mut self.rng);
                 self.backends[idx].admit(qr);
             }
             if delivered {
@@ -402,6 +535,15 @@ impl<'a> Cluster<'a> {
                 rung_time_s[i.min(rung_time_s.len() - 1)] += *t;
             }
         }
+        // extended control-plane features opt the report into the new
+        // steal/slack fields; the default feature set keeps the PR 2
+        // report shape byte-for-byte
+        let extended = self.steal_bound > 0
+            || self.policy_kind == PolicyKind::ClassAware
+            || self
+                .controller
+                .as_ref()
+                .is_some_and(|c| c.policy.pressure == PressureMode::Slack);
         RunResult {
             rejected_by_class: self.admission.rejected_by_class.clone(),
             makespan_s,
@@ -411,8 +553,20 @@ impl<'a> Cluster<'a> {
             prefill_calls: stats.iter().map(|s| s.prefill_calls).sum(),
             decode_steps: stats.iter().map(|s| s.decode_steps).sum(),
             rung_switch_events: switch_events,
+            steals: extended.then_some(steal_events.len() as u64),
+            min_slack_s: (extended && min_slack_obs.is_finite()).then_some(min_slack_obs),
+            steal_events,
+            step_time_per_replica: stats.iter().map(|s| s.step_times.clone()).collect(),
             completed,
         }
+    }
+}
+
+/// Fold a snapshot's worst queued slack into the run-level minimum.
+fn observe_min_slack(snap: &ClusterSnapshot, obs: &mut f64) {
+    let s = snap.min_slack_s();
+    if s < *obs {
+        *obs = s;
     }
 }
 
@@ -422,6 +576,7 @@ mod tests {
     use crate::config::server::ScenarioKind;
     use crate::moe::allocation::Allocation;
     use crate::server::replica::ServiceModel;
+    use crate::server::telemetry::ReplicaTelemetry;
 
     fn fixed_ladder(step_s: f64, slots: usize) -> QualityLadder {
         QualityLadder::fixed(
@@ -455,13 +610,21 @@ mod tests {
             assert!(r.ttft_s > 0.0 && r.e2e_s >= r.ttft_s);
             assert!(r.finish_s >= r.arrival_s);
         }
+        // default feature set: the extended report fields stay dark
+        assert!(res.steals.is_none() && res.min_slack_s.is_none());
+        assert!(res.step_time_per_replica.iter().all(|s| s.is_none()));
     }
 
     #[test]
     fn all_policies_complete_and_are_deterministic() {
         let s = scenario();
         let trace = s.generate(80, 3);
-        for policy in [PolicyKind::RoundRobin, PolicyKind::Jsq, PolicyKind::PowerOfTwo] {
+        for policy in [
+            PolicyKind::RoundRobin,
+            PolicyKind::Jsq,
+            PolicyKind::PowerOfTwo,
+            PolicyKind::ClassAware,
+        ] {
             let a = cluster(policy, 3).run(&s, &trace);
             let b = cluster(policy, 3).run(&s, &trace);
             assert_eq!(a.completed.len(), 80, "{policy:?}");
@@ -516,29 +679,175 @@ mod tests {
         assert!((rung_total - busy_total).abs() < 1e-9);
     }
 
+    /// Snapshot fixture: replicas with given (rung, load_cost).
+    fn snap_of(loads: &[(usize, u64)]) -> ClusterSnapshot {
+        ClusterSnapshot {
+            now_s: 0.0,
+            replicas: loads
+                .iter()
+                .enumerate()
+                .map(|(i, &(rung, load))| {
+                    let mut t = ReplicaTelemetry::idle(i);
+                    t.rung = rung;
+                    t.load_cost = load;
+                    t
+                })
+                .collect(),
+        }
+    }
+
+    fn probe(priority: u8) -> QueuedRequest {
+        QueuedRequest {
+            id: 0,
+            class: priority as usize,
+            priority,
+            arrival_s: 0.0,
+            deadline_ns: 1_000_000_000,
+            prompt_len: 64,
+            new_tokens: 16,
+        }
+    }
+
     #[test]
     fn routing_policies_are_pluggable_objects() {
         let mut rng = Pcg32::seeded(0);
+        let req = probe(0);
         let mut rr = PolicyKind::RoundRobin.build();
         assert_eq!(rr.label(), "rr");
-        let mut flat = |_: usize| 0u64;
-        assert_eq!(rr.route(3, &mut flat, &mut rng), 0);
-        assert_eq!(rr.route(3, &mut flat, &mut rng), 1);
-        assert_eq!(rr.route(3, &mut flat, &mut rng), 2);
-        assert_eq!(rr.route(3, &mut flat, &mut rng), 0);
+        let flat = snap_of(&[(0, 0), (0, 0), (0, 0)]);
+        assert_eq!(rr.route(&req, &flat, &mut rng), 0);
+        assert_eq!(rr.route(&req, &flat, &mut rng), 1);
+        assert_eq!(rr.route(&req, &flat, &mut rng), 2);
+        assert_eq!(rr.route(&req, &flat, &mut rng), 0);
 
         let mut jsq = PolicyKind::Jsq.build();
-        let loads = [5u64, 1, 9];
-        assert_eq!(jsq.route(3, &mut |i| loads[i], &mut rng), 1);
+        let skew = snap_of(&[(0, 5), (0, 1), (0, 9)]);
+        assert_eq!(jsq.route(&req, &skew, &mut rng), 1);
         // ties break toward the lowest index
-        assert_eq!(jsq.route(3, &mut |_| 7, &mut rng), 0);
+        let tied = snap_of(&[(0, 7), (0, 7), (0, 7)]);
+        assert_eq!(jsq.route(&req, &tied, &mut rng), 0);
 
         let mut p2c = PolicyKind::PowerOfTwo.build();
         // single replica short-circuits without touching the rng
-        assert_eq!(p2c.route(1, &mut flat, &mut rng), 0);
+        assert_eq!(p2c.route(&req, &snap_of(&[(0, 0)]), &mut rng), 0);
+        let four = snap_of(&[(0, 5), (0, 1), (0, 9), (0, 2)]);
         for _ in 0..32 {
-            let i = p2c.route(4, &mut |i| loads.get(i).copied().unwrap_or(2), &mut rng);
+            let i = p2c.route(&req, &four, &mut rng);
             assert!(i < 4);
         }
+    }
+
+    #[test]
+    fn classaware_splits_traffic_by_rung_and_class() {
+        let mut rng = Pcg32::seeded(0);
+        let mut ca = PolicyKind::ClassAware.build();
+        assert_eq!(ca.label(), "classaware");
+        // replica 1 degraded to rung 2: batch goes there, interactive
+        // keeps the full-quality replica
+        let snap = snap_of(&[(0, 50), (2, 50), (0, 80)]);
+        assert_eq!(ca.route(&probe(0), &snap, &mut rng), 0);
+        assert_eq!(ca.route(&probe(2), &snap, &mut rng), 1);
+        // within the same rung band, load breaks the tie (replica 0
+        // lighter than replica 2)
+        let snap = snap_of(&[(1, 50), (1, 20), (1, 80)]);
+        assert_eq!(ca.route(&probe(0), &snap, &mut rng), 1);
+        // uniform rungs: identical to JSQ
+        let mut jsq = PolicyKind::Jsq.build();
+        let flat = snap_of(&[(0, 5), (0, 1), (0, 9)]);
+        assert_eq!(
+            ca.route(&probe(0), &flat, &mut rng),
+            jsq.route(&probe(0), &flat, &mut rng)
+        );
+    }
+
+    #[test]
+    fn routing_avoids_non_accepting_replicas() {
+        let mut rng = Pcg32::seeded(0);
+        let req = probe(2); // batch: classaware would prefer the deepest rung
+        let mut snap = snap_of(&[(0, 50), (2, 5), (0, 9)]);
+        snap.replicas[1].accepting = false; // the preferred one has failed
+        let mut ca = PolicyKind::ClassAware.build();
+        assert_ne!(ca.route(&req, &snap, &mut rng), 1);
+        let mut jsq = PolicyKind::Jsq.build();
+        assert_ne!(jsq.route(&req, &snap, &mut rng), 1);
+        let mut rr = PolicyKind::RoundRobin.build();
+        for _ in 0..8 {
+            assert_ne!(rr.route(&req, &snap, &mut rng), 1);
+        }
+        let mut p2c = PolicyKind::PowerOfTwo.build();
+        for _ in 0..32 {
+            assert_ne!(p2c.route(&req, &snap, &mut rng), 1);
+        }
+        // nobody accepting: fall back to the full set, stay total
+        for t in &mut snap.replicas {
+            t.accepting = false;
+        }
+        assert!(jsq.route(&req, &snap, &mut rng) < 3);
+    }
+
+    #[test]
+    fn work_stealing_rebalances_and_conserves() {
+        // replica 0 is force-fed a pile of slow requests while replica
+        // 1 idles: with stealing on, replica 1 must pick work up, and
+        // nothing may be lost or duplicated.
+        let mut s = scenario();
+        // single class so routing is the only imbalance source
+        s.profiles.truncate(1);
+        s.slos.truncate(1);
+        let trace = Trace {
+            scenario: "steal",
+            requests: (0..8u64)
+                .map(|id| TraceRequest {
+                    id,
+                    class: 0,
+                    arrival_s: 0.0,
+                    prompt_len: 64,
+                    new_tokens: 200,
+                })
+                .collect(),
+            closed_loop: None,
+        };
+        let mk = |steal: usize| {
+            let mut c = Cluster::new(
+                2,
+                1,
+                PolicyKind::RoundRobin,
+                fixed_ladder(0.01, 1),
+                None,
+                10_000,
+                1,
+                0.0,
+                0,
+            )
+            .with_stealing(steal);
+            // pre-load replica 0 with the whole pile (bypassing the
+            // router, as if a burst had landed before rebalancing)
+            for r in &trace.requests {
+                c.backends[0].admit(QueuedRequest::new(r, 0, 1.0));
+            }
+            c
+        };
+        let empty = Trace {
+            scenario: "steal",
+            requests: vec![],
+            closed_loop: None,
+        };
+        let base = mk(0).run(&s, &empty);
+        let stolen = mk(1).run(&s, &empty);
+        assert_eq!(base.completed.len(), 8);
+        assert_eq!(stolen.completed.len(), 8, "stealing lost requests");
+        let mut ids: Vec<u64> = stolen.completed.iter().map(|c| c.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 8, "stealing duplicated a request");
+        assert!(stolen.steals.unwrap() > 0, "no steal ever happened");
+        assert_eq!(
+            stolen.steals.unwrap() as usize,
+            stolen.steal_events.len()
+        );
+        // without stealing replica 1 never works; with stealing it does
+        assert_eq!(base.replica_busy_s[1], 0.0);
+        assert!(stolen.replica_busy_s[1] > 0.0);
+        assert!(stolen.makespan_s < base.makespan_s);
     }
 }

@@ -4,8 +4,9 @@
 //! SLO`). Dispatch order is (priority class, earliest deadline, arrival
 //! id) — latency-critical classes always preempt batch traffic in the
 //! queue, and within a class the request closest to busting its SLO goes
-//! first. Deadlines are held as integer nanoseconds so the ordering is a
-//! total order (bit-reproducible across runs).
+//! first. Deadlines are stored as integer nanoseconds on the request, so
+//! the ordering is a total order (bit-reproducible across runs) and
+//! `key()` never re-quantizes a float at comparison time.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -19,8 +20,10 @@ pub struct QueuedRequest {
     pub class: usize,
     pub priority: u8,
     pub arrival_s: f64,
-    /// TTFT deadline (absolute virtual time).
-    pub deadline_s: f64,
+    /// TTFT deadline in integer nanoseconds of virtual time (the
+    /// scheduler's comparison key; see [`QueuedRequest::deadline_s`] for
+    /// the float view reports use).
+    pub deadline_ns: u64,
     pub prompt_len: usize,
     pub new_tokens: usize,
 }
@@ -32,10 +35,22 @@ impl QueuedRequest {
             class: r.class,
             priority,
             arrival_s: r.arrival_s,
-            deadline_s: r.arrival_s + ttft_slo_s,
+            deadline_ns: ((r.arrival_s + ttft_slo_s) * 1e9) as u64,
             prompt_len: r.prompt_len,
             new_tokens: r.new_tokens,
         }
+    }
+
+    /// TTFT deadline (absolute virtual time, seconds) for reports.
+    pub fn deadline_s(&self) -> f64 {
+        self.deadline_ns as f64 / 1e9
+    }
+
+    /// EDF slack at `now`, normalized by the class TTFT SLO: 1 at
+    /// arrival, 0 at the deadline, negative past it.
+    pub fn slack_frac(&self, now_s: f64) -> f64 {
+        let slo = (self.deadline_s() - self.arrival_s).max(1e-9);
+        (self.deadline_s() - now_s) / slo
     }
 
     /// Token-weighted cost used for load-aware routing: decode steps
@@ -45,7 +60,7 @@ impl QueuedRequest {
     }
 
     fn key(&self) -> (u8, u64, u64) {
-        (self.priority, (self.deadline_s * 1e9) as u64, self.id)
+        (self.priority, self.deadline_ns, self.id)
     }
 }
 
@@ -74,6 +89,8 @@ impl Ord for Entry {
 pub struct EdfQueue {
     heap: BinaryHeap<Reverse<Entry>>,
     pending_cost: u64,
+    /// Queued requests per class (index = class id; grown on demand).
+    class_counts: Vec<usize>,
 }
 
 impl EdfQueue {
@@ -83,15 +100,47 @@ impl EdfQueue {
 
     pub fn push(&mut self, req: QueuedRequest) {
         self.pending_cost += req.cost();
+        if req.class >= self.class_counts.len() {
+            self.class_counts.resize(req.class + 1, 0);
+        }
+        self.class_counts[req.class] += 1;
         self.heap.push(Reverse(Entry(req)));
+    }
+
+    fn note_pop(&mut self, req: &QueuedRequest) {
+        self.pending_cost -= req.cost();
+        self.class_counts[req.class] -= 1;
     }
 
     /// Pop the (highest-priority, earliest-deadline) request.
     pub fn pop(&mut self) -> Option<QueuedRequest> {
-        self.heap.pop().map(|Reverse(Entry(req))| {
-            self.pending_cost -= req.cost();
-            req
-        })
+        let Reverse(Entry(req)) = self.heap.pop()?;
+        self.note_pop(&req);
+        Some(req)
+    }
+
+    /// Remove the queued request with the minimum absolute deadline —
+    /// the worst-slack entry, whatever its priority class. The
+    /// work-stealing donor operation. O(n log n); steals are bounded
+    /// per dispatch instant, so this never sits on the hot path.
+    pub fn pop_min_deadline(&mut self) -> Option<QueuedRequest> {
+        if self.heap.is_empty() {
+            return None;
+        }
+        let mut items: Vec<QueuedRequest> =
+            self.heap.drain().map(|Reverse(Entry(r))| r).collect();
+        let idx = items
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, r)| (r.deadline_ns, r.id))
+            .map(|(i, _)| i)
+            .unwrap();
+        let req = items.swap_remove(idx);
+        self.note_pop(&req);
+        for r in items {
+            self.heap.push(Reverse(Entry(r)));
+        }
+        Some(req)
     }
 
     pub fn len(&self) -> usize {
@@ -102,14 +151,36 @@ impl EdfQueue {
         self.heap.is_empty()
     }
 
-    /// Total token-weighted backlog (for JSQ / p2c routing).
+    /// Total token-weighted backlog (for load-aware routing).
     pub fn pending_cost(&self) -> u64 {
         self.pending_cost
     }
 
+    /// Queued requests per class (index = class id; may be shorter than
+    /// the scenario's class count).
+    pub fn class_counts(&self) -> &[usize] {
+        &self.class_counts
+    }
+
     /// Earliest deadline currently queued (None when empty).
     pub fn earliest_deadline_s(&self) -> Option<f64> {
-        self.heap.peek().map(|Reverse(Entry(r))| r.deadline_s)
+        self.heap.peek().map(|Reverse(Entry(r))| r.deadline_s())
+    }
+
+    /// Minimum deadline (ns) over ALL queued requests — unlike the heap
+    /// head, this ignores priority, so it reads the truly worst slack.
+    pub fn min_deadline_ns(&self) -> Option<u64> {
+        self.heap.iter().map(|Reverse(Entry(r))| r.deadline_ns).min()
+    }
+
+    /// Minimum normalized slack over queued interactive (priority-0)
+    /// requests at `now` (None when no interactive request is queued).
+    pub fn min_interactive_slack_frac(&self, now_s: f64) -> Option<f64> {
+        self.heap
+            .iter()
+            .filter(|Reverse(Entry(r))| r.priority == 0)
+            .map(|Reverse(Entry(r))| r.slack_frac(now_s))
+            .min_by(|a, b| a.total_cmp(b))
     }
 }
 
@@ -156,7 +227,7 @@ mod tests {
             class: priority as usize,
             priority,
             arrival_s: 0.0,
-            deadline_s,
+            deadline_ns: (deadline_s * 1e9) as u64,
             prompt_len: 80,
             new_tokens: 40,
         }
@@ -191,6 +262,27 @@ mod tests {
     }
 
     #[test]
+    fn deadline_is_integer_ns_with_float_view() {
+        let r = QueuedRequest::new(
+            &crate::server::workload::TraceRequest {
+                id: 9,
+                class: 0,
+                arrival_s: 1.5,
+                prompt_len: 64,
+                new_tokens: 16,
+            },
+            0,
+            0.25,
+        );
+        assert_eq!(r.deadline_ns, 1_750_000_000);
+        assert!((r.deadline_s() - 1.75).abs() < 1e-9);
+        // slack fraction: 1 at arrival, 0 at deadline, negative past it
+        assert!((r.slack_frac(1.5) - 1.0).abs() < 1e-9);
+        assert!(r.slack_frac(1.75).abs() < 1e-9);
+        assert!(r.slack_frac(2.0) < 0.0);
+    }
+
+    #[test]
     fn pending_cost_tracks_push_pop() {
         let mut q = EdfQueue::new();
         assert_eq!(q.pending_cost(), 0);
@@ -203,6 +295,45 @@ mod tests {
         q.pop();
         assert_eq!(q.pending_cost(), 0);
         assert!(q.earliest_deadline_s().is_none());
+    }
+
+    #[test]
+    fn class_counts_follow_queue_membership() {
+        let mut q = EdfQueue::new();
+        q.push(req(0, 0, 1.0));
+        q.push(req(1, 2, 2.0));
+        q.push(req(2, 2, 3.0));
+        assert_eq!(q.class_counts(), &[1, 0, 2]);
+        q.pop(); // priority 0 leaves first
+        assert_eq!(q.class_counts(), &[0, 0, 2]);
+        q.pop_min_deadline();
+        assert_eq!(q.class_counts(), &[0, 0, 1]);
+    }
+
+    #[test]
+    fn pop_min_deadline_ignores_priority() {
+        let mut q = EdfQueue::new();
+        q.push(req(0, 0, 9.0)); // interactive, far deadline
+        q.push(req(1, 2, 0.5)); // batch, imminent deadline
+        q.push(req(2, 1, 4.0));
+        assert_eq!(q.min_deadline_ns(), Some(500_000_000));
+        // worst slack is the batch request, even though EDF would pop
+        // the interactive one first
+        assert_eq!(q.pop_min_deadline().unwrap().id, 1);
+        // the rest of the queue is intact and still EDF-ordered
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop().unwrap().id, 0);
+        assert_eq!(q.pop().unwrap().id, 2);
+    }
+
+    #[test]
+    fn interactive_slack_tracks_priority_zero_only() {
+        let mut q = EdfQueue::new();
+        q.push(req(0, 2, 0.1)); // batch about to bust — ignored
+        assert!(q.min_interactive_slack_frac(0.0).is_none());
+        q.push(req(1, 0, 2.0));
+        let frac = q.min_interactive_slack_frac(1.0).unwrap();
+        assert!((frac - 0.5).abs() < 1e-9);
     }
 
     #[test]

@@ -1,0 +1,194 @@
+//! The cluster's shared telemetry layer: one structured snapshot per
+//! control-plane instant.
+//!
+//! Every cluster-level decision — routing, the quality-ladder
+//! controller, cross-replica work stealing — used to poke a disjoint
+//! ad-hoc slice of replica state (mean queue depth here, token backlog
+//! there). [`ClusterSnapshot`] replaces those scattered getters with one
+//! surface: each [`ReplicaBackend`](super::backend::ReplicaBackend)
+//! reports a [`ReplicaTelemetry`] for the current event-loop instant,
+//! and the routing policies, [`LadderController`](super::ladder::LadderController),
+//! and the stealing pass in [`Cluster::run`](super::router::Cluster::run)
+//! are pure functions of the snapshot. Adding a future scheduling idea
+//! means adding one snapshot consumer, not a new trait getter.
+//!
+//! Within one event-loop instant the dispatch loop refreshes the
+//! snapshot after mutations (an admitted arrival changes the next
+//! arrival's routing input), so consumers always see current state —
+//! "per instant" is the unit of decision-making, not a caching policy.
+
+use super::scheduler::EdfQueue;
+
+/// How much telemetry to materialize. The O(1) scheduling fields are
+/// always filled; the queue scans are only worth paying for at
+/// control-plane instants, not on every routed arrival.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TelemetryDetail {
+    /// Only the O(1) fields (queue/active/load/rung/EWMA): the
+    /// per-arrival routing input. Scan-derived fields are left empty
+    /// (`class_occupancy` empty, slack minima `None`).
+    Load,
+    /// Everything, including the per-class occupancy and EDF-slack
+    /// minima (O(queue) scans): the ladder/stealing input.
+    Full,
+}
+
+/// One replica's control-plane-visible state at an event-loop instant.
+#[derive(Clone, Debug)]
+pub struct ReplicaTelemetry {
+    /// Stable replica index (= position in the cluster).
+    pub replica: usize,
+    /// Whether the replica can take on new work (false once an
+    /// engine-backed replica has failed mid-run — its `admit` would
+    /// silently drop requests, so routing and stealing avoid it).
+    pub accepting: bool,
+    /// Current quality-ladder rung (0 = full quality).
+    pub rung: usize,
+    /// Event-loop time of the last rung switch (−∞ before the first).
+    pub last_switch_s: f64,
+    /// Requests waiting in the local queue.
+    pub queue_len: usize,
+    /// Requests running inside the replica (occupied slots / in-flight
+    /// engine requests).
+    pub active: usize,
+    /// Token-weighted backlog: queued cost + remaining decode tokens of
+    /// running requests (the load-aware routing signal).
+    pub load_cost: u64,
+    /// Queued + running requests per SLO class (index = class id; may
+    /// be shorter than the scenario's class count when the tail classes
+    /// have no occupancy). Empty at [`TelemetryDetail::Load`].
+    pub class_occupancy: Vec<usize>,
+    /// Minimum EDF slack `deadline − now` over ALL queued requests
+    /// (`None` when the queue is empty, or at
+    /// [`TelemetryDetail::Load`]). The work-stealing pressure signal.
+    pub min_slack_s: Option<f64>,
+    /// Minimum over queued *interactive* (priority-0) requests of
+    /// `slack / TTFT SLO` — 1 at arrival, 0 at the deadline, negative
+    /// past it. Scale-free, so one threshold works for any model or
+    /// cluster speed. `None` when no interactive request is queued (or
+    /// at [`TelemetryDetail::Load`]).
+    pub min_interactive_slack_frac: Option<f64>,
+    /// EWMA of recent phase durations (prefill or decode), seconds.
+    /// 0 before the first phase.
+    pub step_ewma_s: f64,
+}
+
+impl ReplicaTelemetry {
+    /// An idle replica with no history (test/bootstrap fixture).
+    pub fn idle(replica: usize) -> Self {
+        ReplicaTelemetry {
+            replica,
+            accepting: true,
+            rung: 0,
+            last_switch_s: f64::NEG_INFINITY,
+            queue_len: 0,
+            active: 0,
+            load_cost: 0,
+            class_occupancy: Vec::new(),
+            min_slack_s: None,
+            min_interactive_slack_frac: None,
+            step_ewma_s: 0.0,
+        }
+    }
+
+    /// Queued + running requests (the admission-control signal).
+    pub fn outstanding(&self) -> usize {
+        self.queue_len + self.active
+    }
+
+    /// Fill the O(queue)-scan fields ([`TelemetryDetail::Full`]) from
+    /// the local EDF queue plus the classes of currently running
+    /// requests — shared by every backend so the two replica families
+    /// can never diverge on what the scans mean.
+    pub fn fill_scans(
+        &mut self,
+        queue: &EdfQueue,
+        running_classes: impl Iterator<Item = usize>,
+        now_s: f64,
+    ) {
+        let mut occupancy = queue.class_counts().to_vec();
+        for class in running_classes {
+            if class >= occupancy.len() {
+                occupancy.resize(class + 1, 0);
+            }
+            occupancy[class] += 1;
+        }
+        self.class_occupancy = occupancy;
+        self.min_slack_s = queue.min_deadline_ns().map(|ns| ns as f64 / 1e9 - now_s);
+        self.min_interactive_slack_frac = queue.min_interactive_slack_frac(now_s);
+    }
+}
+
+/// All replica telemetry at one event-loop instant.
+#[derive(Clone, Debug)]
+pub struct ClusterSnapshot {
+    pub now_s: f64,
+    pub replicas: Vec<ReplicaTelemetry>,
+}
+
+impl ClusterSnapshot {
+    /// Worst (minimum) interactive slack fraction across the cluster
+    /// (+∞ when no interactive request is queued anywhere) — the
+    /// cluster-global slack-pressure reading.
+    pub fn min_interactive_slack_frac(&self) -> f64 {
+        self.replicas
+            .iter()
+            .filter_map(|t| t.min_interactive_slack_frac)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Worst (minimum) absolute queued slack across the cluster (+∞
+    /// when every queue is empty).
+    pub fn min_slack_s(&self) -> f64 {
+        self.replicas
+            .iter()
+            .filter_map(|t| t.min_slack_s)
+            .fold(f64::INFINITY, f64::min)
+    }
+}
+
+/// Per-replica engine step-time summary (measured wall-clock phases),
+/// recorded so the sim `ServiceModel` can be calibrated against real
+/// engine step times.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StepTimeSummary {
+    /// Measured steps (prefill + decode).
+    pub n: u64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub max_s: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_aggregates_worst_slack() {
+        let mut a = ReplicaTelemetry::idle(0);
+        a.min_slack_s = Some(0.5);
+        a.min_interactive_slack_frac = Some(0.8);
+        let mut b = ReplicaTelemetry::idle(1);
+        b.min_slack_s = Some(0.2);
+        let snap = ClusterSnapshot {
+            now_s: 1.0,
+            replicas: vec![a, b],
+        };
+        assert_eq!(snap.min_slack_s(), 0.2);
+        assert_eq!(snap.min_interactive_slack_frac(), 0.8);
+        let empty = ClusterSnapshot {
+            now_s: 0.0,
+            replicas: vec![ReplicaTelemetry::idle(0)],
+        };
+        assert!(empty.min_slack_s().is_infinite());
+        assert!(empty.min_interactive_slack_frac().is_infinite());
+    }
+
+    #[test]
+    fn outstanding_counts_queue_and_active() {
+        let mut t = ReplicaTelemetry::idle(3);
+        t.queue_len = 4;
+        t.active = 2;
+        assert_eq!(t.outstanding(), 6);
+    }
+}

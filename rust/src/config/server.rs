@@ -54,6 +54,10 @@ pub enum PressureMode {
     /// Normalized EDF slack of queued interactive requests: degrade
     /// when deadlines start collapsing, not when mean depth rises.
     Slack,
+    /// Predictive slack: EDF slack projected forward by the replica's
+    /// step-time EWMA x queue depth, so the controller reacts to where
+    /// slack WILL be once the backlog drains, not where it is now.
+    SlackEwma,
 }
 
 impl PressureMode {
@@ -61,7 +65,8 @@ impl PressureMode {
         Ok(match s {
             "queue" => PressureMode::Queue,
             "slack" => PressureMode::Slack,
-            other => bail!("unknown pressure mode '{other}' (queue | slack)"),
+            "slack-ewma" | "slackewma" => PressureMode::SlackEwma,
+            other => bail!("unknown pressure mode '{other}' (queue | slack | slack-ewma)"),
         })
     }
 
@@ -69,7 +74,45 @@ impl PressureMode {
         match self {
             PressureMode::Queue => "queue",
             PressureMode::Slack => "slack",
+            PressureMode::SlackEwma => "slack-ewma",
         }
+    }
+}
+
+/// HBM eviction policy of the expert residency store. The
+/// implementations live in [`crate::experts::policy`]
+/// (`EvictKind::build`, mirroring `PolicyKind::build`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvictKind {
+    /// Evict the least-recently demanded expert.
+    Lru,
+    /// Evict the least-frequently demanded expert.
+    Lfu,
+    /// Pin each layer's top-`k_vec[j]` experts by routing popularity
+    /// (the LExI hot set); LRU over the remaining pool.
+    KvecAware,
+}
+
+impl EvictKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "lru" => EvictKind::Lru,
+            "lfu" => EvictKind::Lfu,
+            "kvec" | "kvec-aware" | "kvecaware" => EvictKind::KvecAware,
+            other => bail!("unknown eviction policy '{other}' (lru | lfu | kvec)"),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            EvictKind::Lru => "lru",
+            EvictKind::Lfu => "lfu",
+            EvictKind::KvecAware => "kvec",
+        }
+    }
+
+    pub fn all() -> [EvictKind; 3] {
+        [EvictKind::Lru, EvictKind::Lfu, EvictKind::KvecAware]
     }
 }
 
@@ -260,6 +303,18 @@ pub struct ServerConfig {
     pub slack_upgrade_frac: f64,
     /// Cross-replica steals allowed per dispatch instant (0 = off).
     pub steal_bound: usize,
+    /// Minimum event-loop time between steals touching one replica
+    /// (thief or victim) — hysteresis so engine-backed replicas don't
+    /// thrash work back and forth. 0 = per-instant bound only.
+    pub steal_cooldown_s: f64,
+    /// Expert-residency HBM budget as a fraction of the model's full
+    /// expert footprint (`None` = every expert resident at zero cost,
+    /// the historical behavior).
+    pub hbm_budget_frac: Option<f64>,
+    /// Eviction policy of the residency store (only with a budget).
+    pub evict: EvictKind,
+    /// Predictive prefetch of next-layer experts (only with a budget).
+    pub prefetch: bool,
     /// Request log for `--scenario trace-replay`.
     pub trace_file: Option<PathBuf>,
     /// One-off event-loop cost of swapping `k_vec` on a replica.
@@ -291,6 +346,10 @@ impl Default for ServerConfig {
             slack_degrade_frac: 0.25,
             slack_upgrade_frac: 0.75,
             steal_bound: 0,
+            steal_cooldown_s: 0.0,
+            hbm_budget_frac: None,
+            evict: EvictKind::KvecAware,
+            prefetch: true,
             trace_file: None,
             reconfig_penalty_s: 0.002,
             service_in_len: 512,
@@ -320,9 +379,14 @@ mod tests {
         for l in [LadderScope::PerReplica, LadderScope::Cluster] {
             assert_eq!(LadderScope::parse(l.label()).unwrap(), l);
         }
-        for p in [PressureMode::Queue, PressureMode::Slack] {
+        for p in [PressureMode::Queue, PressureMode::Slack, PressureMode::SlackEwma] {
             assert_eq!(PressureMode::parse(p.label()).unwrap(), p);
         }
+        for e in EvictKind::all() {
+            assert_eq!(EvictKind::parse(e.label()).unwrap(), e);
+        }
+        assert_eq!(EvictKind::parse("kvec-aware").unwrap(), EvictKind::KvecAware);
+        assert!(EvictKind::parse("fifo").is_err());
         assert_eq!(PolicyKind::parse("classaware").unwrap(), PolicyKind::ClassAware);
         assert_eq!(
             ScenarioKind::parse("trace-replay").unwrap(),
@@ -349,6 +413,8 @@ mod tests {
         // feature set must stay bit-identical to earlier releases
         assert_eq!(c.pressure, PressureMode::Queue);
         assert_eq!(c.steal_bound, 0);
+        assert_eq!(c.steal_cooldown_s, 0.0);
+        assert!(c.hbm_budget_frac.is_none(), "residency must default OFF");
         assert!(c.trace_file.is_none());
         assert!(0.0 < c.slack_degrade_frac && c.slack_degrade_frac < c.slack_upgrade_frac);
     }

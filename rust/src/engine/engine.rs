@@ -17,6 +17,7 @@
 use anyhow::Result;
 
 use crate::config::serving::ServingConfig;
+use crate::experts::{ExpertResidency, ResidencyStats};
 use crate::runtime::executable::KvState;
 use crate::runtime::{ModelBackend, ModelRuntime};
 use crate::util::Pcg32;
@@ -62,6 +63,11 @@ pub struct Engine<'m, M: ModelBackend = ModelRuntime> {
     /// reference; host-copied only when splicing in fresh prefills).
     kv: KvState,
     pub metrics: EngineMetrics,
+    /// Optional expert-residency model: each scheduling step demands the
+    /// routed expert sets, charging HBM miss stalls into the metrics.
+    /// `None` (the default) keeps the historical every-expert-resident
+    /// behavior.
+    residency: Option<ExpertResidency>,
     rng: Pcg32,
     next_id: RequestId,
     outputs: Vec<RequestOutput>,
@@ -87,6 +93,7 @@ impl<'m, M: ModelBackend> Engine<'m, M> {
             kv_mgr: KvBlockManager::new(cfg.kv_blocks_total, cfg.kv_block),
             kv,
             metrics: EngineMetrics::default(),
+            residency: None,
             rng: Pcg32::seeded(0x5e41),
             next_id: 0,
             outputs: Vec::new(),
@@ -147,8 +154,38 @@ impl<'m, M: ModelBackend> Engine<'m, M> {
             k_vec.len(),
             self.model.entry().n_layers
         );
+        // residency repins + prewarms the new per-layer hot sets
+        if let Some(r) = &mut self.residency {
+            r.set_k_vec(&k_vec);
+        }
         self.k_vec = k_vec;
         Ok(())
+    }
+
+    /// Attach an expert-residency model (must match the graph's layer
+    /// count). Every subsequent step consults the store; hit/miss/stall
+    /// counters land in [`EngineMetrics`].
+    pub fn set_residency(&mut self, mut residency: ExpertResidency) -> Result<()> {
+        anyhow::ensure!(
+            residency.n_layers() == self.model.entry().n_layers,
+            "residency models {} layers, graph has {}",
+            residency.n_layers(),
+            self.model.entry().n_layers
+        );
+        residency.set_k_vec(&self.k_vec);
+        self.residency = Some(residency);
+        Ok(())
+    }
+
+    /// Residency counters (`None` when no residency model is attached).
+    pub fn residency_stats(&self) -> Option<ResidencyStats> {
+        self.residency.as_ref().map(|r| r.stats())
+    }
+
+    /// Residency pressure in [0, 1] (miss-rate EWMA; `None` without a
+    /// residency model) — the telemetry signal replica backends report.
+    pub fn residency_pressure(&self) -> Option<f64> {
+        self.residency.as_ref().map(|r| r.pressure())
     }
 
     /// Drain finished outputs without waiting for the queue to empty
@@ -245,6 +282,11 @@ impl<'m, M: ModelBackend> Engine<'m, M> {
             .model
             .prefill(&tokens, &self.k_vec, &self.gate_bias)?;
         self.metrics.prefill_calls += 1;
+        if let Some(r) = &mut self.residency {
+            let prompt_tokens: usize = admitted.iter().map(|(_, t)| t.req.prompt.len()).sum();
+            let step = r.step(prompt_tokens.max(1));
+            self.metrics.record_residency(&step);
+        }
 
         // Splice the admitted slots' cache rows into the running cache
         // (the only host-side KV copy in the engine; decode steps pass
@@ -306,6 +348,10 @@ impl<'m, M: ModelBackend> Engine<'m, M> {
             .decode(&self.kv, &tokens, &pos, &self.k_vec, &self.gate_bias)?;
         self.metrics
             .record_decode_step(active.len(), e.batch);
+        if let Some(r) = &mut self.residency {
+            let step = r.step(active.len());
+            self.metrics.record_residency(&step);
+        }
         self.kv = out.kv;
 
         for i in active {

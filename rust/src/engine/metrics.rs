@@ -17,6 +17,13 @@ pub struct EngineMetrics {
     pub truncated_prompts: u64,
     /// Total prompt tokens dropped by those truncations.
     pub truncated_tokens: u64,
+    /// Expert residency counters (all zero unless the engine runs with
+    /// an [`ExpertResidency`](crate::experts::ExpertResidency) model).
+    pub expert_hits: u64,
+    pub expert_misses: u64,
+    pub expert_prefetch_hits: u64,
+    /// Simulated stall time charged to expert demand misses.
+    pub expert_stall_s: f64,
     started: Option<Instant>,
     finished: Option<Instant>,
 }
@@ -39,6 +46,10 @@ pub struct MetricsSummary {
     pub decode_calls: u64,
     /// Prompts truncated at submit (prompt > prefill_len).
     pub truncated_prompts: u64,
+    /// Expert HBM hit rate (`None` when no residency model ran).
+    pub expert_hit_rate: Option<f64>,
+    /// Total simulated expert-fetch stall (0 without a residency model).
+    pub expert_stall_s: f64,
 }
 
 impl EngineMetrics {
@@ -58,6 +69,14 @@ impl EngineMetrics {
         self.decode_calls += 1;
         self.decode_steps_active_slots += active as u64;
         self.decode_steps_total_slots += total as u64;
+    }
+
+    /// Fold one scheduling step's residency outcome into the counters.
+    pub fn record_residency(&mut self, step: &crate::experts::StepResidency) {
+        self.expert_hits += step.hits;
+        self.expert_misses += step.misses;
+        self.expert_prefetch_hits += step.prefetch_hits;
+        self.expert_stall_s += step.stall_s;
     }
 
     pub fn wall(&self) -> Duration {
@@ -95,6 +114,10 @@ impl EngineMetrics {
             prefill_calls: self.prefill_calls,
             decode_calls: self.decode_calls,
             truncated_prompts: self.truncated_prompts,
+            expert_hit_rate: (self.expert_hits + self.expert_misses > 0).then(|| {
+                self.expert_hits as f64 / (self.expert_hits + self.expert_misses) as f64
+            }),
+            expert_stall_s: self.expert_stall_s,
         }
     }
 }
@@ -121,7 +144,18 @@ impl std::fmt::Display for MetricsSummary {
             self.decode_calls,
             self.slot_utilization * 100.0,
             self.truncated_prompts
-        )
+        )?;
+        // residency line only when a residency model actually ran, so
+        // default-configuration output is unchanged byte for byte
+        if let Some(rate) = self.expert_hit_rate {
+            write!(
+                f,
+                "\nexpert_hbm_hit_rate={:.1}% expert_stall={:.1}ms",
+                rate * 100.0,
+                self.expert_stall_s * 1e3
+            )?;
+        }
+        Ok(())
     }
 }
 
@@ -162,5 +196,30 @@ mod tests {
         let s = m.summary();
         assert_eq!(s.truncated_prompts, 3);
         assert!(format!("{s}").contains("truncated_prompts=3"));
+    }
+
+    #[test]
+    fn residency_counters_surface_only_when_present() {
+        let mut m = EngineMetrics::default();
+        let s = m.summary();
+        assert!(s.expert_hit_rate.is_none());
+        assert!(!format!("{s}").contains("expert_hbm_hit_rate"));
+
+        m.record_residency(&crate::experts::StepResidency {
+            stall_s: 0.25,
+            hits: 6,
+            misses: 2,
+            prefetch_hits: 1,
+        });
+        m.record_residency(&crate::experts::StepResidency {
+            stall_s: 0.05,
+            hits: 8,
+            misses: 0,
+            prefetch_hits: 0,
+        });
+        let s = m.summary();
+        assert!((s.expert_hit_rate.unwrap() - 14.0 / 16.0).abs() < 1e-12);
+        assert!((s.expert_stall_s - 0.3).abs() < 1e-12);
+        assert!(format!("{s}").contains("expert_hbm_hit_rate"));
     }
 }

@@ -1,0 +1,39 @@
+//! Expert residency subsystem: tiered HBM/host expert weight placement
+//! as a first-class, simulated serving resource.
+//!
+//! LExI's layer-adaptive `k_vec` shrinks each layer's *active* expert
+//! set, but every expert's weights still have to live somewhere. This
+//! module models that somewhere: an [`ExpertStore`] holds per-(layer,
+//! expert) weight shards across two tiers — HBM under a byte budget and
+//! host memory behind a bandwidth/latency [`LinkModel`] — with
+//! pluggable eviction ([`policy`]: LRU, LFU, and a k_vec-aware policy
+//! that pins each layer's LExI hot set), a predictive [`Prefetcher`]
+//! that forecasts next-layer demand from routing popularity, and a
+//! per-step driver ([`ExpertResidency`]) that charges demand-miss stall
+//! time into whatever is driving it.
+//!
+//! Consumers:
+//! - `engine::Engine` steps the model once per scheduling step and
+//!   surfaces hit/miss/stall counters in `EngineMetrics`.
+//! - `server::Replica` / `server::EngineReplica` add stall to phase
+//!   durations, report [`ResidencyStats`] per replica, and repin on
+//!   quality-ladder rung switches.
+//! - `perfmodel::PerfModel` has the analytical twin: an expert-traffic
+//!   term under an HBM budget (`with_hbm_budget_bytes`).
+//! - `lexi bench-memory` sweeps HBM budgets x eviction policies.
+//!
+//! Module map:
+//! - [`store`]     — two-tier store, link cost model, stats
+//! - [`policy`]    — eviction policies (`EvictKind::build`)
+//! - [`prefetch`]  — popularity-driven demand prediction
+//! - [`residency`] — the per-step driver + configuration
+
+pub mod policy;
+pub mod prefetch;
+pub mod residency;
+pub mod store;
+
+pub use policy::{EvictionPolicy, KvecAware, Lfu, Lru};
+pub use prefetch::Prefetcher;
+pub use residency::{ExpertResidency, ResidencyConfig, StepResidency};
+pub use store::{Access, ExpertKey, ExpertStore, LinkModel, ResidencyStats};

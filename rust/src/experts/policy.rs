@@ -1,0 +1,148 @@
+//! Pluggable HBM eviction policies for the expert store.
+//!
+//! A policy only chooses victims; residency metadata (recency clock,
+//! touch counts, pin flags) lives in the
+//! [`ExpertStore`](super::store::ExpertStore) so every policy reads the
+//! same signals. Pinned entries (the k_vec-aware policy's per-layer
+//! LExI hot set) are excluded from the victim set by contract.
+
+use std::collections::BTreeMap;
+
+use crate::config::server::EvictKind;
+
+use super::store::{EntryMeta, ExpertKey};
+
+/// Victim selection over the resident set.
+pub trait EvictionPolicy: std::fmt::Debug {
+    fn label(&self) -> &'static str;
+
+    /// Next eviction victim among resident, non-pinned entries (`None`
+    /// when everything resident is pinned).
+    fn victim(&self, resident: &BTreeMap<ExpertKey, EntryMeta>) -> Option<ExpertKey>;
+
+    /// Whether the store should pin the per-layer LExI hot set for this
+    /// policy (recomputed on every `k_vec` swap).
+    fn pins_hot_set(&self) -> bool {
+        false
+    }
+}
+
+/// Select the non-pinned entry minimizing `rank` (ties break by key, so
+/// victim choice is a deterministic total order).
+fn argmin_by<R: Ord>(
+    resident: &BTreeMap<ExpertKey, EntryMeta>,
+    rank: impl Fn(&EntryMeta) -> R,
+) -> Option<ExpertKey> {
+    resident
+        .iter()
+        .filter(|(_, m)| !m.pinned)
+        .min_by(|(ka, ma), (kb, mb)| rank(ma).cmp(&rank(mb)).then(ka.cmp(kb)))
+        .map(|(k, _)| *k)
+}
+
+/// Evict the least-recently demanded expert.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Lru;
+
+impl EvictionPolicy for Lru {
+    fn label(&self) -> &'static str {
+        "lru"
+    }
+
+    fn victim(&self, resident: &BTreeMap<ExpertKey, EntryMeta>) -> Option<ExpertKey> {
+        argmin_by(resident, |m| m.last_touch)
+    }
+}
+
+/// Evict the least-frequently demanded expert (recency breaks ties, so
+/// an untouched prefetch goes before an old-but-used entry).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Lfu;
+
+impl EvictionPolicy for Lfu {
+    fn label(&self) -> &'static str {
+        "lfu"
+    }
+
+    fn victim(&self, resident: &BTreeMap<ExpertKey, EntryMeta>) -> Option<ExpertKey> {
+        argmin_by(resident, |m| (m.touches, m.last_touch))
+    }
+}
+
+/// LExI-aware policy: the store pins each layer's top-`k_vec[j]` experts
+/// by routing popularity (the hot set the active-expert budget actually
+/// routes to), and the remaining capacity falls back to LRU. Rung
+/// switches repin — the mechanism behind prewarm-on-upgrade.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct KvecAware;
+
+impl EvictionPolicy for KvecAware {
+    fn label(&self) -> &'static str {
+        "kvec"
+    }
+
+    fn victim(&self, resident: &BTreeMap<ExpertKey, EntryMeta>) -> Option<ExpertKey> {
+        argmin_by(resident, |m| m.last_touch)
+    }
+
+    fn pins_hot_set(&self) -> bool {
+        true
+    }
+}
+
+impl EvictKind {
+    /// Instantiate the eviction-policy implementation for this kind
+    /// (mirrors `PolicyKind::build` for routing policies).
+    pub fn build(self) -> Box<dyn EvictionPolicy> {
+        match self {
+            EvictKind::Lru => Box::new(Lru),
+            EvictKind::Lfu => Box::new(Lfu),
+            EvictKind::KvecAware => Box::new(KvecAware),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(last_touch: u64, touches: u64, pinned: bool) -> EntryMeta {
+        EntryMeta {
+            last_touch,
+            touches,
+            pinned,
+            from_prefetch: false,
+        }
+    }
+
+    #[test]
+    fn lru_and_lfu_pick_different_victims() {
+        let mut resident = BTreeMap::new();
+        resident.insert((0, 0), meta(10, 1, false)); // fresh, rarely used
+        resident.insert((0, 1), meta(2, 9, false)); // old, heavily used
+        assert_eq!(Lru.victim(&resident), Some((0, 1)));
+        assert_eq!(Lfu.victim(&resident), Some((0, 0)));
+    }
+
+    #[test]
+    fn pinned_entries_are_never_victims() {
+        let mut resident = BTreeMap::new();
+        resident.insert((0, 0), meta(1, 1, true));
+        resident.insert((0, 1), meta(5, 5, true));
+        for kind in [EvictKind::Lru, EvictKind::Lfu, EvictKind::KvecAware] {
+            assert_eq!(kind.build().victim(&resident), None, "{kind:?}");
+        }
+        resident.insert((1, 0), meta(100, 100, false));
+        assert_eq!(Lru.victim(&resident), Some((1, 0)));
+    }
+
+    #[test]
+    fn build_matches_labels_and_pin_behavior() {
+        assert_eq!(EvictKind::Lru.build().label(), "lru");
+        assert_eq!(EvictKind::Lfu.build().label(), "lfu");
+        let kv = EvictKind::KvecAware.build();
+        assert_eq!(kv.label(), "kvec");
+        assert!(kv.pins_hot_set());
+        assert!(!EvictKind::Lru.build().pins_hot_set());
+    }
+}

@@ -1,0 +1,409 @@
+//! Per-replica residency simulation: one [`ExpertResidency`] drives the
+//! tiered store through every engine scheduling step.
+//!
+//! Each step walks the layers in execution order. For layer `j` it
+//! samples the demanded expert set from the layer's routing popularity
+//! (the same Monte-Carlo the perf model uses, seeded per replica),
+//! touches each demanded expert in the store (accumulating stall on
+//! misses), issues predictive prefetches for layer `j+1`, and advances
+//! the host→HBM link by the layer's share of the step's compute time —
+//! the overlap window prefetch lives in.
+//!
+//! The per-layer active budget is the live `k_vec`, so LExI's
+//! layer-adaptive allocations shrink demand (and pinned hot sets) per
+//! layer; quality-ladder rung switches call
+//! [`ExpertResidency::set_k_vec`], which repins and prewarms the new hot
+//! set.
+
+use std::collections::BTreeSet;
+
+use crate::config::model::ModelSpec;
+use crate::config::server::EvictKind;
+use crate::moe::arch::ModelGeom;
+use crate::moe::routing::RoutingSim;
+use crate::perfmodel::loadbalance::LayerRouting;
+use crate::perfmodel::Hardware;
+use crate::util::stats::percentile;
+use crate::util::Pcg32;
+
+use super::prefetch::Prefetcher;
+use super::store::{ExpertKey, ExpertStore, LinkModel, ResidencyStats};
+
+/// Fraction of the HBM budget the k_vec-aware policy may pin; the rest
+/// stays a general-purpose pool so tail experts are still cacheable.
+const PIN_BUDGET_FRAC: f64 = 0.9;
+
+/// Declarative knobs of one replica's residency model.
+#[derive(Clone, Debug)]
+pub struct ResidencyConfig {
+    /// HBM bytes available for expert weights (per GPU).
+    pub hbm_budget_bytes: u64,
+    /// Per-GPU bytes of one expert's weight shard.
+    pub expert_bytes: u64,
+    pub n_layers: usize,
+    pub n_experts: usize,
+    pub policy: EvictKind,
+    /// Enable predictive prefetch (pin prewarm stays on either way).
+    pub prefetch: bool,
+    /// Prefetcher depth cap (experts per layer transition).
+    pub prefetch_depth: usize,
+    /// Prefetcher cumulative-mass target.
+    pub prefetch_mass: f64,
+    pub link: LinkModel,
+    /// Nominal compute time per engine step available to overlap
+    /// transfers (split evenly across layers).
+    pub overlap_s_per_step: f64,
+    /// Cap on tokens fed to the per-layer routing Monte-Carlo (bounds
+    /// prefill-step cost; the distinct-expert set saturates quickly).
+    pub sim_tokens_cap: usize,
+    /// Routing + demand-sampling seed (routing is shared across
+    /// replicas of one model; the demand stream varies per replica).
+    pub seed: u64,
+}
+
+impl ResidencyConfig {
+    /// Residency model for a registry model at paper scale: expert shard
+    /// bytes from the model geometry, link constants from the hardware
+    /// model, budget as a fraction of the full expert footprint.
+    pub fn for_model(spec: &ModelSpec, budget_frac: f64, policy: EvictKind, seed: u64) -> Self {
+        let geom = ModelGeom::paper_scale(spec);
+        let hw = Hardware::h100();
+        let expert_bytes =
+            (geom.layer.expert_weight_bytes(hw.dtype_bytes) / spec.paper.n_gpus as f64) as u64;
+        Self::for_dims(spec.n_layers, spec.n_experts, expert_bytes, budget_frac, policy, seed)
+    }
+
+    /// Residency model over explicit dimensions (engine-backed replicas
+    /// use the compiled graph's layer/expert counts).
+    pub fn for_dims(
+        n_layers: usize,
+        n_experts: usize,
+        expert_bytes: u64,
+        budget_frac: f64,
+        policy: EvictKind,
+        seed: u64,
+    ) -> Self {
+        assert!(budget_frac > 0.0, "HBM budget fraction must be positive");
+        let hw = Hardware::h100();
+        let total = (n_layers * n_experts) as u64 * expert_bytes.max(1);
+        ResidencyConfig {
+            hbm_budget_bytes: (total as f64 * budget_frac.min(1.0)) as u64,
+            expert_bytes: expert_bytes.max(1),
+            n_layers,
+            n_experts,
+            policy,
+            prefetch: true,
+            prefetch_depth: 4,
+            prefetch_mass: 0.9,
+            link: LinkModel {
+                bw_bytes_per_s: hw.host_link_bw,
+                latency_s: hw.host_link_latency,
+            },
+            overlap_s_per_step: 2e-3,
+            sim_tokens_cap: 64,
+            seed,
+        }
+    }
+}
+
+/// What one engine step cost the residency model.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StepResidency {
+    pub stall_s: f64,
+    pub hits: u64,
+    pub misses: u64,
+    pub prefetch_hits: u64,
+}
+
+/// One replica's residency simulation (store + predictor + routing).
+#[derive(Debug)]
+pub struct ExpertResidency {
+    store: ExpertStore,
+    prefetcher: Option<Prefetcher>,
+    routing: Vec<RoutingSim>,
+    /// Per-layer expert indices by descending popularity, computed once
+    /// (routing is immutable here; prediction and pinning run per step).
+    pop_order: Vec<Vec<usize>>,
+    k_vec: Vec<i32>,
+    overlap_s: f64,
+    tokens_cap: usize,
+    rng: Pcg32,
+    steps: u64,
+    stall_samples_s: Vec<f64>,
+    /// EWMA of the per-step demand miss rate — the telemetry pressure
+    /// signal (0 = everything resident, 1 = every access faults).
+    miss_ewma: f64,
+}
+
+impl ExpertResidency {
+    /// Build with the model's synthetic per-layer routing (shared with
+    /// the perf model for the same seed). `replica` decorrelates the
+    /// demand-sampling stream across replicas.
+    pub fn new(cfg: &ResidencyConfig, k_vec: Vec<i32>, replica: u64) -> Self {
+        let routing = LayerRouting::synthetic(cfg.n_layers, cfg.n_experts, cfg.seed).sims;
+        Self::with_routing(cfg, k_vec, replica, routing)
+    }
+
+    /// Build over caller-supplied routing (tests, measured calibration).
+    pub fn with_routing(
+        cfg: &ResidencyConfig,
+        k_vec: Vec<i32>,
+        replica: u64,
+        routing: Vec<RoutingSim>,
+    ) -> Self {
+        assert_eq!(k_vec.len(), cfg.n_layers, "k_vec length != layer count");
+        assert_eq!(routing.len(), cfg.n_layers, "routing length != layer count");
+        for sim in &routing {
+            assert_eq!(sim.n_experts(), cfg.n_experts, "routing width != expert count");
+        }
+        let store = ExpertStore::new(
+            cfg.hbm_budget_bytes,
+            cfg.expert_bytes,
+            cfg.link,
+            cfg.policy.build(),
+        );
+        let prefetcher = cfg
+            .prefetch
+            .then(|| Prefetcher::new(cfg.prefetch_depth, cfg.prefetch_mass));
+        let pop_order: Vec<Vec<usize>> = routing.iter().map(|s| s.by_popularity()).collect();
+        let mut r = ExpertResidency {
+            store,
+            prefetcher,
+            routing,
+            pop_order,
+            k_vec,
+            overlap_s: cfg.overlap_s_per_step,
+            tokens_cap: cfg.sim_tokens_cap.max(1),
+            rng: Pcg32::new(cfg.seed, 0xe59e_2026 ^ replica),
+            steps: 0,
+            stall_samples_s: Vec::new(),
+            miss_ewma: 0.0,
+        };
+        r.repin_and_prewarm();
+        r
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.routing.len()
+    }
+
+    pub fn policy_label(&self) -> &'static str {
+        self.store.policy_label()
+    }
+
+    /// Active per-layer budget for layer `j`, clamped to the router's
+    /// selectable expert count.
+    fn k_at(&self, j: usize) -> usize {
+        let selectable = self.routing[j]
+            .popularity
+            .iter()
+            .filter(|&&p| p > 0.0)
+            .count()
+            .max(1);
+        (self.k_vec[j].max(1) as usize).min(selectable)
+    }
+
+    /// The pinned LExI hot set in priority order: rank-major across
+    /// layers (every layer's top-1 before any layer's top-2), capped at
+    /// [`PIN_BUDGET_FRAC`] of the HBM budget so a general pool remains.
+    fn pin_order(&self) -> Vec<ExpertKey> {
+        let cap = ((self.store.hbm_budget_bytes as f64 * PIN_BUDGET_FRAC)
+            / self.store.expert_bytes as f64) as usize;
+        let max_k = (0..self.routing.len()).map(|j| self.k_at(j)).max().unwrap_or(0);
+        let mut pins = Vec::new();
+        'ranks: for rank in 0..max_k {
+            for (j, order) in self.pop_order.iter().enumerate() {
+                if rank >= self.k_at(j) {
+                    continue;
+                }
+                if pins.len() >= cap {
+                    break 'ranks;
+                }
+                pins.push((j, order[rank]));
+            }
+        }
+        pins
+    }
+
+    /// Recompute pins for the current `k_vec` and prewarm the missing
+    /// ones over the link (most popular first). No-op for policies that
+    /// do not pin.
+    fn repin_and_prewarm(&mut self) {
+        if !self.store.policy_pins() {
+            return;
+        }
+        let order = self.pin_order();
+        self.store.set_pins(order.iter().copied().collect::<BTreeSet<_>>());
+        for key in order {
+            self.store.prefetch(key);
+        }
+    }
+
+    /// Swap the live per-layer budgets (quality-ladder rung switch):
+    /// the k_vec-aware pinned set is invalidated and the new hot set
+    /// prewarmed.
+    pub fn set_k_vec(&mut self, k_vec: &[i32]) {
+        assert_eq!(k_vec.len(), self.routing.len(), "k_vec length != layer count");
+        self.k_vec = k_vec.to_vec();
+        self.repin_and_prewarm();
+    }
+
+    /// One engine scheduling step over `tokens` routed tokens (active
+    /// decode slots, or the admitted prompt tokens of a prefill).
+    pub fn step(&mut self, tokens: usize) -> StepResidency {
+        let (h0, m0, p0) = (self.store.hits, self.store.misses, self.store.prefetch_hits);
+        let mut stall = 0.0;
+        let l = self.routing.len();
+        let per_layer_overlap = self.overlap_s / l as f64;
+        let tokens = tokens.clamp(1, self.tokens_cap);
+        for j in 0..l {
+            let k = self.k_at(j);
+            let loads = self.routing[j].sample_loads(tokens, k, &mut self.rng);
+            for (e, &load) in loads.iter().enumerate() {
+                if load > 0 {
+                    stall += self.store.touch((j, e)).stall_s();
+                }
+            }
+            if let Some(p) = self.prefetcher {
+                let nxt = (j + 1) % l;
+                let predicted = p.predict_from(
+                    &self.routing[nxt].popularity,
+                    &self.pop_order[nxt],
+                    self.k_at(nxt),
+                );
+                for e in predicted {
+                    self.store.prefetch((nxt, e));
+                }
+            }
+            self.store.advance(per_layer_overlap);
+        }
+        self.steps += 1;
+        self.stall_samples_s.push(stall);
+        let out = StepResidency {
+            stall_s: stall,
+            hits: self.store.hits - h0,
+            misses: self.store.misses - m0,
+            prefetch_hits: self.store.prefetch_hits - p0,
+        };
+        let touched = out.hits + out.misses;
+        if touched > 0 {
+            let inst = out.misses as f64 / touched as f64;
+            self.miss_ewma = if self.steps == 1 {
+                inst
+            } else {
+                0.2 * inst + 0.8 * self.miss_ewma
+            };
+        }
+        out
+    }
+
+    /// Residency pressure in [0, 1]: EWMA of the per-step demand miss
+    /// rate (the telemetry signal).
+    pub fn pressure(&self) -> f64 {
+        self.miss_ewma
+    }
+
+    /// Lifetime counters + per-step stall percentiles.
+    pub fn stats(&self) -> ResidencyStats {
+        ResidencyStats {
+            hits: self.store.hits,
+            misses: self.store.misses,
+            prefetch_issued: self.store.prefetch_issued,
+            prefetch_hits: self.store.prefetch_hits,
+            evictions: self.store.evictions,
+            bypasses: self.store.bypasses,
+            stall_s: self.store.stall_s,
+            stall_p50_s: percentile(&self.stall_samples_s, 50.0),
+            stall_p95_s: percentile(&self.stall_samples_s, 95.0),
+            steps: self.steps,
+            hbm_budget_bytes: self.store.hbm_budget_bytes,
+            hbm_used_bytes: self.store.used_bytes(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(budget_frac: f64, policy: EvictKind, prefetch: bool) -> ResidencyConfig {
+        let mut c = ResidencyConfig::for_dims(4, 16, 1 << 20, budget_frac, policy, 7);
+        c.prefetch = prefetch;
+        // slow link + short overlap so residency effects are visible
+        c.link = LinkModel {
+            bw_bytes_per_s: 2e8,
+            latency_s: 1e-4,
+        };
+        c.overlap_s_per_step = 4e-3;
+        c
+    }
+
+    fn residency(budget_frac: f64, policy: EvictKind, prefetch: bool) -> ExpertResidency {
+        ExpertResidency::new(&cfg(budget_frac, policy, prefetch), vec![2; 4], 0)
+    }
+
+    #[test]
+    fn kvec_policy_pins_and_prewarms_the_hot_set() {
+        let mut r = residency(0.5, EvictKind::KvecAware, false);
+        // prewarm transfers were issued for every pin
+        assert!(r.stats().prefetch_issued > 0);
+        // after enough overlap the hot set is resident: touching the
+        // most popular experts of each layer must hit
+        for _ in 0..64 {
+            r.step(4);
+        }
+        let warm = r.stats();
+        assert!(warm.hit_rate() > 0.0);
+        let top: Vec<ExpertKey> = (0..4).map(|j| (j, r.routing[j].by_popularity()[0])).collect();
+        for key in top {
+            assert!(r.store.is_resident(key), "{key:?} not pinned-resident");
+        }
+    }
+
+    #[test]
+    fn rung_switch_repins_to_the_new_hot_set() {
+        // 9 HBM slots: 8 pinned (0.9 cap), 1 general slot — so after the
+        // switch at most one of the newly pinned experts can already be
+        // resident and prewarm traffic is guaranteed
+        let mut r = residency(9.0 / 64.0, EvictKind::KvecAware, false);
+        for _ in 0..32 {
+            r.step(4);
+        }
+        let issued_before = r.stats().prefetch_issued;
+        r.set_k_vec(&[4, 4, 1, 1]);
+        // deeper front layers pin more experts -> new prewarm traffic
+        assert!(r.stats().prefetch_issued > issued_before);
+        assert_eq!(r.k_at(0), 4);
+        assert_eq!(r.k_at(2), 1);
+    }
+
+    #[test]
+    fn pressure_stays_normalized_and_tracks_misses() {
+        let mut r = residency(0.1, EvictKind::Lru, false);
+        for _ in 0..32 {
+            r.step(8);
+        }
+        let p = r.pressure();
+        assert!((0.0..=1.0).contains(&p), "pressure {p}");
+        // a 10% budget on 64 experts must fault regularly
+        assert!(p > 0.0);
+        let mut full = residency(1.0, EvictKind::Lru, false);
+        for _ in 0..32 {
+            full.step(8);
+        }
+        assert!(full.pressure() < p);
+    }
+
+    #[test]
+    fn full_budget_stops_missing_after_warmup() {
+        let mut r = residency(1.0, EvictKind::Lru, false);
+        for _ in 0..128 {
+            r.step(8);
+        }
+        let s = r.stats();
+        assert_eq!(s.evictions, 0);
+        // at most one cold miss per (layer, expert)
+        assert!(s.misses <= 64);
+        assert!(s.hit_rate() > 0.9);
+    }
+}

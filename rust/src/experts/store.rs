@@ -1,0 +1,473 @@
+//! Two-tier expert weight store: HBM residency under a byte budget,
+//! host memory behind a bandwidth/latency link.
+//!
+//! The store models per-(layer, expert) weight placement as a simulated,
+//! measurable resource. Every demanded expert is either **resident**
+//! (HBM hit, zero cost), **in flight** (a prefetch already crossing the
+//! link — the demand stalls for the transfer's remaining time), or
+//! **host-only** (a demand miss: the full link fetch time is charged as
+//! stall). Transfers share one serial host→HBM link ([`LinkModel`])
+//! whose queue drains during compute via [`ExpertStore::advance`] — that
+//! overlap is what a prefetcher buys.
+//!
+//! Capacity is enforced in bytes: inserting past the budget evicts
+//! victims chosen by the pluggable
+//! [`EvictionPolicy`](super::policy::EvictionPolicy); pinned entries
+//! (the k_vec-aware policy's per-layer LExI hot set) are never victims.
+//! When every resident entry is pinned, an insert degrades to a bypass:
+//! the weights are streamed for this access but not cached.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+use super::policy::EvictionPolicy;
+
+/// One expert's identity: (layer index, expert index).
+pub type ExpertKey = (usize, usize);
+
+/// Residency metadata of one HBM-resident expert.
+#[derive(Clone, Copy, Debug)]
+pub struct EntryMeta {
+    /// Logical access clock at the last demand touch (LRU signal).
+    pub last_touch: u64,
+    /// Demand touches since insertion (LFU signal).
+    pub touches: u64,
+    /// Member of the pinned hot set: never an eviction victim.
+    pub pinned: bool,
+    /// Resident because a prefetch completed and no demand has arrived
+    /// yet; the first demand touch counts as a prefetch hit.
+    pub from_prefetch: bool,
+}
+
+/// Host→HBM transfer cost model (one serial link per replica).
+#[derive(Clone, Copy, Debug)]
+pub struct LinkModel {
+    /// Sustained host→HBM bandwidth (B/s).
+    pub bw_bytes_per_s: f64,
+    /// Fixed per-transfer issue latency (s).
+    pub latency_s: f64,
+}
+
+impl LinkModel {
+    /// Wall time of one `bytes`-sized transfer on an idle link.
+    pub fn fetch_s(&self, bytes: u64) -> f64 {
+        self.latency_s + bytes as f64 / self.bw_bytes_per_s
+    }
+}
+
+/// Outcome of one demand access.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Access {
+    /// Resident in HBM; `prefetched` marks the first demand touch of an
+    /// entry a prefetch brought in.
+    Hit { prefetched: bool },
+    /// Not resident: the access stalls for `stall_s` (remaining
+    /// transfer time when the expert was already in flight, a full
+    /// link fetch otherwise).
+    Miss { stall_s: f64 },
+}
+
+impl Access {
+    pub fn stall_s(&self) -> f64 {
+        match self {
+            Access::Hit { .. } => 0.0,
+            Access::Miss { stall_s } => *stall_s,
+        }
+    }
+}
+
+/// Lifetime residency counters (per replica), reported into
+/// `BackendStats` / `RunResult` and the `bench-memory` rows.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ResidencyStats {
+    /// Distinct demanded experts served from HBM (per step).
+    pub hits: u64,
+    /// Distinct demanded experts fetched over the host link.
+    pub misses: u64,
+    /// Prefetch transfers issued (including pin prewarms).
+    pub prefetch_issued: u64,
+    /// Demand touches served because a prefetch landed first.
+    pub prefetch_hits: u64,
+    pub evictions: u64,
+    /// Demand fills dropped because every resident entry was pinned.
+    pub bypasses: u64,
+    /// Total stall time charged to demand misses.
+    pub stall_s: f64,
+    /// Per-engine-step stall percentiles (zeros included: most steps
+    /// should not stall at all).
+    pub stall_p50_s: f64,
+    pub stall_p95_s: f64,
+    /// Steps the residency model observed.
+    pub steps: u64,
+    pub hbm_budget_bytes: u64,
+    pub hbm_used_bytes: u64,
+}
+
+impl ResidencyStats {
+    /// Fraction of demanded experts served from HBM (1.0 when nothing
+    /// was ever demanded).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            1.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Cluster-level aggregate: counters and stall sum; stall
+    /// percentiles are step-weighted means of the per-replica values
+    /// (an approximation — exact percentiles would need the raw
+    /// samples); budget/used bytes sum across replicas.
+    pub fn aggregate<'a>(parts: impl Iterator<Item = &'a ResidencyStats>) -> ResidencyStats {
+        let mut out = ResidencyStats::default();
+        let mut p50_w = 0.0;
+        let mut p95_w = 0.0;
+        for s in parts {
+            out.hits += s.hits;
+            out.misses += s.misses;
+            out.prefetch_issued += s.prefetch_issued;
+            out.prefetch_hits += s.prefetch_hits;
+            out.evictions += s.evictions;
+            out.bypasses += s.bypasses;
+            out.stall_s += s.stall_s;
+            out.steps += s.steps;
+            out.hbm_budget_bytes += s.hbm_budget_bytes;
+            out.hbm_used_bytes += s.hbm_used_bytes;
+            p50_w += s.stall_p50_s * s.steps as f64;
+            p95_w += s.stall_p95_s * s.steps as f64;
+        }
+        if out.steps > 0 {
+            out.stall_p50_s = p50_w / out.steps as f64;
+            out.stall_p95_s = p95_w / out.steps as f64;
+        }
+        out
+    }
+}
+
+/// The tiered expert store of one replica.
+#[derive(Debug)]
+pub struct ExpertStore {
+    pub hbm_budget_bytes: u64,
+    /// Per-GPU bytes of one expert's weight shard.
+    pub expert_bytes: u64,
+    pub link: LinkModel,
+    resident: BTreeMap<ExpertKey, EntryMeta>,
+    /// Serial link queue: (key, remaining transfer seconds), FIFO.
+    inflight: VecDeque<(ExpertKey, f64)>,
+    policy: Box<dyn EvictionPolicy>,
+    pins: BTreeSet<ExpertKey>,
+    /// Logical demand-access clock (LRU recency).
+    clock: u64,
+    // ---- counters ----
+    pub hits: u64,
+    pub misses: u64,
+    pub prefetch_issued: u64,
+    pub prefetch_hits: u64,
+    pub evictions: u64,
+    pub bypasses: u64,
+    pub stall_s: f64,
+}
+
+impl ExpertStore {
+    pub fn new(
+        hbm_budget_bytes: u64,
+        expert_bytes: u64,
+        link: LinkModel,
+        policy: Box<dyn EvictionPolicy>,
+    ) -> Self {
+        assert!(expert_bytes > 0, "expert_bytes must be positive");
+        ExpertStore {
+            hbm_budget_bytes,
+            expert_bytes,
+            link,
+            resident: BTreeMap::new(),
+            inflight: VecDeque::new(),
+            policy,
+            pins: BTreeSet::new(),
+            clock: 0,
+            hits: 0,
+            misses: 0,
+            prefetch_issued: 0,
+            prefetch_hits: 0,
+            evictions: 0,
+            bypasses: 0,
+            stall_s: 0.0,
+        }
+    }
+
+    pub fn policy_label(&self) -> &'static str {
+        self.policy.label()
+    }
+
+    /// Whether the active policy pins the per-layer LExI hot set.
+    pub fn policy_pins(&self) -> bool {
+        self.policy.pins_hot_set()
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.resident.len() as u64 * self.expert_bytes
+    }
+
+    pub fn is_resident(&self, key: ExpertKey) -> bool {
+        self.resident.contains_key(&key)
+    }
+
+    pub fn is_inflight(&self, key: ExpertKey) -> bool {
+        self.inflight.iter().any(|(k, _)| *k == key)
+    }
+
+    /// Replace the pinned hot set. Already-resident pins are retained;
+    /// returns the pinned keys that are neither resident nor in flight —
+    /// the prewarm set the caller should prefetch.
+    pub fn set_pins(&mut self, pins: BTreeSet<ExpertKey>) -> Vec<ExpertKey> {
+        for (key, meta) in self.resident.iter_mut() {
+            meta.pinned = pins.contains(key);
+        }
+        let missing: Vec<ExpertKey> = pins
+            .iter()
+            .copied()
+            .filter(|k| !self.resident.contains_key(k) && !self.is_inflight(*k))
+            .collect();
+        self.pins = pins;
+        missing
+    }
+
+    /// One demand access. Hits are free; a key in flight stalls for the
+    /// link queue up to and including its transfer (which completes
+    /// now); a cold key pays a full demand fetch and is inserted.
+    pub fn touch(&mut self, key: ExpertKey) -> Access {
+        self.clock += 1;
+        if let Some(meta) = self.resident.get_mut(&key) {
+            meta.last_touch = self.clock;
+            meta.touches += 1;
+            let prefetched = meta.from_prefetch;
+            meta.from_prefetch = false;
+            self.hits += 1;
+            if prefetched {
+                self.prefetch_hits += 1;
+            }
+            return Access::Hit { prefetched };
+        }
+        if let Some(pos) = self.inflight.iter().position(|(k, _)| *k == key) {
+            // stall until the serial link delivers it (everything queued
+            // ahead finishes first)
+            let mut stall = 0.0;
+            for _ in 0..=pos {
+                let (k, remaining) = self.inflight.pop_front().unwrap();
+                stall += remaining;
+                self.complete_transfer(k);
+            }
+            // the demanded key just landed: count the demand, not a
+            // prefetch hit (the prefetch was late)
+            if let Some(meta) = self.resident.get_mut(&key) {
+                meta.last_touch = self.clock;
+                meta.touches = 1;
+                meta.from_prefetch = false;
+            }
+            self.misses += 1;
+            self.stall_s += stall;
+            return Access::Miss { stall_s: stall };
+        }
+        // cold: demand fetch over the link, bypassing the prefetch queue
+        let stall = self.link.fetch_s(self.expert_bytes);
+        self.misses += 1;
+        self.stall_s += stall;
+        if self.insert(key) {
+            let meta = self.resident.get_mut(&key).unwrap();
+            meta.last_touch = self.clock;
+            meta.touches = 1;
+            meta.from_prefetch = false;
+        }
+        Access::Miss { stall_s: stall }
+    }
+
+    /// Queue a background transfer for `key` (no-op when resident or
+    /// already in flight). Returns whether a transfer was issued.
+    pub fn prefetch(&mut self, key: ExpertKey) -> bool {
+        if self.resident.contains_key(&key) || self.is_inflight(key) {
+            return false;
+        }
+        self.inflight.push_back((key, self.link.fetch_s(self.expert_bytes)));
+        self.prefetch_issued += 1;
+        true
+    }
+
+    /// Drain the link queue by `dt` seconds of overlapped compute,
+    /// completing transfers in FIFO order.
+    pub fn advance(&mut self, mut dt: f64) {
+        while dt > 0.0 {
+            let Some((_, remaining)) = self.inflight.front_mut() else { return };
+            if *remaining > dt {
+                *remaining -= dt;
+                return;
+            }
+            dt -= *remaining;
+            let (key, _) = self.inflight.pop_front().unwrap();
+            self.complete_transfer(key);
+        }
+    }
+
+    /// A finished transfer lands in HBM (evicting if needed); dropped
+    /// when every resident entry is pinned and the budget is full.
+    fn complete_transfer(&mut self, key: ExpertKey) {
+        if self.insert(key) {
+            let pinned = self.pins.contains(&key);
+            let meta = self.resident.get_mut(&key).unwrap();
+            meta.from_prefetch = true;
+            meta.pinned = pinned;
+        }
+    }
+
+    /// Make room and insert `key`; false = bypass (not cached).
+    fn insert(&mut self, key: ExpertKey) -> bool {
+        if self.resident.contains_key(&key) {
+            return true;
+        }
+        if self.expert_bytes > self.hbm_budget_bytes {
+            self.bypasses += 1;
+            return false;
+        }
+        while self.used_bytes() + self.expert_bytes > self.hbm_budget_bytes {
+            match self.policy.victim(&self.resident) {
+                Some(victim) => {
+                    self.resident.remove(&victim);
+                    self.evictions += 1;
+                }
+                None => {
+                    self.bypasses += 1;
+                    return false;
+                }
+            }
+        }
+        self.resident.insert(
+            key,
+            EntryMeta {
+                last_touch: self.clock,
+                touches: 0,
+                pinned: self.pins.contains(&key),
+                from_prefetch: false,
+            },
+        );
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::policy::{Lfu, Lru};
+    use super::*;
+
+    fn link() -> LinkModel {
+        LinkModel {
+            bw_bytes_per_s: 1e6,
+            latency_s: 1e-3,
+        }
+    }
+
+    fn store(budget_experts: u64, policy: Box<dyn EvictionPolicy>) -> ExpertStore {
+        ExpertStore::new(budget_experts * 1000, 1000, link(), policy)
+    }
+
+    #[test]
+    fn miss_then_hit_with_lru_eviction_order() {
+        let mut s = store(2, Box::new(Lru));
+        // two cold fetches fill the store
+        assert!(matches!(s.touch((0, 0)), Access::Miss { .. }));
+        assert!(matches!(s.touch((0, 1)), Access::Miss { .. }));
+        assert_eq!(s.touch((0, 0)), Access::Hit { prefetched: false });
+        // third expert evicts the LRU victim (0,1)
+        assert!(matches!(s.touch((0, 2)), Access::Miss { .. }));
+        assert!(s.is_resident((0, 0)) && s.is_resident((0, 2)));
+        assert!(!s.is_resident((0, 1)));
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.misses, 3);
+        // stall = latency + bytes/bw per cold miss
+        let per = 1e-3 + 1000.0 / 1e6;
+        assert!((s.stall_s - 3.0 * per).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lfu_keeps_the_frequently_touched_expert() {
+        let mut s = store(2, Box::new(Lfu));
+        s.touch((0, 0));
+        s.touch((0, 0));
+        s.touch((0, 0));
+        s.touch((0, 1)); // 1 touch: the LFU victim despite being fresher
+        s.touch((0, 2));
+        assert!(s.is_resident((0, 0)));
+        assert!(!s.is_resident((0, 1)));
+    }
+
+    #[test]
+    fn prefetch_overlap_turns_misses_into_hits() {
+        let mut s = store(4, Box::new(Lru));
+        assert!(s.prefetch((1, 0)));
+        assert!(!s.prefetch((1, 0)), "duplicate prefetch issued");
+        // full overlap: the transfer completes before the demand
+        s.advance(1.0);
+        assert_eq!(s.touch((1, 0)), Access::Hit { prefetched: true });
+        assert_eq!(s.prefetch_hits, 1);
+
+        // partial overlap: the demand stalls only for the remainder
+        assert!(s.prefetch((1, 1)));
+        let full = s.link.fetch_s(1000);
+        s.advance(full / 2.0);
+        match s.touch((1, 1)) {
+            Access::Miss { stall_s } => assert!((stall_s - full / 2.0).abs() < 1e-12),
+            other => panic!("expected a late-prefetch miss, got {other:?}"),
+        }
+        // a second touch is a plain hit, not a prefetch hit
+        assert_eq!(s.touch((1, 1)), Access::Hit { prefetched: false });
+        assert_eq!(s.prefetch_hits, 1);
+    }
+
+    #[test]
+    fn inflight_queue_is_serial() {
+        let mut s = store(4, Box::new(Lru));
+        s.prefetch((0, 0));
+        s.prefetch((0, 1));
+        let full = s.link.fetch_s(1000);
+        // demanding the SECOND queued transfer pays for both
+        match s.touch((0, 1)) {
+            Access::Miss { stall_s } => assert!((stall_s - 2.0 * full).abs() < 1e-12),
+            other => panic!("{other:?}"),
+        }
+        // the first transfer completed along the way
+        assert!(s.is_resident((0, 0)));
+        assert_eq!(s.touch((0, 0)), Access::Hit { prefetched: true });
+    }
+
+    #[test]
+    fn pins_are_never_evicted_and_full_pinned_store_bypasses() {
+        let mut s = store(2, Box::new(Lru));
+        let prewarm = s.set_pins([(0, 0), (0, 1)].into_iter().collect());
+        assert_eq!(prewarm, vec![(0, 0), (0, 1)]);
+        for k in prewarm {
+            s.prefetch(k);
+        }
+        s.advance(10.0);
+        assert!(s.is_resident((0, 0)) && s.is_resident((0, 1)));
+        // every slot pinned: a new expert streams through without caching
+        assert!(matches!(s.touch((2, 0)), Access::Miss { .. }));
+        assert!(!s.is_resident((2, 0)));
+        assert_eq!(s.bypasses, 1);
+        assert_eq!(s.evictions, 0);
+        assert_eq!(s.touch((0, 0)), Access::Hit { prefetched: true });
+        // unpinning frees the entries for eviction again
+        let missing = s.set_pins(BTreeSet::new());
+        assert!(missing.is_empty());
+        s.touch((2, 0));
+        assert!(s.is_resident((2, 0)));
+        assert_eq!(s.evictions, 1);
+    }
+
+    #[test]
+    fn budget_smaller_than_one_expert_always_bypasses() {
+        let mut s = ExpertStore::new(10, 1000, link(), Box::new(Lru));
+        assert!(matches!(s.touch((0, 0)), Access::Miss { .. }));
+        assert!(!s.is_resident((0, 0)));
+        assert_eq!(s.used_bytes(), 0);
+        assert_eq!(s.bypasses, 1);
+    }
+}

@@ -131,6 +131,46 @@ pub fn limitations_memory(out_dir: &Path, cfg: &ExperimentConfig) -> Result<Figu
     Ok(fig)
 }
 
+/// Hot-set coverage: per-layer cumulative routing mass of the top-k
+/// experts ([`crate::moe::RoutingSim::top_p_mass`] — the same ranking
+/// the residency prefetcher and the k_vec-aware pinning use) plus the
+/// HBM bytes that hot set costs. Shows why a small expert cache covers
+/// most traffic on skewed layers and why uniform layers defeat it.
+pub fn hot_set_coverage(out_dir: &Path, cfg: &ExperimentConfig) -> Result<FigureOutput> {
+    use crate::moe::arch::ModelGeom;
+    use crate::perfmodel::loadbalance::LayerRouting;
+    use crate::perfmodel::Hardware;
+
+    let mut fig = FigureOutput::new(
+        "ablation_hot_set_coverage",
+        &["model", "layer", "k", "top_p_mass", "hot_set_gib"],
+    );
+    let hw = Hardware::h100();
+    for name in ["qwen1.5-moe-a2.7b", "olmoe-1b-7b"] {
+        let m = spec(name)?;
+        let geom = ModelGeom::paper_scale(&m);
+        let shard_gib = geom.layer.expert_weight_bytes(hw.dtype_bytes)
+            / m.paper.n_gpus as f64
+            / (1u64 << 30) as f64;
+        let lr = LayerRouting::synthetic(m.n_layers, m.n_experts, cfg.seed);
+        for (j, sim) in lr.sims.iter().enumerate() {
+            let mut k = 1usize;
+            while k <= m.n_experts {
+                fig.row(vec![
+                    name.to_string(),
+                    j.to_string(),
+                    k.to_string(),
+                    f(sim.top_p_mass(k)),
+                    f(k as f64 * shard_gib),
+                ]);
+                k *= 2;
+            }
+        }
+    }
+    fig.emit(out_dir)?;
+    Ok(fig)
+}
+
 /// NAEE dynamic skipping vs LExI static allocation on the top-2 models
 /// (the paper restricts skipping to k_base = 2).
 pub fn dynamic_skip_comparison(out_dir: &Path, cfg: &ExperimentConfig) -> Result<FigureOutput> {
@@ -192,6 +232,26 @@ mod tests {
                 assert!(dp <= ga + 1e-9, "budget {budget}");
                 assert!(ga <= rnd + 1e-9, "budget {budget}: ga {ga} rnd {rnd}");
             }
+        }
+    }
+
+    #[test]
+    fn hot_set_coverage_is_monotone_per_layer() {
+        let out = std::env::temp_dir().join("lexi_ablation_hotset");
+        let cfg = ExperimentConfig::fast();
+        let fig = hot_set_coverage(&out, &cfg).unwrap();
+        assert!(!fig.rows.is_empty());
+        // within one (model, layer), mass grows with k and ends near 1
+        let mut prev: Option<(String, String, f64)> = None;
+        for r in &fig.rows {
+            let mass: f64 = r[3].parse().unwrap();
+            assert!((0.0..=1.0 + 1e-9).contains(&mass));
+            if let Some((m, l, pm)) = &prev {
+                if *m == r[0] && *l == r[1] {
+                    assert!(mass >= *pm - 1e-12, "{}/{} not monotone", r[0], r[1]);
+                }
+            }
+            prev = Some((r[0].clone(), r[1].clone(), mass));
         }
     }
 

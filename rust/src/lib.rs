@@ -18,6 +18,10 @@
 //! - [`lexi`]    — the paper's contribution (Alg. 1 + Alg. 2)
 //! - [`pruning`] — inter / intra / dynamic-skip baselines
 //! - [`perfmodel`] — H100 roofline + load-balance + comm simulator
+//!   (optionally under an HBM expert budget)
+//! - [`experts`] — expert residency subsystem: tiered HBM/host weight
+//!   store, pluggable eviction (LRU / LFU / k_vec-aware pinning), and
+//!   predictive prefetch from routing popularity (`lexi bench-memory`)
 //! - [`runtime`] — model backends: the PJRT bridge (HLO text ->
 //!   compiled executables) and the synthetic host model, both behind
 //!   [`runtime::ModelBackend`]
@@ -35,6 +39,7 @@
 pub mod config;
 pub mod engine;
 pub mod eval;
+pub mod experts;
 pub mod figures;
 pub mod lexi;
 pub mod moe;

@@ -9,9 +9,13 @@
 //!   lexi serve    --model M [--requests N]
 //!   lexi bench-serve [--scenario S] [--replicas N] [--route P]
 //!                    [--backend sim|engine] [--table auto|synthetic|measured]
-//!                    [--ladder replica|cluster] [--pressure queue|slack]
-//!                    [--steal N] [--trace-file F] [--model M] [--requests N]
+//!                    [--ladder replica|cluster] [--pressure queue|slack|slack-ewma]
+//!                    [--steal N] [--steal-cooldown S] [--trace-file F]
+//!                    [--hbm-budget F] [--evict lru|lfu|kvec] [--prefetch on|off]
+//!                    [--model M] [--requests N]
 //!                    multi-replica front-end (sim or real engine replicas)
+//!   lexi bench-memory [--budgets F1,F2] [--evict all|lru,lfu,kvec] [--scenario S]
+//!                    expert-residency sweep: HBM budgets x eviction policies
 //!   lexi figures  --exp fig2|fig3|fig9|figs4-8|table1|all
 //!
 //! Global flags: --artifacts DIR (default ./artifacts), --out DIR
@@ -110,6 +114,7 @@ fn run() -> Result<()> {
         "eval" => cmd_eval(&args)?,
         "serve" => cmd_serve(&args)?,
         "bench-serve" => cmd_bench_serve(&args)?,
+        "bench-memory" => cmd_bench_memory(&args)?,
         "figures" => cmd_figures(&args)?,
         "help" | "--help" | "-h" => print_help(),
         other => {
@@ -123,15 +128,22 @@ fn run() -> Result<()> {
 fn print_help() {
     println!(
         "lexi — LExI MoE inference coordinator\n\
-         commands: table1 | profile | search | optimize | eval | serve | bench-serve | figures\n\
+         commands: table1 | profile | search | optimize | eval | serve | bench-serve |\n\
+                   bench-memory | figures\n\
          flags: --model M --budget B --artifacts DIR --out DIR --iters N --fast\n\
          figures: --exp table1|fig2|fig3|fig9|figs4-8|ablations|all [--models a,b]\n\
          bench-serve: --scenario poisson|bursty|diurnal|closed-loop|flash-crowd|trace-replay|all\n\
                       --replicas N --slots N --route rr|jsq|p2c|classaware --backend sim|engine\n\
                       --table auto|synthetic|measured --ladder replica|cluster\n\
-                      --pressure queue|slack --steal N (steals/instant, 0=off)\n\
+                      --pressure queue|slack|slack-ewma --steal N (steals/instant, 0=off)\n\
+                      --steal-cooldown S (min seconds between steals per replica)\n\
+                      --hbm-budget F (expert HBM budget, fraction of footprint)\n\
+                      --evict lru|lfu|kvec --prefetch on|off\n\
                       --trace-file F (JSONL log for trace-replay)\n\
-                      --requests N --model M --seed S"
+                      --requests N --model M --seed S\n\
+         bench-memory: --budgets F1,F2,.. (fractions) --evict all|lru,lfu,kvec\n\
+                      --scenario S --replicas N --slots N --requests N --prefetch on|off\n\
+                      --model M --seed S"
     );
 }
 
@@ -313,20 +325,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Multi-replica serving benchmark over the `server::` subsystem.
-/// `--backend sim` (default) replays perf-model-calibrated virtual-time
-/// replicas; `--backend engine` drives real `engine::Engine` replicas
-/// through the same front door. The ladder's Stage-1 table source is
-/// controlled by `--table` and logged per run; `--route classaware`,
-/// `--pressure slack`, and `--steal N` switch on the telemetry-driven
-/// control-plane features.
-fn cmd_bench_serve(args: &Args) -> Result<()> {
+/// Shared `ServerConfig` flag parsing for `bench-serve`/`bench-memory`
+/// (`--evict` is intentionally absent: bench-serve takes one policy,
+/// bench-memory sweeps a list).
+fn server_cfg_from_args(args: &Args) -> Result<lexi_moe::config::server::ServerConfig> {
     use lexi_moe::config::server::{
-        BackendKind, LadderScope, PolicyKind, PressureMode, ScenarioKind, ServerConfig, TableMode,
+        BackendKind, LadderScope, PolicyKind, PressureMode, ServerConfig, TableMode,
     };
-
-    let model_name = args.get("model").unwrap_or("qwen1.5-moe-a2.7b");
-    let mspec = spec(model_name)?;
     let mut cfg = ServerConfig::default();
     if let Some(n) = args.get("replicas") {
         cfg.replicas = n.parse().context("--replicas must be an integer")?;
@@ -355,6 +360,25 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
     if let Some(n) = args.get("steal") {
         cfg.steal_bound = n.parse().context("--steal must be an integer (steals per instant)")?;
     }
+    if let Some(s) = args.get("steal-cooldown") {
+        cfg.steal_cooldown_s = s.parse().context("--steal-cooldown must be seconds (f64)")?;
+        anyhow::ensure!(cfg.steal_cooldown_s >= 0.0, "--steal-cooldown must be >= 0");
+    }
+    if let Some(f) = args.get("hbm-budget") {
+        let frac: f64 = f.parse().context("--hbm-budget must be a fraction in (0, 1]")?;
+        anyhow::ensure!(
+            frac > 0.0 && frac <= 1.0,
+            "--hbm-budget is a fraction of the expert footprint in (0, 1]"
+        );
+        cfg.hbm_budget_frac = Some(frac);
+    }
+    if let Some(p) = args.get("prefetch") {
+        cfg.prefetch = match p {
+            "on" | "1" | "true" => true,
+            "off" | "0" | "false" => false,
+            other => anyhow::bail!("--prefetch must be on|off (got '{other}')"),
+        };
+    }
     if let Some(f) = args.get("trace-file") {
         cfg.trace_file = Some(PathBuf::from(f));
     }
@@ -364,6 +388,34 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
     if let Some(s) = args.get("seed") {
         cfg.seed = s.parse().context("--seed must be an integer")?;
     }
+    Ok(cfg)
+}
+
+/// Multi-replica serving benchmark over the `server::` subsystem.
+/// `--backend sim` (default) replays perf-model-calibrated virtual-time
+/// replicas; `--backend engine` drives real `engine::Engine` replicas
+/// through the same front door. The ladder's Stage-1 table source is
+/// controlled by `--table` and logged per run; `--route classaware`,
+/// `--pressure slack|slack-ewma`, `--steal N`, and `--steal-cooldown S`
+/// switch on the telemetry-driven control-plane features;
+/// `--hbm-budget F` puts expert weights under the residency model.
+fn cmd_bench_serve(args: &Args) -> Result<()> {
+    use lexi_moe::config::server::{EvictKind, ScenarioKind};
+
+    let model_name = args.get("model").unwrap_or("qwen1.5-moe-a2.7b");
+    let mspec = spec(model_name)?;
+    let mut cfg = server_cfg_from_args(args)?;
+    // bench-serve takes ONE eviction policy; bench-memory sweeps a list
+    if let Some(e) = args.get("evict") {
+        cfg.evict = EvictKind::parse(e)?;
+    }
+    // residency knobs without a budget are a contradiction, not a no-op
+    anyhow::ensure!(
+        cfg.hbm_budget_frac.is_some()
+            || (args.get("evict").is_none() && args.get("prefetch").is_none()),
+        "--evict/--prefetch configure the expert residency store; \
+         pass --hbm-budget <frac> to enable it"
+    );
     // a trace file implies replay when no scenario was named; naming a
     // different one is a contradiction, not something to ignore
     let scenario_flag = match args.get("scenario") {
@@ -396,6 +448,14 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
         cfg.steal_bound,
         cfg.n_requests
     );
+    if let Some(frac) = cfg.hbm_budget_frac {
+        println!(
+            "expert residency: HBM budget {:.0}% of footprint, evict {}, prefetch {}\n",
+            frac * 100.0,
+            cfg.evict.label(),
+            if cfg.prefetch { "on" } else { "off" }
+        );
+    }
     lexi_moe::server::report::print_header();
     for kind in scenarios {
         cfg.scenario = kind;
@@ -403,6 +463,65 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
         lexi_moe::server::report::print_comparison(&reports);
     }
     println!("reports written to {}", out.display());
+    Ok(())
+}
+
+/// Expert-residency sweep: HBM budgets x eviction policies through the
+/// serving cluster (`lexi bench-memory`). Budgets are fractions of the
+/// model's full per-GPU expert footprint.
+fn cmd_bench_memory(args: &Args) -> Result<()> {
+    use lexi_moe::config::server::{EvictKind, ScenarioKind};
+
+    let model_name = args.get("model").unwrap_or("qwen1.5-moe-a2.7b");
+    let mspec = spec(model_name)?;
+    let mut cfg = server_cfg_from_args(args)?;
+    cfg.scenario = match args.get("scenario") {
+        Some(s) => ScenarioKind::parse(s)?,
+        None => ScenarioKind::Bursty,
+    };
+    let budgets: Vec<f64> = args
+        .get("budgets")
+        .unwrap_or("0.35,0.6")
+        .split(',')
+        .map(|s| {
+            s.trim()
+                .parse::<f64>()
+                .with_context(|| format!("--budgets entry '{s}' is not a number"))
+        })
+        .collect::<Result<_>>()?;
+    let policies: Vec<EvictKind> = match args.get("evict") {
+        None | Some("all") => EvictKind::all().to_vec(),
+        Some(list) => list
+            .split(',')
+            .map(|s| EvictKind::parse(s.trim()))
+            .collect::<Result<_>>()?,
+    };
+
+    let out = args.out_dir();
+    let artifacts = args.artifacts();
+    let artifacts_opt = artifacts.exists().then_some(artifacts.as_path());
+    println!(
+        "=== bench-memory: {model_name}, {} replicas x {} slots, scenario {}, \
+         budgets {:?}, policies {:?}, prefetch {}, {} requests/cell ===\n",
+        cfg.replicas,
+        cfg.slots_per_replica,
+        cfg.scenario.label(),
+        budgets,
+        policies.iter().map(|p| p.label()).collect::<Vec<_>>(),
+        if cfg.prefetch { "on" } else { "off" },
+        cfg.n_requests
+    );
+    let rows = lexi_moe::server::bench_memory(
+        &mspec,
+        &cfg,
+        &budgets,
+        &policies,
+        artifacts_opt,
+        &out,
+    )?;
+    lexi_moe::server::report::print_memory_header();
+    lexi_moe::server::report::print_memory_rows(&rows);
+    println!("\nreports written to {}", out.display());
     Ok(())
 }
 
@@ -456,6 +575,7 @@ fn cmd_figures(args: &Args) -> Result<()> {
     if matches!(exp, "ablations" | "all") {
         figures::ablation::limitations_memory(&out, &cfg)?;
         figures::ablation::dynamic_skip_comparison(&out, &cfg)?;
+        figures::ablation::hot_set_coverage(&out, &cfg)?;
         // allocation-quality ablation over measured tables when present
         if let (Some(rt_ref), Some(man)) = (rt.as_ref(), manifest.as_ref()) {
             for name in ["qwen1.5-moe-a2.7b", "olmoe-1b-7b"] {

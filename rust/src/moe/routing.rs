@@ -38,19 +38,49 @@ impl RoutingSim {
         self.popularity.len()
     }
 
+    /// Expert indices ordered by descending routing probability (ties
+    /// break toward the lower index, so the order is a deterministic
+    /// total order). The "hot set" ranking shared by the residency
+    /// prefetcher, the k_vec-aware pin computation, inter-pruning, and
+    /// the figures — one definition instead of four ad-hoc sorts.
+    pub fn by_popularity(&self) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..self.popularity.len()).collect();
+        order.sort_by(|&a, &b| {
+            self.popularity[b]
+                .total_cmp(&self.popularity[a])
+                .then(a.cmp(&b))
+        });
+        order
+    }
+
+    /// Cumulative routing mass of the `k` most popular experts — the
+    /// probability that a routed token lands in the top-k hot set (1.0
+    /// once `k >= n_experts`). Drives the residency model: it is the
+    /// expected fraction of expert traffic a k-expert HBM cache covers.
+    pub fn top_p_mass(&self, k: usize) -> f64 {
+        self.by_popularity()
+            .into_iter()
+            .take(k)
+            .map(|e| self.popularity[e])
+            .sum()
+    }
+
     /// Restrict to a surviving-expert subset (inter-pruning): removed
     /// experts' probability mass is redistributed onto survivors by
     /// renormalization — the "remaining experts absorb the pruned experts'
     /// tokens" effect.
     pub fn pruned(&self, keep: &[bool]) -> Self {
         assert_eq!(keep.len(), self.popularity.len());
+        // guard: pruning every expert with mass used to yield NaN
+        // popularity; an all-false mask now degrades to all-zero instead
         let kept_mass: f64 = self
             .popularity
             .iter()
             .zip(keep)
             .filter(|(_, &k)| k)
             .map(|(p, _)| p)
-            .sum();
+            .sum::<f64>()
+            .max(1e-12);
         RoutingSim {
             popularity: self
                 .popularity
@@ -144,6 +174,33 @@ mod tests {
         let flat = RoutingSim::new(32, 0.0, &mut rng).load_stats(256, 4, 32, 9);
         let skew = RoutingSim::new(32, 2.0, &mut rng).load_stats(256, 4, 32, 9);
         assert!(skew.imbalance > flat.imbalance);
+    }
+
+    #[test]
+    fn top_p_mass_is_monotone_and_saturates() {
+        let mut rng = Pcg32::seeded(5);
+        let sim = RoutingSim::new(16, 2.0, &mut rng);
+        let mut prev = 0.0;
+        for k in 0..=16 {
+            let m = sim.top_p_mass(k);
+            assert!(m >= prev - 1e-12, "mass not monotone at k={k}");
+            prev = m;
+        }
+        assert_eq!(sim.top_p_mass(0), 0.0);
+        assert!((sim.top_p_mass(16) - 1.0).abs() < 1e-9);
+        assert!((sim.top_p_mass(32) - 1.0).abs() < 1e-9);
+        // the ranking really is by popularity: top-1 mass equals the max
+        let max_p = sim.popularity.iter().cloned().fold(0.0, f64::max);
+        assert!((sim.top_p_mass(1) - max_p).abs() < 1e-12);
+        // skewed routers concentrate more mass in the same top-k
+        let flat = RoutingSim::new(16, 0.0, &mut rng);
+        assert!(sim.top_p_mass(4) > flat.top_p_mass(4));
+    }
+
+    #[test]
+    fn by_popularity_is_a_deterministic_total_order() {
+        let sim = RoutingSim::from_frequencies(&[1.0, 3.0, 3.0, 2.0]);
+        assert_eq!(sim.by_popularity(), vec![1, 2, 3, 0]);
     }
 
     #[test]

@@ -24,6 +24,11 @@ pub struct Hardware {
     pub sm_lanes: usize,
     /// Weight dtype bytes (BF16).
     pub dtype_bytes: usize,
+    /// Sustained host→HBM link bandwidth (B/s; PCIe Gen5 x16 effective)
+    /// — the cost of a non-resident expert under an HBM budget.
+    pub host_link_bw: f64,
+    /// Fixed per-transfer host→HBM issue latency (s).
+    pub host_link_latency: f64,
 }
 
 impl Default for Hardware {
@@ -45,6 +50,8 @@ impl Hardware {
             moe_tile_rows: 64,
             sm_lanes: 32,
             dtype_bytes: 2,
+            host_link_bw: 5.5e10,
+            host_link_latency: 1e-5,
         }
     }
 

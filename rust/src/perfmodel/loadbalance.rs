@@ -41,14 +41,11 @@ impl LayerRouting {
             .map(|sim| {
                 let e = sim.n_experts();
                 let remove = (e as f64 * frac).round() as usize;
-                let mut order: Vec<usize> = (0..e).collect();
-                order.sort_by(|&a, &b| {
-                    sim.popularity[a]
-                        .partial_cmp(&sim.popularity[b])
-                        .unwrap()
-                });
+                // shared popularity ranking (RoutingSim::by_popularity):
+                // drop the tail of the descending order
+                let order = sim.by_popularity();
                 let mut keep = vec![true; e];
-                for &i in order.iter().take(remove.min(e - 1)) {
+                for &i in order.iter().rev().take(remove.min(e - 1)) {
                     keep[i] = false;
                 }
                 sim.pruned(&keep)

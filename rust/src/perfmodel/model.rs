@@ -24,6 +24,10 @@ pub struct PerfBreakdown {
     pub attn_s: f64,
     pub moe_s: f64,
     pub comm_s: f64,
+    /// Host→HBM expert weight traffic under an HBM budget (0 without
+    /// one; included in `moe_s`). The residency subsystem's analytical
+    /// twin — see [`PerfModel::with_hbm_budget_bytes`].
+    pub expert_fetch_s: f64,
     /// Mean over layers of the expected max/mean expert-load ratio.
     pub mean_imbalance: f64,
 }
@@ -35,6 +39,11 @@ pub struct PerfModel {
     pub routing: LayerRouting,
     pub trials: usize,
     pub seed: u64,
+    /// Per-GPU HBM bytes available for expert weights. `None` (the
+    /// default) models the historical assumption: every expert resident
+    /// at zero cost. `Some` adds the expert-traffic term — non-resident
+    /// active experts stream over the host link.
+    pub hbm_expert_budget_bytes: Option<f64>,
 }
 
 impl PerfModel {
@@ -46,6 +55,7 @@ impl PerfModel {
             routing,
             trials: 4,
             seed,
+            hbm_expert_budget_bytes: None,
         }
     }
 
@@ -54,6 +64,58 @@ impl PerfModel {
     pub fn with_calibration(mut self, freq: &[Vec<f32>]) -> Self {
         self.routing = LayerRouting::from_calibration(freq);
         self
+    }
+
+    /// Constrain expert weights to a per-GPU HBM budget: each layer gets
+    /// an even share, the most-popular experts that fit are resident
+    /// (the k_vec-aware pinning the residency subsystem implements), and
+    /// the uncovered routing mass streams over the host link. This is
+    /// the term that lets Stage-2 allocation search trade active experts
+    /// against weight traffic instead of FLOPs alone.
+    pub fn with_hbm_budget_bytes(mut self, bytes: f64) -> Self {
+        self.hbm_expert_budget_bytes = Some(bytes);
+        self
+    }
+
+    /// Fraction of layer `j`'s routed mass NOT covered by the experts
+    /// resident under the budget (0 without a budget), plus the expected
+    /// number of active-but-non-resident experts given `active` distinct
+    /// active experts.
+    fn residency_miss(
+        &self,
+        geom: &LayerGeom,
+        routing: &LayerRouting,
+        j: usize,
+        active: f64,
+    ) -> f64 {
+        let Some(budget) = self.hbm_expert_budget_bytes else {
+            return 0.0;
+        };
+        let g = self.spec.paper.n_gpus as f64;
+        let shard = geom.expert_weight_bytes(self.hw.dtype_bytes) / g;
+        let per_layer = budget / self.spec.n_layers as f64;
+        let resident = (per_layer / shard).floor() as usize;
+        if resident >= geom.n_experts {
+            return 0.0; // everything fits: exactly the historical model
+        }
+        let miss_mass = (1.0 - routing.sims[j].top_p_mass(resident)).max(0.0);
+        if miss_mass < 1e-12 {
+            return 0.0;
+        }
+        // expected non-resident active experts ~ active weighted by the
+        // uncovered mass (popular experts are both the most likely to be
+        // active and the ones pinned resident)
+        miss_mass * active
+    }
+
+    /// Host-link streaming time for `miss_experts` expert shards.
+    fn host_fetch_time(&self, geom: &LayerGeom, miss_experts: f64) -> f64 {
+        if miss_experts <= 0.0 {
+            return 0.0;
+        }
+        let g = self.spec.paper.n_gpus as f64;
+        let bytes = miss_experts * geom.expert_weight_bytes(self.hw.dtype_bytes) / g;
+        self.hw.host_link_latency + bytes / self.hw.host_link_bw
     }
 
     fn geom(&self, t: &Transform) -> ModelGeom {
@@ -106,7 +168,7 @@ impl PerfModel {
         ctx: usize,
         k: f64,
         imbalance_out: &mut f64,
-    ) -> (f64, f64, f64) {
+    ) -> (f64, f64, f64, f64) {
         let hw = &self.hw;
         let g = self.spec.paper.n_gpus;
         let h = geom.hidden;
@@ -154,7 +216,11 @@ impl PerfModel {
         let ar_bytes = (tokens * h * hw.dtype_bytes) as f64;
         let comm = 2.0 * allreduce_time(hw, ar_bytes, g);
 
-        (attn + router, moe_compute + dispatch, comm)
+        // Non-resident active experts stream over the host link.
+        let fetch =
+            self.host_fetch_time(geom, self.residency_miss(geom, routing, j, active as f64));
+
+        (attn + router, moe_compute + dispatch + fetch, comm, fetch)
     }
 
     /// One layer's decode-step time for `batch` sequences at context `ctx`.
@@ -166,7 +232,7 @@ impl PerfModel {
         batch: usize,
         ctx: usize,
         k: f64,
-    ) -> (f64, f64, f64) {
+    ) -> (f64, f64, f64, f64) {
         let hw = &self.hw;
         let g = self.spec.paper.n_gpus;
         let h = geom.hidden;
@@ -197,7 +263,8 @@ impl PerfModel {
 
         let ar_bytes = (batch * h * hw.dtype_bytes) as f64;
         let comm = 2.0 * allreduce_time(hw, ar_bytes, g);
-        (attn, moe, comm)
+        let fetch = self.host_fetch_time(geom, self.residency_miss(geom, routing, j, active));
+        (attn, moe + fetch, comm, fetch)
     }
 
     /// End-to-end throughput under the paper's workload: `batch` requests
@@ -245,11 +312,12 @@ impl PerfModel {
         let prefill_tokens = batch * in_len;
         let mut imb = 0.0;
         for j in 0..geom.n_layers {
-            let (a, m, c) =
+            let (a, m, c, f) =
                 self.layer_prefill(l, &routing, j, prefill_tokens, in_len, ks[j], &mut imb);
             out.attn_s += a;
             out.moe_s += m;
             out.comm_s += c;
+            out.expert_fetch_s += f;
             out.prefill_s += a + m + c;
         }
         out.mean_imbalance = imb / geom.n_layers as f64;
@@ -258,10 +326,11 @@ impl PerfModel {
         let ctx = in_len + out_len / 2;
         let mut step = 0.0;
         for j in 0..geom.n_layers {
-            let (a, m, c) = self.layer_decode(l, &routing, j, batch, ctx, ks[j]);
+            let (a, m, c, f) = self.layer_decode(l, &routing, j, batch, ctx, ks[j]);
             out.attn_s += a * out_len as f64;
             out.moe_s += m * out_len as f64;
             out.comm_s += c * out_len as f64;
+            out.expert_fetch_s += f * out_len as f64;
             step += a + m + c;
         }
         // Unembedding each step.
@@ -355,6 +424,41 @@ mod tests {
         let skip = pm.throughput(&Transform::DynamicSkip { threshold: 0.5 }, 16, 1024, 512);
         assert!(skip.throughput_tok_s >= base.throughput_tok_s * 0.98);
         assert!(skip.throughput_tok_s <= k1.throughput_tok_s * 1.02);
+    }
+
+    #[test]
+    fn hbm_budget_charges_expert_traffic() {
+        let spec = spec("qwen1.5-moe-a2.7b").unwrap();
+        let geom = crate::moe::arch::ModelGeom::paper_scale(&spec);
+        let total = geom.expert_param_count() * 2.0 / spec.paper.n_gpus as f64;
+        let free = model("qwen1.5-moe-a2.7b");
+        let tight = PerfModel::new(spec.clone(), 0).with_hbm_budget_bytes(total * 0.3);
+        let loose = PerfModel::new(spec.clone(), 0).with_hbm_budget_bytes(total * 0.7);
+
+        let b_free = free.throughput(&Transform::Baseline, 16, 1024, 512);
+        let b_tight = tight.throughput(&Transform::Baseline, 16, 1024, 512);
+        let b_loose = loose.throughput(&Transform::Baseline, 16, 1024, 512);
+        // no budget -> no fetch term, identical numbers
+        assert_eq!(b_free.expert_fetch_s, 0.0);
+        // a budget costs throughput, monotonically in tightness
+        assert!(b_tight.expert_fetch_s > b_loose.expert_fetch_s);
+        assert!(b_tight.throughput_tok_s < b_loose.throughput_tok_s);
+        assert!(b_loose.throughput_tok_s <= b_free.throughput_tok_s);
+
+        // LExI's smaller active sets shed proportionally more of the
+        // fetch traffic than the uniform baseline pays (the memory-side
+        // win invisible before this term existed)
+        let lexi = Transform::Lexi {
+            allocation: Allocation::uniform(spec.n_layers, 2),
+        };
+        let l_tight = tight.throughput(&lexi, 16, 1024, 512);
+        assert!(l_tight.expert_fetch_s < b_tight.expert_fetch_s);
+        assert!(l_tight.throughput_tok_s > b_tight.throughput_tok_s);
+        // a budget covering everything is a no-op
+        let roomy = PerfModel::new(spec, 0).with_hbm_budget_bytes(total * 2.0);
+        let b_roomy = roomy.throughput(&Transform::Baseline, 16, 1024, 512);
+        assert_eq!(b_roomy.expert_fetch_s, 0.0);
+        assert!((b_roomy.throughput_tok_s - b_free.throughput_tok_s).abs() < 1e-9);
     }
 
     #[test]

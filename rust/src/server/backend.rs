@@ -15,6 +15,8 @@
 //! (routing, ladder, stealing) consumes the resulting
 //! [`ClusterSnapshot`](super::telemetry::ClusterSnapshot).
 
+use crate::experts::ResidencyStats;
+
 use super::scheduler::QueuedRequest;
 use super::telemetry::{ReplicaTelemetry, StepTimeSummary, TelemetryDetail};
 
@@ -51,6 +53,9 @@ pub struct BackendStats {
     /// Measured step-time distribution (engine backends only; the sim
     /// replica's phases are model outputs, not measurements).
     pub step_times: Option<StepTimeSummary>,
+    /// Expert-residency counters (`None` when the replica ran without a
+    /// residency model — the default).
+    pub residency: Option<ResidencyStats>,
 }
 
 /// One replica behind the cluster front door.

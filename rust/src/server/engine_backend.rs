@@ -174,7 +174,9 @@ impl<'m, M: ModelBackend> ReplicaBackend for EngineReplica<'m, M> {
             class_occupancy: Vec::new(),
             min_slack_s: None,
             min_interactive_slack_frac: None,
+            projected_interactive_slack_frac: None,
             step_ewma_s: self.step_ewma_s,
+            hbm_pressure: self.engine.residency_pressure(),
         };
         if detail == TelemetryDetail::Full {
             t.fill_scans(&self.queue, self.inflight.values().map(|m| m.class), now_s);
@@ -220,6 +222,7 @@ impl<'m, M: ModelBackend> ReplicaBackend for EngineReplica<'m, M> {
             return false;
         }
         let wall = Instant::now();
+        let stall_before_s = self.engine.metrics.expert_stall_s;
         let outcome = match self.engine.step_detail() {
             Ok(o) => o,
             Err(e) => {
@@ -234,6 +237,10 @@ impl<'m, M: ModelBackend> ReplicaBackend for EngineReplica<'m, M> {
             }
         };
         let dt = wall.elapsed().as_secs_f64().max(1e-9);
+        // simulated residency stall extends the step in EVENT-LOOP time
+        // (same contract as the sim replica's stall-inflated phases);
+        // the measured step-time histogram stays pure wall clock
+        let stall_s = self.engine.metrics.expert_stall_s - stall_before_s;
         match outcome.kind {
             StepKind::Idle => return false,
             StepKind::Prefill => self.prefill_calls += 1,
@@ -241,11 +248,11 @@ impl<'m, M: ModelBackend> ReplicaBackend for EngineReplica<'m, M> {
         }
         self.step_samples_s.push(dt);
         self.step_ewma_s = if self.step_ewma_s == 0.0 {
-            dt
+            dt + stall_s
         } else {
-            0.2 * dt + 0.8 * self.step_ewma_s
+            0.2 * (dt + stall_s) + 0.8 * self.step_ewma_s
         };
-        let dur = self.pending_penalty_s + dt;
+        let dur = self.pending_penalty_s + dt + stall_s;
         self.pending_penalty_s = 0.0;
         self.busy_s += dur;
         self.rung_time_s[self.rung.min(self.rung_time_s.len() - 1)] += dur;
@@ -309,6 +316,7 @@ impl<'m, M: ModelBackend> ReplicaBackend for EngineReplica<'m, M> {
             rung_switches: self.rung_switches,
             rung_time_s: self.rung_time_s.clone(),
             step_times,
+            residency: self.engine.residency_stats(),
         }
     }
 }

@@ -285,10 +285,16 @@ impl LadderController {
     }
 
     /// Per-replica pressure reading for the configured signal: queued
-    /// interactive slack fraction under `slack`, +∞ when nothing
-    /// interactive is queued.
-    fn slack_frac(t: &ReplicaTelemetry) -> f64 {
-        t.min_interactive_slack_frac.unwrap_or(f64::INFINITY)
+    /// interactive slack fraction under `slack` (instantaneous) or
+    /// `slack-ewma` (projected one queue-drain horizon forward via the
+    /// step-time EWMA), +∞ when nothing interactive is queued.
+    fn slack_frac_for(t: &ReplicaTelemetry, mode: PressureMode) -> f64 {
+        match mode {
+            PressureMode::SlackEwma => t
+                .projected_interactive_slack_frac
+                .unwrap_or(f64::INFINITY),
+            _ => t.min_interactive_slack_frac.unwrap_or(f64::INFINITY),
+        }
     }
 
     /// Target rung per replica. The cluster applies any change via
@@ -303,10 +309,10 @@ impl LadderController {
                     PressureMode::Queue => self
                         .policy
                         .decide(t.rung, n_rungs, t.queue_len, now, t.last_switch_s),
-                    PressureMode::Slack => self.policy.decide_slack(
+                    PressureMode::Slack | PressureMode::SlackEwma => self.policy.decide_slack(
                         t.rung,
                         n_rungs,
-                        Self::slack_frac(t),
+                        Self::slack_frac_for(t, self.policy.pressure),
                         now,
                         t.last_switch_s,
                     ),
@@ -348,27 +354,34 @@ impl LadderController {
                     mean_q < self.policy.upgrade_below as f64,
                 )
             }
-            PressureMode::Slack => {
-                let worst = snap.min_interactive_slack_frac();
+            PressureMode::Slack | PressureMode::SlackEwma => {
+                let worst = match self.policy.pressure {
+                    PressureMode::SlackEwma => snap.min_projected_interactive_slack_frac(),
+                    _ => snap.min_interactive_slack_frac(),
+                };
                 (
                     worst < self.policy.slack_degrade_frac,
                     worst > self.policy.slack_upgrade_frac,
                 )
             }
         };
+        let mode = self.policy.pressure;
         let mut order: Vec<usize> = (0..views.len()).collect();
         if overloaded {
             // overload: spread degradation — highest-quality replicas
             // first, most-pressured breaking ties
-            match self.policy.pressure {
+            match mode {
                 PressureMode::Queue => order.sort_by_key(|&i| {
                     (views[i].rung, std::cmp::Reverse(views[i].queue_len), i)
                 }),
-                PressureMode::Slack => order.sort_by(|&a, &b| {
+                PressureMode::Slack | PressureMode::SlackEwma => order.sort_by(|&a, &b| {
                     views[a]
                         .rung
                         .cmp(&views[b].rung)
-                        .then(Self::slack_frac(&views[a]).total_cmp(&Self::slack_frac(&views[b])))
+                        .then(
+                            Self::slack_frac_for(&views[a], mode)
+                                .total_cmp(&Self::slack_frac_for(&views[b], mode)),
+                        )
                         .then(a.cmp(&b))
                 }),
             }
@@ -389,15 +402,18 @@ impl LadderController {
         } else if drained {
             // drained: most-degraded replicas recover first,
             // least-pressured breaking ties
-            match self.policy.pressure {
+            match mode {
                 PressureMode::Queue => order.sort_by_key(|&i| {
                     (std::cmp::Reverse(views[i].rung), views[i].queue_len, i)
                 }),
-                PressureMode::Slack => order.sort_by(|&a, &b| {
+                PressureMode::Slack | PressureMode::SlackEwma => order.sort_by(|&a, &b| {
                     views[b]
                         .rung
                         .cmp(&views[a].rung)
-                        .then(Self::slack_frac(&views[b]).total_cmp(&Self::slack_frac(&views[a])))
+                        .then(
+                            Self::slack_frac_for(&views[b], mode)
+                                .total_cmp(&Self::slack_frac_for(&views[a], mode)),
+                        )
                         .then(a.cmp(&b))
                 }),
             }
@@ -610,6 +626,42 @@ mod tests {
         // inside the hysteresis band: hold
         let t = ctl.decide(&snap(3.0, vec![slack_view(0, 2, Some(0.5))]), 4);
         assert_eq!(t, vec![2]);
+    }
+
+    #[test]
+    fn slack_ewma_degrades_on_projected_collapse_before_instantaneous() {
+        let p = LadderPolicy {
+            min_dwell_s: 0.0,
+            scope: LadderScope::PerReplica,
+            pressure: PressureMode::SlackEwma,
+            slack_degrade_frac: 0.25,
+            slack_upgrade_frac: 0.75,
+            degrade_above: 1_000_000,
+            upgrade_below: 0,
+            ..Default::default()
+        };
+        // instantaneous slack healthy (0.5) but the EWMA projection says
+        // the backlog will burn it to 0.1 before service starts
+        let mut t = ReplicaTelemetry::idle(0);
+        t.min_interactive_slack_frac = Some(0.5);
+        t.projected_interactive_slack_frac = Some(0.1);
+
+        let mut predictive = LadderController::new(p);
+        assert_eq!(predictive.decide(&snap(1.0, vec![t.clone()]), 4), vec![1]);
+        // the instantaneous controller holds on the same telemetry
+        let mut inst = LadderController::new(LadderPolicy {
+            pressure: PressureMode::Slack,
+            ..p
+        });
+        assert_eq!(inst.decide(&snap(1.0, vec![t.clone()]), 4), vec![0]);
+
+        // cluster scope consumes the projected aggregate the same way
+        let mut cluster = LadderController::new(LadderPolicy {
+            scope: LadderScope::Cluster,
+            max_switches_per_instant: 1,
+            ..p
+        });
+        assert_eq!(cluster.decide(&snap(2.0, vec![t]), 4), vec![1]);
     }
 
     #[test]

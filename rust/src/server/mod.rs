@@ -32,6 +32,12 @@
 //!   the event loop
 //! - [`ladder`]    — LExI quality ladder + cluster-global controller
 //! - [`report`]    — TTFT/TPOT percentiles, goodput-under-SLO, CSV/JSON
+//!
+//! With `--hbm-budget` every replica additionally carries an
+//! [`ExpertResidency`](crate::experts::ExpertResidency) model: expert
+//! weights live in a tiered HBM/host store, demand misses stall phases,
+//! rung switches prewarm the pinned hot set, and `lexi bench-memory`
+//! sweeps budgets x eviction policies ([`bench_memory`]).
 
 pub mod backend;
 pub mod engine_backend;
@@ -50,9 +56,10 @@ use std::rc::Rc;
 use anyhow::{bail, Result};
 
 use crate::config::model::ModelSpec;
-use crate::config::server::{BackendKind, ServerConfig, TableMode};
+use crate::config::server::{BackendKind, EvictKind, ScenarioKind, ServerConfig, TableMode};
 use crate::config::serving::ServingConfig;
 use crate::engine::Engine;
+use crate::experts::{ExpertResidency, ResidencyConfig};
 use crate::lexi::SensitivityTable;
 use crate::moe::allocation::Allocation;
 use crate::moe::transform::Transform;
@@ -63,7 +70,7 @@ pub use backend::{BackendStats, CompletedRequest, ReplicaBackend};
 pub use engine_backend::EngineReplica;
 pub use ladder::{LadderController, LadderPolicy, QualityLadder, Rung};
 pub use replica::{Replica, ServiceModel};
-pub use report::TransformReport;
+pub use report::{MemoryReport, TransformReport};
 pub use router::{Cluster, RoutingPolicy, RunResult};
 pub use scheduler::{AdmissionControl, EdfQueue, QueuedRequest};
 pub use telemetry::{ClusterSnapshot, ReplicaTelemetry, StepTimeSummary, TelemetryDetail};
@@ -245,15 +252,15 @@ pub fn bench_serve(
     let trace = scenario.generate(cfg.n_requests, cfg.seed);
 
     let reports = match cfg.backend {
-        BackendKind::Sim => sim_reports(&line_up, &scenario, &trace, cfg),
+        BackendKind::Sim => sim_reports(spec, &line_up, &scenario, &trace, cfg),
         BackendKind::Engine => match try_real_runtime(spec, artifacts) {
             Some(model) => {
                 println!("engine backend: compiled PJRT runtime ({})", spec.name);
-                engine_reports(&model, &line_up, &scenario, &trace, cfg)?
+                engine_reports(spec, &model, &line_up, &scenario, &trace, cfg)?
             }
             None => {
                 let model = synthetic_engine_model(spec, cfg, &scenario);
-                engine_reports(&model, &line_up, &scenario, &trace, cfg)?
+                engine_reports(spec, &model, &line_up, &scenario, &trace, cfg)?
             }
         },
     };
@@ -270,8 +277,133 @@ pub fn bench_serve(
     Ok(reports)
 }
 
+/// `lexi bench-memory`: sweep HBM budgets x eviction policies over the
+/// adaptive LExI ladder on one scenario, reporting residency hit rates,
+/// stall percentiles, and the resulting serving quality per cell — the
+/// memory-constrained regime where layer-adaptive active experts beat
+/// uniform top-k on weight traffic, not just FLOPs. Budgets are
+/// fractions of the model's full per-GPU expert footprint.
+pub fn bench_memory(
+    spec: &ModelSpec,
+    cfg: &ServerConfig,
+    budgets: &[f64],
+    policies: &[EvictKind],
+    artifacts: Option<&Path>,
+    out_dir: &Path,
+) -> Result<Vec<MemoryReport>> {
+    anyhow::ensure!(!budgets.is_empty(), "bench-memory needs at least one --budgets entry");
+    anyhow::ensure!(!policies.is_empty(), "bench-memory needs at least one eviction policy");
+    anyhow::ensure!(
+        budgets.iter().all(|&f| f > 0.0 && f <= 1.0),
+        "--budgets entries must be fractions in (0, 1]"
+    );
+    anyhow::ensure!(
+        cfg.scenario != ScenarioKind::TraceReplay,
+        "bench-memory sweeps generative scenarios (got trace-replay)"
+    );
+    let (table, source) = sensitivity_table_sourced(spec, artifacts, cfg.seed, cfg.table_mode)?;
+    println!("ladder Stage-1 table source: {source}");
+    let pm = PerfModel::new(spec.clone(), cfg.seed);
+    let ladder = QualityLadder::for_model(spec, &table, cfg, &pm)?;
+    let base_svc = &ladder.rungs[0].service;
+
+    // the identical workload contract across every sweep cell
+    let slack = 2.0 * base_svc.step_time(cfg.slots_per_replica);
+    let mut scenario = Scenario::from_kind(cfg.scenario, estimate_capacity(base_svc, cfg));
+    scenario.resolve_slos(
+        |tokens| base_svc.prefill_time(tokens * cfg.slots_per_replica) + slack,
+        base_svc.step_time(cfg.slots_per_replica),
+    );
+    let trace = scenario.generate(cfg.n_requests, cfg.seed);
+
+    // per-GPU expert footprint: the unit --budgets fractions refer to
+    let geom = crate::moe::arch::ModelGeom::paper_scale(spec);
+    let hw = crate::perfmodel::Hardware::h100();
+    let per_gpu_bytes = geom.expert_param_count() * hw.dtype_bytes as f64
+        / spec.paper.n_gpus as f64;
+
+    let mut rows = Vec::new();
+    for &frac in budgets {
+        // analytical cross-check: the perf model's expert-traffic term
+        // under the same budget (baseline transform, service shape)
+        let pm_tok_s = PerfModel::new(spec.clone(), cfg.seed)
+            .with_hbm_budget_bytes(frac * per_gpu_bytes)
+            .throughput(
+                &Transform::Baseline,
+                cfg.slots_per_replica,
+                cfg.service_in_len,
+                cfg.service_out_len,
+            )
+            .throughput_tok_s;
+        for &policy in policies {
+            let mut cell = cfg.clone();
+            cell.hbm_budget_frac = Some(frac);
+            cell.evict = policy;
+            let contender = Contender {
+                label: "lexi-ladder",
+                ladder: ladder.clone(),
+                adaptive: true,
+            };
+            let reports = sim_reports(
+                spec,
+                std::slice::from_ref(&contender),
+                &scenario,
+                &trace,
+                &cell,
+            );
+            let r = &reports[0];
+            let agg = r
+                .residency_aggregate()
+                .expect("budgeted run must report residency");
+            rows.push(MemoryReport {
+                scenario: scenario.name.to_string(),
+                transform: r.transform.clone(),
+                budget_frac: frac,
+                policy: policy.label(),
+                prefetch: cell.prefetch,
+                hit_rate: agg.hit_rate(),
+                prefetch_hits: agg.prefetch_hits,
+                evictions: agg.evictions,
+                stall_total_s: agg.stall_s,
+                stall_p50_s: agg.stall_p50_s,
+                stall_p95_s: agg.stall_p95_s,
+                goodput_rps: r.goodput_rps,
+                throughput_tok_s: r.throughput_tok_s,
+                ttft_p95_s: r.ttft_p95_s,
+                pm_tok_s,
+            });
+        }
+    }
+    let stem = format!("bench_memory_{}_{}", spec.name, scenario.name);
+    report::write_memory_csv(&out_dir.join(format!("{stem}.csv")), &rows)?;
+    report::write_memory_json(&out_dir.join(format!("{stem}.json")), &rows)?;
+    Ok(rows)
+}
+
+/// Residency model for one replica under `--hbm-budget` (`None` keeps
+/// the historical every-expert-resident behavior). `overlap_s` is the
+/// per-step compute window transfers can hide behind.
+fn replica_residency(
+    spec: &ModelSpec,
+    cfg: &ServerConfig,
+    k_vec: Vec<i32>,
+    replica: usize,
+    overlap_s: Option<f64>,
+) -> Option<ExpertResidency> {
+    let frac = cfg.hbm_budget_frac?;
+    let mut rc = ResidencyConfig::for_model(spec, frac, cfg.evict, cfg.seed);
+    rc.prefetch = cfg.prefetch;
+    if let Some(o) = overlap_s {
+        rc.overlap_s_per_step = o;
+    }
+    Some(ExpertResidency::new(&rc, k_vec, replica as u64))
+}
+
 /// The PR 1 path: virtual-time replicas, bit-identical from the seed.
+/// With `--hbm-budget`, every replica additionally carries an expert
+/// residency model whose miss stalls inflate its phase durations.
 fn sim_reports(
+    spec: &ModelSpec,
     line_up: &[Contender],
     scenario: &Scenario,
     trace: &Trace,
@@ -281,18 +413,31 @@ fn sim_reports(
     for c in line_up {
         let quality: Vec<f64> = c.ladder.rungs.iter().map(|r| r.quality_loss).collect();
         let policy = c.adaptive.then(|| LadderPolicy::from_config(cfg));
-        let mut cluster = Cluster::new(
-            cfg.replicas,
-            cfg.slots_per_replica,
+        let ladder = Rc::new(c.ladder.clone());
+        // residency transfers overlap with one full-batch decode step
+        let overlap = ladder.rungs[0].service.step_time(cfg.slots_per_replica);
+        let backends: Vec<Box<dyn ReplicaBackend>> = (0..cfg.replicas)
+            .map(|i| {
+                let mut r = Replica::new(i, cfg.slots_per_replica, Rc::clone(&ladder));
+                let res = replica_residency(spec, cfg, ladder.k_vec(0), i, Some(overlap));
+                if let Some(res) = res {
+                    r = r.with_residency(res);
+                }
+                Box::new(r) as Box<dyn ReplicaBackend>
+            })
+            .collect();
+        let mut cluster = Cluster::from_backends(
+            backends,
             cfg.policy,
-            c.ladder.clone(),
+            ladder,
             policy,
             cfg.queue_cap,
             scenario.profiles.len(),
             cfg.reconfig_penalty_s,
             cfg.seed,
         )
-        .with_stealing(cfg.steal_bound);
+        .with_stealing(cfg.steal_bound)
+        .with_steal_cooldown(cfg.steal_cooldown_s);
         let res = cluster.run(scenario, trace);
         reports.push(TransformReport::from_run(
             scenario,
@@ -309,6 +454,7 @@ fn sim_reports(
 /// a fresh cluster of `Engine`s over `model`, phases timed by wall
 /// clock.
 fn engine_reports<M: ModelBackend>(
+    spec: &ModelSpec,
     model: &M,
     line_up: &[Contender],
     scenario: &Scenario,
@@ -344,12 +490,15 @@ fn engine_reports<M: ModelBackend>(
         let policy = c.adaptive.then(|| LadderPolicy::from_config(cfg));
         let mut backends: Vec<Box<dyn ReplicaBackend + '_>> = Vec::new();
         for i in 0..cfg.replicas {
-            let engine = Engine::new(
+            let mut engine = Engine::new(
                 model,
                 scfg.clone(),
                 ladder.k_vec(0),
                 vec![0.0f32; entry.n_layers * entry.n_experts],
             )?;
+            if let Some(res) = replica_residency(spec, cfg, ladder.k_vec(0), i, None) {
+                engine.set_residency(res)?;
+            }
             backends.push(Box::new(EngineReplica::new(i, engine, Rc::clone(&ladder))));
         }
         let mut cluster = Cluster::from_backends(
@@ -362,7 +511,8 @@ fn engine_reports<M: ModelBackend>(
             cfg.reconfig_penalty_s,
             cfg.seed,
         )
-        .with_stealing(cfg.steal_bound);
+        .with_stealing(cfg.steal_bound)
+        .with_steal_cooldown(cfg.steal_cooldown_s);
         let res = cluster.run(scenario, trace);
         reports.push(TransformReport::from_run(
             scenario,
@@ -465,6 +615,84 @@ mod tests {
         }
         assert!(out.join("bench_serve_minicpm-moe-8x2b_poisson.csv").exists());
         assert!(out.join("bench_serve_minicpm-moe-8x2b_poisson.json").exists());
+    }
+
+    #[test]
+    fn bench_serve_with_hbm_budget_reports_residency() {
+        let m = spec("minicpm-moe-8x2b").unwrap();
+        let cfg = ServerConfig {
+            replicas: 2,
+            slots_per_replica: 4,
+            n_requests: 32,
+            scenario: ScenarioKind::Poisson,
+            service_in_len: 256,
+            service_out_len: 32,
+            hbm_budget_frac: Some(0.4),
+            ..Default::default()
+        };
+        let out = std::env::temp_dir().join("lexi_bench_serve_residency_test");
+        let _ = std::fs::remove_dir_all(&out);
+        let reports = bench_serve(&m, &cfg, None, &out).unwrap();
+        for r in &reports {
+            let agg = r.residency_aggregate().expect("budget set -> residency stats");
+            assert!(agg.hits + agg.misses > 0, "{}: nothing demanded", r.transform);
+            assert!(agg.hit_rate() >= 0.0 && agg.hit_rate() <= 1.0);
+        }
+        // the emitted JSON carries the residency block
+        let json = crate::util::json::parse_file(
+            &out.join("bench_serve_minicpm-moe-8x2b_poisson.json"),
+        )
+        .unwrap();
+        assert!(json.as_arr().unwrap()[0].get("expert_hit_rate").is_ok());
+    }
+
+    #[test]
+    fn bench_memory_sweeps_budgets_and_policies() {
+        let m = spec("minicpm-moe-8x2b").unwrap();
+        let cfg = ServerConfig {
+            replicas: 2,
+            slots_per_replica: 4,
+            n_requests: 24,
+            scenario: ScenarioKind::Bursty,
+            service_in_len: 256,
+            service_out_len: 32,
+            ..Default::default()
+        };
+        let out = std::env::temp_dir().join("lexi_bench_memory_test");
+        let _ = std::fs::remove_dir_all(&out);
+        let budgets = [0.3, 0.8];
+        let policies = EvictKind::all();
+        let rows = bench_memory(&m, &cfg, &budgets, &policies, None, &out).unwrap();
+        assert_eq!(rows.len(), budgets.len() * policies.len());
+        for r in &rows {
+            assert!((0.0..=1.0).contains(&r.hit_rate), "{r:?}");
+            assert!(r.stall_p95_s >= r.stall_p50_s - 1e-12);
+            assert!(r.throughput_tok_s > 0.0 && r.pm_tok_s > 0.0);
+        }
+        // more HBM cannot hurt the hit rate for a fixed policy
+        for policy in policies {
+            let tight = rows
+                .iter()
+                .find(|r| r.budget_frac == 0.3 && r.policy == policy.label())
+                .unwrap();
+            let roomy = rows
+                .iter()
+                .find(|r| r.budget_frac == 0.8 && r.policy == policy.label())
+                .unwrap();
+            assert!(
+                roomy.hit_rate >= tight.hit_rate - 1e-9,
+                "{}: roomy {} < tight {}",
+                policy.label(),
+                roomy.hit_rate,
+                tight.hit_rate
+            );
+        }
+        assert!(out.join("bench_memory_minicpm-moe-8x2b_bursty.csv").exists());
+        assert!(out.join("bench_memory_minicpm-moe-8x2b_bursty.json").exists());
+        // replay is not a generative scenario
+        let mut bad = cfg;
+        bad.scenario = ScenarioKind::TraceReplay;
+        assert!(bench_memory(&m, &bad, &budgets, &policies, None, &out).is_err());
     }
 
     #[test]

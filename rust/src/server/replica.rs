@@ -12,6 +12,7 @@
 
 use std::rc::Rc;
 
+use crate::experts::ExpertResidency;
 use crate::moe::transform::Transform;
 use crate::perfmodel::PerfModel;
 
@@ -119,6 +120,10 @@ pub struct Replica {
     pub slots: Vec<Option<SimSlot>>,
     ladder: Rc<QualityLadder>,
     phase: Phase,
+    /// Optional expert-residency model: phase durations absorb its
+    /// demand-miss stall time, rung switches repin the hot set, and the
+    /// stats land in [`BackendStats::residency`].
+    residency: Option<ExpertResidency>,
     /// Current quality-ladder rung (0 = full quality).
     pub rung: usize,
     pub last_switch_s: f64,
@@ -143,6 +148,7 @@ impl Replica {
             slots: (0..slots).map(|_| None).collect(),
             ladder,
             phase: Phase::Idle,
+            residency: None,
             rung: 0,
             last_switch_s: f64::NEG_INFINITY,
             pending_penalty_s: 0.0,
@@ -153,6 +159,18 @@ impl Replica {
             rung_switches: 0,
             rung_time_s: vec![0.0; n_rungs.max(1)],
         }
+    }
+
+    /// Attach an expert-residency model (already pinned for the current
+    /// rung's `k_vec` — see [`ExpertResidency::new`]).
+    pub fn with_residency(mut self, residency: ExpertResidency) -> Self {
+        assert_eq!(
+            residency.n_layers(),
+            self.ladder.k_vec(self.rung).len(),
+            "residency layer count != ladder k_vec length"
+        );
+        self.residency = Some(residency);
+        self
     }
 
     pub fn n_active(&self) -> usize {
@@ -188,13 +206,18 @@ impl Replica {
         }
     }
 
-    /// Switch ladder rungs; charges `penalty_s` to the next phase.
+    /// Switch ladder rungs; charges `penalty_s` to the next phase. With
+    /// a residency model, the rung's `k_vec` invalidates and prewarms
+    /// the pinned hot set.
     pub fn set_rung(&mut self, rung: usize, now: f64, penalty_s: f64) {
         if rung != self.rung {
             self.rung = rung;
             self.last_switch_s = now;
             self.rung_switches += 1;
             self.pending_penalty_s += penalty_s;
+            if let Some(r) = &mut self.residency {
+                r.set_k_vec(&self.ladder.k_vec(rung));
+            }
         }
     }
 
@@ -228,7 +251,13 @@ impl Replica {
                 });
                 slot_idxs.push(idx);
             }
-            let dur = self.pending_penalty_s + svc.prefill_time(prompt_tokens);
+            // residency: the batched prefill demands every layer's
+            // routed experts; misses stall the phase
+            let stall = self
+                .residency
+                .as_mut()
+                .map_or(0.0, |r| r.step(prompt_tokens.max(1)).stall_s);
+            let dur = self.pending_penalty_s + svc.prefill_time(prompt_tokens) + stall;
             self.pending_penalty_s = 0.0;
             self.account(dur);
             self.prefill_calls += 1;
@@ -238,7 +267,9 @@ impl Replica {
             };
             true
         } else if self.n_active() > 0 {
-            let dur = self.pending_penalty_s + svc.step_time(self.n_active());
+            let active = self.n_active();
+            let stall = self.residency.as_mut().map_or(0.0, |r| r.step(active).stall_s);
+            let dur = self.pending_penalty_s + svc.step_time(active) + stall;
             self.pending_penalty_s = 0.0;
             self.account(dur);
             self.decode_steps += 1;
@@ -274,7 +305,9 @@ impl Replica {
             class_occupancy: Vec::new(),
             min_slack_s: None,
             min_interactive_slack_frac: None,
+            projected_interactive_slack_frac: None,
             step_ewma_s: self.step_ewma_s,
+            hbm_pressure: self.residency.as_ref().map(|r| r.pressure()),
         };
         if detail == TelemetryDetail::Full {
             t.fill_scans(&self.queue, self.slots.iter().flatten().map(|s| s.req.class), now_s);
@@ -376,6 +409,7 @@ impl ReplicaBackend for Replica {
             rung_switches: self.rung_switches,
             rung_time_s: self.rung_time_s.clone(),
             step_times: None,
+            residency: self.residency.as_ref().map(|r| r.stats()),
         }
     }
 }
@@ -528,6 +562,32 @@ mod tests {
         assert_eq!(light.queue_len, 1);
         assert!(light.class_occupancy.is_empty());
         assert!(light.min_slack_s.is_none());
+    }
+
+    #[test]
+    fn residency_stall_inflates_phase_durations() {
+        use crate::config::server::EvictKind;
+        use crate::experts::{ExpertResidency, ResidencyConfig};
+        let ladder = fixed_ladder(0.01, 2);
+        let mk = || {
+            // tight budget, no prefetch: cold misses must stall
+            let mut cfg = ResidencyConfig::for_dims(4, 8, 1 << 20, 0.25, EvictKind::Lru, 3);
+            cfg.prefetch = false;
+            ExpertResidency::new(&cfg, ladder.k_vec(0), 0)
+        };
+        let mut cold = Replica::new(0, 2, Rc::clone(&ladder)).with_residency(mk());
+        let mut free = Replica::new(1, 2, Rc::clone(&ladder));
+        cold.queue.push(queued(0, 100, 3));
+        free.queue.push(queued(0, 100, 3));
+        assert!(cold.try_start(0.0) && free.try_start(0.0));
+        // the stalled prefill finishes strictly later
+        assert!(cold.next_event_s().unwrap() > free.next_event_s().unwrap());
+        let stats = ReplicaBackend::stats(&cold).residency.unwrap();
+        assert!(stats.misses > 0 && stats.stall_s > 0.0);
+        assert!(ReplicaBackend::stats(&free).residency.is_none());
+        // pressure surfaces in telemetry only for the residency replica
+        assert!(cold.telemetry(0.0, TelemetryDetail::Load).hbm_pressure.is_some());
+        assert!(free.telemetry(0.0, TelemetryDetail::Load).hbm_pressure.is_none());
     }
 
     #[test]

@@ -10,6 +10,7 @@ use std::path::Path;
 use anyhow::Result;
 
 use crate::csv_row;
+use crate::experts::ResidencyStats;
 use crate::util::csv::CsvWriter;
 use crate::util::json::Json;
 use crate::util::stats::percentile_sorted;
@@ -63,6 +64,10 @@ pub struct TransformReport {
     /// the sim `ServiceModel` calibration input. `None` on the sim
     /// backend, whose step times are model outputs.
     pub step_time_per_replica: Option<Vec<StepTimeSummary>>,
+    /// Per-replica expert-residency counters. `None` unless the run
+    /// carried an HBM budget (`--hbm-budget`), so default artifacts
+    /// keep their historical byte layout.
+    pub residency_per_replica: Option<Vec<ResidencyStats>>,
 }
 
 /// Did a completion meet its class SLO?
@@ -144,7 +149,24 @@ impl TransformReport {
                         .map(|s| s.clone().unwrap_or_default())
                         .collect()
                 }),
+            residency_per_replica: res
+                .residency_per_replica
+                .iter()
+                .any(|r| r.is_some())
+                .then(|| {
+                    res.residency_per_replica
+                        .iter()
+                        .map(|r| r.clone().unwrap_or_default())
+                        .collect()
+                }),
         }
+    }
+
+    /// Cluster-aggregate residency counters (`None` without a budget).
+    pub fn residency_aggregate(&self) -> Option<ResidencyStats> {
+        self.residency_per_replica
+            .as_ref()
+            .map(|per| ResidencyStats::aggregate(per.iter()))
     }
 
     pub fn to_json(&self) -> Json {
@@ -215,7 +237,172 @@ impl TransformReport {
                 ),
             ));
         }
+        if let Some(per) = &self.residency_per_replica {
+            let agg = ResidencyStats::aggregate(per.iter());
+            pairs.push(("expert_hit_rate", Json::Num(agg.hit_rate())));
+            pairs.push(("expert_stall_s", Json::Num(agg.stall_s)));
+            pairs.push((
+                "residency_per_replica",
+                Json::Arr(per.iter().map(residency_json).collect()),
+            ));
+        }
         Json::obj(pairs)
+    }
+}
+
+/// JSON view of one replica's residency counters.
+fn residency_json(s: &ResidencyStats) -> Json {
+    Json::obj(vec![
+        ("hits", Json::Num(s.hits as f64)),
+        ("misses", Json::Num(s.misses as f64)),
+        ("hit_rate", Json::Num(s.hit_rate())),
+        ("prefetch_issued", Json::Num(s.prefetch_issued as f64)),
+        ("prefetch_hits", Json::Num(s.prefetch_hits as f64)),
+        ("evictions", Json::Num(s.evictions as f64)),
+        ("bypasses", Json::Num(s.bypasses as f64)),
+        ("stall_s", Json::Num(s.stall_s)),
+        ("stall_p50_s", Json::Num(s.stall_p50_s)),
+        ("stall_p95_s", Json::Num(s.stall_p95_s)),
+        ("steps", Json::Num(s.steps as f64)),
+        ("hbm_budget_bytes", Json::Num(s.hbm_budget_bytes as f64)),
+        ("hbm_used_bytes", Json::Num(s.hbm_used_bytes as f64)),
+    ])
+}
+
+/// One `lexi bench-memory` sweep cell: a (HBM budget, eviction policy)
+/// pair run through the full serving cluster, with the residency
+/// counters and the resulting serving quality side by side.
+#[derive(Clone, Debug)]
+pub struct MemoryReport {
+    pub scenario: String,
+    pub transform: String,
+    /// HBM budget as a fraction of the full expert footprint.
+    pub budget_frac: f64,
+    pub policy: &'static str,
+    pub prefetch: bool,
+    pub hit_rate: f64,
+    pub prefetch_hits: u64,
+    pub evictions: u64,
+    pub stall_total_s: f64,
+    pub stall_p50_s: f64,
+    pub stall_p95_s: f64,
+    pub goodput_rps: f64,
+    pub throughput_tok_s: f64,
+    pub ttft_p95_s: f64,
+    /// Analytical cross-check: perf-model baseline throughput under the
+    /// same budget (the `PerfModel::with_hbm_budget_bytes` term).
+    pub pm_tok_s: f64,
+}
+
+pub const MEMORY_CSV_HEADER: [&str; 15] = [
+    "scenario",
+    "transform",
+    "budget_frac",
+    "policy",
+    "prefetch",
+    "hit_rate",
+    "prefetch_hits",
+    "evictions",
+    "stall_total_s",
+    "stall_p50_ms",
+    "stall_p95_ms",
+    "goodput_rps",
+    "throughput_tok_s",
+    "ttft_p95_ms",
+    "pm_tok_s",
+];
+
+/// Write one CSV row per bench-memory cell.
+pub fn write_memory_csv(path: &Path, reports: &[MemoryReport]) -> Result<()> {
+    let mut w = CsvWriter::create(path, &MEMORY_CSV_HEADER)?;
+    for r in reports {
+        csv_row!(
+            w,
+            r.scenario,
+            r.transform,
+            format!("{:.3}", r.budget_frac),
+            r.policy,
+            r.prefetch,
+            format!("{:.4}", r.hit_rate),
+            r.prefetch_hits,
+            r.evictions,
+            format!("{:.4}", r.stall_total_s),
+            format!("{:.4}", r.stall_p50_s * 1e3),
+            format!("{:.4}", r.stall_p95_s * 1e3),
+            format!("{:.4}", r.goodput_rps),
+            format!("{:.1}", r.throughput_tok_s),
+            format!("{:.2}", r.ttft_p95_s * 1e3),
+            format!("{:.1}", r.pm_tok_s),
+        )?;
+    }
+    Ok(())
+}
+
+/// Write the bench-memory sweep as JSON.
+pub fn write_memory_json(path: &Path, reports: &[MemoryReport]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let v = Json::Arr(
+        reports
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("scenario", Json::Str(r.scenario.clone())),
+                    ("transform", Json::Str(r.transform.clone())),
+                    ("budget_frac", Json::Num(r.budget_frac)),
+                    ("policy", Json::Str(r.policy.to_string())),
+                    ("prefetch", Json::Num(r.prefetch as u8 as f64)),
+                    ("hit_rate", Json::Num(r.hit_rate)),
+                    ("prefetch_hits", Json::Num(r.prefetch_hits as f64)),
+                    ("evictions", Json::Num(r.evictions as f64)),
+                    ("stall_total_s", Json::Num(r.stall_total_s)),
+                    ("stall_p50_s", Json::Num(r.stall_p50_s)),
+                    ("stall_p95_s", Json::Num(r.stall_p95_s)),
+                    ("goodput_rps", Json::Num(r.goodput_rps)),
+                    ("throughput_tok_s", Json::Num(r.throughput_tok_s)),
+                    ("ttft_p95_s", Json::Num(r.ttft_p95_s)),
+                    ("pm_tok_s", Json::Num(r.pm_tok_s)),
+                ])
+            })
+            .collect(),
+    );
+    std::fs::write(path, v.to_string_pretty())?;
+    Ok(())
+}
+
+/// Print the bench-memory sweep as a table.
+pub fn print_memory_header() {
+    println!(
+        "{:<12} {:>7} {:<6} {:>8} {:>8} {:>9} {:>11} {:>11} {:>8} {:>10}",
+        "transform",
+        "budget",
+        "evict",
+        "prefetch",
+        "hitrate",
+        "stall_s",
+        "stall50ms",
+        "stall95ms",
+        "goodput",
+        "tok/s"
+    );
+}
+
+pub fn print_memory_rows(reports: &[MemoryReport]) {
+    for r in reports {
+        println!(
+            "{:<12} {:>7.2} {:<6} {:>8} {:>7.1}% {:>9.3} {:>11.3} {:>11.3} {:>8.3} {:>10.1}",
+            r.transform,
+            r.budget_frac,
+            r.policy,
+            if r.prefetch { "on" } else { "off" },
+            r.hit_rate * 100.0,
+            r.stall_total_s,
+            r.stall_p50_s * 1e3,
+            r.stall_p95_s * 1e3,
+            r.goodput_rps,
+            r.throughput_tok_s,
+        );
     }
 }
 
@@ -376,6 +563,7 @@ mod tests {
             steals: None,
             min_slack_s: None,
             step_time_per_replica: vec![None, None],
+            residency_per_replica: vec![None, None],
         }
     }
 
@@ -421,10 +609,14 @@ mod tests {
         let dark = TransformReport::from_run(&s, "base", "jsq", &fake_run(), &[0.0, 2.0]);
         assert!(dark.steals.is_none() && dark.min_slack_s.is_none());
         assert!(dark.step_time_per_replica.is_none());
+        assert!(dark.residency_per_replica.is_none());
+        assert!(dark.residency_aggregate().is_none());
         let j = dark.to_json();
         assert!(j.opt("steals").is_none());
         assert!(j.opt("min_slack_s").is_none());
         assert!(j.opt("step_time_per_replica").is_none());
+        assert!(j.opt("expert_hit_rate").is_none());
+        assert!(j.opt("residency_per_replica").is_none());
 
         // extended run: steals + slack + measured step times all emit
         let mut run = fake_run();
@@ -452,6 +644,70 @@ mod tests {
         let arr = j.get("step_time_per_replica").unwrap().as_arr().unwrap();
         assert_eq!(arr.len(), 2);
         assert!((arr[0].get("p95_s").unwrap().as_f64().unwrap() - 0.02).abs() < 1e-12);
+    }
+
+    #[test]
+    fn residency_fields_emit_when_a_budget_ran() {
+        let s = scenario();
+        let mut run = fake_run();
+        run.residency_per_replica = vec![
+            Some(ResidencyStats {
+                hits: 90,
+                misses: 10,
+                prefetch_issued: 20,
+                prefetch_hits: 15,
+                evictions: 5,
+                bypasses: 0,
+                stall_s: 1.5,
+                stall_p50_s: 0.001,
+                stall_p95_s: 0.02,
+                steps: 100,
+                hbm_budget_bytes: 1 << 30,
+                hbm_used_bytes: 1 << 29,
+            }),
+            None,
+        ];
+        let r = TransformReport::from_run(&s, "lexi-ladder", "jsq", &run, &[0.0, 2.0]);
+        let agg = r.residency_aggregate().unwrap();
+        assert!((agg.hit_rate() - 0.9).abs() < 1e-12);
+        assert!((agg.stall_s - 1.5).abs() < 1e-12);
+        let j = r.to_json();
+        assert!((j.get("expert_hit_rate").unwrap().as_f64().unwrap() - 0.9).abs() < 1e-12);
+        let arr = j.get("residency_per_replica").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("hits").unwrap().as_usize().unwrap(), 90);
+        // the missing replica zero-fills (same convention as step times)
+        assert_eq!(arr[1].get("hits").unwrap().as_usize().unwrap(), 0);
+
+        // bench-memory writers roundtrip
+        let mem = MemoryReport {
+            scenario: "bursty".into(),
+            transform: "lexi-ladder".into(),
+            budget_frac: 0.5,
+            policy: "kvec",
+            prefetch: true,
+            hit_rate: agg.hit_rate(),
+            prefetch_hits: agg.prefetch_hits,
+            evictions: agg.evictions,
+            stall_total_s: agg.stall_s,
+            stall_p50_s: agg.stall_p50_s,
+            stall_p95_s: agg.stall_p95_s,
+            goodput_rps: r.goodput_rps,
+            throughput_tok_s: r.throughput_tok_s,
+            ttft_p95_s: r.ttft_p95_s,
+            pm_tok_s: 1234.5,
+        };
+        let dir = std::env::temp_dir().join("lexi_memory_report_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        write_memory_csv(&dir.join("mem.csv"), std::slice::from_ref(&mem)).unwrap();
+        write_memory_json(&dir.join("mem.json"), std::slice::from_ref(&mem)).unwrap();
+        let csv = std::fs::read_to_string(dir.join("mem.csv")).unwrap();
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.starts_with("scenario,transform,budget_frac,policy,prefetch"));
+        assert!(csv.contains("kvec"));
+        let json = crate::util::json::parse_file(&dir.join("mem.json")).unwrap();
+        let arr = json.as_arr().unwrap();
+        assert_eq!(arr[0].get("policy").unwrap().as_str().unwrap(), "kvec");
     }
 
     #[test]

@@ -23,6 +23,7 @@ use std::collections::BinaryHeap;
 use std::rc::Rc;
 
 use crate::config::server::{PolicyKind, PressureMode};
+use crate::experts::ResidencyStats;
 use crate::util::Pcg32;
 
 use super::backend::{BackendStats, CompletedRequest, ReplicaBackend};
@@ -61,6 +62,9 @@ pub struct RunResult {
     /// Measured step-time summaries, one per replica (`None` entries
     /// for virtual-time replicas, which have no measured steps).
     pub step_time_per_replica: Vec<Option<StepTimeSummary>>,
+    /// Expert-residency counters, one per replica (`None` entries for
+    /// replicas running without a residency model — the default).
+    pub residency_per_replica: Vec<Option<ResidencyStats>>,
 }
 
 /// Pending arrival, ordered by (time ns, id) for a deterministic heap.
@@ -248,6 +252,13 @@ pub struct Cluster<'a> {
     pub reconfig_penalty_s: f64,
     /// Cross-replica steals allowed per dispatch instant (0 = off).
     pub steal_bound: usize,
+    /// Minimum event-loop time between steals touching one replica
+    /// (thief or victim) — hysteresis so engine-backed replicas don't
+    /// thrash work back and forth. 0 keeps the per-instant bound only.
+    pub steal_cooldown_s: f64,
+    /// Per-replica time of the last steal the replica participated in
+    /// (−∞ before the first; indexed like `backends`).
+    last_steal_s: Vec<f64>,
     rng: Pcg32,
 }
 
@@ -300,6 +311,7 @@ impl<'a> Cluster<'a> {
     ) -> Cluster<'a> {
         assert!(queue_cap > 0, "queue_cap must be >= 1");
         assert!(!backends.is_empty(), "cluster needs at least one replica");
+        let n = backends.len();
         Cluster {
             backends,
             router: policy.build(),
@@ -309,6 +321,8 @@ impl<'a> Cluster<'a> {
             admission: AdmissionControl::new(queue_cap, n_classes),
             reconfig_penalty_s,
             steal_bound: 0,
+            steal_cooldown_s: 0.0,
+            last_steal_s: vec![f64::NEG_INFINITY; n],
             rng: Pcg32::new(seed, 0x0707_2026),
         }
     }
@@ -317,6 +331,14 @@ impl<'a> Cluster<'a> {
     /// dispatch instant (0 disables).
     pub fn with_stealing(mut self, bound: usize) -> Self {
         self.steal_bound = bound;
+        self
+    }
+
+    /// Enforce a per-replica minimum interval between steals
+    /// (`--steal-cooldown`): a replica that just stole or was stolen
+    /// from sits the next `cooldown_s` of dispatch instants out.
+    pub fn with_steal_cooldown(mut self, cooldown_s: f64) -> Self {
+        self.steal_cooldown_s = cooldown_s;
         self
     }
 
@@ -362,6 +384,12 @@ impl<'a> Cluster<'a> {
             if t.next_event_s().is_some() || t.outstanding() > 0 || !t.accepts_work() {
                 continue;
             }
+            // steal hysteresis: a replica that just participated in a
+            // steal (either side) sits the cooldown out, so work cannot
+            // ping-pong between replicas every instant
+            if now - self.last_steal_s[thief] < self.steal_cooldown_s {
+                continue;
+            }
             // refresh per steal: the previous move changed the picture
             let snap = self.snapshot(now, TelemetryDetail::Full);
             observe_min_slack(&snap, min_slack_obs);
@@ -371,6 +399,7 @@ impl<'a> Cluster<'a> {
                 .filter(|v| {
                     v.replica != thief
                         && v.queue_len > 0
+                        && now - self.last_steal_s[v.replica] >= self.steal_cooldown_s
                         // only steal from a replica whose queue sits
                         // behind running or in-flight work; a fully idle
                         // victim is about to start that work itself
@@ -385,10 +414,12 @@ impl<'a> Cluster<'a> {
                         .then(a.replica.cmp(&b.replica))
                 })
                 .map(|v| v.replica);
-            let Some(victim) = victim else { break };
+            let Some(victim) = victim else { continue };
             if let Some(req) = self.backends[victim].steal_request() {
                 events.push((time_key(now), victim, thief));
                 self.backends[thief].admit(req);
+                self.last_steal_s[thief] = now;
+                self.last_steal_s[victim] = now;
                 budget -= 1;
             }
         }
@@ -425,7 +456,7 @@ impl<'a> Cluster<'a> {
                 // signal is the one that pays for the queue scans
                 let detail = match self.controller.as_ref().unwrap().policy.pressure {
                     PressureMode::Queue => TelemetryDetail::Load,
-                    PressureMode::Slack => TelemetryDetail::Full,
+                    PressureMode::Slack | PressureMode::SlackEwma => TelemetryDetail::Full,
                 };
                 let snap = self.snapshot(now, detail);
                 observe_min_slack(&snap, &mut min_slack_obs);
@@ -543,7 +574,7 @@ impl<'a> Cluster<'a> {
             || self
                 .controller
                 .as_ref()
-                .is_some_and(|c| c.policy.pressure == PressureMode::Slack);
+                .is_some_and(|c| c.policy.pressure != PressureMode::Queue);
         RunResult {
             rejected_by_class: self.admission.rejected_by_class.clone(),
             makespan_s,
@@ -557,6 +588,7 @@ impl<'a> Cluster<'a> {
             min_slack_s: (extended && min_slack_obs.is_finite()).then_some(min_slack_obs),
             steal_events,
             step_time_per_replica: stats.iter().map(|s| s.step_times.clone()).collect(),
+            residency_per_replica: stats.iter().map(|s| s.residency.clone()).collect(),
             completed,
         }
     }
@@ -613,6 +645,7 @@ mod tests {
         // default feature set: the extended report fields stay dark
         assert!(res.steals.is_none() && res.min_slack_s.is_none());
         assert!(res.step_time_per_replica.iter().all(|s| s.is_none()));
+        assert!(res.residency_per_replica.iter().all(|r| r.is_none()));
     }
 
     #[test]
@@ -849,5 +882,62 @@ mod tests {
         assert_eq!(base.replica_busy_s[1], 0.0);
         assert!(stolen.replica_busy_s[1] > 0.0);
         assert!(stolen.makespan_s < base.makespan_s);
+    }
+
+    #[test]
+    fn steal_cooldown_bounds_per_replica_steal_rate() {
+        // same force-fed pile as work_stealing_rebalances_and_conserves,
+        // but the thief must sit out `cooldown` between steals
+        let mut s = scenario();
+        s.profiles.truncate(1);
+        s.slos.truncate(1);
+        let requests: Vec<TraceRequest> = (0..8u64)
+            .map(|id| TraceRequest {
+                id,
+                class: 0,
+                arrival_s: 0.0,
+                prompt_len: 64,
+                new_tokens: 200,
+            })
+            .collect();
+        let mk = |cooldown: f64| {
+            let mut c = Cluster::new(
+                2,
+                1,
+                PolicyKind::RoundRobin,
+                fixed_ladder(0.01, 1),
+                None,
+                10_000,
+                1,
+                0.0,
+                0,
+            )
+            .with_stealing(1)
+            .with_steal_cooldown(cooldown);
+            for r in &requests {
+                c.backends[0].admit(QueuedRequest::new(r, 0, 1.0));
+            }
+            c
+        };
+        let empty = Trace {
+            scenario: "steal",
+            requests: vec![],
+            closed_loop: None,
+        };
+        let eager = mk(0.0).run(&s, &empty);
+        let cooled = mk(1e9).run(&s, &empty);
+        // hysteresis: after the first steal the thief is in cooldown for
+        // the rest of the run
+        assert_eq!(cooled.steals, Some(1));
+        assert!(eager.steals.unwrap() > 1);
+        // nothing lost or duplicated either way
+        for res in [&eager, &cooled] {
+            let mut ids: Vec<u64> = res.completed.iter().map(|c| c.id).collect();
+            ids.sort_unstable();
+            ids.dedup();
+            assert_eq!(ids.len(), 8);
+        }
+        // fewer steals -> the thief helps less -> no better makespan
+        assert!(cooled.makespan_s >= eager.makespan_s);
     }
 }

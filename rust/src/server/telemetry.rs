@@ -68,9 +68,19 @@ pub struct ReplicaTelemetry {
     /// cluster speed. `None` when no interactive request is queued (or
     /// at [`TelemetryDetail::Load`]).
     pub min_interactive_slack_frac: Option<f64>,
+    /// [`Self::min_interactive_slack_frac`] projected one queue-drain
+    /// horizon forward (`step_ewma_s * queue_len` seconds): where the
+    /// worst interactive slack WILL be once today's backlog has burned
+    /// its expected service time. The `--pressure slack-ewma` signal.
+    /// `None` under the same conditions as the instantaneous value.
+    pub projected_interactive_slack_frac: Option<f64>,
     /// EWMA of recent phase durations (prefill or decode), seconds.
     /// 0 before the first phase.
     pub step_ewma_s: f64,
+    /// Expert-residency pressure: miss-rate EWMA of the replica's HBM
+    /// store in [0, 1]. `None` when the replica runs without a
+    /// residency model (the default).
+    pub hbm_pressure: Option<f64>,
 }
 
 impl ReplicaTelemetry {
@@ -87,7 +97,9 @@ impl ReplicaTelemetry {
             class_occupancy: Vec::new(),
             min_slack_s: None,
             min_interactive_slack_frac: None,
+            projected_interactive_slack_frac: None,
             step_ewma_s: 0.0,
+            hbm_pressure: None,
         }
     }
 
@@ -116,6 +128,13 @@ impl ReplicaTelemetry {
         self.class_occupancy = occupancy;
         self.min_slack_s = queue.min_deadline_ns().map(|ns| ns as f64 / 1e9 - now_s);
         self.min_interactive_slack_frac = queue.min_interactive_slack_frac(now_s);
+        // predictive slack: evaluate the same minimum one queue-drain
+        // horizon ahead (expects `step_ewma_s` and `queue_len` to be
+        // filled before the scans — both backends construct the struct
+        // first, then call fill_scans)
+        let horizon_s = self.step_ewma_s * self.queue_len as f64;
+        self.projected_interactive_slack_frac =
+            queue.min_interactive_slack_frac(now_s + horizon_s);
     }
 }
 
@@ -143,6 +162,16 @@ impl ClusterSnapshot {
         self.replicas
             .iter()
             .filter_map(|t| t.min_slack_s)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Worst *projected* interactive slack fraction across the cluster
+    /// (the `--pressure slack-ewma` aggregate; +∞ when nothing
+    /// interactive is queued anywhere).
+    pub fn min_projected_interactive_slack_frac(&self) -> f64 {
+        self.replicas
+            .iter()
+            .filter_map(|t| t.projected_interactive_slack_frac)
             .fold(f64::INFINITY, f64::min)
     }
 }
@@ -190,5 +219,44 @@ mod tests {
         t.queue_len = 4;
         t.active = 2;
         assert_eq!(t.outstanding(), 6);
+    }
+
+    #[test]
+    fn projected_slack_burns_the_queue_drain_horizon() {
+        use crate::server::scheduler::{EdfQueue, QueuedRequest};
+        let mut q = EdfQueue::new();
+        // interactive request: arrived at t=0, TTFT SLO 2s
+        q.push(QueuedRequest {
+            id: 0,
+            class: 0,
+            priority: 0,
+            arrival_s: 0.0,
+            deadline_ns: 2_000_000_000,
+            prompt_len: 64,
+            new_tokens: 16,
+        });
+        let mut t = ReplicaTelemetry::idle(0);
+        t.queue_len = 1;
+        t.step_ewma_s = 0.5; // horizon = 0.5s
+        t.fill_scans(&q, std::iter::empty::<usize>(), 1.0);
+        // instantaneous: 1s of 2s budget left -> 0.5
+        assert!((t.min_interactive_slack_frac.unwrap() - 0.5).abs() < 1e-9);
+        // projected: evaluated at now + 0.5 -> 0.25
+        assert!((t.projected_interactive_slack_frac.unwrap() - 0.25).abs() < 1e-9);
+
+        // no history -> projection collapses to the instantaneous value
+        let mut cold = ReplicaTelemetry::idle(1);
+        cold.queue_len = 1;
+        cold.fill_scans(&q, std::iter::empty::<usize>(), 1.0);
+        assert_eq!(
+            cold.projected_interactive_slack_frac,
+            cold.min_interactive_slack_frac
+        );
+
+        let snap = ClusterSnapshot {
+            now_s: 1.0,
+            replicas: vec![t, ReplicaTelemetry::idle(2)],
+        };
+        assert!((snap.min_projected_interactive_slack_frac() - 0.25).abs() < 1e-9);
     }
 }

@@ -1,0 +1,221 @@
+//! Integration tests for the expert residency subsystem: seeded
+//! determinism per eviction policy, predictive prefetch beating plain
+//! LRU on skewed routing, stall-time conservation, and the subsystem's
+//! acceptance criterion — k_vec-aware pinning achieving strictly higher
+//! goodput than LRU under a tight HBM budget on the bursty scenario.
+
+use std::rc::Rc;
+
+use lexi_moe::config::server::{EvictKind, PolicyKind, ScenarioKind};
+use lexi_moe::experts::{ExpertResidency, LinkModel, ResidencyConfig};
+use lexi_moe::moe::allocation::Allocation;
+use lexi_moe::moe::routing::RoutingSim;
+use lexi_moe::server::ladder::QualityLadder;
+use lexi_moe::server::replica::{Replica, ServiceModel};
+use lexi_moe::server::report::TransformReport;
+use lexi_moe::server::router::Cluster;
+use lexi_moe::server::workload::Scenario;
+use lexi_moe::server::ReplicaBackend;
+
+const N_LAYERS: usize = 4;
+const N_EXPERTS: usize = 16;
+const EXPERT_BYTES: u64 = 1 << 20;
+
+/// Residency over `budget_experts` HBM slots with a 5 ms expert fetch.
+fn cfg(budget_experts: f64, policy: EvictKind, prefetch: bool) -> ResidencyConfig {
+    let mut c = ResidencyConfig::for_dims(
+        N_LAYERS,
+        N_EXPERTS,
+        EXPERT_BYTES,
+        budget_experts / (N_LAYERS * N_EXPERTS) as f64,
+        policy,
+        9,
+    );
+    c.prefetch = prefetch;
+    c.link = LinkModel {
+        bw_bytes_per_s: EXPERT_BYTES as f64 / 4e-3,
+        latency_s: 1e-3,
+    };
+    c.overlap_s_per_step = 2e-3;
+    c
+}
+
+/// Extreme two-hot-experts-per-layer router: the top-2 carry ~98.6% of
+/// the mass, so each layer's LExI hot set (k=2) covers nearly every
+/// token and the 14 tail experts appear only occasionally.
+fn two_hot_routing() -> Vec<RoutingSim> {
+    let mut freq = vec![1.0f32; N_EXPERTS];
+    freq[0] = 493.0;
+    freq[1] = 493.0;
+    (0..N_LAYERS)
+        .map(|_| RoutingSim::from_frequencies(&freq))
+        .collect()
+}
+
+#[test]
+fn eviction_policies_are_deterministic_under_fixed_seed() {
+    for policy in EvictKind::all() {
+        let run = || {
+            let mut r = ExpertResidency::with_routing(
+                &cfg(10.0, policy, true),
+                vec![2; N_LAYERS],
+                3,
+                two_hot_routing(),
+            );
+            let steps: Vec<_> = (0..96)
+                .map(|i| r.step(if i % 8 == 0 { 64 } else { 4 }))
+                .collect();
+            (steps, r.stats())
+        };
+        let (steps_a, stats_a) = run();
+        let (steps_b, stats_b) = run();
+        assert_eq!(steps_a, steps_b, "{policy:?} step stream not deterministic");
+        assert_eq!(stats_a, stats_b, "{policy:?} stats not deterministic");
+        assert!(stats_a.hits + stats_a.misses > 0);
+    }
+}
+
+#[test]
+fn predictive_prefetch_beats_plain_lru_hit_rate_on_skewed_routing() {
+    // generous budget (48 of 64 experts) + an overlap window that fits
+    // several transfers: prediction should convert cold misses of the
+    // popular experts into hits
+    let run = |prefetch: bool| {
+        let mut c = cfg(48.0, EvictKind::Lru, prefetch);
+        c.overlap_s_per_step = 50e-3; // fetch = 5ms: deep overlap
+        let mut r = ExpertResidency::with_routing(&c, vec![2; N_LAYERS], 5, two_hot_routing());
+        for _ in 0..256 {
+            r.step(4);
+        }
+        r.stats()
+    };
+    let plain = run(false);
+    let prefetched = run(true);
+    assert!(prefetched.prefetch_issued > 0 && prefetched.prefetch_hits > 0);
+    assert_eq!(plain.prefetch_issued, 0, "LRU without prefetch issued transfers");
+    assert!(
+        prefetched.hit_rate() >= plain.hit_rate() - 1e-9,
+        "prefetch hit rate {} < plain LRU {}",
+        prefetched.hit_rate(),
+        plain.hit_rate()
+    );
+    assert!(
+        prefetched.stall_s <= plain.stall_s + 1e-9,
+        "prefetch stalled longer ({} s) than plain LRU ({} s)",
+        prefetched.stall_s,
+        plain.stall_s
+    );
+}
+
+#[test]
+fn stall_time_is_conserved_across_steps() {
+    let mut r = ExpertResidency::with_routing(
+        &cfg(7.0, EvictKind::Lru, false),
+        vec![2; N_LAYERS],
+        1,
+        two_hot_routing(),
+    );
+    let mut total = 0.0;
+    let mut max_step = 0.0f64;
+    for i in 0..200 {
+        let s = r.step(if i % 10 == 0 { 64 } else { 4 });
+        total += s.stall_s;
+        max_step = max_step.max(s.stall_s);
+    }
+    let stats = r.stats();
+    // the report total is exactly the sum of the per-step stalls
+    assert!(
+        (stats.stall_s - total).abs() <= 1e-9 * total.max(1.0),
+        "sum of per-step stalls {total} != reported {}",
+        stats.stall_s
+    );
+    assert!(stats.stall_s > 0.0, "tight budget never stalled");
+    // percentiles live inside the observed per-step range
+    assert!(stats.stall_p50_s <= stats.stall_p95_s + 1e-12);
+    assert!(stats.stall_p95_s <= max_step + 1e-12);
+}
+
+/// The acceptance criterion: under a 7-expert HBM budget whose hot set
+/// is 8 experts (4 layers x k=2), plain LRU degenerates into the classic
+/// cyclic-scan thrash (every hot access evicts the next hot expert),
+/// while k_vec-aware pinning keeps 6 hot experts locked in HBM. Run both
+/// through the full serving cluster on the bursty scenario: pinning must
+/// win goodput outright.
+#[test]
+fn kvec_pinning_beats_lru_goodput_under_tight_hbm_budget() {
+    let slots = 4;
+    let svc = ServiceModel::synthetic("base", 1e-5, 0.02, slots);
+    let ladder = QualityLadder::fixed("base", Allocation::uniform(N_LAYERS, 2), svc.clone());
+
+    let mut scenario = Scenario::from_kind(
+        ScenarioKind::Bursty,
+        2.0 * svc.capacity_rps(480.0, 120.0),
+    );
+    // generous fixed TTFT references, TPOT from a 0.05 s step budget:
+    // healthy replicas pass easily, stall-inflated cadence + queue
+    // collapse bust the SLOs
+    scenario.resolve_slos(|_| 2.0, 0.05);
+    let trace = scenario.generate(120, 11);
+
+    let run = |policy: EvictKind| {
+        let ladder = Rc::new(ladder.clone());
+        let backends: Vec<Box<dyn ReplicaBackend>> = (0..2)
+            .map(|i| {
+                let residency = ExpertResidency::with_routing(
+                    &cfg(7.0, policy, false),
+                    ladder.k_vec(0),
+                    i as u64,
+                    two_hot_routing(),
+                );
+                let replica = Replica::new(i, slots, Rc::clone(&ladder)).with_residency(residency);
+                Box::new(replica) as Box<dyn ReplicaBackend>
+            })
+            .collect();
+        let mut cluster = Cluster::from_backends(
+            backends,
+            PolicyKind::Jsq,
+            Rc::clone(&ladder),
+            None,
+            10_000,
+            scenario.profiles.len(),
+            0.0,
+            1,
+        );
+        let res = cluster.run(&scenario, &trace);
+        assert_eq!(res.completed.len(), 120, "{policy:?} lost requests");
+        TransformReport::from_run(&scenario, policy.label(), "jsq", &res, &[0.0])
+    };
+
+    let lru = run(EvictKind::Lru);
+    let kvec = run(EvictKind::KvecAware);
+
+    let lru_res = lru.residency_aggregate().unwrap();
+    let kvec_res = kvec.residency_aggregate().unwrap();
+    // mechanism: pinning keeps the hot set resident, LRU thrashes it
+    assert!(
+        kvec_res.hit_rate() > lru_res.hit_rate() + 0.2,
+        "kvec hit rate {:.3} not clearly above LRU {:.3}",
+        kvec_res.hit_rate(),
+        lru_res.hit_rate()
+    );
+    assert!(
+        kvec_res.stall_s < lru_res.stall_s,
+        "kvec stalled {} s >= LRU {} s",
+        kvec_res.stall_s,
+        lru_res.stall_s
+    );
+    // outcome: strictly higher goodput under the same workload contract
+    assert!(
+        kvec.goodput_rps > lru.goodput_rps,
+        "kvec goodput {:.4} rps not strictly above LRU {:.4} rps \
+         (kvec: {}/{} in SLO over {:.1}s; lru: {}/{} over {:.1}s)",
+        kvec.goodput_rps,
+        lru.goodput_rps,
+        kvec.n_slo_met,
+        kvec.n_completed,
+        kvec.makespan_s,
+        lru.n_slo_met,
+        lru.n_completed,
+        lru.makespan_s
+    );
+}

@@ -1,0 +1,336 @@
+//! Least-squares fitting of the sim [`ServiceModel`] from calibration
+//! observations.
+//!
+//! The service model is linear in exactly the regressors the recorder
+//! tags: prefill time `= overhead + per_token * prompt_tokens`, decode
+//! step time `= base + per_slot * occupancy`. Each term is fit per rung
+//! by weighted least squares over the artifact's buckets — which, since
+//! buckets keep full second-moment sums, equals the ordinary least
+//! squares over the raw samples. Simulated residency stall is fitted as
+//! a separate per-step mean (it is virtual time the sim replica's own
+//! residency model normally reproduces; `include_stall` folds it into
+//! the service terms for consumers that run without one).
+
+use anyhow::{Context, Result};
+
+use crate::server::ladder::QualityLadder;
+use crate::server::replica::ServiceModel;
+
+use super::observe::{CalibrationArtifact, RungSamples, SampleBucket};
+
+/// Floor for fitted step times: a zero-cost phase would collapse the
+/// event loop into zero-width instants.
+const MIN_STEP_S: f64 = 1e-9;
+
+/// One fitted linear term `y = base_s + per_x_s * x`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinearTerm {
+    pub base_s: f64,
+    pub per_x_s: f64,
+    /// Samples the fit was computed from.
+    pub n: u64,
+}
+
+impl LinearTerm {
+    pub fn at(&self, x: f64) -> f64 {
+        self.base_s + self.per_x_s * x
+    }
+}
+
+/// Fitted service terms of one quality-ladder rung.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RungFit {
+    /// `None` when the rung has no samples of that phase kind.
+    pub prefill: Option<LinearTerm>,
+    pub decode: Option<LinearTerm>,
+    /// Mean simulated residency stall per step, by phase kind (0 when
+    /// the run carried no HBM budget).
+    pub prefill_stall_s: f64,
+    pub decode_stall_s: f64,
+}
+
+impl RungFit {
+    /// Calibrated `(prefill_overhead_s, prefill_s_per_token)` — the one
+    /// place the stall fold and non-negativity clamps live.
+    pub fn prefill_terms(&self, include_stall: bool) -> Option<(f64, f64)> {
+        self.prefill.map(|pf| {
+            let stall = if include_stall { self.prefill_stall_s } else { 0.0 };
+            ((pf.base_s + stall).max(0.0), pf.per_x_s.max(0.0))
+        })
+    }
+
+    /// Calibrated per-occupancy decode table (`decode_step_s`).
+    pub fn decode_table(&self, slots: usize, include_stall: bool) -> Option<Vec<f64>> {
+        self.decode.map(|df| {
+            let stall = if include_stall { self.decode_stall_s } else { 0.0 };
+            (1..=slots)
+                .map(|occ| (df.at(occ as f64) + stall).max(MIN_STEP_S))
+                .collect()
+        })
+    }
+}
+
+/// Weighted least squares over bucket sufficient statistics. Falls back
+/// to a through-origin fit when the regressor is (near-)constant, and
+/// clamps both coefficients non-negative: a negatively-sloped or
+/// negatively-based service model is measurement noise, not physics.
+fn wls(buckets: &[SampleBucket]) -> Option<LinearTerm> {
+    let n: f64 = buckets.iter().map(|b| b.n as f64).sum();
+    if n <= 0.0 {
+        return None;
+    }
+    let sx: f64 = buckets.iter().map(|b| b.sum_x).sum();
+    let sy: f64 = buckets.iter().map(|b| b.sum_y).sum();
+    let sxx: f64 = buckets.iter().map(|b| b.sum_x2).sum();
+    let sxy: f64 = buckets.iter().map(|b| b.sum_xy).sum();
+    let det = n * sxx - sx * sx;
+    // least-squares slope of y = b*x with no intercept (equals sy/sx
+    // when only one distinct x was observed)
+    let origin_slope = if sxx > 0.0 { sxy / sxx } else { 0.0 };
+    let (mut base, mut slope) = if det > 1e-12 * n * sxx.max(1.0) {
+        let slope = (n * sxy - sx * sy) / det;
+        ((sy - slope * sx) / n, slope)
+    } else if sx > 0.0 {
+        // one distinct x: scale through the origin
+        (0.0, origin_slope)
+    } else {
+        (sy / n, 0.0)
+    };
+    if slope < 0.0 {
+        slope = 0.0;
+        base = sy / n;
+    }
+    if base < 0.0 {
+        base = 0.0;
+        slope = origin_slope.max(0.0);
+    }
+    Some(LinearTerm {
+        base_s: base,
+        per_x_s: slope,
+        n: n as u64,
+    })
+}
+
+fn mean_stall(buckets: &[SampleBucket]) -> f64 {
+    let n: u64 = buckets.iter().map(|b| b.n).sum();
+    if n == 0 {
+        return 0.0;
+    }
+    buckets.iter().map(|b| b.sum_stall).sum::<f64>() / n as f64
+}
+
+/// Fit both service terms of one rung's observations.
+pub fn fit_rung(rs: &RungSamples) -> RungFit {
+    RungFit {
+        prefill: wls(&rs.prefill),
+        decode: wls(&rs.decode),
+        prefill_stall_s: mean_stall(&rs.prefill),
+        decode_stall_s: mean_stall(&rs.decode),
+    }
+}
+
+impl ServiceModel {
+    /// Service model of one rung fitted from measured engine step times.
+    /// Requires both phase kinds observed for the rung; use
+    /// [`apply_to_ladder`] for partial, best-effort recalibration.
+    /// `include_stall` folds the fitted mean residency stall into the
+    /// terms — leave it off when the consuming sim replica carries its
+    /// own residency model (the stall would be double-counted).
+    pub fn from_calibration(
+        art: &CalibrationArtifact,
+        rung: usize,
+        slots: usize,
+        include_stall: bool,
+    ) -> Result<ServiceModel> {
+        anyhow::ensure!(slots >= 1, "service model needs at least one slot");
+        let rs = art
+            .rungs
+            .get(rung)
+            .with_context(|| format!("artifact has no rung {rung}"))?;
+        let fit = fit_rung(rs);
+        let (prefill_overhead_s, prefill_s_per_token) = fit
+            .prefill_terms(include_stall)
+            .with_context(|| format!("rung {rung} has no prefill samples"))?;
+        let decode_step_s = fit
+            .decode_table(slots, include_stall)
+            .with_context(|| format!("rung {rung} has no decode samples"))?;
+        Ok(ServiceModel {
+            label: format!("{}-cal-r{rung}", art.model),
+            prefill_overhead_s,
+            prefill_s_per_token,
+            decode_step_s,
+        })
+    }
+}
+
+/// Replace every ladder rung's analytical service terms with fitted ones
+/// where the artifact has observations; rungs (or phase kinds) the
+/// engine run never exercised keep their analytical values. Returns the
+/// rung indices that were (at least partially) recalibrated.
+pub fn apply_to_ladder(
+    ladder: &mut QualityLadder,
+    art: &CalibrationArtifact,
+    include_stall: bool,
+) -> Vec<usize> {
+    let mut applied = Vec::new();
+    for (j, rung) in ladder.rungs.iter_mut().enumerate() {
+        let Some(rs) = art.rungs.get(j) else { continue };
+        let fit = fit_rung(rs);
+        let slots = rung.service.slots();
+        let mut svc = rung.service.clone();
+        let mut touched = false;
+        if let Some((overhead, per_token)) = fit.prefill_terms(include_stall) {
+            svc.prefill_overhead_s = overhead;
+            svc.prefill_s_per_token = per_token;
+            touched = true;
+        }
+        if let Some(table) = fit.decode_table(slots, include_stall) {
+            svc.decode_step_s = table;
+            touched = true;
+        }
+        if touched {
+            svc.label = format!("{}+cal", svc.label);
+            rung.service = svc;
+            applied.push(j);
+        }
+    }
+    applied
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::StepSample;
+
+    fn artifact_from(samples: &[StepSample], n_rungs: usize) -> CalibrationArtifact {
+        let mut art = CalibrationArtifact::new("m", "s", 0, 1, 4, "engine-synthetic", n_rungs);
+        art.record_all(samples.iter());
+        art
+    }
+
+    fn decode(rung: usize, occ: f64, dt: f64) -> StepSample {
+        StepSample {
+            prefill: false,
+            rung,
+            x: occ,
+            dt_s: dt,
+            stall_s: 0.0,
+        }
+    }
+
+    fn prefill(rung: usize, tokens: f64, dt: f64) -> StepSample {
+        StepSample {
+            prefill: true,
+            rung,
+            x: tokens,
+            dt_s: dt,
+            stall_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn fitter_recovers_known_coefficients() {
+        // decode: dt = 0.002 + 0.0005 * occ; prefill: dt = 0.001 + 1e-5 * tokens
+        let mut samples = Vec::new();
+        for _ in 0..3 {
+            for occ in 1..=4 {
+                samples.push(decode(0, occ as f64, 0.002 + 0.0005 * occ as f64));
+            }
+            for tokens in [64.0, 128.0, 256.0] {
+                samples.push(prefill(0, tokens, 0.001 + 1e-5 * tokens));
+            }
+        }
+        let art = artifact_from(&samples, 1);
+        let fit = fit_rung(&art.rungs[0]);
+        let df = fit.decode.unwrap();
+        assert!((df.base_s - 0.002).abs() < 1e-9, "decode base {}", df.base_s);
+        assert!((df.per_x_s - 0.0005).abs() < 1e-9);
+        assert_eq!(df.n, 12);
+        let pf = fit.prefill.unwrap();
+        assert!((pf.base_s - 0.001).abs() < 1e-9);
+        assert!((pf.per_x_s - 1e-5).abs() < 1e-12);
+
+        let svc = ServiceModel::from_calibration(&art, 0, 4, false).unwrap();
+        assert_eq!(svc.slots(), 4);
+        assert!((svc.step_time(3) - 0.0035).abs() < 1e-9);
+        assert!((svc.prefill_time(100) - 0.002).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stall_is_fitted_separately_and_optionally_included() {
+        let mut samples = Vec::new();
+        for occ in 1..=4 {
+            let mut s = decode(0, occ as f64, 0.002 + 0.0005 * occ as f64);
+            s.stall_s = 0.01; // constant simulated stall per step
+            samples.push(s);
+            samples.push(prefill(0, 64.0 * occ as f64, 1e-5 * 64.0 * occ as f64));
+        }
+        let art = artifact_from(&samples, 1);
+        let fit = fit_rung(&art.rungs[0]);
+        // compute fit unaffected by the stall column
+        assert!((fit.decode.unwrap().base_s - 0.002).abs() < 1e-9);
+        assert!((fit.decode_stall_s - 0.01).abs() < 1e-12);
+        assert_eq!(fit.prefill_stall_s, 0.0);
+
+        let lean = ServiceModel::from_calibration(&art, 0, 4, false).unwrap();
+        let full = ServiceModel::from_calibration(&art, 0, 4, true).unwrap();
+        assert!((full.step_time(2) - lean.step_time(2) - 0.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn degenerate_single_occupancy_scales_through_origin() {
+        let samples: Vec<StepSample> = (0..8).map(|_| decode(0, 4.0, 0.02)).collect();
+        let art = artifact_from(&samples, 1);
+        let df = fit_rung(&art.rungs[0]).decode.unwrap();
+        assert_eq!(df.base_s, 0.0);
+        assert!((df.per_x_s - 0.005).abs() < 1e-12);
+    }
+
+    #[test]
+    fn negative_slopes_are_clamped_to_the_mean() {
+        // dt DECREASES with occupancy (noise): fall back to a flat mean
+        let samples = vec![decode(0, 1.0, 0.03), decode(0, 4.0, 0.01)];
+        let art = artifact_from(&samples, 1);
+        let df = fit_rung(&art.rungs[0]).decode.unwrap();
+        assert_eq!(df.per_x_s, 0.0);
+        assert!((df.base_s - 0.02).abs() < 1e-12);
+    }
+
+    #[test]
+    fn missing_phase_or_rung_errors_in_strict_mode() {
+        let art = artifact_from(&[decode(0, 2.0, 0.01)], 2);
+        assert!(ServiceModel::from_calibration(&art, 0, 4, false).is_err()); // no prefill
+        assert!(ServiceModel::from_calibration(&art, 1, 4, false).is_err()); // empty rung
+        assert!(ServiceModel::from_calibration(&art, 9, 4, false).is_err()); // out of range
+    }
+
+    #[test]
+    fn apply_to_ladder_recalibrates_observed_rungs_only() {
+        use crate::moe::allocation::Allocation;
+        let base = ServiceModel::synthetic("base", 1e-4, 0.01, 4);
+        let mut ladder = QualityLadder {
+            rungs: (0..2)
+                .map(|i| crate::server::ladder::Rung {
+                    label: format!("r{i}"),
+                    allocation: Allocation::uniform(4, 2),
+                    service: base.clone(),
+                    quality_loss: i as f64,
+                })
+                .collect(),
+        };
+        let mut samples = Vec::new();
+        for occ in 1..=4 {
+            samples.push(decode(0, occ as f64, 0.1 + 0.01 * occ as f64));
+        }
+        let art = artifact_from(&samples, 2);
+        let applied = apply_to_ladder(&mut ladder, &art, false);
+        assert_eq!(applied, vec![0]);
+        // rung 0: decode recalibrated, prefill (unobserved) retained
+        let cal0 = &ladder.rungs[0].service;
+        assert!((cal0.step_time(2) - 0.12).abs() < 1e-9);
+        assert!((cal0.prefill_time(100) - base.prefill_time(100)).abs() < 1e-12);
+        assert!(cal0.label.ends_with("+cal"));
+        // rung 1 untouched
+        assert_eq!(ladder.rungs[1].service.step_time(2), 0.01);
+    }
+}

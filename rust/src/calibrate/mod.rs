@@ -1,0 +1,43 @@
+//! Calibration subsystem: fit the sim [`ServiceModel`] from engine
+//! step-time telemetry, and cross-validate the two replica backends.
+//!
+//! The virtual-time sim replica takes its phase durations from an
+//! analytical service model; the engine-backed replica measures real
+//! wall-clock steps. Until those two agree on latency *distributions*,
+//! sim-side throughput/SLO results are only as trustworthy as the
+//! analytical guess. This module closes the loop with the same
+//! measure-then-model discipline LExI applies to per-layer sensitivity:
+//!
+//! 1. **Observe** ([`observe`]) — the engine backend tags every measured
+//!    step with phase kind, quality-ladder rung, occupancy regressor,
+//!    and (separately) simulated residency stall
+//!    ([`StepSample`](crate::server::StepSample)); samples are bucketed
+//!    into a [`CalibrationArtifact`] that keeps full second-moment sums,
+//!    so fitting from the artifact equals fitting from the raw stream.
+//! 2. **Fit** ([`fit`]) — weighted least squares recovers each rung's
+//!    `prefill = overhead + per_token·tokens` and `decode = base +
+//!    per_slot·occupancy` terms
+//!    ([`ServiceModel::from_calibration`](crate::server::ServiceModel::from_calibration)),
+//!    plus a separate mean stall term when an HBM budget was active;
+//!    [`apply_to_ladder`] refits a [`QualityLadder`] in place, leaving
+//!    unobserved rungs analytical.
+//! 3. **Cross-validate** ([`validate`]) — `lexi cross-validate` replays
+//!    one seeded trace on the engine and on the sim twice (raw and
+//!    calibrated) and gates on per-percentile TTFT/TPOT divergence and
+//!    exact served-token parity. CI runs the gate on a fixed seed; the
+//!    artifact it uploads is the trust anchor later sim-side results
+//!    cite (`lexi bench-serve --calibration <artifact>`).
+//!
+//! [`ServiceModel`]: crate::server::ServiceModel
+//! [`QualityLadder`]: crate::server::QualityLadder
+
+pub mod fit;
+pub mod observe;
+pub mod validate;
+
+pub use fit::{apply_to_ladder, fit_rung, LinearTerm, RungFit};
+pub use observe::{artifact_path, CalibrationArtifact, RungSamples, SampleBucket};
+pub use validate::{
+    calibrate, cross_validate, BackendSummary, ContenderValidation, CrossValidation, Divergence,
+    DEFAULT_TOLERANCE, PERCENTILES,
+};

@@ -1,0 +1,398 @@
+//! Calibration observations: occupancy-bucketed step-time statistics
+//! accumulated from the engine backend's measured [`StepSample`] stream.
+//!
+//! Buckets keep full second-moment sums (`n`, `Σx`, `Σx²`, `Σy`, `Σxy`,
+//! `Σstall`), so the fitter's weighted least squares over buckets is
+//! *exactly* the least squares over the raw samples — bucketing bounds
+//! the artifact size without losing regression information. The artifact
+//! serializes through the repo's own `util::json` (the build environment
+//! has no serde; the writer emits shortest-round-trip `f64`s, so a
+//! save/load cycle reproduces the sums bit for bit).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::server::StepSample;
+use crate::util::json::{self, Json};
+
+/// Artifact schema version (bump on incompatible layout changes).
+pub const ARTIFACT_VERSION: u32 = 1;
+
+/// Prefill samples are bucketed by admitted prompt tokens at this
+/// granularity; decode samples are bucketed by exact slot occupancy.
+pub const PREFILL_BUCKET_TOKENS: u64 = 64;
+
+/// Sufficient statistics of all samples whose regressor fell in one
+/// bucket (`y` = measured compute seconds, `x` = the regressor).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SampleBucket {
+    /// Bucket key: slot occupancy (decode) or `tokens /
+    /// PREFILL_BUCKET_TOKENS` (prefill).
+    pub key: u64,
+    pub n: u64,
+    pub sum_x: f64,
+    pub sum_x2: f64,
+    pub sum_y: f64,
+    pub sum_xy: f64,
+    /// Simulated residency stall, summed separately from compute.
+    pub sum_stall: f64,
+}
+
+impl SampleBucket {
+    fn new(key: u64) -> Self {
+        SampleBucket {
+            key,
+            n: 0,
+            sum_x: 0.0,
+            sum_x2: 0.0,
+            sum_y: 0.0,
+            sum_xy: 0.0,
+            sum_stall: 0.0,
+        }
+    }
+
+    fn absorb(&mut self, x: f64, y: f64, stall: f64) {
+        self.n += 1;
+        self.sum_x += x;
+        self.sum_x2 += x * x;
+        self.sum_y += y;
+        self.sum_xy += x * y;
+        self.sum_stall += stall;
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("key", Json::Num(self.key as f64)),
+            ("n", Json::Num(self.n as f64)),
+            ("sum_x", Json::Num(self.sum_x)),
+            ("sum_x2", Json::Num(self.sum_x2)),
+            ("sum_y", Json::Num(self.sum_y)),
+            ("sum_xy", Json::Num(self.sum_xy)),
+            ("sum_stall", Json::Num(self.sum_stall)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(SampleBucket {
+            key: v.get("key")?.as_usize()? as u64,
+            n: v.get("n")?.as_usize()? as u64,
+            sum_x: v.get("sum_x")?.as_f64()?,
+            sum_x2: v.get("sum_x2")?.as_f64()?,
+            sum_y: v.get("sum_y")?.as_f64()?,
+            sum_xy: v.get("sum_xy")?.as_f64()?,
+            sum_stall: v.get("sum_stall")?.as_f64()?,
+        })
+    }
+}
+
+/// All observations of one quality-ladder rung, split by phase kind.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RungSamples {
+    /// Prefill buckets, keyed by prompt-token bucket, sorted by key.
+    pub prefill: Vec<SampleBucket>,
+    /// Decode buckets, keyed by slot occupancy, sorted by key.
+    pub decode: Vec<SampleBucket>,
+}
+
+impl RungSamples {
+    pub fn n_samples(&self) -> u64 {
+        self.prefill.iter().chain(&self.decode).map(|b| b.n).sum()
+    }
+
+    fn record(&mut self, s: &StepSample) {
+        let (buckets, key) = if s.prefill {
+            (&mut self.prefill, s.x as u64 / PREFILL_BUCKET_TOKENS)
+        } else {
+            (&mut self.decode, s.x as u64)
+        };
+        let idx = match buckets.binary_search_by_key(&key, |b| b.key) {
+            Ok(i) => i,
+            Err(i) => {
+                buckets.insert(i, SampleBucket::new(key));
+                i
+            }
+        };
+        buckets[idx].absorb(s.x, s.dt_s, s.stall_s);
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "prefill",
+                Json::Arr(self.prefill.iter().map(|b| b.to_json()).collect()),
+            ),
+            (
+                "decode",
+                Json::Arr(self.decode.iter().map(|b| b.to_json()).collect()),
+            ),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        let parse = |key: &str| -> Result<Vec<SampleBucket>> {
+            v.get(key)?.as_arr()?.iter().map(SampleBucket::from_json).collect()
+        };
+        Ok(RungSamples {
+            prefill: parse("prefill")?,
+            decode: parse("decode")?,
+        })
+    }
+}
+
+/// The calibration artifact: everything the fitter needs to refit the
+/// sim `ServiceModel` per rung, plus the provenance required to refuse
+/// application to a mismatched run (model, slot count, seed, source).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CalibrationArtifact {
+    pub version: u32,
+    pub model: String,
+    pub scenario: String,
+    pub seed: u64,
+    pub replicas: usize,
+    /// Decode slots per replica the samples were measured at.
+    pub slots: usize,
+    /// Which engine model produced the samples: `engine-pjrt` (compiled
+    /// artifacts) or `engine-synthetic` (host model).
+    pub source: String,
+    /// Per-rung observations, indexed by quality-ladder rung. Rungs the
+    /// engine run never visited stay empty — the fitter leaves their
+    /// analytical service models in place.
+    pub rungs: Vec<RungSamples>,
+}
+
+impl CalibrationArtifact {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        model: &str,
+        scenario: &str,
+        seed: u64,
+        replicas: usize,
+        slots: usize,
+        source: &str,
+        n_rungs: usize,
+    ) -> Self {
+        CalibrationArtifact {
+            version: ARTIFACT_VERSION,
+            model: model.to_string(),
+            scenario: scenario.to_string(),
+            seed,
+            replicas,
+            slots,
+            source: source.to_string(),
+            rungs: vec![RungSamples::default(); n_rungs.max(1)],
+        }
+    }
+
+    /// Fold one measured step into its (rung, phase, occupancy) bucket.
+    pub fn record(&mut self, s: &StepSample) {
+        if s.rung >= self.rungs.len() {
+            self.rungs.resize(s.rung + 1, RungSamples::default());
+        }
+        self.rungs[s.rung].record(s);
+    }
+
+    pub fn record_all<'a>(&mut self, samples: impl IntoIterator<Item = &'a StepSample>) {
+        for s in samples {
+            self.record(s);
+        }
+    }
+
+    pub fn n_samples(&self) -> u64 {
+        self.rungs.iter().map(|r| r.n_samples()).sum()
+    }
+
+    /// Rung indices with at least one observation.
+    pub fn observed_rungs(&self) -> Vec<usize> {
+        self.rungs
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.n_samples() > 0)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", Json::Num(self.version as f64)),
+            ("model", Json::Str(self.model.clone())),
+            ("scenario", Json::Str(self.scenario.clone())),
+            ("seed", Json::Num(self.seed as f64)),
+            ("replicas", Json::Num(self.replicas as f64)),
+            ("slots", Json::Num(self.slots as f64)),
+            ("source", Json::Str(self.source.clone())),
+            (
+                "rungs",
+                Json::Arr(self.rungs.iter().map(|r| r.to_json()).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let version = v.get("version")?.as_usize()? as u32;
+        anyhow::ensure!(
+            version == ARTIFACT_VERSION,
+            "calibration artifact version {version} != supported {ARTIFACT_VERSION}"
+        );
+        Ok(CalibrationArtifact {
+            version,
+            model: v.get("model")?.as_str()?.to_string(),
+            scenario: v.get("scenario")?.as_str()?.to_string(),
+            seed: v.get("seed")?.as_usize()? as u64,
+            replicas: v.get("replicas")?.as_usize()?,
+            slots: v.get("slots")?.as_usize()?,
+            source: v.get("source")?.as_str()?.to_string(),
+            rungs: v
+                .get("rungs")?
+                .as_arr()?
+                .iter()
+                .map(RungSamples::from_json)
+                .collect::<Result<_>>()?,
+        })
+    }
+
+    /// Refuse application to a run the fit cannot describe: the model
+    /// and the slot count (the decode table's domain) must match
+    /// exactly. Scenario/seed/replicas mismatches are legitimate
+    /// transfer uses but change what the fit was exposed to, so they
+    /// are surfaced as a notice instead of an error.
+    pub fn ensure_matches(
+        &self,
+        model: &str,
+        cfg: &crate::config::server::ServerConfig,
+    ) -> Result<()> {
+        anyhow::ensure!(
+            self.model == model,
+            "calibration artifact was fitted for '{}', not '{}'",
+            self.model,
+            model
+        );
+        anyhow::ensure!(
+            self.slots == cfg.slots_per_replica,
+            "calibration artifact was measured at {} slots/replica, run uses {}; \
+             re-run `lexi calibrate` with the matching --slots",
+            self.slots,
+            cfg.slots_per_replica
+        );
+        if self.scenario != cfg.scenario.label() || self.seed != cfg.seed
+            || self.replicas != cfg.replicas
+        {
+            println!(
+                "calibration note: artifact measured on scenario '{}' seed {} with {} replicas \
+                 (run: '{}' seed {} with {}) — transferring the fit across workloads",
+                self.scenario,
+                self.seed,
+                self.replicas,
+                cfg.scenario.label(),
+                cfg.seed,
+                cfg.replicas
+            );
+        }
+        Ok(())
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .with_context(|| format!("writing calibration artifact {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::from_json(&json::parse_file(path)?)
+            .with_context(|| format!("loading calibration artifact {}", path.display()))
+    }
+}
+
+/// Canonical artifact file name for a (model, scenario) pair.
+pub fn artifact_path(out_dir: &Path, model: &str, scenario: &str) -> std::path::PathBuf {
+    out_dir.join(format!("calibration_{model}_{scenario}.json"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(prefill: bool, rung: usize, x: f64, dt: f64, stall: f64) -> StepSample {
+        StepSample {
+            prefill,
+            rung,
+            x,
+            dt_s: dt,
+            stall_s: stall,
+        }
+    }
+
+    #[test]
+    fn buckets_accumulate_sufficient_statistics() {
+        let mut art = CalibrationArtifact::new("m", "poisson", 0, 2, 4, "engine-synthetic", 2);
+        art.record(&sample(false, 0, 2.0, 0.01, 0.0));
+        art.record(&sample(false, 0, 2.0, 0.03, 0.002));
+        art.record(&sample(false, 0, 4.0, 0.05, 0.0));
+        art.record(&sample(true, 0, 100.0, 0.2, 0.0));
+        assert_eq!(art.n_samples(), 4);
+        let r0 = &art.rungs[0];
+        assert_eq!(r0.decode.len(), 2); // occupancy 2 and 4
+        let b2 = &r0.decode[0];
+        assert_eq!((b2.key, b2.n), (2, 2));
+        assert!((b2.sum_x - 4.0).abs() < 1e-12);
+        assert!((b2.sum_y - 0.04).abs() < 1e-12);
+        assert!((b2.sum_xy - 0.08).abs() < 1e-12);
+        assert!((b2.sum_stall - 0.002).abs() < 1e-12);
+        // prefill bucketed at 64-token granularity
+        assert_eq!(r0.prefill[0].key, 100 / PREFILL_BUCKET_TOKENS);
+        assert_eq!(art.observed_rungs(), vec![0]);
+    }
+
+    #[test]
+    fn artifact_roundtrips_through_json() {
+        let mut art = CalibrationArtifact::new("qwen", "bursty", 7, 2, 4, "engine-synthetic", 3);
+        for i in 0..50 {
+            let occ = 1.0 + (i % 4) as f64;
+            art.record(&sample(false, i % 3, occ, 0.001 * occ + 0.0003, 1e-4));
+            art.record(&sample(true, i % 3, 64.0 * occ, 0.01 * occ, 0.0));
+        }
+        let re = CalibrationArtifact::from_json(&art.to_json()).unwrap();
+        assert_eq!(art, re);
+
+        let dir = std::env::temp_dir().join("lexi_calibration_artifact_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = artifact_path(&dir, "qwen", "bursty");
+        art.save(&path).unwrap();
+        assert_eq!(CalibrationArtifact::load(&path).unwrap(), art);
+    }
+
+    #[test]
+    fn ensure_matches_gates_model_and_slots_only() {
+        use crate::config::server::{ScenarioKind, ServerConfig};
+        let art = CalibrationArtifact::new("qwen", "poisson", 7, 2, 4, "engine-synthetic", 1);
+        let cfg = ServerConfig {
+            replicas: 2,
+            slots_per_replica: 4,
+            seed: 7,
+            scenario: ScenarioKind::Poisson,
+            ..Default::default()
+        };
+        assert!(art.ensure_matches("qwen", &cfg).is_ok());
+        assert!(art.ensure_matches("olmoe", &cfg).is_err());
+        let mut wrong_slots = cfg.clone();
+        wrong_slots.slots_per_replica = 8;
+        assert!(art.ensure_matches("qwen", &wrong_slots).is_err());
+        // scenario/seed transfer is allowed (notice only)
+        let mut transfer = cfg;
+        transfer.scenario = ScenarioKind::Bursty;
+        transfer.seed = 11;
+        assert!(art.ensure_matches("qwen", &transfer).is_ok());
+    }
+
+    #[test]
+    fn version_mismatch_is_rejected() {
+        let art = CalibrationArtifact::new("m", "s", 0, 1, 1, "engine-synthetic", 1);
+        let mut v = art.to_json();
+        if let Json::Obj(m) = &mut v {
+            m.insert("version".into(), Json::Num(99.0));
+        }
+        assert!(CalibrationArtifact::from_json(&v).is_err());
+    }
+}

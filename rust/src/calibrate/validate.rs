@@ -1,0 +1,637 @@
+//! Measure → fit → cross-validate: the drivers behind `lexi calibrate`
+//! and `lexi cross-validate`.
+//!
+//! Both commands replay the SAME seeded scenario trace (generated once,
+//! from the analytical baseline service model, so it is identical for
+//! every backend) through engine-backed replicas. `calibrate` buckets
+//! the measured step samples into a [`CalibrationArtifact`];
+//! `cross-validate` additionally replays the trace on the virtual-time
+//! sim twice — raw (analytical service models) and calibrated (service
+//! models refit from the artifact) — and reports per-percentile
+//! TTFT/TPOT divergence plus served-token parity between the backends.
+//!
+//! The pass/fail gate reads the BASELINE contender (single rung, no
+//! adaptive controller): its latency distribution is a pure function of
+//! the service model and the shared queueing discipline, so divergence
+//! there measures calibration quality, not rung-switch timing noise.
+//! The adaptive lexi-ladder contender is measured and reported alongside
+//! (it is what visits the deeper rungs during calibration) but does not
+//! gate. p50/p95 gate; p99 is reported but ungated — at CI-sized traces
+//! it is a near-max order statistic.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::config::model::ModelSpec;
+use crate::config::server::ServerConfig;
+use crate::server::report::meets_slo;
+use crate::server::{
+    self, Contender, QualityLadder, RunResult, Scenario, Trace, TransformReport,
+};
+use crate::util::json::Json;
+use crate::util::stats::percentile_sorted;
+
+use super::fit::apply_to_ladder;
+use super::observe::{artifact_path, CalibrationArtifact};
+
+/// Percentiles tracked per metric (order matters: `GATED` indexes it).
+pub const PERCENTILES: [f64; 3] = [50.0, 95.0, 99.0];
+/// Indices of [`PERCENTILES`] that participate in the pass/fail gate.
+pub const GATED: [usize; 2] = [0, 1];
+/// Default relative-divergence tolerance of the gate.
+pub const DEFAULT_TOLERANCE: f64 = 0.5;
+
+/// One backend's latency/goodput summary over the shared trace.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BackendSummary {
+    pub n_completed: usize,
+    /// Generated tokens over all completions (the parity quantity).
+    pub served_tokens: u64,
+    pub goodput_rps: f64,
+    pub throughput_tok_s: f64,
+    pub makespan_s: f64,
+    /// TTFT at [`PERCENTILES`].
+    pub ttft_s: [f64; 3],
+    /// TPOT at [`PERCENTILES`].
+    pub tpot_s: [f64; 3],
+}
+
+impl BackendSummary {
+    fn from_run(res: &RunResult, scenario: &Scenario) -> Self {
+        let mut ttft: Vec<f64> = res.completed.iter().map(|c| c.ttft_s).collect();
+        let mut tpot: Vec<f64> = res.completed.iter().map(|c| c.tpot_s()).collect();
+        ttft.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        tpot.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |s: &[f64]| {
+            let mut out = [0.0; 3];
+            for (i, p) in PERCENTILES.iter().enumerate() {
+                out[i] = percentile_sorted(s, *p);
+            }
+            out
+        };
+        let makespan = res.makespan_s.max(1e-9);
+        let n_slo_met = res
+            .completed
+            .iter()
+            .filter(|c| meets_slo(c, &scenario.slos[c.class]))
+            .count();
+        let total_tokens: usize = res.completed.iter().map(|c| c.prompt_len + c.tokens).sum();
+        BackendSummary {
+            n_completed: res.completed.len(),
+            served_tokens: res.completed.iter().map(|c| c.tokens as u64).sum(),
+            goodput_rps: n_slo_met as f64 / makespan,
+            throughput_tok_s: total_tokens as f64 / makespan,
+            makespan_s: makespan,
+            ttft_s: pct(&ttft),
+            tpot_s: pct(&tpot),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n_completed", Json::Num(self.n_completed as f64)),
+            ("served_tokens", Json::Num(self.served_tokens as f64)),
+            ("goodput_rps", Json::Num(self.goodput_rps)),
+            ("throughput_tok_s", Json::Num(self.throughput_tok_s)),
+            ("makespan_s", Json::Num(self.makespan_s)),
+            ("ttft_s", Json::from_f64s(&self.ttft_s)),
+            ("tpot_s", Json::from_f64s(&self.tpot_s)),
+        ])
+    }
+}
+
+/// Relative per-percentile divergence of one sim run from the engine
+/// run: `|sim − engine| / engine`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Divergence {
+    pub ttft: [f64; 3],
+    pub tpot: [f64; 3],
+}
+
+impl Divergence {
+    pub fn between(sim: &BackendSummary, eng: &BackendSummary) -> Self {
+        let rel = |s: f64, e: f64| (s - e).abs() / e.max(1e-9);
+        let row = |s: &[f64; 3], e: &[f64; 3]| -> [f64; 3] {
+            std::array::from_fn(|i| rel(s[i], e[i]))
+        };
+        Divergence {
+            ttft: row(&sim.ttft_s, &eng.ttft_s),
+            tpot: row(&sim.tpot_s, &eng.tpot_s),
+        }
+    }
+
+    /// Worst divergence over the gated percentiles of both metrics.
+    pub fn max_gated(&self) -> f64 {
+        GATED
+            .iter()
+            .flat_map(|&i| [self.ttft[i], self.tpot[i]])
+            .fold(0.0, f64::max)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("ttft", Json::from_f64s(&self.ttft)),
+            ("tpot", Json::from_f64s(&self.tpot)),
+            ("max_gated", Json::Num(self.max_gated())),
+        ])
+    }
+}
+
+/// Engine vs. raw-sim vs. calibrated-sim comparison of one contender.
+#[derive(Clone, Debug)]
+pub struct ContenderValidation {
+    pub label: String,
+    pub engine: BackendSummary,
+    pub sim_raw: BackendSummary,
+    pub sim_calibrated: BackendSummary,
+    pub raw: Divergence,
+    pub calibrated: Divergence,
+    /// Per-request generated-token maps of engine and both sims agree
+    /// exactly (the "what was served" half of cross-validation).
+    pub token_parity: bool,
+}
+
+/// The full `lexi cross-validate` outcome.
+#[derive(Clone, Debug)]
+pub struct CrossValidation {
+    pub model: String,
+    pub scenario: String,
+    pub seed: u64,
+    pub tolerance: f64,
+    /// Rungs of the lexi ladder whose service models were refit.
+    pub calibrated_rungs: Vec<usize>,
+    pub contenders: Vec<ContenderValidation>,
+    /// Gate: token parity on every contender AND the baseline
+    /// contender's calibrated divergence within tolerance at the gated
+    /// percentiles.
+    pub pass: bool,
+}
+
+impl CrossValidation {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("scenario", Json::Str(self.scenario.clone())),
+            ("seed", Json::Num(self.seed as f64)),
+            ("tolerance", Json::Num(self.tolerance)),
+            ("percentiles", Json::from_f64s(&PERCENTILES)),
+            (
+                "calibrated_rungs",
+                Json::Arr(
+                    self.calibrated_rungs
+                        .iter()
+                        .map(|&r| Json::Num(r as f64))
+                        .collect(),
+                ),
+            ),
+            (
+                "contenders",
+                Json::Arr(
+                    self.contenders
+                        .iter()
+                        .map(|c| {
+                            Json::obj(vec![
+                                ("label", Json::Str(c.label.clone())),
+                                ("engine", c.engine.to_json()),
+                                ("sim_raw", c.sim_raw.to_json()),
+                                ("sim_calibrated", c.sim_calibrated.to_json()),
+                                ("divergence_raw", c.raw.to_json()),
+                                ("divergence_calibrated", c.calibrated.to_json()),
+                                ("token_parity", Json::Bool(c.token_parity)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("pass", Json::Bool(self.pass)),
+        ])
+    }
+}
+
+/// One engine-backed measurement pass: the calibration line-up (fixed
+/// baseline + adaptive lexi ladder), the shared scenario trace, the
+/// engine run results, and the artifact bucketed from their samples.
+pub(crate) struct EngineCollection {
+    pub line_up: Vec<Contender>,
+    pub scenario: Scenario,
+    pub trace: Trace,
+    pub runs: Vec<(TransformReport, RunResult)>,
+    pub artifact: CalibrationArtifact,
+}
+
+/// Build the calibration line-up and replay the seeded scenario on the
+/// engine backend, bucketing every measured step into an artifact. The
+/// baseline contender feeds rung 0 alongside the ladder run (its rung is
+/// the same k_vec), so rung 0 — the gate's rung — gets the most data.
+pub(crate) fn collect(
+    spec: &ModelSpec,
+    cfg: &ServerConfig,
+    artifacts: Option<&Path>,
+) -> Result<EngineCollection> {
+    let (table, source) =
+        server::sensitivity_table_sourced(spec, artifacts, cfg.seed, cfg.table_mode)?;
+    println!("ladder Stage-1 table source: {source}");
+    let pm = crate::perfmodel::PerfModel::new(spec.clone(), cfg.seed);
+    let full = QualityLadder::for_model(spec, &table, cfg, &pm)?;
+    let baseline = QualityLadder::fixed(
+        "base",
+        full.rungs[0].allocation.clone(),
+        full.rungs[0].service.clone(),
+    );
+    let line_up = vec![
+        Contender {
+            label: "baseline",
+            ladder: baseline,
+            adaptive: false,
+        },
+        Contender {
+            label: "lexi-ladder",
+            ladder: full.clone(),
+            adaptive: true,
+        },
+    ];
+    let (scenario, trace) = server::scenario_and_trace(&full.rungs[0].service, cfg)?;
+
+    let (runs, engine_source) = match server::try_real_runtime(spec, artifacts) {
+        Some(model) => {
+            println!("engine backend: compiled PJRT runtime ({})", spec.name);
+            (
+                server::engine_runs(spec, &model, &line_up, &scenario, &trace, cfg)?,
+                "engine-pjrt",
+            )
+        }
+        None => {
+            let model = server::synthetic_engine_model(spec, cfg, &scenario);
+            (
+                server::engine_runs(spec, &model, &line_up, &scenario, &trace, cfg)?,
+                "engine-synthetic",
+            )
+        }
+    };
+
+    let mut artifact = CalibrationArtifact::new(
+        spec.name,
+        scenario.name,
+        cfg.seed,
+        cfg.replicas,
+        cfg.slots_per_replica,
+        engine_source,
+        full.n_rungs(),
+    );
+    for (_, res) in &runs {
+        for samples in res.step_samples_per_replica.iter().flatten() {
+            artifact.record_all(samples.iter());
+        }
+    }
+    anyhow::ensure!(
+        artifact.n_samples() > 0,
+        "engine run produced no step samples to calibrate from"
+    );
+    Ok(EngineCollection {
+        line_up,
+        scenario,
+        trace,
+        runs,
+        artifact,
+    })
+}
+
+/// `lexi calibrate`: measure, bucket, fit, and write the artifact.
+/// Returns the artifact and the path it was written to.
+pub fn calibrate(
+    spec: &ModelSpec,
+    cfg: &ServerConfig,
+    artifacts: Option<&Path>,
+    out_dir: &Path,
+) -> Result<(CalibrationArtifact, PathBuf)> {
+    let col = collect(spec, cfg, artifacts)?;
+    print_fit_summary(&col.artifact);
+    let path = artifact_path(out_dir, spec.name, col.scenario.name);
+    col.artifact.save(&path)?;
+    println!("calibration artifact written to {}", path.display());
+    Ok((col.artifact, path))
+}
+
+/// Print each observed rung's fitted coefficients.
+pub fn print_fit_summary(art: &CalibrationArtifact) {
+    println!(
+        "calibration: {} samples over {} rungs (source {})",
+        art.n_samples(),
+        art.rungs.len(),
+        art.source
+    );
+    for (j, rs) in art.rungs.iter().enumerate() {
+        if rs.n_samples() == 0 {
+            println!("  rung {j}: no samples (analytical service model retained)");
+            continue;
+        }
+        let fit = super::fit::fit_rung(rs);
+        let pf = fit
+            .prefill
+            .map(|t| {
+                format!(
+                    "overhead {:.3}ms + {:.4}us/token (n={})",
+                    t.base_s * 1e3,
+                    t.per_x_s * 1e6,
+                    t.n
+                )
+            })
+            .unwrap_or_else(|| "no samples".to_string());
+        let df = fit
+            .decode
+            .map(|t| {
+                format!(
+                    "base {:.3}ms + {:.4}ms/slot (n={})",
+                    t.base_s * 1e3,
+                    t.per_x_s * 1e3,
+                    t.n
+                )
+            })
+            .unwrap_or_else(|| "no samples".to_string());
+        println!("  rung {j}: prefill {pf}; decode {df}");
+        if fit.prefill_stall_s > 0.0 || fit.decode_stall_s > 0.0 {
+            println!(
+                "  rung {j}: residency stall/step prefill {:.3}ms decode {:.3}ms",
+                fit.prefill_stall_s * 1e3,
+                fit.decode_stall_s * 1e3
+            );
+        }
+    }
+}
+
+fn token_map(res: &RunResult) -> BTreeMap<u64, usize> {
+    res.completed.iter().map(|c| (c.id, c.tokens)).collect()
+}
+
+/// `lexi cross-validate`: replay the same seeded trace on the engine
+/// backend and on the sim backend twice (analytical and calibrated
+/// service models), then compare latency distributions and served
+/// tokens. `calibration_file` reuses a saved artifact for the sim refit;
+/// without it the engine run's own samples are fitted inline.
+pub fn cross_validate(
+    spec: &ModelSpec,
+    cfg: &ServerConfig,
+    artifacts: Option<&Path>,
+    calibration_file: Option<&Path>,
+    tolerance: f64,
+    out_dir: &Path,
+) -> Result<CrossValidation> {
+    anyhow::ensure!(tolerance > 0.0, "--tolerance must be > 0");
+    // validate a supplied artifact BEFORE the expensive engine pass, so
+    // a mismatched file fails in milliseconds, not minutes
+    let supplied = match calibration_file {
+        Some(p) => {
+            let art = CalibrationArtifact::load(p)?;
+            art.ensure_matches(spec.name, cfg)
+                .with_context(|| format!("applying calibration artifact {}", p.display()))?;
+            Some(art)
+        }
+        None => None,
+    };
+    let col = collect(spec, cfg, artifacts)?;
+    let artifact = supplied.unwrap_or_else(|| col.artifact.clone());
+
+    // raw sim: the analytical service models, exactly as bench-serve
+    let raw_runs = server::sim_runs(spec, &col.line_up, &col.scenario, &col.trace, cfg);
+
+    // calibrated sim: same contenders, service models refit per rung
+    let mut cal_line_up: Vec<Contender> = col.line_up.clone();
+    let mut calibrated_rungs = Vec::new();
+    for c in &mut cal_line_up {
+        let applied = apply_to_ladder(&mut c.ladder, &artifact, false);
+        if c.label == "lexi-ladder" {
+            calibrated_rungs = applied;
+        }
+    }
+    let cal_runs = server::sim_runs(spec, &cal_line_up, &col.scenario, &col.trace, cfg);
+
+    let mut contenders = Vec::new();
+    for (i, (_, eng_res)) in col.runs.iter().enumerate() {
+        let eng = BackendSummary::from_run(eng_res, &col.scenario);
+        let raw = BackendSummary::from_run(&raw_runs[i].1, &col.scenario);
+        let cal = BackendSummary::from_run(&cal_runs[i].1, &col.scenario);
+        let token_parity = token_map(eng_res) == token_map(&raw_runs[i].1)
+            && token_map(eng_res) == token_map(&cal_runs[i].1);
+        contenders.push(ContenderValidation {
+            label: col.line_up[i].label.to_string(),
+            raw: Divergence::between(&raw, &eng),
+            calibrated: Divergence::between(&cal, &eng),
+            engine: eng,
+            sim_raw: raw,
+            sim_calibrated: cal,
+            token_parity,
+        });
+    }
+
+    let gate = &contenders[0]; // baseline (see module docs)
+    let pass =
+        contenders.iter().all(|c| c.token_parity) && gate.calibrated.max_gated() <= tolerance;
+    let cv = CrossValidation {
+        model: spec.name.to_string(),
+        scenario: col.scenario.name.to_string(),
+        seed: cfg.seed,
+        tolerance,
+        calibrated_rungs,
+        contenders,
+        pass,
+    };
+
+    print_cross_validation(&cv);
+    std::fs::create_dir_all(out_dir)?;
+    let report_path = out_dir.join(format!("cross_validate_{}_{}.json", cv.model, cv.scenario));
+    std::fs::write(&report_path, cv.to_json().to_string_pretty())
+        .with_context(|| format!("writing {}", report_path.display()))?;
+    write_bench_summary(&cv, &out_dir.join("BENCH_serve.json"))?;
+    crate::figures::cross_validation::divergence_figure(&cv).emit(out_dir)?;
+    println!("cross-validation report written to {}", report_path.display());
+    Ok(cv)
+}
+
+fn print_cross_validation(cv: &CrossValidation) {
+    println!(
+        "\n=== cross-validation: {} / {} (seed {}, tolerance {:.0}%) ===",
+        cv.model,
+        cv.scenario,
+        cv.seed,
+        cv.tolerance * 100.0
+    );
+    for c in &cv.contenders {
+        println!(
+            "{:<12} engine ttft p50/p95 {:.1}/{:.1}ms tpot p50 {:.2}ms | \
+             raw div {:.0}% | calibrated div {:.0}% | token parity {}",
+            c.label,
+            c.engine.ttft_s[0] * 1e3,
+            c.engine.ttft_s[1] * 1e3,
+            c.engine.tpot_s[0] * 1e3,
+            c.raw.max_gated() * 100.0,
+            c.calibrated.max_gated() * 100.0,
+            if c.token_parity { "ok" } else { "BROKEN" },
+        );
+    }
+    println!(
+        "gate ({}, ttft/tpot p50+p95): {}",
+        cv.contenders[0].label,
+        if cv.pass { "PASS" } else { "FAIL" }
+    );
+}
+
+/// The CI perf-trajectory summary: goodput + latency of every backend
+/// variant, plus the gate verdict, in one flat artifact.
+fn write_bench_summary(cv: &CrossValidation, path: &Path) -> Result<()> {
+    let v = Json::obj(vec![
+        ("bench", Json::Str("cross_validate".to_string())),
+        ("model", Json::Str(cv.model.clone())),
+        ("scenario", Json::Str(cv.scenario.clone())),
+        ("seed", Json::Num(cv.seed as f64)),
+        ("tolerance", Json::Num(cv.tolerance)),
+        ("pass", Json::Bool(cv.pass)),
+        (
+            "max_divergence_raw",
+            Json::Num(
+                cv.contenders
+                    .iter()
+                    .map(|c| c.raw.max_gated())
+                    .fold(0.0, f64::max),
+            ),
+        ),
+        (
+            "max_divergence_calibrated",
+            Json::Num(
+                cv.contenders
+                    .iter()
+                    .map(|c| c.calibrated.max_gated())
+                    .fold(0.0, f64::max),
+            ),
+        ),
+        (
+            "contenders",
+            Json::Arr(
+                cv.contenders
+                    .iter()
+                    .map(|c| {
+                        Json::obj(vec![
+                            ("label", Json::Str(c.label.clone())),
+                            ("engine", c.engine.to_json()),
+                            ("sim_raw", c.sim_raw.to_json()),
+                            ("sim_calibrated", c.sim_calibrated.to_json()),
+                            ("divergence_calibrated", c.calibrated.to_json()),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    std::fs::write(path, v.to_string_pretty())
+        .with_context(|| format!("writing {}", path.display()))?;
+    println!("serving summary written to {}", path.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::CompletedRequest;
+
+    fn run_with(ttfts: &[f64]) -> RunResult {
+        RunResult {
+            completed: ttfts
+                .iter()
+                .enumerate()
+                .map(|(i, &t)| CompletedRequest {
+                    id: i as u64,
+                    class: 0,
+                    arrival_s: 0.0,
+                    prompt_len: 64,
+                    tokens: 16,
+                    ttft_s: t,
+                    e2e_s: t + 0.15,
+                    finish_s: t + 0.15,
+                    replica: 0,
+                })
+                .collect(),
+            rejected_by_class: vec![0],
+            makespan_s: 10.0,
+            replica_busy_s: vec![5.0],
+            rung_switches: 0,
+            rung_time_s: vec![5.0],
+            prefill_calls: 1,
+            decode_steps: 10,
+            rung_switch_events: vec![],
+            steal_events: vec![],
+            steals: None,
+            min_slack_s: None,
+            step_time_per_replica: vec![None],
+            step_samples_per_replica: vec![None],
+            residency_per_replica: vec![None],
+        }
+    }
+
+    fn scenario() -> Scenario {
+        let mut s = Scenario::from_kind(crate::config::server::ScenarioKind::Poisson, 10.0);
+        s.resolve_slos(|_| 10.0, 10.0);
+        s
+    }
+
+    #[test]
+    fn summary_and_divergence_math() {
+        let s = scenario();
+        let eng = BackendSummary::from_run(&run_with(&[0.1, 0.2, 0.3, 0.4]), &s);
+        assert_eq!(eng.n_completed, 4);
+        assert_eq!(eng.served_tokens, 64);
+        assert!((eng.ttft_s[0] - 0.25).abs() < 1e-9);
+        // tpot = 0.15 / 15 = 0.01 for every request
+        assert!((eng.tpot_s[0] - 0.01).abs() < 1e-12);
+
+        let sim = BackendSummary::from_run(&run_with(&[0.15, 0.3, 0.45, 0.6]), &s);
+        let d = Divergence::between(&sim, &eng);
+        // every ttft percentile off by exactly +50%, tpot identical
+        for i in 0..3 {
+            assert!((d.ttft[i] - 0.5).abs() < 1e-9, "p{i}: {}", d.ttft[i]);
+            assert!(d.tpot[i] < 1e-9);
+        }
+        assert!((d.max_gated() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cross_validation_json_shape() {
+        let s = scenario();
+        let eng = BackendSummary::from_run(&run_with(&[0.1, 0.2]), &s);
+        let sim = BackendSummary::from_run(&run_with(&[0.1, 0.2]), &s);
+        let c = ContenderValidation {
+            label: "baseline".into(),
+            raw: Divergence::between(&sim, &eng),
+            calibrated: Divergence::between(&sim, &eng),
+            engine: eng,
+            sim_raw: sim.clone(),
+            sim_calibrated: sim,
+            token_parity: true,
+        };
+        let cv = CrossValidation {
+            model: "m".into(),
+            scenario: "poisson".into(),
+            seed: 7,
+            tolerance: 0.5,
+            calibrated_rungs: vec![0, 1],
+            contenders: vec![c],
+            pass: true,
+        };
+        let j = cv.to_json();
+        assert!(j.get("pass").unwrap().as_bool().unwrap());
+        let arr = j.get("contenders").unwrap().as_arr().unwrap();
+        assert_eq!(arr[0].get("label").unwrap().as_str().unwrap(), "baseline");
+        assert!(arr[0]
+            .get("divergence_calibrated")
+            .unwrap()
+            .get("max_gated")
+            .unwrap()
+            .as_f64()
+            .unwrap()
+            .abs()
+            < 1e-9);
+        // round-trips through the parser
+        let re = crate::util::json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(re.get("seed").unwrap().as_usize().unwrap(), 7);
+    }
+}

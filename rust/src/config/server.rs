@@ -317,6 +317,11 @@ pub struct ServerConfig {
     pub prefetch: bool,
     /// Request log for `--scenario trace-replay`.
     pub trace_file: Option<PathBuf>,
+    /// Calibration artifact (`lexi calibrate` output) whose fitted
+    /// service terms replace the analytical sim `ServiceModel`s
+    /// (`--calibration <file>`). `None` — the default — keeps every
+    /// sim output byte-identical to the uncalibrated releases.
+    pub calibration_file: Option<PathBuf>,
     /// One-off event-loop cost of swapping `k_vec` on a replica.
     pub reconfig_penalty_s: f64,
     /// Reference prompt/output lengths for service-model calibration.
@@ -351,6 +356,7 @@ impl Default for ServerConfig {
             evict: EvictKind::KvecAware,
             prefetch: true,
             trace_file: None,
+            calibration_file: None,
             reconfig_penalty_s: 0.002,
             service_in_len: 512,
             service_out_len: 64,
@@ -416,6 +422,7 @@ mod tests {
         assert_eq!(c.steal_cooldown_s, 0.0);
         assert!(c.hbm_budget_frac.is_none(), "residency must default OFF");
         assert!(c.trace_file.is_none());
+        assert!(c.calibration_file.is_none(), "calibration must default OFF");
         assert!(0.0 < c.slack_degrade_frac && c.slack_degrade_frac < c.slack_upgrade_frac);
     }
 }

@@ -278,12 +278,13 @@ impl<'m, M: ModelBackend> Engine<'m, M> {
             tokens[slot_idx * e.prefill_len..slot_idx * e.prefill_len + p.len()]
                 .copy_from_slice(p);
         }
+        let prompt_tokens: usize = admitted.iter().map(|(_, t)| t.req.prompt.len()).sum();
         let out = self
             .model
             .prefill(&tokens, &self.k_vec, &self.gate_bias)?;
         self.metrics.prefill_calls += 1;
+        self.metrics.prefill_tokens += prompt_tokens as u64;
         if let Some(r) = &mut self.residency {
-            let prompt_tokens: usize = admitted.iter().map(|(_, t)| t.req.prompt.len()).sum();
             let step = r.step(prompt_tokens.max(1));
             self.metrics.record_residency(&step);
         }

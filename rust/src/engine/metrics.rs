@@ -10,6 +10,11 @@ use super::request::RequestOutput;
 pub struct EngineMetrics {
     pub completed: Vec<RequestOutput>,
     pub prefill_calls: u64,
+    /// Prompt tokens admitted across all prefill calls — read as a
+    /// before/after delta by `server::EngineReplica` to tag each
+    /// measured prefill step with its token count (the calibration
+    /// fitter's prefill regressor; see `calibrate`).
+    pub prefill_tokens: u64,
     pub decode_calls: u64,
     pub decode_steps_active_slots: u64,
     pub decode_steps_total_slots: u64,

@@ -1,0 +1,106 @@
+//! Sim-vs-engine cross-validation divergence figure: one row per
+//! (contender, metric, percentile) with the engine measurement, both sim
+//! variants, and their relative divergence — the data behind the
+//! "calibration closes the gap" plot the CI gate uploads.
+
+use super::series::{f, FigureOutput};
+use crate::calibrate::{CrossValidation, PERCENTILES};
+
+/// Build the divergence figure (`fig_cross_validation_<model>_<scenario>`).
+pub fn divergence_figure(cv: &CrossValidation) -> FigureOutput {
+    let mut fig = FigureOutput::new(
+        &format!("fig_cross_validation_{}_{}", cv.model, cv.scenario),
+        &[
+            "contender",
+            "metric",
+            "percentile",
+            "engine_s",
+            "sim_raw_s",
+            "sim_cal_s",
+            "raw_rel_div",
+            "cal_rel_div",
+        ],
+    );
+    for c in &cv.contenders {
+        for (metric, eng, raw, cal, draw, dcal) in [
+            (
+                "ttft",
+                &c.engine.ttft_s,
+                &c.sim_raw.ttft_s,
+                &c.sim_calibrated.ttft_s,
+                &c.raw.ttft,
+                &c.calibrated.ttft,
+            ),
+            (
+                "tpot",
+                &c.engine.tpot_s,
+                &c.sim_raw.tpot_s,
+                &c.sim_calibrated.tpot_s,
+                &c.raw.tpot,
+                &c.calibrated.tpot,
+            ),
+        ] {
+            for (i, p) in PERCENTILES.iter().enumerate() {
+                fig.row(vec![
+                    c.label.clone(),
+                    metric.to_string(),
+                    format!("p{}", *p as u32),
+                    f(eng[i]),
+                    f(raw[i]),
+                    f(cal[i]),
+                    f(draw[i]),
+                    f(dcal[i]),
+                ]);
+            }
+        }
+    }
+    fig
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calibrate::{BackendSummary, ContenderValidation, Divergence};
+
+    fn summary(scale: f64) -> BackendSummary {
+        BackendSummary {
+            n_completed: 4,
+            served_tokens: 64,
+            goodput_rps: 1.0,
+            throughput_tok_s: 100.0,
+            makespan_s: 10.0,
+            ttft_s: [0.1 * scale, 0.2 * scale, 0.3 * scale],
+            tpot_s: [0.01 * scale, 0.02 * scale, 0.03 * scale],
+        }
+    }
+
+    #[test]
+    fn figure_has_one_row_per_contender_metric_percentile() {
+        let eng = summary(1.0);
+        let raw = summary(2.0);
+        let cal = summary(1.1);
+        let cv = CrossValidation {
+            model: "m".into(),
+            scenario: "poisson".into(),
+            seed: 0,
+            tolerance: 0.5,
+            calibrated_rungs: vec![0],
+            contenders: vec![ContenderValidation {
+                label: "baseline".into(),
+                raw: Divergence::between(&raw, &eng),
+                calibrated: Divergence::between(&cal, &eng),
+                engine: eng,
+                sim_raw: raw,
+                sim_calibrated: cal,
+                token_parity: true,
+            }],
+            pass: true,
+        };
+        let fig = divergence_figure(&cv);
+        assert_eq!(fig.rows.len(), 6); // 1 contender x 2 metrics x 3 percentiles
+        assert_eq!(fig.header.len(), 8);
+        assert!(fig.name.contains("cross_validation_m_poisson"));
+        // raw divergence column reads ~100% for the 2x-off sim
+        assert!(fig.rows[0][6].starts_with('1'));
+    }
+}

@@ -1,0 +1,156 @@
+//! Bench-memory curves: HBM budget × eviction-policy hit-rate/goodput
+//! figure regenerated from `bench_memory_*.json` sweep artifacts (the
+//! ROADMAP's outstanding residency figure).
+//!
+//! Every `bench_memory_<model>_<scenario>.json` in the output directory
+//! becomes one `fig_<stem>_curves.csv`: rows sorted (policy, budget) so
+//! each policy's budget curve is contiguous — hit rate, stall tail,
+//! goodput, throughput, and the perf-model cross-check side by side.
+//! When no sweep artifact exists yet, a small deterministic default
+//! sweep is run first so `lexi figures --exp memory` always renders.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::config::model::spec;
+use crate::config::server::{EvictKind, ScenarioKind, ServerConfig};
+use crate::server;
+
+use super::series::{f, FigureOutput};
+
+/// Regenerate the curves for every bench-memory sweep in `out_dir`,
+/// running a small default sweep first when none exists.
+pub fn run(out_dir: &Path) -> Result<Vec<FigureOutput>> {
+    let mut files = sweep_files(out_dir)?;
+    if files.is_empty() {
+        let m = spec("minicpm-moe-8x2b")?;
+        let cfg = ServerConfig {
+            replicas: 2,
+            slots_per_replica: 4,
+            n_requests: 32,
+            scenario: ScenarioKind::Bursty,
+            service_in_len: 256,
+            service_out_len: 32,
+            ..Default::default()
+        };
+        server::bench_memory(&m, &cfg, &[0.3, 0.5, 0.8], &EvictKind::all(), None, out_dir)?;
+        files = sweep_files(out_dir)?;
+        anyhow::ensure!(!files.is_empty(), "default bench-memory sweep wrote no JSON");
+    }
+    let mut figs = Vec::new();
+    for path in files {
+        figs.push(curves_from_json(&path, out_dir)?);
+    }
+    Ok(figs)
+}
+
+/// `bench_memory_*.json` artifacts in `dir`, sorted by name.
+fn sweep_files(dir: &Path) -> Result<Vec<PathBuf>> {
+    let mut files = Vec::new();
+    if dir.exists() {
+        for entry in std::fs::read_dir(dir)? {
+            let path = entry?.path();
+            let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            if name.starts_with("bench_memory_") && name.ends_with(".json") {
+                files.push(path);
+            }
+        }
+    }
+    files.sort();
+    Ok(files)
+}
+
+/// One sweep artifact -> one emitted figure.
+fn curves_from_json(path: &Path, out_dir: &Path) -> Result<FigureOutput> {
+    let json = crate::util::json::parse_file(path)?;
+    let rows = json
+        .as_arr()
+        .with_context(|| format!("{} is not a bench-memory array", path.display()))?;
+    struct Row {
+        policy: String,
+        prefetch: f64,
+        budget: f64,
+        hit_rate: f64,
+        stall_p95_s: f64,
+        goodput: f64,
+        tok_s: f64,
+        pm_tok_s: f64,
+    }
+    let mut parsed = Vec::new();
+    for r in rows {
+        parsed.push(Row {
+            policy: r.get("policy")?.as_str()?.to_string(),
+            prefetch: r.get("prefetch")?.as_f64()?,
+            budget: r.get("budget_frac")?.as_f64()?,
+            hit_rate: r.get("hit_rate")?.as_f64()?,
+            stall_p95_s: r.get("stall_p95_s")?.as_f64()?,
+            goodput: r.get("goodput_rps")?.as_f64()?,
+            tok_s: r.get("throughput_tok_s")?.as_f64()?,
+            pm_tok_s: r.get("pm_tok_s")?.as_f64()?,
+        });
+    }
+    // curve order: one contiguous budget sweep per policy
+    parsed.sort_by(|a, b| {
+        a.policy
+            .cmp(&b.policy)
+            .then(a.budget.partial_cmp(&b.budget).unwrap())
+    });
+    let stem = path
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .unwrap_or("bench_memory");
+    let mut fig = FigureOutput::new(
+        &format!("fig_{stem}_curves"),
+        &[
+            "policy",
+            "prefetch",
+            "budget_frac",
+            "hit_rate",
+            "stall_p95_ms",
+            "goodput_rps",
+            "throughput_tok_s",
+            "pm_tok_s",
+        ],
+    );
+    for r in &parsed {
+        fig.row(vec![
+            r.policy.clone(),
+            (if r.prefetch > 0.0 { "on" } else { "off" }).to_string(),
+            f(r.budget),
+            f(r.hit_rate),
+            f(r.stall_p95_s * 1e3),
+            f(r.goodput),
+            f(r.tok_s),
+            f(r.pm_tok_s),
+        ]);
+    }
+    fig.emit(out_dir)?;
+    Ok(fig)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn regenerates_default_sweep_and_emits_curves() {
+        let dir = std::env::temp_dir().join("lexi_fig_memory_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let figs = run(&dir).unwrap();
+        assert_eq!(figs.len(), 1);
+        // 3 budgets x 3 policies, policy-major curve order
+        assert_eq!(figs[0].rows.len(), 9);
+        let policies: Vec<&str> = figs[0].rows.iter().map(|r| r[0].as_str()).collect();
+        let mut sorted = policies.clone();
+        sorted.sort();
+        assert_eq!(policies, sorted, "rows must be policy-major for curves");
+        assert!(dir
+            .join("fig_bench_memory_minicpm-moe-8x2b_bursty_curves.csv")
+            .exists());
+
+        // second invocation reuses the existing sweep artifact
+        let again = run(&dir).unwrap();
+        assert_eq!(again[0].rows.len(), 9);
+    }
+}

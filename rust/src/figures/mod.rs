@@ -3,8 +3,10 @@
 
 pub mod ablation;
 pub mod accuracy_throughput;
+pub mod cross_validation;
 pub mod fig2;
 pub mod fig3;
+pub mod memory;
 pub mod pareto;
 pub mod series;
 pub mod table1;

@@ -32,10 +32,16 @@
 //!   simulated/real replicas, and a telemetry-driven control plane
 //!   ([`server::ClusterSnapshot`] → routing incl. SLO-class-aware,
 //!   queue/EDF-slack adaptive LExI ladder, cross-replica work stealing)
+//! - [`calibrate`] — calibration subsystem: occupancy-bucketed engine
+//!   step-time artifacts, least-squares refit of the sim
+//!   [`server::ServiceModel`] per ladder rung
+//!   (`ServiceModel::from_calibration`), and the `lexi calibrate` /
+//!   `lexi cross-validate` backend cross-validation gate
 //! - [`eval`]    — task harness (ppl, passkey, longqa, probes, VLM)
 //! - [`figures`] — regeneration of every paper table/figure
 //! - [`util`]    — rng, stats, csv
 
+pub mod calibrate;
 pub mod config;
 pub mod engine;
 pub mod eval;

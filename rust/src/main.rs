@@ -16,7 +16,14 @@
 //!                    multi-replica front-end (sim or real engine replicas)
 //!   lexi bench-memory [--budgets F1,F2] [--evict all|lru,lfu,kvec] [--scenario S]
 //!                    expert-residency sweep: HBM budgets x eviction policies
-//!   lexi figures  --exp fig2|fig3|fig9|figs4-8|table1|all
+//!   lexi calibrate  [--scenario S] [--requests N] [--seed S]
+//!                    run the engine backend and fit a sim ServiceModel
+//!                    calibration artifact from its step-time telemetry
+//!   lexi cross-validate [--calibration F] [--tolerance T]
+//!                    replay one seeded trace on engine + raw/calibrated sim,
+//!                    gate on TTFT/TPOT percentile divergence (nonzero exit
+//!                    beyond tolerance)
+//!   lexi figures  --exp fig2|fig3|fig9|figs4-8|table1|memory|all
 //!
 //! Global flags: --artifacts DIR (default ./artifacts), --out DIR
 //! (default ./results), --iters N, --fast.
@@ -115,6 +122,8 @@ fn run() -> Result<()> {
         "serve" => cmd_serve(&args)?,
         "bench-serve" => cmd_bench_serve(&args)?,
         "bench-memory" => cmd_bench_memory(&args)?,
+        "calibrate" => cmd_calibrate(&args)?,
+        "cross-validate" => cmd_cross_validate(&args)?,
         "figures" => cmd_figures(&args)?,
         "help" | "--help" | "-h" => print_help(),
         other => {
@@ -129,9 +138,9 @@ fn print_help() {
     println!(
         "lexi — LExI MoE inference coordinator\n\
          commands: table1 | profile | search | optimize | eval | serve | bench-serve |\n\
-                   bench-memory | figures\n\
+                   bench-memory | calibrate | cross-validate | figures\n\
          flags: --model M --budget B --artifacts DIR --out DIR --iters N --fast\n\
-         figures: --exp table1|fig2|fig3|fig9|figs4-8|ablations|all [--models a,b]\n\
+         figures: --exp table1|fig2|fig3|fig9|figs4-8|ablations|memory|all [--models a,b]\n\
          bench-serve: --scenario poisson|bursty|diurnal|closed-loop|flash-crowd|trace-replay|all\n\
                       --replicas N --slots N --route rr|jsq|p2c|classaware --backend sim|engine\n\
                       --table auto|synthetic|measured --ladder replica|cluster\n\
@@ -140,10 +149,15 @@ fn print_help() {
                       --hbm-budget F (expert HBM budget, fraction of footprint)\n\
                       --evict lru|lfu|kvec --prefetch on|off\n\
                       --trace-file F (JSONL log for trace-replay)\n\
+                      --calibration F (sim service models refit from the artifact)\n\
                       --requests N --model M --seed S\n\
          bench-memory: --budgets F1,F2,.. (fractions) --evict all|lru,lfu,kvec\n\
                       --scenario S --replicas N --slots N --requests N --prefetch on|off\n\
-                      --model M --seed S"
+                      --model M --seed S\n\
+         calibrate: --scenario S --replicas N --slots N --requests N --model M --seed S\n\
+                      (writes calibration_<model>_<scenario>.json to --out)\n\
+         cross-validate: calibrate flags plus --calibration F (reuse a saved artifact)\n\
+                      --tolerance T (gated TTFT/TPOT divergence, default 0.5)"
     );
 }
 
@@ -382,6 +396,9 @@ fn server_cfg_from_args(args: &Args) -> Result<lexi_moe::config::server::ServerC
     if let Some(f) = args.get("trace-file") {
         cfg.trace_file = Some(PathBuf::from(f));
     }
+    if let Some(f) = args.get("calibration") {
+        cfg.calibration_file = Some(PathBuf::from(f));
+    }
     if let Some(n) = args.get("requests") {
         cfg.n_requests = n.parse().context("--requests must be an integer")?;
     }
@@ -475,6 +492,10 @@ fn cmd_bench_memory(args: &Args) -> Result<()> {
     let model_name = args.get("model").unwrap_or("qwen1.5-moe-a2.7b");
     let mspec = spec(model_name)?;
     let mut cfg = server_cfg_from_args(args)?;
+    anyhow::ensure!(
+        cfg.calibration_file.is_none(),
+        "--calibration applies to bench-serve / cross-validate, not bench-memory"
+    );
     cfg.scenario = match args.get("scenario") {
         Some(s) => ScenarioKind::parse(s)?,
         None => ScenarioKind::Bursty,
@@ -525,6 +546,91 @@ fn cmd_bench_memory(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Shared setup of the calibration commands: model spec + `ServerConfig`
+/// with a calibration-sized request default (the engine backend pays
+/// real compute per request, so the default trace is smaller than
+/// bench-serve's).
+fn calibration_setup(
+    args: &Args,
+) -> Result<(lexi_moe::ModelSpec, lexi_moe::config::server::ServerConfig)> {
+    use lexi_moe::config::server::ScenarioKind;
+    let model_name = args.get("model").unwrap_or("qwen1.5-moe-a2.7b");
+    let mspec = spec(model_name)?;
+    let mut cfg = server_cfg_from_args(args)?;
+    if args.get("requests").is_none() {
+        cfg.n_requests = 64;
+    }
+    if let Some(s) = args.get("scenario") {
+        cfg.scenario = ScenarioKind::parse(s)?;
+    } else if cfg.trace_file.is_some() {
+        cfg.scenario = ScenarioKind::TraceReplay;
+    }
+    Ok((mspec, cfg))
+}
+
+/// Run the engine backend over one seeded scenario and fit the sim
+/// `ServiceModel` calibration artifact from its step-time telemetry.
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let (mspec, cfg) = calibration_setup(args)?;
+    let out = args.out_dir();
+    let artifacts = args.artifacts();
+    let artifacts_opt = artifacts.exists().then_some(artifacts.as_path());
+    println!(
+        "=== calibrate: {}, {} replicas x {} slots, scenario {}, {} requests, seed {} ===\n",
+        mspec.name,
+        cfg.replicas,
+        cfg.slots_per_replica,
+        cfg.scenario.label(),
+        cfg.n_requests,
+        cfg.seed
+    );
+    lexi_moe::calibrate::calibrate(&mspec, &cfg, artifacts_opt, &out)?;
+    Ok(())
+}
+
+/// Replay the same seeded trace on the engine backend and on the raw +
+/// calibrated sim, and gate on percentile divergence: exits nonzero when
+/// the calibrated sim diverges from the engine beyond --tolerance.
+fn cmd_cross_validate(args: &Args) -> Result<()> {
+    let (mspec, cfg) = calibration_setup(args)?;
+    let tolerance = match args.get("tolerance") {
+        Some(t) => t.parse().context("--tolerance must be a fraction (f64)")?,
+        None => lexi_moe::calibrate::DEFAULT_TOLERANCE,
+    };
+    let out = args.out_dir();
+    let artifacts = args.artifacts();
+    let artifacts_opt = artifacts.exists().then_some(artifacts.as_path());
+    println!(
+        "=== cross-validate: {}, {} replicas x {} slots, scenario {}, {} requests, \
+         seed {}, tolerance {:.0}% ===\n",
+        mspec.name,
+        cfg.replicas,
+        cfg.slots_per_replica,
+        cfg.scenario.label(),
+        cfg.n_requests,
+        cfg.seed,
+        tolerance * 100.0
+    );
+    let cv = lexi_moe::calibrate::cross_validate(
+        &mspec,
+        &cfg,
+        artifacts_opt,
+        cfg.calibration_file.as_deref(),
+        tolerance,
+        &out,
+    )?;
+    anyhow::ensure!(
+        cv.pass,
+        "cross-validation FAILED: calibrated-sim divergence {:.1}% exceeds tolerance {:.1}% \
+         (or served-token parity broke); see {}",
+        cv.contenders[0].calibrated.max_gated() * 100.0,
+        tolerance * 100.0,
+        out.join(format!("cross_validate_{}_{}.json", cv.model, cv.scenario))
+            .display()
+    );
+    Ok(())
+}
+
 fn cmd_figures(args: &Args) -> Result<()> {
     let exp = args.get("exp").unwrap_or("all");
     let out = args.out_dir();
@@ -571,6 +677,11 @@ fn cmd_figures(args: &Args) -> Result<()> {
             &cfg,
             "fig9_sensitivity_heatmaps",
         )?;
+    }
+    // NOT part of "ablations": rendering may run a (small) bench-memory
+    // sweep when no sweep artifact exists, and ablations stays cheap
+    if matches!(exp, "memory" | "all") {
+        figures::memory::run(&out)?;
     }
     if matches!(exp, "ablations" | "all") {
         figures::ablation::limitations_memory(&out, &cfg)?;

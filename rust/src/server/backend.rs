@@ -18,7 +18,7 @@
 use crate::experts::ResidencyStats;
 
 use super::scheduler::QueuedRequest;
-use super::telemetry::{ReplicaTelemetry, StepTimeSummary, TelemetryDetail};
+use super::telemetry::{ReplicaTelemetry, StepSample, StepTimeSummary, TelemetryDetail};
 
 /// A finished request with its serving timeline (event-loop clock).
 #[derive(Clone, Debug, PartialEq)]
@@ -53,6 +53,9 @@ pub struct BackendStats {
     /// Measured step-time distribution (engine backends only; the sim
     /// replica's phases are model outputs, not measurements).
     pub step_times: Option<StepTimeSummary>,
+    /// Every measured step, tagged for service-model calibration
+    /// (engine backends only — the raw input behind `step_times`).
+    pub step_samples: Option<Vec<StepSample>>,
     /// Expert-residency counters (`None` when the replica ran without a
     /// residency model — the default).
     pub residency: Option<ResidencyStats>,

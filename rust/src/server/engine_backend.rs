@@ -28,7 +28,7 @@ use crate::util::Pcg32;
 use super::backend::{BackendStats, CompletedRequest, ReplicaBackend};
 use super::ladder::QualityLadder;
 use super::scheduler::{EdfQueue, QueuedRequest};
-use super::telemetry::{ReplicaTelemetry, StepTimeSummary, TelemetryDetail};
+use super::telemetry::{ReplicaTelemetry, StepSample, StepTimeSummary, TelemetryDetail};
 
 /// Cluster-side bookkeeping for a request inside the engine.
 struct Inflight {
@@ -63,9 +63,11 @@ pub struct EngineReplica<'m, M: ModelBackend> {
     failed: bool,
     /// EWMA of recent measured step times (telemetry signal).
     step_ewma_s: f64,
-    /// Every measured `Engine::step` wall time, for the run report's
-    /// step-time histogram (sim `ServiceModel` calibration input).
-    step_samples_s: Vec<f64>,
+    /// Every measured `Engine::step`, tagged with phase kind, rung,
+    /// occupancy regressor, and residency stall — the run report's
+    /// step-time histogram AND the sim `ServiceModel` calibration input
+    /// (see [`crate::calibrate`]).
+    step_samples: Vec<StepSample>,
     // ---- counters ----
     busy_s: f64,
     prefill_calls: u64,
@@ -96,7 +98,7 @@ impl<'m, M: ModelBackend> EngineReplica<'m, M> {
             inflight: HashMap::new(),
             failed: false,
             step_ewma_s: 0.0,
-            step_samples_s: Vec::new(),
+            step_samples: Vec::new(),
             busy_s: 0.0,
             prefill_calls: 0,
             decode_steps: 0,
@@ -223,6 +225,11 @@ impl<'m, M: ModelBackend> ReplicaBackend for EngineReplica<'m, M> {
         }
         let wall = Instant::now();
         let stall_before_s = self.engine.metrics.expert_stall_s;
+        // calibration regressors, read as before/after deltas around the
+        // step: occupied slots for a decode step, admitted prompt tokens
+        // for a prefill step
+        let occ_before = self.engine.n_active();
+        let prefill_tokens_before = self.engine.metrics.prefill_tokens;
         let outcome = match self.engine.step_detail() {
             Ok(o) => o,
             Err(e) => {
@@ -241,12 +248,24 @@ impl<'m, M: ModelBackend> ReplicaBackend for EngineReplica<'m, M> {
         // (same contract as the sim replica's stall-inflated phases);
         // the measured step-time histogram stays pure wall clock
         let stall_s = self.engine.metrics.expert_stall_s - stall_before_s;
-        match outcome.kind {
+        let x = match outcome.kind {
             StepKind::Idle => return false,
-            StepKind::Prefill => self.prefill_calls += 1,
-            StepKind::Decode => self.decode_steps += 1,
-        }
-        self.step_samples_s.push(dt);
+            StepKind::Prefill => {
+                self.prefill_calls += 1;
+                (self.engine.metrics.prefill_tokens - prefill_tokens_before) as f64
+            }
+            StepKind::Decode => {
+                self.decode_steps += 1;
+                occ_before as f64
+            }
+        };
+        self.step_samples.push(StepSample {
+            prefill: outcome.kind == StepKind::Prefill,
+            rung: self.rung,
+            x,
+            dt_s: dt,
+            stall_s,
+        });
         self.step_ewma_s = if self.step_ewma_s == 0.0 {
             dt + stall_s
         } else {
@@ -299,8 +318,8 @@ impl<'m, M: ModelBackend> ReplicaBackend for EngineReplica<'m, M> {
     }
 
     fn stats(&self) -> BackendStats {
-        let step_times = (!self.step_samples_s.is_empty()).then(|| {
-            let mut s = self.step_samples_s.clone();
+        let step_times = (!self.step_samples.is_empty()).then(|| {
+            let mut s: Vec<f64> = self.step_samples.iter().map(|s| s.dt_s).collect();
             s.sort_by(|a, b| a.partial_cmp(b).unwrap());
             StepTimeSummary {
                 n: s.len() as u64,
@@ -316,6 +335,7 @@ impl<'m, M: ModelBackend> ReplicaBackend for EngineReplica<'m, M> {
             rung_switches: self.rung_switches,
             rung_time_s: self.rung_time_s.clone(),
             step_times,
+            step_samples: (!self.step_samples.is_empty()).then(|| self.step_samples.clone()),
             residency: self.engine.residency_stats(),
         }
     }

@@ -53,7 +53,7 @@ use std::fmt;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::config::model::ModelSpec;
 use crate::config::server::{BackendKind, EvictKind, ScenarioKind, ServerConfig, TableMode};
@@ -73,7 +73,9 @@ pub use replica::{Replica, ServiceModel};
 pub use report::{MemoryReport, TransformReport};
 pub use router::{Cluster, RoutingPolicy, RunResult};
 pub use scheduler::{AdmissionControl, EdfQueue, QueuedRequest};
-pub use telemetry::{ClusterSnapshot, ReplicaTelemetry, StepTimeSummary, TelemetryDetail};
+pub use telemetry::{
+    ClusterSnapshot, ReplicaTelemetry, StepSample, StepTimeSummary, TelemetryDetail,
+};
 pub use workload::{load_trace_jsonl, Scenario, SloTarget, Trace, TraceRequest};
 
 /// Where the Stage-1 table used for ladder construction came from.
@@ -150,10 +152,11 @@ pub fn sensitivity_table_sourced(
 }
 
 /// The transform line-up every serving comparison runs.
-struct Contender {
-    label: &'static str,
-    ladder: QualityLadder,
-    adaptive: bool,
+#[derive(Clone)]
+pub(crate) struct Contender {
+    pub(crate) label: &'static str,
+    pub(crate) ladder: QualityLadder,
+    pub(crate) adaptive: bool,
 }
 
 fn contenders(
@@ -161,8 +164,24 @@ fn contenders(
     table: &SensitivityTable,
     cfg: &ServerConfig,
     pm: &PerfModel,
+    calibration: Option<&crate::calibrate::CalibrationArtifact>,
 ) -> Result<Vec<Contender>> {
-    let full = QualityLadder::for_model(spec, table, cfg, pm)?;
+    let mut full = QualityLadder::for_model(spec, table, cfg, pm)?;
+    // Refit the ladder's service models from measured engine step times
+    // when an artifact was supplied. baseline / lexi-fixed derive from
+    // the (now calibrated) full-ladder rungs below; inter-prune is not a
+    // ladder rung and keeps its analytical model.
+    if let Some(art) = calibration {
+        let applied = crate::calibrate::apply_to_ladder(&mut full, art, false);
+        println!(
+            "service models recalibrated from engine telemetry: rungs {:?} of {} \
+             ({} samples, source {})",
+            applied,
+            full.n_rungs(),
+            art.n_samples(),
+            art.source
+        );
+    }
     // fixed mid-ladder rung: the paper's static ~65% deployment
     let fixed_rung = full.rungs.get(full.n_rungs() / 2).unwrap_or(&full.rungs[0]);
     let fixed = QualityLadder::fixed_with_loss(
@@ -226,30 +245,11 @@ pub fn bench_serve(
 ) -> Result<Vec<TransformReport>> {
     let (table, source) = sensitivity_table_sourced(spec, artifacts, cfg.seed, cfg.table_mode)?;
     println!("ladder Stage-1 table source: {source}");
+    let calibration = load_calibration(spec, cfg)?;
     let pm = PerfModel::new(spec.clone(), cfg.seed);
-    let line_up = contenders(spec, &table, cfg, &pm)?;
+    let line_up = contenders(spec, &table, cfg, &pm, calibration.as_ref())?;
     let base_svc = &line_up[0].ladder.rungs[0].service;
-
-    // Scenario rates + SLOs calibrated against the BASELINE service
-    // model so every contender faces the identical workload contract.
-    // TTFT reference = a full batched-cohort prefill of the class's
-    // prompts plus two decode steps of scheduling slack (what an
-    // unqueued arrival at a busy replica actually experiences).
-    let slack = 2.0 * base_svc.step_time(cfg.slots_per_replica);
-    let mut scenario = Scenario::from_kind(cfg.scenario, estimate_capacity(base_svc, cfg));
-    if cfg.scenario == crate::config::server::ScenarioKind::TraceReplay {
-        let path = cfg
-            .trace_file
-            .as_ref()
-            .ok_or_else(|| anyhow::anyhow!("--scenario trace-replay needs --trace-file <jsonl>"))?;
-        let n = scenario.load_replay(path)?;
-        println!("trace replay: {n} requests from {}", path.display());
-    }
-    scenario.resolve_slos(
-        |tokens| base_svc.prefill_time(tokens * cfg.slots_per_replica) + slack,
-        base_svc.step_time(cfg.slots_per_replica),
-    );
-    let trace = scenario.generate(cfg.n_requests, cfg.seed);
+    let (scenario, trace) = scenario_and_trace(base_svc, cfg)?;
 
     let reports = match cfg.backend {
         BackendKind::Sim => sim_reports(spec, &line_up, &scenario, &trace, cfg),
@@ -308,13 +308,7 @@ pub fn bench_memory(
     let base_svc = &ladder.rungs[0].service;
 
     // the identical workload contract across every sweep cell
-    let slack = 2.0 * base_svc.step_time(cfg.slots_per_replica);
-    let mut scenario = Scenario::from_kind(cfg.scenario, estimate_capacity(base_svc, cfg));
-    scenario.resolve_slos(
-        |tokens| base_svc.prefill_time(tokens * cfg.slots_per_replica) + slack,
-        base_svc.step_time(cfg.slots_per_replica),
-    );
-    let trace = scenario.generate(cfg.n_requests, cfg.seed);
+    let (scenario, trace) = scenario_and_trace(base_svc, cfg)?;
 
     // per-GPU expert footprint: the unit --budgets fractions refer to
     let geom = crate::moe::arch::ModelGeom::paper_scale(spec);
@@ -380,6 +374,51 @@ pub fn bench_memory(
     Ok(rows)
 }
 
+/// Scenario + seeded trace calibrated against `base_svc` — the one
+/// workload contract shared by `bench_serve`, `bench_memory`, and the
+/// calibration pipeline. Rates and SLOs are derived from the BASELINE
+/// service model so every contender (and both backends) faces the
+/// identical trace: TTFT reference = a full batched-cohort prefill of
+/// the class's prompts plus two decode steps of scheduling slack (what
+/// an unqueued arrival at a busy replica actually experiences).
+pub(crate) fn scenario_and_trace(
+    base_svc: &ServiceModel,
+    cfg: &ServerConfig,
+) -> Result<(Scenario, Trace)> {
+    let slack = 2.0 * base_svc.step_time(cfg.slots_per_replica);
+    let mut scenario = Scenario::from_kind(cfg.scenario, estimate_capacity(base_svc, cfg));
+    if cfg.scenario == ScenarioKind::TraceReplay {
+        let path = cfg
+            .trace_file
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("--scenario trace-replay needs --trace-file <jsonl>"))?;
+        let n = scenario.load_replay(path)?;
+        println!("trace replay: {n} requests from {}", path.display());
+    }
+    scenario.resolve_slos(
+        |tokens| base_svc.prefill_time(tokens * cfg.slots_per_replica) + slack,
+        base_svc.step_time(cfg.slots_per_replica),
+    );
+    let trace = scenario.generate(cfg.n_requests, cfg.seed);
+    Ok((scenario, trace))
+}
+
+/// Load and validate the calibration artifact named by
+/// `cfg.calibration_file` (`None` when the flag is absent — the default
+/// analytical service models stay in place, byte for byte).
+fn load_calibration(
+    spec: &ModelSpec,
+    cfg: &ServerConfig,
+) -> Result<Option<crate::calibrate::CalibrationArtifact>> {
+    let Some(path) = &cfg.calibration_file else {
+        return Ok(None);
+    };
+    let art = crate::calibrate::CalibrationArtifact::load(path)?;
+    art.ensure_matches(spec.name, cfg)
+        .with_context(|| format!("applying calibration artifact {}", path.display()))?;
+    Ok(Some(art))
+}
+
 /// Residency model for one replica under `--hbm-budget` (`None` keeps
 /// the historical every-expert-resident behavior). `overlap_s` is the
 /// per-step compute window transfers can hide behind.
@@ -409,7 +448,22 @@ fn sim_reports(
     trace: &Trace,
     cfg: &ServerConfig,
 ) -> Vec<TransformReport> {
-    let mut reports = Vec::new();
+    sim_runs(spec, line_up, scenario, trace, cfg)
+        .into_iter()
+        .map(|(report, _)| report)
+        .collect()
+}
+
+/// [`sim_reports`] keeping the full [`RunResult`] per contender — the
+/// calibration pipeline reads completions and step samples from it.
+pub(crate) fn sim_runs(
+    spec: &ModelSpec,
+    line_up: &[Contender],
+    scenario: &Scenario,
+    trace: &Trace,
+    cfg: &ServerConfig,
+) -> Vec<(TransformReport, RunResult)> {
+    let mut runs = Vec::new();
     for c in line_up {
         let quality: Vec<f64> = c.ladder.rungs.iter().map(|r| r.quality_loss).collect();
         let policy = c.adaptive.then(|| LadderPolicy::from_config(cfg));
@@ -439,15 +493,11 @@ fn sim_reports(
         .with_stealing(cfg.steal_bound)
         .with_steal_cooldown(cfg.steal_cooldown_s);
         let res = cluster.run(scenario, trace);
-        reports.push(TransformReport::from_run(
-            scenario,
-            c.label,
-            cfg.policy.label(),
-            &res,
-            &quality,
-        ));
+        let report =
+            TransformReport::from_run(scenario, c.label, cfg.policy.label(), &res, &quality);
+        runs.push((report, res));
     }
-    reports
+    runs
 }
 
 /// Real engine replicas behind the same front door: every contender gets
@@ -461,6 +511,22 @@ fn engine_reports<M: ModelBackend>(
     trace: &Trace,
     cfg: &ServerConfig,
 ) -> Result<Vec<TransformReport>> {
+    Ok(engine_runs(spec, model, line_up, scenario, trace, cfg)?
+        .into_iter()
+        .map(|(report, _)| report)
+        .collect())
+}
+
+/// [`engine_reports`] keeping the full [`RunResult`] per contender —
+/// the measured step samples inside it are the calibration input.
+pub(crate) fn engine_runs<M: ModelBackend>(
+    spec: &ModelSpec,
+    model: &M,
+    line_up: &[Contender],
+    scenario: &Scenario,
+    trace: &Trace,
+    cfg: &ServerConfig,
+) -> Result<Vec<(TransformReport, RunResult)>> {
     let entry = model.entry().clone();
     if entry.batch != cfg.slots_per_replica {
         // the compiled graph's static batch wins over --slots; say so,
@@ -483,7 +549,7 @@ fn engine_reports<M: ModelBackend>(
         max_new_tokens: 16,
         decode_burst: 8,
     };
-    let mut reports = Vec::new();
+    let mut runs = Vec::new();
     for c in line_up {
         let quality: Vec<f64> = c.ladder.rungs.iter().map(|r| r.quality_loss).collect();
         let ladder = Rc::new(c.ladder.clone());
@@ -514,20 +580,16 @@ fn engine_reports<M: ModelBackend>(
         .with_stealing(cfg.steal_bound)
         .with_steal_cooldown(cfg.steal_cooldown_s);
         let res = cluster.run(scenario, trace);
-        reports.push(TransformReport::from_run(
-            scenario,
-            c.label,
-            cfg.policy.label(),
-            &res,
-            &quality,
-        ));
+        let report =
+            TransformReport::from_run(scenario, c.label, cfg.policy.label(), &res, &quality);
+        runs.push((report, res));
     }
-    Ok(reports)
+    Ok(runs)
 }
 
 /// Compiled runtime for `--backend engine` when artifacts AND real XLA
 /// bindings are available; `None` (with a notice) otherwise.
-fn try_real_runtime(spec: &ModelSpec, artifacts: Option<&Path>) -> Option<ModelRuntime> {
+pub(crate) fn try_real_runtime(spec: &ModelSpec, artifacts: Option<&Path>) -> Option<ModelRuntime> {
     let root = artifacts?;
     let load = || -> Result<ModelRuntime> {
         let rt = Runtime::cpu()?;
@@ -548,7 +610,7 @@ fn try_real_runtime(spec: &ModelSpec, artifacts: Option<&Path>) -> Option<ModelR
 
 /// Host-synthetic model sized so the scenario's largest request shape
 /// fits without truncation.
-fn synthetic_engine_model(
+pub(crate) fn synthetic_engine_model(
     spec: &ModelSpec,
     cfg: &ServerConfig,
     scenario: &Scenario,
@@ -579,7 +641,7 @@ fn synthetic_engine_model(
 }
 
 /// Cluster capacity estimate (requests/s) for scenario calibration.
-fn estimate_capacity(svc: &ServiceModel, cfg: &ServerConfig) -> f64 {
+pub(crate) fn estimate_capacity(svc: &ServiceModel, cfg: &ServerConfig) -> f64 {
     // mixture means of the standard profile catalog
     let s = Scenario::from_kind(cfg.scenario, 1.0);
     cfg.replicas as f64 * svc.capacity_rps(s.mean_prompt_tokens(), s.mean_gen_tokens())

@@ -409,6 +409,7 @@ impl ReplicaBackend for Replica {
             rung_switches: self.rung_switches,
             rung_time_s: self.rung_time_s.clone(),
             step_times: None,
+            step_samples: None,
             residency: self.residency.as_ref().map(|r| r.stats()),
         }
     }

@@ -563,6 +563,7 @@ mod tests {
             steals: None,
             min_slack_s: None,
             step_time_per_replica: vec![None, None],
+            step_samples_per_replica: vec![None, None],
             residency_per_replica: vec![None, None],
         }
     }

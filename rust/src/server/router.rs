@@ -30,7 +30,7 @@ use super::backend::{BackendStats, CompletedRequest, ReplicaBackend};
 use super::ladder::{LadderController, LadderPolicy, QualityLadder};
 use super::replica::Replica;
 use super::scheduler::{AdmissionControl, QueuedRequest};
-use super::telemetry::{ClusterSnapshot, StepTimeSummary, TelemetryDetail};
+use super::telemetry::{ClusterSnapshot, StepSample, StepTimeSummary, TelemetryDetail};
 use super::workload::{Scenario, Trace, TraceRequest};
 
 /// Outcome of one cluster run over a trace.
@@ -62,6 +62,10 @@ pub struct RunResult {
     /// Measured step-time summaries, one per replica (`None` entries
     /// for virtual-time replicas, which have no measured steps).
     pub step_time_per_replica: Vec<Option<StepTimeSummary>>,
+    /// Every measured step per replica, tagged for service-model
+    /// calibration (`None` for virtual-time replicas) — the raw stream
+    /// `calibrate::CalibrationArtifact` is accumulated from.
+    pub step_samples_per_replica: Vec<Option<Vec<StepSample>>>,
     /// Expert-residency counters, one per replica (`None` entries for
     /// replicas running without a residency model — the default).
     pub residency_per_replica: Vec<Option<ResidencyStats>>,
@@ -588,6 +592,7 @@ impl<'a> Cluster<'a> {
             min_slack_s: (extended && min_slack_obs.is_finite()).then_some(min_slack_obs),
             steal_events,
             step_time_per_replica: stats.iter().map(|s| s.step_times.clone()).collect(),
+            step_samples_per_replica: stats.iter().map(|s| s.step_samples.clone()).collect(),
             residency_per_replica: stats.iter().map(|s| s.residency.clone()).collect(),
             completed,
         }

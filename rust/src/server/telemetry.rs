@@ -188,6 +188,30 @@ pub struct StepTimeSummary {
     pub max_s: f64,
 }
 
+/// One measured engine scheduling step, tagged with everything the sim
+/// `ServiceModel` fitter conditions on: phase kind, quality-ladder rung,
+/// and the regressor the service model is linear in (admitted prompt
+/// tokens for prefill, active decode slots for decode). Simulated
+/// expert-residency stall is virtual time, so it is kept SEPARATE from
+/// the measured compute time — the fitter models the two independently
+/// (see [`crate::calibrate`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StepSample {
+    /// True for batched-prefill steps, false for decode steps.
+    pub prefill: bool,
+    /// Quality-ladder rung the replica was on during the step.
+    pub rung: usize,
+    /// Regressor: admitted prompt tokens (prefill) or occupied decode
+    /// slots (decode).
+    pub x: f64,
+    /// Measured wall-clock compute time of the step (residency stall
+    /// excluded).
+    pub dt_s: f64,
+    /// Simulated residency stall charged to the step in event-loop time
+    /// (0 without an HBM budget).
+    pub stall_s: f64,
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

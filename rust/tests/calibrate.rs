@@ -1,0 +1,143 @@
+//! Calibration round trip: fit a sim `ServiceModel` from a real
+//! engine-backend run (synthetic host model), cross-validate the two
+//! backends on the same seeded trace, and check that supplying the
+//! artifact changes bench-serve's sim outputs while the default stays
+//! byte-identical.
+
+use lexi_moe::calibrate::{self, CalibrationArtifact};
+use lexi_moe::config::model::spec;
+use lexi_moe::config::server::{ScenarioKind, ServerConfig};
+use lexi_moe::server;
+
+fn small_cfg(seed: u64) -> ServerConfig {
+    ServerConfig {
+        replicas: 2,
+        slots_per_replica: 4,
+        n_requests: 32,
+        scenario: ScenarioKind::Poisson,
+        service_in_len: 256,
+        service_out_len: 32,
+        seed,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn calibrate_then_cross_validate_round_trip() {
+    let m = spec("minicpm-moe-8x2b").unwrap();
+    let cfg = small_cfg(9);
+    let out = std::env::temp_dir().join("lexi_calibrate_roundtrip_test");
+    let _ = std::fs::remove_dir_all(&out);
+
+    // measure + fit + write the artifact from an engine-backend run
+    let (art, path) = calibrate::calibrate(&m, &cfg, None, &out).unwrap();
+    assert!(path.exists());
+    assert!(art.n_samples() > 0, "engine run recorded no step samples");
+    assert_eq!(art.model, "minicpm-moe-8x2b");
+    assert_eq!(art.slots, 4);
+    assert_eq!(art.source, "engine-synthetic");
+    // rung 0 (the gate's rung) must be observed by both contenders
+    assert!(art.observed_rungs().contains(&0));
+    assert_eq!(CalibrationArtifact::load(&path).unwrap(), art);
+
+    // replay the same seeded scenario on engine + raw sim + calibrated
+    // sim, reusing the saved artifact; generous tolerance because tests
+    // share the machine with the rest of the suite (CI gates at 0.5)
+    let cv = calibrate::cross_validate(&m, &cfg, None, Some(&path), 0.9, &out).unwrap();
+    assert_eq!(cv.contenders.len(), 2);
+    assert_eq!(cv.contenders[0].label, "baseline");
+    assert_eq!(cv.contenders[1].label, "lexi-ladder");
+    for c in &cv.contenders {
+        assert!(c.token_parity, "{}: backends served different tokens", c.label);
+        assert_eq!(c.engine.n_completed, 32);
+        assert_eq!(c.engine.served_tokens, c.sim_calibrated.served_tokens);
+    }
+    assert!(
+        cv.pass,
+        "calibrated divergence {:.2} exceeded tolerance (raw was {:.2})",
+        cv.contenders[0].calibrated.max_gated(),
+        cv.contenders[0].raw.max_gated()
+    );
+    // artifacts of the gate: full report, CI perf summary, figure CSV
+    assert!(out.join("cross_validate_minicpm-moe-8x2b_poisson.json").exists());
+    assert!(out.join("BENCH_serve.json").exists());
+    assert!(out
+        .join("fig_cross_validation_minicpm-moe-8x2b_poisson.csv")
+        .exists());
+    let bench = lexi_moe::util::json::parse_file(&out.join("BENCH_serve.json")).unwrap();
+    assert!(bench.get("pass").unwrap().as_bool().unwrap());
+    // summary carries the perf-trajectory numbers CI tracks over time
+    assert!(bench.get("max_divergence_calibrated").unwrap().as_f64().unwrap() >= 0.0);
+    let contenders = bench.get("contenders").unwrap().as_arr().unwrap();
+    assert_eq!(contenders.len(), 2);
+    assert!(contenders[0]
+        .get("engine")
+        .unwrap()
+        .get("goodput_rps")
+        .unwrap()
+        .as_f64()
+        .unwrap()
+        >= 0.0);
+}
+
+#[test]
+fn bench_serve_default_sim_outputs_stay_byte_identical_without_an_artifact() {
+    let m = spec("minicpm-moe-8x2b").unwrap();
+    let cfg = small_cfg(3);
+    let base = std::env::temp_dir().join("lexi_calibration_byte_identity_test");
+    let _ = std::fs::remove_dir_all(&base);
+
+    // two default runs must agree byte for byte
+    let dir_a = base.join("a");
+    let dir_b = base.join("b");
+    server::bench_serve(&m, &cfg, None, &dir_a).unwrap();
+    server::bench_serve(&m, &cfg, None, &dir_b).unwrap();
+    for name in [
+        "bench_serve_minicpm-moe-8x2b_poisson.csv",
+        "bench_serve_minicpm-moe-8x2b_poisson.json",
+    ] {
+        let a = std::fs::read(dir_a.join(name)).unwrap();
+        let b = std::fs::read(dir_b.join(name)).unwrap();
+        assert_eq!(a, b, "{name} not byte-identical across default runs");
+    }
+
+    // a calibration artifact swaps the service models -> different sim
+    let (_, art_path) = calibrate::calibrate(&m, &cfg, None, &base.join("cal")).unwrap();
+    let mut calibrated = cfg.clone();
+    calibrated.calibration_file = Some(art_path);
+    let dir_c = base.join("c");
+    let reports = server::bench_serve(&m, &calibrated, None, &dir_c).unwrap();
+    assert_eq!(reports.len(), 4);
+    let a = std::fs::read_to_string(dir_a.join("bench_serve_minicpm-moe-8x2b_poisson.json"))
+        .unwrap();
+    let c = std::fs::read_to_string(dir_c.join("bench_serve_minicpm-moe-8x2b_poisson.json"))
+        .unwrap();
+    assert_ne!(a, c, "calibrated run should change sim latencies");
+}
+
+#[test]
+fn mismatched_artifacts_are_refused() {
+    let m = spec("minicpm-moe-8x2b").unwrap();
+    let cfg = small_cfg(5);
+    let out = std::env::temp_dir().join("lexi_calibration_mismatch_test");
+    let _ = std::fs::remove_dir_all(&out);
+    let (art, _) = calibrate::calibrate(&m, &cfg, None, &out).unwrap();
+
+    // wrong model name
+    let mut wrong_model = art.clone();
+    wrong_model.model = "someone-else".into();
+    let p1 = out.join("wrong_model.json");
+    wrong_model.save(&p1).unwrap();
+    let mut c1 = cfg.clone();
+    c1.calibration_file = Some(p1);
+    assert!(server::bench_serve(&m, &c1, None, &out.join("x")).is_err());
+
+    // wrong slot count
+    let mut wrong_slots = art;
+    wrong_slots.slots = 16;
+    let p2 = out.join("wrong_slots.json");
+    wrong_slots.save(&p2).unwrap();
+    let mut c2 = cfg.clone();
+    c2.calibration_file = Some(p2);
+    assert!(server::bench_serve(&m, &c2, None, &out.join("y")).is_err());
+}

@@ -16,8 +16,11 @@
 //! there measures calibration quality, not rung-switch timing noise.
 //! The adaptive lexi-ladder contender is measured and reported alongside
 //! (it is what visits the deeper rungs during calibration) but does not
-//! gate. p50/p95 gate; p99 is reported but ungated — at CI-sized traces
-//! it is a near-max order statistic.
+//! gate. p50/p95 gate; p99 is reported but ungated by default — at
+//! CI-sized traces it is a near-max order statistic. `--gate-p99` opts
+//! the p99 column into the gate for runs long enough to trust it. All
+//! percentiles come from the shared [`crate::obs::Quantiles`]
+//! implementation, so the gate and every report agree bit-for-bit.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -26,12 +29,12 @@ use anyhow::{Context, Result};
 
 use crate::config::model::ModelSpec;
 use crate::config::server::ServerConfig;
+use crate::obs::Quantiles;
 use crate::server::report::meets_slo;
 use crate::server::{
     self, Contender, QualityLadder, RunResult, Scenario, Trace, TransformReport,
 };
 use crate::util::json::Json;
-use crate::util::stats::percentile_sorted;
 
 use super::fit::apply_to_ladder;
 use super::observe::{artifact_path, CalibrationArtifact};
@@ -60,17 +63,10 @@ pub struct BackendSummary {
 
 impl BackendSummary {
     fn from_run(res: &RunResult, scenario: &Scenario) -> Self {
-        let mut ttft: Vec<f64> = res.completed.iter().map(|c| c.ttft_s).collect();
-        let mut tpot: Vec<f64> = res.completed.iter().map(|c| c.tpot_s()).collect();
-        ttft.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        tpot.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let pct = |s: &[f64]| {
-            let mut out = [0.0; 3];
-            for (i, p) in PERCENTILES.iter().enumerate() {
-                out[i] = percentile_sorted(s, *p);
-            }
-            out
-        };
+        // the shared exact-percentile implementation (see crate::obs)
+        let ttft = Quantiles::from_samples(res.completed.iter().map(|c| c.ttft_s));
+        let tpot = Quantiles::from_samples(res.completed.iter().map(|c| c.tpot_s()));
+        let pct = |q: &Quantiles| -> [f64; 3] { std::array::from_fn(|i| q.q(PERCENTILES[i])) };
         let makespan = res.makespan_s.max(1e-9);
         let n_slo_met = res
             .completed
@@ -124,8 +120,14 @@ impl Divergence {
 
     /// Worst divergence over the gated percentiles of both metrics.
     pub fn max_gated(&self) -> f64 {
-        GATED
-            .iter()
+        self.max_gated_with(false)
+    }
+
+    /// [`max_gated`](Divergence::max_gated), optionally extending the
+    /// gate to the p99 column (`--gate-p99`).
+    pub fn max_gated_with(&self, gate_p99: bool) -> f64 {
+        let idxs: &[usize] = if gate_p99 { &[0, 1, 2] } else { &GATED };
+        idxs.iter()
             .flat_map(|&i| [self.ttft[i], self.tpot[i]])
             .fold(0.0, f64::max)
     }
@@ -160,6 +162,8 @@ pub struct CrossValidation {
     pub scenario: String,
     pub seed: u64,
     pub tolerance: f64,
+    /// Whether the p99 column participated in the gate (`--gate-p99`).
+    pub gate_p99: bool,
     /// Rungs of the lexi ladder whose service models were refit.
     pub calibrated_rungs: Vec<usize>,
     pub contenders: Vec<ContenderValidation>,
@@ -176,6 +180,7 @@ impl CrossValidation {
             ("scenario", Json::Str(self.scenario.clone())),
             ("seed", Json::Num(self.seed as f64)),
             ("tolerance", Json::Num(self.tolerance)),
+            ("gate_p99", Json::Bool(self.gate_p99)),
             ("percentiles", Json::from_f64s(&PERCENTILES)),
             (
                 "calibrated_rungs",
@@ -369,13 +374,17 @@ fn token_map(res: &RunResult) -> BTreeMap<u64, usize> {
 /// backend and on the sim backend twice (analytical and calibrated
 /// service models), then compare latency distributions and served
 /// tokens. `calibration_file` reuses a saved artifact for the sim refit;
-/// without it the engine run's own samples are fitted inline.
+/// without it the engine run's own samples are fitted inline. `gate_p99`
+/// extends the gate to the p99 column; `append` adds one compact entry
+/// to a perf-trajectory file (CI's `BENCH_serve.json`, kept in git).
 pub fn cross_validate(
     spec: &ModelSpec,
     cfg: &ServerConfig,
     artifacts: Option<&Path>,
     calibration_file: Option<&Path>,
     tolerance: f64,
+    gate_p99: bool,
+    append: Option<&Path>,
     out_dir: &Path,
 ) -> Result<CrossValidation> {
     anyhow::ensure!(tolerance > 0.0, "--tolerance must be > 0");
@@ -426,13 +435,14 @@ pub fn cross_validate(
     }
 
     let gate = &contenders[0]; // baseline (see module docs)
-    let pass =
-        contenders.iter().all(|c| c.token_parity) && gate.calibrated.max_gated() <= tolerance;
+    let pass = contenders.iter().all(|c| c.token_parity)
+        && gate.calibrated.max_gated_with(gate_p99) <= tolerance;
     let cv = CrossValidation {
         model: spec.name.to_string(),
         scenario: col.scenario.name.to_string(),
         seed: cfg.seed,
         tolerance,
+        gate_p99,
         calibrated_rungs,
         contenders,
         pass,
@@ -444,6 +454,10 @@ pub fn cross_validate(
     std::fs::write(&report_path, cv.to_json().to_string_pretty())
         .with_context(|| format!("writing {}", report_path.display()))?;
     write_bench_summary(&cv, &out_dir.join("BENCH_serve.json"))?;
+    if let Some(traj) = append {
+        crate::obs::append_trajectory(traj, "serve-trajectory", trajectory_entry(&cv))?;
+        println!("trajectory entry appended to {}", traj.display());
+    }
     crate::figures::cross_validation::divergence_figure(&cv).emit(out_dir)?;
     println!("cross-validation report written to {}", report_path.display());
     Ok(cv)
@@ -471,10 +485,40 @@ fn print_cross_validation(cv: &CrossValidation) {
         );
     }
     println!(
-        "gate ({}, ttft/tpot p50+p95): {}",
+        "gate ({}, ttft/tpot {}): {}",
         cv.contenders[0].label,
+        if cv.gate_p99 {
+            "p50+p95+p99"
+        } else {
+            "p50+p95"
+        },
         if cv.pass { "PASS" } else { "FAIL" }
     );
+}
+
+/// One compact perf-trajectory row per cross-validation run: enough to
+/// chart goodput/divergence over commits without the full report.
+fn trajectory_entry(cv: &CrossValidation) -> Json {
+    let base = &cv.contenders[0];
+    Json::obj(vec![
+        ("model", Json::Str(cv.model.clone())),
+        ("scenario", Json::Str(cv.scenario.clone())),
+        ("seed", Json::Num(cv.seed as f64)),
+        ("pass", Json::Bool(cv.pass)),
+        ("gate_p99", Json::Bool(cv.gate_p99)),
+        (
+            "max_divergence_calibrated",
+            Json::Num(
+                cv.contenders
+                    .iter()
+                    .map(|c| c.calibrated.max_gated())
+                    .fold(0.0, f64::max),
+            ),
+        ),
+        ("baseline_goodput_rps", Json::Num(base.engine.goodput_rps)),
+        ("baseline_ttft_p99_s", Json::Num(base.engine.ttft_s[2])),
+        ("baseline_tpot_p99_s", Json::Num(base.engine.tpot_s[2])),
+    ])
 }
 
 /// The CI perf-trajectory summary: goodput + latency of every backend
@@ -565,6 +609,7 @@ mod tests {
             step_time_per_replica: vec![None],
             step_samples_per_replica: vec![None],
             residency_per_replica: vec![None],
+            trace: None,
         }
     }
 
@@ -613,6 +658,7 @@ mod tests {
             scenario: "poisson".into(),
             seed: 7,
             tolerance: 0.5,
+            gate_p99: false,
             calibrated_rungs: vec![0, 1],
             contenders: vec![c],
             pass: true,

@@ -327,6 +327,20 @@ pub struct ServerConfig {
     /// Reference prompt/output lengths for service-model calibration.
     pub service_in_len: usize,
     pub service_out_len: usize,
+    /// Record request-span traces and emit the observability artifacts
+    /// (Perfetto JSON, critical-path CSV, Prometheus text, JSONL
+    /// snapshots) per transform (`--trace`). Off — the default — keeps
+    /// every run byte-identical to the untraced build (see
+    /// [`crate::obs`]).
+    pub trace: bool,
+    /// Span-event ring-buffer capacity; oldest events drop (and are
+    /// counted) beyond it.
+    pub trace_ring_cap: usize,
+    /// Virtual-time interval between JSONL metrics snapshots.
+    pub metrics_interval_s: f64,
+    /// Wall-clock self-profile of the sim's own hot sections
+    /// (`--selfprof`), appended to the repo-root `BENCH_selfprof.json`.
+    pub selfprof: bool,
 }
 
 impl Default for ServerConfig {
@@ -360,6 +374,10 @@ impl Default for ServerConfig {
             reconfig_penalty_s: 0.002,
             service_in_len: 512,
             service_out_len: 64,
+            trace: false,
+            trace_ring_cap: 1 << 20,
+            metrics_interval_s: 1.0,
+            selfprof: false,
         }
     }
 }
@@ -424,5 +442,9 @@ mod tests {
         assert!(c.trace_file.is_none());
         assert!(c.calibration_file.is_none(), "calibration must default OFF");
         assert!(0.0 < c.slack_degrade_frac && c.slack_degrade_frac < c.slack_upgrade_frac);
+        assert!(!c.trace, "tracing must default OFF");
+        assert!(!c.selfprof, "self-profiling must default OFF");
+        assert!(c.trace_ring_cap > 0);
+        assert!(c.metrics_interval_s > 0.0);
     }
 }

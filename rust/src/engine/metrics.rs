@@ -2,7 +2,7 @@
 
 use std::time::{Duration, Instant};
 
-use crate::util::stats::percentile;
+use crate::obs::Quantiles;
 
 use super::request::RequestOutput;
 
@@ -100,17 +100,18 @@ impl EngineMetrics {
             .iter()
             .map(|o| o.tokens.len() + o.prompt_len)
             .sum();
-        let ttft: Vec<f64> = self.completed.iter().map(|o| o.ttft_s).collect();
-        let e2e: Vec<f64> = self.completed.iter().map(|o| o.e2e_s).collect();
+        // the shared exact-percentile implementation (see crate::obs)
+        let ttft = Quantiles::from_samples(self.completed.iter().map(|o| o.ttft_s));
+        let e2e = Quantiles::from_samples(self.completed.iter().map(|o| o.e2e_s));
         MetricsSummary {
             n_requests: self.completed.len(),
             wall_s: wall,
             gen_tok_s: gen_tokens as f64 / wall,
             total_tok_s: total_tokens as f64 / wall,
-            ttft_p50_s: percentile(&ttft, 50.0),
-            ttft_p99_s: percentile(&ttft, 99.0),
-            e2e_p50_s: percentile(&e2e, 50.0),
-            e2e_p99_s: percentile(&e2e, 99.0),
+            ttft_p50_s: ttft.q(50.0),
+            ttft_p99_s: ttft.q(99.0),
+            e2e_p50_s: e2e.q(50.0),
+            e2e_p99_s: e2e.q(99.0),
             slot_utilization: if self.decode_steps_total_slots > 0 {
                 self.decode_steps_active_slots as f64 / self.decode_steps_total_slots as f64
             } else {

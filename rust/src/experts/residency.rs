@@ -251,6 +251,7 @@ impl ExpertResidency {
     /// One engine scheduling step over `tokens` routed tokens (active
     /// decode slots, or the admitted prompt tokens of a prefill).
     pub fn step(&mut self, tokens: usize) -> StepResidency {
+        crate::prof_scope!("residency.step");
         let (h0, m0, p0) = (self.store.hits, self.store.misses, self.store.prefetch_hits);
         let mut stall = 0.0;
         let l = self.routing.len();

@@ -84,6 +84,7 @@ mod tests {
             scenario: "poisson".into(),
             seed: 0,
             tolerance: 0.5,
+            gate_p99: false,
             calibrated_rungs: vec![0],
             contenders: vec![ContenderValidation {
                 label: "baseline".into(),

@@ -10,5 +10,6 @@ pub mod memory;
 pub mod pareto;
 pub mod series;
 pub mod table1;
+pub mod timeline;
 
 pub use series::FigureOutput;

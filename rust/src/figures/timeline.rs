@@ -1,0 +1,100 @@
+//! Request-timeline Gantt figure (`lexi figures --exp timeline`): one
+//! small traced sim run rendered as per-request queue → prefill →
+//! decode segments on absolute virtual time.
+//!
+//! The segments come straight from the span trace's critical paths
+//! (see [`crate::obs`]), so the figure shows the same decomposition the
+//! `critical_path_*.csv` artifact reports: where each request's latency
+//! actually went, request by request, replica by replica.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::config::model::spec;
+use crate::config::server::{ScenarioKind, ServerConfig};
+use crate::perfmodel::PerfModel;
+use crate::server::{self, Contender, QualityLadder};
+
+use super::series::{f, FigureOutput};
+
+/// Run a small deterministic traced sim and emit the Gantt rows.
+pub fn run(out_dir: &Path) -> Result<FigureOutput> {
+    let m = spec("minicpm-moe-8x2b")?;
+    let cfg = ServerConfig {
+        replicas: 2,
+        slots_per_replica: 4,
+        n_requests: 48,
+        scenario: ScenarioKind::Poisson,
+        service_in_len: 256,
+        service_out_len: 32,
+        trace: true,
+        ..Default::default()
+    };
+    let table = server::sensitivity_table(&m, None, cfg.seed);
+    let pm = PerfModel::new(m.clone(), cfg.seed);
+    let contender = Contender {
+        label: "lexi-ladder",
+        ladder: QualityLadder::for_model(&m, &table, &cfg, &pm)?,
+        adaptive: true,
+    };
+    let (scenario, trace) =
+        server::scenario_and_trace(&contender.ladder.rungs[0].service, &cfg)?;
+    let runs = server::sim_runs(&m, std::slice::from_ref(&contender), &scenario, &trace, &cfg);
+    let res = &runs[0].1;
+    let log = res.trace.as_ref().context("traced run returned no span log")?;
+
+    let mut fig = FigureOutput::new(
+        &format!("fig_timeline_{}_{}", m.name, scenario.name),
+        &["request", "class", "replica", "segment", "start_s", "end_s"],
+    );
+    for cp in log.critical_paths(&res.completed) {
+        let segments = [
+            ("queue", cp.arrival_s, cp.arrival_s + cp.queue_s),
+            (
+                "prefill",
+                cp.arrival_s + cp.queue_s,
+                cp.arrival_s + cp.ttft_s,
+            ),
+            ("decode", cp.arrival_s + cp.ttft_s, cp.arrival_s + cp.e2e_s),
+        ];
+        for (segment, start_s, end_s) in segments {
+            fig.row(vec![
+                cp.id.to_string(),
+                cp.class.to_string(),
+                cp.replica.to_string(),
+                segment.to_string(),
+                f(start_s),
+                f(end_s),
+            ]);
+        }
+    }
+    fig.emit(out_dir)?;
+    Ok(fig)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timeline_renders_contiguous_segments() {
+        let dir = std::env::temp_dir().join("lexi_fig_timeline_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let fig = run(&dir).unwrap();
+        assert!(!fig.rows.is_empty());
+        assert_eq!(fig.rows.len() % 3, 0, "three segments per request");
+        for req in fig.rows.chunks(3) {
+            assert_eq!(req[0][3], "queue");
+            assert_eq!(req[1][3], "prefill");
+            assert_eq!(req[2][3], "decode");
+            // identical f64 expressions format identically: the three
+            // segments tile [arrival, finish] with no gaps
+            assert_eq!(req[0][5], req[1][4], "queue..prefill contiguous");
+            assert_eq!(req[1][5], req[2][4], "prefill..decode contiguous");
+        }
+        assert!(dir
+            .join("fig_timeline_minicpm-moe-8x2b_poisson.csv")
+            .exists());
+    }
+}

@@ -37,6 +37,12 @@
 //!   [`server::ServiceModel`] per ladder rung
 //!   (`ServiceModel::from_calibration`), and the `lexi calibrate` /
 //!   `lexi cross-validate` backend cross-validation gate
+//! - [`obs`]     — unified observability: per-request span tracing
+//!   ([`obs::Tracer`], off by default and byte-identical when
+//!   disabled), the shared metrics registry / [`obs::Quantiles`]
+//!   percentile implementation, Perfetto + Prometheus + critical-path
+//!   exporters (`lexi trace`), and the sim self-profiler
+//!   (`BENCH_selfprof.json`)
 //! - [`eval`]    — task harness (ppl, passkey, longqa, probes, VLM)
 //! - [`figures`] — regeneration of every paper table/figure
 //! - [`util`]    — rng, stats, csv
@@ -49,6 +55,7 @@ pub mod experts;
 pub mod figures;
 pub mod lexi;
 pub mod moe;
+pub mod obs;
 pub mod perfmodel;
 pub mod pruning;
 pub mod runtime;

@@ -19,17 +19,19 @@
 //!   lexi calibrate  [--scenario S] [--requests N] [--seed S]
 //!                    run the engine backend and fit a sim ServiceModel
 //!                    calibration artifact from its step-time telemetry
-//!   lexi cross-validate [--calibration F] [--tolerance T]
+//!   lexi cross-validate [--calibration F] [--tolerance T] [--gate-p99]
+//!                    [--append F]
 //!                    replay one seeded trace on engine + raw/calibrated sim,
 //!                    gate on TTFT/TPOT percentile divergence (nonzero exit
 //!                    beyond tolerance)
-//!   lexi figures  --exp fig2|fig3|fig9|figs4-8|table1|memory|all
+//!   lexi trace    --check F [--prom F]   validate observability artifacts
+//!   lexi figures  --exp fig2|fig3|fig9|figs4-8|table1|memory|timeline|all
 //!
 //! Global flags: --artifacts DIR (default ./artifacts), --out DIR
 //! (default ./results), --iters N, --fast.
 
 use std::collections::HashMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
@@ -56,7 +58,9 @@ fn parse_args() -> Result<Args> {
     while let Some(a) = it.next() {
         if let Some(name) = a.strip_prefix("--") {
             let val = match name {
-                "fast" | "force" | "verify" => "1".to_string(),
+                "fast" | "force" | "verify" | "trace" | "selfprof" | "gate-p99" => {
+                    "1".to_string()
+                }
                 _ => it.next().with_context(|| format!("--{name} needs a value"))?,
             };
             flags.insert(name.to_string(), val);
@@ -124,6 +128,7 @@ fn run() -> Result<()> {
         "bench-memory" => cmd_bench_memory(&args)?,
         "calibrate" => cmd_calibrate(&args)?,
         "cross-validate" => cmd_cross_validate(&args)?,
+        "trace" => cmd_trace(&args)?,
         "figures" => cmd_figures(&args)?,
         "help" | "--help" | "-h" => print_help(),
         other => {
@@ -138,9 +143,10 @@ fn print_help() {
     println!(
         "lexi — LExI MoE inference coordinator\n\
          commands: table1 | profile | search | optimize | eval | serve | bench-serve |\n\
-                   bench-memory | calibrate | cross-validate | figures\n\
+                   bench-memory | calibrate | cross-validate | trace | figures\n\
          flags: --model M --budget B --artifacts DIR --out DIR --iters N --fast\n\
-         figures: --exp table1|fig2|fig3|fig9|figs4-8|ablations|memory|all [--models a,b]\n\
+         figures: --exp table1|fig2|fig3|fig9|figs4-8|ablations|memory|timeline|all\n\
+                      [--models a,b]\n\
          bench-serve: --scenario poisson|bursty|diurnal|closed-loop|flash-crowd|trace-replay|all\n\
                       --replicas N --slots N --route rr|jsq|p2c|classaware --backend sim|engine\n\
                       --table auto|synthetic|measured --ladder replica|cluster\n\
@@ -150,6 +156,10 @@ fn print_help() {
                       --evict lru|lfu|kvec --prefetch on|off\n\
                       --trace-file F (JSONL log for trace-replay)\n\
                       --calibration F (sim service models refit from the artifact)\n\
+                      --trace (record spans; emit Perfetto/critical-path/Prometheus\n\
+                      artifacts) --trace-ring-cap N --metrics-interval S\n\
+                      --selfprof (wall-clock profile of the sim's own hot sections;\n\
+                      appends to BENCH_selfprof.json, --selfprof-out F overrides)\n\
                       --requests N --model M --seed S\n\
          bench-memory: --budgets F1,F2,.. (fractions) --evict all|lru,lfu,kvec\n\
                       --scenario S --replicas N --slots N --requests N --prefetch on|off\n\
@@ -157,7 +167,11 @@ fn print_help() {
          calibrate: --scenario S --replicas N --slots N --requests N --model M --seed S\n\
                       (writes calibration_<model>_<scenario>.json to --out)\n\
          cross-validate: calibrate flags plus --calibration F (reuse a saved artifact)\n\
-                      --tolerance T (gated TTFT/TPOT divergence, default 0.5)"
+                      --tolerance T (gated TTFT/TPOT divergence, default 0.5)\n\
+                      --gate-p99 (extend the gate to p99) --append F (append one\n\
+                      trajectory entry to F, e.g. the repo-root BENCH_serve.json)\n\
+         trace: --check F (validate Perfetto trace_event JSON)\n\
+                      --prom F (validate Prometheus text exposition)"
     );
 }
 
@@ -399,6 +413,20 @@ fn server_cfg_from_args(args: &Args) -> Result<lexi_moe::config::server::ServerC
     if let Some(f) = args.get("calibration") {
         cfg.calibration_file = Some(PathBuf::from(f));
     }
+    if args.get("trace").is_some() {
+        cfg.trace = true;
+    }
+    if let Some(n) = args.get("trace-ring-cap") {
+        cfg.trace_ring_cap = n.parse().context("--trace-ring-cap must be an integer")?;
+        anyhow::ensure!(cfg.trace_ring_cap > 0, "--trace-ring-cap must be >= 1");
+    }
+    if let Some(s) = args.get("metrics-interval") {
+        cfg.metrics_interval_s = s.parse().context("--metrics-interval must be seconds (f64)")?;
+        anyhow::ensure!(cfg.metrics_interval_s > 0.0, "--metrics-interval must be > 0");
+    }
+    if args.get("selfprof").is_some() {
+        cfg.selfprof = true;
+    }
     if let Some(n) = args.get("requests") {
         cfg.n_requests = n.parse().context("--requests must be an integer")?;
     }
@@ -473,11 +501,31 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
             if cfg.prefetch { "on" } else { "off" }
         );
     }
+    if cfg.selfprof {
+        lexi_moe::obs::selfprof::enable();
+    }
     lexi_moe::server::report::print_header();
-    for kind in scenarios {
-        cfg.scenario = kind;
+    for kind in &scenarios {
+        cfg.scenario = *kind;
         let reports = lexi_moe::server::bench_serve(&mspec, &cfg, artifacts_opt, &out)?;
         lexi_moe::server::report::print_comparison(&reports);
+    }
+    if cfg.selfprof {
+        let prof = lexi_moe::obs::selfprof::disable_and_collect();
+        prof.print();
+        let path = PathBuf::from(args.get("selfprof-out").unwrap_or("BENCH_selfprof.json"));
+        let label = format!(
+            "bench-serve {} {} x{}",
+            model_name,
+            scenarios
+                .iter()
+                .map(|s| s.label())
+                .collect::<Vec<_>>()
+                .join("+"),
+            cfg.n_requests
+        );
+        lexi_moe::obs::append_trajectory(&path, "sim-selfprof", prof.to_json(&label))?;
+        println!("self-profile appended to {}", path.display());
     }
     println!("reports written to {}", out.display());
     Ok(())
@@ -611,23 +659,50 @@ fn cmd_cross_validate(args: &Args) -> Result<()> {
         cfg.seed,
         tolerance * 100.0
     );
+    let gate_p99 = args.get("gate-p99").is_some();
+    let append = args.get("append").map(PathBuf::from);
     let cv = lexi_moe::calibrate::cross_validate(
         &mspec,
         &cfg,
         artifacts_opt,
         cfg.calibration_file.as_deref(),
         tolerance,
+        gate_p99,
+        append.as_deref(),
         &out,
     )?;
     anyhow::ensure!(
         cv.pass,
         "cross-validation FAILED: calibrated-sim divergence {:.1}% exceeds tolerance {:.1}% \
          (or served-token parity broke); see {}",
-        cv.contenders[0].calibrated.max_gated() * 100.0,
+        cv.contenders[0].calibrated.max_gated_with(gate_p99) * 100.0,
         tolerance * 100.0,
         out.join(format!("cross_validate_{}_{}.json", cv.model, cv.scenario))
             .display()
     );
+    Ok(())
+}
+
+/// Validate observability artifacts (`lexi trace`): `--check F` checks
+/// a Perfetto `trace_event` JSON document's shape, `--prom F`
+/// additionally validates a Prometheus text exposition. Exits nonzero on
+/// the first malformed artifact — the CI smoke gate for `--trace`.
+fn cmd_trace(args: &Args) -> Result<()> {
+    let path = args
+        .get("check")
+        .context("--check <perfetto.json> required")?;
+    let doc = lexi_moe::util::json::parse_file(Path::new(path))
+        .with_context(|| format!("reading trace {path}"))?;
+    let sum = lexi_moe::obs::check_perfetto(&doc)
+        .with_context(|| format!("validating trace {path}"))?;
+    println!("{path}: ok ({} spans, {} instants)", sum.spans, sum.instants);
+    if let Some(p) = args.get("prom") {
+        let text =
+            std::fs::read_to_string(p).with_context(|| format!("reading exposition {p}"))?;
+        let ps = lexi_moe::obs::check_prometheus(&text)
+            .with_context(|| format!("validating exposition {p}"))?;
+        println!("{p}: ok ({} families, {} samples)", ps.families, ps.samples);
+    }
     Ok(())
 }
 
@@ -682,6 +757,9 @@ fn cmd_figures(args: &Args) -> Result<()> {
     // sweep when no sweep artifact exists, and ablations stays cheap
     if matches!(exp, "memory" | "all") {
         figures::memory::run(&out)?;
+    }
+    if matches!(exp, "timeline" | "all") {
+        figures::timeline::run(&out)?;
     }
     if matches!(exp, "ablations" | "all") {
         figures::ablation::limitations_memory(&out, &cfg)?;

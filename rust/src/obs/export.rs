@@ -1,0 +1,437 @@
+//! Trace exporters: Chrome/Perfetto `trace_event` JSON, the
+//! per-request critical-path CSV, and the shape checkers behind
+//! `lexi trace --check`.
+//!
+//! The Perfetto file renders two track groups: process 0 holds one
+//! thread per request (queue → prefill → decode complete spans), and
+//! process `replica + 1` holds that replica's phase spans plus instant
+//! markers for rung switches and steals. Timestamps are microseconds,
+//! as the `trace_event` format requires.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::csv_row;
+use crate::server::backend::CompletedRequest;
+use crate::util::csv::CsvWriter;
+use crate::util::json::Json;
+
+use super::trace::{EventKind, TraceLog};
+
+fn span(name: &str, cat: &str, ts_s: f64, dur_s: f64, pid: usize, tid: u64, args: Json) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(name.to_string())),
+        ("cat", Json::Str(cat.to_string())),
+        ("ph", Json::Str("X".to_string())),
+        ("ts", Json::Num(ts_s * 1e6)),
+        ("dur", Json::Num((dur_s * 1e6).max(0.0))),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(tid as f64)),
+        ("args", args),
+    ])
+}
+
+fn instant(name: &str, cat: &str, ts_s: f64, pid: usize, args: Json) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(name.to_string())),
+        ("cat", Json::Str(cat.to_string())),
+        ("ph", Json::Str("i".to_string())),
+        ("s", Json::Str("p".to_string())),
+        ("ts", Json::Num(ts_s * 1e6)),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(0.0)),
+        ("args", args),
+    ])
+}
+
+/// Render one finished run as Chrome/Perfetto `trace_event` JSON.
+pub fn perfetto_json(log: &TraceLog, completed: &[CompletedRequest]) -> Json {
+    let mut events = Vec::new();
+    // request tracks: queue / prefill / decode spans per completion
+    for cp in log.critical_paths(completed) {
+        let req_args = |extra: Vec<(&str, Json)>| {
+            let mut a = vec![
+                ("class", Json::Num(cp.class as f64)),
+                ("replica", Json::Num(cp.replica as f64)),
+            ];
+            a.extend(extra);
+            Json::obj(a)
+        };
+        events.push(span(
+            "queue",
+            "request",
+            cp.arrival_s,
+            cp.queue_s,
+            0,
+            cp.id,
+            req_args(vec![("steal_migrations", Json::Num(cp.steal_migrations as f64))]),
+        ));
+        events.push(span(
+            "prefill",
+            "request",
+            cp.arrival_s + cp.queue_s,
+            cp.prefill_s,
+            0,
+            cp.id,
+            req_args(vec![("stall_s", Json::Num(cp.stall_s))]),
+        ));
+        events.push(span(
+            "decode",
+            "request",
+            cp.arrival_s + cp.ttft_s,
+            cp.decode_s,
+            0,
+            cp.id,
+            req_args(vec![("e2e_s", Json::Num(cp.e2e_s))]),
+        ));
+    }
+    // replica tracks: phase spans + control-plane instants
+    for e in &log.events {
+        match &e.kind {
+            EventKind::PhaseStart {
+                replica,
+                phase,
+                rung,
+                dur_s,
+                stall_s,
+                active,
+                ..
+            } => {
+                events.push(span(
+                    phase.label(),
+                    "phase",
+                    e.t_s,
+                    *dur_s,
+                    replica + 1,
+                    0,
+                    Json::obj(vec![
+                        ("rung", Json::Num(*rung as f64)),
+                        ("active", Json::Num(*active as f64)),
+                        ("stall_s", Json::Num(*stall_s)),
+                    ]),
+                ));
+            }
+            EventKind::RungSwitch { replica, rung } => {
+                events.push(instant(
+                    "rung_switch",
+                    "ladder",
+                    e.t_s,
+                    replica + 1,
+                    Json::obj(vec![("rung", Json::Num(*rung as f64))]),
+                ));
+            }
+            EventKind::Steal { id, victim, thief } => {
+                events.push(instant(
+                    "steal",
+                    "steal",
+                    e.t_s,
+                    victim + 1,
+                    Json::obj(vec![
+                        ("id", Json::Num(*id as f64)),
+                        ("thief", Json::Num(*thief as f64)),
+                    ]),
+                ));
+            }
+            EventKind::Reject { id, class } => {
+                events.push(instant(
+                    "reject",
+                    "admission",
+                    e.t_s,
+                    0,
+                    Json::obj(vec![
+                        ("id", Json::Num(*id as f64)),
+                        ("class", Json::Num(*class as f64)),
+                    ]),
+                ));
+            }
+            _ => {}
+        }
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+        (
+            "otherData",
+            Json::obj(vec![("dropped_events", Json::Num(log.dropped as f64))]),
+        ),
+    ])
+}
+
+/// Column order of the critical-path CSV.
+pub const CRITICAL_PATH_HEADER: [&str; 10] = [
+    "request",
+    "class",
+    "replica",
+    "queue_s",
+    "prefill_s",
+    "decode_s",
+    "expert_stall_s",
+    "steal_migrations",
+    "ttft_s",
+    "e2e_s",
+];
+
+/// Write the per-request critical-path breakdown CSV. f64 fields use
+/// Rust's shortest round-trip formatting, so parsing a value back
+/// yields the bit-exact sim number.
+pub fn write_critical_path_csv(
+    path: &Path,
+    log: &TraceLog,
+    completed: &[CompletedRequest],
+) -> Result<()> {
+    let mut w = CsvWriter::create(path, &CRITICAL_PATH_HEADER)?;
+    for cp in log.critical_paths(completed) {
+        csv_row!(
+            w,
+            cp.id,
+            cp.class,
+            cp.replica,
+            cp.queue_s,
+            cp.prefill_s,
+            cp.decode_s,
+            cp.stall_s,
+            cp.steal_migrations,
+            cp.ttft_s,
+            cp.e2e_s
+        )?;
+    }
+    Ok(())
+}
+
+/// Summary of a validated Perfetto file.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PerfettoSummary {
+    pub spans: usize,
+    pub instants: usize,
+}
+
+/// Validate the shape of a Chrome/Perfetto `trace_event` JSON document:
+/// a `traceEvents` array whose entries carry `name`/`ph`/`ts`/`pid`,
+/// with `dur >= 0` on complete (`"X"`) spans.
+pub fn check_perfetto(doc: &Json) -> Result<PerfettoSummary> {
+    let events = doc
+        .get("traceEvents")
+        .context("missing top-level 'traceEvents'")?
+        .as_arr()
+        .context("'traceEvents' is not an array")?;
+    let mut sum = PerfettoSummary::default();
+    for (i, e) in events.iter().enumerate() {
+        let ph = e
+            .get("ph")
+            .and_then(|p| p.as_str())
+            .with_context(|| format!("event {i}: missing string 'ph'"))?;
+        e.get("name")
+            .and_then(|n| n.as_str())
+            .with_context(|| format!("event {i}: missing string 'name'"))?;
+        let ts = e
+            .get("ts")
+            .and_then(|t| t.as_f64())
+            .with_context(|| format!("event {i}: missing numeric 'ts'"))?;
+        anyhow::ensure!(ts.is_finite(), "event {i}: non-finite ts {ts}");
+        e.get("pid")
+            .and_then(|p| p.as_f64())
+            .with_context(|| format!("event {i}: missing numeric 'pid'"))?;
+        match ph {
+            "X" => {
+                let dur = e
+                    .get("dur")
+                    .and_then(|d| d.as_f64())
+                    .with_context(|| format!("event {i}: 'X' span without 'dur'"))?;
+                anyhow::ensure!(dur >= 0.0, "event {i}: negative dur {dur}");
+                sum.spans += 1;
+            }
+            "i" => sum.instants += 1,
+            other => bail!("event {i}: unsupported phase type '{other}'"),
+        }
+    }
+    anyhow::ensure!(sum.spans > 0, "no complete spans in trace");
+    Ok(sum)
+}
+
+/// Summary of a validated Prometheus exposition.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PromSummary {
+    pub families: usize,
+    pub samples: usize,
+}
+
+/// Validate Prometheus text exposition: every sample is preceded by a
+/// `# TYPE` for its family, values parse as floats, and histogram
+/// bucket counts are cumulative with a `le="+Inf"` terminator.
+pub fn check_prometheus(text: &str) -> Result<PromSummary> {
+    let mut sum = PromSummary::default();
+    let mut current_family: Option<String> = None;
+    let mut bucket_last: Option<(String, u64)> = None;
+    let mut saw_inf = true;
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it.next().context("# TYPE without a name")?;
+            let ty = it.next().context("# TYPE without a type")?;
+            anyhow::ensure!(
+                matches!(ty, "counter" | "gauge" | "histogram" | "summary"),
+                "line {ln}: unknown metric type '{ty}'"
+            );
+            anyhow::ensure!(saw_inf, "histogram before line {ln} lacks a +Inf bucket");
+            current_family = Some(name.to_string());
+            if ty == "histogram" {
+                saw_inf = false;
+            }
+            bucket_last = None;
+            sum.families += 1;
+            continue;
+        }
+        if line.starts_with('#') {
+            continue;
+        }
+        let (name_labels, value) = line
+            .rsplit_once(' ')
+            .with_context(|| format!("line {ln}: no value on '{line}'"))?;
+        value
+            .parse::<f64>()
+            .with_context(|| format!("line {ln}: value '{value}' is not a float"))?;
+        let name = name_labels.split('{').next().unwrap_or(name_labels);
+        let family = current_family
+            .as_deref()
+            .with_context(|| format!("line {ln}: sample before any # TYPE"))?;
+        anyhow::ensure!(
+            name.starts_with(family),
+            "line {ln}: sample '{name}' outside family '{family}'"
+        );
+        if name.ends_with("_bucket") {
+            let count: u64 = value
+                .parse()
+                .with_context(|| format!("line {ln}: bucket count '{value}'"))?;
+            let series = name_labels
+                .split("le=")
+                .next()
+                .unwrap_or(name_labels)
+                .to_string();
+            if let Some((prev_series, prev)) = &bucket_last {
+                if *prev_series == series {
+                    anyhow::ensure!(
+                        count >= *prev,
+                        "line {ln}: bucket counts not cumulative ({count} < {prev})"
+                    );
+                }
+            }
+            if name_labels.contains("le=\"+Inf\"") {
+                saw_inf = true;
+            }
+            bucket_last = Some((series, count));
+        }
+        sum.samples += 1;
+    }
+    anyhow::ensure!(saw_inf, "final histogram lacks a +Inf bucket");
+    anyhow::ensure!(sum.samples > 0, "no samples in exposition");
+    Ok(sum)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::{PhaseKind, Tracer};
+
+    fn sample_run() -> (TraceLog, Vec<CompletedRequest>) {
+        let mut t = Tracer::new(1024);
+        t.record(0.0, EventKind::Arrival { id: 1, class: 0 });
+        t.record(
+            0.1,
+            EventKind::PhaseStart {
+                replica: 0,
+                phase: PhaseKind::Prefill,
+                rung: 0,
+                dur_s: 0.2,
+                stall_s: 0.0,
+                active: 1,
+                ids: vec![1],
+            },
+        );
+        t.record(0.3, EventKind::FirstToken { id: 1, replica: 0 });
+        t.record(0.4, EventKind::RungSwitch { replica: 0, rung: 1 });
+        t.record(
+            0.9,
+            EventKind::Finish {
+                id: 1,
+                replica: 0,
+                class: 0,
+                ttft_s: 0.3,
+                e2e_s: 0.9,
+                tokens: 4,
+            },
+        );
+        let completed = vec![CompletedRequest {
+            id: 1,
+            class: 0,
+            arrival_s: 0.0,
+            prompt_len: 32,
+            tokens: 4,
+            ttft_s: 0.3,
+            e2e_s: 0.9,
+            finish_s: 0.9,
+            replica: 0,
+        }];
+        (t.finish(), completed)
+    }
+
+    #[test]
+    fn perfetto_round_trips_and_checks() {
+        let (log, completed) = sample_run();
+        let doc = perfetto_json(&log, &completed);
+        let re = crate::util::json::parse(&doc.to_string_pretty()).unwrap();
+        let sum = check_perfetto(&re).unwrap();
+        // 3 request spans + 1 phase span; 1 rung-switch instant
+        assert_eq!(sum.spans, 4);
+        assert_eq!(sum.instants, 1);
+    }
+
+    #[test]
+    fn check_rejects_malformed_traces() {
+        assert!(check_perfetto(&Json::obj(vec![])).is_err());
+        let bad = Json::obj(vec![(
+            "traceEvents",
+            Json::Arr(vec![Json::obj(vec![("ph", Json::Str("X".into()))])]),
+        )]);
+        assert!(check_perfetto(&bad).is_err());
+    }
+
+    #[test]
+    fn critical_path_csv_round_trips_bit_exactly() {
+        let (log, completed) = sample_run();
+        let dir = std::env::temp_dir().join("lexi_obs_export_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("cp.csv");
+        write_critical_path_csv(&path, &log, &completed).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut lines = text.lines();
+        assert_eq!(lines.next().unwrap(), CRITICAL_PATH_HEADER.join(","));
+        let row: Vec<&str> = lines.next().unwrap().split(',').collect();
+        let queue: f64 = row[3].parse().unwrap();
+        let prefill: f64 = row[4].parse().unwrap();
+        let decode: f64 = row[5].parse().unwrap();
+        let ttft: f64 = row[8].parse().unwrap();
+        let e2e: f64 = row[9].parse().unwrap();
+        // shortest round-trip formatting: the identities survive the file
+        assert_eq!(prefill, ttft - queue);
+        assert_eq!(decode, e2e - ttft);
+        assert_eq!(ttft, completed[0].ttft_s);
+    }
+
+    #[test]
+    fn prometheus_checker_accepts_registry_output() {
+        let (log, completed) = sample_run();
+        let m = crate::obs::MetricsRegistry::from_run(&log, &completed);
+        let text = m.prometheus_text();
+        let sum = check_prometheus(&text).unwrap();
+        assert!(sum.families >= 4, "{sum:?}");
+        assert!(sum.samples > 10, "{sum:?}");
+        // tampering with a bucket count breaks cumulativity
+        let bad = text.replace("le=\"+Inf\"} 1", "le=\"+Inf\"} 0");
+        assert!(check_prometheus(&bad).is_err());
+    }
+}

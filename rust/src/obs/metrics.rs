@@ -1,0 +1,443 @@
+//! Metrics registry: the one percentile implementation every report
+//! uses, plus counters / gauges / fixed-bucket histograms with
+//! Prometheus-text and JSONL exporters.
+//!
+//! [`Quantiles`] keeps exact samples (sort once, interpolate like
+//! [`percentile_sorted`]) — it is the shared implementation behind
+//! `server/report.rs`, `engine/metrics.rs`, and the cross-validation
+//! summaries, so swapping them onto it changes no reported number.
+//! [`Histogram`] is the fixed-bucket counterpart for the Prometheus
+//! exposition, where exact samples would not fit the format.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::server::backend::CompletedRequest;
+use crate::util::json::Json;
+use crate::util::stats::percentile_sorted;
+
+use super::trace::{EventKind, PhaseKind, TraceLog};
+
+/// Exact-sample quantile estimator: sort once, interpolate many.
+/// The numbers are identical to `util::stats::percentile` by
+/// construction (same comparator, same interpolation).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Quantiles {
+    sorted: Vec<f64>,
+}
+
+impl Quantiles {
+    pub fn from_samples(xs: impl IntoIterator<Item = f64>) -> Self {
+        let mut sorted: Vec<f64> = xs.into_iter().collect();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Quantiles { sorted }
+    }
+
+    /// Linear-interpolated percentile, `p` in [0, 100].
+    pub fn q(&self, p: f64) -> f64 {
+        percentile_sorted(&self.sorted, p)
+    }
+
+    pub fn n(&self) -> usize {
+        self.sorted.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+
+    pub fn max(&self) -> f64 {
+        self.sorted.last().copied().unwrap_or(0.0)
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sorted.iter().sum()
+    }
+}
+
+/// Fixed-bucket cumulative histogram (Prometheus `le` semantics).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Histogram {
+    /// Upper bounds (ascending); an implicit `+Inf` bucket follows.
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    sum: f64,
+    count: u64,
+}
+
+/// Default latency buckets (seconds): 1ms .. 10s, roughly log-spaced.
+pub const LATENCY_BUCKETS_S: [f64; 12] = [
+    0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 10.0,
+];
+
+impl Histogram {
+    pub fn new(bounds: &[f64]) -> Self {
+        Histogram {
+            bounds: bounds.to_vec(),
+            counts: vec![0; bounds.len() + 1],
+            sum: 0.0,
+            count: 0,
+        }
+    }
+
+    pub fn observe(&mut self, v: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| v <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.sum += v;
+        self.count += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// `(le, cumulative_count)` rows, ending with the `+Inf` bucket.
+    pub fn cumulative(&self) -> Vec<(f64, u64)> {
+        let mut acc = 0u64;
+        let mut out = Vec::with_capacity(self.counts.len());
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            let le = self.bounds.get(i).copied().unwrap_or(f64::INFINITY);
+            out.push((le, acc));
+        }
+        out
+    }
+}
+
+/// A metric identity: name plus ordered label pairs.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+struct MetricKey {
+    name: String,
+    labels: Vec<(String, String)>,
+}
+
+fn key(name: &str, labels: &[(&str, String)]) -> MetricKey {
+    MetricKey {
+        name: name.to_string(),
+        labels: labels
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.clone()))
+            .collect(),
+    }
+}
+
+fn label_str(labels: &[(String, String)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let inner: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{v}\""))
+        .collect();
+    format!("{{{}}}", inner.join(","))
+}
+
+/// Counters, gauges, and fixed-bucket histograms keyed by
+/// `{replica, class, rung}`-style label sets, with Prometheus text and
+/// JSONL snapshot exporters.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<MetricKey, u64>,
+    gauges: BTreeMap<MetricKey, f64>,
+    hists: BTreeMap<MetricKey, Histogram>,
+    help: BTreeMap<String, &'static str>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&mut self, name: &str, labels: &[(&str, String)], by: u64) {
+        *self.counters.entry(key(name, labels)).or_insert(0) += by;
+    }
+
+    pub fn set_gauge(&mut self, name: &str, labels: &[(&str, String)], v: f64) {
+        self.gauges.insert(key(name, labels), v);
+    }
+
+    pub fn observe(&mut self, name: &str, labels: &[(&str, String)], bounds: &[f64], v: f64) {
+        self.hists
+            .entry(key(name, labels))
+            .or_insert_with(|| Histogram::new(bounds))
+            .observe(v);
+    }
+
+    pub fn help(&mut self, name: &'static str, text: &'static str) {
+        self.help.insert(name.to_string(), text);
+    }
+
+    pub fn counter(&self, name: &str, labels: &[(&str, String)]) -> u64 {
+        self.counters.get(&key(name, labels)).copied().unwrap_or(0)
+    }
+
+    /// Sum of one counter over every label set it was recorded with.
+    pub fn counter_total(&self, name: &str) -> u64 {
+        self.counters
+            .iter()
+            .filter(|(k, _)| k.name == name)
+            .map(|(_, v)| v)
+            .sum()
+    }
+
+    /// Prometheus text exposition (`# TYPE` lines, histogram
+    /// `_bucket`/`_sum`/`_count` expansion, `le="+Inf"` terminator).
+    pub fn prometheus_text(&self) -> String {
+        let mut out = String::new();
+        // BTreeMap order groups label sets under one # TYPE header
+        let mut last = String::new();
+        for (k, v) in &self.counters {
+            if last != k.name {
+                if let Some(h) = self.help.get(&k.name) {
+                    let _ = writeln!(out, "# HELP {} {h}", k.name);
+                }
+                let _ = writeln!(out, "# TYPE {} counter", k.name);
+                last = k.name.clone();
+            }
+            let _ = writeln!(out, "{}{} {v}", k.name, label_str(&k.labels));
+        }
+        last.clear();
+        for (k, v) in &self.gauges {
+            if last != k.name {
+                if let Some(h) = self.help.get(&k.name) {
+                    let _ = writeln!(out, "# HELP {} {h}", k.name);
+                }
+                let _ = writeln!(out, "# TYPE {} gauge", k.name);
+                last = k.name.clone();
+            }
+            let _ = writeln!(out, "{}{} {v}", k.name, label_str(&k.labels));
+        }
+        last.clear();
+        for (k, h) in &self.hists {
+            if last != k.name {
+                if let Some(help) = self.help.get(&k.name) {
+                    let _ = writeln!(out, "# HELP {} {help}", k.name);
+                }
+                let _ = writeln!(out, "# TYPE {} histogram", k.name);
+                last = k.name.clone();
+            }
+            for (le, c) in h.cumulative() {
+                let mut labels = k.labels.clone();
+                let le_s = if le.is_infinite() {
+                    "+Inf".to_string()
+                } else {
+                    format!("{le}")
+                };
+                labels.push(("le".to_string(), le_s));
+                let _ = writeln!(out, "{}_bucket{} {c}", k.name, label_str(&labels));
+            }
+            let _ = writeln!(out, "{}_sum{} {}", k.name, label_str(&k.labels), h.sum());
+            let _ = writeln!(out, "{}_count{} {}", k.name, label_str(&k.labels), h.count());
+        }
+        out
+    }
+
+    /// Build the full registry from one finished run: every request
+    /// outcome, phase, stall, steal, and rung switch keyed by
+    /// `{replica, class, rung}`.
+    pub fn from_run(log: &TraceLog, completed: &[CompletedRequest]) -> Self {
+        let mut m = MetricsRegistry::new();
+        m.help("lexi_requests_completed_total", "completions per replica x class");
+        m.help("lexi_requests_rejected_total", "admission-control sheds per class");
+        m.help("lexi_steals_total", "queued requests migrated by work stealing");
+        m.help("lexi_rung_switches_total", "ladder rung switches per replica");
+        m.help("lexi_trace_events_dropped", "events lost to the trace ring cap");
+        m.help("lexi_ttft_seconds", "time to first token per class");
+        m.help("lexi_tpot_seconds", "time per output token per class");
+        m.help("lexi_queue_wait_seconds", "EDF queue wait per class");
+        m.help("lexi_phase_seconds", "phase duration per replica x phase x rung");
+        m.help("lexi_expert_stall_seconds", "expert fetch stall per replica");
+        m.set_gauge("lexi_trace_events_dropped", &[], log.dropped as f64);
+        for e in &log.events {
+            match &e.kind {
+                EventKind::Reject { class, .. } => {
+                    m.inc("lexi_requests_rejected_total", &[("class", class.to_string())], 1);
+                }
+                EventKind::Steal { .. } => m.inc("lexi_steals_total", &[], 1),
+                EventKind::RungSwitch { replica, .. } => {
+                    m.inc("lexi_rung_switches_total", &[("replica", replica.to_string())], 1);
+                }
+                EventKind::PhaseStart {
+                    replica,
+                    phase,
+                    rung,
+                    dur_s,
+                    stall_s,
+                    ..
+                } => {
+                    m.observe(
+                        "lexi_phase_seconds",
+                        &[
+                            ("replica", replica.to_string()),
+                            ("phase", phase.label().to_string()),
+                            ("rung", rung.to_string()),
+                        ],
+                        &LATENCY_BUCKETS_S,
+                        *dur_s,
+                    );
+                    if *stall_s > 0.0 {
+                        m.observe(
+                            "lexi_expert_stall_seconds",
+                            &[("replica", replica.to_string())],
+                            &LATENCY_BUCKETS_S,
+                            *stall_s,
+                        );
+                    }
+                }
+                _ => {}
+            }
+        }
+        for cp in log.critical_paths(completed) {
+            m.observe(
+                "lexi_queue_wait_seconds",
+                &[("class", cp.class.to_string())],
+                &LATENCY_BUCKETS_S,
+                cp.queue_s,
+            );
+        }
+        for c in completed {
+            let labels = [
+                ("replica", c.replica.to_string()),
+                ("class", c.class.to_string()),
+            ];
+            m.inc("lexi_requests_completed_total", &labels, 1);
+            m.observe(
+                "lexi_ttft_seconds",
+                &[("class", c.class.to_string())],
+                &LATENCY_BUCKETS_S,
+                c.ttft_s,
+            );
+            m.observe(
+                "lexi_tpot_seconds",
+                &[("class", c.class.to_string())],
+                &LATENCY_BUCKETS_S,
+                c.tpot_s(),
+            );
+        }
+        m
+    }
+}
+
+/// Cumulative run counters sampled at `interval_s` virtual-time
+/// boundaries, one compact JSON object per line (the JSONL snapshot
+/// export). The final line lands on the last event's timestamp.
+pub fn snapshots_jsonl(log: &TraceLog, interval_s: f64) -> String {
+    let interval = if interval_s > 0.0 { interval_s } else { 1.0 };
+    let mut evs: Vec<(f64, &EventKind)> = log.events.iter().map(|e| (e.t_s, &e.kind)).collect();
+    evs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut out = String::new();
+    let (mut arrivals, mut completed, mut rejected) = (0u64, 0u64, 0u64);
+    let (mut steals, mut switches, mut phases) = (0u64, 0u64, 0u64);
+    let mut next_t = interval;
+    let mut line = |t: f64, a: u64, c: u64, r: u64, s: u64, w: u64, p: u64, out: &mut String| {
+        let j = Json::obj(vec![
+            ("t_s", Json::Num(t)),
+            ("arrivals", Json::Num(a as f64)),
+            ("completed", Json::Num(c as f64)),
+            ("rejected", Json::Num(r as f64)),
+            ("steals", Json::Num(s as f64)),
+            ("rung_switches", Json::Num(w as f64)),
+            ("phases", Json::Num(p as f64)),
+        ]);
+        let _ = writeln!(out, "{}", j.to_string_compact());
+    };
+    for (t, kind) in &evs {
+        while *t >= next_t {
+            line(next_t, arrivals, completed, rejected, steals, switches, phases, &mut out);
+            next_t += interval;
+        }
+        match kind {
+            EventKind::Arrival { .. } => arrivals += 1,
+            EventKind::Finish { .. } => completed += 1,
+            EventKind::Reject { .. } => rejected += 1,
+            EventKind::Steal { .. } => steals += 1,
+            EventKind::RungSwitch { .. } => switches += 1,
+            EventKind::PhaseStart { .. } => phases += 1,
+            _ => {}
+        }
+    }
+    let t_end = evs.last().map(|(t, _)| *t).unwrap_or(0.0);
+    line(t_end, arrivals, completed, rejected, steals, switches, phases, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::percentile;
+
+    #[test]
+    fn quantiles_match_stats_percentile() {
+        let xs = [0.4, 0.1, 0.9, 0.3, 0.2, 0.7];
+        let q = Quantiles::from_samples(xs.iter().copied());
+        for p in [0.0, 25.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(q.q(p), percentile(&xs, p), "p{p}");
+        }
+        assert_eq!(q.n(), 6);
+        assert_eq!(q.max(), 0.9);
+        assert!(Quantiles::from_samples([]).is_empty());
+        assert_eq!(Quantiles::from_samples([]).q(50.0), 0.0);
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative() {
+        let mut h = Histogram::new(&[0.1, 1.0]);
+        for v in [0.05, 0.5, 0.5, 5.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.cumulative(), vec![(0.1, 1), (1.0, 3), (f64::INFINITY, 4)]);
+        assert_eq!(h.count(), 4);
+        assert!((h.sum() - 6.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prometheus_text_has_types_and_inf() {
+        let mut m = MetricsRegistry::new();
+        m.inc("lexi_x_total", &[("class", "0".to_string())], 2);
+        m.set_gauge("lexi_g", &[], 1.5);
+        m.observe("lexi_h_seconds", &[], &[0.1], 0.05);
+        let text = m.prometheus_text();
+        assert!(text.contains("# TYPE lexi_x_total counter"));
+        assert!(text.contains("lexi_x_total{class=\"0\"} 2"));
+        assert!(text.contains("# TYPE lexi_g gauge"));
+        assert!(text.contains("# TYPE lexi_h_seconds histogram"));
+        assert!(text.contains("lexi_h_seconds_bucket{le=\"+Inf\"} 1"));
+        assert!(text.contains("lexi_h_seconds_count 1"));
+        assert_eq!(m.counter_total("lexi_x_total"), 2);
+    }
+
+    #[test]
+    fn snapshots_cover_the_run() {
+        let mut t = crate::obs::Tracer::new(64);
+        t.record(0.2, EventKind::Arrival { id: 0, class: 0 });
+        t.record(
+            2.5,
+            EventKind::Finish {
+                id: 0,
+                replica: 0,
+                class: 0,
+                ttft_s: 0.5,
+                e2e_s: 2.3,
+                tokens: 4,
+            },
+        );
+        let log = t.finish();
+        let jsonl = snapshots_jsonl(&log, 1.0);
+        let lines: Vec<&str> = jsonl.lines().collect();
+        // boundaries at t=1, t=2, plus the final line at t=2.5
+        assert_eq!(lines.len(), 3);
+        let first = crate::util::json::parse(lines[0]).unwrap();
+        assert_eq!(first.get("arrivals").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(first.get("completed").unwrap().as_usize().unwrap(), 0);
+        let last = crate::util::json::parse(lines[2]).unwrap();
+        assert_eq!(last.get("completed").unwrap().as_usize().unwrap(), 1);
+    }
+}

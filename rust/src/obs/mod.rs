@@ -1,0 +1,93 @@
+//! Unified observability: request-span tracing, a metrics registry,
+//! exporters, and a sim self-profiler.
+//!
+//! The serving control plane makes every decision (routing, ladder
+//! moves, stealing, eviction) from telemetry, but run-level percentile
+//! reports cannot answer "why did THIS request miss its TTFT SLO" or
+//! "where does the event loop itself spend time". This module is the
+//! one observability layer both replica backends share:
+//!
+//! - [`trace`]    — [`TraceEvent`] ring buffer recording request
+//!   lifecycle spans (admission, EDF queue wait, route decision with
+//!   candidate scores, prefill/decode phases, rung switches, expert
+//!   stalls, steals, terminal events), deterministically ordered and
+//!   **off by default**: a disabled tracer records nothing, allocates
+//!   nothing on the hot path, and leaves every sim output byte-identical
+//!   to the untraced build.
+//! - [`metrics`]  — [`Quantiles`] (the one exact-sample percentile
+//!   implementation every report uses) plus a [`MetricsRegistry`] of
+//!   counters / gauges / fixed-bucket histograms keyed by
+//!   `{replica, class, rung}`, exported as Prometheus text and JSONL
+//!   snapshots at configurable virtual-time intervals.
+//! - [`export`]   — Chrome/Perfetto `trace_event` JSON, the
+//!   per-request critical-path breakdown CSV (queue vs prefill vs
+//!   decode vs expert stall vs steal migration), and the shape
+//!   checkers behind `lexi trace --check`.
+//! - [`selfprof`] — scoped wall-clock timers ([`prof_scope!`]) around
+//!   the sim's own hot sections (EDF queue ops, snapshot construction,
+//!   routing, telemetry scans), aggregated into the repo-root
+//!   `BENCH_selfprof.json` trajectory.
+
+pub mod export;
+pub mod metrics;
+pub mod selfprof;
+pub mod trace;
+
+pub use export::{check_perfetto, check_prometheus, perfetto_json, write_critical_path_csv};
+pub use metrics::{Histogram, MetricsRegistry, Quantiles};
+pub use selfprof::SelfProfile;
+pub use trace::{CriticalPath, EventKind, PhaseKind, SharedTracer, TraceEvent, TraceLog, Tracer};
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Append `entry` to a `{"entries": [...]}` trajectory file (the
+/// repo-root `BENCH_serve.json` / `BENCH_selfprof.json` format),
+/// creating the file with `bench` metadata when it does not exist yet.
+pub fn append_trajectory(path: &Path, bench: &str, entry: Json) -> Result<()> {
+    let mut doc = match crate::util::json::parse_file(path) {
+        Ok(j) => j,
+        Err(_) => Json::obj(vec![
+            ("bench", Json::Str(bench.to_string())),
+            ("entries", Json::Arr(vec![])),
+        ]),
+    };
+    match &mut doc {
+        Json::Obj(map) => {
+            let entries = map
+                .entry("entries".to_string())
+                .or_insert_with(|| Json::Arr(vec![]));
+            match entries {
+                Json::Arr(v) => v.push(entry),
+                other => anyhow::bail!("'entries' in {} is {other:?}, not an array", path.display()),
+            }
+        }
+        other => anyhow::bail!("{} holds {other:?}, not an object", path.display()),
+    }
+    std::fs::write(path, doc.to_string_pretty())
+        .with_context(|| format!("writing trajectory {}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trajectory_appends_and_creates() {
+        let dir = std::env::temp_dir().join("lexi_obs_trajectory_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_t.json");
+        append_trajectory(&path, "t", Json::obj(vec![("x", Json::Num(1.0))])).unwrap();
+        append_trajectory(&path, "t", Json::obj(vec![("x", Json::Num(2.0))])).unwrap();
+        let j = crate::util::json::parse_file(&path).unwrap();
+        assert_eq!(j.get("bench").unwrap().as_str().unwrap(), "t");
+        let entries = j.get("entries").unwrap().as_arr().unwrap();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[1].get("x").unwrap().as_usize().unwrap(), 2);
+    }
+}

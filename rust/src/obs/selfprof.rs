@@ -1,0 +1,190 @@
+//! Sim self-profiler: scoped wall-clock timers around the event loop's
+//! own hot sections (EDF queue ops, snapshot construction, routing,
+//! telemetry scans), answering the ROADMAP's "how fast is the simulator
+//! itself" question.
+//!
+//! Disabled by default: [`scope`] checks one thread-local flag and
+//! returns `None` without touching the clock, so instrumented hot paths
+//! cost a predictable branch. Timings are wall clock and feed only the
+//! `BENCH_selfprof.json` trajectory — they never enter the virtual-time
+//! sim, so profiling cannot perturb sim outputs.
+
+use std::cell::{Cell, RefCell};
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+thread_local! {
+    static ENABLED: Cell<bool> = const { Cell::new(false) };
+    static SECTIONS: RefCell<BTreeMap<&'static str, SectionStat>> =
+        const { RefCell::new(BTreeMap::new()) };
+}
+
+/// Aggregate timing of one instrumented section.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SectionStat {
+    pub calls: u64,
+    pub total_ns: u128,
+    pub max_ns: u128,
+}
+
+/// Start collecting (clears any previous sections).
+pub fn enable() {
+    SECTIONS.with(|s| s.borrow_mut().clear());
+    ENABLED.with(|e| e.set(true));
+}
+
+pub fn is_enabled() -> bool {
+    ENABLED.with(|e| e.get())
+}
+
+/// Stop collecting and return the profile gathered since [`enable`].
+pub fn disable_and_collect() -> SelfProfile {
+    ENABLED.with(|e| e.set(false));
+    let sections = SECTIONS.with(|s| std::mem::take(&mut *s.borrow_mut()));
+    SelfProfile {
+        sections: sections.into_iter().collect(),
+    }
+}
+
+/// RAII timer: records elapsed wall time into its section on drop.
+pub struct ProfGuard {
+    key: &'static str,
+    start: Instant,
+}
+
+impl Drop for ProfGuard {
+    fn drop(&mut self) {
+        let dt = self.start.elapsed().as_nanos();
+        SECTIONS.with(|s| {
+            let mut map = s.borrow_mut();
+            let stat = map.entry(self.key).or_default();
+            stat.calls += 1;
+            stat.total_ns += dt;
+            stat.max_ns = stat.max_ns.max(dt);
+        });
+    }
+}
+
+/// Scoped timer for `key`; `None` (and no clock read) when disabled.
+#[inline]
+pub fn scope(key: &'static str) -> Option<ProfGuard> {
+    if !is_enabled() {
+        return None;
+    }
+    Some(ProfGuard {
+        key,
+        start: Instant::now(),
+    })
+}
+
+/// Time the rest of the enclosing scope under `key` when the
+/// self-profiler is enabled; a single thread-local branch otherwise.
+#[macro_export]
+macro_rules! prof_scope {
+    ($key:expr) => {
+        let _prof_guard = $crate::obs::selfprof::scope($key);
+    };
+}
+
+/// A finished self-profile, exportable as a `BENCH_selfprof.json`
+/// trajectory entry.
+#[derive(Clone, Debug, Default)]
+pub struct SelfProfile {
+    /// `(section, stat)` pairs, sorted by section name.
+    pub sections: Vec<(&'static str, SectionStat)>,
+}
+
+impl SelfProfile {
+    pub fn is_empty(&self) -> bool {
+        self.sections.is_empty()
+    }
+
+    /// Trajectory entry: per-section call counts and wall-time totals.
+    pub fn to_json(&self, label: &str) -> Json {
+        Json::obj(vec![
+            ("label", Json::Str(label.to_string())),
+            (
+                "sections",
+                Json::Arr(
+                    self.sections
+                        .iter()
+                        .map(|(name, s)| {
+                            Json::obj(vec![
+                                ("name", Json::Str(name.to_string())),
+                                ("calls", Json::Num(s.calls as f64)),
+                                ("total_ms", Json::Num(s.total_ns as f64 / 1e6)),
+                                (
+                                    "mean_us",
+                                    Json::Num(if s.calls > 0 {
+                                        s.total_ns as f64 / 1e3 / s.calls as f64
+                                    } else {
+                                        0.0
+                                    }),
+                                ),
+                                ("max_us", Json::Num(s.max_ns as f64 / 1e3)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn print(&self) {
+        println!("--- sim self-profile ({} sections) ---", self.sections.len());
+        for (name, s) in &self.sections {
+            println!(
+                "{name:<24} {:>10} calls  {:>10.3} ms total  {:>8.3} us/call",
+                s.calls,
+                s.total_ns as f64 / 1e6,
+                if s.calls > 0 {
+                    s.total_ns as f64 / 1e3 / s.calls as f64
+                } else {
+                    0.0
+                }
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_scope_is_inert() {
+        assert!(!is_enabled());
+        assert!(scope("x").is_none());
+        assert!(disable_and_collect().is_empty());
+    }
+
+    #[test]
+    fn enabled_scope_records_sections() {
+        enable();
+        for _ in 0..3 {
+            prof_scope!("test.section");
+            std::hint::black_box(1 + 1);
+        }
+        {
+            prof_scope!("test.other");
+        }
+        let prof = disable_and_collect();
+        assert!(!is_enabled());
+        let sec = prof
+            .sections
+            .iter()
+            .find(|(n, _)| *n == "test.section")
+            .expect("section recorded");
+        assert_eq!(sec.1.calls, 3);
+        assert!(sec.1.max_ns <= sec.1.total_ns);
+        assert_eq!(prof.sections.len(), 2);
+        // json export round-trips
+        let j = prof.to_json("unit");
+        assert_eq!(j.get("label").unwrap().as_str().unwrap(), "unit");
+        assert_eq!(j.get("sections").unwrap().as_arr().unwrap().len(), 2);
+        // collection cleared the buffer
+        assert!(disable_and_collect().is_empty());
+    }
+}

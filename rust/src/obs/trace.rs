@@ -1,0 +1,409 @@
+//! Request-lifecycle event bus: a bounded ring of [`TraceEvent`]s with
+//! deterministic ordering.
+//!
+//! The cluster event loop and both replica backends share one
+//! [`Tracer`] (`Rc<RefCell<_>>`; the sim is single-threaded), so every
+//! event gets a monotonically increasing sequence number at record time
+//! — a total order that is a pure function of the seeded run, never of
+//! wall clock. Tracing is off by default: a `None` tracer records
+//! nothing and allocates nothing, keeping default runs byte-identical.
+//!
+//! Timestamps are the virtual-time `now` values the sim itself computes
+//! with, so trace-derived latencies are **bit-equal** to reported ones:
+//! `t(FirstToken) - arrival_s` is the exact same f64 operation the
+//! replica uses for `ttft_s`.
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::rc::Rc;
+
+use crate::server::backend::CompletedRequest;
+
+/// A shared tracer handle (the sim is single-threaded; `Rc` suffices).
+pub type SharedTracer = Rc<RefCell<Tracer>>;
+
+/// Prefill vs. decode phase of a replica step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PhaseKind {
+    Prefill,
+    Decode,
+}
+
+impl PhaseKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            PhaseKind::Prefill => "prefill",
+            PhaseKind::Decode => "decode",
+        }
+    }
+}
+
+/// One request-lifecycle or control-plane event.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EventKind {
+    /// A request reached the cluster front door.
+    Arrival { id: u64, class: usize },
+    /// Admission control shed the request (a terminal event; closed
+    /// loops may re-arrive it later under the same id).
+    Reject { id: u64, class: usize },
+    /// The routing decision, with the per-replica candidate scores
+    /// (load cost; lower wins) the policy saw.
+    Route {
+        id: u64,
+        chosen: usize,
+        scores: Vec<f64>,
+    },
+    /// The request entered a replica's EDF queue.
+    QueuePush {
+        id: u64,
+        replica: usize,
+        deadline_ns: u64,
+    },
+    /// A replica started a prefill or decode phase. `ids` names the
+    /// requests newly entering service (prefill cohort); decode phases
+    /// leave it empty. `stall_s` is the expert-residency fetch stall
+    /// folded into `dur_s`.
+    PhaseStart {
+        replica: usize,
+        phase: PhaseKind,
+        rung: usize,
+        dur_s: f64,
+        stall_s: f64,
+        active: usize,
+        ids: Vec<u64>,
+    },
+    /// First output token of a request (TTFT reference point).
+    FirstToken { id: u64, replica: usize },
+    /// Terminal completion of an admitted request.
+    Finish {
+        id: u64,
+        replica: usize,
+        class: usize,
+        ttft_s: f64,
+        e2e_s: f64,
+        tokens: usize,
+    },
+    /// The ladder controller moved a replica to `rung`.
+    RungSwitch { replica: usize, rung: usize },
+    /// Work stealing migrated a queued request between replicas.
+    Steal { id: u64, victim: usize, thief: usize },
+}
+
+/// One timestamped event with its deterministic sequence number.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    /// Virtual-time seconds (sim) / event-loop seconds (engine).
+    pub t_s: f64,
+    /// Record-order sequence number: the deterministic total order.
+    pub seq: u64,
+    pub kind: EventKind,
+}
+
+/// Bounded event recorder. When the ring fills, the oldest events are
+/// dropped (and counted) so long runs degrade gracefully instead of
+/// growing without bound.
+#[derive(Debug)]
+pub struct Tracer {
+    cap: usize,
+    seq: u64,
+    dropped: u64,
+    events: VecDeque<TraceEvent>,
+}
+
+impl Tracer {
+    pub fn new(cap: usize) -> Self {
+        Tracer {
+            cap: cap.max(1),
+            seq: 0,
+            dropped: 0,
+            events: VecDeque::new(),
+        }
+    }
+
+    pub fn shared(cap: usize) -> SharedTracer {
+        Rc::new(RefCell::new(Tracer::new(cap)))
+    }
+
+    pub fn record(&mut self, t_s: f64, kind: EventKind) {
+        if self.events.len() == self.cap {
+            self.events.pop_front();
+            self.dropped += 1;
+        }
+        self.events.push_back(TraceEvent {
+            t_s,
+            seq: self.seq,
+            kind,
+        });
+        self.seq += 1;
+    }
+
+    /// Drain the ring into an immutable [`TraceLog`].
+    pub fn finish(&mut self) -> TraceLog {
+        TraceLog {
+            events: self.events.drain(..).collect(),
+            dropped: self.dropped,
+        }
+    }
+}
+
+/// Record into an optional shared tracer — the one-line call sites on
+/// the hot paths compile to a branch on `None` when tracing is off.
+#[inline]
+pub fn record_opt(tracer: &Option<SharedTracer>, t_s: f64, kind: impl FnOnce() -> EventKind) {
+    if let Some(tr) = tracer {
+        let kind = kind();
+        tr.borrow_mut().record(t_s, kind);
+    }
+}
+
+/// The finished, ordered event log of one run.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TraceLog {
+    pub events: Vec<TraceEvent>,
+    /// Events lost to the ring cap (0 on healthy runs).
+    pub dropped: u64,
+}
+
+impl TraceLog {
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn count(&self, pred: impl Fn(&EventKind) -> bool) -> usize {
+        self.events.iter().filter(|e| pred(&e.kind)).count()
+    }
+
+    /// Virtual time of the first prefill phase that took `id` into
+    /// service (the end of its queue wait).
+    pub fn prefill_start(&self, id: u64) -> Option<f64> {
+        self.events.iter().find_map(|e| match &e.kind {
+            EventKind::PhaseStart {
+                phase: PhaseKind::Prefill,
+                ids,
+                ..
+            } if ids.contains(&id) => Some(e.t_s),
+            _ => None,
+        })
+    }
+
+    /// Virtual time of the request's first output token.
+    pub fn first_token(&self, id: u64) -> Option<f64> {
+        self.events.iter().find_map(|e| match &e.kind {
+            EventKind::FirstToken { id: i, .. } if *i == id => Some(e.t_s),
+            _ => None,
+        })
+    }
+
+    /// Virtual time of the request's terminal completion.
+    pub fn finish_time(&self, id: u64) -> Option<f64> {
+        self.events.iter().find_map(|e| match &e.kind {
+            EventKind::Finish { id: i, .. } if *i == id => Some(e.t_s),
+            _ => None,
+        })
+    }
+
+    /// Span conservation: every arrival terminates (finish or reject),
+    /// and every admitted request finishes exactly once. Returns an
+    /// error string naming the first violated invariant.
+    pub fn check_conservation(&self) -> Result<(), String> {
+        let mut arrivals = 0usize;
+        let mut rejects = 0usize;
+        let mut finished: BTreeMap<u64, usize> = BTreeMap::new();
+        let mut admitted: BTreeSet<u64> = BTreeSet::new();
+        for e in &self.events {
+            match &e.kind {
+                EventKind::Arrival { .. } => arrivals += 1,
+                EventKind::Reject { .. } => rejects += 1,
+                EventKind::QueuePush { id, .. } => {
+                    admitted.insert(*id);
+                }
+                EventKind::Finish { id, .. } => *finished.entry(*id).or_insert(0) += 1,
+                _ => {}
+            }
+        }
+        if self.dropped > 0 {
+            return Err(format!("{} events dropped; conservation unknowable", self.dropped));
+        }
+        let finishes: usize = finished.values().sum();
+        if arrivals != finishes + rejects {
+            return Err(format!(
+                "{arrivals} arrivals but {finishes} finishes + {rejects} rejects"
+            ));
+        }
+        if let Some((id, n)) = finished.iter().find(|(_, &n)| n != 1) {
+            return Err(format!("request {id} finished {n} times"));
+        }
+        if let Some(id) = admitted.iter().find(|id| !finished.contains_key(id)) {
+            return Err(format!("request {id} was admitted but never finished"));
+        }
+        Ok(())
+    }
+
+    /// Per-request critical-path breakdowns for every completion.
+    ///
+    /// `queue_s` is trace-derived (prefill start − arrival); `prefill_s`
+    /// and `decode_s` are remainders (`ttft − queue`, `e2e − ttft`) so
+    /// the three always reconstruct the reported totals. `stall_s` is
+    /// the expert-fetch stall of the request's prefill phase
+    /// (overlapped with, not additive to, the phase components).
+    pub fn critical_paths(&self, completed: &[CompletedRequest]) -> Vec<CriticalPath> {
+        // one pass over events: prefill start + stall per id, steal count
+        let mut start: BTreeMap<u64, (f64, f64)> = BTreeMap::new();
+        let mut steals: BTreeMap<u64, u32> = BTreeMap::new();
+        for e in &self.events {
+            match &e.kind {
+                EventKind::PhaseStart {
+                    phase: PhaseKind::Prefill,
+                    stall_s,
+                    ids,
+                    ..
+                } => {
+                    for id in ids {
+                        start.entry(*id).or_insert((e.t_s, *stall_s));
+                    }
+                }
+                EventKind::Steal { id, .. } => *steals.entry(*id).or_insert(0) += 1,
+                _ => {}
+            }
+        }
+        completed
+            .iter()
+            .map(|c| {
+                let (t_prefill, stall_s) =
+                    start.get(&c.id).copied().unwrap_or((c.arrival_s, 0.0));
+                let queue_s = t_prefill - c.arrival_s;
+                CriticalPath {
+                    id: c.id,
+                    class: c.class,
+                    replica: c.replica,
+                    arrival_s: c.arrival_s,
+                    queue_s,
+                    prefill_s: c.ttft_s - queue_s,
+                    decode_s: c.e2e_s - c.ttft_s,
+                    stall_s,
+                    steal_migrations: steals.get(&c.id).copied().unwrap_or(0),
+                    ttft_s: c.ttft_s,
+                    e2e_s: c.e2e_s,
+                }
+            })
+            .collect()
+    }
+}
+
+/// Where one request's latency went: queue wait vs prefill vs decode,
+/// with expert-stall and steal-migration attribution alongside.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CriticalPath {
+    pub id: u64,
+    pub class: usize,
+    pub replica: usize,
+    pub arrival_s: f64,
+    /// Trace-derived EDF queue wait (prefill start − arrival).
+    pub queue_s: f64,
+    /// `ttft_s − queue_s`: with `queue_s`, reconstructs TTFT exactly.
+    pub prefill_s: f64,
+    /// `e2e_s − ttft_s`: the decode tail (TPOT × generated tokens).
+    pub decode_s: f64,
+    /// Expert-residency fetch stall of the request's prefill phase.
+    pub stall_s: f64,
+    /// Times the request migrated between replicas via work stealing.
+    pub steal_migrations: u32,
+    pub ttft_s: f64,
+    pub e2e_s: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finish(id: u64) -> EventKind {
+        EventKind::Finish {
+            id,
+            replica: 0,
+            class: 0,
+            ttft_s: 0.2,
+            e2e_s: 0.5,
+            tokens: 4,
+        }
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_counts() {
+        let mut t = Tracer::new(2);
+        t.record(0.0, EventKind::Arrival { id: 0, class: 0 });
+        t.record(1.0, EventKind::Arrival { id: 1, class: 0 });
+        t.record(2.0, EventKind::Arrival { id: 2, class: 0 });
+        let log = t.finish();
+        assert_eq!(log.len(), 2);
+        assert_eq!(log.dropped, 1);
+        // sequence numbers survive the drop: deterministic total order
+        assert_eq!(log.events[0].seq, 1);
+        assert_eq!(log.events[1].seq, 2);
+    }
+
+    #[test]
+    fn conservation_checks() {
+        let mut t = Tracer::new(64);
+        t.record(0.0, EventKind::Arrival { id: 0, class: 0 });
+        t.record(0.0, EventKind::QueuePush { id: 0, replica: 0, deadline_ns: 10 });
+        t.record(0.1, EventKind::Arrival { id: 1, class: 1 });
+        t.record(0.1, EventKind::Reject { id: 1, class: 1 });
+        t.record(0.5, finish(0));
+        assert!(t.finish().check_conservation().is_ok());
+
+        // a missing terminal event is caught
+        let mut t = Tracer::new(64);
+        t.record(0.0, EventKind::Arrival { id: 0, class: 0 });
+        let err = t.finish().check_conservation().unwrap_err();
+        assert!(err.contains("arrivals"), "{err}");
+
+        // a double finish is caught
+        let mut t = Tracer::new(64);
+        t.record(0.0, EventKind::Arrival { id: 0, class: 0 });
+        t.record(0.0, EventKind::Arrival { id: 0, class: 0 });
+        t.record(0.5, finish(0));
+        t.record(0.6, finish(0));
+        let err = t.finish().check_conservation().unwrap_err();
+        assert!(err.contains("finished 2 times"), "{err}");
+    }
+
+    #[test]
+    fn critical_path_reconstructs_totals() {
+        let mut t = Tracer::new(64);
+        t.record(
+            0.25,
+            EventKind::PhaseStart {
+                replica: 0,
+                phase: PhaseKind::Prefill,
+                rung: 0,
+                dur_s: 0.1,
+                stall_s: 0.02,
+                active: 1,
+                ids: vec![7],
+            },
+        );
+        let log = t.finish();
+        let c = CompletedRequest {
+            id: 7,
+            class: 0,
+            arrival_s: 0.1,
+            prompt_len: 64,
+            tokens: 8,
+            ttft_s: 0.25,
+            e2e_s: 0.9,
+            finish_s: 1.0,
+            replica: 0,
+        };
+        let cp = &log.critical_paths(std::slice::from_ref(&c))[0];
+        assert_eq!(cp.queue_s, 0.25 - 0.1);
+        // remainder construction: components reconstruct totals exactly
+        assert_eq!(cp.prefill_s, c.ttft_s - cp.queue_s);
+        assert_eq!(cp.decode_s, c.e2e_s - c.ttft_s);
+        assert_eq!(cp.stall_s, 0.02);
+        assert_eq!(cp.steal_migrations, 0);
+    }
+}

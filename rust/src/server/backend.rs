@@ -16,6 +16,7 @@
 //! [`ClusterSnapshot`](super::telemetry::ClusterSnapshot).
 
 use crate::experts::ResidencyStats;
+use crate::obs::SharedTracer;
 
 use super::scheduler::QueuedRequest;
 use super::telemetry::{ReplicaTelemetry, StepSample, StepTimeSummary, TelemetryDetail};
@@ -78,6 +79,12 @@ pub trait ReplicaBackend {
 
     /// Admit a routed request into the local queue.
     fn admit(&mut self, req: QueuedRequest);
+
+    /// Attach the run's shared span tracer (see [`crate::obs`]). The
+    /// default ignores it, so backends that predate tracing keep
+    /// compiling; both bundled backends record queue/phase/finish
+    /// events through it when attached.
+    fn set_tracer(&mut self, _tracer: SharedTracer) {}
 
     /// Structured control-plane telemetry at `now_s` — the one signal
     /// surface routing, the ladder controller, and work stealing read.

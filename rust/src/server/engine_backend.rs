@@ -21,6 +21,8 @@ use std::rc::Rc;
 use std::time::Instant;
 
 use crate::engine::{Engine, SamplingParams, StepKind, StepOutcome};
+use crate::obs::trace::{record_opt, EventKind, PhaseKind};
+use crate::obs::SharedTracer;
 use crate::runtime::ModelBackend;
 use crate::util::stats::percentile_sorted;
 use crate::util::Pcg32;
@@ -53,6 +55,11 @@ pub struct EngineReplica<'m, M: ModelBackend> {
     rung: usize,
     last_switch_s: f64,
     pending_penalty_s: f64,
+    /// Optional shared span tracer (None = record nothing).
+    tracer: Option<SharedTracer>,
+    /// Trace ids submitted into the engine by the latest
+    /// `submit_waiting` — the prefill cohort for the next phase span.
+    just_submitted: Vec<u64>,
     /// In-flight phase: (event-loop end time, what the step did).
     phase: Option<(f64, StepOutcome)>,
     /// Engine request id -> cluster request metadata.
@@ -94,6 +101,8 @@ impl<'m, M: ModelBackend> EngineReplica<'m, M> {
             rung: 0,
             last_switch_s: f64::NEG_INFINITY,
             pending_penalty_s: 0.0,
+            tracer: None,
+            just_submitted: Vec::new(),
             phase: None,
             inflight: HashMap::new(),
             failed: false,
@@ -110,6 +119,7 @@ impl<'m, M: ModelBackend> EngineReplica<'m, M> {
     /// Move EDF-ordered requests from the cluster-side queue into the
     /// engine, up to its free slot capacity.
     fn submit_waiting(&mut self) {
+        self.just_submitted.clear();
         let occupied = self.engine.n_active() + self.engine.n_waiting();
         let mut free = self.slots.saturating_sub(occupied);
         while free > 0 {
@@ -126,6 +136,7 @@ impl<'m, M: ModelBackend> EngineReplica<'m, M> {
                 .engine
                 .submit(prompt, sampling)
                 .expect("engine queue must be sized above the cluster admission cap");
+            self.just_submitted.push(req.id);
             self.inflight.insert(
                 engine_id,
                 Inflight {
@@ -152,7 +163,16 @@ impl<'m, M: ModelBackend> ReplicaBackend for EngineReplica<'m, M> {
             // dropped; surfaces as a missing completion in the report
             return;
         }
+        record_opt(&self.tracer, req.arrival_s, || EventKind::QueuePush {
+            id: req.id,
+            replica: self.id,
+            deadline_ns: req.deadline_ns,
+        });
         self.queue.push(req);
+    }
+
+    fn set_tracer(&mut self, tracer: SharedTracer) {
+        self.tracer = Some(tracer);
     }
 
     fn telemetry(&self, now_s: f64, detail: TelemetryDetail) -> ReplicaTelemetry {
@@ -275,6 +295,16 @@ impl<'m, M: ModelBackend> ReplicaBackend for EngineReplica<'m, M> {
         self.pending_penalty_s = 0.0;
         self.busy_s += dur;
         self.rung_time_s[self.rung.min(self.rung_time_s.len() - 1)] += dur;
+        let prefill = outcome.kind == StepKind::Prefill;
+        record_opt(&self.tracer, now, || EventKind::PhaseStart {
+            replica: self.id,
+            phase: if prefill { PhaseKind::Prefill } else { PhaseKind::Decode },
+            rung: self.rung,
+            dur_s: dur,
+            stall_s,
+            active: self.engine.n_active(),
+            ids: if prefill { self.just_submitted.clone() } else { Vec::new() },
+        });
         self.phase = Some((now + dur, outcome));
         true
     }
@@ -291,6 +321,11 @@ impl<'m, M: ModelBackend> ReplicaBackend for EngineReplica<'m, M> {
         for id in &outcome.first_tokens {
             if let Some(m) = self.inflight.get_mut(id) {
                 m.first_token_s = Some(now);
+                let trace_id = m.trace_id;
+                record_opt(&self.tracer, now, || EventKind::FirstToken {
+                    id: trace_id,
+                    replica: self.id,
+                });
             }
         }
         // ...so a request finishing in the same step still gets a
@@ -298,7 +333,7 @@ impl<'m, M: ModelBackend> ReplicaBackend for EngineReplica<'m, M> {
         for o in &outcome.finished {
             if let Some(m) = self.inflight.remove(&o.id) {
                 let first = m.first_token_s.unwrap_or(now);
-                out.push(CompletedRequest {
+                let c = CompletedRequest {
                     id: m.trace_id,
                     class: m.class,
                     arrival_s: m.arrival_s,
@@ -308,7 +343,16 @@ impl<'m, M: ModelBackend> ReplicaBackend for EngineReplica<'m, M> {
                     e2e_s: now - m.arrival_s,
                     finish_s: now,
                     replica: self.id,
+                };
+                record_opt(&self.tracer, now, || EventKind::Finish {
+                    id: c.id,
+                    replica: c.replica,
+                    class: c.class,
+                    ttft_s: c.ttft_s,
+                    e2e_s: c.e2e_s,
+                    tokens: c.tokens,
                 });
+                out.push(c);
             }
         }
     }

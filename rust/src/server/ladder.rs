@@ -300,6 +300,7 @@ impl LadderController {
     /// Target rung per replica. The cluster applies any change via
     /// [`ReplicaBackend::set_rung`](super::backend::ReplicaBackend::set_rung).
     pub fn decide(&mut self, snap: &ClusterSnapshot, n_rungs: usize) -> Vec<usize> {
+        crate::prof_scope!("ladder.decide");
         let now = snap.now_s;
         match self.policy.scope {
             LadderScope::PerReplica => snap

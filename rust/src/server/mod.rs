@@ -33,6 +33,11 @@
 //! - [`ladder`]    — LExI quality ladder + cluster-global controller
 //! - [`report`]    — TTFT/TPOT percentiles, goodput-under-SLO, CSV/JSON
 //!
+//! With `--trace` every run additionally records request-lifecycle
+//! spans through the shared [`crate::obs`] layer and emits Perfetto /
+//! critical-path / Prometheus / JSONL artifacts per transform; the
+//! default stays untraced and byte-identical.
+//!
 //! With `--hbm-budget` every replica additionally carries an
 //! [`ExpertResidency`](crate::experts::ExpertResidency) model: expert
 //! weights live in a tiered HBM/host store, demand misses stall phases,
@@ -251,19 +256,25 @@ pub fn bench_serve(
     let base_svc = &line_up[0].ladder.rungs[0].service;
     let (scenario, trace) = scenario_and_trace(base_svc, cfg)?;
 
-    let reports = match cfg.backend {
-        BackendKind::Sim => sim_reports(spec, &line_up, &scenario, &trace, cfg),
+    let runs = match cfg.backend {
+        BackendKind::Sim => sim_runs(spec, &line_up, &scenario, &trace, cfg),
         BackendKind::Engine => match try_real_runtime(spec, artifacts) {
             Some(model) => {
                 println!("engine backend: compiled PJRT runtime ({})", spec.name);
-                engine_reports(spec, &model, &line_up, &scenario, &trace, cfg)?
+                engine_runs(spec, &model, &line_up, &scenario, &trace, cfg)?
             }
             None => {
                 let model = synthetic_engine_model(spec, cfg, &scenario);
-                engine_reports(spec, &model, &line_up, &scenario, &trace, cfg)?
+                engine_runs(spec, &model, &line_up, &scenario, &trace, cfg)?
             }
         },
     };
+    if cfg.trace {
+        for (report, res) in &runs {
+            write_obs_artifacts(spec, &scenario, &report.transform, res, cfg, out_dir)?;
+        }
+    }
+    let reports: Vec<TransformReport> = runs.into_iter().map(|(report, _)| report).collect();
 
     // sim keeps the PR 1 file names (bit-identical artifacts from the
     // same seed); engine-backed runs get their own stem so the two
@@ -372,6 +383,50 @@ pub fn bench_memory(
     report::write_memory_csv(&out_dir.join(format!("{stem}.csv")), &rows)?;
     report::write_memory_json(&out_dir.join(format!("{stem}.json")), &rows)?;
     Ok(rows)
+}
+
+/// Emit one transform's observability artifacts (`--trace`): Perfetto
+/// `trace_event` JSON, the per-request critical-path CSV, Prometheus
+/// text, and JSONL metrics snapshots (see [`crate::obs`]). No-op when
+/// the run carried no trace.
+fn write_obs_artifacts(
+    spec: &ModelSpec,
+    scenario: &Scenario,
+    label: &str,
+    res: &RunResult,
+    cfg: &ServerConfig,
+    out_dir: &Path,
+) -> Result<()> {
+    let Some(log) = &res.trace else {
+        return Ok(());
+    };
+    std::fs::create_dir_all(out_dir)?;
+    let stem = format!("{}_{}_{}", spec.name, scenario.name, label);
+    let doc = crate::obs::perfetto_json(log, &res.completed);
+    let trace_path = out_dir.join(format!("trace_{stem}.json"));
+    std::fs::write(&trace_path, doc.to_string_pretty())
+        .with_context(|| format!("writing {}", trace_path.display()))?;
+    crate::obs::write_critical_path_csv(
+        &out_dir.join(format!("critical_path_{stem}.csv")),
+        log,
+        &res.completed,
+    )?;
+    let registry = crate::obs::MetricsRegistry::from_run(log, &res.completed);
+    std::fs::write(
+        out_dir.join(format!("metrics_{stem}.prom")),
+        registry.prometheus_text(),
+    )?;
+    std::fs::write(
+        out_dir.join(format!("metrics_{stem}.jsonl")),
+        crate::obs::metrics::snapshots_jsonl(log, cfg.metrics_interval_s),
+    )?;
+    println!(
+        "trace artifacts for {label}: {} ({} events, {} dropped)",
+        trace_path.display(),
+        log.events.len(),
+        log.dropped
+    );
+    Ok(())
 }
 
 /// Scenario + seeded trace calibrated against `base_svc` — the one
@@ -492,6 +547,9 @@ pub(crate) fn sim_runs(
         )
         .with_stealing(cfg.steal_bound)
         .with_steal_cooldown(cfg.steal_cooldown_s);
+        if cfg.trace {
+            cluster = cluster.with_tracing(cfg.trace_ring_cap);
+        }
         let res = cluster.run(scenario, trace);
         let report =
             TransformReport::from_run(scenario, c.label, cfg.policy.label(), &res, &quality);
@@ -579,6 +637,9 @@ pub(crate) fn engine_runs<M: ModelBackend>(
         )
         .with_stealing(cfg.steal_bound)
         .with_steal_cooldown(cfg.steal_cooldown_s);
+        if cfg.trace {
+            cluster = cluster.with_tracing(cfg.trace_ring_cap);
+        }
         let res = cluster.run(scenario, trace);
         let report =
             TransformReport::from_run(scenario, c.label, cfg.policy.label(), &res, &quality);

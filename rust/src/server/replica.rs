@@ -14,6 +14,8 @@ use std::rc::Rc;
 
 use crate::experts::ExpertResidency;
 use crate::moe::transform::Transform;
+use crate::obs::trace::{record_opt, EventKind, PhaseKind};
+use crate::obs::SharedTracer;
 use crate::perfmodel::PerfModel;
 
 use super::backend::{BackendStats, ReplicaBackend};
@@ -124,6 +126,9 @@ pub struct Replica {
     /// demand-miss stall time, rung switches repin the hot set, and the
     /// stats land in [`BackendStats::residency`].
     residency: Option<ExpertResidency>,
+    /// Optional shared span tracer (None = record nothing; the
+    /// default, which keeps runs byte-identical to untraced ones).
+    tracer: Option<SharedTracer>,
     /// Current quality-ladder rung (0 = full quality).
     pub rung: usize,
     pub last_switch_s: f64,
@@ -149,6 +154,7 @@ impl Replica {
             ladder,
             phase: Phase::Idle,
             residency: None,
+            tracer: None,
             rung: 0,
             last_switch_s: f64::NEG_INFINITY,
             pending_penalty_s: 0.0,
@@ -261,6 +267,18 @@ impl Replica {
             self.pending_penalty_s = 0.0;
             self.account(dur);
             self.prefill_calls += 1;
+            record_opt(&self.tracer, now, || EventKind::PhaseStart {
+                replica: self.id,
+                phase: PhaseKind::Prefill,
+                rung: self.rung,
+                dur_s: dur,
+                stall_s: stall,
+                active: self.n_active(),
+                ids: slot_idxs
+                    .iter()
+                    .map(|&i| self.slots[i].as_ref().unwrap().req.id)
+                    .collect(),
+            });
             self.phase = Phase::Prefill {
                 finish_s: now + dur,
                 slot_idxs,
@@ -273,6 +291,15 @@ impl Replica {
             self.pending_penalty_s = 0.0;
             self.account(dur);
             self.decode_steps += 1;
+            record_opt(&self.tracer, now, || EventKind::PhaseStart {
+                replica: self.id,
+                phase: PhaseKind::Decode,
+                rung: self.rung,
+                dur_s: dur,
+                stall_s: stall,
+                active,
+                ids: Vec::new(),
+            });
             self.phase = Phase::Decode {
                 finish_s: now + dur,
             };
@@ -320,10 +347,16 @@ impl Replica {
         match std::mem::replace(&mut self.phase, Phase::Idle) {
             Phase::Idle => {}
             Phase::Prefill { slot_idxs, .. } => {
+                let rid = self.id;
                 for i in slot_idxs {
                     if let Some(slot) = self.slots[i].as_mut() {
                         slot.first_token_s = Some(now);
                         slot.produced = 1;
+                        let id = slot.req.id;
+                        record_opt(&self.tracer, now, || EventKind::FirstToken {
+                            id,
+                            replica: rid,
+                        });
                     }
                 }
                 self.collect_finished(now, out);
@@ -344,7 +377,7 @@ impl Replica {
             if done {
                 let s = slot_opt.take().unwrap();
                 let first = s.first_token_s.unwrap_or(now);
-                out.push(CompletedRequest {
+                let c = CompletedRequest {
                     id: s.req.id,
                     class: s.req.class,
                     arrival_s: s.req.arrival_s,
@@ -354,7 +387,16 @@ impl Replica {
                     e2e_s: now - s.req.arrival_s,
                     finish_s: now,
                     replica: id,
+                };
+                record_opt(&self.tracer, now, || EventKind::Finish {
+                    id: c.id,
+                    replica: c.replica,
+                    class: c.class,
+                    ttft_s: c.ttft_s,
+                    e2e_s: c.e2e_s,
+                    tokens: c.tokens,
                 });
+                out.push(c);
             }
         }
     }
@@ -366,7 +408,16 @@ impl ReplicaBackend for Replica {
     }
 
     fn admit(&mut self, req: QueuedRequest) {
+        record_opt(&self.tracer, req.arrival_s, || EventKind::QueuePush {
+            id: req.id,
+            replica: self.id,
+            deadline_ns: req.deadline_ns,
+        });
         self.queue.push(req);
+    }
+
+    fn set_tracer(&mut self, tracer: SharedTracer) {
+        self.tracer = Some(tracer);
     }
 
     fn telemetry(&self, now_s: f64, detail: TelemetryDetail) -> ReplicaTelemetry {

@@ -11,9 +11,9 @@ use anyhow::Result;
 
 use crate::csv_row;
 use crate::experts::ResidencyStats;
+use crate::obs::Quantiles;
 use crate::util::csv::CsvWriter;
 use crate::util::json::Json;
-use crate::util::stats::percentile_sorted;
 
 use super::replica::CompletedRequest;
 use super::router::RunResult;
@@ -84,11 +84,10 @@ impl TransformReport {
         rung_quality_loss: &[f64],
     ) -> Self {
         let makespan = res.makespan_s.max(1e-9);
-        // sort once per metric; three percentiles each read the same slice
-        let mut ttft: Vec<f64> = res.completed.iter().map(|c| c.ttft_s).collect();
-        let mut tpot: Vec<f64> = res.completed.iter().map(|c| c.tpot_s()).collect();
-        ttft.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        tpot.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // the shared exact-percentile implementation (sorts once; three
+        // percentiles read the same samples)
+        let ttft = Quantiles::from_samples(res.completed.iter().map(|c| c.ttft_s));
+        let tpot = Quantiles::from_samples(res.completed.iter().map(|c| c.tpot_s()));
         let n_slo_met = res
             .completed
             .iter()
@@ -126,12 +125,12 @@ impl TransformReport {
             makespan_s: makespan,
             goodput_rps: n_slo_met as f64 / makespan,
             throughput_tok_s: tokens as f64 / makespan,
-            ttft_p50_s: percentile_sorted(&ttft, 50.0),
-            ttft_p95_s: percentile_sorted(&ttft, 95.0),
-            ttft_p99_s: percentile_sorted(&ttft, 99.0),
-            tpot_p50_s: percentile_sorted(&tpot, 50.0),
-            tpot_p95_s: percentile_sorted(&tpot, 95.0),
-            tpot_p99_s: percentile_sorted(&tpot, 99.0),
+            ttft_p50_s: ttft.q(50.0),
+            ttft_p95_s: ttft.q(95.0),
+            ttft_p99_s: ttft.q(99.0),
+            tpot_p50_s: tpot.q(50.0),
+            tpot_p95_s: tpot.q(95.0),
+            tpot_p99_s: tpot.q(99.0),
             mean_utilization: util.iter().sum::<f64>() / util.len().max(1) as f64,
             per_replica_utilization: util,
             rung_switches: res.rung_switches,
@@ -565,6 +564,7 @@ mod tests {
             step_time_per_replica: vec![None, None],
             step_samples_per_replica: vec![None, None],
             residency_per_replica: vec![None, None],
+            trace: None,
         }
     }
 

@@ -24,6 +24,9 @@ use std::rc::Rc;
 
 use crate::config::server::{PolicyKind, PressureMode};
 use crate::experts::ResidencyStats;
+use crate::obs::trace::{record_opt, EventKind, TraceLog};
+use crate::obs::{SharedTracer, Tracer};
+use crate::prof_scope;
 use crate::util::Pcg32;
 
 use super::backend::{BackendStats, CompletedRequest, ReplicaBackend};
@@ -69,6 +72,10 @@ pub struct RunResult {
     /// Expert-residency counters, one per replica (`None` entries for
     /// replicas running without a residency model — the default).
     pub residency_per_replica: Vec<Option<ResidencyStats>>,
+    /// The run's span-event log (`None` unless the cluster was built
+    /// [`with_tracing`](Cluster::with_tracing) — the default keeps the
+    /// untraced report shape byte-for-byte).
+    pub trace: Option<TraceLog>,
 }
 
 /// Pending arrival, ordered by (time ns, id) for a deterministic heap.
@@ -263,6 +270,9 @@ pub struct Cluster<'a> {
     /// Per-replica time of the last steal the replica participated in
     /// (−∞ before the first; indexed like `backends`).
     last_steal_s: Vec<f64>,
+    /// Shared span tracer (`None` = tracing off, the default; see
+    /// [`crate::obs`]). Never reads or perturbs the seeded rng.
+    tracer: Option<SharedTracer>,
     rng: Pcg32,
 }
 
@@ -327,8 +337,22 @@ impl<'a> Cluster<'a> {
             steal_bound: 0,
             steal_cooldown_s: 0.0,
             last_steal_s: vec![f64::NEG_INFINITY; n],
+            tracer: None,
             rng: Pcg32::new(seed, 0x0707_2026),
         }
+    }
+
+    /// Enable span tracing: one shared ring of at most `cap` events,
+    /// attached to the cluster loop and every backend. Tracing draws
+    /// nothing from the seeded rng and adds no virtual-time work, so a
+    /// traced run completes the exact same schedule as an untraced one.
+    pub fn with_tracing(mut self, cap: usize) -> Self {
+        let tracer = Tracer::shared(cap);
+        for b in &mut self.backends {
+            b.set_tracer(Rc::clone(&tracer));
+        }
+        self.tracer = Some(tracer);
+        self
     }
 
     /// Enable cross-replica work stealing: up to `bound` steals per
@@ -351,6 +375,7 @@ impl<'a> Cluster<'a> {
     /// `detail` bounds the cost: per-arrival routing reads only the
     /// O(1) fields, control-plane instants pay for the queue scans.
     pub fn snapshot(&self, now_s: f64, detail: TelemetryDetail) -> ClusterSnapshot {
+        prof_scope!("cluster.snapshot");
         ClusterSnapshot {
             now_s,
             replicas: self
@@ -377,6 +402,7 @@ impl<'a> Cluster<'a> {
         events: &mut Vec<(u64, usize, usize)>,
         min_slack_obs: &mut f64,
     ) {
+        prof_scope!("cluster.steal_pass");
         let mut budget = self.steal_bound;
         for thief in 0..self.backends.len() {
             if budget == 0 {
@@ -421,6 +447,11 @@ impl<'a> Cluster<'a> {
             let Some(victim) = victim else { continue };
             if let Some(req) = self.backends[victim].steal_request() {
                 events.push((time_key(now), victim, thief));
+                record_opt(&self.tracer, now, || EventKind::Steal {
+                    id: req.id,
+                    victim,
+                    thief,
+                });
                 self.backends[thief].admit(req);
                 self.last_steal_s[thief] = now;
                 self.last_steal_s[victim] = now;
@@ -470,6 +501,10 @@ impl<'a> Cluster<'a> {
                     if targets[i] != snap.replicas[i].rung {
                         b.set_rung(targets[i], now, self.reconfig_penalty_s);
                         switch_events.push((time_key(now), i));
+                        record_opt(&self.tracer, now, || EventKind::RungSwitch {
+                            replica: i,
+                            rung: targets[i],
+                        });
                     }
                 }
             }
@@ -506,8 +541,16 @@ impl<'a> Cluster<'a> {
                 }
                 let Reverse(PendingArrival(_, req)) = arrivals.pop().unwrap();
                 delivered = true;
+                record_opt(&self.tracer, now, || EventKind::Arrival {
+                    id: req.id,
+                    class: req.class,
+                });
                 let outstanding = self.outstanding();
                 if !self.admission.try_admit(outstanding, req.class) {
+                    record_opt(&self.tracer, now, || EventKind::Reject {
+                        id: req.id,
+                        class: req.class,
+                    });
                     // Closed loop: a rejected client is not destroyed —
                     // it backs off one think time and retries, keeping
                     // the scenario's concurrency contract. (Each retry
@@ -527,7 +570,15 @@ impl<'a> Cluster<'a> {
                 // admissions in this round are part of the next
                 // decision's input, and routing reads only O(1) fields
                 let snap = self.snapshot(now, TelemetryDetail::Load);
-                let idx = self.router.route(&qr, &snap, &mut self.rng);
+                let idx = {
+                    prof_scope!("cluster.route");
+                    self.router.route(&qr, &snap, &mut self.rng)
+                };
+                record_opt(&self.tracer, now, || EventKind::Route {
+                    id: qr.id,
+                    chosen: idx,
+                    scores: snap.replicas.iter().map(|t| t.load_cost as f64).collect(),
+                });
                 self.backends[idx].admit(qr);
             }
             if delivered {
@@ -594,6 +645,7 @@ impl<'a> Cluster<'a> {
             step_time_per_replica: stats.iter().map(|s| s.step_times.clone()).collect(),
             step_samples_per_replica: stats.iter().map(|s| s.step_samples.clone()).collect(),
             residency_per_replica: stats.iter().map(|s| s.residency.clone()).collect(),
+            trace: self.tracer.as_ref().map(|t| t.borrow_mut().finish()),
             completed,
         }
     }
@@ -649,6 +701,7 @@ mod tests {
         }
         // default feature set: the extended report fields stay dark
         assert!(res.steals.is_none() && res.min_slack_s.is_none());
+        assert!(res.trace.is_none());
         assert!(res.step_time_per_replica.iter().all(|s| s.is_none()));
         assert!(res.residency_per_replica.iter().all(|r| r.is_none()));
     }
@@ -668,6 +721,29 @@ mod tests {
             assert_eq!(a.completed.len(), 80, "{policy:?}");
             assert_eq!(a.completed, b.completed, "{policy:?} not deterministic");
             assert_eq!(a.makespan_s, b.makespan_s);
+        }
+    }
+
+    #[test]
+    fn tracing_preserves_schedule_and_conserves_spans() {
+        let s = scenario();
+        let trace = s.generate(60, 1);
+        let base = cluster(PolicyKind::Jsq, 2).run(&s, &trace);
+        let traced = cluster(PolicyKind::Jsq, 2).with_tracing(1 << 16).run(&s, &trace);
+        assert_eq!(base.completed, traced.completed, "tracing perturbed the run");
+        assert_eq!(base.makespan_s, traced.makespan_s);
+        let log = traced.trace.expect("traced run must carry its log");
+        log.check_conservation().unwrap();
+        // trace-derived latencies are bit-equal to the reported ones:
+        // the events carry the same `now` values the replica computed
+        // ttft/e2e from
+        for c in &traced.completed {
+            assert_eq!(log.first_token(c.id).unwrap() - c.arrival_s, c.ttft_s);
+            assert_eq!(log.finish_time(c.id).unwrap() - c.arrival_s, c.e2e_s);
+        }
+        // every completion sits in some prefill cohort
+        for c in &traced.completed {
+            assert!(log.prefill_start(c.id).is_some());
         }
     }
 

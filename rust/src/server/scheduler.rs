@@ -11,6 +11,8 @@
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
+use crate::prof_scope;
+
 use super::workload::TraceRequest;
 
 /// A request admitted into the serving queue.
@@ -99,6 +101,7 @@ impl EdfQueue {
     }
 
     pub fn push(&mut self, req: QueuedRequest) {
+        prof_scope!("edf.push");
         self.pending_cost += req.cost();
         if req.class >= self.class_counts.len() {
             self.class_counts.resize(req.class + 1, 0);
@@ -114,6 +117,7 @@ impl EdfQueue {
 
     /// Pop the (highest-priority, earliest-deadline) request.
     pub fn pop(&mut self) -> Option<QueuedRequest> {
+        prof_scope!("edf.pop");
         let Reverse(Entry(req)) = self.heap.pop()?;
         self.note_pop(&req);
         Some(req)

@@ -118,6 +118,7 @@ impl ReplicaTelemetry {
         running_classes: impl Iterator<Item = usize>,
         now_s: f64,
     ) {
+        crate::prof_scope!("telemetry.fill_scans");
         let mut occupancy = queue.class_counts().to_vec();
         for class in running_classes {
             if class >= occupancy.len() {

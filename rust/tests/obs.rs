@@ -1,0 +1,279 @@
+//! Integration tests for the observability layer: tracing stays off by
+//! default and changes no serving artifact byte, traced runs emit
+//! checker-clean Perfetto/Prometheus/critical-path files over the
+//! recorded trace-replay fixture, span conservation holds under
+//! admission rejects, and the self-profiler records the event loop's
+//! instrumented sections.
+
+use lexi_moe::config::model::spec;
+use lexi_moe::config::server::{PolicyKind, ScenarioKind, ServerConfig};
+use lexi_moe::moe::allocation::Allocation;
+use lexi_moe::obs::{self, EventKind};
+use lexi_moe::server;
+use lexi_moe::server::ladder::QualityLadder;
+use lexi_moe::server::replica::ServiceModel;
+use lexi_moe::server::router::Cluster;
+use lexi_moe::server::workload::{
+    ArrivalProcess, RequestProfile, Scenario, Trace, TraceRequest,
+};
+use lexi_moe::util::json;
+
+// ---------------------------------------------------------------------
+// fixtures
+// ---------------------------------------------------------------------
+
+fn replay_cfg() -> ServerConfig {
+    let fixture = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/data/trace_fixture.jsonl");
+    ServerConfig {
+        replicas: 2,
+        slots_per_replica: 4,
+        scenario: ScenarioKind::TraceReplay,
+        trace_file: Some(fixture),
+        service_in_len: 256,
+        service_out_len: 32,
+        ..Default::default()
+    }
+}
+
+fn obs_artifact_names(out: &std::path::Path) -> Vec<String> {
+    std::fs::read_dir(out)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .filter(|n| {
+            n.starts_with("trace_")
+                || n.starts_with("critical_path_")
+                || n.starts_with("metrics_")
+        })
+        .collect()
+}
+
+/// One-class burst scenario whose trace slams every request into the
+/// cluster at once — with a tiny admission queue, some must be rejected.
+fn burst_scenario() -> Scenario {
+    let mut s = Scenario {
+        name: "obs-burst",
+        kind: ScenarioKind::Poisson,
+        arrivals: ArrivalProcess::Poisson { rate: 1.0 },
+        profiles: vec![RequestProfile {
+            name: "burst",
+            prompt_lo: 64,
+            prompt_hi: 64,
+            gen_lo: 16,
+            gen_hi: 16,
+            priority: 0,
+            weight: 1.0,
+            ttft_mult: 4.0,
+            tpot_mult: 2.0,
+        }],
+        slos: Vec::new(),
+    };
+    s.resolve_slos(|tokens| 1e-4 * tokens as f64, 0.01);
+    s
+}
+
+fn burst_trace(n: usize) -> Trace {
+    Trace {
+        scenario: "obs-burst",
+        requests: (0..n)
+            .map(|i| TraceRequest {
+                id: i as u64,
+                class: 0,
+                arrival_s: 1e-6 * i as f64,
+                prompt_len: 64,
+                new_tokens: 16,
+            })
+            .collect(),
+        closed_loop: None,
+    }
+}
+
+fn traced_burst_cluster(queue_cap: usize) -> Cluster<'static> {
+    let ladder = QualityLadder::fixed(
+        "base",
+        Allocation::uniform(4, 2),
+        ServiceModel::synthetic("base", 1e-5, 0.01, 2),
+    );
+    Cluster::new(2, 2, PolicyKind::Jsq, ladder, None, queue_cap, 1, 0.0, 1)
+        .with_tracing(1 << 16)
+}
+
+// ---------------------------------------------------------------------
+// tracing off by default: no artifacts, byte-identical reports
+// ---------------------------------------------------------------------
+
+/// Turning `--trace` on must not move a single byte of the serving
+/// reports (tracing draws nothing from the seeded rng), and turning it
+/// off must emit no observability artifact at all.
+#[test]
+fn tracing_changes_no_report_byte_and_off_emits_no_artifacts() {
+    let m = spec("olmoe-1b-7b").unwrap();
+    let cfg = ServerConfig {
+        replicas: 2,
+        slots_per_replica: 4,
+        n_requests: 48,
+        scenario: ScenarioKind::Poisson,
+        service_in_len: 256,
+        service_out_len: 32,
+        ..Default::default()
+    };
+    let out_off = std::env::temp_dir().join("lexi_obs_off_test");
+    let out_on = std::env::temp_dir().join("lexi_obs_on_test");
+    let _ = std::fs::remove_dir_all(&out_off);
+    let _ = std::fs::remove_dir_all(&out_on);
+    server::bench_serve(&m, &cfg, None, &out_off).unwrap();
+    let traced = ServerConfig {
+        trace: true,
+        ..cfg
+    };
+    server::bench_serve(&m, &traced, None, &out_on).unwrap();
+    for name in [
+        "bench_serve_olmoe-1b-7b_poisson.csv",
+        "bench_serve_olmoe-1b-7b_poisson.json",
+    ] {
+        let off = std::fs::read(out_off.join(name)).unwrap();
+        let on = std::fs::read(out_on.join(name)).unwrap();
+        assert_eq!(off, on, "{name} differs once tracing is enabled");
+    }
+    assert!(
+        obs_artifact_names(&out_off).is_empty(),
+        "untraced run emitted observability artifacts"
+    );
+    assert!(
+        !obs_artifact_names(&out_on).is_empty(),
+        "traced run emitted no observability artifacts"
+    );
+}
+
+// ---------------------------------------------------------------------
+// traced replay: artifacts exist, pass checkers, components reconstruct
+// ---------------------------------------------------------------------
+
+/// The acceptance path: replay the recorded fixture with `--trace`, then
+/// hold every artifact to the same bar `lexi trace --check` applies, and
+/// verify the critical-path components reconstruct the reported totals
+/// bit-exactly after the CSV round trip.
+#[test]
+fn traced_replay_artifacts_pass_checkers_and_reconstruct_totals() {
+    let m = spec("olmoe-1b-7b").unwrap();
+    let cfg = ServerConfig {
+        trace: true,
+        ..replay_cfg()
+    };
+    let out = std::env::temp_dir().join("lexi_obs_replay_test");
+    let _ = std::fs::remove_dir_all(&out);
+    let reports = server::bench_serve(&m, &cfg, None, &out).unwrap();
+    assert_eq!(reports.len(), 4);
+    for r in &reports {
+        let stem = format!("olmoe-1b-7b_trace-replay_{}", r.transform);
+
+        let doc = json::parse_file(&out.join(format!("trace_{stem}.json"))).unwrap();
+        let perfetto = obs::check_perfetto(&doc).unwrap();
+        assert!(perfetto.spans > 0, "{stem}: no spans");
+
+        let prom = std::fs::read_to_string(out.join(format!("metrics_{stem}.prom"))).unwrap();
+        let summary = obs::check_prometheus(&prom).unwrap();
+        assert!(summary.families >= 4, "{stem}: {summary:?}");
+
+        let jsonl = std::fs::read_to_string(out.join(format!("metrics_{stem}.jsonl"))).unwrap();
+        assert!(!jsonl.trim().is_empty(), "{stem}: empty metrics snapshots");
+        for line in jsonl.lines() {
+            json::parse(line).unwrap_or_else(|e| panic!("{stem}: bad snapshot: {e}"));
+        }
+
+        let csv =
+            std::fs::read_to_string(out.join(format!("critical_path_{stem}.csv"))).unwrap();
+        let mut lines = csv.lines();
+        assert_eq!(lines.next().unwrap(), obs::export::CRITICAL_PATH_HEADER.join(","));
+        let mut rows = 0usize;
+        for line in lines {
+            let row: Vec<&str> = line.split(',').collect();
+            assert_eq!(row.len(), obs::export::CRITICAL_PATH_HEADER.len());
+            let queue: f64 = row[3].parse().unwrap();
+            let prefill: f64 = row[4].parse().unwrap();
+            let decode: f64 = row[5].parse().unwrap();
+            let ttft: f64 = row[8].parse().unwrap();
+            let e2e: f64 = row[9].parse().unwrap();
+            // shortest round-trip formatting: the decomposition written
+            // by the exporter survives the file bit-exactly
+            assert_eq!(prefill, ttft - queue, "{stem}: prefill != ttft-queue");
+            assert_eq!(decode, e2e - ttft, "{stem}: decode != e2e-ttft");
+            assert!(queue >= 0.0 && prefill >= 0.0 && decode >= 0.0, "{stem}: {line}");
+            rows += 1;
+        }
+        assert_eq!(rows, r.n_completed, "{stem}: one CSV row per completion");
+    }
+}
+
+// ---------------------------------------------------------------------
+// span conservation under admission rejects
+// ---------------------------------------------------------------------
+
+/// With a queue small enough to force rejects, every arrival must still
+/// terminate exactly once (finish or reject), and the trace-derived
+/// queue wait must bound each completion's reported TTFT.
+#[test]
+fn span_conservation_holds_under_admission_rejects() {
+    let scenario = burst_scenario();
+    let trace = burst_trace(64);
+    let res = traced_burst_cluster(4).run(&scenario, &trace);
+    let rejected: u64 = res.rejected_by_class.iter().sum();
+    assert!(rejected > 0, "fixture failed to overflow the admission queue");
+    let log = res.trace.as_ref().expect("traced run returned no span log");
+    assert_eq!(log.dropped, 0, "ring too small for fixture");
+    log.check_conservation().unwrap();
+    assert_eq!(
+        log.count(|k| matches!(k, EventKind::Arrival { .. })),
+        64,
+        "one arrival span per fixture request"
+    );
+    assert_eq!(
+        log.count(|k| matches!(k, EventKind::Reject { .. })) as u64,
+        rejected
+    );
+    assert_eq!(
+        log.count(|k| matches!(k, EventKind::Finish { .. })),
+        res.completed.len()
+    );
+    for c in &res.completed {
+        let t_prefill = log
+            .prefill_start(c.id)
+            .unwrap_or_else(|| panic!("request {} has no prefill span", c.id));
+        let queue_s = t_prefill - c.arrival_s;
+        assert!(
+            queue_s >= 0.0 && queue_s <= c.ttft_s,
+            "request {}: queue {queue_s} outside [0, ttft {}]",
+            c.id,
+            c.ttft_s
+        );
+        assert!(log.finish_time(c.id).is_some(), "request {} never finished", c.id);
+    }
+}
+
+// ---------------------------------------------------------------------
+// self-profiler
+// ---------------------------------------------------------------------
+
+/// Enabling the self-profiler around a sim run collects the event
+/// loop's instrumented sections without perturbing the sim (virtual
+/// time only sees wall clocks through `BENCH_selfprof.json`).
+#[test]
+fn selfprof_records_event_loop_sections_around_a_run() {
+    let scenario = burst_scenario();
+    let trace = burst_trace(16);
+    obs::selfprof::enable();
+    let res = traced_burst_cluster(100_000).run(&scenario, &trace);
+    let prof = obs::selfprof::disable_and_collect();
+    assert!(!res.completed.is_empty());
+    assert!(!prof.is_empty(), "no sections recorded");
+    for key in ["cluster.route", "edf.push", "edf.pop"] {
+        let (_, stat) = prof
+            .sections
+            .iter()
+            .find(|(n, _)| *n == key)
+            .unwrap_or_else(|| panic!("section {key} missing from {prof:?}"));
+        assert!(stat.calls > 0, "{key}: zero calls");
+    }
+    let entry = prof.to_json("integration");
+    assert_eq!(entry.get("label").unwrap().as_str().unwrap(), "integration");
+}

@@ -263,6 +263,77 @@ impl LadderScope {
     }
 }
 
+/// Hardware performance tier of a replica in a heterogeneous cluster
+/// (`--replica-tiers h100:4,a100:4`). Maps to a
+/// [`Hardware`](crate::perfmodel::hardware::Hardware) constant set.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TierKind {
+    /// The paper's testbed accelerator (the uniform-cluster default).
+    H100,
+    /// Previous-generation tier: ~1/3 the compute, HBM2e, PCIe Gen4.
+    A100,
+}
+
+impl TierKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "h100" => TierKind::H100,
+            "a100" => TierKind::A100,
+            other => bail!("unknown hardware tier '{other}' (h100 | a100)"),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            TierKind::H100 => "h100",
+            TierKind::A100 => "a100",
+        }
+    }
+
+    /// Parse a `tier:count,tier:count` spec into an ordered tier list
+    /// (the order assigns replica indices: first spec entry gets the
+    /// lowest indices).
+    pub fn parse_spec(spec: &str) -> Result<Vec<(TierKind, usize)>> {
+        let mut tiers = Vec::new();
+        for part in spec.split(',') {
+            let (tier, count) = part
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("tier spec '{part}' is not tier:count"))?;
+            let n: usize = count
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("tier count '{count}' is not an integer"))?;
+            if n == 0 {
+                bail!("tier '{tier}' has zero replicas");
+            }
+            tiers.push((TierKind::parse(tier.trim())?, n));
+        }
+        if tiers.is_empty() {
+            bail!("empty replica-tier spec");
+        }
+        Ok(tiers)
+    }
+}
+
+/// Parse an autoscaler range `min:max` (both ends inclusive).
+pub fn parse_autoscale(spec: &str) -> Result<(usize, usize)> {
+    let (lo, hi) = spec
+        .split_once(':')
+        .ok_or_else(|| anyhow::anyhow!("autoscale spec '{spec}' is not min:max"))?;
+    let min: usize = lo
+        .trim()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("autoscale min '{lo}' is not an integer"))?;
+    let max: usize = hi
+        .trim()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("autoscale max '{hi}' is not an integer"))?;
+    if min == 0 || min > max {
+        bail!("autoscale range {min}:{max} must satisfy 1 <= min <= max");
+    }
+    Ok((min, max))
+}
+
 /// Front-end configuration: cluster shape, routing, workload, ladder.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
@@ -341,6 +412,19 @@ pub struct ServerConfig {
     /// Wall-clock self-profile of the sim's own hot sections
     /// (`--selfprof`), appended to the repo-root `BENCH_selfprof.json`.
     pub selfprof: bool,
+    /// Class-aware admission shedding (`--shed`): drop batch-priority
+    /// work under pressure before the hard cap rejects interactive
+    /// work. Off — the default — keeps admission bit-identical to the
+    /// pass-through cap.
+    pub shed: bool,
+    /// Telemetry-driven replica autoscaling range `(min, max)`
+    /// (`--autoscale min:max`). `None` — the default — keeps the
+    /// replica set fixed at `replicas`.
+    pub autoscale: Option<(usize, usize)>,
+    /// Heterogeneous hardware tiers, in replica-index order
+    /// (`--replica-tiers h100:4,a100:4`). `None` — the default — is a
+    /// uniform H100 cluster, bit-identical to earlier releases.
+    pub replica_tiers: Option<Vec<(TierKind, usize)>>,
 }
 
 impl Default for ServerConfig {
@@ -378,6 +462,9 @@ impl Default for ServerConfig {
             trace_ring_cap: 1 << 20,
             metrics_interval_s: 1.0,
             selfprof: false,
+            shed: false,
+            autoscale: None,
+            replica_tiers: None,
         }
     }
 }
@@ -422,6 +509,30 @@ mod tests {
         assert!(TableMode::parse("guess").is_err());
         assert!(LadderScope::parse("galaxy").is_err());
         assert!(PressureMode::parse("vibes").is_err());
+        for t in [TierKind::H100, TierKind::A100] {
+            assert_eq!(TierKind::parse(t.label()).unwrap(), t);
+        }
+        assert!(TierKind::parse("tpu").is_err());
+    }
+
+    #[test]
+    fn tier_spec_parses_ordered_counts() {
+        let tiers = TierKind::parse_spec("h100:2, a100:3").unwrap();
+        assert_eq!(tiers, vec![(TierKind::H100, 2), (TierKind::A100, 3)]);
+        assert!(TierKind::parse_spec("h100").is_err());
+        assert!(TierKind::parse_spec("h100:0").is_err());
+        assert!(TierKind::parse_spec("h100:two").is_err());
+        assert!(TierKind::parse_spec("tpu:4").is_err());
+    }
+
+    #[test]
+    fn autoscale_spec_parses_range() {
+        assert_eq!(parse_autoscale("2:8").unwrap(), (2, 8));
+        assert_eq!(parse_autoscale("4:4").unwrap(), (4, 4));
+        assert!(parse_autoscale("8:2").is_err());
+        assert!(parse_autoscale("0:4").is_err());
+        assert!(parse_autoscale("4").is_err());
+        assert!(parse_autoscale("a:b").is_err());
     }
 
     #[test]
@@ -446,5 +557,8 @@ mod tests {
         assert!(!c.selfprof, "self-profiling must default OFF");
         assert!(c.trace_ring_cap > 0);
         assert!(c.metrics_interval_s > 0.0);
+        assert!(!c.shed, "shedding must default OFF");
+        assert!(c.autoscale.is_none(), "autoscaling must default OFF");
+        assert!(c.replica_tiers.is_none(), "hetero tiers must default OFF");
     }
 }

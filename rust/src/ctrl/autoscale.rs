@@ -1,0 +1,422 @@
+//! Telemetry-driven replica autoscaling with priced warmup.
+//!
+//! The autoscaler manages a fixed-capacity pool of replica slots
+//! (`max` backends exist for the whole run; indices are stable) and
+//! moves each through `Retired → Warming → Active → Draining →
+//! Retired`. Decisions are pure functions of the per-instant
+//! [`ClusterSnapshot`]: scale UP when the cluster's projected
+//! interactive slack or outstanding depth shows *sustained* pressure,
+//! scale DOWN (drain, then retire once empty) on sustained idle.
+//! Draining replicas finish the work they hold but stop accepting new
+//! routing, so no request is ever lost to a retirement.
+//!
+//! Spin-up is not free: a freshly activated replica must fetch its
+//! pinned expert hot set and the Stage-1 sensitivity table over the
+//! host link before serving, priced by [`warmup_cost_s`] through the
+//! residency model's [`LinkModel`] — the same constants demand misses
+//! pay under an HBM budget.
+
+use crate::experts::ResidencyConfig;
+use crate::server::telemetry::ClusterSnapshot;
+
+/// Lifecycle state of one replica slot under the autoscaler.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ReplicaState {
+    /// Serving: accepts routed work.
+    Active,
+    /// Spinning up (expert prewarm + table load in flight); activates
+    /// at the first control instant at or after `ready_at_s`.
+    Warming { ready_at_s: f64 },
+    /// Finishing held work; accepts nothing new.
+    Draining,
+    /// Off: costs nothing, holds nothing.
+    Retired,
+}
+
+/// Declarative autoscaler thresholds. Time windows are derived from the
+/// service model's full-batch decode step so the controller's reaction
+/// speed scales with the hardware, not with a wall-clock constant.
+#[derive(Clone, Debug)]
+pub struct AutoscalePolicy {
+    /// Replica-count floor (never drain below).
+    pub min: usize,
+    /// Replica-count ceiling (= the backend pool size).
+    pub max: usize,
+    /// Priced spin-up delay between the scale-up decision and the
+    /// replica accepting work (see [`warmup_cost_s`]).
+    pub warmup_s: f64,
+    /// Scale up while the worst projected interactive slack fraction
+    /// sits below this (the ladder's degrade threshold by default).
+    pub up_slack_frac: f64,
+    /// ... or while outstanding work per live replica exceeds this many
+    /// multiples of its slot count.
+    pub up_outstanding_per_slot: f64,
+    /// Drain one replica when the remaining live set could hold all
+    /// outstanding work at this occupancy fraction.
+    pub down_outstanding_per_slot: f64,
+    /// Pressure must persist this long before a scale-up fires.
+    pub sustain_up_s: f64,
+    /// Idle must persist this long before a drain fires (longer than
+    /// the up window: capacity mistakes are cheaper than SLO misses).
+    pub sustain_down_s: f64,
+    /// Minimum time between consecutive scaling actions.
+    pub cooldown_s: f64,
+    /// Decode slots per replica (the occupancy unit of the thresholds).
+    pub slots_per_replica: usize,
+}
+
+impl AutoscalePolicy {
+    /// Policy for a cluster whose full-batch decode step is `step_s`:
+    /// sustain/cooldown windows in step units, slack threshold shared
+    /// with the ladder's degrade fraction.
+    pub fn for_cluster(
+        min: usize,
+        max: usize,
+        slots_per_replica: usize,
+        step_s: f64,
+        warmup_s: f64,
+        up_slack_frac: f64,
+    ) -> Self {
+        AutoscalePolicy {
+            min,
+            max,
+            warmup_s,
+            up_slack_frac,
+            up_outstanding_per_slot: 1.5,
+            down_outstanding_per_slot: 0.5,
+            sustain_up_s: (10.0 * step_s).max(0.02),
+            sustain_down_s: (80.0 * step_s).max(0.2),
+            cooldown_s: (20.0 * step_s).max(0.05).max(warmup_s),
+            slots_per_replica,
+        }
+    }
+}
+
+/// What one control instant decided (the cluster loop turns these into
+/// trace events and report rows).
+#[derive(Clone, Debug, Default)]
+pub struct ScaleActions {
+    /// Replicas that finished warming and now accept work.
+    pub activated: Vec<usize>,
+    /// Replicas that began draining toward retirement.
+    pub drained: Vec<usize>,
+}
+
+/// The autoscaler: per-slot lifecycle states plus the sustained
+/// pressure/idle detectors and replica-second accounting.
+#[derive(Clone, Debug)]
+pub struct Autoscaler {
+    pub policy: AutoscalePolicy,
+    /// Lifecycle state per replica slot (indexed like the backends).
+    pub states: Vec<ReplicaState>,
+    /// Provisioned replica-seconds (Active + Warming + Draining time) —
+    /// the cost side of the elasticity trade.
+    pub replica_seconds: f64,
+    pressure_since: Option<f64>,
+    idle_since: Option<f64>,
+    last_action_s: f64,
+    last_account_s: f64,
+}
+
+impl Autoscaler {
+    /// `total` replica slots with the first `initial_live` (clamped
+    /// into `[min, max]`) starting Active, the rest Retired.
+    pub fn new(policy: AutoscalePolicy, total: usize, initial_live: usize) -> Self {
+        let live = initial_live.clamp(policy.min, policy.max).min(total);
+        Autoscaler {
+            states: (0..total)
+                .map(|i| {
+                    if i < live {
+                        ReplicaState::Active
+                    } else {
+                        ReplicaState::Retired
+                    }
+                })
+                .collect(),
+            policy,
+            replica_seconds: 0.0,
+            pressure_since: None,
+            idle_since: None,
+            last_action_s: f64::NEG_INFINITY,
+            last_account_s: 0.0,
+        }
+    }
+
+    /// Whether the replica accepts new routed work right now.
+    pub fn accepting(&self, replica: usize) -> bool {
+        matches!(self.states[replica], ReplicaState::Active)
+    }
+
+    /// Currently serving replicas.
+    pub fn live(&self) -> usize {
+        self.states
+            .iter()
+            .filter(|s| matches!(s, ReplicaState::Active))
+            .count()
+    }
+
+    fn warming(&self) -> usize {
+        self.states
+            .iter()
+            .filter(|s| matches!(s, ReplicaState::Warming { .. }))
+            .count()
+    }
+
+    /// Replicas currently costing money (everything but Retired).
+    fn provisioned(&self) -> usize {
+        self.states
+            .iter()
+            .filter(|s| !matches!(s, ReplicaState::Retired))
+            .count()
+    }
+
+    /// Mask the snapshot so routing/stealing only see Active replicas
+    /// as accepting (composes with backend health via `&=`).
+    pub fn mask(&self, snap: &mut ClusterSnapshot) {
+        for t in &mut snap.replicas {
+            t.accepting &= self.accepting(t.replica);
+        }
+    }
+
+    /// One control instant: account provisioned time, promote warmed
+    /// replicas, retire empty drained ones, then run the sustained
+    /// pressure/idle detectors. The snapshot must cover every slot.
+    pub fn step(&mut self, snap: &ClusterSnapshot) -> ScaleActions {
+        let now = snap.now_s;
+        self.account(now);
+        let mut out = ScaleActions::default();
+
+        for (i, st) in self.states.iter_mut().enumerate() {
+            match *st {
+                ReplicaState::Warming { ready_at_s } if ready_at_s <= now => {
+                    *st = ReplicaState::Active;
+                    out.activated.push(i);
+                }
+                ReplicaState::Draining if snap.replicas[i].outstanding() == 0 => {
+                    *st = ReplicaState::Retired;
+                }
+                _ => {}
+            }
+        }
+
+        let live = self.live();
+        let slots = self.policy.slots_per_replica as f64;
+        let outstanding: usize = snap
+            .replicas
+            .iter()
+            .filter(|t| matches!(self.states[t.replica], ReplicaState::Active))
+            .map(|t| t.outstanding())
+            .sum();
+        let slack = snap.min_projected_interactive_slack_frac();
+        let pressured = slack < self.policy.up_slack_frac
+            || outstanding as f64 > self.policy.up_outstanding_per_slot * live as f64 * slots;
+        let idle = live > self.policy.min
+            && (outstanding as f64)
+                < self.policy.down_outstanding_per_slot * (live - 1) as f64 * slots;
+
+        if pressured {
+            self.idle_since = None;
+            let since = *self.pressure_since.get_or_insert(now);
+            if now - since >= self.policy.sustain_up_s
+                && now - self.last_action_s >= self.policy.cooldown_s
+                && live + self.warming() < self.policy.max
+            {
+                if let Some(i) = self
+                    .states
+                    .iter()
+                    .position(|s| matches!(s, ReplicaState::Retired))
+                {
+                    self.states[i] = ReplicaState::Warming {
+                        ready_at_s: now + self.policy.warmup_s,
+                    };
+                    self.last_action_s = now;
+                    self.pressure_since = None; // re-arm the detector
+                }
+            }
+        } else if idle {
+            self.pressure_since = None;
+            let since = *self.idle_since.get_or_insert(now);
+            // never drain while a warmup is in flight: the two actions
+            // would fight each other across the cooldown
+            if now - since >= self.policy.sustain_down_s
+                && now - self.last_action_s >= self.policy.cooldown_s
+                && self.warming() == 0
+            {
+                // drain the highest-index Active slot so the stable
+                // front of the pool stays hot
+                if let Some(i) = self
+                    .states
+                    .iter()
+                    .rposition(|s| matches!(s, ReplicaState::Active))
+                {
+                    self.states[i] = ReplicaState::Draining;
+                    out.drained.push(i);
+                    self.last_action_s = now;
+                    self.idle_since = None;
+                }
+            }
+        } else {
+            self.pressure_since = None;
+            self.idle_since = None;
+        }
+        out
+    }
+
+    /// Fold provisioned replica time up to `now` into the accumulator.
+    pub fn account(&mut self, now: f64) {
+        self.replica_seconds += self.provisioned() as f64 * (now - self.last_account_s).max(0.0);
+        self.last_account_s = now;
+    }
+}
+
+/// Price one replica's spin-up: fetch the pinned expert hot set (the
+/// live `k_vec`'s per-layer experts) plus the Stage-1 sensitivity table
+/// over the residency model's host link — the same [`LinkModel`]
+/// constants demand misses pay. 8 bytes per table cell (an f64 loss).
+///
+/// [`LinkModel`]: crate::experts::store::LinkModel
+pub fn warmup_cost_s(rc: &ResidencyConfig, k_vec: &[i32]) -> f64 {
+    let hot_bytes: u64 = k_vec.iter().map(|&k| k.max(0) as u64 * rc.expert_bytes).sum();
+    let table_bytes = (rc.n_layers * rc.n_experts * 8) as u64;
+    rc.link.fetch_s(hot_bytes) + rc.link.fetch_s(table_bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::server::EvictKind;
+    use crate::server::telemetry::ReplicaTelemetry;
+
+    fn policy(min: usize, max: usize) -> AutoscalePolicy {
+        AutoscalePolicy {
+            min,
+            max,
+            warmup_s: 0.5,
+            up_slack_frac: 0.25,
+            up_outstanding_per_slot: 1.5,
+            down_outstanding_per_slot: 0.5,
+            sustain_up_s: 1.0,
+            sustain_down_s: 2.0,
+            cooldown_s: 0.5,
+            slots_per_replica: 4,
+        }
+    }
+
+    fn snap(now_s: f64, outstanding: &[usize]) -> ClusterSnapshot {
+        ClusterSnapshot {
+            now_s,
+            replicas: outstanding
+                .iter()
+                .enumerate()
+                .map(|(i, &n)| {
+                    let mut t = ReplicaTelemetry::idle(i);
+                    t.queue_len = n;
+                    t
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn sustained_pressure_warms_then_activates() {
+        let mut a = Autoscaler::new(policy(1, 3), 3, 1);
+        assert_eq!(a.live(), 1);
+        // heavy backlog on the one live replica: 20 > 1.5 * 1 * 4
+        let hot = |t| snap(t, &[20, 0, 0]);
+        assert!(a.step(&hot(0.0)).activated.is_empty()); // detector arms
+        assert!(a.step(&hot(0.5)).activated.is_empty()); // not sustained yet
+        let acts = a.step(&hot(1.5)); // sustained past 1.0s -> warm slot 1
+        assert!(acts.activated.is_empty(), "warmup is not instantaneous");
+        assert!(matches!(a.states[1], ReplicaState::Warming { .. }));
+        assert!(!a.accepting(1), "warming replica must not accept work");
+        // past ready_at (1.5 + 0.5): slot 1 activates
+        let acts = a.step(&hot(2.1));
+        assert_eq!(acts.activated, vec![1]);
+        assert!(a.accepting(1));
+        assert_eq!(a.live(), 2);
+    }
+
+    #[test]
+    fn sustained_idle_drains_then_retires_highest_index() {
+        let mut a = Autoscaler::new(policy(1, 3), 3, 3);
+        assert_eq!(a.live(), 3);
+        // nearly empty cluster: 1 < 0.5 * 2 * 4
+        let calm = |t| snap(t, &[1, 0, 0]);
+        assert!(a.step(&calm(0.0)).drained.is_empty());
+        let acts = a.step(&calm(2.5)); // sustained past 2.0s
+        assert_eq!(acts.drained, vec![2], "highest-index Active drains first");
+        assert!(matches!(a.states[2], ReplicaState::Draining));
+        assert!(!a.accepting(2));
+        // still holding work: stays Draining
+        a.step(&snap(3.0, &[1, 0, 4]));
+        assert!(matches!(a.states[2], ReplicaState::Draining));
+        // empty now: retires without an event
+        a.step(&snap(3.5, &[1, 0, 0]));
+        assert!(matches!(a.states[2], ReplicaState::Retired));
+        assert_eq!(a.live(), 2);
+    }
+
+    #[test]
+    fn never_drains_below_min_or_grows_past_max() {
+        let mut a = Autoscaler::new(policy(2, 3), 3, 2);
+        let calm = |t| snap(t, &[0, 0, 0]);
+        for i in 0..20 {
+            a.step(&calm(i as f64));
+        }
+        assert_eq!(a.live(), 2, "drained below min");
+
+        let mut a = Autoscaler::new(policy(1, 2), 2, 2);
+        let hot = |t| snap(t, &[30, 30]);
+        for i in 0..20 {
+            a.step(&hot(i as f64));
+        }
+        assert_eq!(a.live(), 2, "grew past max");
+    }
+
+    #[test]
+    fn collapsing_slack_is_pressure_even_at_low_depth() {
+        let mut a = Autoscaler::new(policy(1, 2), 2, 1);
+        let mk = |t: f64| {
+            let mut s = snap(t, &[1, 0]);
+            s.replicas[0].projected_interactive_slack_frac = Some(0.1);
+            s
+        };
+        a.step(&mk(0.0));
+        a.step(&mk(1.5));
+        assert!(
+            matches!(a.states[1], ReplicaState::Warming { .. }),
+            "slack collapse must trigger scale-up"
+        );
+    }
+
+    #[test]
+    fn replica_seconds_track_provisioned_time() {
+        let mut a = Autoscaler::new(policy(1, 2), 2, 1);
+        a.step(&snap(1.0, &[0, 0]));
+        assert!((a.replica_seconds - 1.0).abs() < 1e-9);
+        a.account(3.0);
+        assert!((a.replica_seconds - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mask_composes_with_backend_health() {
+        let a = Autoscaler::new(policy(1, 3), 3, 1);
+        let mut s = snap(0.0, &[0, 0, 0]);
+        a.mask(&mut s);
+        assert!(s.replicas[0].accepting);
+        assert!(!s.replicas[1].accepting && !s.replicas[2].accepting);
+    }
+
+    #[test]
+    fn warmup_prices_hot_set_and_table_over_the_link() {
+        let rc = ResidencyConfig::for_dims(4, 8, 1 << 20, 1.0, EvictKind::KvecAware, 0);
+        let cheap = warmup_cost_s(&rc, &[1, 1, 1, 1]);
+        let dear = warmup_cost_s(&rc, &[4, 4, 4, 4]);
+        assert!(cheap > 0.0);
+        assert!(dear > cheap, "more pinned experts must cost more");
+        // analytic check: hot bytes + table bytes over the link, plus
+        // two issue latencies
+        let expect = rc.link.fetch_s(4 * (1 << 20)) + rc.link.fetch_s(4 * 8 * 8);
+        assert!((cheap - expect).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,145 @@
+//! Heterogeneous replica hardware tiers (mixed H100/A100 clusters).
+//!
+//! `--replica-tiers h100:4,a100:4` assigns each replica slot a
+//! [`Hardware`] constant set in spec order, and every rung of that
+//! replica's quality ladder gets a service model recomputed from the
+//! tier's perf model — so an A100 replica really is ~3x slower per
+//! step, and its `step_ewma_s` telemetry says so.
+//!
+//! Routing and stealing learn about speed through
+//! [`reweight_by_speed`]: the snapshot's token-backlog `load_cost` is
+//! rescaled into estimated *drain time* using each replica's step-time
+//! EWMA, so every load-based decision (JSQ, p2c, class-aware
+//! tie-breaks, steal-victim selection) weighs how fast a replica burns
+//! work, not just how much it holds.
+
+use anyhow::{ensure, Result};
+
+use crate::config::server::TierKind;
+use crate::perfmodel::Hardware;
+use crate::server::telemetry::ClusterSnapshot;
+
+/// The hardware constant set of a tier.
+pub fn hardware_for(tier: TierKind) -> Hardware {
+    match tier {
+        TierKind::H100 => Hardware::h100(),
+        TierKind::A100 => Hardware::a100(),
+    }
+}
+
+/// Expand a `tier:count` spec into one tier per replica slot, in spec
+/// order (the first entry takes the lowest replica indices).
+pub fn expand_tiers(spec: &[(TierKind, usize)]) -> Vec<TierKind> {
+    spec.iter()
+        .flat_map(|&(tier, n)| std::iter::repeat(tier).take(n))
+        .collect()
+}
+
+/// A tier spec must cover the cluster exactly.
+pub fn validate_tiers(spec: &[(TierKind, usize)], replicas: usize) -> Result<()> {
+    let total: usize = spec.iter().map(|&(_, n)| n).sum();
+    ensure!(
+        total == replicas,
+        "--replica-tiers counts sum to {total} but the cluster has {replicas} replicas"
+    );
+    Ok(())
+}
+
+/// Rescale every replica's `load_cost` from token backlog into
+/// estimated drain time (integer nanoseconds): `(load + 1) *
+/// step_ewma_s`. The `+1` keeps empty replicas ordered by speed, so
+/// load ties break toward the faster tier. Replicas with no step
+/// history yet are priced at the slowest observed EWMA (pessimistic —
+/// a cold replica never looks artificially fast). No-op until at least
+/// one replica has step history.
+pub fn reweight_by_speed(snap: &mut ClusterSnapshot) {
+    let max_e = snap
+        .replicas
+        .iter()
+        .map(|t| t.step_ewma_s)
+        .fold(0.0f64, f64::max);
+    if max_e <= 0.0 {
+        return;
+    }
+    for t in &mut snap.replicas {
+        let e = if t.step_ewma_s > 0.0 { t.step_ewma_s } else { max_e };
+        t.load_cost = ((t.load_cost + 1) as f64 * e * 1e9).round() as u64;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::telemetry::ReplicaTelemetry;
+
+    #[test]
+    fn a100_is_a_slower_tier_than_h100() {
+        let h = hardware_for(TierKind::H100);
+        let a = hardware_for(TierKind::A100);
+        assert!(a.peak_flops < h.peak_flops);
+        assert!(a.hbm_bw < h.hbm_bw);
+        assert!(a.host_link_bw < h.host_link_bw);
+        assert!(a.eff_flops() < h.eff_flops());
+    }
+
+    #[test]
+    fn expand_assigns_low_indices_to_the_first_entry() {
+        let tiers = expand_tiers(&[(TierKind::H100, 2), (TierKind::A100, 1)]);
+        assert_eq!(tiers, vec![TierKind::H100, TierKind::H100, TierKind::A100]);
+        assert!(validate_tiers(&[(TierKind::H100, 2), (TierKind::A100, 1)], 3).is_ok());
+        assert!(validate_tiers(&[(TierKind::H100, 2)], 3).is_err());
+    }
+
+    fn snap(loads_ewmas: &[(u64, f64)]) -> ClusterSnapshot {
+        ClusterSnapshot {
+            now_s: 0.0,
+            replicas: loads_ewmas
+                .iter()
+                .enumerate()
+                .map(|(i, &(load, ewma))| {
+                    let mut t = ReplicaTelemetry::idle(i);
+                    t.load_cost = load;
+                    t.step_ewma_s = ewma;
+                    t
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn reweight_turns_backlog_into_drain_time() {
+        // equal backlog, 3x step-time gap: the fast replica must cost
+        // less after reweighting
+        let mut s = snap(&[(100, 0.003), (100, 0.009)]);
+        reweight_by_speed(&mut s);
+        assert!(s.replicas[0].load_cost < s.replicas[1].load_cost);
+        // exact: (100+1) * ewma * 1e9 ns
+        assert_eq!(s.replicas[0].load_cost, (101.0f64 * 0.003 * 1e9).round() as u64);
+    }
+
+    #[test]
+    fn load_ties_break_toward_the_faster_replica() {
+        let mut s = snap(&[(0, 0.009), (0, 0.003)]);
+        reweight_by_speed(&mut s);
+        assert!(
+            s.replicas[1].load_cost < s.replicas[0].load_cost,
+            "empty replicas must still be ordered by speed"
+        );
+    }
+
+    #[test]
+    fn cold_replicas_are_priced_pessimistically() {
+        let mut s = snap(&[(10, 0.0), (10, 0.004), (10, 0.002)]);
+        reweight_by_speed(&mut s);
+        // cold replica 0 gets the slowest observed EWMA (0.004)
+        assert_eq!(s.replicas[0].load_cost, s.replicas[1].load_cost);
+    }
+
+    #[test]
+    fn no_history_anywhere_is_a_noop() {
+        let mut s = snap(&[(7, 0.0), (3, 0.0)]);
+        reweight_by_speed(&mut s);
+        assert_eq!(s.replicas[0].load_cost, 7);
+        assert_eq!(s.replicas[1].load_cost, 3);
+    }
+}

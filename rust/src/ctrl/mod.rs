@@ -1,0 +1,31 @@
+//! Elastic control plane: admission shedding, replica autoscaling, and
+//! heterogeneous hardware tiers — all pure consumers of the per-instant
+//! [`ClusterSnapshot`](crate::server::telemetry::ClusterSnapshot), the
+//! same telemetry surface that drives routing, the quality ladder, and
+//! work stealing.
+//!
+//! The three pieces compose but stay independent:
+//! - [`shed`] — class-aware admission shedding with SLO-relative
+//!   thresholds: batch-priority traffic is dropped under pressure
+//!   BEFORE the hard cap would reject interactive work, mirroring the
+//!   ladder's queue-depth and projected-slack pressure signals.
+//! - [`autoscale`] — a replica autoscaler over the same telemetry:
+//!   scale-up on sustained slack pressure, drain-then-retire on
+//!   sustained idle, with spin-up priced as expert prewarm + Stage-1
+//!   table load through the residency model's host link.
+//! - [`hetero`] — per-replica hardware performance tiers (mixed
+//!   H100/A100 clusters) and the speed-aware load reweighting that
+//!   makes every load-based decision weigh replica speed via
+//!   `ReplicaTelemetry::step_ewma_s`, not just queue depth.
+//!
+//! Everything here defaults OFF: a cluster built without the
+//! [`Cluster`](crate::server::router::Cluster) shed/autoscale/hetero
+//! builders runs byte-identically to earlier releases.
+
+pub mod autoscale;
+pub mod hetero;
+pub mod shed;
+
+pub use autoscale::{warmup_cost_s, AutoscalePolicy, Autoscaler, ReplicaState, ScaleActions};
+pub use hetero::{expand_tiers, hardware_for, reweight_by_speed, validate_tiers};
+pub use shed::{ShedPolicy, Shedder};

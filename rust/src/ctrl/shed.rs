@@ -1,0 +1,180 @@
+//! Class-aware admission shedding with SLO-relative thresholds.
+//!
+//! The pass-through [`AdmissionControl`](crate::server::scheduler::AdmissionControl)
+//! rejects whatever arrives once the outstanding cap is hit — including
+//! interactive traffic the cluster exists to protect. The shedder sits
+//! in front of the cap and sheds *batch-priority* work earlier, on the
+//! same two pressure signals the quality ladder reads: outstanding
+//! depth relative to the cap, and the cluster's worst projected
+//! interactive EDF slack. Interactive (priority-0) requests are never
+//! policy-shed; only the hard cap can turn them away.
+//!
+//! Thresholds are graduated by priority: the lower a class's priority
+//! (higher numeric value), the earlier it sheds, so a flash crowd burns
+//! background batch first, then best-effort, and touches interactive
+//! last.
+
+use crate::config::server::ServerConfig;
+use crate::server::telemetry::ClusterSnapshot;
+
+/// Declarative shedding thresholds (all SLO/cap-relative).
+#[derive(Clone, Debug)]
+pub struct ShedPolicy {
+    /// The hard admission cap the queue thresholds are fractions of.
+    pub cap: usize,
+    /// Outstanding-work fraction of the cap at which priority-1 traffic
+    /// sheds; priority `p` sheds at `cap * queue_frac^p`, so deeper
+    /// batch tiers shed earlier.
+    pub queue_frac: f64,
+    /// Shed all batch traffic while the cluster's worst *projected*
+    /// interactive slack fraction sits below this (the ladder's degrade
+    /// threshold by default): queued interactive deadlines are already
+    /// collapsing, so batch admissions would only steal their service.
+    pub slack_frac: f64,
+}
+
+impl ShedPolicy {
+    /// Thresholds mirroring the ladder controller's pressure config.
+    pub fn from_config(cfg: &ServerConfig) -> Self {
+        ShedPolicy {
+            cap: cfg.queue_cap,
+            queue_frac: 0.85,
+            slack_frac: cfg.slack_degrade_frac,
+        }
+    }
+
+    /// Outstanding-work threshold at which priority `p` traffic sheds.
+    pub fn queue_threshold(&self, priority: u8) -> usize {
+        (self.cap as f64 * self.queue_frac.powi(priority as i32)).floor() as usize
+    }
+}
+
+/// Stateful shedder: the policy plus per-class shed counters.
+#[derive(Clone, Debug)]
+pub struct Shedder {
+    pub policy: ShedPolicy,
+    /// Requests shed per SLO class (index = class id).
+    pub shed_by_class: Vec<u64>,
+}
+
+impl Shedder {
+    pub fn new(policy: ShedPolicy, n_classes: usize) -> Self {
+        Shedder {
+            policy,
+            shed_by_class: vec![0; n_classes],
+        }
+    }
+
+    /// Decide one arrival: `Some(reason)` means shed (and the per-class
+    /// counter has been charged), `None` means pass it on to the hard
+    /// cap. Pure in the snapshot — only the counters mutate.
+    pub fn decide(
+        &mut self,
+        snap: &ClusterSnapshot,
+        outstanding: usize,
+        class: usize,
+        priority: u8,
+    ) -> Option<&'static str> {
+        if priority == 0 {
+            return None;
+        }
+        let reason = if outstanding >= self.policy.queue_threshold(priority) {
+            Some("queue")
+        } else if snap.min_projected_interactive_slack_frac() < self.policy.slack_frac {
+            Some("slack")
+        } else {
+            None
+        };
+        if reason.is_some() {
+            if class >= self.shed_by_class.len() {
+                self.shed_by_class.resize(class + 1, 0);
+            }
+            self.shed_by_class[class] += 1;
+        }
+        reason
+    }
+
+    /// Total requests shed across classes.
+    pub fn total(&self) -> u64 {
+        self.shed_by_class.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::telemetry::ReplicaTelemetry;
+
+    fn policy() -> ShedPolicy {
+        ShedPolicy {
+            cap: 100,
+            queue_frac: 0.8,
+            slack_frac: 0.25,
+        }
+    }
+
+    fn calm_snap() -> ClusterSnapshot {
+        ClusterSnapshot {
+            now_s: 0.0,
+            replicas: vec![ReplicaTelemetry::idle(0)],
+        }
+    }
+
+    #[test]
+    fn thresholds_graduate_by_priority() {
+        let p = policy();
+        assert_eq!(p.queue_threshold(1), 80);
+        assert_eq!(p.queue_threshold(2), 64);
+        assert!(p.queue_threshold(2) < p.queue_threshold(1));
+        assert!(p.queue_threshold(1) < p.cap);
+    }
+
+    #[test]
+    fn interactive_is_never_policy_shed() {
+        let mut s = Shedder::new(policy(), 3);
+        // even at (and past) the cap, priority 0 passes through to the
+        // hard cap — the shedder never touches it
+        assert_eq!(s.decide(&calm_snap(), 1000, 0, 0), None);
+        assert_eq!(s.total(), 0);
+    }
+
+    #[test]
+    fn batch_sheds_on_queue_pressure_deepest_first() {
+        let mut s = Shedder::new(policy(), 3);
+        let snap = calm_snap();
+        // at outstanding=70: priority 2 (threshold 64) sheds, priority 1
+        // (threshold 80) still passes
+        assert_eq!(s.decide(&snap, 70, 2, 2), Some("queue"));
+        assert_eq!(s.decide(&snap, 70, 1, 1), None);
+        // at 85 priority 1 sheds too
+        assert_eq!(s.decide(&snap, 85, 1, 1), Some("queue"));
+        assert_eq!(s.shed_by_class, vec![0, 1, 1]);
+        assert_eq!(s.total(), 2);
+    }
+
+    #[test]
+    fn collapsing_interactive_slack_sheds_all_batch() {
+        let mut s = Shedder::new(policy(), 3);
+        let mut t = ReplicaTelemetry::idle(0);
+        t.projected_interactive_slack_frac = Some(0.1); // below 0.25
+        let snap = ClusterSnapshot {
+            now_s: 1.0,
+            replicas: vec![t],
+        };
+        // outstanding is low, but interactive deadlines are collapsing
+        assert_eq!(s.decide(&snap, 1, 1, 1), Some("slack"));
+        assert_eq!(s.decide(&snap, 1, 2, 2), Some("slack"));
+        // interactive still passes
+        assert_eq!(s.decide(&snap, 1, 0, 0), None);
+    }
+
+    #[test]
+    fn calm_cluster_sheds_nothing() {
+        let mut s = Shedder::new(policy(), 3);
+        let snap = calm_snap(); // no queued interactive -> slack = +inf
+        for p in 1..=2u8 {
+            assert_eq!(s.decide(&snap, 10, p as usize, p), None);
+        }
+        assert_eq!(s.total(), 0);
+    }
+}

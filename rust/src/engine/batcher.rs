@@ -57,6 +57,11 @@ impl Batcher {
         self.slots.iter().filter(|s| s.is_some()).count()
     }
 
+    /// Maximum number of requests the waiting queue accepts.
+    pub fn queue_capacity(&self) -> usize {
+        self.queue_cap
+    }
+
     pub fn is_idle(&self) -> bool {
         self.waiting.is_empty() && self.n_active() == 0
     }

@@ -139,6 +139,11 @@ impl<'m, M: ModelBackend> Engine<'m, M> {
         self.batcher.waiting.len()
     }
 
+    /// Capacity of the engine-internal waiting queue.
+    pub fn queue_capacity(&self) -> usize {
+        self.batcher.queue_capacity()
+    }
+
     /// Current per-layer active-expert budgets.
     pub fn k_vec(&self) -> &[i32] {
         &self.k_vec

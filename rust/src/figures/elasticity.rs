@@ -1,0 +1,94 @@
+//! Elastic-control-plane figure (`lexi figures --exp elasticity`): one
+//! small deterministic `bench_elasticity` sweep rendered as grouped
+//! bars — goodput and provisioned replica-seconds per provisioning cell
+//! (fixed-min / fixed-max / autoscale / autoscale+shed), plus the
+//! heterogeneous tier mix's interactive p95 TTFT per routing policy.
+//!
+//! The rows come straight from [`crate::server::bench_elasticity`], so
+//! the figure shows exactly what the `bench_elasticity_*.csv` artifact
+//! reports.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::config::model::spec;
+use crate::config::server::{ScenarioKind, ServerConfig};
+use crate::server;
+
+use super::series::{f, FigureOutput};
+
+/// Run a small deterministic elasticity sweep and emit one row per cell.
+pub fn run(out_dir: &Path) -> Result<FigureOutput> {
+    let m = spec("minicpm-moe-8x2b")?;
+    let cfg = ServerConfig {
+        replicas: 2,
+        slots_per_replica: 4,
+        n_requests: 48,
+        scenario: ScenarioKind::Diurnal,
+        service_in_len: 256,
+        service_out_len: 32,
+        ..Default::default()
+    };
+    let rows = server::bench_elasticity(&m, &cfg, None, out_dir)?;
+    let scenario = rows
+        .first()
+        .map(|r| r.scenario.clone())
+        .unwrap_or_else(|| "diurnal".to_string());
+    let mut fig = FigureOutput::new(
+        &format!("fig_elasticity_{}_{scenario}", m.name),
+        &[
+            "family",
+            "cell",
+            "policy",
+            "replicas",
+            "goodput_rps",
+            "interactive_ttft_p95_ms",
+            "replica_seconds",
+            "shed",
+            "scale_ups",
+            "drains",
+        ],
+    );
+    for r in &rows {
+        fig.row(vec![
+            r.family.to_string(),
+            r.cell.clone(),
+            r.policy.clone(),
+            r.replicas.to_string(),
+            f(r.goodput_rps),
+            f(r.interactive_ttft_p95_s * 1e3),
+            f(r.replica_seconds),
+            r.shed.to_string(),
+            r.scale_ups.to_string(),
+            r.drains.to_string(),
+        ]);
+    }
+    fig.emit(out_dir)?;
+    Ok(fig)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elasticity_figure_covers_both_families() {
+        let dir = std::env::temp_dir().join("lexi_fig_elasticity_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let fig = run(&dir).unwrap();
+        // 4 provisioning cells + uniform reference + 3 tier-mix policies
+        assert_eq!(fig.rows.len(), 8);
+        assert_eq!(fig.rows.iter().filter(|r| r[0] == "elastic").count(), 4);
+        assert_eq!(fig.rows.iter().filter(|r| r[0] == "hetero").count(), 4);
+        assert!(fig.rows.iter().any(|r| r[2] == "classaware"));
+        assert!(fig.rows.iter().any(|r| r[1].contains("autoscale")));
+        assert!(dir
+            .join("fig_elasticity_minicpm-moe-8x2b_diurnal.csv")
+            .exists());
+        // the sweep artifact lands next to the figure
+        assert!(dir
+            .join("bench_elasticity_minicpm-moe-8x2b_diurnal.csv")
+            .exists());
+    }
+}

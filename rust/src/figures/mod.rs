@@ -4,6 +4,7 @@
 pub mod ablation;
 pub mod accuracy_throughput;
 pub mod cross_validation;
+pub mod elasticity;
 pub mod fig2;
 pub mod fig3;
 pub mod memory;

@@ -32,6 +32,11 @@
 //!   simulated/real replicas, and a telemetry-driven control plane
 //!   ([`server::ClusterSnapshot`] → routing incl. SLO-class-aware,
 //!   queue/EDF-slack adaptive LExI ladder, cross-replica work stealing)
+//! - [`ctrl`]    — elastic control plane over the same snapshots:
+//!   class-aware admission shedding ([`ctrl::Shedder`]), a replica
+//!   autoscaler pricing spin-up as expert prewarm + Stage-1 table load
+//!   ([`ctrl::Autoscaler`]), and heterogeneous replica tiers with
+//!   speed-weighted routing (`lexi bench-elasticity`)
 //! - [`calibrate`] — calibration subsystem: occupancy-bucketed engine
 //!   step-time artifacts, least-squares refit of the sim
 //!   [`server::ServiceModel`] per ladder rung
@@ -49,6 +54,7 @@
 
 pub mod calibrate;
 pub mod config;
+pub mod ctrl;
 pub mod engine;
 pub mod eval;
 pub mod experts;

@@ -16,6 +16,10 @@
 //!                    multi-replica front-end (sim or real engine replicas)
 //!   lexi bench-memory [--budgets F1,F2] [--evict all|lru,lfu,kvec] [--scenario S]
 //!                    expert-residency sweep: HBM budgets x eviction policies
+//!   lexi bench-elasticity [--scenario S] [--autoscale MIN:MAX]
+//!                    [--replica-tiers h100:N,a100:M]
+//!                    elastic control plane sweep: fixed vs autoscaled
+//!                    provisioning (± shedding), hetero tiers x routing
 //!   lexi calibrate  [--scenario S] [--requests N] [--seed S]
 //!                    run the engine backend and fit a sim ServiceModel
 //!                    calibration artifact from its step-time telemetry
@@ -25,7 +29,7 @@
 //!                    gate on TTFT/TPOT percentile divergence (nonzero exit
 //!                    beyond tolerance)
 //!   lexi trace    --check F [--prom F]   validate observability artifacts
-//!   lexi figures  --exp fig2|fig3|fig9|figs4-8|table1|memory|timeline|all
+//!   lexi figures  --exp fig2|fig3|fig9|figs4-8|table1|memory|timeline|elasticity|all
 //!
 //! Global flags: --artifacts DIR (default ./artifacts), --out DIR
 //! (default ./results), --iters N, --fast.
@@ -58,7 +62,7 @@ fn parse_args() -> Result<Args> {
     while let Some(a) = it.next() {
         if let Some(name) = a.strip_prefix("--") {
             let val = match name {
-                "fast" | "force" | "verify" | "trace" | "selfprof" | "gate-p99" => {
+                "fast" | "force" | "verify" | "trace" | "selfprof" | "gate-p99" | "shed" => {
                     "1".to_string()
                 }
                 _ => it.next().with_context(|| format!("--{name} needs a value"))?,
@@ -126,6 +130,7 @@ fn run() -> Result<()> {
         "serve" => cmd_serve(&args)?,
         "bench-serve" => cmd_bench_serve(&args)?,
         "bench-memory" => cmd_bench_memory(&args)?,
+        "bench-elasticity" => cmd_bench_elasticity(&args)?,
         "calibrate" => cmd_calibrate(&args)?,
         "cross-validate" => cmd_cross_validate(&args)?,
         "trace" => cmd_trace(&args)?,
@@ -143,10 +148,11 @@ fn print_help() {
     println!(
         "lexi — LExI MoE inference coordinator\n\
          commands: table1 | profile | search | optimize | eval | serve | bench-serve |\n\
-                   bench-memory | calibrate | cross-validate | trace | figures\n\
+                   bench-memory | bench-elasticity | calibrate | cross-validate | trace |\n\
+                   figures\n\
          flags: --model M --budget B --artifacts DIR --out DIR --iters N --fast\n\
-         figures: --exp table1|fig2|fig3|fig9|figs4-8|ablations|memory|timeline|all\n\
-                      [--models a,b]\n\
+         figures: --exp table1|fig2|fig3|fig9|figs4-8|ablations|memory|timeline|\n\
+                      elasticity|all [--models a,b]\n\
          bench-serve: --scenario poisson|bursty|diurnal|closed-loop|flash-crowd|trace-replay|all\n\
                       --replicas N --slots N --route rr|jsq|p2c|classaware --backend sim|engine\n\
                       --table auto|synthetic|measured --ladder replica|cluster\n\
@@ -156,6 +162,10 @@ fn print_help() {
                       --evict lru|lfu|kvec --prefetch on|off\n\
                       --trace-file F (JSONL log for trace-replay)\n\
                       --calibration F (sim service models refit from the artifact)\n\
+                      --shed (class-aware admission shedding; batch drops first)\n\
+                      --autoscale MIN:MAX (replica autoscaler bounds, sim backend)\n\
+                      --replica-tiers h100:N,a100:M (hardware tiers + speed-weighted\n\
+                      routing, sim backend; counts must sum to --replicas)\n\
                       --trace (record spans; emit Perfetto/critical-path/Prometheus\n\
                       artifacts) --trace-ring-cap N --metrics-interval S\n\
                       --selfprof (wall-clock profile of the sim's own hot sections;\n\
@@ -164,6 +174,9 @@ fn print_help() {
          bench-memory: --budgets F1,F2,.. (fractions) --evict all|lru,lfu,kvec\n\
                       --scenario S --replicas N --slots N --requests N --prefetch on|off\n\
                       --model M --seed S\n\
+         bench-elasticity: --scenario S (default diurnal) --autoscale MIN:MAX --shed\n\
+                      --replica-tiers h100:N,a100:M --replicas N --slots N\n\
+                      --requests N --model M --seed S\n\
          calibrate: --scenario S --replicas N --slots N --requests N --model M --seed S\n\
                       (writes calibration_<model>_<scenario>.json to --out)\n\
          cross-validate: calibrate flags plus --calibration F (reuse a saved artifact)\n\
@@ -358,7 +371,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// bench-memory sweeps a list).
 fn server_cfg_from_args(args: &Args) -> Result<lexi_moe::config::server::ServerConfig> {
     use lexi_moe::config::server::{
-        BackendKind, LadderScope, PolicyKind, PressureMode, ServerConfig, TableMode,
+        parse_autoscale, BackendKind, LadderScope, PolicyKind, PressureMode, ServerConfig,
+        TableMode, TierKind,
     };
     let mut cfg = ServerConfig::default();
     if let Some(n) = args.get("replicas") {
@@ -426,6 +440,15 @@ fn server_cfg_from_args(args: &Args) -> Result<lexi_moe::config::server::ServerC
     }
     if args.get("selfprof").is_some() {
         cfg.selfprof = true;
+    }
+    if args.get("shed").is_some() {
+        cfg.shed = true;
+    }
+    if let Some(a) = args.get("autoscale") {
+        cfg.autoscale = Some(parse_autoscale(a)?);
+    }
+    if let Some(t) = args.get("replica-tiers") {
+        cfg.replica_tiers = Some(TierKind::parse_spec(t)?);
     }
     if let Some(n) = args.get("requests") {
         cfg.n_requests = n.parse().context("--requests must be an integer")?;
@@ -528,6 +551,45 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
         println!("self-profile appended to {}", path.display());
     }
     println!("reports written to {}", out.display());
+    Ok(())
+}
+
+/// Elastic-control-plane sweep (`lexi bench-elasticity`): fixed
+/// provisioning vs autoscaling (± class-aware shedding), plus a
+/// heterogeneous H100/A100 tier mix across routing policies, all on one
+/// shared workload contract. `--autoscale min:max` and
+/// `--replica-tiers h100:N,a100:M` override the default cell bounds.
+fn cmd_bench_elasticity(args: &Args) -> Result<()> {
+    use lexi_moe::config::server::ScenarioKind;
+
+    let model_name = args.get("model").unwrap_or("qwen1.5-moe-a2.7b");
+    let mspec = spec(model_name)?;
+    let mut cfg = server_cfg_from_args(args)?;
+    anyhow::ensure!(
+        cfg.calibration_file.is_none(),
+        "--calibration applies to bench-serve / cross-validate, not bench-elasticity"
+    );
+    // diurnal by default: the load swing is what provisioning elasticity
+    // is for
+    cfg.scenario = match args.get("scenario") {
+        Some(s) => ScenarioKind::parse(s)?,
+        None => ScenarioKind::Diurnal,
+    };
+    let out = args.out_dir();
+    let artifacts = args.artifacts();
+    let artifacts_opt = artifacts.exists().then_some(artifacts.as_path());
+    println!(
+        "=== bench-elasticity: {model_name}, reference {} replicas x {} slots, scenario {}, \
+         {} requests/cell ===\n",
+        cfg.replicas,
+        cfg.slots_per_replica,
+        cfg.scenario.label(),
+        cfg.n_requests
+    );
+    let rows = lexi_moe::server::bench_elasticity(&mspec, &cfg, artifacts_opt, &out)?;
+    lexi_moe::server::report::print_elasticity_header();
+    lexi_moe::server::report::print_elasticity_rows(&rows);
+    println!("\nreports written to {}", out.display());
     Ok(())
 }
 
@@ -760,6 +822,9 @@ fn cmd_figures(args: &Args) -> Result<()> {
     }
     if matches!(exp, "timeline" | "all") {
         figures::timeline::run(&out)?;
+    }
+    if matches!(exp, "elasticity" | "all") {
+        figures::elasticity::run(&out)?;
     }
     if matches!(exp, "ablations" | "all") {
         figures::ablation::limitations_memory(&out, &cfg)?;

@@ -145,6 +145,25 @@ pub fn perfetto_json(log: &TraceLog, completed: &[CompletedRequest]) -> Json {
                     ]),
                 ));
             }
+            EventKind::Shed { id, class, reason } => {
+                events.push(instant(
+                    "shed",
+                    "admission",
+                    e.t_s,
+                    0,
+                    Json::obj(vec![
+                        ("id", Json::Num(*id as f64)),
+                        ("class", Json::Num(*class as f64)),
+                        ("reason", Json::Str(reason.to_string())),
+                    ]),
+                ));
+            }
+            EventKind::ScaleUp { replica } => {
+                events.push(instant("scale_up", "autoscale", e.t_s, replica + 1, Json::obj(vec![])));
+            }
+            EventKind::Drain { replica } => {
+                events.push(instant("drain", "autoscale", e.t_s, replica + 1, Json::obj(vec![])));
+            }
             _ => {}
         }
     }
@@ -388,6 +407,39 @@ mod tests {
         // 3 request spans + 1 phase span; 1 rung-switch instant
         assert_eq!(sum.spans, 4);
         assert_eq!(sum.instants, 1);
+    }
+
+    #[test]
+    fn elastic_instants_render_and_check() {
+        let mut t = Tracer::new(64);
+        t.record(0.0, EventKind::ScaleUp { replica: 1 });
+        t.record(
+            0.1,
+            EventKind::PhaseStart {
+                replica: 0,
+                phase: PhaseKind::Prefill,
+                rung: 0,
+                dur_s: 0.2,
+                stall_s: 0.0,
+                active: 1,
+                ids: vec![1],
+            },
+        );
+        t.record(0.5, EventKind::Shed { id: 9, class: 3, reason: "slack" });
+        t.record(0.9, EventKind::Drain { replica: 1 });
+        let doc = perfetto_json(&t.finish(), &[]);
+        let sum = check_perfetto(&doc).unwrap();
+        assert_eq!(sum.spans, 1);
+        assert_eq!(sum.instants, 3);
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let shed = evs
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str().map(str::to_string)).ok()
+                == Some("shed".to_string()))
+            .unwrap();
+        let args = shed.get("args").unwrap();
+        assert_eq!(args.get("reason").unwrap().as_str().unwrap(), "slack");
+        assert_eq!(args.get("class").unwrap().as_usize().unwrap(), 3);
     }
 
     #[test]

@@ -255,11 +255,30 @@ impl MetricsRegistry {
         m.help("lexi_queue_wait_seconds", "EDF queue wait per class");
         m.help("lexi_phase_seconds", "phase duration per replica x phase x rung");
         m.help("lexi_expert_stall_seconds", "expert fetch stall per replica");
+        m.help("lexi_requests_shed_total", "policy sheds per class x reason");
+        m.help("lexi_scale_events_total", "autoscaler actions per kind");
+        m.help("lexi_replicas_live", "replicas accepting work at run end");
         m.set_gauge("lexi_trace_events_dropped", &[], log.dropped as f64);
+        let (mut scale_ups, mut drains) = (0u64, 0u64);
         for e in &log.events {
             match &e.kind {
                 EventKind::Reject { class, .. } => {
                     m.inc("lexi_requests_rejected_total", &[("class", class.to_string())], 1);
+                }
+                EventKind::Shed { class, reason, .. } => {
+                    m.inc(
+                        "lexi_requests_shed_total",
+                        &[("class", class.to_string()), ("reason", reason.to_string())],
+                        1,
+                    );
+                }
+                EventKind::ScaleUp { .. } => {
+                    scale_ups += 1;
+                    m.inc("lexi_scale_events_total", &[("kind", "up".to_string())], 1);
+                }
+                EventKind::Drain { .. } => {
+                    drains += 1;
+                    m.inc("lexi_scale_events_total", &[("kind", "drain".to_string())], 1);
                 }
                 EventKind::Steal { .. } => m.inc("lexi_steals_total", &[], 1),
                 EventKind::RungSwitch { replica, .. } => {
@@ -294,6 +313,12 @@ impl MetricsRegistry {
                 }
                 _ => {}
             }
+        }
+        // autoscaled runs emit one ScaleUp per initially-live replica at
+        // t=0, so activations minus drains IS the live count; absent any
+        // scale events the gauge stays unset (fixed clusters say nothing)
+        if scale_ups + drains > 0 {
+            m.set_gauge("lexi_replicas_live", &[], scale_ups as f64 - drains as f64);
         }
         for cp in log.critical_paths(completed) {
             m.observe(
@@ -412,6 +437,35 @@ mod tests {
         assert!(text.contains("lexi_h_seconds_bucket{le=\"+Inf\"} 1"));
         assert!(text.contains("lexi_h_seconds_count 1"));
         assert_eq!(m.counter_total("lexi_x_total"), 2);
+    }
+
+    #[test]
+    fn elastic_events_feed_counters_and_the_live_gauge() {
+        let mut t = crate::obs::Tracer::new(64);
+        t.record(0.0, EventKind::ScaleUp { replica: 0 });
+        t.record(0.0, EventKind::ScaleUp { replica: 1 });
+        t.record(1.0, EventKind::Shed { id: 7, class: 2, reason: "queue" });
+        t.record(1.5, EventKind::Shed { id: 8, class: 2, reason: "slack" });
+        t.record(2.0, EventKind::ScaleUp { replica: 2 });
+        t.record(9.0, EventKind::Drain { replica: 2 });
+        let log = t.finish();
+        let m = MetricsRegistry::from_run(&log, &[]);
+        assert_eq!(
+            m.counter(
+                "lexi_requests_shed_total",
+                &[("class", "2".to_string()), ("reason", "queue".to_string())],
+            ),
+            1
+        );
+        assert_eq!(m.counter_total("lexi_requests_shed_total"), 2);
+        assert_eq!(m.counter("lexi_scale_events_total", &[("kind", "up".to_string())]), 3);
+        assert_eq!(m.counter("lexi_scale_events_total", &[("kind", "drain".to_string())]), 1);
+        // 3 activations - 1 drain = 2 live at run end
+        let text = m.prometheus_text();
+        assert!(text.contains("lexi_replicas_live 2"));
+        // a run without scale events keeps the gauge unset
+        let empty = MetricsRegistry::from_run(&crate::obs::Tracer::new(8).finish(), &[]);
+        assert!(!empty.prometheus_text().contains("lexi_replicas_live"));
     }
 
     #[test]

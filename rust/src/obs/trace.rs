@@ -87,6 +87,20 @@ pub enum EventKind {
     RungSwitch { replica: usize, rung: usize },
     /// Work stealing migrated a queued request between replicas.
     Steal { id: u64, victim: usize, thief: usize },
+    /// The admission shedder dropped the request before the cap would
+    /// have. Always paired with a [`EventKind::Reject`] for the same id
+    /// at the same instant — `Reject` keeps span conservation exact,
+    /// `Shed` carries the control-plane attribution (`reason`).
+    Shed {
+        id: u64,
+        class: usize,
+        reason: &'static str,
+    },
+    /// The autoscaler activated a replica (after its priced warmup).
+    ScaleUp { replica: usize },
+    /// The autoscaler began draining a replica toward retirement; the
+    /// replica stops accepting new work but finishes what it holds.
+    Drain { replica: usize },
 }
 
 /// One timestamped event with its deterministic sequence number.

@@ -55,6 +55,28 @@ impl Hardware {
         }
     }
 
+    /// Previous-generation tier (NVIDIA A100 SXM4 80GB) for
+    /// heterogeneous-cluster sweeps: ~1/3 the BF16 tensor throughput,
+    /// HBM2e instead of HBM3, NVLink3, PCIe Gen4 host link. Kernel
+    /// overheads and tile geometry are kept identical so perf-model
+    /// deltas isolate the bandwidth/compute gap.
+    pub fn a100() -> Self {
+        Hardware {
+            peak_flops: 312e12,
+            hbm_bw: 2.04e12,
+            nvlink_bw: 300e9,
+            gemm_eff: 0.65,
+            mem_eff: 0.80,
+            kernel_overhead: 5e-6,
+            allreduce_latency: 12e-6,
+            moe_tile_rows: 64,
+            sm_lanes: 32,
+            dtype_bytes: 2,
+            host_link_bw: 2.5e10,
+            host_link_latency: 1e-5,
+        }
+    }
+
     /// Effective compute rate (FLOP/s) after GEMM efficiency.
     pub fn eff_flops(&self) -> f64 {
         self.peak_flops * self.gemm_eff

@@ -86,12 +86,29 @@ pub struct EngineReplica<'m, M: ModelBackend> {
 impl<'m, M: ModelBackend> EngineReplica<'m, M> {
     /// Wrap an engine already configured with the ladder's rung-0
     /// `k_vec` (see [`QualityLadder::k_vec`]).
-    pub fn new(id: usize, engine: Engine<'m, M>, ladder: Rc<QualityLadder>) -> Self {
+    ///
+    /// Fails if the engine's internal waiting queue is smaller than its
+    /// slot count: `submit_waiting` tops the engine up to `slots`
+    /// outstanding requests per step, so an undersized queue would
+    /// reject submissions mid-run. Checking here surfaces the
+    /// misconfiguration at cluster construction instead.
+    pub fn new(
+        id: usize,
+        engine: Engine<'m, M>,
+        ladder: Rc<QualityLadder>,
+    ) -> anyhow::Result<Self> {
         let entry = engine.model.entry();
         let slots = entry.batch;
         let vocab = entry.vocab;
+        anyhow::ensure!(
+            engine.queue_capacity() >= slots,
+            "engine queue capacity {} is below its {} slots; \
+             size the queue at least at the batch width",
+            engine.queue_capacity(),
+            slots
+        );
         let n_rungs = ladder.n_rungs().max(1);
-        EngineReplica {
+        Ok(EngineReplica {
             id,
             engine,
             ladder,
@@ -113,7 +130,7 @@ impl<'m, M: ModelBackend> EngineReplica<'m, M> {
             decode_steps: 0,
             rung_switches: 0,
             rung_time_s: vec![0.0; n_rungs],
-        }
+        })
     }
 
     /// Move EDF-ordered requests from the cluster-side queue into the
@@ -132,10 +149,24 @@ impl<'m, M: ModelBackend> EngineReplica<'m, M> {
                 stop_on_eos: false,
                 seed: req.id,
             };
-            let engine_id = self
-                .engine
-                .submit(prompt, sampling)
-                .expect("engine queue must be sized above the cluster admission cap");
+            let engine_id = match self.engine.submit(prompt, sampling) {
+                Ok(id) => id,
+                Err(e) => {
+                    // the constructor guarantees queue capacity >= slots,
+                    // so this is unreachable in practice — but degrade
+                    // like a step failure rather than panicking the
+                    // whole benchmark process
+                    eprintln!(
+                        "replica {}: engine rejected a submission ({e:#}); \
+                         dropping its workload",
+                        self.id
+                    );
+                    self.failed = true;
+                    while self.queue.pop().is_some() {}
+                    self.inflight.clear();
+                    return;
+                }
+            };
             self.just_submitted.push(req.id);
             self.inflight.insert(
                 engine_id,

@@ -43,6 +43,14 @@
 //! weights live in a tiered HBM/host store, demand misses stall phases,
 //! rung switches prewarm the pinned hot set, and `lexi bench-memory`
 //! sweeps budgets x eviction policies ([`bench_memory`]).
+//!
+//! With `--shed`, `--autoscale min:max`, and `--replica-tiers` the
+//! cluster additionally runs the elastic control plane
+//! ([`crate::ctrl`]): class-aware admission shedding, telemetry-driven
+//! replica autoscaling (spin-up priced as expert prewarm + table load),
+//! and heterogeneous hardware tiers with speed-weighted routing — all
+//! pure consumers of the same `ClusterSnapshot`, swept side by side by
+//! `lexi bench-elasticity` ([`bench_elasticity`]).
 
 pub mod backend;
 pub mod engine_backend;
@@ -61,8 +69,11 @@ use std::rc::Rc;
 use anyhow::{bail, Context, Result};
 
 use crate::config::model::ModelSpec;
-use crate::config::server::{BackendKind, EvictKind, ScenarioKind, ServerConfig, TableMode};
+use crate::config::server::{
+    BackendKind, EvictKind, ScenarioKind, ServerConfig, TableMode, TierKind,
+};
 use crate::config::serving::ServingConfig;
+use crate::ctrl::{hardware_for, AutoscalePolicy, Autoscaler, ShedPolicy, Shedder};
 use crate::engine::Engine;
 use crate::experts::{ExpertResidency, ResidencyConfig};
 use crate::lexi::SensitivityTable;
@@ -75,7 +86,7 @@ pub use backend::{BackendStats, CompletedRequest, ReplicaBackend};
 pub use engine_backend::EngineReplica;
 pub use ladder::{LadderController, LadderPolicy, QualityLadder, Rung};
 pub use replica::{Replica, ServiceModel};
-pub use report::{MemoryReport, TransformReport};
+pub use report::{ElasticityReport, MemoryReport, TransformReport};
 pub use router::{Cluster, RoutingPolicy, RunResult};
 pub use scheduler::{AdmissionControl, EdfQueue, QueuedRequest};
 pub use telemetry::{
@@ -248,16 +259,20 @@ pub fn bench_serve(
     artifacts: Option<&Path>,
     out_dir: &Path,
 ) -> Result<Vec<TransformReport>> {
+    validate_elastic(cfg)?;
     let (table, source) = sensitivity_table_sourced(spec, artifacts, cfg.seed, cfg.table_mode)?;
     println!("ladder Stage-1 table source: {source}");
     let calibration = load_calibration(spec, cfg)?;
     let pm = PerfModel::new(spec.clone(), cfg.seed);
     let line_up = contenders(spec, &table, cfg, &pm, calibration.as_ref())?;
+    let tiered = tier_line_ups(spec, &table, cfg)?;
     let base_svc = &line_up[0].ladder.rungs[0].service;
     let (scenario, trace) = scenario_and_trace(base_svc, cfg)?;
 
     let runs = match cfg.backend {
-        BackendKind::Sim => sim_runs(spec, &line_up, &scenario, &trace, cfg),
+        BackendKind::Sim => {
+            sim_runs_elastic(spec, &line_up, tiered.as_deref(), &scenario, &trace, cfg)
+        }
         BackendKind::Engine => match try_real_runtime(spec, artifacts) {
             Some(model) => {
                 println!("engine backend: compiled PJRT runtime ({})", spec.name);
@@ -382,6 +397,182 @@ pub fn bench_memory(
     let stem = format!("bench_memory_{}_{}", spec.name, scenario.name);
     report::write_memory_csv(&out_dir.join(format!("{stem}.csv")), &rows)?;
     report::write_memory_json(&out_dir.join(format!("{stem}.json")), &rows)?;
+    Ok(rows)
+}
+
+/// `lexi bench-elasticity`: sweep the elastic control plane over one
+/// scenario and the adaptive LExI ladder, two families side by side on
+/// the identical workload contract:
+///
+/// - **elastic** — provisioning cells: fixed at the autoscaler's `min`,
+///   fixed at its `max`, autoscaling between the two, and autoscaling
+///   plus class-aware shedding. The headline comparison is goodput vs
+///   provisioned replica-seconds against `fixed-max`.
+/// - **hetero** — a uniform H100 cluster (JSQ reference) against a
+///   mixed H100/A100 tier split under rr / jsq / classaware routing,
+///   showing what speed-weighted, class-aware placement buys on
+///   interactive p95 TTFT.
+///
+/// `--autoscale` and `--replica-tiers` override the default cell
+/// bounds; `cfg.replicas` is the workload-calibration reference, so
+/// every cell faces the same trace.
+pub fn bench_elasticity(
+    spec: &ModelSpec,
+    cfg: &ServerConfig,
+    artifacts: Option<&Path>,
+    out_dir: &Path,
+) -> Result<Vec<ElasticityReport>> {
+    anyhow::ensure!(
+        cfg.backend == BackendKind::Sim,
+        "bench-elasticity sweeps the analytical sim backend only"
+    );
+    anyhow::ensure!(
+        cfg.calibration_file.is_none(),
+        "bench-elasticity re-prices hardware tiers analytically; drop --calibration"
+    );
+    let (table, source) = sensitivity_table_sourced(spec, artifacts, cfg.seed, cfg.table_mode)?;
+    println!("ladder Stage-1 table source: {source}");
+    let pm = PerfModel::new(spec.clone(), cfg.seed);
+    let ladder = QualityLadder::for_model(spec, &table, cfg, &pm)?;
+    let contender = Contender {
+        label: "lexi-ladder",
+        ladder,
+        adaptive: true,
+    };
+    let base_svc = &contender.ladder.rungs[0].service;
+
+    // the identical workload contract across every sweep cell,
+    // calibrated against the reference (uniform, fixed) cluster
+    let (scenario, trace) = scenario_and_trace(base_svc, cfg)?;
+
+    let (min, max) = cfg
+        .autoscale
+        .unwrap_or(((cfg.replicas / 2).max(1), cfg.replicas * 2));
+    anyhow::ensure!(min <= max, "--autoscale min must not exceed max");
+    let tiers = cfg.replica_tiers.clone().unwrap_or_else(|| {
+        vec![
+            (TierKind::H100, cfg.replicas - cfg.replicas / 2),
+            (TierKind::A100, cfg.replicas / 2),
+        ]
+    });
+    crate::ctrl::validate_tiers(&tiers, cfg.replicas)?;
+    let tier_label = tiers
+        .iter()
+        .filter(|&&(_, n)| n > 0)
+        .map(|&(t, n)| format!("{}:{n}", t.label()))
+        .collect::<Vec<_>>()
+        .join(",");
+
+    let run_cell = |cell: &ServerConfig| -> Result<(TransformReport, RunResult)> {
+        validate_elastic(cell)?;
+        let tiered = tier_line_ups(spec, &table, cell)?;
+        let mut runs = sim_runs_elastic(
+            spec,
+            std::slice::from_ref(&contender),
+            tiered.as_deref(),
+            &scenario,
+            &trace,
+            cell,
+        );
+        Ok(runs.remove(0))
+    };
+    let to_row = |family: &'static str,
+                  cell_label: String,
+                  cell: &ServerConfig,
+                  report: &TransformReport,
+                  res: &RunResult| {
+        let interactive = crate::obs::Quantiles::from_samples(
+            res.completed
+                .iter()
+                .filter(|c| scenario.profiles[c.class].priority == 0)
+                .map(|c| c.ttft_s),
+        );
+        ElasticityReport {
+            scenario: scenario.name.to_string(),
+            family,
+            cell: cell_label,
+            policy: cell.policy.label().to_string(),
+            replicas: report.replicas,
+            goodput_rps: report.goodput_rps,
+            throughput_tok_s: report.throughput_tok_s,
+            interactive_ttft_p95_s: interactive.q(95.0),
+            completed: report.n_completed,
+            rejected: report.n_rejected,
+            shed: res.shed_by_class.as_ref().map_or(0, |v| v.iter().sum()),
+            replica_seconds: res
+                .replica_seconds
+                .unwrap_or(report.replicas as f64 * report.makespan_s),
+            scale_ups: report.scale_ups.unwrap_or(0),
+            drains: report.drains.unwrap_or(0),
+        }
+    };
+
+    let mut rows = Vec::new();
+    // elastic family: fixed floors/ceilings vs the autoscaler
+    let elastic_cells: [(String, Box<dyn Fn(&mut ServerConfig)>); 4] = [
+        (
+            format!("fixed-min({min})"),
+            Box::new(move |c| c.replicas = min),
+        ),
+        (
+            format!("fixed-max({max})"),
+            Box::new(move |c| c.replicas = max),
+        ),
+        (
+            format!("autoscale({min}:{max})"),
+            Box::new(move |c| {
+                c.replicas = min;
+                c.autoscale = Some((min, max));
+            }),
+        ),
+        (
+            format!("autoscale({min}:{max})+shed"),
+            Box::new(move |c| {
+                c.replicas = min;
+                c.autoscale = Some((min, max));
+                c.shed = true;
+            }),
+        ),
+    ];
+    for (label, mutate) in &elastic_cells {
+        let mut cell = cfg.clone();
+        cell.replica_tiers = None;
+        cell.autoscale = None;
+        cell.shed = false;
+        mutate(&mut cell);
+        let (report, res) = run_cell(&cell)?;
+        rows.push(to_row("elastic", label.clone(), &cell, &report, &res));
+    }
+    // hetero family: uniform reference, then the tier mix per policy
+    use crate::config::server::PolicyKind;
+    {
+        let mut cell = cfg.clone();
+        cell.replica_tiers = None;
+        cell.autoscale = None;
+        cell.shed = false;
+        cell.policy = PolicyKind::Jsq;
+        let (report, res) = run_cell(&cell)?;
+        rows.push(to_row(
+            "hetero",
+            format!("h100:{}", cfg.replicas),
+            &cell,
+            &report,
+            &res,
+        ));
+    }
+    for policy in [PolicyKind::RoundRobin, PolicyKind::Jsq, PolicyKind::ClassAware] {
+        let mut cell = cfg.clone();
+        cell.replica_tiers = Some(tiers.clone());
+        cell.autoscale = None;
+        cell.shed = false;
+        cell.policy = policy;
+        let (report, res) = run_cell(&cell)?;
+        rows.push(to_row("hetero", tier_label.clone(), &cell, &report, &res));
+    }
+
+    let stem = format!("bench_elasticity_{}_{}", spec.name, scenario.name);
+    report::write_elasticity_csv(&out_dir.join(format!("{stem}.csv")), &rows)?;
+    report::write_elasticity_json(&out_dir.join(format!("{stem}.json")), &rows)?;
     Ok(rows)
 }
 
@@ -518,16 +709,70 @@ pub(crate) fn sim_runs(
     trace: &Trace,
     cfg: &ServerConfig,
 ) -> Vec<(TransformReport, RunResult)> {
+    sim_runs_elastic(spec, line_up, None, scenario, trace, cfg)
+}
+
+/// [`sim_runs`] plus the elastic control plane: shedding, autoscaling,
+/// and heterogeneous tiers, each wired only when its config flag asks
+/// for it (the default path builds the identical cluster as before).
+/// `tier_line_ups[t]` holds the contender ladders re-priced on tier
+/// `t`'s hardware (see [`tier_line_ups`]), matched to `line_up` entries
+/// by label; tier indices follow `cfg.replica_tiers` spec order.
+pub(crate) fn sim_runs_elastic(
+    spec: &ModelSpec,
+    line_up: &[Contender],
+    tier_line_ups: Option<&[Vec<Contender>]>,
+    scenario: &Scenario,
+    trace: &Trace,
+    cfg: &ServerConfig,
+) -> Vec<(TransformReport, RunResult)> {
+    // replica index -> tier index under --replica-tiers (empty otherwise)
+    let tier_idx: Vec<usize> = cfg
+        .replica_tiers
+        .as_deref()
+        .map(|tiers| {
+            tiers
+                .iter()
+                .enumerate()
+                .flat_map(|(ti, &(_, n))| std::iter::repeat(ti).take(n))
+                .collect()
+        })
+        .unwrap_or_default();
+    // under --autoscale the cluster is provisioned for `max` slots, with
+    // only the initial live set accepting work
+    let pool = cfg
+        .autoscale
+        .map_or(cfg.replicas, |(_, max)| cfg.replicas.max(max));
     let mut runs = Vec::new();
-    for c in line_up {
+    for (ci, c) in line_up.iter().enumerate() {
         let quality: Vec<f64> = c.ladder.rungs.iter().map(|r| r.quality_loss).collect();
         let policy = c.adaptive.then(|| LadderPolicy::from_config(cfg));
         let ladder = Rc::new(c.ladder.clone());
+        // match the tier's re-priced contender by label, not position:
+        // callers may pass a sub-slice of the full line-up (e.g.
+        // bench_elasticity runs the lexi-ladder contender alone)
+        let tier_ladders: Vec<Rc<QualityLadder>> = tier_line_ups
+            .map(|tl| {
+                tl.iter()
+                    .map(|l| {
+                        let tc = l
+                            .iter()
+                            .find(|tc| tc.label == c.label)
+                            .unwrap_or(&l[ci.min(l.len() - 1)]);
+                        Rc::new(tc.ladder.clone())
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
         // residency transfers overlap with one full-batch decode step
         let overlap = ladder.rungs[0].service.step_time(cfg.slots_per_replica);
-        let backends: Vec<Box<dyn ReplicaBackend>> = (0..cfg.replicas)
+        let backends: Vec<Box<dyn ReplicaBackend>> = (0..pool)
             .map(|i| {
-                let mut r = Replica::new(i, cfg.slots_per_replica, Rc::clone(&ladder));
+                let rungs = tier_idx
+                    .get(i)
+                    .map(|&ti| Rc::clone(&tier_ladders[ti]))
+                    .unwrap_or_else(|| Rc::clone(&ladder));
+                let mut r = Replica::new(i, cfg.slots_per_replica, rungs);
                 let res = replica_residency(spec, cfg, ladder.k_vec(0), i, Some(overlap));
                 if let Some(res) = res {
                     r = r.with_residency(res);
@@ -538,7 +783,7 @@ pub(crate) fn sim_runs(
         let mut cluster = Cluster::from_backends(
             backends,
             cfg.policy,
-            ladder,
+            Rc::clone(&ladder),
             policy,
             cfg.queue_cap,
             scenario.profiles.len(),
@@ -547,6 +792,33 @@ pub(crate) fn sim_runs(
         )
         .with_stealing(cfg.steal_bound)
         .with_steal_cooldown(cfg.steal_cooldown_s);
+        if cfg.shed {
+            cluster = cluster
+                .with_shedding(Shedder::new(ShedPolicy::from_config(cfg), scenario.profiles.len()));
+        }
+        if let Some((min, max)) = cfg.autoscale {
+            // spin-up = prewarming the baseline rung's expert hot set +
+            // loading the Stage-1 table over the host link
+            let rc = ResidencyConfig::for_model(
+                spec,
+                cfg.hbm_budget_frac.unwrap_or(1.0),
+                cfg.evict,
+                cfg.seed,
+            );
+            let warmup_s = crate::ctrl::warmup_cost_s(&rc, &ladder.k_vec(0));
+            let scale_policy = AutoscalePolicy::for_cluster(
+                min,
+                max,
+                cfg.slots_per_replica,
+                overlap,
+                warmup_s,
+                cfg.slack_degrade_frac,
+            );
+            cluster = cluster.with_autoscale(Autoscaler::new(scale_policy, pool, cfg.replicas));
+        }
+        if cfg.replica_tiers.is_some() {
+            cluster = cluster.with_speed_weighted_routing();
+        }
         if cfg.trace {
             cluster = cluster.with_tracing(cfg.trace_ring_cap);
         }
@@ -556,6 +828,62 @@ pub(crate) fn sim_runs(
         runs.push((report, res));
     }
     runs
+}
+
+/// Reject elastic-flag combinations the benches cannot honor: tiers
+/// must cover the cluster exactly, and both autoscaling and tier
+/// re-pricing are defined on the analytical sim backend only.
+fn validate_elastic(cfg: &ServerConfig) -> Result<()> {
+    if let Some(tiers) = &cfg.replica_tiers {
+        crate::ctrl::validate_tiers(tiers, cfg.replicas)?;
+        anyhow::ensure!(
+            cfg.autoscale.is_none(),
+            "--replica-tiers cannot be combined with --autoscale (tier specs cover a fixed \
+             replica count)"
+        );
+        anyhow::ensure!(
+            cfg.calibration_file.is_none(),
+            "--replica-tiers cannot be combined with --calibration (measured step times \
+             describe one hardware tier)"
+        );
+        anyhow::ensure!(
+            cfg.backend == BackendKind::Sim,
+            "--replica-tiers needs --backend sim (engine replicas run on real hardware)"
+        );
+    }
+    if cfg.autoscale.is_some() {
+        anyhow::ensure!(
+            cfg.backend == BackendKind::Sim,
+            "--autoscale needs --backend sim"
+        );
+    }
+    Ok(())
+}
+
+/// Per-tier contender line-ups for `--replica-tiers`: the whole line-up
+/// is rebuilt once per tier with that tier's
+/// [`Hardware`](crate::perfmodel::Hardware) constants
+/// behind the perf model, so every rung's service model (prefill
+/// coefficients, per-occupancy decode costs) is priced on the hardware
+/// the replica actually runs. Rung *allocations* are identical across
+/// tiers — the Stage-1 table and the DP are hardware-independent — so
+/// `tier_line_ups[t][c]` differs from `line_up[c]` only in service
+/// models. `Ok(None)` without the flag.
+fn tier_line_ups(
+    spec: &ModelSpec,
+    table: &SensitivityTable,
+    cfg: &ServerConfig,
+) -> Result<Option<Vec<Vec<Contender>>>> {
+    let Some(tiers) = &cfg.replica_tiers else {
+        return Ok(None);
+    };
+    let mut per_tier = Vec::with_capacity(tiers.len());
+    for &(tier, _) in tiers {
+        let mut pm = PerfModel::new(spec.clone(), cfg.seed);
+        pm.hw = hardware_for(tier);
+        per_tier.push(contenders(spec, table, cfg, &pm, None)?);
+    }
+    Ok(Some(per_tier))
 }
 
 /// Real engine replicas behind the same front door: every contender gets
@@ -623,7 +951,7 @@ pub(crate) fn engine_runs<M: ModelBackend>(
             if let Some(res) = replica_residency(spec, cfg, ladder.k_vec(0), i, None) {
                 engine.set_residency(res)?;
             }
-            backends.push(Box::new(EngineReplica::new(i, engine, Rc::clone(&ladder))));
+            backends.push(Box::new(EngineReplica::new(i, engine, Rc::clone(&ladder))?));
         }
         let mut cluster = Cluster::from_backends(
             backends,
@@ -637,6 +965,10 @@ pub(crate) fn engine_runs<M: ModelBackend>(
         )
         .with_stealing(cfg.steal_bound)
         .with_steal_cooldown(cfg.steal_cooldown_s);
+        if cfg.shed {
+            cluster = cluster
+                .with_shedding(Shedder::new(ShedPolicy::from_config(cfg), scenario.profiles.len()));
+        }
         if cfg.trace {
             cluster = cluster.with_tracing(cfg.trace_ring_cap);
         }

@@ -68,6 +68,18 @@ pub struct TransformReport {
     /// carried an HBM budget (`--hbm-budget`), so default artifacts
     /// keep their historical byte layout.
     pub residency_per_replica: Option<Vec<ResidencyStats>>,
+    /// Requests policy-shed per SLO class (`None` without `--shed`).
+    /// Sheds are a subset of `n_rejected`: the shedder charges the same
+    /// per-class rejection counters the hard admission cap uses.
+    pub shed_by_class: Option<Vec<u64>>,
+    /// Provisioned replica-seconds integrated by the autoscaler (`None`
+    /// on fixed clusters, where it is just `replicas * makespan_s`).
+    pub replica_seconds: Option<f64>,
+    /// Autoscaler activations over the run (`None` without
+    /// `--autoscale`; counts exclude the initially-live set).
+    pub scale_ups: Option<u64>,
+    /// Autoscaler drain decisions over the run (same gating).
+    pub drains: Option<u64>,
 }
 
 /// Did a completion meet its class SLO?
@@ -158,6 +170,16 @@ impl TransformReport {
                         .map(|r| r.clone().unwrap_or_default())
                         .collect()
                 }),
+            shed_by_class: res.shed_by_class.clone(),
+            replica_seconds: res.replica_seconds,
+            scale_ups: res
+                .scale_events
+                .as_ref()
+                .map(|ev| ev.iter().filter(|&&(_, _, up)| up).count() as u64),
+            drains: res
+                .scale_events
+                .as_ref()
+                .map(|ev| ev.iter().filter(|&&(_, _, up)| !up).count() as u64),
         }
     }
 
@@ -244,6 +266,22 @@ impl TransformReport {
                 "residency_per_replica",
                 Json::Arr(per.iter().map(residency_json).collect()),
             ));
+        }
+        if let Some(shed) = &self.shed_by_class {
+            pairs.push((
+                "shed_by_class",
+                Json::Arr(shed.iter().map(|&n| Json::Num(n as f64)).collect()),
+            ));
+            pairs.push(("shed_total", Json::Num(shed.iter().sum::<u64>() as f64)));
+        }
+        if let Some(rs) = self.replica_seconds {
+            pairs.push(("replica_seconds", Json::Num(rs)));
+        }
+        if let Some(n) = self.scale_ups {
+            pairs.push(("scale_ups", Json::Num(n as f64)));
+        }
+        if let Some(n) = self.drains {
+            pairs.push(("drains", Json::Num(n as f64)));
         }
         Json::obj(pairs)
     }
@@ -401,6 +439,156 @@ pub fn print_memory_rows(reports: &[MemoryReport]) {
             r.stall_p95_s * 1e3,
             r.goodput_rps,
             r.throughput_tok_s,
+        );
+    }
+}
+
+/// One `lexi bench-elasticity` sweep cell: an elastic-control-plane
+/// configuration (fixed provisioning vs autoscale vs autoscale+shed, or
+/// a heterogeneous tier mix x routing policy) run over the shared
+/// workload contract, with provisioning cost and interactive latency
+/// side by side.
+#[derive(Clone, Debug)]
+pub struct ElasticityReport {
+    pub scenario: String,
+    /// Sweep family: `"elastic"` (provisioning cells) or `"hetero"`
+    /// (tier-mix x routing cells).
+    pub family: &'static str,
+    /// Human-readable cell label, e.g. `fixed-max(8)`,
+    /// `autoscale(2:8)+shed`, `h100:2,a100:2`.
+    pub cell: String,
+    pub policy: String,
+    /// Provisioned pool size (autoscale cells: the `max` bound).
+    pub replicas: usize,
+    pub goodput_rps: f64,
+    pub throughput_tok_s: f64,
+    /// p95 TTFT over priority-0 (interactive) completions only.
+    pub interactive_ttft_p95_s: f64,
+    pub completed: usize,
+    pub rejected: u64,
+    /// Policy sheds (subset of `rejected`).
+    pub shed: u64,
+    /// Provisioned replica-seconds: autoscaler-integrated when elastic,
+    /// `replicas * makespan` for fixed cells.
+    pub replica_seconds: f64,
+    pub scale_ups: u64,
+    pub drains: u64,
+}
+
+pub const ELASTICITY_CSV_HEADER: [&str; 14] = [
+    "scenario",
+    "family",
+    "cell",
+    "policy",
+    "replicas",
+    "goodput_rps",
+    "throughput_tok_s",
+    "interactive_ttft_p95_ms",
+    "completed",
+    "rejected",
+    "shed",
+    "replica_seconds",
+    "scale_ups",
+    "drains",
+];
+
+/// Write one CSV row per bench-elasticity cell.
+pub fn write_elasticity_csv(path: &Path, reports: &[ElasticityReport]) -> Result<()> {
+    let mut w = CsvWriter::create(path, &ELASTICITY_CSV_HEADER)?;
+    for r in reports {
+        csv_row!(
+            w,
+            r.scenario,
+            r.family,
+            r.cell,
+            r.policy,
+            r.replicas,
+            format!("{:.4}", r.goodput_rps),
+            format!("{:.1}", r.throughput_tok_s),
+            format!("{:.2}", r.interactive_ttft_p95_s * 1e3),
+            r.completed,
+            r.rejected,
+            r.shed,
+            format!("{:.2}", r.replica_seconds),
+            r.scale_ups,
+            r.drains,
+        )?;
+    }
+    Ok(())
+}
+
+/// Write the bench-elasticity sweep as JSON.
+pub fn write_elasticity_json(path: &Path, reports: &[ElasticityReport]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let v = Json::Arr(
+        reports
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("scenario", Json::Str(r.scenario.clone())),
+                    ("family", Json::Str(r.family.to_string())),
+                    ("cell", Json::Str(r.cell.clone())),
+                    ("policy", Json::Str(r.policy.clone())),
+                    ("replicas", Json::Num(r.replicas as f64)),
+                    ("goodput_rps", Json::Num(r.goodput_rps)),
+                    ("throughput_tok_s", Json::Num(r.throughput_tok_s)),
+                    (
+                        "interactive_ttft_p95_s",
+                        Json::Num(r.interactive_ttft_p95_s),
+                    ),
+                    ("completed", Json::Num(r.completed as f64)),
+                    ("rejected", Json::Num(r.rejected as f64)),
+                    ("shed", Json::Num(r.shed as f64)),
+                    ("replica_seconds", Json::Num(r.replica_seconds)),
+                    ("scale_ups", Json::Num(r.scale_ups as f64)),
+                    ("drains", Json::Num(r.drains as f64)),
+                ])
+            })
+            .collect(),
+    );
+    std::fs::write(path, v.to_string_pretty())?;
+    Ok(())
+}
+
+/// Print the bench-elasticity sweep as a table.
+pub fn print_elasticity_header() {
+    println!(
+        "{:<8} {:<22} {:<10} {:>4} {:>8} {:>10} {:>10} {:>5} {:>5} {:>5} {:>10} {:>4} {:>6}",
+        "family",
+        "cell",
+        "policy",
+        "rep",
+        "goodput",
+        "tok/s",
+        "ittft95ms",
+        "done",
+        "rej",
+        "shed",
+        "rep-sec",
+        "ups",
+        "drains"
+    );
+}
+
+pub fn print_elasticity_rows(reports: &[ElasticityReport]) {
+    for r in reports {
+        println!(
+            "{:<8} {:<22} {:<10} {:>4} {:>8.3} {:>10.1} {:>10.2} {:>5} {:>5} {:>5} {:>10.1} {:>4} {:>6}",
+            r.family,
+            r.cell,
+            r.policy,
+            r.replicas,
+            r.goodput_rps,
+            r.throughput_tok_s,
+            r.interactive_ttft_p95_s * 1e3,
+            r.completed,
+            r.rejected,
+            r.shed,
+            r.replica_seconds,
+            r.scale_ups,
+            r.drains,
         );
     }
 }
@@ -564,6 +752,9 @@ mod tests {
             step_time_per_replica: vec![None, None],
             step_samples_per_replica: vec![None, None],
             residency_per_replica: vec![None, None],
+            shed_by_class: None,
+            replica_seconds: None,
+            scale_events: None,
             trace: None,
         }
     }
@@ -612,12 +803,18 @@ mod tests {
         assert!(dark.step_time_per_replica.is_none());
         assert!(dark.residency_per_replica.is_none());
         assert!(dark.residency_aggregate().is_none());
+        assert!(dark.shed_by_class.is_none() && dark.replica_seconds.is_none());
+        assert!(dark.scale_ups.is_none() && dark.drains.is_none());
         let j = dark.to_json();
         assert!(j.opt("steals").is_none());
         assert!(j.opt("min_slack_s").is_none());
         assert!(j.opt("step_time_per_replica").is_none());
         assert!(j.opt("expert_hit_rate").is_none());
         assert!(j.opt("residency_per_replica").is_none());
+        assert!(j.opt("shed_by_class").is_none());
+        assert!(j.opt("replica_seconds").is_none());
+        assert!(j.opt("scale_ups").is_none());
+        assert!(j.opt("drains").is_none());
 
         // extended run: steals + slack + measured step times all emit
         let mut run = fake_run();
@@ -645,6 +842,59 @@ mod tests {
         let arr = j.get("step_time_per_replica").unwrap().as_arr().unwrap();
         assert_eq!(arr.len(), 2);
         assert!((arr[0].get("p95_s").unwrap().as_f64().unwrap() - 0.02).abs() < 1e-12);
+    }
+
+    #[test]
+    fn elastic_fields_emit_when_the_control_plane_ran() {
+        let s = scenario();
+        let mut run = fake_run();
+        run.shed_by_class = Some(vec![0, 3, 2, 0]);
+        run.replica_seconds = Some(42.5);
+        // two activations (beyond the initial set) and one drain
+        run.scale_events = Some(vec![(10, 2, true), (20, 3, true), (90, 3, false)]);
+        let r = TransformReport::from_run(&s, "lexi-ladder", "classaware", &run, &[0.0, 2.0]);
+        assert_eq!(r.shed_by_class.as_deref(), Some(&[0, 3, 2, 0][..]));
+        assert_eq!(r.replica_seconds, Some(42.5));
+        assert_eq!(r.scale_ups, Some(2));
+        assert_eq!(r.drains, Some(1));
+        let j = r.to_json();
+        let shed = j.get("shed_by_class").unwrap().as_arr().unwrap();
+        assert_eq!(shed.len(), 4);
+        assert_eq!(shed[1].as_usize().unwrap(), 3);
+        assert_eq!(j.get("shed_total").unwrap().as_usize().unwrap(), 5);
+        assert!((j.get("replica_seconds").unwrap().as_f64().unwrap() - 42.5).abs() < 1e-12);
+        assert_eq!(j.get("scale_ups").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(j.get("drains").unwrap().as_usize().unwrap(), 1);
+
+        // bench-elasticity writers roundtrip
+        let row = ElasticityReport {
+            scenario: "diurnal".into(),
+            family: "elastic",
+            cell: "autoscale(2:8)+shed".into(),
+            policy: "classaware".into(),
+            replicas: 8,
+            goodput_rps: r.goodput_rps,
+            throughput_tok_s: r.throughput_tok_s,
+            interactive_ttft_p95_s: 0.25,
+            completed: r.n_completed,
+            rejected: r.n_rejected,
+            shed: 5,
+            replica_seconds: 42.5,
+            scale_ups: 2,
+            drains: 1,
+        };
+        let dir = std::env::temp_dir().join("lexi_elasticity_report_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        write_elasticity_csv(&dir.join("ela.csv"), std::slice::from_ref(&row)).unwrap();
+        write_elasticity_json(&dir.join("ela.json"), std::slice::from_ref(&row)).unwrap();
+        let csv = std::fs::read_to_string(dir.join("ela.csv")).unwrap();
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.starts_with("scenario,family,cell,policy,replicas"));
+        assert!(csv.contains("autoscale(2:8)+shed"));
+        let json = crate::util::json::parse_file(&dir.join("ela.json")).unwrap();
+        let arr = json.as_arr().unwrap();
+        assert_eq!(arr[0].get("family").unwrap().as_str().unwrap(), "elastic");
+        assert_eq!(arr[0].get("shed").unwrap().as_usize().unwrap(), 5);
     }
 
     #[test]

@@ -23,6 +23,7 @@ use std::collections::BinaryHeap;
 use std::rc::Rc;
 
 use crate::config::server::{PolicyKind, PressureMode};
+use crate::ctrl::{reweight_by_speed, Autoscaler, Shedder};
 use crate::experts::ResidencyStats;
 use crate::obs::trace::{record_opt, EventKind, TraceLog};
 use crate::obs::{SharedTracer, Tracer};
@@ -54,6 +55,19 @@ pub struct RunResult {
     pub rung_switch_events: Vec<(u64, usize)>,
     /// Every cross-replica steal as `(time key ns, victim, thief)`.
     pub steal_events: Vec<(u64, usize, usize)>,
+    /// Requests shed per SLO class by the class-aware shedder. `None`
+    /// unless the cluster was built [`with_shedding`](Cluster::with_shedding).
+    /// Shed requests are ALSO counted in `rejected_by_class`, so the
+    /// arrivals = completions + rejections invariant is unchanged.
+    pub shed_by_class: Option<Vec<u64>>,
+    /// Provisioned replica-seconds (Active + Warming + Draining time)
+    /// under the autoscaler — the cost side of the elasticity trade.
+    /// `None` unless built [`with_autoscale`](Cluster::with_autoscale).
+    pub replica_seconds: Option<f64>,
+    /// Autoscaler actions as `(time key ns, replica, up)`; `up` is true
+    /// for an activation, false for a drain. `None` unless built
+    /// [`with_autoscale`](Cluster::with_autoscale).
+    pub scale_events: Option<Vec<(u64, usize, bool)>>,
     /// Requests stolen across replicas. `None` unless an extended
     /// control-plane feature (stealing, slack pressure, class-aware
     /// routing) was active — default runs keep the PR 2 report shape.
@@ -270,6 +284,14 @@ pub struct Cluster<'a> {
     /// Per-replica time of the last steal the replica participated in
     /// (−∞ before the first; indexed like `backends`).
     last_steal_s: Vec<f64>,
+    /// Class-aware admission shedder (`None` = off, the default).
+    shedder: Option<Shedder>,
+    /// Replica autoscaler over the backend pool (`None` = the replica
+    /// set is fixed, the default).
+    scaler: Option<Autoscaler>,
+    /// Reweight snapshot `load_cost` by each replica's measured step
+    /// speed (heterogeneous hardware tiers; off by default).
+    speed_weighted: bool,
     /// Shared span tracer (`None` = tracing off, the default; see
     /// [`crate::obs`]). Never reads or perturbs the seeded rng.
     tracer: Option<SharedTracer>,
@@ -337,6 +359,9 @@ impl<'a> Cluster<'a> {
             steal_bound: 0,
             steal_cooldown_s: 0.0,
             last_steal_s: vec![f64::NEG_INFINITY; n],
+            shedder: None,
+            scaler: None,
+            speed_weighted: false,
             tracer: None,
             rng: Pcg32::new(seed, 0x0707_2026),
         }
@@ -370,6 +395,35 @@ impl<'a> Cluster<'a> {
         self
     }
 
+    /// Enable class-aware admission shedding (`--shed`): batch-priority
+    /// arrivals are dropped under queue or projected-slack pressure
+    /// BEFORE the hard cap would turn interactive work away.
+    pub fn with_shedding(mut self, shedder: Shedder) -> Self {
+        self.shedder = Some(shedder);
+        self
+    }
+
+    /// Enable replica autoscaling (`--autoscale min:max`): the scaler
+    /// must cover exactly this cluster's backend pool. Non-Active
+    /// replicas are masked out of every routing/stealing snapshot.
+    pub fn with_autoscale(mut self, scaler: Autoscaler) -> Self {
+        assert_eq!(
+            scaler.states.len(),
+            self.backends.len(),
+            "autoscaler must cover the whole backend pool"
+        );
+        self.scaler = Some(scaler);
+        self
+    }
+
+    /// Weigh replica speed in every load-based decision
+    /// (`--replica-tiers`): snapshot `load_cost` becomes estimated
+    /// drain time via each replica's step-time EWMA.
+    pub fn with_speed_weighted_routing(mut self) -> Self {
+        self.speed_weighted = true;
+        self
+    }
+
     /// One telemetry snapshot of every replica at `now_s` — the single
     /// input surface for routing, ladder, and stealing decisions.
     /// `detail` bounds the cost: per-arrival routing reads only the
@@ -389,6 +443,22 @@ impl<'a> Cluster<'a> {
     /// Total queued + running requests (admission-control signal).
     fn outstanding(&self) -> usize {
         self.backends.iter().map(|b| b.outstanding()).sum()
+    }
+
+    /// [`snapshot`](Self::snapshot) through the elastic control plane:
+    /// the autoscaler masks non-Active replicas out of the accepting
+    /// set, and heterogeneous clusters rescale `load_cost` by measured
+    /// replica speed. The identity transform when neither feature is
+    /// on, so default runs are untouched.
+    fn masked_snapshot(&self, now_s: f64, detail: TelemetryDetail) -> ClusterSnapshot {
+        let mut snap = self.snapshot(now_s, detail);
+        if let Some(sc) = &self.scaler {
+            sc.mask(&mut snap);
+        }
+        if self.speed_weighted {
+            reweight_by_speed(&mut snap);
+        }
+        snap
     }
 
     /// Bounded work stealing at a dispatch instant: each fully idle
@@ -414,6 +484,11 @@ impl<'a> Cluster<'a> {
             if t.next_event_s().is_some() || t.outstanding() > 0 || !t.accepts_work() {
                 continue;
             }
+            // a non-Active (warming / draining / retired) replica never
+            // steals: pulling work onto it would undo the autoscaler
+            if self.scaler.as_ref().is_some_and(|sc| !sc.accepting(thief)) {
+                continue;
+            }
             // steal hysteresis: a replica that just participated in a
             // steal (either side) sits the cooldown out, so work cannot
             // ping-pong between replicas every instant
@@ -421,7 +496,7 @@ impl<'a> Cluster<'a> {
                 continue;
             }
             // refresh per steal: the previous move changed the picture
-            let snap = self.snapshot(now, TelemetryDetail::Full);
+            let snap = self.masked_snapshot(now, TelemetryDetail::Full);
             observe_min_slack(&snap, min_slack_obs);
             let victim = snap
                 .replicas
@@ -479,10 +554,38 @@ impl<'a> Cluster<'a> {
         let mut completed: Vec<CompletedRequest> = Vec::new();
         let mut switch_events: Vec<(u64, usize)> = Vec::new();
         let mut steal_events: Vec<(u64, usize, usize)> = Vec::new();
+        let mut scale_events: Vec<(u64, usize, bool)> = Vec::new();
         let mut min_slack_obs = f64::INFINITY;
         let mut now = 0.0f64;
 
+        // seed the live-replica gauge: every initially Active slot
+        // announces itself, so a trace reader can reconstruct the live
+        // count from ScaleUp/Drain events alone
+        if let Some(sc) = &self.scaler {
+            for i in 0..self.backends.len() {
+                if sc.accepting(i) {
+                    record_opt(&self.tracer, 0.0, || EventKind::ScaleUp { replica: i });
+                }
+            }
+        }
+
         loop {
+            // 0. elasticity: the autoscaler consumes the same snapshot
+            // surface as every other control-plane decision and moves
+            // replica slots through their lifecycle
+            if self.scaler.is_some() {
+                let snap = self.masked_snapshot(now, TelemetryDetail::Full);
+                observe_min_slack(&snap, &mut min_slack_obs);
+                let acts = self.scaler.as_mut().unwrap().step(&snap);
+                for r in acts.activated {
+                    scale_events.push((time_key(now), r, true));
+                    record_opt(&self.tracer, now, || EventKind::ScaleUp { replica: r });
+                }
+                for r in acts.drained {
+                    scale_events.push((time_key(now), r, false));
+                    record_opt(&self.tracer, now, || EventKind::Drain { replica: r });
+                }
+            }
             // 1. control plane: one snapshot feeds the rung controller
             // and the stealing pass, then start work on every idle
             // replica
@@ -493,7 +596,7 @@ impl<'a> Cluster<'a> {
                     PressureMode::Queue => TelemetryDetail::Load,
                     PressureMode::Slack | PressureMode::SlackEwma => TelemetryDetail::Full,
                 };
-                let snap = self.snapshot(now, detail);
+                let snap = self.masked_snapshot(now, detail);
                 observe_min_slack(&snap, &mut min_slack_obs);
                 let n_rungs = self.ladder.n_rungs();
                 let targets = self.controller.as_mut().unwrap().decide(&snap, n_rungs);
@@ -546,7 +649,33 @@ impl<'a> Cluster<'a> {
                     class: req.class,
                 });
                 let outstanding = self.outstanding();
-                if !self.admission.try_admit(outstanding, req.class) {
+                let prio = scenario.profiles[req.class].priority;
+                // class-aware shedding runs BEFORE the hard cap: batch
+                // priorities are dropped under queue/slack pressure so
+                // the cap's headroom stays available for interactive
+                // work. A shed counts as a rejection (conservation) —
+                // the paired Shed event carries the attribution.
+                let shed_reason = if self.shedder.is_some() {
+                    let snap = self.masked_snapshot(now, TelemetryDetail::Full);
+                    observe_min_slack(&snap, &mut min_slack_obs);
+                    self.shedder
+                        .as_mut()
+                        .unwrap()
+                        .decide(&snap, outstanding, req.class, prio)
+                } else {
+                    None
+                };
+                if shed_reason.is_some() {
+                    self.admission.rejected_by_class[req.class] += 1;
+                }
+                if let Some(reason) = shed_reason {
+                    record_opt(&self.tracer, now, || EventKind::Shed {
+                        id: req.id,
+                        class: req.class,
+                        reason,
+                    });
+                }
+                if shed_reason.is_some() || !self.admission.try_admit(outstanding, req.class) {
                     record_opt(&self.tracer, now, || EventKind::Reject {
                         id: req.id,
                         class: req.class,
@@ -564,12 +693,11 @@ impl<'a> Cluster<'a> {
                     continue;
                 }
                 let slo = scenario.slos[req.class];
-                let prio = scenario.profiles[req.class].priority;
                 let qr = QueuedRequest::new(&req, prio, slo.ttft_s);
                 // a fresh LOAD-level snapshot per arrival: earlier
                 // admissions in this round are part of the next
                 // decision's input, and routing reads only O(1) fields
-                let snap = self.snapshot(now, TelemetryDetail::Load);
+                let snap = self.masked_snapshot(now, TelemetryDetail::Load);
                 let idx = {
                     prof_scope!("cluster.route");
                     self.router.route(&qr, &snap, &mut self.rng)
@@ -614,6 +742,10 @@ impl<'a> Cluster<'a> {
             .map(|c| c.finish_s)
             .fold(0.0f64, f64::max)
             .max(now);
+        if let Some(sc) = &mut self.scaler {
+            // close the replica-seconds ledger at the run's end
+            sc.account(makespan_s);
+        }
         let stats: Vec<BackendStats> = self.backends.iter().map(|b| b.stats()).collect();
         let mut rung_time_s = vec![0.0; self.ladder.n_rungs()];
         for s in &stats {
@@ -626,6 +758,9 @@ impl<'a> Cluster<'a> {
         // report shape byte-for-byte
         let extended = self.steal_bound > 0
             || self.policy_kind == PolicyKind::ClassAware
+            || self.shedder.is_some()
+            || self.scaler.is_some()
+            || self.speed_weighted
             || self
                 .controller
                 .as_ref()
@@ -642,6 +777,9 @@ impl<'a> Cluster<'a> {
             steals: extended.then_some(steal_events.len() as u64),
             min_slack_s: (extended && min_slack_obs.is_finite()).then_some(min_slack_obs),
             steal_events,
+            shed_by_class: self.shedder.as_ref().map(|s| s.shed_by_class.clone()),
+            replica_seconds: self.scaler.as_ref().map(|s| s.replica_seconds),
+            scale_events: self.scaler.is_some().then_some(scale_events),
             step_time_per_replica: stats.iter().map(|s| s.step_times.clone()).collect(),
             step_samples_per_replica: stats.iter().map(|s| s.step_samples.clone()).collect(),
             residency_per_replica: stats.iter().map(|s| s.residency.clone()).collect(),
@@ -701,6 +839,8 @@ mod tests {
         }
         // default feature set: the extended report fields stay dark
         assert!(res.steals.is_none() && res.min_slack_s.is_none());
+        assert!(res.shed_by_class.is_none() && res.replica_seconds.is_none());
+        assert!(res.scale_events.is_none());
         assert!(res.trace.is_none());
         assert!(res.step_time_per_replica.iter().all(|s| s.is_none()));
         assert!(res.residency_per_replica.iter().all(|r| r.is_none()));

@@ -93,7 +93,9 @@ fn run_engine(s: &Scenario, trace: &Trace) -> RunResult {
             vec![0.0f32; N_LAYERS * N_EXPERTS],
         )
         .unwrap();
-        backends.push(Box::new(EngineReplica::new(i, engine, Rc::clone(&ladder))));
+        backends.push(Box::new(
+            EngineReplica::new(i, engine, Rc::clone(&ladder)).unwrap(),
+        ));
     }
     let mut c = Cluster::from_backends(
         backends,
@@ -110,6 +112,31 @@ fn run_engine(s: &Scenario, trace: &Trace) -> RunResult {
 
 fn token_map(res: &RunResult) -> BTreeMap<u64, usize> {
     res.completed.iter().map(|c| (c.id, c.tokens)).collect()
+}
+
+#[test]
+fn an_undersized_engine_queue_is_rejected_at_construction() {
+    let model = SyntheticModel::new("parity", N_LAYERS, N_EXPERTS, 2, SLOTS, 64, 128);
+    let ladder = Rc::new(fixed_ladder());
+    let scfg = ServingConfig {
+        batch: SLOTS,
+        max_seq: 128,
+        prefill_len: 64,
+        kv_block: 16,
+        kv_blocks_total: SLOTS * 8,
+        queue_cap: SLOTS - 1, // below the batch width the replica tops up to
+        max_new_tokens: 16,
+        decode_burst: 8,
+    };
+    let engine = Engine::new(
+        &model,
+        scfg,
+        ladder.k_vec(0),
+        vec![0.0f32; N_LAYERS * N_EXPERTS],
+    )
+    .unwrap();
+    let err = EngineReplica::new(0, engine, Rc::clone(&ladder)).unwrap_err();
+    assert!(err.to_string().contains("queue capacity"), "{err:#}");
 }
 
 #[test]

@@ -1,0 +1,337 @@
+//! Integration tests for the elastic control plane (`ctrl`): class-aware
+//! shedding protects interactive admissions under a flash crowd, the
+//! autoscaler grows the pool under pressure without losing a request,
+//! speed-weighted routing prefers fast replicas in a heterogeneous
+//! cluster, and an inert control plane reproduces the default run
+//! exactly (the byte-identity regression).
+
+use std::rc::Rc;
+
+use lexi_moe::config::server::{PolicyKind, ScenarioKind};
+use lexi_moe::ctrl::{AutoscalePolicy, Autoscaler, ShedPolicy, Shedder};
+use lexi_moe::moe::allocation::Allocation;
+use lexi_moe::server::workload::{
+    ArrivalProcess, RequestProfile, Scenario, Trace, TraceRequest,
+};
+use lexi_moe::server::{
+    Cluster, QualityLadder, Replica, ReplicaBackend, RunResult, ServiceModel,
+};
+
+// ---------------------------------------------------------------------
+// fixtures
+// ---------------------------------------------------------------------
+
+fn ladder(step_s: f64, slots: usize) -> QualityLadder {
+    QualityLadder::fixed(
+        "base",
+        Allocation::uniform(4, 2),
+        ServiceModel::synthetic("base", 1e-5, step_s, slots),
+    )
+}
+
+/// Interactive (priority 0) + batch (priority 1) classes.
+fn two_class_scenario() -> Scenario {
+    let mut s = Scenario {
+        name: "flash",
+        kind: ScenarioKind::FlashCrowd,
+        arrivals: ArrivalProcess::Poisson { rate: 1.0 },
+        profiles: vec![
+            RequestProfile {
+                name: "chat",
+                prompt_lo: 64,
+                prompt_hi: 64,
+                gen_lo: 32,
+                gen_hi: 32,
+                priority: 0,
+                weight: 0.5,
+                ttft_mult: 50.0,
+                tpot_mult: 10.0,
+            },
+            RequestProfile {
+                name: "batch",
+                prompt_lo: 64,
+                prompt_hi: 64,
+                gen_lo: 32,
+                gen_hi: 32,
+                priority: 1,
+                weight: 0.5,
+                ttft_mult: 50.0,
+                tpot_mult: 10.0,
+            },
+        ],
+        slos: Vec::new(),
+    };
+    s.resolve_slos(|tokens| 1e-4 * tokens as f64, 0.02);
+    s
+}
+
+/// `n` alternating interactive/batch requests, effectively simultaneous.
+fn flash_trace(n: usize) -> Trace {
+    Trace {
+        scenario: "flash",
+        requests: (0..n as u64)
+            .map(|id| TraceRequest {
+                id,
+                class: (id % 2) as usize,
+                arrival_s: 1e-6 * id as f64,
+                prompt_len: 64,
+                new_tokens: 32,
+            })
+            .collect(),
+        closed_loop: None,
+    }
+}
+
+/// One-class trace with arrivals spaced `gap_s` apart.
+fn paced_trace(n: usize, gap_s: f64) -> Trace {
+    Trace {
+        scenario: "flash",
+        requests: (0..n as u64)
+            .map(|id| TraceRequest {
+                id,
+                class: 0,
+                arrival_s: gap_s * id as f64,
+                prompt_len: 64,
+                new_tokens: 16,
+            })
+            .collect(),
+        closed_loop: None,
+    }
+}
+
+fn count_rejected(res: &RunResult, class: usize) -> u64 {
+    res.rejected_by_class[class]
+}
+
+// ---------------------------------------------------------------------
+// class-aware shedding
+// ---------------------------------------------------------------------
+
+/// Under a flash crowd, the shedder drops batch traffic before the hard
+/// cap would turn interactive work away: batch is policy-shed,
+/// interactive never is, and interactive rejections go DOWN relative to
+/// the cap-only cluster.
+#[test]
+fn flash_crowd_sheds_batch_before_interactive() {
+    let s = two_class_scenario();
+    let trace = flash_trace(60);
+    let cap = 16usize;
+    let mk = || Cluster::new(2, 2, PolicyKind::Jsq, ladder(0.01, 2), None, cap, 2, 0.0, 1);
+
+    let plain = mk().run(&s, &trace);
+    let shed = mk()
+        .with_shedding(Shedder::new(
+            ShedPolicy {
+                cap,
+                queue_frac: 0.85,
+                // disable the slack trigger: this test isolates the
+                // queue-pressure path deterministically
+                slack_frac: 0.0,
+            },
+            2,
+        ))
+        .run(&s, &trace);
+
+    // conservation on both sides of the comparison
+    for res in [&plain, &shed] {
+        assert_eq!(
+            res.completed.len() as u64 + res.rejected_by_class.iter().sum::<u64>(),
+            60,
+            "requests lost"
+        );
+    }
+    assert!(plain.shed_by_class.is_none(), "default run grew shed fields");
+
+    let by_class = shed.shed_by_class.as_ref().expect("shedding was enabled");
+    assert_eq!(by_class[0], 0, "interactive traffic was policy-shed");
+    assert!(by_class[1] > 0, "flash crowd shed no batch traffic");
+    // sheds are a subset of the rejections (they count toward both)
+    assert!(count_rejected(&shed, 1) >= by_class[1]);
+    // the whole point: shedding batch early leaves the cap's headroom
+    // for interactive admissions
+    assert!(
+        count_rejected(&shed, 0) < count_rejected(&plain, 0),
+        "interactive rejections did not improve: {} (shed) vs {} (cap only)",
+        count_rejected(&shed, 0),
+        count_rejected(&plain, 0)
+    );
+}
+
+// ---------------------------------------------------------------------
+// autoscaling
+// ---------------------------------------------------------------------
+
+/// A flash crowd against a 1-live / 4-slot pool: the autoscaler grows
+/// the live set, every request still completes exactly once, and the
+/// provisioned replica-seconds stay below the fixed-pool cost.
+#[test]
+fn autoscaler_grows_under_pressure_and_conserves_requests() {
+    let s = two_class_scenario();
+    let trace = flash_trace(80);
+    let pool = 4usize;
+    let backends: Vec<Box<dyn ReplicaBackend>> = (0..pool)
+        .map(|i| {
+            Box::new(Replica::new(i, 2, Rc::new(ladder(0.01, 2)))) as Box<dyn ReplicaBackend>
+        })
+        .collect();
+    let policy = AutoscalePolicy {
+        min: 1,
+        max: pool,
+        warmup_s: 0.05,
+        // depth pressure only: 80 outstanding >> 1.5 * live * 2 slots
+        up_slack_frac: 0.0,
+        up_outstanding_per_slot: 1.5,
+        down_outstanding_per_slot: 0.5,
+        sustain_up_s: 0.02,
+        sustain_down_s: 0.5,
+        cooldown_s: 0.05,
+        slots_per_replica: 2,
+    };
+    let res = Cluster::from_backends(
+        backends,
+        PolicyKind::Jsq,
+        Rc::new(ladder(0.01, 2)),
+        None,
+        100_000,
+        2,
+        0.0,
+        1,
+    )
+    .with_autoscale(Autoscaler::new(policy, pool, 1))
+    .run(&s, &trace);
+
+    assert_eq!(res.completed.len(), 80, "autoscaling lost requests");
+    assert_eq!(res.rejected_by_class.iter().sum::<u64>(), 0);
+    let mut ids: Vec<u64> = res.completed.iter().map(|c| c.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), 80, "autoscaling duplicated a request");
+
+    let events = res.scale_events.as_ref().expect("autoscaling was enabled");
+    let ups = events.iter().filter(|&&(_, _, up)| up).count();
+    assert!(ups >= 1, "sustained backlog never triggered a scale-up");
+    assert!(events.iter().all(|&(_, r, _)| r < pool));
+    // scaled-up replicas actually served work
+    assert!(
+        res.completed.iter().any(|c| c.replica > 0),
+        "no completion ever landed on a scaled-up replica"
+    );
+    let rs = res.replica_seconds.expect("autoscaling was enabled");
+    assert!(rs > 0.0);
+    assert!(
+        rs < pool as f64 * res.makespan_s,
+        "elastic provisioning cost {rs:.3} replica-s not below the fixed \
+         pool's {:.3}",
+        pool as f64 * res.makespan_s
+    );
+}
+
+// ---------------------------------------------------------------------
+// heterogeneous tiers: speed-weighted routing
+// ---------------------------------------------------------------------
+
+/// Fast + slow replica under JSQ: weighing backlog by measured step
+/// speed shifts share toward the fast replica relative to raw
+/// token-count balancing.
+#[test]
+fn speed_weighted_routing_prefers_the_fast_replica() {
+    let s = two_class_scenario();
+    let trace = paced_trace(60, 0.02);
+    let mk = |speed_weighted: bool| {
+        let backends: Vec<Box<dyn ReplicaBackend>> = vec![
+            Box::new(Replica::new(0, 2, Rc::new(ladder(0.004, 2)))), // fast tier
+            Box::new(Replica::new(1, 2, Rc::new(ladder(0.020, 2)))), // slow tier
+        ];
+        let c = Cluster::from_backends(
+            backends,
+            PolicyKind::Jsq,
+            Rc::new(ladder(0.004, 2)),
+            None,
+            100_000,
+            2,
+            0.0,
+            1,
+        );
+        if speed_weighted {
+            c.with_speed_weighted_routing()
+        } else {
+            c
+        }
+    };
+
+    let plain = mk(false).run(&s, &trace);
+    let weighted = mk(true).run(&s, &trace);
+    assert_eq!(plain.completed.len(), 60);
+    assert_eq!(weighted.completed.len(), 60);
+
+    let fast_share = |res: &RunResult| {
+        res.completed.iter().filter(|c| c.replica == 0).count() as f64
+            / res.completed.len() as f64
+    };
+    assert!(
+        fast_share(&weighted) > 0.5,
+        "fast replica served only {:.0}% under speed weighting",
+        fast_share(&weighted) * 100.0
+    );
+    assert!(
+        fast_share(&weighted) >= fast_share(&plain),
+        "speed weighting moved share AWAY from the fast replica: \
+         {:.2} vs {:.2}",
+        fast_share(&weighted),
+        fast_share(&plain)
+    );
+}
+
+// ---------------------------------------------------------------------
+// byte-identity regression: an inert control plane changes nothing
+// ---------------------------------------------------------------------
+
+/// A calm workload through a shedder that never fires and an autoscaler
+/// pinned at min == max must reproduce the default cluster's completions
+/// exactly — the control plane only reads telemetry, it never perturbs
+/// the schedule or the seeded rng.
+#[test]
+fn inert_control_plane_reproduces_the_default_run() {
+    let s = two_class_scenario();
+    let trace = paced_trace(24, 0.05);
+    let mk = || Cluster::new(2, 2, PolicyKind::Jsq, ladder(0.01, 2), None, 100_000, 2, 0.0, 7);
+
+    let default = mk().run(&s, &trace);
+    let policy = AutoscalePolicy {
+        min: 2,
+        max: 2,
+        warmup_s: 0.1,
+        up_slack_frac: 0.0,
+        up_outstanding_per_slot: 1.5,
+        down_outstanding_per_slot: 0.5,
+        sustain_up_s: 0.02,
+        sustain_down_s: 0.5,
+        cooldown_s: 0.05,
+        slots_per_replica: 2,
+    };
+    let elastic = mk()
+        .with_shedding(Shedder::new(
+            ShedPolicy {
+                cap: 100_000,
+                queue_frac: 0.85,
+                slack_frac: 0.0,
+            },
+            2,
+        ))
+        .with_autoscale(Autoscaler::new(policy, 2, 2))
+        .run(&s, &trace);
+
+    // identical request-by-request outcome...
+    assert_eq!(elastic.completed, default.completed);
+    assert_eq!(elastic.rejected_by_class, default.rejected_by_class);
+    // ...while the elastic fields light up (and record inactivity)
+    assert!(default.shed_by_class.is_none() && default.scale_events.is_none());
+    assert_eq!(elastic.shed_by_class, Some(vec![0, 0]));
+    assert_eq!(elastic.scale_events, Some(Vec::new()));
+    let rs = elastic.replica_seconds.expect("autoscaling was enabled");
+    assert!(
+        (rs - 2.0 * elastic.makespan_s).abs() < 1e-6,
+        "a pinned pool must bill exactly pool x makespan: {rs} vs {}",
+        2.0 * elastic.makespan_s
+    );
+}

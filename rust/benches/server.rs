@@ -2,21 +2,30 @@
 //! dispatch, and full cluster replay on a 10k-request synthetic trace.
 //! (Perf target: full 10k-request cluster replay well under 1 s — the
 //! front-end must never be the bottleneck next to model execution.)
+//!
+//! The scale section times the PR 8 hot-path flattening on its own:
+//! indexed-EDF ops at depth 1e5, incremental vs rebuild-per-instant
+//! snapshot assembly at 1000 replicas, and a 100-replica full event
+//! loop in both snapshot modes.
+
+use std::rc::Rc;
 
 use lexi_moe::config::server::{PolicyKind, ScenarioKind};
 use lexi_moe::moe::allocation::Allocation;
+use lexi_moe::server::backend::ReplicaBackend;
 use lexi_moe::server::ladder::QualityLadder;
-use lexi_moe::server::replica::ServiceModel;
+use lexi_moe::server::replica::{Replica, ServiceModel};
 use lexi_moe::server::router::Cluster;
 use lexi_moe::server::scheduler::{EdfQueue, QueuedRequest};
+use lexi_moe::server::telemetry::{SnapshotCache, TelemetryDetail};
 use lexi_moe::server::workload::Scenario;
 use lexi_moe::util::bench::{bench, header};
 use lexi_moe::util::Pcg32;
 
 const N: usize = 10_000;
 
-fn synthetic_queue_load(rng: &mut Pcg32) -> Vec<QueuedRequest> {
-    (0..N as u64)
+fn synthetic_queue_load_n(rng: &mut Pcg32, n: usize) -> Vec<QueuedRequest> {
+    (0..n as u64)
         .map(|id| QueuedRequest {
             id,
             class: rng.gen_usize(4),
@@ -31,7 +40,7 @@ fn synthetic_queue_load(rng: &mut Pcg32) -> Vec<QueuedRequest> {
 
 fn main() {
     let mut rng = Pcg32::seeded(0xbe9c);
-    let reqs = synthetic_queue_load(&mut rng);
+    let reqs = synthetic_queue_load_n(&mut rng, N);
 
     header("scheduler: EDF admission on a 10k-request trace");
     bench("edf/push_pop_10k", || {
@@ -72,5 +81,95 @@ fn main() {
                 std::hint::black_box(res.completed.len());
             });
         }
+    }
+
+    header("scheduler: indexed EDF at depth 100k");
+    let deep = synthetic_queue_load_n(&mut rng, 100_000);
+    bench("edf/push_pop_100k", || {
+        let mut q = EdfQueue::new();
+        for r in &deep {
+            q.push(r.clone());
+        }
+        let mut drained = 0usize;
+        while q.pop().is_some() {
+            drained += 1;
+        }
+        assert_eq!(drained, deep.len());
+        std::hint::black_box(drained);
+    });
+    // alternating dispatch pops and worst-slack (steal-donor) pops: the
+    // pre-indexed pop_min_deadline drained and rebuilt the whole heap
+    bench("edf/steal_drain_100k", || {
+        let mut q = EdfQueue::new();
+        for r in &deep {
+            q.push(r.clone());
+        }
+        let mut drained = 0usize;
+        loop {
+            let a = q.pop().is_some();
+            let b = q.pop_min_deadline().is_some();
+            drained += a as usize + b as usize;
+            if !a && !b {
+                break;
+            }
+        }
+        assert_eq!(drained, deep.len());
+        std::hint::black_box(drained);
+    });
+
+    header("telemetry: snapshot assembly, 1000 replicas");
+    let ladder = Rc::new(QualityLadder::fixed(
+        "base",
+        Allocation::uniform(4, 2),
+        ServiceModel::synthetic("base", 1e-7, 1e-4, 8),
+    ));
+    let backends: Vec<Box<dyn ReplicaBackend>> = (0..1000)
+        .map(|i| Box::new(Replica::new(i, 8, Rc::clone(&ladder))) as Box<dyn ReplicaBackend>)
+        .collect();
+    for detail in [TelemetryDetail::Load, TelemetryDetail::Full] {
+        let tag = if detail == TelemetryDetail::Load { "load" } else { "full" };
+        let mut now = 0.0;
+        let mut cache = SnapshotCache::new(backends.len(), detail);
+        cache.set_rebuild(true);
+        bench(&format!("snapshot/rebuild_{tag}_1000"), || {
+            now += 1e-3;
+            cache.refresh(&backends, now);
+            std::hint::black_box(cache.snap().replicas.len());
+        });
+        let mut cache = SnapshotCache::new(backends.len(), detail);
+        bench(&format!("snapshot/incremental_{tag}_1000"), || {
+            now += 1e-3;
+            cache.refresh(&backends, now);
+            std::hint::black_box(cache.snap().replicas.len());
+        });
+    }
+
+    header("router: full event loop, 100 replicas x 20k requests");
+    let svc = ServiceModel::synthetic("base", 1e-7, 1e-4, 8);
+    // capacity sized from the catalog mixture so the diurnal peak
+    // actually saturates the 100-replica cluster
+    let probe = Scenario::from_kind(ScenarioKind::Diurnal, 1.0);
+    let capacity = 100.0 * svc.capacity_rps(probe.mean_prompt_tokens(), probe.mean_gen_tokens());
+    let mut s = Scenario::from_kind(ScenarioKind::Diurnal, capacity);
+    s.resolve_slos(|tokens| 1e-7 * tokens as f64 + 1e-5, 2e-4);
+    let trace = s.generate(20_000, 1);
+    for (tag, rebuild) in [("incremental", false), ("rebuild", true)] {
+        bench(&format!("cluster/jsq/diurnal/100rx20k/{tag}"), || {
+            let ladder = QualityLadder::fixed(
+                "base",
+                Allocation::uniform(4, 2),
+                ServiceModel::synthetic("base", 1e-7, 1e-4, 8),
+            );
+            let mut c = Cluster::new(100, 8, PolicyKind::Jsq, ladder, None, 6400, 4, 0.0, 0);
+            if rebuild {
+                c = c.with_snapshot_rebuild();
+            }
+            let res = c.run(&s, &trace);
+            assert_eq!(
+                res.completed.len() + res.rejected_by_class.iter().sum::<u64>() as usize,
+                20_000
+            );
+            std::hint::black_box(res.completed.len());
+        });
     }
 }

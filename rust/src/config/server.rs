@@ -425,6 +425,12 @@ pub struct ServerConfig {
     /// (`--replica-tiers h100:4,a100:4`). `None` — the default — is a
     /// uniform H100 cluster, bit-identical to earlier releases.
     pub replica_tiers: Option<Vec<(TierKind, usize)>>,
+    /// Replica-stepping shard count (`--shards`). Replica advancement
+    /// between routing instants is chunked into this many groups and
+    /// the per-shard results merged in replica-index order, so any
+    /// value produces a byte-identical schedule; 1 — the default — is
+    /// the plain serial loop.
+    pub shards: usize,
 }
 
 impl Default for ServerConfig {
@@ -465,6 +471,7 @@ impl Default for ServerConfig {
             shed: false,
             autoscale: None,
             replica_tiers: None,
+            shards: 1,
         }
     }
 }
@@ -560,5 +567,6 @@ mod tests {
         assert!(!c.shed, "shedding must default OFF");
         assert!(c.autoscale.is_none(), "autoscaling must default OFF");
         assert!(c.replica_tiers.is_none(), "hetero tiers must default OFF");
+        assert_eq!(c.shards, 1, "sharded stepping must default to serial");
     }
 }

@@ -62,9 +62,8 @@ fn parse_args() -> Result<Args> {
     while let Some(a) = it.next() {
         if let Some(name) = a.strip_prefix("--") {
             let val = match name {
-                "fast" | "force" | "verify" | "trace" | "selfprof" | "gate-p99" | "shed" => {
-                    "1".to_string()
-                }
+                "fast" | "force" | "verify" | "trace" | "selfprof" | "gate-p99" | "shed"
+                | "compare" => "1".to_string(),
                 _ => it.next().with_context(|| format!("--{name} needs a value"))?,
             };
             flags.insert(name.to_string(), val);
@@ -129,6 +128,7 @@ fn run() -> Result<()> {
         "eval" => cmd_eval(&args)?,
         "serve" => cmd_serve(&args)?,
         "bench-serve" => cmd_bench_serve(&args)?,
+        "bench-scale" => cmd_bench_scale(&args)?,
         "bench-memory" => cmd_bench_memory(&args)?,
         "bench-elasticity" => cmd_bench_elasticity(&args)?,
         "calibrate" => cmd_calibrate(&args)?,
@@ -148,8 +148,8 @@ fn print_help() {
     println!(
         "lexi — LExI MoE inference coordinator\n\
          commands: table1 | profile | search | optimize | eval | serve | bench-serve |\n\
-                   bench-memory | bench-elasticity | calibrate | cross-validate | trace |\n\
-                   figures\n\
+                   bench-scale | bench-memory | bench-elasticity | calibrate |\n\
+                   cross-validate | trace | figures\n\
          flags: --model M --budget B --artifacts DIR --out DIR --iters N --fast\n\
          figures: --exp table1|fig2|fig3|fig9|figs4-8|ablations|memory|timeline|\n\
                       elasticity|all [--models a,b]\n\
@@ -171,6 +171,12 @@ fn print_help() {
                       --selfprof (wall-clock profile of the sim's own hot sections;\n\
                       appends to BENCH_selfprof.json, --selfprof-out F overrides)\n\
                       --requests N --model M --seed S\n\
+         bench-scale: event-loop scale benchmark on synthetic sim replicas\n\
+                      --replicas N (default 1000) --requests N (default 1000000)\n\
+                      --scenario S (default diurnal) --slots N --shards N --seed S\n\
+                      --compare (also run the rebuild-per-arrival snapshot baseline\n\
+                      and report the cluster.snapshot speedup)\n\
+                      --selfprof-out F (default BENCH_selfprof.json)\n\
          bench-memory: --budgets F1,F2,.. (fractions) --evict all|lru,lfu,kvec\n\
                       --scenario S --replicas N --slots N --requests N --prefetch on|off\n\
                       --model M --seed S\n\
@@ -450,6 +456,10 @@ fn server_cfg_from_args(args: &Args) -> Result<lexi_moe::config::server::ServerC
     if let Some(t) = args.get("replica-tiers") {
         cfg.replica_tiers = Some(TierKind::parse_spec(t)?);
     }
+    if let Some(n) = args.get("shards") {
+        cfg.shards = n.parse().context("--shards must be an integer")?;
+        anyhow::ensure!(cfg.shards >= 1, "--shards must be >= 1");
+    }
     if let Some(n) = args.get("requests") {
         cfg.n_requests = n.parse().context("--requests must be an integer")?;
     }
@@ -552,6 +562,104 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
     }
     println!("reports written to {}", out.display());
     Ok(())
+}
+
+/// Event-loop scale benchmark (`lexi bench-scale`): a synthetic-service
+/// sim cluster at cluster scale (default 1000 replicas x 1M requests),
+/// self-profiled, appending one trajectory entry per run to
+/// `BENCH_selfprof.json`. With `--compare` the rebuild-per-instant
+/// snapshot baseline runs first on the identical trace and the
+/// `cluster.snapshot` speedup of the incremental cache is reported.
+fn cmd_bench_scale(args: &Args) -> Result<()> {
+    use lexi_moe::config::server::ScenarioKind;
+
+    let replicas: usize = args.get("replicas").unwrap_or("1000").parse()?;
+    let slots: usize = args.get("slots").unwrap_or("8").parse()?;
+    let requests: usize = args.get("requests").unwrap_or("1000000").parse()?;
+    let shards: usize = args.get("shards").unwrap_or("1").parse()?;
+    let seed: u64 = args.get("seed").unwrap_or("0").parse()?;
+    anyhow::ensure!(replicas >= 1 && slots >= 1 && shards >= 1 && requests >= 1);
+    let kind = ScenarioKind::parse(args.get("scenario").unwrap_or("diurnal"))?;
+    anyhow::ensure!(
+        kind != ScenarioKind::TraceReplay,
+        "bench-scale generates its own trace; pick a generative scenario"
+    );
+    let path = PathBuf::from(args.get("selfprof-out").unwrap_or("BENCH_selfprof.json"));
+    let tag = format!("{}x{}", replicas, requests);
+    println!(
+        "=== bench-scale: {replicas} replicas x {slots} slots, {} scenario, \
+         {requests} requests, {shards} shard(s), seed {seed} ===\n",
+        kind.label()
+    );
+
+    let baseline = if args.get("compare").is_some() {
+        println!("rebuild-per-instant baseline ...");
+        let run = lexi_moe::server::bench_scale(replicas, slots, requests, kind, seed, 1, true);
+        run.prof.print();
+        println!(
+            "baseline: {:.2}s wall, {} completed, {} rejected\n",
+            run.wall_s, run.completed, run.rejected
+        );
+        let mut entry = run.prof.to_json(&format!("bench-scale rebuild {tag}"));
+        annotate_scale_entry(&mut entry, &run, replicas, requests);
+        lexi_moe::obs::append_trajectory(&path, "sim-selfprof", entry)?;
+        Some(run)
+    } else {
+        None
+    };
+
+    println!("incremental snapshots ...");
+    let run = lexi_moe::server::bench_scale(replicas, slots, requests, kind, seed, shards, false);
+    run.prof.print();
+    println!(
+        "incremental: {:.2}s wall, {} completed, {} rejected",
+        run.wall_s, run.completed, run.rejected
+    );
+    let mut entry = run.prof.to_json(&format!("bench-scale incremental {tag}"));
+    annotate_scale_entry(&mut entry, &run, replicas, requests);
+    lexi_moe::obs::append_trajectory(&path, "sim-selfprof", entry)?;
+    println!("self-profile appended to {}", path.display());
+
+    if let Some(base) = baseline {
+        anyhow::ensure!(
+            base.completed == run.completed && base.rejected == run.rejected,
+            "snapshot modes diverged: rebuild {}/{} vs incremental {}/{}",
+            base.completed,
+            base.rejected,
+            run.completed,
+            run.rejected
+        );
+        let (b, i) = (base.section_ms("cluster.snapshot"), run.section_ms("cluster.snapshot"));
+        anyhow::ensure!(i > 0.0, "incremental run recorded no cluster.snapshot time");
+        println!(
+            "\ncluster.snapshot: rebuild {:.1} ms -> incremental {:.1} ms ({:.1}x); \
+             wall {:.2}s -> {:.2}s ({:.2}x)",
+            b,
+            i,
+            b / i,
+            base.wall_s,
+            run.wall_s,
+            base.wall_s / run.wall_s
+        );
+    }
+    Ok(())
+}
+
+/// Attach run-shape metadata to a bench-scale trajectory entry so the
+/// regression gate can match entries without parsing labels.
+fn annotate_scale_entry(
+    entry: &mut lexi_moe::util::json::Json,
+    run: &lexi_moe::server::ScaleRun,
+    replicas: usize,
+    requests: usize,
+) {
+    use lexi_moe::util::json::Json;
+    if let Json::Obj(fields) = entry {
+        fields.insert("replicas".to_string(), Json::Num(replicas as f64));
+        fields.insert("requests".to_string(), Json::Num(requests as f64));
+        fields.insert("wall_s".to_string(), Json::Num(run.wall_s));
+        fields.insert("completed".to_string(), Json::Num(run.completed as f64));
+    }
 }
 
 /// Elastic-control-plane sweep (`lexi bench-elasticity`): fixed

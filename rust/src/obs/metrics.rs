@@ -29,7 +29,20 @@ pub struct Quantiles {
 impl Quantiles {
     pub fn from_samples(xs: impl IntoIterator<Item = f64>) -> Self {
         let mut sorted: Vec<f64> = xs.into_iter().collect();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp: a stray NaN sorts last instead of panicking the
+        // whole report out of a comparator unwrap
+        sorted.sort_by(f64::total_cmp);
+        Quantiles { sorted }
+    }
+
+    /// Wrap samples the caller already sorted (ascending, `total_cmp`
+    /// order). Lets report builders sort one pooled vector once and
+    /// slice it into many estimators instead of re-sorting per metric.
+    pub fn from_sorted(sorted: Vec<f64>) -> Self {
+        debug_assert!(
+            sorted.windows(2).all(|w| w[0].total_cmp(&w[1]).is_le()),
+            "from_sorted input must be ascending"
+        );
         Quantiles { sorted }
     }
 
@@ -410,6 +423,30 @@ mod tests {
         assert_eq!(q.max(), 0.9);
         assert!(Quantiles::from_samples([]).is_empty());
         assert_eq!(Quantiles::from_samples([]).q(50.0), 0.0);
+    }
+
+    #[test]
+    fn nan_samples_sort_last_instead_of_panicking() {
+        // partial_cmp().unwrap() would panic here; total_cmp parks the
+        // NaN after every finite sample so the low percentiles stay
+        // meaningful
+        let q = Quantiles::from_samples([0.3, f64::NAN, 0.1, 0.2]);
+        assert_eq!(q.n(), 4);
+        assert_eq!(q.q(0.0), 0.1);
+        assert!(q.max().is_nan());
+        assert!(Quantiles::from_samples([f64::NAN]).q(50.0).is_nan());
+    }
+
+    #[test]
+    fn from_sorted_matches_from_samples() {
+        let xs = [0.4, 0.1, 0.9, 0.3];
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(f64::total_cmp);
+        let a = Quantiles::from_samples(xs.iter().copied());
+        let b = Quantiles::from_sorted(sorted);
+        for p in [0.0, 50.0, 95.0, 100.0] {
+            assert_eq!(a.q(p), b.q(p));
+        }
     }
 
     #[test]

@@ -62,6 +62,12 @@ pub struct BackendStats {
     pub residency: Option<ResidencyStats>,
 }
 
+/// Sentinel [`telemetry_version`](ReplicaBackend::telemetry_version)
+/// for backends that do not track one: the cluster treats the row as
+/// permanently dirty and re-reads its telemetry at every snapshot
+/// instant (the pre-cache behaviour).
+pub const TELEMETRY_UNVERSIONED: u64 = u64::MAX;
+
 /// One replica behind the cluster front door.
 ///
 /// The contract mirrors a discrete-event loop: the cluster calls
@@ -92,6 +98,21 @@ pub trait ReplicaBackend {
     /// the O(1) fields (the per-arrival routing input),
     /// [`TelemetryDetail::Full`] adds the O(queue) scan fields.
     fn telemetry(&self, now_s: f64, detail: TelemetryDetail) -> ReplicaTelemetry;
+
+    /// Monotone counter that moves whenever
+    /// [`telemetry`](ReplicaBackend::telemetry) output could have
+    /// changed (admit,
+    /// steal, rung switch, phase start/finish). The cluster's
+    /// incremental [`SnapshotCache`](super::telemetry::SnapshotCache)
+    /// re-reads a replica's row only when this version moved, so an
+    /// implementation must bump it on EVERY telemetry-visible mutation
+    /// — a missed bump serves stale telemetry to routing and control.
+    /// The default opts out: [`TELEMETRY_UNVERSIONED`] marks the row
+    /// permanently dirty and the cache degrades to a per-instant
+    /// rebuild for that replica.
+    fn telemetry_version(&self) -> u64 {
+        TELEMETRY_UNVERSIONED
+    }
 
     /// Queued + running requests (the admission-control signal).
     fn outstanding(&self) -> usize;

@@ -70,6 +70,11 @@ pub struct EngineReplica<'m, M: ModelBackend> {
     failed: bool,
     /// EWMA of recent measured step times (telemetry signal).
     step_ewma_s: f64,
+    /// Bumped on every telemetry-visible mutation (admit / submit /
+    /// steal / rung switch / step / completion / failure) so the
+    /// cluster's [`SnapshotCache`](super::telemetry::SnapshotCache)
+    /// re-reads this replica's row only when something changed.
+    telemetry_version: u64,
     /// Every measured `Engine::step`, tagged with phase kind, rung,
     /// occupancy regressor, and residency stall — the run report's
     /// step-time histogram AND the sim `ServiceModel` calibration input
@@ -124,6 +129,7 @@ impl<'m, M: ModelBackend> EngineReplica<'m, M> {
             inflight: HashMap::new(),
             failed: false,
             step_ewma_s: 0.0,
+            telemetry_version: 1,
             step_samples: Vec::new(),
             busy_s: 0.0,
             prefill_calls: 0,
@@ -141,6 +147,8 @@ impl<'m, M: ModelBackend> EngineReplica<'m, M> {
         let mut free = self.slots.saturating_sub(occupied);
         while free > 0 {
             let Some(req) = self.queue.pop() else { break };
+            // queue -> engine moves queue_len / load_cost / active
+            self.telemetry_version += 1;
             let prompt = synth_prompt(req.id, req.prompt_len, self.vocab);
             let sampling = SamplingParams {
                 temperature: 0.0,
@@ -162,6 +170,7 @@ impl<'m, M: ModelBackend> EngineReplica<'m, M> {
                         self.id
                     );
                     self.failed = true;
+                    self.telemetry_version += 1;
                     while self.queue.pop().is_some() {}
                     self.inflight.clear();
                     return;
@@ -194,6 +203,7 @@ impl<'m, M: ModelBackend> ReplicaBackend for EngineReplica<'m, M> {
             // dropped; surfaces as a missing completion in the report
             return;
         }
+        self.telemetry_version += 1;
         record_opt(&self.tracer, req.arrival_s, || EventKind::QueuePush {
             id: req.id,
             replica: self.id,
@@ -245,17 +255,26 @@ impl<'m, M: ModelBackend> ReplicaBackend for EngineReplica<'m, M> {
         !self.failed
     }
 
+    fn telemetry_version(&self) -> u64 {
+        self.telemetry_version
+    }
+
     fn steal_request(&mut self) -> Option<QueuedRequest> {
         if self.failed {
             return None;
         }
-        self.queue.pop_min_deadline()
+        let req = self.queue.pop_min_deadline();
+        if req.is_some() {
+            self.telemetry_version += 1;
+        }
+        req
     }
 
     fn set_rung(&mut self, rung: usize, now: f64, penalty_s: f64) {
         if rung == self.rung {
             return;
         }
+        self.telemetry_version += 1;
         let k_vec = self.ladder.k_vec(rung);
         self.engine
             .set_k_vec(k_vec)
@@ -289,6 +308,7 @@ impl<'m, M: ModelBackend> ReplicaBackend for EngineReplica<'m, M> {
                 // the shortfall as missing completions
                 eprintln!("replica {}: engine step failed ({e:#}); dropping its workload", self.id);
                 self.failed = true;
+                self.telemetry_version += 1;
                 while self.queue.pop().is_some() {}
                 self.inflight.clear();
                 return false;
@@ -310,6 +330,8 @@ impl<'m, M: ModelBackend> ReplicaBackend for EngineReplica<'m, M> {
                 occ_before as f64
             }
         };
+        // the step moved step_ewma_s and (with residency) hbm_pressure
+        self.telemetry_version += 1;
         self.step_samples.push(StepSample {
             prefill: outcome.kind == StepKind::Prefill,
             rung: self.rung,
@@ -348,6 +370,7 @@ impl<'m, M: ModelBackend> ReplicaBackend for EngineReplica<'m, M> {
         let Some((_end_s, outcome)) = self.phase.take() else {
             return;
         };
+        self.telemetry_version += 1;
         // first tokens materialize at the phase boundary...
         for id in &outcome.first_tokens {
             if let Some(m) = self.inflight.get_mut(id) {
@@ -395,7 +418,7 @@ impl<'m, M: ModelBackend> ReplicaBackend for EngineReplica<'m, M> {
     fn stats(&self) -> BackendStats {
         let step_times = (!self.step_samples.is_empty()).then(|| {
             let mut s: Vec<f64> = self.step_samples.iter().map(|s| s.dt_s).collect();
-            s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            s.sort_by(f64::total_cmp);
             StepTimeSummary {
                 n: s.len() as u64,
                 p50_s: percentile_sorted(&s, 50.0),

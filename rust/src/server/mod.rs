@@ -86,7 +86,7 @@ pub use backend::{BackendStats, CompletedRequest, ReplicaBackend};
 pub use engine_backend::EngineReplica;
 pub use ladder::{LadderController, LadderPolicy, QualityLadder, Rung};
 pub use replica::{Replica, ServiceModel};
-pub use report::{ElasticityReport, MemoryReport, TransformReport};
+pub use report::{ElasticityReport, LatencySamples, MemoryReport, TransformReport};
 pub use router::{Cluster, RoutingPolicy, RunResult};
 pub use scheduler::{AdmissionControl, EdfQueue, QueuedRequest};
 pub use telemetry::{
@@ -272,6 +272,9 @@ pub fn bench_serve(
     let runs = match cfg.backend {
         BackendKind::Sim => {
             sim_runs_elastic(spec, &line_up, tiered.as_deref(), &scenario, &trace, cfg)
+                .into_iter()
+                .map(|(report, res, _)| (report, res))
+                .collect()
         }
         BackendKind::Engine => match try_real_runtime(spec, artifacts) {
             Some(model) => {
@@ -463,7 +466,7 @@ pub fn bench_elasticity(
         .collect::<Vec<_>>()
         .join(",");
 
-    let run_cell = |cell: &ServerConfig| -> Result<(TransformReport, RunResult)> {
+    let run_cell = |cell: &ServerConfig| -> Result<(TransformReport, RunResult, LatencySamples)> {
         validate_elastic(cell)?;
         let tiered = tier_line_ups(spec, &table, cell)?;
         let mut runs = sim_runs_elastic(
@@ -480,12 +483,12 @@ pub fn bench_elasticity(
                   cell_label: String,
                   cell: &ServerConfig,
                   report: &TransformReport,
-                  res: &RunResult| {
-        let interactive = crate::obs::Quantiles::from_samples(
-            res.completed
-                .iter()
-                .filter(|c| scenario.profiles[c.class].priority == 0)
-                .map(|c| c.ttft_s),
+                  res: &RunResult,
+                  samples: &LatencySamples| {
+        // merge the already-sorted interactive-class TTFT lanes instead
+        // of re-filtering and re-sorting the completion list
+        let interactive = crate::obs::Quantiles::from_sorted(
+            samples.merged_ttft(|class| scenario.profiles[class].priority == 0),
         );
         ElasticityReport {
             scenario: scenario.name.to_string(),
@@ -540,8 +543,8 @@ pub fn bench_elasticity(
         cell.autoscale = None;
         cell.shed = false;
         mutate(&mut cell);
-        let (report, res) = run_cell(&cell)?;
-        rows.push(to_row("elastic", label.clone(), &cell, &report, &res));
+        let (report, res, samples) = run_cell(&cell)?;
+        rows.push(to_row("elastic", label.clone(), &cell, &report, &res, &samples));
     }
     // hetero family: uniform reference, then the tier mix per policy
     use crate::config::server::PolicyKind;
@@ -551,13 +554,14 @@ pub fn bench_elasticity(
         cell.autoscale = None;
         cell.shed = false;
         cell.policy = PolicyKind::Jsq;
-        let (report, res) = run_cell(&cell)?;
+        let (report, res, samples) = run_cell(&cell)?;
         rows.push(to_row(
             "hetero",
             format!("h100:{}", cfg.replicas),
             &cell,
             &report,
             &res,
+            &samples,
         ));
     }
     for policy in [PolicyKind::RoundRobin, PolicyKind::Jsq, PolicyKind::ClassAware] {
@@ -566,14 +570,104 @@ pub fn bench_elasticity(
         cell.autoscale = None;
         cell.shed = false;
         cell.policy = policy;
-        let (report, res) = run_cell(&cell)?;
-        rows.push(to_row("hetero", tier_label.clone(), &cell, &report, &res));
+        let (report, res, samples) = run_cell(&cell)?;
+        rows.push(to_row("hetero", tier_label.clone(), &cell, &report, &res, &samples));
     }
 
     let stem = format!("bench_elasticity_{}_{}", spec.name, scenario.name);
     report::write_elasticity_csv(&out_dir.join(format!("{stem}.csv")), &rows)?;
     report::write_elasticity_json(&out_dir.join(format!("{stem}.json")), &rows)?;
     Ok(rows)
+}
+
+/// One measured event-loop scale run (see [`bench_scale`]).
+pub struct ScaleRun {
+    /// Wall-clock time of `Cluster::run` alone (trace generation and
+    /// cluster construction are excluded).
+    pub wall_s: f64,
+    pub completed: usize,
+    pub rejected: u64,
+    /// Self-profile of the run's hot sections (`cluster.snapshot`,
+    /// `cluster.route`, `cluster.step_shards`, EDF ops, ...).
+    pub prof: crate::obs::selfprof::SelfProfile,
+}
+
+impl ScaleRun {
+    /// Total wall time (ms) spent in one profiled section, 0 when the
+    /// section never ran.
+    pub fn section_ms(&self, name: &str) -> f64 {
+        self.prof
+            .sections
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map_or(0.0, |(_, s)| s.total_ns as f64 / 1e6)
+    }
+}
+
+/// Event-loop scale benchmark (`lexi bench-scale`): drive a cluster of
+/// `replicas` virtual-time replicas with a *synthetic* service model
+/// through a full seeded scenario of `n_requests` arrivals, under the
+/// self-profiler. The synthetic service keeps the per-phase math
+/// trivial, so the measurement isolates the event loop itself —
+/// snapshot assembly, routing, EDF queue ops, replica stepping — rather
+/// than the perf model. `rebuild` switches the cluster onto the
+/// pre-incremental rebuild-per-instant snapshot path
+/// ([`Cluster::with_snapshot_rebuild`]) so `--compare` can price the
+/// incremental cache against its baseline on the identical trace; both
+/// modes produce byte-identical schedules, only the wall clock moves.
+pub fn bench_scale(
+    replicas: usize,
+    slots: usize,
+    n_requests: usize,
+    kind: ScenarioKind,
+    seed: u64,
+    shards: usize,
+    rebuild: bool,
+) -> ScaleRun {
+    use crate::config::server::PolicyKind;
+    let svc = ServiceModel::synthetic("scale", 1e-5, 1e-3, slots);
+    // mixture means come from the profile catalog, so probe with a
+    // unit-capacity scenario first (same recipe as estimate_capacity)
+    let probe = Scenario::from_kind(kind, 1.0);
+    let capacity = replicas as f64 * svc.capacity_rps(probe.mean_prompt_tokens(), probe.mean_gen_tokens());
+    let mut scenario = Scenario::from_kind(kind, capacity);
+    let slack = 2.0 * svc.step_time(slots);
+    scenario.resolve_slos(
+        |tokens| svc.prefill_time(tokens * slots) + slack,
+        svc.step_time(slots),
+    );
+    let trace = scenario.generate(n_requests, seed);
+
+    let ladder = QualityLadder::fixed("scale", Allocation::uniform(4, 2), svc);
+    let mut cluster = Cluster::new(
+        replicas,
+        slots,
+        PolicyKind::Jsq,
+        ladder,
+        None,
+        // admission cap scales with the cluster so rejections stay a
+        // workload property, not an artifact of the bench size
+        64 * replicas,
+        scenario.profiles.len(),
+        0.0,
+        seed,
+    )
+    .with_shards(shards);
+    if rebuild {
+        cluster = cluster.with_snapshot_rebuild();
+    }
+
+    crate::obs::selfprof::enable();
+    let t0 = std::time::Instant::now();
+    let res = cluster.run(&scenario, &trace);
+    let wall_s = t0.elapsed().as_secs_f64();
+    let prof = crate::obs::selfprof::disable_and_collect();
+    ScaleRun {
+        wall_s,
+        completed: res.completed.len(),
+        rejected: res.rejected_by_class.iter().sum(),
+        prof,
+    }
 }
 
 /// Emit one transform's observability artifacts (`--trace`): Perfetto
@@ -710,6 +804,9 @@ pub(crate) fn sim_runs(
     cfg: &ServerConfig,
 ) -> Vec<(TransformReport, RunResult)> {
     sim_runs_elastic(spec, line_up, None, scenario, trace, cfg)
+        .into_iter()
+        .map(|(report, res, _)| (report, res))
+        .collect()
 }
 
 /// [`sim_runs`] plus the elastic control plane: shedding, autoscaling,
@@ -725,7 +822,7 @@ pub(crate) fn sim_runs_elastic(
     scenario: &Scenario,
     trace: &Trace,
     cfg: &ServerConfig,
-) -> Vec<(TransformReport, RunResult)> {
+) -> Vec<(TransformReport, RunResult, LatencySamples)> {
     // replica index -> tier index under --replica-tiers (empty otherwise)
     let tier_idx: Vec<usize> = cfg
         .replica_tiers
@@ -791,7 +888,8 @@ pub(crate) fn sim_runs_elastic(
             cfg.seed,
         )
         .with_stealing(cfg.steal_bound)
-        .with_steal_cooldown(cfg.steal_cooldown_s);
+        .with_steal_cooldown(cfg.steal_cooldown_s)
+        .with_shards(cfg.shards);
         if cfg.shed {
             cluster = cluster
                 .with_shedding(Shedder::new(ShedPolicy::from_config(cfg), scenario.profiles.len()));
@@ -823,9 +921,19 @@ pub(crate) fn sim_runs_elastic(
             cluster = cluster.with_tracing(cfg.trace_ring_cap);
         }
         let res = cluster.run(scenario, trace);
-        let report =
-            TransformReport::from_run(scenario, c.label, cfg.policy.label(), &res, &quality);
-        runs.push((report, res));
+        // pool + sort the latency samples once; the report and every
+        // extra percentile view (bench-elasticity's interactive TTFT
+        // column) slice the same sorted vectors
+        let samples = LatencySamples::collect(&res.completed);
+        let report = TransformReport::from_run_with(
+            scenario,
+            c.label,
+            cfg.policy.label(),
+            &res,
+            &quality,
+            &samples,
+        );
+        runs.push((report, res, samples));
     }
     runs
 }
@@ -964,7 +1072,8 @@ pub(crate) fn engine_runs<M: ModelBackend>(
             cfg.seed,
         )
         .with_stealing(cfg.steal_bound)
-        .with_steal_cooldown(cfg.steal_cooldown_s);
+        .with_steal_cooldown(cfg.steal_cooldown_s)
+        .with_shards(cfg.shards);
         if cfg.shed {
             cluster = cluster
                 .with_shedding(Shedder::new(ShedPolicy::from_config(cfg), scenario.profiles.len()));
@@ -1148,6 +1257,20 @@ mod tests {
         let mut bad = cfg;
         bad.scenario = ScenarioKind::TraceReplay;
         assert!(bench_memory(&m, &bad, &budgets, &policies, None, &out).is_err());
+    }
+
+    #[test]
+    fn bench_scale_modes_complete_the_same_trace() {
+        // incremental + sharded vs rebuild-per-instant + serial: same
+        // seeded trace, same outcome counts, both profiles populated
+        let inc = bench_scale(6, 4, 1200, ScenarioKind::Diurnal, 3, 3, false);
+        let reb = bench_scale(6, 4, 1200, ScenarioKind::Diurnal, 3, 1, true);
+        assert_eq!(inc.completed as u64 + inc.rejected, 1200);
+        assert_eq!(inc.completed, reb.completed);
+        assert_eq!(inc.rejected, reb.rejected);
+        assert!(inc.section_ms("cluster.snapshot") > 0.0);
+        assert!(reb.section_ms("cluster.snapshot") > 0.0);
+        assert!(inc.wall_s > 0.0 && reb.wall_s > 0.0);
     }
 
     #[test]

@@ -135,6 +135,15 @@ pub struct Replica {
     pending_penalty_s: f64,
     /// EWMA of recent phase durations (telemetry signal).
     step_ewma_s: f64,
+    /// Occupied-slot count, maintained on slot fill/drain so
+    /// [`n_active`](Replica::n_active) — and through it the cluster's
+    /// per-arrival admission signal — is O(1) instead of O(slots).
+    active_slots: usize,
+    /// Bumped on every telemetry-visible mutation (admit / steal /
+    /// rung switch / phase start / phase finish) so the cluster's
+    /// [`SnapshotCache`](super::telemetry::SnapshotCache) re-reads
+    /// this replica's row only when something actually changed.
+    telemetry_version: u64,
     // ---- counters ----
     pub busy_s: f64,
     pub prefill_calls: u64,
@@ -159,6 +168,8 @@ impl Replica {
             last_switch_s: f64::NEG_INFINITY,
             pending_penalty_s: 0.0,
             step_ewma_s: 0.0,
+            active_slots: 0,
+            telemetry_version: 1,
             busy_s: 0.0,
             prefill_calls: 0,
             decode_steps: 0,
@@ -180,7 +191,12 @@ impl Replica {
     }
 
     pub fn n_active(&self) -> usize {
-        self.slots.iter().filter(|s| s.is_some()).count()
+        debug_assert_eq!(
+            self.active_slots,
+            self.slots.iter().filter(|s| s.is_some()).count(),
+            "active-slot counter out of sync with slot occupancy"
+        );
+        self.active_slots
     }
 
     /// Queued + running requests on this replica.
@@ -217,6 +233,7 @@ impl Replica {
     /// the pinned hot set.
     pub fn set_rung(&mut self, rung: usize, now: f64, penalty_s: f64) {
         if rung != self.rung {
+            self.telemetry_version += 1;
             self.rung = rung;
             self.last_switch_s = now;
             self.rung_switches += 1;
@@ -255,6 +272,7 @@ impl Replica {
                     first_token_s: None,
                     produced: 0,
                 });
+                self.active_slots += 1;
                 slot_idxs.push(idx);
             }
             // residency: the batched prefill demands every layer's
@@ -310,6 +328,9 @@ impl Replica {
     }
 
     fn account(&mut self, dur: f64) {
+        // called exactly once per started phase: slots, load_cost,
+        // step_ewma_s and (with residency) hbm_pressure all moved
+        self.telemetry_version += 1;
         self.busy_s += dur;
         self.rung_time_s[self.rung.min(self.rung_time_s.len() - 1)] += dur;
         self.step_ewma_s = if self.step_ewma_s == 0.0 {
@@ -344,6 +365,7 @@ impl Replica {
 
     /// Finish the in-flight phase at `now`, emitting completed requests.
     pub fn complete_phase(&mut self, now: f64, out: &mut Vec<CompletedRequest>) {
+        self.telemetry_version += 1;
         match std::mem::replace(&mut self.phase, Phase::Idle) {
             Phase::Idle => {}
             Phase::Prefill { slot_idxs, .. } => {
@@ -376,6 +398,7 @@ impl Replica {
             let done = matches!(slot_opt, Some(s) if s.produced >= s.req.new_tokens);
             if done {
                 let s = slot_opt.take().unwrap();
+                self.active_slots -= 1;
                 let first = s.first_token_s.unwrap_or(now);
                 let c = CompletedRequest {
                     id: s.req.id,
@@ -408,6 +431,7 @@ impl ReplicaBackend for Replica {
     }
 
     fn admit(&mut self, req: QueuedRequest) {
+        self.telemetry_version += 1;
         record_opt(&self.tracer, req.arrival_s, || EventKind::QueuePush {
             id: req.id,
             replica: self.id,
@@ -432,8 +456,16 @@ impl ReplicaBackend for Replica {
         Replica::set_rung(self, rung, now, penalty_s);
     }
 
+    fn telemetry_version(&self) -> u64 {
+        self.telemetry_version
+    }
+
     fn steal_request(&mut self) -> Option<QueuedRequest> {
-        self.queue.pop_min_deadline()
+        let req = self.queue.pop_min_deadline();
+        if req.is_some() {
+            self.telemetry_version += 1;
+        }
+        req
     }
 
     fn try_start(&mut self, now: f64) -> bool {

@@ -87,6 +87,93 @@ pub fn meets_slo(c: &CompletedRequest, slo: &SloTarget) -> bool {
     c.ttft_s <= slo.ttft_s && c.tpot_s() <= slo.tpot_s
 }
 
+/// Latency samples for one run, pooled in a single pass over the
+/// completions and sorted exactly once per (class, metric). Every
+/// percentile a report needs afterwards — all-class, one class, or a
+/// priority-filtered subset — is a slice or an O(n) ascending merge of
+/// these vectors, never another full sort. `bench-elasticity` shares
+/// one `LatencySamples` between [`TransformReport::from_run_with`] and
+/// its interactive-TTFT column for exactly this reason.
+#[derive(Clone, Debug, Default)]
+pub struct LatencySamples {
+    /// Ascending (`total_cmp` order) TTFT samples per SLO class.
+    pub ttft_by_class: Vec<Vec<f64>>,
+    /// Ascending TPOT samples pooled over all classes.
+    pub tpot: Vec<f64>,
+}
+
+impl LatencySamples {
+    pub fn collect(completed: &[CompletedRequest]) -> Self {
+        let mut ttft_by_class: Vec<Vec<f64>> = Vec::new();
+        let mut tpot = Vec::with_capacity(completed.len());
+        for c in completed {
+            if c.class >= ttft_by_class.len() {
+                ttft_by_class.resize_with(c.class + 1, Vec::new);
+            }
+            ttft_by_class[c.class].push(c.ttft_s);
+            tpot.push(c.tpot_s());
+        }
+        for v in &mut ttft_by_class {
+            v.sort_by(f64::total_cmp);
+        }
+        tpot.sort_by(f64::total_cmp);
+        LatencySamples { ttft_by_class, tpot }
+    }
+
+    /// Ascending merge of the per-class TTFT vectors whose class index
+    /// `keep` selects. The merged multiset is identical to filtering
+    /// the completions and sorting, so the percentiles are identical —
+    /// without the O(n log n) re-sort.
+    pub fn merged_ttft(&self, keep: impl Fn(usize) -> bool) -> Vec<f64> {
+        let lanes: Vec<&[f64]> = self
+            .ttft_by_class
+            .iter()
+            .enumerate()
+            .filter(|(c, _)| keep(*c))
+            .map(|(_, v)| v.as_slice())
+            .collect();
+        merge_ascending(&lanes)
+    }
+
+    /// All-class TTFT percentile view.
+    pub fn ttft(&self) -> Quantiles {
+        Quantiles::from_sorted(self.merged_ttft(|_| true))
+    }
+
+    /// All-class TPOT percentile view.
+    pub fn tpot(&self) -> Quantiles {
+        Quantiles::from_sorted(self.tpot.clone())
+    }
+}
+
+/// K-way ascending merge of already-sorted lanes (`total_cmp` order).
+/// Linear in the total sample count; the lane count is the class count,
+/// a small constant.
+fn merge_ascending(lanes: &[&[f64]]) -> Vec<f64> {
+    let total: usize = lanes.iter().map(|l| l.len()).sum();
+    let mut heads = vec![0usize; lanes.len()];
+    let mut out = Vec::with_capacity(total);
+    while out.len() < total {
+        let mut best: Option<usize> = None;
+        for (i, l) in lanes.iter().enumerate() {
+            if heads[i] >= l.len() {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some(b) => l[heads[i]].total_cmp(&lanes[b][heads[b]]).is_lt(),
+            };
+            if better {
+                best = Some(i);
+            }
+        }
+        let b = best.expect("merge ran out of samples early");
+        out.push(lanes[b][heads[b]]);
+        heads[b] += 1;
+    }
+    out
+}
+
 impl TransformReport {
     pub fn from_run(
         scenario: &Scenario,
@@ -95,11 +182,32 @@ impl TransformReport {
         res: &RunResult,
         rung_quality_loss: &[f64],
     ) -> Self {
+        Self::from_run_with(
+            scenario,
+            transform,
+            policy,
+            res,
+            rung_quality_loss,
+            &LatencySamples::collect(&res.completed),
+        )
+    }
+
+    /// [`from_run`](Self::from_run) over caller-pooled latency samples,
+    /// so sweeps that need extra percentile views (bench-elasticity's
+    /// interactive TTFT column) sort each sample vector exactly once.
+    pub fn from_run_with(
+        scenario: &Scenario,
+        transform: &str,
+        policy: &str,
+        res: &RunResult,
+        rung_quality_loss: &[f64],
+        samples: &LatencySamples,
+    ) -> Self {
         let makespan = res.makespan_s.max(1e-9);
-        // the shared exact-percentile implementation (sorts once; three
-        // percentiles read the same samples)
-        let ttft = Quantiles::from_samples(res.completed.iter().map(|c| c.ttft_s));
-        let tpot = Quantiles::from_samples(res.completed.iter().map(|c| c.tpot_s()));
+        // the shared exact-percentile implementation (the pooled
+        // vectors were sorted once; three percentiles read each)
+        let ttft = samples.ttft();
+        let tpot = samples.tpot();
         let n_slo_met = res
             .completed
             .iter()
@@ -959,6 +1067,41 @@ mod tests {
         let json = crate::util::json::parse_file(&dir.join("mem.json")).unwrap();
         let arr = json.as_arr().unwrap();
         assert_eq!(arr[0].get("policy").unwrap().as_str().unwrap(), "kvec");
+    }
+
+    #[test]
+    fn pooled_samples_match_filter_then_sort() {
+        // multiclass completions with interleaved latencies, so the
+        // per-class merge actually has to interleave lanes
+        let completed: Vec<CompletedRequest> = (0..30)
+            .map(|i| CompletedRequest {
+                id: i,
+                class: (i % 3) as usize,
+                arrival_s: 0.0,
+                prompt_len: 10,
+                tokens: 8,
+                ttft_s: ((i * 37) % 30) as f64 * 0.01,
+                e2e_s: 1.0 + i as f64 * 0.05,
+                finish_s: 2.0,
+                replica: 0,
+            })
+            .collect();
+        let samples = LatencySamples::collect(&completed);
+        let direct_ttft = Quantiles::from_samples(completed.iter().map(|c| c.ttft_s));
+        let direct_tpot = Quantiles::from_samples(completed.iter().map(|c| c.tpot_s()));
+        for p in [0.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(samples.ttft().q(p), direct_ttft.q(p), "ttft p{p}");
+            assert_eq!(samples.tpot().q(p), direct_tpot.q(p), "tpot p{p}");
+        }
+        // priority-style class filter: merged lanes == filter-then-sort
+        let direct = Quantiles::from_samples(
+            completed.iter().filter(|c| c.class != 2).map(|c| c.ttft_s),
+        );
+        let merged = Quantiles::from_sorted(samples.merged_ttft(|c| c != 2));
+        assert_eq!(merged.n(), direct.n());
+        for p in [0.0, 50.0, 95.0, 100.0] {
+            assert_eq!(merged.q(p), direct.q(p), "filtered p{p}");
+        }
     }
 
     #[test]

@@ -34,7 +34,9 @@ use super::backend::{BackendStats, CompletedRequest, ReplicaBackend};
 use super::ladder::{LadderController, LadderPolicy, QualityLadder};
 use super::replica::Replica;
 use super::scheduler::{AdmissionControl, QueuedRequest};
-use super::telemetry::{ClusterSnapshot, StepSample, StepTimeSummary, TelemetryDetail};
+use super::telemetry::{
+    ClusterSnapshot, SnapshotCache, StepSample, StepTimeSummary, TelemetryDetail,
+};
 use super::workload::{Scenario, Trace, TraceRequest};
 
 /// Outcome of one cluster run over a trace.
@@ -128,24 +130,19 @@ pub trait RoutingPolicy {
     fn route(&mut self, req: &QueuedRequest, snap: &ClusterSnapshot, rng: &mut Pcg32) -> usize;
 }
 
-/// Replicas currently accepting work (the routing candidate set). When
-/// none accepts, every replica is returned so the policies stay total —
-/// the requests are lost either way, and the report shows the
-/// shortfall. With every replica healthy (the sim backend always is)
-/// this is the identity set, so the policies behave bit-identically to
-/// their pre-health-aware versions.
-fn accepting_candidates(snap: &ClusterSnapshot) -> Vec<usize> {
-    let c: Vec<usize> = snap
-        .replicas
+/// Replicas currently accepting work (the routing candidate set),
+/// yielded as a lazy iterator so the per-arrival routing path never
+/// allocates. When none accepts, every replica is yielded so the
+/// policies stay total — the requests are lost either way, and the
+/// report shows the shortfall. With every replica healthy (the sim
+/// backend always is) this is the identity set, so the policies behave
+/// bit-identically to their pre-health-aware versions.
+fn candidate_indices(snap: &ClusterSnapshot) -> impl Iterator<Item = usize> + Clone + '_ {
+    let none_accepting = !snap.replicas.iter().any(|t| t.accepting);
+    snap.replicas
         .iter()
-        .filter(|t| t.accepting)
+        .filter(move |t| t.accepting || none_accepting)
         .map(|t| t.replica)
-        .collect();
-    if c.is_empty() {
-        (0..snap.replicas.len()).collect()
-    } else {
-        c
-    }
 }
 
 /// Cycle through replicas regardless of load.
@@ -160,8 +157,9 @@ impl RoutingPolicy for RoundRobin {
     }
 
     fn route(&mut self, _req: &QueuedRequest, snap: &ClusterSnapshot, _rng: &mut Pcg32) -> usize {
-        let c = accepting_candidates(snap);
-        let i = c[self.next % c.len()];
+        let c = candidate_indices(snap);
+        let n = c.clone().count();
+        let i = c.clone().nth(self.next % n).expect("no routing candidates");
         self.next += 1;
         i
     }
@@ -177,7 +175,7 @@ impl RoutingPolicy for JoinShortestQueue {
     }
 
     fn route(&mut self, _req: &QueuedRequest, snap: &ClusterSnapshot, _rng: &mut Pcg32) -> usize {
-        argmin_load(accepting_candidates(snap).into_iter(), snap)
+        argmin_load(candidate_indices(snap), snap)
     }
 }
 
@@ -191,16 +189,19 @@ impl RoutingPolicy for PowerOfTwoChoices {
     }
 
     fn route(&mut self, _req: &QueuedRequest, snap: &ClusterSnapshot, rng: &mut Pcg32) -> usize {
-        let c = accepting_candidates(snap);
-        if c.len() == 1 {
-            return c[0];
+        let c = candidate_indices(snap);
+        let n = c.clone().count();
+        if n == 1 {
+            return c.clone().next().expect("no routing candidates");
         }
-        let a = rng.gen_usize(c.len());
-        let mut b = rng.gen_usize(c.len() - 1);
+        let a = rng.gen_usize(n);
+        let mut b = rng.gen_usize(n - 1);
         if b >= a {
             b += 1;
         }
-        argmin_load([c[a], c[b]].into_iter(), snap)
+        let ca = c.clone().nth(a).expect("no routing candidates");
+        let cb = c.clone().nth(b).expect("no routing candidates");
+        argmin_load([ca, cb].into_iter(), snap)
     }
 }
 
@@ -218,10 +219,9 @@ impl RoutingPolicy for ClassAware {
     }
 
     fn route(&mut self, req: &QueuedRequest, snap: &ClusterSnapshot, _rng: &mut Pcg32) -> usize {
-        let c = accepting_candidates(snap);
-        let max_rung = c.iter().map(|&i| snap.replicas[i].rung).max().unwrap_or(0);
-        c.into_iter()
-            .map(|i| &snap.replicas[i])
+        let c = candidate_indices(snap);
+        let max_rung = c.clone().map(|i| snap.replicas[i].rung).max().unwrap_or(0);
+        c.map(|i| &snap.replicas[i])
             .min_by_key(|t| {
                 let rung_pref = if req.priority == 0 {
                     t.rung // interactive: best quality first
@@ -292,10 +292,75 @@ pub struct Cluster<'a> {
     /// Reweight snapshot `load_cost` by each replica's measured step
     /// speed (heterogeneous hardware tiers; off by default).
     speed_weighted: bool,
+    /// Persistent O(1)-field snapshot (per-arrival routing input),
+    /// incrementally refreshed from dirty replicas only.
+    load_cache: SnapshotCache,
+    /// Persistent scan-field snapshot (control-plane input). Kept
+    /// separate from `load_cache` so Load consumers never see stale
+    /// scan fields a Full refresh left behind.
+    full_cache: SnapshotCache,
+    /// Reusable buffer for the masked/reweighted snapshot view, so the
+    /// elastic control plane stays allocation-free per instant too.
+    mask_scratch: ClusterSnapshot,
+    /// Contiguous replica groups advanced independently between
+    /// routing instants (`--shards`; 1 = the plain serial loop). Shard
+    /// results merge in replica-index order, so every shard count
+    /// reproduces the serial schedule byte-for-byte.
+    shards: usize,
     /// Shared span tracer (`None` = tracing off, the default; see
     /// [`crate::obs`]). Never reads or perturbs the seeded rng.
     tracer: Option<SharedTracer>,
     rng: Pcg32,
+}
+
+/// Copy `src` into `scratch` (reusing the row allocation) and apply the
+/// elastic-control-plane view transforms: the autoscaler masks
+/// non-Active replicas out of the accepting set, and heterogeneous
+/// clusters rescale `load_cost` by measured replica speed. Returns the
+/// scratch buffer as the snapshot to consume. The cache's own buffer is
+/// never masked in place — it must keep holding raw telemetry rows so
+/// the next incremental refresh has valid clean rows to retain.
+fn mask_into<'s>(
+    scratch: &'s mut ClusterSnapshot,
+    src: &ClusterSnapshot,
+    scaler: Option<&Autoscaler>,
+    speed_weighted: bool,
+) -> &'s ClusterSnapshot {
+    scratch.now_s = src.now_s;
+    scratch.replicas.clone_from(&src.replicas);
+    if let Some(sc) = scaler {
+        sc.mask(scratch);
+    }
+    if speed_weighted {
+        reweight_by_speed(scratch);
+    }
+    scratch
+}
+
+/// Refresh the named snapshot cache at `$now` and yield the
+/// `&ClusterSnapshot` every control/routing decision consumes. With the
+/// elastic control plane off (the default) the cache's persistent
+/// buffer is served directly — the per-arrival routing path copies and
+/// allocates nothing. With autoscaling or speed-weighted routing on,
+/// the raw rows are masked into the reusable `mask_scratch` buffer via
+/// [`mask_into`]. A macro rather than a `&mut self` method so the
+/// returned borrow stays field-scoped: callers keep disjoint mutable
+/// access to the router, controller, shedder, scaler, backends, and
+/// rng while the snapshot is live.
+macro_rules! cached_snapshot {
+    ($cluster:expr, $cache:ident, $now:expr) => {{
+        $cluster.$cache.refresh(&$cluster.backends, $now);
+        if $cluster.scaler.is_some() || $cluster.speed_weighted {
+            mask_into(
+                &mut $cluster.mask_scratch,
+                $cluster.$cache.snap(),
+                $cluster.scaler.as_ref(),
+                $cluster.speed_weighted,
+            )
+        } else {
+            $cluster.$cache.snap()
+        }
+    }};
 }
 
 impl Cluster<'static> {
@@ -362,6 +427,10 @@ impl<'a> Cluster<'a> {
             shedder: None,
             scaler: None,
             speed_weighted: false,
+            load_cache: SnapshotCache::new(n, TelemetryDetail::Load),
+            full_cache: SnapshotCache::new(n, TelemetryDetail::Full),
+            mask_scratch: ClusterSnapshot { now_s: 0.0, replicas: Vec::new() },
+            shards: 1,
             tracer: None,
             rng: Pcg32::new(seed, 0x0707_2026),
         }
@@ -424,10 +493,31 @@ impl<'a> Cluster<'a> {
         self
     }
 
-    /// One telemetry snapshot of every replica at `now_s` — the single
-    /// input surface for routing, ladder, and stealing decisions.
-    /// `detail` bounds the cost: per-arrival routing reads only the
-    /// O(1) fields, control-plane instants pay for the queue scans.
+    /// Advance replicas in `n` contiguous shard groups between routing
+    /// instants (`--shards`; clamped to at least 1). Shard outputs
+    /// merge in replica-index order — exactly the serial visit order —
+    /// so any shard count completes the same schedule byte-for-byte
+    /// (regression-tested against the serial loop).
+    pub fn with_shards(mut self, n: usize) -> Self {
+        self.shards = n.max(1);
+        self
+    }
+
+    /// Disable the incremental snapshot caches: every refresh rebuilds
+    /// every replica row, the pre-flattening cost model. Kept for
+    /// `bench-scale --compare` and cache-equivalence tests.
+    pub fn with_snapshot_rebuild(mut self) -> Self {
+        self.load_cache.set_rebuild(true);
+        self.full_cache.set_rebuild(true);
+        self
+    }
+
+    /// One freshly built telemetry snapshot of every replica at
+    /// `now_s`, for external callers that want an owned copy. The event
+    /// loop itself never calls this: it serves every decision from the
+    /// incremental [`SnapshotCache`]s (see `cached_snapshot!`), which
+    /// re-read only replicas whose
+    /// [`telemetry_version`](ReplicaBackend::telemetry_version) moved.
     pub fn snapshot(&self, now_s: f64, detail: TelemetryDetail) -> ClusterSnapshot {
         prof_scope!("cluster.snapshot");
         ClusterSnapshot {
@@ -443,22 +533,6 @@ impl<'a> Cluster<'a> {
     /// Total queued + running requests (admission-control signal).
     fn outstanding(&self) -> usize {
         self.backends.iter().map(|b| b.outstanding()).sum()
-    }
-
-    /// [`snapshot`](Self::snapshot) through the elastic control plane:
-    /// the autoscaler masks non-Active replicas out of the accepting
-    /// set, and heterogeneous clusters rescale `load_cost` by measured
-    /// replica speed. The identity transform when neither feature is
-    /// on, so default runs are untouched.
-    fn masked_snapshot(&self, now_s: f64, detail: TelemetryDetail) -> ClusterSnapshot {
-        let mut snap = self.snapshot(now_s, detail);
-        if let Some(sc) = &self.scaler {
-            sc.mask(&mut snap);
-        }
-        if self.speed_weighted {
-            reweight_by_speed(&mut snap);
-        }
-        snap
     }
 
     /// Bounded work stealing at a dispatch instant: each fully idle
@@ -496,8 +570,10 @@ impl<'a> Cluster<'a> {
                 continue;
             }
             // refresh per steal: the previous move changed the picture
-            let snap = self.masked_snapshot(now, TelemetryDetail::Full);
-            observe_min_slack(&snap, min_slack_obs);
+            // (version-tracked, so only the replicas the last steal
+            // touched are actually re-read)
+            let snap = cached_snapshot!(self, full_cache, now);
+            observe_min_slack(snap, min_slack_obs);
             let victim = snap
                 .replicas
                 .iter()
@@ -535,6 +611,69 @@ impl<'a> Cluster<'a> {
         }
     }
 
+    /// Start work on every idle replica and report the earliest next
+    /// phase completion, one fused pass over `shards` contiguous
+    /// backend chunks. Chunks share no state and their minima merge in
+    /// shard order (= replica-index order), so the result is
+    /// byte-identical to the serial visit for any shard count — and the
+    /// chunk bodies are ready to fan out across worker threads once the
+    /// backends (and their shared `Rc` ladder/tracer) become `Send`.
+    /// Today the chunks execute serially, which already exercises the
+    /// deterministic merge.
+    fn step_shards(&mut self, now: f64) -> Option<u64> {
+        prof_scope!("cluster.step_shards");
+        let shard_len = self.backends.len().div_ceil(self.shards);
+        let mut next: Option<u64> = None;
+        for chunk in self.backends.chunks_mut(shard_len) {
+            let mut shard_min: Option<u64> = None;
+            for b in chunk.iter_mut() {
+                b.try_start(now);
+                if let Some(t) = b.next_event_s() {
+                    let k = time_key(t);
+                    if shard_min.map_or(true, |m| k < m) {
+                        shard_min = Some(k);
+                    }
+                }
+            }
+            // merging minima is order-insensitive, so any shard
+            // completion order yields the same next-event instant
+            if let Some(k) = shard_min {
+                if next.map_or(true, |m| k < m) {
+                    next = Some(k);
+                }
+            }
+        }
+        next
+    }
+
+    /// Complete every phase due at `t_next`, sharded like
+    /// [`step_shards`](Self::step_shards). Each chunk appends into its
+    /// own reusable buffer in `shard_out`, and the buffers drain into
+    /// `completed` in shard order (= replica-index order) — the exact
+    /// sequence the serial completion sweep produces.
+    fn complete_shards(
+        &mut self,
+        now: f64,
+        t_next: u64,
+        shard_out: &mut Vec<Vec<CompletedRequest>>,
+        completed: &mut Vec<CompletedRequest>,
+    ) {
+        let shard_len = self.backends.len().div_ceil(self.shards);
+        shard_out.resize_with(self.shards, Vec::new);
+        for (chunk, out) in self.backends.chunks_mut(shard_len).zip(shard_out.iter_mut()) {
+            for b in chunk.iter_mut() {
+                if let Some(t) = b.next_event_s() {
+                    if time_key(t) <= t_next {
+                        b.complete_phase(now, out);
+                    }
+                }
+            }
+        }
+        for out in shard_out.iter_mut() {
+            completed.append(out);
+        }
+    }
+
     /// Replay a trace to completion. Closed-loop traces re-issue
     /// requests on completion until the spec's total is reached.
     pub fn run(&mut self, scenario: &Scenario, trace: &Trace) -> RunResult {
@@ -552,6 +691,8 @@ impl<'a> Cluster<'a> {
         let mut spawned = trace.requests.len();
         let mut next_id = trace.requests.iter().map(|r| r.id + 1).max().unwrap_or(0);
         let mut completed: Vec<CompletedRequest> = Vec::new();
+        // per-shard completion buffers, reused across instants
+        let mut shard_out: Vec<Vec<CompletedRequest>> = Vec::new();
         let mut switch_events: Vec<(u64, usize)> = Vec::new();
         let mut steal_events: Vec<(u64, usize, usize)> = Vec::new();
         let mut scale_events: Vec<(u64, usize, bool)> = Vec::new();
@@ -574,9 +715,9 @@ impl<'a> Cluster<'a> {
             // surface as every other control-plane decision and moves
             // replica slots through their lifecycle
             if self.scaler.is_some() {
-                let snap = self.masked_snapshot(now, TelemetryDetail::Full);
-                observe_min_slack(&snap, &mut min_slack_obs);
-                let acts = self.scaler.as_mut().unwrap().step(&snap);
+                let snap = cached_snapshot!(self, full_cache, now);
+                observe_min_slack(snap, &mut min_slack_obs);
+                let acts = self.scaler.as_mut().unwrap().step(snap);
                 for r in acts.activated {
                     scale_events.push((time_key(now), r, true));
                     record_opt(&self.tracer, now, || EventKind::ScaleUp { replica: r });
@@ -596,10 +737,13 @@ impl<'a> Cluster<'a> {
                     PressureMode::Queue => TelemetryDetail::Load,
                     PressureMode::Slack | PressureMode::SlackEwma => TelemetryDetail::Full,
                 };
-                let snap = self.masked_snapshot(now, detail);
-                observe_min_slack(&snap, &mut min_slack_obs);
+                let snap = match detail {
+                    TelemetryDetail::Load => cached_snapshot!(self, load_cache, now),
+                    TelemetryDetail::Full => cached_snapshot!(self, full_cache, now),
+                };
+                observe_min_slack(snap, &mut min_slack_obs);
                 let n_rungs = self.ladder.n_rungs();
-                let targets = self.controller.as_mut().unwrap().decide(&snap, n_rungs);
+                let targets = self.controller.as_mut().unwrap().decide(snap, n_rungs);
                 for (i, b) in self.backends.iter_mut().enumerate() {
                     if targets[i] != snap.replicas[i].rung {
                         b.set_rung(targets[i], now, self.reconfig_penalty_s);
@@ -614,18 +758,11 @@ impl<'a> Cluster<'a> {
             if self.steal_bound > 0 {
                 self.steal_pass(now, &mut steal_events, &mut min_slack_obs);
             }
-            for b in &mut self.backends {
-                b.try_start(now);
-            }
-
-            // 2. next event: earliest arrival or phase completion
+            // 2. next event: earliest arrival or phase completion. The
+            // sharded pass fuses try_start with the per-shard
+            // next-completion scan.
+            let next_completion = self.step_shards(now);
             let next_arrival = arrivals.peek().map(|Reverse(PendingArrival(t, _))| *t);
-            let next_completion = self
-                .backends
-                .iter()
-                .filter_map(|b| b.next_event_s())
-                .map(time_key)
-                .min();
             let t_next = match (next_arrival, next_completion) {
                 (None, None) => break, // drained
                 (Some(a), None) => a,
@@ -656,12 +793,12 @@ impl<'a> Cluster<'a> {
                 // work. A shed counts as a rejection (conservation) —
                 // the paired Shed event carries the attribution.
                 let shed_reason = if self.shedder.is_some() {
-                    let snap = self.masked_snapshot(now, TelemetryDetail::Full);
-                    observe_min_slack(&snap, &mut min_slack_obs);
+                    let snap = cached_snapshot!(self, full_cache, now);
+                    observe_min_slack(snap, &mut min_slack_obs);
                     self.shedder
                         .as_mut()
                         .unwrap()
-                        .decide(&snap, outstanding, req.class, prio)
+                        .decide(snap, outstanding, req.class, prio)
                 } else {
                     None
                 };
@@ -694,13 +831,15 @@ impl<'a> Cluster<'a> {
                 }
                 let slo = scenario.slos[req.class];
                 let qr = QueuedRequest::new(&req, prio, slo.ttft_s);
-                // a fresh LOAD-level snapshot per arrival: earlier
+                // a fresh LOAD-level view per arrival: earlier
                 // admissions in this round are part of the next
-                // decision's input, and routing reads only O(1) fields
-                let snap = self.masked_snapshot(now, TelemetryDetail::Load);
+                // decision's input. Their rows are version-dirty, so
+                // the incremental refresh re-reads exactly those and
+                // the per-arrival path allocates nothing.
+                let snap = cached_snapshot!(self, load_cache, now);
                 let idx = {
                     prof_scope!("cluster.route");
-                    self.router.route(&qr, &snap, &mut self.rng)
+                    self.router.route(&qr, snap, &mut self.rng)
                 };
                 record_opt(&self.tracer, now, || EventKind::Route {
                     id: qr.id,
@@ -713,15 +852,10 @@ impl<'a> Cluster<'a> {
                 continue;
             }
 
-            // 3b. complete every phase due now
+            // 3b. complete every phase due now (sharded; per-shard
+            // buffers merge in replica-index order)
             let before = completed.len();
-            for b in &mut self.backends {
-                if let Some(t) = b.next_event_s() {
-                    if time_key(t) <= t_next {
-                        b.complete_phase(now, &mut completed);
-                    }
-                }
-            }
+            self.complete_shards(now, t_next, &mut shard_out, &mut completed);
             // closed loop: each completion frees a client, which thinks
             // and re-issues
             if let Some(spec) = &trace.closed_loop {
@@ -861,6 +995,96 @@ mod tests {
             assert_eq!(a.completed.len(), 80, "{policy:?}");
             assert_eq!(a.completed, b.completed, "{policy:?} not deterministic");
             assert_eq!(a.makespan_s, b.makespan_s);
+        }
+    }
+
+    #[test]
+    fn sharded_stepping_is_byte_identical_to_serial() {
+        // shard-order merge == replica-index order: any shard count must
+        // reproduce the serial schedule exactly, across scenario shapes
+        // and seeds, including the traced event order
+        for kind in [
+            ScenarioKind::Poisson,
+            ScenarioKind::Bursty,
+            ScenarioKind::Diurnal,
+        ] {
+            let mut s = Scenario::from_kind(kind, 10.0);
+            s.resolve_slos(|tokens| 1e-4 * tokens as f64, 0.02);
+            for seed in [1u64, 7, 42] {
+                let trace = s.generate(120, seed);
+                let serial = cluster(PolicyKind::PowerOfTwo, 5)
+                    .with_tracing(1 << 16)
+                    .run(&s, &trace);
+                for shards in [2usize, 3, 5, 9] {
+                    let sharded = cluster(PolicyKind::PowerOfTwo, 5)
+                        .with_shards(shards)
+                        .with_tracing(1 << 16)
+                        .run(&s, &trace);
+                    let tag = format!("{kind:?} seed {seed} shards {shards}");
+                    assert_eq!(serial.completed, sharded.completed, "{tag}");
+                    assert_eq!(serial.rung_switch_events, sharded.rung_switch_events, "{tag}");
+                    assert_eq!(serial.steal_events, sharded.steal_events, "{tag}");
+                    assert_eq!(serial.makespan_s, sharded.makespan_s, "{tag}");
+                    assert_eq!(serial.trace, sharded.trace, "{tag}: traced event order moved");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_snapshots_match_rebuild_under_full_control_plane() {
+        // the incremental caches must be invisible even when every
+        // snapshot consumer is live: slack-pressure controller, steals,
+        // class-aware shedding, and the autoscaler's masked Full views
+        use crate::config::server::{PressureMode, ServerConfig};
+        use crate::ctrl::{AutoscalePolicy, Autoscaler, ShedPolicy, Shedder};
+        let mut cfg = ServerConfig::default();
+        cfg.queue_cap = 16;
+        cfg.pressure = PressureMode::Slack;
+        let mk = |rebuild: bool, shards: usize| {
+            let mut c = Cluster::new(
+                4,
+                2,
+                PolicyKind::PowerOfTwo,
+                fixed_ladder(0.05, 2),
+                Some(LadderPolicy::from_config(&cfg)),
+                16,
+                4,
+                0.0,
+                9,
+            )
+            .with_stealing(1)
+            .with_steal_cooldown(0.01)
+            .with_shards(shards)
+            .with_shedding(Shedder::new(ShedPolicy::from_config(&cfg), 4))
+            .with_autoscale(Autoscaler::new(
+                AutoscalePolicy::for_cluster(2, 4, 2, 0.05, 0.1, 0.25),
+                4,
+                3,
+            ));
+            if rebuild {
+                c = c.with_snapshot_rebuild();
+            }
+            c
+        };
+        let s = scenario();
+        let trace = s.generate(150, 11);
+        let base = mk(false, 1).run(&s, &trace);
+        // the pressure must actually exercise the extended plane
+        assert!(base.steals.is_some());
+        assert!(base.shed_by_class.is_some());
+        assert!(base.scale_events.is_some());
+        for (rebuild, shards) in [(true, 1), (true, 3), (false, 4)] {
+            let other = mk(rebuild, shards).run(&s, &trace);
+            let tag = format!("rebuild={rebuild} shards={shards}");
+            assert_eq!(base.completed, other.completed, "{tag}");
+            assert_eq!(base.rejected_by_class, other.rejected_by_class, "{tag}");
+            assert_eq!(base.steal_events, other.steal_events, "{tag}");
+            assert_eq!(base.scale_events, other.scale_events, "{tag}");
+            assert_eq!(base.shed_by_class, other.shed_by_class, "{tag}");
+            assert_eq!(base.rung_switch_events, other.rung_switch_events, "{tag}");
+            assert_eq!(base.min_slack_s, other.min_slack_s, "{tag}");
+            assert_eq!(base.makespan_s, other.makespan_s, "{tag}");
         }
     }
 

@@ -8,8 +8,7 @@
 //! the ordering is a total order (bit-reproducible across runs) and
 //! `key()` never re-quantizes a float at comparison time.
 
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::prof_scope;
 
@@ -66,30 +65,25 @@ impl QueuedRequest {
     }
 }
 
-#[derive(Clone, Debug)]
-struct Entry(QueuedRequest);
-
-impl PartialEq for Entry {
-    fn eq(&self, other: &Self) -> bool {
-        self.0.key() == other.0.key()
-    }
-}
-impl Eq for Entry {}
-impl PartialOrd for Entry {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for Entry {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.0.key().cmp(&other.0.key())
-    }
-}
-
-/// Priority + earliest-deadline-first queue.
+/// Priority + earliest-deadline-first queue, indexed two ways.
+///
+/// Requests live in a `BTreeMap` ordered by the EDF dispatch key
+/// `(priority, deadline_ns, id)`; a mirror `BTreeSet` orders the same
+/// membership by `(deadline_ns, id)`, so the work-stealing donor pop
+/// ([`pop_min_deadline`](EdfQueue::pop_min_deadline)) is O(log n)
+/// instead of the old drain-and-rebuild O(n log n), and
+/// [`min_deadline_ns`](EdfQueue::min_deadline_ns) reads the first
+/// element instead of scanning the whole queue. Request ids are unique
+/// within a queue (the cluster assigns globally unique ids and a
+/// request sits in at most one replica's queue), so both keys are
+/// total orders and the two indexes stay in lockstep.
 #[derive(Clone, Debug, Default)]
 pub struct EdfQueue {
-    heap: BinaryHeap<Reverse<Entry>>,
+    /// Dispatch order: (priority, deadline_ns, id) → request.
+    by_edf: BTreeMap<(u8, u64, u64), QueuedRequest>,
+    /// Steal order: (deadline_ns, id, priority). The priority rides
+    /// along so the dispatch key can be rebuilt on removal.
+    by_deadline: BTreeSet<(u64, u64, u8)>,
     pending_cost: u64,
     /// Queued requests per class (index = class id; grown on demand).
     class_counts: Vec<usize>,
@@ -107,7 +101,9 @@ impl EdfQueue {
             self.class_counts.resize(req.class + 1, 0);
         }
         self.class_counts[req.class] += 1;
-        self.heap.push(Reverse(Entry(req)));
+        self.by_deadline.insert((req.deadline_ns, req.id, req.priority));
+        let prev = self.by_edf.insert(req.key(), req);
+        debug_assert!(prev.is_none(), "duplicate queued request id");
     }
 
     fn note_pop(&mut self, req: &QueuedRequest) {
@@ -115,44 +111,35 @@ impl EdfQueue {
         self.class_counts[req.class] -= 1;
     }
 
-    /// Pop the (highest-priority, earliest-deadline) request.
+    /// Pop the (highest-priority, earliest-deadline) request. O(log n).
     pub fn pop(&mut self) -> Option<QueuedRequest> {
         prof_scope!("edf.pop");
-        let Reverse(Entry(req)) = self.heap.pop()?;
+        let (_, req) = self.by_edf.pop_first()?;
+        self.by_deadline
+            .remove(&(req.deadline_ns, req.id, req.priority));
         self.note_pop(&req);
         Some(req)
     }
 
     /// Remove the queued request with the minimum absolute deadline —
     /// the worst-slack entry, whatever its priority class. The
-    /// work-stealing donor operation. O(n log n); steals are bounded
-    /// per dispatch instant, so this never sits on the hot path.
+    /// work-stealing donor operation. O(log n) off the deadline index.
     pub fn pop_min_deadline(&mut self) -> Option<QueuedRequest> {
-        if self.heap.is_empty() {
-            return None;
-        }
-        let mut items: Vec<QueuedRequest> =
-            self.heap.drain().map(|Reverse(Entry(r))| r).collect();
-        let idx = items
-            .iter()
-            .enumerate()
-            .min_by_key(|(_, r)| (r.deadline_ns, r.id))
-            .map(|(i, _)| i)
-            .unwrap();
-        let req = items.swap_remove(idx);
+        let (deadline_ns, id, priority) = self.by_deadline.pop_first()?;
+        let req = self
+            .by_edf
+            .remove(&(priority, deadline_ns, id))
+            .expect("deadline index out of sync with EDF map");
         self.note_pop(&req);
-        for r in items {
-            self.heap.push(Reverse(Entry(r)));
-        }
         Some(req)
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.by_edf.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.by_edf.is_empty()
     }
 
     /// Total token-weighted backlog (for load-aware routing).
@@ -168,22 +155,23 @@ impl EdfQueue {
 
     /// Earliest deadline currently queued (None when empty).
     pub fn earliest_deadline_s(&self) -> Option<f64> {
-        self.heap.peek().map(|Reverse(Entry(r))| r.deadline_s())
+        self.by_edf.first_key_value().map(|(_, r)| r.deadline_s())
     }
 
-    /// Minimum deadline (ns) over ALL queued requests — unlike the heap
-    /// head, this ignores priority, so it reads the truly worst slack.
+    /// Minimum deadline (ns) over ALL queued requests — unlike the
+    /// dispatch head, this ignores priority, so it reads the truly
+    /// worst slack. O(1) off the deadline index.
     pub fn min_deadline_ns(&self) -> Option<u64> {
-        self.heap.iter().map(|Reverse(Entry(r))| r.deadline_ns).min()
+        self.by_deadline.first().map(|&(d, _, _)| d)
     }
 
     /// Minimum normalized slack over queued interactive (priority-0)
     /// requests at `now` (None when no interactive request is queued).
+    /// Scans only the priority-0 prefix of the dispatch index.
     pub fn min_interactive_slack_frac(&self, now_s: f64) -> Option<f64> {
-        self.heap
-            .iter()
-            .filter(|Reverse(Entry(r))| r.priority == 0)
-            .map(|Reverse(Entry(r))| r.slack_frac(now_s))
+        self.by_edf
+            .range((0u8, 0u64, 0u64)..(1u8, 0u64, 0u64))
+            .map(|(_, r)| r.slack_frac(now_s))
             .min_by(|a, b| a.total_cmp(b))
     }
 }
@@ -338,6 +326,36 @@ mod tests {
         q.push(req(1, 0, 2.0));
         let frac = q.min_interactive_slack_frac(1.0).unwrap();
         assert!((frac - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dual_indexes_stay_in_lockstep_under_interleaved_pops() {
+        // interleave EDF pops with steal pops: membership, cost, and
+        // class counts must agree throughout, and both indexes must
+        // drain to exactly the pushed set
+        let mut q = EdfQueue::new();
+        let n = 60u64;
+        for i in 0..n {
+            q.push(req(i, (i % 3) as u8, ((i * 7919) % 97) as f64));
+        }
+        let mut seen = Vec::new();
+        while !q.is_empty() {
+            let before = q.len();
+            let r = if before % 2 == 0 {
+                q.pop_min_deadline()
+            } else {
+                q.pop()
+            };
+            let r = r.expect("non-empty queue must pop from both indexes");
+            assert_eq!(q.len(), before - 1);
+            seen.push(r.id);
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, (0..n).collect::<Vec<_>>());
+        assert_eq!(q.pending_cost(), 0);
+        assert!(q.class_counts().iter().all(|&c| c == 0));
+        assert!(q.min_deadline_ns().is_none());
+        assert!(q.earliest_deadline_s().is_none());
     }
 
     #[test]

@@ -609,7 +609,11 @@ mod tests {
             step_time_per_replica: vec![None],
             step_samples_per_replica: vec![None],
             residency_per_replica: vec![None],
+            shed_by_class: None,
+            replica_seconds: None,
+            scale_events: None,
             trace: None,
+            health: None,
         }
     }
 

@@ -58,6 +58,11 @@ pub enum PressureMode {
     /// step-time EWMA x queue depth, so the controller reacts to where
     /// slack WILL be once the backlog drains, not where it is now.
     SlackEwma,
+    /// SLO error-budget burn rate from the health engine
+    /// ([`crate::obs::health`]): degrade when the fast-window burn
+    /// approaches the critical threshold, recover when the budget stops
+    /// burning. Implies `--health`.
+    Burn,
 }
 
 impl PressureMode {
@@ -66,7 +71,8 @@ impl PressureMode {
             "queue" => PressureMode::Queue,
             "slack" => PressureMode::Slack,
             "slack-ewma" | "slackewma" => PressureMode::SlackEwma,
-            other => bail!("unknown pressure mode '{other}' (queue | slack | slack-ewma)"),
+            "burn" => PressureMode::Burn,
+            other => bail!("unknown pressure mode '{other}' (queue | slack | slack-ewma | burn)"),
         })
     }
 
@@ -75,6 +81,7 @@ impl PressureMode {
             PressureMode::Queue => "queue",
             PressureMode::Slack => "slack",
             PressureMode::SlackEwma => "slack-ewma",
+            PressureMode::Burn => "burn",
         }
     }
 }
@@ -431,6 +438,12 @@ pub struct ServerConfig {
     /// value produces a byte-identical schedule; 1 — the default — is
     /// the plain serial loop.
     pub shards: usize,
+    /// Streaming SLO health engine (`--health`): windowed burn-rate
+    /// monitoring, anomaly detection, and critical-event debug bundles
+    /// (see [`crate::obs::health`]). Off — the default — keeps every
+    /// run byte-identical; on, it *observes only* unless the pressure
+    /// mode is [`PressureMode::Burn`].
+    pub health: bool,
 }
 
 impl Default for ServerConfig {
@@ -472,6 +485,7 @@ impl Default for ServerConfig {
             autoscale: None,
             replica_tiers: None,
             shards: 1,
+            health: false,
         }
     }
 }
@@ -497,7 +511,12 @@ mod tests {
         for l in [LadderScope::PerReplica, LadderScope::Cluster] {
             assert_eq!(LadderScope::parse(l.label()).unwrap(), l);
         }
-        for p in [PressureMode::Queue, PressureMode::Slack, PressureMode::SlackEwma] {
+        for p in [
+            PressureMode::Queue,
+            PressureMode::Slack,
+            PressureMode::SlackEwma,
+            PressureMode::Burn,
+        ] {
             assert_eq!(PressureMode::parse(p.label()).unwrap(), p);
         }
         for e in EvictKind::all() {
@@ -568,5 +587,6 @@ mod tests {
         assert!(c.autoscale.is_none(), "autoscaling must default OFF");
         assert!(c.replica_tiers.is_none(), "hetero tiers must default OFF");
         assert_eq!(c.shards, 1, "sharded stepping must default to serial");
+        assert!(!c.health, "health engine must default OFF");
     }
 }

@@ -55,6 +55,10 @@ pub struct Shedder {
     pub policy: ShedPolicy,
     /// Requests shed per SLO class (index = class id).
     pub shed_by_class: Vec<u64>,
+    /// Latest health-engine burn reading (`--pressure burn` only): a
+    /// slack-like fraction, `None` when burn pressure is off or the
+    /// engine has no evidence yet.
+    burn_frac: Option<f64>,
 }
 
 impl Shedder {
@@ -62,7 +66,15 @@ impl Shedder {
         Shedder {
             policy,
             shed_by_class: vec![0; n_classes],
+            burn_frac: None,
         }
+    }
+
+    /// Feed the health engine's burn reading ahead of the arrival
+    /// decisions of a control instant (see
+    /// [`HealthEngine::burn_frac`](crate::obs::health::HealthEngine::burn_frac)).
+    pub fn set_burn_frac(&mut self, frac: Option<f64>) {
+        self.burn_frac = frac;
     }
 
     /// Decide one arrival: `Some(reason)` means shed (and the per-class
@@ -82,6 +94,10 @@ impl Shedder {
             Some("queue")
         } else if snap.min_projected_interactive_slack_frac() < self.policy.slack_frac {
             Some("slack")
+        } else if self.burn_frac.is_some_and(|f| f < self.policy.slack_frac) {
+            // the error budget is burning critically fast: batch
+            // admissions would only deepen it
+            Some("burn")
         } else {
             None
         };
@@ -166,6 +182,18 @@ mod tests {
         assert_eq!(s.decide(&snap, 1, 2, 2), Some("slack"));
         // interactive still passes
         assert_eq!(s.decide(&snap, 1, 0, 0), None);
+    }
+
+    #[test]
+    fn critical_burn_sheds_batch_but_not_interactive() {
+        let mut s = Shedder::new(policy(), 3);
+        let snap = calm_snap();
+        s.set_burn_frac(Some(0.1)); // below slack_frac 0.25
+        assert_eq!(s.decide(&snap, 1, 1, 1), Some("burn"));
+        assert_eq!(s.decide(&snap, 1, 0, 0), None);
+        // healthy burn reading sheds nothing
+        s.set_burn_frac(Some(0.9));
+        assert_eq!(s.decide(&snap, 1, 1, 1), None);
     }
 
     #[test]

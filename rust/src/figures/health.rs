@@ -1,0 +1,100 @@
+//! SLO burn-rate timeline figure (`lexi figures --exp health`): one
+//! small flash-crowd sim run under `--health --pressure burn`, rendered
+//! as the worst-class fast-window burn rate over virtual time with the
+//! raised health events overlaid as point markers.
+//!
+//! The series comes straight from [`crate::obs::HealthReport`]'s
+//! `burn_series` (sampled each engine observation), so the figure shows
+//! exactly what the ladder/shedder saw when `--pressure burn` degraded
+//! quality ahead of the hard admission cap.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::config::model::spec;
+use crate::config::server::{PressureMode, ScenarioKind, ServerConfig};
+use crate::perfmodel::PerfModel;
+use crate::server::{self, Contender, QualityLadder};
+
+use super::series::{f, FigureOutput};
+
+/// Run a small deterministic flash-crowd sim with the health engine on
+/// and emit the burn-rate timeline rows.
+pub fn run(out_dir: &Path) -> Result<FigureOutput> {
+    let m = spec("minicpm-moe-8x2b")?;
+    let cfg = ServerConfig {
+        replicas: 2,
+        slots_per_replica: 4,
+        n_requests: 48,
+        scenario: ScenarioKind::FlashCrowd,
+        service_in_len: 256,
+        service_out_len: 32,
+        pressure: PressureMode::Burn,
+        health: true,
+        ..Default::default()
+    };
+    let table = server::sensitivity_table(&m, None, cfg.seed);
+    let pm = PerfModel::new(m.clone(), cfg.seed);
+    let contender = Contender {
+        label: "lexi-ladder",
+        ladder: QualityLadder::for_model(&m, &table, &cfg, &pm)?,
+        adaptive: true,
+    };
+    let (scenario, trace) =
+        server::scenario_and_trace(&contender.ladder.rungs[0].service, &cfg)?;
+    let runs = server::sim_runs(&m, std::slice::from_ref(&contender), &scenario, &trace, &cfg);
+    let res = &runs[0].1;
+    let health = res
+        .health
+        .as_ref()
+        .context("health-enabled run returned no health outcome")?;
+
+    let mut fig = FigureOutput::new(
+        &format!("fig_health_{}_{}", m.name, scenario.name),
+        &["kind", "t_s", "burn", "label"],
+    );
+    for &(t_s, burn) in &health.report.burn_series {
+        fig.row(vec![
+            "burn".to_string(),
+            f(t_s),
+            f(burn),
+            String::new(),
+        ]);
+    }
+    for ev in &health.events {
+        fig.row(vec![
+            "event".to_string(),
+            f(ev.t_s),
+            f(health.report.peak_fast_burn),
+            ev.event.label().to_string(),
+        ]);
+    }
+    fig.emit(out_dir)?;
+    Ok(fig)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn health_figure_renders_burn_series() {
+        let dir = std::env::temp_dir().join("lexi_fig_health_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let fig = run(&dir).unwrap();
+        let burns = fig.rows.iter().filter(|r| r[0] == "burn").count();
+        assert!(burns > 0, "burn series must be non-empty");
+        // burn samples are on non-decreasing virtual time
+        let ts: Vec<f64> = fig
+            .rows
+            .iter()
+            .filter(|r| r[0] == "burn")
+            .map(|r| r[1].parse().unwrap())
+            .collect();
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]));
+        assert!(dir
+            .join("fig_health_minicpm-moe-8x2b_flash-crowd.csv")
+            .exists());
+    }
+}

@@ -7,6 +7,7 @@ pub mod cross_validation;
 pub mod elasticity;
 pub mod fig2;
 pub mod fig3;
+pub mod health;
 pub mod memory;
 pub mod pareto;
 pub mod series;

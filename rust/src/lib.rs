@@ -46,8 +46,12 @@
 //!   ([`obs::Tracer`], off by default and byte-identical when
 //!   disabled), the shared metrics registry / [`obs::Quantiles`]
 //!   percentile implementation, Perfetto + Prometheus + critical-path
-//!   exporters (`lexi trace`), and the sim self-profiler
-//!   (`BENCH_selfprof.json`)
+//!   exporters (`lexi trace`), the sim self-profiler
+//!   (`BENCH_selfprof.json`), and the SLO health engine
+//!   ([`obs::HealthEngine`]: windowed burn-rate monitoring + EWMA
+//!   anomaly detection) with its always-on flight recorder
+//!   ([`obs::FlightRecorder`]) dumping debug bundles validated by
+//!   `lexi bundle --check`
 //! - [`eval`]    — task harness (ppl, passkey, longqa, probes, VLM)
 //! - [`figures`] — regeneration of every paper table/figure
 //! - [`util`]    — rng, stats, csv

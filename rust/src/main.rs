@@ -9,7 +9,7 @@
 //!   lexi serve    --model M [--requests N]
 //!   lexi bench-serve [--scenario S] [--replicas N] [--route P]
 //!                    [--backend sim|engine] [--table auto|synthetic|measured]
-//!                    [--ladder replica|cluster] [--pressure queue|slack|slack-ewma]
+//!                    [--ladder replica|cluster] [--pressure queue|slack|slack-ewma|burn]
 //!                    [--steal N] [--steal-cooldown S] [--trace-file F]
 //!                    [--hbm-budget F] [--evict lru|lfu|kvec] [--prefetch on|off]
 //!                    [--model M] [--requests N]
@@ -29,7 +29,9 @@
 //!                    gate on TTFT/TPOT percentile divergence (nonzero exit
 //!                    beyond tolerance)
 //!   lexi trace    --check F [--prom F]   validate observability artifacts
-//!   lexi figures  --exp fig2|fig3|fig9|figs4-8|table1|memory|timeline|elasticity|all
+//!   lexi bundle   --check F              validate a flight-recorder debug bundle
+//!   lexi figures  --exp fig2|fig3|fig9|figs4-8|table1|memory|timeline|elasticity|
+//!                       health|all
 //!
 //! Global flags: --artifacts DIR (default ./artifacts), --out DIR
 //! (default ./results), --iters N, --fast.
@@ -63,7 +65,7 @@ fn parse_args() -> Result<Args> {
         if let Some(name) = a.strip_prefix("--") {
             let val = match name {
                 "fast" | "force" | "verify" | "trace" | "selfprof" | "gate-p99" | "shed"
-                | "compare" => "1".to_string(),
+                | "compare" | "health" => "1".to_string(),
                 _ => it.next().with_context(|| format!("--{name} needs a value"))?,
             };
             flags.insert(name.to_string(), val);
@@ -134,6 +136,7 @@ fn run() -> Result<()> {
         "calibrate" => cmd_calibrate(&args)?,
         "cross-validate" => cmd_cross_validate(&args)?,
         "trace" => cmd_trace(&args)?,
+        "bundle" => cmd_bundle(&args)?,
         "figures" => cmd_figures(&args)?,
         "help" | "--help" | "-h" => print_help(),
         other => {
@@ -149,14 +152,14 @@ fn print_help() {
         "lexi — LExI MoE inference coordinator\n\
          commands: table1 | profile | search | optimize | eval | serve | bench-serve |\n\
                    bench-scale | bench-memory | bench-elasticity | calibrate |\n\
-                   cross-validate | trace | figures\n\
+                   cross-validate | trace | bundle | figures\n\
          flags: --model M --budget B --artifacts DIR --out DIR --iters N --fast\n\
          figures: --exp table1|fig2|fig3|fig9|figs4-8|ablations|memory|timeline|\n\
-                      elasticity|all [--models a,b]\n\
+                      elasticity|health|all [--models a,b]\n\
          bench-serve: --scenario poisson|bursty|diurnal|closed-loop|flash-crowd|trace-replay|all\n\
                       --replicas N --slots N --route rr|jsq|p2c|classaware --backend sim|engine\n\
                       --table auto|synthetic|measured --ladder replica|cluster\n\
-                      --pressure queue|slack|slack-ewma --steal N (steals/instant, 0=off)\n\
+                      --pressure queue|slack|slack-ewma|burn --steal N (steals/instant, 0=off)\n\
                       --steal-cooldown S (min seconds between steals per replica)\n\
                       --hbm-budget F (expert HBM budget, fraction of footprint)\n\
                       --evict lru|lfu|kvec --prefetch on|off\n\
@@ -168,6 +171,10 @@ fn print_help() {
                       routing, sim backend; counts must sum to --replicas)\n\
                       --trace (record spans; emit Perfetto/critical-path/Prometheus\n\
                       artifacts) --trace-ring-cap N --metrics-interval S\n\
+                      --health (SLO health engine: windowed burn rates, anomaly\n\
+                      detection, debug bundles on critical events)\n\
+                      --pressure burn (ladder/shedder degrade on error-budget\n\
+                      burn rate; implies the health engine)\n\
                       --selfprof (wall-clock profile of the sim's own hot sections;\n\
                       appends to BENCH_selfprof.json, --selfprof-out F overrides)\n\
                       --requests N --model M --seed S\n\
@@ -189,8 +196,10 @@ fn print_help() {
                       --tolerance T (gated TTFT/TPOT divergence, default 0.5)\n\
                       --gate-p99 (extend the gate to p99) --append F (append one\n\
                       trajectory entry to F, e.g. the repo-root BENCH_serve.json)\n\
-         trace: --check F (validate Perfetto trace_event JSON)\n\
-                      --prom F (validate Prometheus text exposition)"
+         trace: --check F (validate Perfetto trace_event JSON; warns when the\n\
+                      ring dropped events) --prom F (validate Prometheus text\n\
+                      exposition)\n\
+         bundle: --check F (validate a flight-recorder debug_bundle_*.json)"
     );
 }
 
@@ -449,6 +458,9 @@ fn server_cfg_from_args(args: &Args) -> Result<lexi_moe::config::server::ServerC
     }
     if args.get("shed").is_some() {
         cfg.shed = true;
+    }
+    if args.get("health").is_some() {
+        cfg.health = true;
     }
     if let Some(a) = args.get("autoscale") {
         cfg.autoscale = Some(parse_autoscale(a)?);
@@ -866,6 +878,13 @@ fn cmd_trace(args: &Args) -> Result<()> {
     let sum = lexi_moe::obs::check_perfetto(&doc)
         .with_context(|| format!("validating trace {path}"))?;
     println!("{path}: ok ({} spans, {} instants)", sum.spans, sum.instants);
+    if sum.dropped > 0 {
+        eprintln!(
+            "warning: {path}: trace ring overflowed, {} event(s) dropped — \
+             the timeline is truncated; rerun with a larger --trace-ring-cap",
+            sum.dropped
+        );
+    }
     if let Some(p) = args.get("prom") {
         let text =
             std::fs::read_to_string(p).with_context(|| format!("reading exposition {p}"))?;
@@ -873,6 +892,25 @@ fn cmd_trace(args: &Args) -> Result<()> {
             .with_context(|| format!("validating exposition {p}"))?;
         println!("{p}: ok ({} families, {} samples)", ps.families, ps.samples);
     }
+    Ok(())
+}
+
+/// Validate a flight-recorder debug bundle (`lexi bundle --check F`):
+/// checks the self-contained `debug_bundle_*.json` shape (run config,
+/// cluster snapshot, window state, recorder tail) and prints a summary.
+/// Exits nonzero on a malformed bundle — the CI gate for `--health`.
+fn cmd_bundle(args: &Args) -> Result<()> {
+    let path = args
+        .get("check")
+        .context("--check <debug_bundle.json> required")?;
+    let doc = lexi_moe::util::json::parse_file(Path::new(path))
+        .with_context(|| format!("reading bundle {path}"))?;
+    let sum = lexi_moe::obs::check_bundle(&doc)
+        .with_context(|| format!("validating bundle {path}"))?;
+    println!(
+        "{path}: ok (t={:.2}s, trigger '{}', {} recorder entries, {} replicas, {} events)",
+        sum.t_s, sum.trigger, sum.n_entries, sum.n_replicas, sum.n_events
+    );
     Ok(())
 }
 
@@ -933,6 +971,9 @@ fn cmd_figures(args: &Args) -> Result<()> {
     }
     if matches!(exp, "elasticity" | "all") {
         figures::elasticity::run(&out)?;
+    }
+    if matches!(exp, "health" | "all") {
+        figures::health::run(&out)?;
     }
     if matches!(exp, "ablations" | "all") {
         figures::ablation::limitations_memory(&out, &cfg)?;

@@ -223,6 +223,10 @@ pub fn write_critical_path_csv(
 pub struct PerfettoSummary {
     pub spans: usize,
     pub instants: usize,
+    /// Events lost to the trace ring cap (`otherData.dropped_events`);
+    /// nonzero means the trace is truncated and `lexi trace --check`
+    /// warns about it.
+    pub dropped: u64,
 }
 
 /// Validate the shape of a Chrome/Perfetto `trace_event` JSON document:
@@ -265,6 +269,14 @@ pub fn check_perfetto(doc: &Json) -> Result<PerfettoSummary> {
         }
     }
     anyhow::ensure!(sum.spans > 0, "no complete spans in trace");
+    // tolerate files from writers that omit otherData; ours always
+    // embeds the drop count
+    sum.dropped = doc
+        .opt("otherData")
+        .and_then(|o| o.opt("dropped_events"))
+        .and_then(|d| d.as_f64().ok())
+        .map(|d| d.max(0.0) as u64)
+        .unwrap_or(0);
     Ok(sum)
 }
 
@@ -407,6 +419,37 @@ mod tests {
         // 3 request spans + 1 phase span; 1 rung-switch instant
         assert_eq!(sum.spans, 4);
         assert_eq!(sum.instants, 1);
+        assert_eq!(sum.dropped, 0);
+    }
+
+    #[test]
+    fn checker_surfaces_dropped_events() {
+        // a 3-cap ring fed 5 events reports its truncation in otherData
+        let mut t = Tracer::new(3);
+        for i in 0..4u64 {
+            t.record(i as f64, EventKind::Arrival { id: i, class: 0 });
+        }
+        t.record(
+            4.0,
+            EventKind::PhaseStart {
+                replica: 0,
+                phase: PhaseKind::Prefill,
+                rung: 0,
+                dur_s: 0.2,
+                stall_s: 0.0,
+                active: 1,
+                ids: vec![3],
+            },
+        );
+        let doc = perfetto_json(&t.finish(), &[]);
+        let sum = check_perfetto(&doc).unwrap();
+        assert_eq!(sum.dropped, 2);
+        // a writer omitting otherData still validates, with dropped = 0
+        let mut bare = doc.clone();
+        if let Json::Obj(m) = &mut bare {
+            m.remove("otherData");
+        }
+        assert_eq!(check_perfetto(&bare).unwrap().dropped, 0);
     }
 
     #[test]

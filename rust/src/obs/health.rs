@@ -1,0 +1,1248 @@
+//! Streaming SLO health engine (`bench-serve --health`, `--pressure
+//! burn`).
+//!
+//! Consumes the same per-instant [`ClusterSnapshot`] stream the control
+//! plane already runs on, plus the event loop's request-outcome hooks,
+//! and maintains:
+//!
+//! - **sliding virtual-time windows** of per-class TTFT/TPOT
+//!   attainment, shed/reject counts, and steal rates. The base unit is
+//!   a 10 s bucket; a ring of closed buckets covers the 300 s horizon,
+//!   so the 10 s / 60 s / 300 s views are mergeable bucket sums, never
+//!   re-scans. Each bucket also pools TTFT/TPOT into fixed-bucket
+//!   [`Histogram`]s — the cheap `Histogram::quantile` path, not exact
+//!   samples — keeping window state O(buckets × classes).
+//! - **error-budget burn rate** per SLO class in the Prometheus/SRE
+//!   multi-window style: `burn = violation_frac / budget_frac`, where a
+//!   rejected request counts as a violation (it definitionally missed
+//!   its SLO). Transitions are raised as typed
+//!   [`HealthEvent::BurnWarn`] / [`HealthEvent::BurnCritical`] /
+//!   [`HealthEvent::Recovered`] only when BOTH the fast (10 s) and slow
+//!   (60 s) windows cross the threshold, so a single bad instant cannot
+//!   page and a long slow bleed cannot hide.
+//! - an **anomaly detector**: per-replica EWMA mean/variance with
+//!   z-score flags on the step-time, queue-depth, and `hbm_pressure`
+//!   series, plus rung-flap (switch count per fast window) and
+//!   starved-replica (idle while peers drown) signatures.
+//! - an always-on bounded [`FlightRecorder`]; entering BurnCritical
+//!   freezes a self-contained debug bundle (recorder tail + cluster
+//!   snapshot + health digest + active config), rate-limited by a
+//!   cooldown and a per-run cap, validated by `lexi bundle --check`.
+//!
+//! The engine is an *observer*: with `--health` alone it reads
+//! telemetry and completions but feeds nothing back, so schedules are
+//! byte-identical to an engine-less run (regression-tested). Only
+//! `--pressure burn` routes [`HealthEngine::burn_frac`] into the
+//! ladder controller and shedder.
+
+use std::collections::VecDeque;
+
+use crate::server::backend::CompletedRequest;
+use crate::server::telemetry::ClusterSnapshot;
+use crate::server::workload::SloTarget;
+use crate::util::json::Json;
+
+use super::metrics::{Histogram, LATENCY_BUCKETS_S};
+use super::recorder::{FlightRecorder, BUNDLE_FORMAT, BUNDLE_VERSION};
+
+/// Integer-ns key of a virtual-time instant (the event loop's own
+/// `time_key`); used to observe each distinct instant exactly once.
+fn time_key(t_s: f64) -> u64 {
+    (t_s * 1e9) as u64
+}
+
+/// Tunables of the health engine. The defaults implement the classic
+/// SRE multi-window recipe (10 s fast / 60 s slow over a 10% error
+/// budget, warn at 2x burn, critical at 5x) scaled to sim virtual time.
+#[derive(Clone, Debug)]
+pub struct HealthConfig {
+    /// Base aggregation bucket (s); every window is a whole number of
+    /// buckets merged.
+    pub bucket_s: f64,
+    /// Closed buckets retained (ring length); with `bucket_s` = 10 s
+    /// and 30 buckets the longest answerable window is 300 s.
+    pub n_buckets: usize,
+    /// Fast burn window (s).
+    pub fast_window_s: f64,
+    /// Slow burn window (s).
+    pub slow_window_s: f64,
+    /// Allowed SLO-violation fraction (the error budget): burn =
+    /// violation_frac / budget_frac.
+    pub budget_frac: f64,
+    /// Burn rate at which a class enters Warn.
+    pub warn_burn: f64,
+    /// Burn rate at which a class enters Critical (bundle trigger).
+    pub critical_burn: f64,
+    /// Minimum outcomes in a window before its burn is trusted.
+    pub min_samples: u64,
+    /// |z| threshold of the EWMA anomaly detector.
+    pub z_threshold: f64,
+    /// EWMA observations before z-scores are trusted.
+    pub anomaly_warmup: u64,
+    /// EWMA smoothing factor.
+    pub ewma_alpha: f64,
+    /// Rung switches per replica within one fast window that count as
+    /// flapping.
+    pub flap_threshold: usize,
+    /// Flight-recorder entry cap.
+    pub recorder_cap: usize,
+    /// Flight-recorder bundle horizon (s of tail kept in a bundle).
+    pub recorder_horizon_s: f64,
+    /// Minimum spacing between two bundle dumps (s).
+    pub bundle_cooldown_s: f64,
+    /// Bundle dumps per run at most.
+    pub max_bundles: usize,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        HealthConfig {
+            bucket_s: 10.0,
+            n_buckets: 30,
+            fast_window_s: 10.0,
+            slow_window_s: 60.0,
+            budget_frac: 0.1,
+            warn_burn: 2.0,
+            critical_burn: 5.0,
+            min_samples: 8,
+            z_threshold: 3.0,
+            anomaly_warmup: 16,
+            ewma_alpha: 0.2,
+            flap_threshold: 4,
+            recorder_cap: 4096,
+            recorder_horizon_s: 30.0,
+            bundle_cooldown_s: 30.0,
+            max_bundles: 3,
+        }
+    }
+}
+
+/// A typed health transition or anomaly flag.
+#[derive(Clone, Debug, PartialEq)]
+pub enum HealthEvent {
+    /// A class's fast AND slow burn crossed the warn threshold.
+    BurnWarn {
+        class: usize,
+        fast_burn: f64,
+        slow_burn: f64,
+    },
+    /// A class's fast AND slow burn crossed the critical threshold
+    /// (freezes a debug bundle, subject to cooldown/cap).
+    BurnCritical {
+        class: usize,
+        fast_burn: f64,
+        slow_burn: f64,
+    },
+    /// A previously warning/critical class dropped back below warn on
+    /// both windows.
+    Recovered { class: usize },
+    /// The anomaly detector flagged a per-replica signature.
+    Anomaly {
+        replica: usize,
+        signature: AnomalySignature,
+        /// z-score that tripped the flag (0 for count-based
+        /// signatures like rung-flap).
+        z: f64,
+    },
+}
+
+impl HealthEvent {
+    /// Stable kind tag (metrics label, recorder entries, JSON).
+    pub fn label(&self) -> &'static str {
+        match self {
+            HealthEvent::BurnWarn { .. } => "burn_warn",
+            HealthEvent::BurnCritical { .. } => "burn_critical",
+            HealthEvent::Recovered { .. } => "recovered",
+            HealthEvent::Anomaly { .. } => "anomaly",
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            HealthEvent::BurnWarn {
+                class,
+                fast_burn,
+                slow_burn,
+            }
+            | HealthEvent::BurnCritical {
+                class,
+                fast_burn,
+                slow_burn,
+            } => Json::obj(vec![
+                ("kind", Json::Str(self.label().to_string())),
+                ("class", Json::Num(*class as f64)),
+                ("fast_burn", Json::Num(*fast_burn)),
+                ("slow_burn", Json::Num(*slow_burn)),
+            ]),
+            HealthEvent::Recovered { class } => Json::obj(vec![
+                ("kind", Json::Str(self.label().to_string())),
+                ("class", Json::Num(*class as f64)),
+            ]),
+            HealthEvent::Anomaly {
+                replica,
+                signature,
+                z,
+            } => Json::obj(vec![
+                ("kind", Json::Str(self.label().to_string())),
+                ("replica", Json::Num(*replica as f64)),
+                ("signature", Json::Str(signature.label().to_string())),
+                ("z", Json::Num(*z)),
+            ]),
+        }
+    }
+}
+
+/// Which per-replica pathology an [`HealthEvent::Anomaly`] names.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AnomalySignature {
+    /// Rung switches faster than `flap_threshold` per fast window: the
+    /// ladder controller is oscillating.
+    RungFlap,
+    /// `hbm_pressure` z-spike: the expert store is thrashing.
+    ResidencyThrash,
+    /// A replica sits idle while a peer's queue is deep: routing or
+    /// stealing has starved it.
+    StarvedReplica,
+    /// Step-time EWMA z-spike.
+    StepTimeSpike,
+    /// Queue-depth z-spike.
+    QueueSpike,
+}
+
+impl AnomalySignature {
+    pub fn label(&self) -> &'static str {
+        match self {
+            AnomalySignature::RungFlap => "rung_flap",
+            AnomalySignature::ResidencyThrash => "residency_thrash",
+            AnomalySignature::StarvedReplica => "starved_replica",
+            AnomalySignature::StepTimeSpike => "step_time_spike",
+            AnomalySignature::QueueSpike => "queue_spike",
+        }
+    }
+}
+
+/// A health event with the virtual-time instant it was raised at.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TimedHealthEvent {
+    pub t_s: f64,
+    pub event: HealthEvent,
+}
+
+impl TimedHealthEvent {
+    pub fn to_json(&self) -> Json {
+        let mut j = self.event.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("t_s".to_string(), Json::Num(self.t_s));
+        }
+        j
+    }
+}
+
+/// Per-class outcome counts of one window bucket (and of the run
+/// lifetime): mergeable by field-wise addition.
+#[derive(Clone, Debug, Default)]
+struct ClassCounts {
+    /// Outcomes: completions + rejections (the burn denominator).
+    n: u64,
+    /// SLO violations: violated completions + rejections.
+    violations: u64,
+    completed: u64,
+    ttft_violations: u64,
+    tpot_violations: u64,
+    shed: u64,
+    rejected: u64,
+}
+
+/// One closed-or-open aggregation bucket.
+#[derive(Debug)]
+struct Bucket {
+    start_s: f64,
+    per_class: Vec<ClassCounts>,
+    steals: u64,
+    ttft: Histogram,
+    tpot: Histogram,
+}
+
+impl Bucket {
+    fn new(start_s: f64, n_classes: usize) -> Self {
+        Bucket {
+            start_s,
+            per_class: vec![ClassCounts::default(); n_classes],
+            steals: 0,
+            ttft: Histogram::new(&LATENCY_BUCKETS_S),
+            tpot: Histogram::new(&LATENCY_BUCKETS_S),
+        }
+    }
+}
+
+/// EWMA mean/variance tracker with a z-score probe. The standard
+/// deviation is floored at 1% of |mean| so a spike out of a perfectly
+/// flat series still registers instead of dividing by ~0.
+#[derive(Clone, Debug)]
+struct Ewma {
+    alpha: f64,
+    warmup: u64,
+    mean: f64,
+    var: f64,
+    n: u64,
+}
+
+impl Ewma {
+    fn new(alpha: f64, warmup: u64) -> Self {
+        Ewma {
+            alpha,
+            warmup,
+            mean: 0.0,
+            var: 0.0,
+            n: 0,
+        }
+    }
+
+    /// z-score of `x` against the pre-update statistics (`None` until
+    /// warmed up), then fold `x` in.
+    fn observe(&mut self, x: f64) -> Option<f64> {
+        let z = if self.n >= self.warmup {
+            let sd = self.var.sqrt().max(1e-9 + 0.01 * self.mean.abs());
+            Some((x - self.mean) / sd)
+        } else {
+            None
+        };
+        if self.n == 0 {
+            self.mean = x;
+        } else {
+            let d = x - self.mean;
+            self.mean += self.alpha * d;
+            self.var = (1.0 - self.alpha) * (self.var + self.alpha * d * d);
+        }
+        self.n += 1;
+        z
+    }
+}
+
+/// Per-replica anomaly state.
+#[derive(Debug)]
+struct ReplicaDetector {
+    step: Ewma,
+    queue: Ewma,
+    hbm: Ewma,
+    /// Rung-switch instants within the last fast window.
+    switches: VecDeque<f64>,
+    /// Last flag instant per signature (cooldown bookkeeping),
+    /// indexed by the order of [`AnomalySignature`] variants.
+    last_flag_s: [f64; 5],
+}
+
+impl ReplicaDetector {
+    fn new(cfg: &HealthConfig) -> Self {
+        ReplicaDetector {
+            step: Ewma::new(cfg.ewma_alpha, cfg.anomaly_warmup),
+            queue: Ewma::new(cfg.ewma_alpha, cfg.anomaly_warmup),
+            hbm: Ewma::new(cfg.ewma_alpha, cfg.anomaly_warmup),
+            switches: VecDeque::new(),
+            last_flag_s: [f64::NEG_INFINITY; 5],
+        }
+    }
+
+    fn cooldown_ok(&mut self, sig: AnomalySignature, now: f64, window_s: f64) -> bool {
+        let i = sig as usize;
+        if now - self.last_flag_s[i] >= window_s {
+            self.last_flag_s[i] = now;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Per-class burn state machine level.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum BurnLevel {
+    Healthy,
+    Warn,
+    Critical,
+}
+
+/// Run-lifetime per-class totals for the final report.
+#[derive(Clone, Debug, Default)]
+struct ClassTotals {
+    counts: ClassCounts,
+    peak_fast_burn: f64,
+}
+
+/// Final per-class health summary.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClassHealth {
+    pub class: usize,
+    /// Outcomes (completions + rejections).
+    pub n: u64,
+    /// SLO violations among them.
+    pub violations: u64,
+    pub shed: u64,
+    pub rejected: u64,
+    /// `1 − violations/n` (1.0 with no outcomes).
+    pub attainment: f64,
+    /// Highest fast-window burn the class ever reached.
+    pub peak_fast_burn: f64,
+}
+
+/// The digest section of [`HealthOutcome`]: what `TransformReport`
+/// embeds and `figures --exp health` plots.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HealthReport {
+    pub makespan_s: f64,
+    pub classes: Vec<ClassHealth>,
+    /// Highest fast-window burn any class reached.
+    pub peak_fast_burn: f64,
+    pub warn_events: usize,
+    pub critical_events: usize,
+    pub recovered_events: usize,
+    pub anomaly_events: usize,
+    /// Cross-replica steals observed.
+    pub steals: u64,
+    /// p95 TTFT estimated from the pooled window histograms (the cheap
+    /// `Histogram::quantile` path, NOT the exact report percentile).
+    pub ttft_p95_est_s: f64,
+    /// `(t_s, worst fast burn)` timeline, throttled to ~bucket_s/10
+    /// resolution (the burn-rate figure input).
+    pub burn_series: Vec<(f64, f64)>,
+}
+
+impl HealthReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("makespan_s", Json::Num(self.makespan_s)),
+            ("peak_fast_burn", Json::Num(self.peak_fast_burn)),
+            ("warn_events", Json::Num(self.warn_events as f64)),
+            ("critical_events", Json::Num(self.critical_events as f64)),
+            ("recovered_events", Json::Num(self.recovered_events as f64)),
+            ("anomaly_events", Json::Num(self.anomaly_events as f64)),
+            ("steals", Json::Num(self.steals as f64)),
+            ("ttft_p95_est_s", Json::Num(self.ttft_p95_est_s)),
+            (
+                "classes",
+                Json::Arr(
+                    self.classes
+                        .iter()
+                        .map(|c| {
+                            Json::obj(vec![
+                                ("class", Json::Num(c.class as f64)),
+                                ("n", Json::Num(c.n as f64)),
+                                ("violations", Json::Num(c.violations as f64)),
+                                ("shed", Json::Num(c.shed as f64)),
+                                ("rejected", Json::Num(c.rejected as f64)),
+                                ("attainment", Json::Num(c.attainment)),
+                                ("peak_fast_burn", Json::Num(c.peak_fast_burn)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "burn_series",
+                Json::Arr(
+                    self.burn_series
+                        .iter()
+                        .map(|&(t, b)| Json::Arr(vec![Json::Num(t), Json::Num(b)]))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Everything the engine hands back when a run finishes: the digest,
+/// the raised events, and any frozen debug bundles (the cluster stays
+/// I/O-free; the bench layer writes them to disk).
+#[derive(Clone, Debug)]
+pub struct HealthOutcome {
+    pub report: HealthReport,
+    pub events: Vec<TimedHealthEvent>,
+    pub bundles: Vec<Json>,
+}
+
+/// The streaming health engine. Owned by the cluster when `--health`
+/// (or `--pressure burn`) is on; all hooks are O(1) amortized, burn
+/// evaluation is O(buckets × classes) per distinct instant.
+#[derive(Debug)]
+pub struct HealthEngine {
+    cfg: HealthConfig,
+    n_classes: usize,
+    run_config: Json,
+    open: Bucket,
+    closed: VecDeque<Bucket>,
+    levels: Vec<BurnLevel>,
+    totals: Vec<ClassTotals>,
+    steals_total: u64,
+    /// Worst per-class fast burn at the last evaluation (`None` until
+    /// any class clears `min_samples`).
+    worst_fast_burn: Option<f64>,
+    burn_series: Vec<(f64, f64)>,
+    events: Vec<TimedHealthEvent>,
+    recorder: FlightRecorder,
+    bundles: Vec<Json>,
+    last_bundle_s: f64,
+    last_observed_key: Option<u64>,
+    last_snapshot: Option<ClusterSnapshot>,
+    detectors: Vec<ReplicaDetector>,
+    run_ttft: Histogram,
+}
+
+impl HealthEngine {
+    /// `run_config` is embedded verbatim in every debug bundle (the
+    /// "active config" a bundle reader needs to reproduce the run).
+    pub fn new(cfg: HealthConfig, n_classes: usize, run_config: Json) -> Self {
+        let n_classes = n_classes.max(1);
+        HealthEngine {
+            open: Bucket::new(0.0, n_classes),
+            closed: VecDeque::new(),
+            levels: vec![BurnLevel::Healthy; n_classes],
+            totals: vec![ClassTotals::default(); n_classes],
+            steals_total: 0,
+            worst_fast_burn: None,
+            burn_series: Vec::new(),
+            events: Vec::new(),
+            recorder: FlightRecorder::new(cfg.recorder_cap, cfg.recorder_horizon_s),
+            bundles: Vec::new(),
+            last_bundle_s: f64::NEG_INFINITY,
+            last_observed_key: None,
+            last_snapshot: None,
+            detectors: Vec::new(),
+            run_ttft: Histogram::new(&LATENCY_BUCKETS_S),
+            n_classes,
+            run_config,
+            cfg,
+        }
+    }
+
+    /// The ladder/shedder pressure reading: a slack-like health
+    /// fraction, 1.0 when burn is zero, 0.0 at the critical threshold,
+    /// negative beyond it. `None` (treated as +∞ slack by consumers)
+    /// until any class has enough window samples to trust.
+    pub fn burn_frac(&self) -> Option<f64> {
+        self.worst_fast_burn
+            .map(|b| 1.0 - b / self.cfg.critical_burn)
+    }
+
+    /// Events raised so far (exposed for `bench-serve --health`
+    /// progress reporting and tests).
+    pub fn events(&self) -> &[TimedHealthEvent] {
+        &self.events
+    }
+
+    /// Bundles frozen so far.
+    pub fn n_bundles(&self) -> usize {
+        self.bundles.len()
+    }
+
+    // ---------------- event-loop hooks ----------------
+
+    /// Observe the cluster at an event-loop instant. Deduplicated per
+    /// distinct integer-ns instant, so revisits within one dispatch
+    /// round are free; runs the anomaly detector and the burn state
+    /// machine.
+    pub fn observe(&mut self, snap: &ClusterSnapshot) {
+        let key = time_key(snap.now_s);
+        if self.last_observed_key == Some(key) {
+            return;
+        }
+        self.last_observed_key = Some(key);
+        let now = snap.now_s;
+        self.roll(now);
+        self.detect_anomalies(snap);
+        self.last_snapshot = Some(snap.clone());
+        self.evaluate(now);
+    }
+
+    /// An admitted request completed; `slo` is its class's target.
+    pub fn on_completion(&mut self, c: &CompletedRequest, slo: SloTarget, now: f64) {
+        self.roll(now);
+        let tpot = c.tpot_s();
+        let ttft_viol = c.ttft_s > slo.ttft_s;
+        let tpot_viol = tpot > slo.tpot_s;
+        let class = c.class.min(self.n_classes - 1);
+        for counts in [
+            &mut self.open.per_class[class],
+            &mut self.totals[class].counts,
+        ] {
+            counts.n += 1;
+            counts.completed += 1;
+            if ttft_viol || tpot_viol {
+                counts.violations += 1;
+            }
+            if ttft_viol {
+                counts.ttft_violations += 1;
+            }
+            if tpot_viol {
+                counts.tpot_violations += 1;
+            }
+        }
+        self.open.ttft.observe(c.ttft_s);
+        self.open.tpot.observe(tpot);
+        self.run_ttft.observe(c.ttft_s);
+    }
+
+    /// Admission control rejected a request (hard cap, or the shedder —
+    /// the event loop pairs every shed with a reject, so this is the
+    /// one denominator hook).
+    pub fn on_reject(&mut self, class: usize, now: f64) {
+        self.roll(now);
+        let class = class.min(self.n_classes - 1);
+        for counts in [
+            &mut self.open.per_class[class],
+            &mut self.totals[class].counts,
+        ] {
+            counts.n += 1;
+            counts.violations += 1;
+            counts.rejected += 1;
+        }
+        self.recorder.record(
+            now,
+            "reject",
+            Json::obj(vec![("class", Json::Num(class as f64))]),
+        );
+    }
+
+    /// The shedder dropped a request ahead of the hard cap (attribution
+    /// only; the paired [`Self::on_reject`] carries the burn counts).
+    pub fn on_shed(&mut self, class: usize, reason: &'static str, now: f64) {
+        self.roll(now);
+        let class = class.min(self.n_classes - 1);
+        self.open.per_class[class].shed += 1;
+        self.totals[class].counts.shed += 1;
+        self.recorder.record(
+            now,
+            "shed",
+            Json::obj(vec![
+                ("class", Json::Num(class as f64)),
+                ("reason", Json::Str(reason.to_string())),
+            ]),
+        );
+    }
+
+    /// Work stealing migrated a queued request.
+    pub fn on_steal(&mut self, victim: usize, thief: usize, now: f64) {
+        self.roll(now);
+        self.open.steals += 1;
+        self.steals_total += 1;
+        self.recorder.record(
+            now,
+            "steal",
+            Json::obj(vec![
+                ("victim", Json::Num(victim as f64)),
+                ("thief", Json::Num(thief as f64)),
+            ]),
+        );
+    }
+
+    /// The ladder controller switched a replica's rung.
+    pub fn on_rung_switch(&mut self, replica: usize, rung: usize, now: f64) {
+        self.roll(now);
+        self.recorder.record(
+            now,
+            "rung_switch",
+            Json::obj(vec![
+                ("replica", Json::Num(replica as f64)),
+                ("rung", Json::Num(rung as f64)),
+            ]),
+        );
+        self.ensure_detectors(replica + 1);
+        let d = &mut self.detectors[replica];
+        d.switches.push_back(now);
+        let cutoff = now - self.cfg.fast_window_s;
+        while d.switches.front().is_some_and(|&t| t < cutoff) {
+            d.switches.pop_front();
+        }
+        if d.switches.len() >= self.cfg.flap_threshold
+            && d.cooldown_ok(AnomalySignature::RungFlap, now, self.cfg.fast_window_s)
+        {
+            self.raise(
+                now,
+                HealthEvent::Anomaly {
+                    replica,
+                    signature: AnomalySignature::RungFlap,
+                    z: 0.0,
+                },
+            );
+        }
+    }
+
+    /// Drain the engine into its outcome at run end.
+    pub fn finish(mut self, makespan_s: f64) -> HealthOutcome {
+        // close the books at the final instant so the series ends there
+        self.roll(makespan_s);
+        self.evaluate(makespan_s);
+        let classes = self
+            .totals
+            .iter()
+            .enumerate()
+            .map(|(class, t)| ClassHealth {
+                class,
+                n: t.counts.n,
+                violations: t.counts.violations,
+                shed: t.counts.shed,
+                rejected: t.counts.rejected,
+                attainment: if t.counts.n > 0 {
+                    1.0 - t.counts.violations as f64 / t.counts.n as f64
+                } else {
+                    1.0
+                },
+                peak_fast_burn: t.peak_fast_burn,
+            })
+            .collect::<Vec<_>>();
+        let count = |l: &str| self.events.iter().filter(|e| e.event.label() == l).count();
+        let report = HealthReport {
+            makespan_s,
+            peak_fast_burn: classes.iter().fold(0.0f64, |a, c| a.max(c.peak_fast_burn)),
+            warn_events: count("burn_warn"),
+            critical_events: count("burn_critical"),
+            recovered_events: count("recovered"),
+            anomaly_events: count("anomaly"),
+            steals: self.steals_total,
+            ttft_p95_est_s: self.run_ttft.quantile(95.0),
+            burn_series: self.burn_series,
+            classes,
+        };
+        HealthOutcome {
+            report,
+            events: self.events,
+            bundles: self.bundles,
+        }
+    }
+
+    // ---------------- window machinery ----------------
+
+    /// Advance the open bucket so `now` falls inside it, closing full
+    /// buckets into the ring.
+    fn roll(&mut self, now: f64) {
+        while now >= self.open.start_s + self.cfg.bucket_s {
+            let next = self.open.start_s + self.cfg.bucket_s;
+            let closed = std::mem::replace(&mut self.open, Bucket::new(next, self.n_classes));
+            self.closed.push_back(closed);
+            if self.closed.len() > self.cfg.n_buckets {
+                self.closed.pop_front();
+            }
+        }
+    }
+
+    /// Merge per-class `(n, violations)` over every bucket overlapping
+    /// the last `window_s` seconds.
+    fn window_counts(&self, now: f64, window_s: f64) -> Vec<(u64, u64)> {
+        let cutoff = now - window_s;
+        let mut per = vec![(0u64, 0u64); self.n_classes];
+        let buckets = self
+            .closed
+            .iter()
+            .filter(|b| b.start_s + self.cfg.bucket_s > cutoff)
+            .chain(std::iter::once(&self.open));
+        for b in buckets {
+            for (class, c) in b.per_class.iter().enumerate() {
+                per[class].0 += c.n;
+                per[class].1 += c.violations;
+            }
+        }
+        per
+    }
+
+    /// Burn rate from a `(n, violations)` window sum; `None` below the
+    /// sample floor.
+    fn burn_of(&self, n: u64, violations: u64) -> Option<f64> {
+        (n >= self.cfg.min_samples)
+            .then(|| (violations as f64 / n as f64) / self.cfg.budget_frac)
+    }
+
+    /// Run the per-class multi-window state machine and update the
+    /// pressure reading + burn timeline.
+    fn evaluate(&mut self, now: f64) {
+        let fast = self.window_counts(now, self.cfg.fast_window_s);
+        let slow = self.window_counts(now, self.cfg.slow_window_s);
+        let mut worst: Option<f64> = None;
+        let mut transitions: Vec<(usize, BurnLevel, f64, f64)> = Vec::new();
+        for class in 0..self.n_classes {
+            let fb = self.burn_of(fast[class].0, fast[class].1);
+            let sb = self.burn_of(slow[class].0, slow[class].1);
+            if let Some(f) = fb {
+                worst = Some(worst.map_or(f, |w: f64| w.max(f)));
+                if f > self.totals[class].peak_fast_burn {
+                    self.totals[class].peak_fast_burn = f;
+                }
+            }
+            let (Some(f), Some(s)) = (fb, sb) else {
+                // not enough evidence in one of the windows: hold state
+                continue;
+            };
+            let level = if f >= self.cfg.critical_burn && s >= self.cfg.critical_burn {
+                BurnLevel::Critical
+            } else if f >= self.cfg.warn_burn && s >= self.cfg.warn_burn {
+                BurnLevel::Warn
+            } else {
+                BurnLevel::Healthy
+            };
+            if level != self.levels[class] {
+                transitions.push((class, level, f, s));
+            }
+        }
+        self.worst_fast_burn = worst;
+        for (class, level, f, s) in transitions {
+            let prev = self.levels[class];
+            self.levels[class] = level;
+            match level {
+                BurnLevel::Critical => {
+                    self.raise(
+                        now,
+                        HealthEvent::BurnCritical {
+                            class,
+                            fast_burn: f,
+                            slow_burn: s,
+                        },
+                    );
+                    self.dump_bundle(now, class, f, s);
+                }
+                BurnLevel::Warn => {
+                    // only rising edges announce; critical → warn stays
+                    // silent until full recovery
+                    if prev == BurnLevel::Healthy {
+                        self.raise(
+                            now,
+                            HealthEvent::BurnWarn {
+                                class,
+                                fast_burn: f,
+                                slow_burn: s,
+                            },
+                        );
+                    }
+                }
+                BurnLevel::Healthy => self.raise(now, HealthEvent::Recovered { class }),
+            }
+        }
+        // throttled burn timeline for `figures --exp health`
+        if let Some(w) = worst {
+            let due = self
+                .burn_series
+                .last()
+                .is_none_or(|&(t, b)| now - t >= self.cfg.bucket_s / 10.0 || b != w);
+            if due {
+                self.burn_series.push((now, w));
+            }
+        }
+    }
+
+    fn raise(&mut self, now: f64, event: HealthEvent) {
+        self.recorder.record(now, "health", event.to_json());
+        self.events.push(TimedHealthEvent { t_s: now, event });
+    }
+
+    // ---------------- anomaly detection ----------------
+
+    fn ensure_detectors(&mut self, n: usize) {
+        while self.detectors.len() < n {
+            self.detectors.push(ReplicaDetector::new(&self.cfg));
+        }
+    }
+
+    fn detect_anomalies(&mut self, snap: &ClusterSnapshot) {
+        let now = snap.now_s;
+        self.ensure_detectors(snap.replicas.len());
+        let deepest = snap.replicas.iter().map(|t| t.queue_len).max().unwrap_or(0);
+        let mut flagged: Vec<(usize, AnomalySignature, f64)> = Vec::new();
+        for t in &snap.replicas {
+            let d = &mut self.detectors[t.replica.min(self.detectors.len() - 1)];
+            let zq = d.queue.observe(t.queue_len as f64);
+            let zs = if t.step_ewma_s > 0.0 {
+                d.step.observe(t.step_ewma_s)
+            } else {
+                None
+            };
+            let zh = t.hbm_pressure.and_then(|p| d.hbm.observe(p));
+            let window = self.cfg.fast_window_s;
+            if let Some(z) = zq {
+                if z.abs() > self.cfg.z_threshold
+                    && d.cooldown_ok(AnomalySignature::QueueSpike, now, window)
+                {
+                    flagged.push((t.replica, AnomalySignature::QueueSpike, z));
+                }
+            }
+            if let Some(z) = zs {
+                if z.abs() > self.cfg.z_threshold
+                    && d.cooldown_ok(AnomalySignature::StepTimeSpike, now, window)
+                {
+                    flagged.push((t.replica, AnomalySignature::StepTimeSpike, z));
+                }
+            }
+            if let Some(z) = zh {
+                if z.abs() > self.cfg.z_threshold
+                    && d.cooldown_ok(AnomalySignature::ResidencyThrash, now, window)
+                {
+                    flagged.push((t.replica, AnomalySignature::ResidencyThrash, z));
+                }
+            }
+            // starved: accepting and empty while a peer's queue is deep
+            if t.accepting
+                && t.queue_len == 0
+                && t.active == 0
+                && deepest >= 4
+                && d.cooldown_ok(AnomalySignature::StarvedReplica, now, window)
+            {
+                flagged.push((t.replica, AnomalySignature::StarvedReplica, 0.0));
+            }
+        }
+        for (replica, signature, z) in flagged {
+            self.raise(
+                now,
+                HealthEvent::Anomaly {
+                    replica,
+                    signature,
+                    z,
+                },
+            );
+        }
+    }
+
+    // ---------------- debug bundles ----------------
+
+    /// Health digest embedded in bundles (a lighter sibling of the
+    /// final [`HealthReport`], available mid-run).
+    fn digest_json(&self) -> Json {
+        let peak = self
+            .totals
+            .iter()
+            .fold(0.0f64, |a, t| a.max(t.peak_fast_burn));
+        Json::obj(vec![
+            ("peak_fast_burn", Json::Num(peak)),
+            (
+                "worst_fast_burn",
+                self.worst_fast_burn.map_or(Json::Null, Json::Num),
+            ),
+            (
+                "events",
+                Json::Arr(self.events.iter().map(|e| e.to_json()).collect()),
+            ),
+            (
+                "classes",
+                Json::Arr(
+                    self.totals
+                        .iter()
+                        .enumerate()
+                        .map(|(class, t)| {
+                            Json::obj(vec![
+                                ("class", Json::Num(class as f64)),
+                                ("n", Json::Num(t.counts.n as f64)),
+                                ("violations", Json::Num(t.counts.violations as f64)),
+                                ("shed", Json::Num(t.counts.shed as f64)),
+                                ("rejected", Json::Num(t.counts.rejected as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("steals", Json::Num(self.steals_total as f64)),
+        ])
+    }
+
+    fn dump_bundle(&mut self, now: f64, class: usize, fast_burn: f64, slow_burn: f64) {
+        if self.bundles.len() >= self.cfg.max_bundles
+            || now - self.last_bundle_s < self.cfg.bundle_cooldown_s
+        {
+            return;
+        }
+        self.last_bundle_s = now;
+        let cluster = match &self.last_snapshot {
+            Some(s) => s.to_json(),
+            None => Json::obj(vec![
+                ("now_s", Json::Num(now)),
+                ("replicas", Json::Arr(vec![])),
+            ]),
+        };
+        let bundle = Json::obj(vec![
+            ("format", Json::Str(BUNDLE_FORMAT.to_string())),
+            ("version", Json::Num(BUNDLE_VERSION)),
+            ("t_s", Json::Num(now)),
+            (
+                "trigger",
+                Json::obj(vec![
+                    ("kind", Json::Str("burn_critical".to_string())),
+                    ("class", Json::Num(class as f64)),
+                    ("fast_burn", Json::Num(fast_burn)),
+                    ("slow_burn", Json::Num(slow_burn)),
+                ]),
+            ),
+            ("config", self.run_config.clone()),
+            ("cluster", cluster),
+            ("health", self.digest_json()),
+            ("events", self.recorder.tail_json(now)),
+        ]);
+        self.bundles.push(bundle);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::telemetry::ReplicaTelemetry;
+
+    fn slo(ttft_s: f64, tpot_s: f64) -> SloTarget {
+        SloTarget { ttft_s, tpot_s }
+    }
+
+    fn completion(id: u64, class: usize, ttft_s: f64, finish_s: f64) -> CompletedRequest {
+        CompletedRequest {
+            id,
+            class,
+            arrival_s: (finish_s - ttft_s - 0.1).max(0.0),
+            prompt_len: 64,
+            tokens: 8,
+            ttft_s,
+            e2e_s: ttft_s + 0.07,
+            finish_s,
+            replica: 0,
+        }
+    }
+
+    fn snap_at(now_s: f64) -> ClusterSnapshot {
+        ClusterSnapshot {
+            now_s,
+            replicas: vec![ReplicaTelemetry::idle(0)],
+        }
+    }
+
+    fn engine() -> HealthEngine {
+        HealthEngine::new(
+            HealthConfig::default(),
+            2,
+            Json::obj(vec![("seed", Json::Num(0.0))]),
+        )
+    }
+
+    #[test]
+    fn burn_crosses_critical_and_freezes_a_valid_bundle() {
+        let mut h = engine();
+        // every completion violates a microscopic TTFT SLO → violation
+        // fraction 1.0 → burn = 1.0 / 0.1 = 10 ≥ critical on both
+        // windows once min_samples outcomes landed
+        let bad = slo(1e-6, 1e-6);
+        for i in 0..10u64 {
+            let t = 0.2 + i as f64 * 0.1;
+            h.on_completion(&completion(i, 0, 0.5, t), bad, t);
+            h.observe(&snap_at(t + 1e-3));
+        }
+        assert!(h.burn_frac().unwrap() < 0.0, "burn beyond critical");
+        let critical: Vec<_> = h
+            .events()
+            .iter()
+            .filter(|e| e.event.label() == "burn_critical")
+            .collect();
+        assert_eq!(critical.len(), 1, "one critical transition");
+        assert_eq!(h.n_bundles(), 1, "critical freezes exactly one bundle");
+
+        let out = h.finish(2.0);
+        assert_eq!(out.report.critical_events, 1);
+        assert!(out.report.peak_fast_burn >= 10.0 - 1e-9);
+        assert_eq!(out.report.classes[0].violations, 10);
+        assert!((out.report.classes[0].attainment - 0.0).abs() < 1e-12);
+        // the frozen bundle passes the validator
+        let s = crate::obs::check_bundle(&out.bundles[0]).unwrap();
+        assert_eq!(s.trigger, "burn_critical class 0");
+        assert_eq!(s.n_replicas, 1);
+        // round-trip through text, like `lexi bundle --check` does
+        let doc = crate::util::json::parse(&out.bundles[0].to_string_pretty()).unwrap();
+        crate::obs::check_bundle(&doc).unwrap();
+    }
+
+    #[test]
+    fn healthy_runs_raise_nothing_and_recover_after_a_burst() {
+        let mut h = engine();
+        let easy = slo(10.0, 10.0);
+        for i in 0..20u64 {
+            let t = 0.1 + i as f64 * 0.05;
+            h.on_completion(&completion(i, 0, 0.2, t), easy, t);
+            h.observe(&snap_at(t + 1e-3));
+        }
+        assert!(h.events().is_empty());
+        assert!((h.burn_frac().unwrap() - 1.0).abs() < 1e-9, "zero burn → frac 1");
+
+        // now a violating burst drives it critical...
+        let bad = slo(1e-6, 1e-6);
+        for i in 100..130u64 {
+            let t = 2.0 + (i - 100) as f64 * 0.05;
+            h.on_completion(&completion(i, 0, 0.5, t), bad, t);
+            h.observe(&snap_at(t + 1e-3));
+        }
+        assert!(h.events().iter().any(|e| e.event.label() == "burn_critical"));
+        // ...and a long healthy stretch past the slow window recovers it
+        for i in 200..400u64 {
+            let t = 70.0 + (i - 200) as f64 * 0.5;
+            h.on_completion(&completion(i, 0, 0.2, t), easy, t);
+            h.observe(&snap_at(t + 1e-3));
+        }
+        assert!(h.events().iter().any(|e| e.event.label() == "recovered"));
+        let out = h.finish(170.0);
+        assert!(out.report.recovered_events >= 1);
+        assert!(!out.report.burn_series.is_empty());
+    }
+
+    #[test]
+    fn rejects_count_as_violations() {
+        let mut h = engine();
+        for i in 0..10 {
+            h.on_reject(1, 0.1 + i as f64 * 0.01);
+        }
+        h.observe(&snap_at(0.25));
+        // class 1 burned its whole budget through rejections alone
+        assert!(h.events().iter().any(|e| matches!(
+            e.event,
+            HealthEvent::BurnCritical { class: 1, .. }
+        )));
+        let out = h.finish(1.0);
+        assert_eq!(out.report.classes[1].rejected, 10);
+        assert_eq!(out.report.classes[1].n, 10);
+    }
+
+    #[test]
+    fn rung_flap_anomaly_fires_on_rapid_switching() {
+        let mut h = engine();
+        for i in 0..5 {
+            h.on_rung_switch(0, i % 2, 0.5 + i as f64 * 0.2);
+        }
+        let flaps: Vec<_> = h
+            .events()
+            .iter()
+            .filter(|e| {
+                matches!(
+                    e.event,
+                    HealthEvent::Anomaly {
+                        signature: AnomalySignature::RungFlap,
+                        ..
+                    }
+                )
+            })
+            .collect();
+        assert_eq!(flaps.len(), 1, "one flap flag per fast window");
+        // switches outside the fast window don't accumulate
+        let mut slow = engine();
+        for i in 0..6 {
+            slow.on_rung_switch(0, i % 2, i as f64 * 20.0);
+        }
+        assert!(slow.events().is_empty());
+    }
+
+    #[test]
+    fn residency_thrash_and_queue_spike_flag_on_z_scores() {
+        let mut h = engine();
+        // warm up with flat series, then spike both
+        for i in 0..20 {
+            let mut t = ReplicaTelemetry::idle(0);
+            t.queue_len = 2;
+            t.hbm_pressure = Some(0.05);
+            h.observe(&ClusterSnapshot {
+                now_s: 0.1 + i as f64 * 0.1,
+                replicas: vec![t],
+            });
+        }
+        assert!(h.events().is_empty());
+        let mut t = ReplicaTelemetry::idle(0);
+        t.queue_len = 40;
+        t.hbm_pressure = Some(0.9);
+        h.observe(&ClusterSnapshot {
+            now_s: 2.5,
+            replicas: vec![t],
+        });
+        let sigs: Vec<&'static str> = h
+            .events()
+            .iter()
+            .filter_map(|e| match &e.event {
+                HealthEvent::Anomaly { signature, .. } => Some(signature.label()),
+                _ => None,
+            })
+            .collect();
+        assert!(sigs.contains(&"queue_spike"), "{sigs:?}");
+        assert!(sigs.contains(&"residency_thrash"), "{sigs:?}");
+    }
+
+    #[test]
+    fn starved_replica_flags_idle_next_to_deep_queue() {
+        let mut h = engine();
+        let mut busy = ReplicaTelemetry::idle(0);
+        busy.queue_len = 9;
+        busy.active = 4;
+        let idle = ReplicaTelemetry::idle(1);
+        h.observe(&ClusterSnapshot {
+            now_s: 1.0,
+            replicas: vec![busy, idle],
+        });
+        assert!(h.events().iter().any(|e| matches!(
+            e.event,
+            HealthEvent::Anomaly {
+                replica: 1,
+                signature: AnomalySignature::StarvedReplica,
+                ..
+            }
+        )));
+    }
+
+    #[test]
+    fn observe_dedupes_one_instant() {
+        let mut h = engine();
+        let mut busy = ReplicaTelemetry::idle(0);
+        busy.queue_len = 9;
+        let idle = ReplicaTelemetry::idle(1);
+        let snap = ClusterSnapshot {
+            now_s: 1.0,
+            replicas: vec![busy, idle],
+        };
+        h.observe(&snap);
+        let n = h.events().len();
+        h.observe(&snap); // same instant: no double anomaly / evaluate
+        assert_eq!(h.events().len(), n);
+    }
+
+    #[test]
+    fn bundle_dumps_are_rate_limited() {
+        let mut cfg = HealthConfig::default();
+        cfg.bundle_cooldown_s = 1000.0;
+        let mut h = HealthEngine::new(cfg, 1, Json::obj(vec![]));
+        let bad = slo(1e-6, 1e-6);
+        // drive critical, recover, drive critical again inside cooldown
+        for i in 0..10u64 {
+            let t = 0.1 + i as f64 * 0.01;
+            h.on_completion(&completion(i, 0, 0.5, t), bad, t);
+        }
+        h.observe(&snap_at(0.3));
+        assert_eq!(h.n_bundles(), 1);
+        let easy = slo(10.0, 10.0);
+        for i in 20..220u64 {
+            let t = 70.0 + (i - 20) as f64 * 0.5;
+            h.on_completion(&completion(i, 0, 0.2, t), easy, t);
+            h.observe(&snap_at(t + 1e-3));
+        }
+        for i in 300..320u64 {
+            let t = 200.0 + (i - 300) as f64 * 0.01;
+            h.on_completion(&completion(i, 0, 0.5, t), bad, t);
+        }
+        h.observe(&snap_at(201.0));
+        // second critical fired but the cooldown suppressed its bundle
+        assert!(
+            h.events()
+                .iter()
+                .filter(|e| e.event.label() == "burn_critical")
+                .count()
+                >= 2
+        );
+        assert_eq!(h.n_bundles(), 1);
+    }
+
+    #[test]
+    fn report_json_carries_series_and_classes() {
+        let mut h = engine();
+        let easy = slo(10.0, 10.0);
+        for i in 0..10u64 {
+            let t = 0.1 + i as f64 * 0.1;
+            h.on_completion(&completion(i, 0, 0.2, t), easy, t);
+            h.observe(&snap_at(t + 1e-3));
+        }
+        let out = h.finish(1.5);
+        let j = out.report.to_json();
+        assert_eq!(j.get("classes").unwrap().as_arr().unwrap().len(), 2);
+        assert!(j.get("burn_series").unwrap().as_arr().unwrap().len() >= 1);
+        assert_eq!(j.get("critical_events").unwrap().as_usize().unwrap(), 0);
+        assert!(j.get("ttft_p95_est_s").unwrap().as_f64().unwrap() > 0.0);
+    }
+}

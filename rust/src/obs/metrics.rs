@@ -123,6 +123,37 @@ impl Histogram {
         }
         out
     }
+
+    /// Estimated percentile (`p` in [0, 100]) by linear interpolation
+    /// over the cumulative buckets — the Prometheus
+    /// `histogram_quantile` rule. Exactness is bounded by the bucket
+    /// grid: the answer lands inside the right bucket, interpolated by
+    /// rank within it. Observations in the `+Inf` overflow bucket clamp
+    /// to the last finite bound; an empty histogram reports 0.
+    pub fn quantile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (p.clamp(0.0, 100.0) / 100.0) * self.count as f64;
+        let mut prev_le = 0.0;
+        let mut prev_acc = 0u64;
+        for (le, acc) in self.cumulative() {
+            if (acc as f64) >= target {
+                if le.is_infinite() {
+                    return prev_le;
+                }
+                let in_bucket = (acc - prev_acc) as f64;
+                if in_bucket == 0.0 {
+                    return le;
+                }
+                let frac = (target - prev_acc as f64) / in_bucket;
+                return prev_le + (le - prev_le) * frac.clamp(0.0, 1.0);
+            }
+            prev_le = le;
+            prev_acc = acc;
+        }
+        prev_le
+    }
 }
 
 /// A metric identity: name plus ordered label pairs.
@@ -263,6 +294,10 @@ impl MetricsRegistry {
         m.help("lexi_steals_total", "queued requests migrated by work stealing");
         m.help("lexi_rung_switches_total", "ladder rung switches per replica");
         m.help("lexi_trace_events_dropped", "events lost to the trace ring cap");
+        m.help(
+            "lexi_trace_events_dropped_total",
+            "events lost to the trace ring cap (counter twin: alertable, so truncated traces can't masquerade as complete)",
+        );
         m.help("lexi_ttft_seconds", "time to first token per class");
         m.help("lexi_tpot_seconds", "time per output token per class");
         m.help("lexi_queue_wait_seconds", "EDF queue wait per class");
@@ -272,6 +307,7 @@ impl MetricsRegistry {
         m.help("lexi_scale_events_total", "autoscaler actions per kind");
         m.help("lexi_replicas_live", "replicas accepting work at run end");
         m.set_gauge("lexi_trace_events_dropped", &[], log.dropped as f64);
+        m.inc("lexi_trace_events_dropped_total", &[], log.dropped);
         let (mut scale_ups, mut drains) = (0u64, 0u64);
         for e in &log.events {
             match &e.kind {
@@ -361,6 +397,35 @@ impl MetricsRegistry {
             );
         }
         m
+    }
+
+    /// Fold a finished run's SLO health outcome into the registry:
+    /// per-class peak fast-window burn as `lexi_slo_burn_rate` gauges
+    /// and every raised event as a `lexi_health_events_total` counter
+    /// keyed by kind.
+    pub fn record_health(&mut self, h: &crate::obs::health::HealthOutcome) {
+        self.help(
+            "lexi_slo_burn_rate",
+            "peak fast-window error-budget burn rate per SLO class",
+        );
+        self.help(
+            "lexi_health_events_total",
+            "health-engine events per kind (burn_warn | burn_critical | recovered | anomaly)",
+        );
+        for c in &h.report.classes {
+            self.set_gauge(
+                "lexi_slo_burn_rate",
+                &[("class", c.class.to_string())],
+                c.peak_fast_burn,
+            );
+        }
+        for e in &h.events {
+            self.inc(
+                "lexi_health_events_total",
+                &[("kind", e.event.label().to_string())],
+                1,
+            );
+        }
     }
 }
 
@@ -458,6 +523,134 @@ mod tests {
         assert_eq!(h.cumulative(), vec![(0.1, 1), (1.0, 3), (f64::INFINITY, 4)]);
         assert_eq!(h.count(), 4);
         assert!((h.sum() - 6.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_quantile_interpolates_and_tracks_exact_quantiles() {
+        // empty and degenerate cases
+        assert_eq!(Histogram::new(&LATENCY_BUCKETS_S).quantile(50.0), 0.0);
+        let mut h = Histogram::new(&[1.0, 2.0]);
+        h.observe(10.0); // overflow bucket only
+        assert_eq!(h.quantile(50.0), 2.0, "overflow clamps to last bound");
+
+        // uniform fill of one bucket: the median interpolates mid-bucket
+        let mut h = Histogram::new(&[1.0, 2.0]);
+        for _ in 0..4 {
+            h.observe(1.5);
+        }
+        assert!((h.quantile(50.0) - 1.5).abs() < 0.51);
+
+        // against the exact estimator: the bucket-grid estimate must
+        // land within one bucket of the true percentile
+        let samples: Vec<f64> = (0..200).map(|i| 0.002 + 0.004 * (i % 50) as f64).collect();
+        let mut h = Histogram::new(&LATENCY_BUCKETS_S);
+        for &s in &samples {
+            h.observe(s);
+        }
+        let exact = Quantiles::from_samples(samples.iter().copied());
+        for p in [10.0, 50.0, 90.0, 95.0, 99.0] {
+            let e = exact.q(p);
+            let est = h.quantile(p);
+            // the true value's bucket bounds the estimate
+            let hi = LATENCY_BUCKETS_S
+                .iter()
+                .copied()
+                .find(|&b| e <= b)
+                .unwrap_or(f64::INFINITY);
+            let lo = LATENCY_BUCKETS_S
+                .iter()
+                .copied()
+                .rev()
+                .find(|&b| b < e)
+                .unwrap_or(0.0);
+            assert!(
+                est >= lo - 1e-12 && est <= hi + 1e-12,
+                "p{p}: estimate {est} outside bucket [{lo}, {hi}] of exact {e}"
+            );
+        }
+        // quantiles are monotone in p
+        assert!(h.quantile(10.0) <= h.quantile(50.0));
+        assert!(h.quantile(50.0) <= h.quantile(99.0));
+    }
+
+    #[test]
+    fn dropped_events_export_a_counter_twin() {
+        // a 2-cap ring fed 4 events drops 2
+        let mut t = crate::obs::Tracer::new(2);
+        for i in 0..4 {
+            t.record(i as f64, EventKind::Arrival { id: i, class: 0 });
+        }
+        let log = t.finish();
+        assert_eq!(log.dropped, 2);
+        let m = MetricsRegistry::from_run(&log, &[]);
+        assert_eq!(m.counter_total("lexi_trace_events_dropped_total"), 2);
+        let text = m.prometheus_text();
+        assert!(text.contains("# TYPE lexi_trace_events_dropped_total counter"));
+        // a clean run exports the counter at zero
+        let mut t = crate::obs::Tracer::new(8);
+        t.record(0.0, EventKind::Arrival { id: 0, class: 0 });
+        let m = MetricsRegistry::from_run(&t.finish(), &[]);
+        assert_eq!(m.counter_total("lexi_trace_events_dropped_total"), 0);
+    }
+
+    #[test]
+    fn record_health_registers_burn_gauges_and_event_counters() {
+        use crate::obs::health::{
+            ClassHealth, HealthEvent, HealthOutcome, HealthReport, TimedHealthEvent,
+        };
+        let outcome = HealthOutcome {
+            report: HealthReport {
+                makespan_s: 10.0,
+                classes: vec![ClassHealth {
+                    class: 0,
+                    n: 20,
+                    violations: 5,
+                    shed: 1,
+                    rejected: 2,
+                    attainment: 0.75,
+                    peak_fast_burn: 3.5,
+                }],
+                peak_fast_burn: 3.5,
+                warn_events: 1,
+                critical_events: 0,
+                recovered_events: 0,
+                anomaly_events: 1,
+                steals: 0,
+                ttft_p95_est_s: 0.4,
+                burn_series: vec![(1.0, 3.5)],
+            },
+            events: vec![
+                TimedHealthEvent {
+                    t_s: 1.0,
+                    event: HealthEvent::BurnWarn {
+                        class: 0,
+                        fast_burn: 3.5,
+                        slow_burn: 2.2,
+                    },
+                },
+                TimedHealthEvent {
+                    t_s: 2.0,
+                    event: HealthEvent::Anomaly {
+                        replica: 1,
+                        signature: crate::obs::health::AnomalySignature::QueueSpike,
+                        z: 4.2,
+                    },
+                },
+            ],
+            bundles: vec![],
+        };
+        let mut m = MetricsRegistry::new();
+        m.record_health(&outcome);
+        assert_eq!(
+            m.counter("lexi_health_events_total", &[("kind", "burn_warn".to_string())]),
+            1
+        );
+        assert_eq!(
+            m.counter("lexi_health_events_total", &[("kind", "anomaly".to_string())]),
+            1
+        );
+        let text = m.prometheus_text();
+        assert!(text.contains("lexi_slo_burn_rate{class=\"0\"} 3.5"));
     }
 
     #[test]

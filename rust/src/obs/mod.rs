@@ -27,14 +27,31 @@
 //!   the sim's own hot sections (EDF queue ops, snapshot construction,
 //!   routing, telemetry scans), aggregated into the repo-root
 //!   `BENCH_selfprof.json` trajectory.
+//! - [`health`]   — the streaming SLO health engine
+//!   (`bench-serve --health`): sliding virtual-time windows of
+//!   per-class attainment, multi-window error-budget burn rates raised
+//!   as typed [`HealthEvent`]s, an EWMA z-score anomaly detector
+//!   (rung-flap, residency-thrash, starved-replica signatures), and the
+//!   `--pressure burn` feedback signal for the ladder and shedder.
+//! - [`recorder`] — the always-on bounded [`FlightRecorder`] behind the
+//!   health engine; critical events freeze its tail into self-contained
+//!   `debug_bundle_<t>.json` documents validated by `lexi bundle
+//!   --check` ([`check_bundle`]).
 
 pub mod export;
+pub mod health;
 pub mod metrics;
+pub mod recorder;
 pub mod selfprof;
 pub mod trace;
 
 pub use export::{check_perfetto, check_prometheus, perfetto_json, write_critical_path_csv};
+pub use health::{
+    AnomalySignature, HealthConfig, HealthEngine, HealthEvent, HealthOutcome, HealthReport,
+    TimedHealthEvent,
+};
 pub use metrics::{Histogram, MetricsRegistry, Quantiles};
+pub use recorder::{check_bundle, BundleSummary, FlightRecorder};
 pub use selfprof::SelfProfile;
 pub use trace::{CriticalPath, EventKind, PhaseKind, SharedTracer, TraceEvent, TraceLog, Tracer};
 
@@ -47,13 +64,33 @@ use crate::util::json::Json;
 /// Append `entry` to a `{"entries": [...]}` trajectory file (the
 /// repo-root `BENCH_serve.json` / `BENCH_selfprof.json` format),
 /// creating the file with `bench` metadata when it does not exist yet.
+/// A file that exists but fails to parse is backed up to `<path>.bad`
+/// (with a warning) before the fresh document replaces it, so a corrupt
+/// trajectory never silently loses its history.
 pub fn append_trajectory(path: &Path, bench: &str, entry: Json) -> Result<()> {
     let mut doc = match crate::util::json::parse_file(path) {
         Ok(j) => j,
-        Err(_) => Json::obj(vec![
-            ("bench", Json::Str(bench.to_string())),
-            ("entries", Json::Arr(vec![])),
-        ]),
+        Err(err) => {
+            if path.exists() {
+                let bad = path.with_extension(
+                    path.extension()
+                        .map(|e| format!("{}.bad", e.to_string_lossy()))
+                        .unwrap_or_else(|| "bad".to_string()),
+                );
+                std::fs::rename(path, &bad).with_context(|| {
+                    format!("backing up corrupt trajectory to {}", bad.display())
+                })?;
+                eprintln!(
+                    "warning: trajectory {} is corrupt ({err:#}); backed up to {} and starting fresh",
+                    path.display(),
+                    bad.display()
+                );
+            }
+            Json::obj(vec![
+                ("bench", Json::Str(bench.to_string())),
+                ("entries", Json::Arr(vec![])),
+            ])
+        }
     };
     match &mut doc {
         Json::Obj(map) => {
@@ -89,5 +126,21 @@ mod tests {
         let entries = j.get("entries").unwrap().as_arr().unwrap();
         assert_eq!(entries.len(), 2);
         assert_eq!(entries[1].get("x").unwrap().as_usize().unwrap(), 2);
+    }
+
+    #[test]
+    fn corrupt_trajectory_is_backed_up_not_destroyed() {
+        let dir = std::env::temp_dir().join("lexi_obs_trajectory_bad_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_t.json");
+        std::fs::write(&path, "{ not json").unwrap();
+        append_trajectory(&path, "t", Json::obj(vec![("x", Json::Num(1.0))])).unwrap();
+        // the fresh file holds the new entry...
+        let j = crate::util::json::parse_file(&path).unwrap();
+        assert_eq!(j.get("entries").unwrap().as_arr().unwrap().len(), 1);
+        // ...and the corrupt original survives as .json.bad
+        let bad = dir.join("BENCH_t.json.bad");
+        assert_eq!(std::fs::read_to_string(&bad).unwrap(), "{ not json");
     }
 }

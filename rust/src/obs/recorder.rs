@@ -1,0 +1,303 @@
+//! Flight recorder + debug-bundle format (`lexi bundle --check`).
+//!
+//! The [`FlightRecorder`] is a small always-on ring the
+//! [`HealthEngine`](super::health::HealthEngine) feeds with salient
+//! control-plane happenings (sheds, rejects, steals, rung switches,
+//! anomalies, burn transitions). It is independent of the span
+//! [`Tracer`](super::trace::Tracer): tracing is an opt-in artifact
+//! pipeline, the recorder is the black box that is *always* running
+//! when the health engine is on, bounded by both an entry cap and a
+//! time horizon so it costs O(cap) memory whatever the run length.
+//!
+//! On a critical health event the engine freezes the recorder tail into
+//! a self-contained *debug bundle*: one JSON document holding the last
+//! seconds of recorder entries, the current [`ClusterSnapshot`]
+//! (per-replica telemetry), the health digest, and the active run
+//! config — everything needed to reconstruct "what did the cluster look
+//! like just before it went critical" without the full trace.
+//! [`check_bundle`] validates the format (the `lexi bundle --check`
+//! implementation), mirroring `check_perfetto` / `check_prometheus` in
+//! [`super::export`].
+
+use std::collections::VecDeque;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::util::json::Json;
+
+/// Bundle format marker (`"format"` key of every bundle document).
+pub const BUNDLE_FORMAT: &str = "lexi-debug-bundle";
+/// Current bundle schema version.
+pub const BUNDLE_VERSION: f64 = 1.0;
+
+/// One recorded happening: a timestamped kind tag plus a small JSON
+/// detail payload.
+#[derive(Clone, Debug)]
+pub struct FlightEntry {
+    /// Virtual-time seconds of the happening.
+    pub t_s: f64,
+    /// Static kind tag (`"shed"`, `"steal"`, `"burn"`, `"anomaly"`, ...).
+    pub kind: &'static str,
+    /// Kind-specific payload.
+    pub detail: Json,
+}
+
+/// Bounded ring of [`FlightEntry`]s: oldest entries are dropped (and
+/// counted) at the cap, and [`tail_json`](Self::tail_json) additionally
+/// clips to a time horizon.
+#[derive(Debug)]
+pub struct FlightRecorder {
+    cap: usize,
+    horizon_s: f64,
+    dropped: u64,
+    entries: VecDeque<FlightEntry>,
+}
+
+impl FlightRecorder {
+    pub fn new(cap: usize, horizon_s: f64) -> Self {
+        FlightRecorder {
+            cap: cap.max(1),
+            horizon_s: horizon_s.max(0.0),
+            dropped: 0,
+            entries: VecDeque::new(),
+        }
+    }
+
+    pub fn record(&mut self, t_s: f64, kind: &'static str, detail: Json) {
+        if self.entries.len() == self.cap {
+            self.entries.pop_front();
+            self.dropped += 1;
+        }
+        self.entries.push_back(FlightEntry { t_s, kind, detail });
+    }
+
+    /// Entries currently held (post-drop).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Entries lost to the ring cap.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// The recorder tail as a JSON array: entries within
+    /// `horizon_s` of `now` (all retained entries when the horizon is
+    /// 0), oldest first.
+    pub fn tail_json(&self, now_s: f64) -> Json {
+        let cutoff = if self.horizon_s > 0.0 {
+            now_s - self.horizon_s
+        } else {
+            f64::NEG_INFINITY
+        };
+        Json::Arr(
+            self.entries
+                .iter()
+                .filter(|e| e.t_s >= cutoff)
+                .map(|e| {
+                    Json::obj(vec![
+                        ("t_s", Json::Num(e.t_s)),
+                        ("kind", Json::Str(e.kind.to_string())),
+                        ("detail", e.detail.clone()),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+/// What [`check_bundle`] found in a valid bundle document.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BundleSummary {
+    /// Virtual time the bundle was frozen at.
+    pub t_s: f64,
+    /// Human-readable trigger description (e.g. `burn_critical class 0`).
+    pub trigger: String,
+    /// Recorder entries carried in the bundle tail.
+    pub n_entries: usize,
+    /// Replicas in the embedded cluster snapshot.
+    pub n_replicas: usize,
+    /// Health events the engine had raised by freeze time.
+    pub n_events: usize,
+}
+
+/// Validate a debug-bundle document: format marker, schema version,
+/// and every section a self-contained bundle must carry. Returns a
+/// summary of what the bundle holds (the `lexi bundle --check` output).
+pub fn check_bundle(doc: &Json) -> Result<BundleSummary> {
+    let format = doc
+        .get("format")
+        .context("bundle has no 'format' marker")?
+        .as_str()?;
+    ensure!(
+        format == BUNDLE_FORMAT,
+        "not a debug bundle: format '{format}' (expected '{BUNDLE_FORMAT}')"
+    );
+    let version = doc.get("version")?.as_f64()?;
+    ensure!(
+        version == BUNDLE_VERSION,
+        "unsupported bundle version {version} (expected {BUNDLE_VERSION})"
+    );
+    let t_s = doc.get("t_s")?.as_f64()?;
+    ensure!(t_s.is_finite() && t_s >= 0.0, "bad bundle timestamp {t_s}");
+
+    let trigger = doc.get("trigger").context("bundle has no 'trigger'")?;
+    let kind = trigger.get("kind")?.as_str()?.to_string();
+    let trigger_label = match trigger.opt("class") {
+        Some(c) => format!("{kind} class {}", c.as_usize()?),
+        None => kind,
+    };
+
+    doc.get("config")?
+        .as_obj()
+        .context("bundle 'config' must be an object")?;
+
+    let cluster = doc.get("cluster").context("bundle has no 'cluster' snapshot")?;
+    let replicas = cluster.get("replicas")?.as_arr()?;
+    for (i, r) in replicas.iter().enumerate() {
+        r.get("replica")
+            .and_then(|v| v.as_usize())
+            .with_context(|| format!("cluster replica[{i}] malformed"))?;
+        r.get("queue_len")
+            .and_then(|v| v.as_usize())
+            .with_context(|| format!("cluster replica[{i}] malformed"))?;
+    }
+
+    let health = doc.get("health").context("bundle has no 'health' digest")?;
+    health.get("peak_fast_burn")?.as_f64()?;
+    let n_events = health.get("events")?.as_arr()?.len();
+
+    let entries = doc.get("events")?.as_arr()?;
+    for (i, e) in entries.iter().enumerate() {
+        let et = e
+            .get("t_s")
+            .and_then(|v| v.as_f64())
+            .with_context(|| format!("recorder entry[{i}] malformed"))?;
+        ensure!(
+            et <= t_s + 1e-9,
+            "recorder entry[{i}] is from the future ({et} > {t_s})"
+        );
+        e.get("kind")
+            .and_then(|v| v.as_str())
+            .with_context(|| format!("recorder entry[{i}] has no kind"))?;
+    }
+
+    Ok(BundleSummary {
+        t_s,
+        trigger: trigger_label,
+        n_entries: entries.len(),
+        n_replicas: replicas.len(),
+        n_events,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_caps_and_clips_to_horizon() {
+        let mut r = FlightRecorder::new(3, 10.0);
+        for t in 0..5 {
+            r.record(t as f64, "tick", Json::Num(t as f64));
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.dropped(), 2);
+        // horizon clip: at now=13, only t>=3 survives
+        let tail = r.tail_json(13.0);
+        let arr = tail.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("t_s").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(arr[1].get("kind").unwrap().as_str().unwrap(), "tick");
+    }
+
+    fn minimal_bundle() -> Json {
+        Json::obj(vec![
+            ("format", Json::Str(BUNDLE_FORMAT.to_string())),
+            ("version", Json::Num(BUNDLE_VERSION)),
+            ("t_s", Json::Num(4.5)),
+            (
+                "trigger",
+                Json::obj(vec![
+                    ("kind", Json::Str("burn_critical".to_string())),
+                    ("class", Json::Num(0.0)),
+                ]),
+            ),
+            ("config", Json::obj(vec![("seed", Json::Num(0.0))])),
+            (
+                "cluster",
+                Json::obj(vec![
+                    ("now_s", Json::Num(4.5)),
+                    (
+                        "replicas",
+                        Json::Arr(vec![Json::obj(vec![
+                            ("replica", Json::Num(0.0)),
+                            ("queue_len", Json::Num(7.0)),
+                        ])]),
+                    ),
+                ]),
+            ),
+            (
+                "health",
+                Json::obj(vec![
+                    ("peak_fast_burn", Json::Num(6.0)),
+                    ("events", Json::Arr(vec![])),
+                ]),
+            ),
+            (
+                "events",
+                Json::Arr(vec![Json::obj(vec![
+                    ("t_s", Json::Num(4.0)),
+                    ("kind", Json::Str("shed".to_string())),
+                    ("detail", Json::Null),
+                ])]),
+            ),
+        ])
+    }
+
+    #[test]
+    fn check_bundle_accepts_and_summarizes() {
+        let s = check_bundle(&minimal_bundle()).unwrap();
+        assert_eq!(s.t_s, 4.5);
+        assert_eq!(s.trigger, "burn_critical class 0");
+        assert_eq!(s.n_entries, 1);
+        assert_eq!(s.n_replicas, 1);
+        assert_eq!(s.n_events, 0);
+    }
+
+    #[test]
+    fn check_bundle_rejects_malformed_documents() {
+        // wrong format marker
+        let mut b = minimal_bundle();
+        if let Json::Obj(m) = &mut b {
+            m.insert("format".to_string(), Json::Str("perfetto".to_string()));
+        }
+        assert!(check_bundle(&b).is_err());
+
+        // missing cluster section
+        let mut b = minimal_bundle();
+        if let Json::Obj(m) = &mut b {
+            m.remove("cluster");
+        }
+        assert!(check_bundle(&b).is_err());
+
+        // recorder entry from after the freeze instant
+        let mut b = minimal_bundle();
+        if let Json::Obj(m) = &mut b {
+            m.insert(
+                "events".to_string(),
+                Json::Arr(vec![Json::obj(vec![
+                    ("t_s", Json::Num(99.0)),
+                    ("kind", Json::Str("shed".to_string())),
+                    ("detail", Json::Null),
+                ])]),
+            );
+        }
+        let err = check_bundle(&b).unwrap_err().to_string();
+        assert!(err.contains("future"), "{err}");
+    }
+}

@@ -273,6 +273,11 @@ pub struct LadderController {
     last_instant_s: f64,
     /// Switches already spent at that instant.
     switched_at_instant: usize,
+    /// Latest health-engine burn reading ([`PressureMode::Burn`] only):
+    /// a slack-like fraction (1 = no burn, 0 = critical burn), fed each
+    /// control instant via [`set_burn_frac`](Self::set_burn_frac).
+    /// `None` (no evidence yet) reads as +∞ slack — never degrades.
+    burn_frac: Option<f64>,
 }
 
 impl LadderController {
@@ -281,7 +286,15 @@ impl LadderController {
             policy,
             last_instant_s: f64::NEG_INFINITY,
             switched_at_instant: 0,
+            burn_frac: None,
         }
+    }
+
+    /// Feed the health engine's burn reading
+    /// ([`HealthEngine::burn_frac`](crate::obs::health::HealthEngine::burn_frac))
+    /// ahead of a [`decide`](Self::decide) call under `--pressure burn`.
+    pub fn set_burn_frac(&mut self, frac: Option<f64>) {
+        self.burn_frac = frac;
     }
 
     /// Per-replica pressure reading for the configured signal: queued
@@ -314,6 +327,15 @@ impl LadderController {
                         t.rung,
                         n_rungs,
                         Self::slack_frac_for(t, self.policy.pressure),
+                        now,
+                        t.last_switch_s,
+                    ),
+                    // burn is a cluster-wide signal; every replica reads
+                    // the same fraction through the slack hysteresis
+                    PressureMode::Burn => self.policy.decide_slack(
+                        t.rung,
+                        n_rungs,
+                        self.burn_frac.unwrap_or(f64::INFINITY),
                         now,
                         t.last_switch_s,
                     ),
@@ -365,6 +387,13 @@ impl LadderController {
                     worst > self.policy.slack_upgrade_frac,
                 )
             }
+            PressureMode::Burn => {
+                let f = self.burn_frac.unwrap_or(f64::INFINITY);
+                (
+                    f < self.policy.slack_degrade_frac,
+                    f > self.policy.slack_upgrade_frac,
+                )
+            }
         };
         let mode = self.policy.pressure;
         let mut order: Vec<usize> = (0..views.len()).collect();
@@ -372,7 +401,8 @@ impl LadderController {
             // overload: spread degradation — highest-quality replicas
             // first, most-pressured breaking ties
             match mode {
-                PressureMode::Queue => order.sort_by_key(|&i| {
+                // burn has no per-replica reading: stagger by queue
+                PressureMode::Queue | PressureMode::Burn => order.sort_by_key(|&i| {
                     (views[i].rung, std::cmp::Reverse(views[i].queue_len), i)
                 }),
                 PressureMode::Slack | PressureMode::SlackEwma => order.sort_by(|&a, &b| {
@@ -404,7 +434,7 @@ impl LadderController {
             // drained: most-degraded replicas recover first,
             // least-pressured breaking ties
             match mode {
-                PressureMode::Queue => order.sort_by_key(|&i| {
+                PressureMode::Queue | PressureMode::Burn => order.sort_by_key(|&i| {
                     (std::cmp::Reverse(views[i].rung), views[i].queue_len, i)
                 }),
                 PressureMode::Slack | PressureMode::SlackEwma => order.sort_by(|&a, &b| {
@@ -663,6 +693,41 @@ mod tests {
             ..p
         });
         assert_eq!(cluster.decide(&snap(2.0, vec![t]), 4), vec![1]);
+    }
+
+    #[test]
+    fn burn_pressure_degrades_on_budget_burn_and_holds_without_evidence() {
+        let p = LadderPolicy {
+            min_dwell_s: 0.0,
+            scope: LadderScope::PerReplica,
+            pressure: PressureMode::Burn,
+            slack_degrade_frac: 0.25,
+            slack_upgrade_frac: 0.75,
+            degrade_above: 1_000_000,
+            upgrade_below: 0,
+            ..Default::default()
+        };
+        let mut ctl = LadderController::new(p);
+        // no burn evidence yet: +∞ reading, a degraded replica recovers
+        let t = ctl.decide(&snap(1.0, vec![view(0, 2, 0)]), 4);
+        assert_eq!(t, vec![1]);
+        // burn beyond critical (negative fraction): degrade
+        ctl.set_burn_frac(Some(-0.5));
+        let t = ctl.decide(&snap(2.0, vec![view(0, 0, 0)]), 4);
+        assert_eq!(t, vec![1]);
+        // healthy burn: climb back
+        ctl.set_burn_frac(Some(0.9));
+        let t = ctl.decide(&snap(3.0, vec![view(0, 2, 0)]), 4);
+        assert_eq!(t, vec![1]);
+        // cluster scope consumes the same reading, staggered
+        let mut cluster = LadderController::new(LadderPolicy {
+            scope: LadderScope::Cluster,
+            max_switches_per_instant: 1,
+            ..p
+        });
+        cluster.set_burn_frac(Some(0.1));
+        let t = cluster.decide(&snap(4.0, vec![view(0, 0, 3), view(1, 0, 9)]), 4);
+        assert_eq!(t, vec![0, 1]);
     }
 
     #[test]

@@ -70,7 +70,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::model::ModelSpec;
 use crate::config::server::{
-    BackendKind, EvictKind, ScenarioKind, ServerConfig, TableMode, TierKind,
+    BackendKind, EvictKind, PressureMode, ScenarioKind, ServerConfig, TableMode, TierKind,
 };
 use crate::config::serving::ServingConfig;
 use crate::ctrl::{hardware_for, AutoscalePolicy, Autoscaler, ShedPolicy, Shedder};
@@ -290,6 +290,11 @@ pub fn bench_serve(
     if cfg.trace {
         for (report, res) in &runs {
             write_obs_artifacts(spec, &scenario, &report.transform, res, cfg, out_dir)?;
+        }
+    }
+    if health_enabled(cfg) {
+        for (report, res) in &runs {
+            write_health_artifacts(&report.transform, res, out_dir)?;
         }
     }
     let reports: Vec<TransformReport> = runs.into_iter().map(|(report, _)| report).collect();
@@ -696,7 +701,10 @@ fn write_obs_artifacts(
         log,
         &res.completed,
     )?;
-    let registry = crate::obs::MetricsRegistry::from_run(log, &res.completed);
+    let mut registry = crate::obs::MetricsRegistry::from_run(log, &res.completed);
+    if let Some(h) = &res.health {
+        registry.record_health(h);
+    }
     std::fs::write(
         out_dir.join(format!("metrics_{stem}.prom")),
         registry.prometheus_text(),
@@ -711,6 +719,73 @@ fn write_obs_artifacts(
         log.events.len(),
         log.dropped
     );
+    Ok(())
+}
+
+/// Whether this config runs the SLO health engine: `--health` asks for
+/// pure observation, and `--pressure burn` implies it (the burn signal
+/// has to come from somewhere).
+pub(crate) fn health_enabled(cfg: &ServerConfig) -> bool {
+    cfg.health || cfg.pressure == PressureMode::Burn
+}
+
+/// Fresh health engine for one contender's run, carrying enough run
+/// config for its debug bundles to be self-contained.
+fn health_engine_for(
+    spec: &ModelSpec,
+    label: &str,
+    scenario: &Scenario,
+    cfg: &ServerConfig,
+) -> crate::obs::HealthEngine {
+    use crate::util::json::Json;
+    let run_config = Json::obj(vec![
+        ("model", Json::Str(spec.name.to_string())),
+        ("transform", Json::Str(label.to_string())),
+        ("scenario", Json::Str(scenario.name.to_string())),
+        ("replicas", Json::Num(cfg.replicas as f64)),
+        ("slots", Json::Num(cfg.slots_per_replica as f64)),
+        ("policy", Json::Str(cfg.policy.label().to_string())),
+        ("pressure", Json::Str(cfg.pressure.label().to_string())),
+        ("seed", Json::Num(cfg.seed as f64)),
+    ]);
+    crate::obs::HealthEngine::new(
+        crate::obs::HealthConfig::default(),
+        scenario.profiles.len(),
+        run_config,
+    )
+}
+
+/// Print one transform's health summary and write any frozen debug
+/// bundles as `debug_bundle_<transform>_<ms>.json` (the files `lexi
+/// bundle --check` validates). No-op when the run carried no health
+/// outcome.
+fn write_health_artifacts(label: &str, res: &RunResult, out_dir: &Path) -> Result<()> {
+    let Some(h) = &res.health else {
+        return Ok(());
+    };
+    println!(
+        "health {label}: peak fast burn {:.2}, {} warn / {} critical / {} anomaly events, \
+         {} bundle(s)",
+        h.report.peak_fast_burn,
+        h.report.warn_events,
+        h.report.critical_events,
+        h.report.anomaly_events,
+        h.bundles.len()
+    );
+    if h.bundles.is_empty() {
+        return Ok(());
+    }
+    std::fs::create_dir_all(out_dir)?;
+    for bundle in &h.bundles {
+        let t_ms = bundle
+            .opt("t_s")
+            .and_then(|t| t.as_f64().ok())
+            .map_or(0, |t| (t * 1000.0) as u64);
+        let path = out_dir.join(format!("debug_bundle_{label}_{t_ms}.json"));
+        std::fs::write(&path, bundle.to_string_pretty())
+            .with_context(|| format!("writing {}", path.display()))?;
+        println!("  debug bundle: {}", path.display());
+    }
     Ok(())
 }
 
@@ -920,6 +995,9 @@ pub(crate) fn sim_runs_elastic(
         if cfg.trace {
             cluster = cluster.with_tracing(cfg.trace_ring_cap);
         }
+        if health_enabled(cfg) {
+            cluster = cluster.with_health(health_engine_for(spec, c.label, scenario, cfg));
+        }
         let res = cluster.run(scenario, trace);
         // pool + sort the latency samples once; the report and every
         // extra percentile view (bench-elasticity's interactive TTFT
@@ -1080,6 +1158,9 @@ pub(crate) fn engine_runs<M: ModelBackend>(
         }
         if cfg.trace {
             cluster = cluster.with_tracing(cfg.trace_ring_cap);
+        }
+        if health_enabled(cfg) {
+            cluster = cluster.with_health(health_engine_for(spec, c.label, scenario, cfg));
         }
         let res = cluster.run(scenario, trace);
         let report =

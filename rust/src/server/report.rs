@@ -80,6 +80,11 @@ pub struct TransformReport {
     pub scale_ups: Option<u64>,
     /// Autoscaler drain decisions over the run (same gating).
     pub drains: Option<u64>,
+    /// SLO health-engine report: windowed burn rates, attainment per
+    /// class, health-event counts, and the burn timeline (`None`
+    /// without `--health` / `--pressure burn`, so default artifacts
+    /// keep their historical byte layout).
+    pub health: Option<crate::obs::HealthReport>,
 }
 
 /// Did a completion meet its class SLO?
@@ -288,6 +293,7 @@ impl TransformReport {
                 .scale_events
                 .as_ref()
                 .map(|ev| ev.iter().filter(|&&(_, _, up)| !up).count() as u64),
+            health: res.health.as_ref().map(|h| h.report.clone()),
         }
     }
 
@@ -390,6 +396,9 @@ impl TransformReport {
         }
         if let Some(n) = self.drains {
             pairs.push(("drains", Json::Num(n as f64)));
+        }
+        if let Some(h) = &self.health {
+            pairs.push(("health", h.to_json()));
         }
         Json::obj(pairs)
     }
@@ -864,6 +873,7 @@ mod tests {
             replica_seconds: None,
             scale_events: None,
             trace: None,
+            health: None,
         }
     }
 
@@ -913,6 +923,7 @@ mod tests {
         assert!(dark.residency_aggregate().is_none());
         assert!(dark.shed_by_class.is_none() && dark.replica_seconds.is_none());
         assert!(dark.scale_ups.is_none() && dark.drains.is_none());
+        assert!(dark.health.is_none());
         let j = dark.to_json();
         assert!(j.opt("steals").is_none());
         assert!(j.opt("min_slack_s").is_none());
@@ -923,6 +934,7 @@ mod tests {
         assert!(j.opt("replica_seconds").is_none());
         assert!(j.opt("scale_ups").is_none());
         assert!(j.opt("drains").is_none());
+        assert!(j.opt("health").is_none());
 
         // extended run: steals + slack + measured step times all emit
         let mut run = fake_run();

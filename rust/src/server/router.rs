@@ -25,6 +25,7 @@ use std::rc::Rc;
 use crate::config::server::{PolicyKind, PressureMode};
 use crate::ctrl::{reweight_by_speed, Autoscaler, Shedder};
 use crate::experts::ResidencyStats;
+use crate::obs::health::{HealthEngine, HealthOutcome};
 use crate::obs::trace::{record_opt, EventKind, TraceLog};
 use crate::obs::{SharedTracer, Tracer};
 use crate::prof_scope;
@@ -92,6 +93,12 @@ pub struct RunResult {
     /// [`with_tracing`](Cluster::with_tracing) — the default keeps the
     /// untraced report shape byte-for-byte).
     pub trace: Option<TraceLog>,
+    /// SLO health-engine outcome: the windowed burn-rate report, the
+    /// raised [`HealthEvent`](crate::obs::health::HealthEvent)s, and any
+    /// frozen debug bundles. `None` unless the cluster was built
+    /// [`with_health`](Cluster::with_health) — the default keeps every
+    /// sim output byte-identical to the health-off build.
+    pub health: Option<HealthOutcome>,
 }
 
 /// Pending arrival, ordered by (time ns, id) for a deterministic heap.
@@ -310,6 +317,12 @@ pub struct Cluster<'a> {
     /// Shared span tracer (`None` = tracing off, the default; see
     /// [`crate::obs`]). Never reads or perturbs the seeded rng.
     tracer: Option<SharedTracer>,
+    /// Streaming SLO health engine (`None` = health monitoring off, the
+    /// default). Pure observer of the same telemetry snapshots every
+    /// control decision reads — it only feeds back into the schedule
+    /// through `--pressure burn`, via the controller's and shedder's
+    /// `set_burn_frac`.
+    health: Option<HealthEngine>,
     rng: Pcg32,
 }
 
@@ -432,6 +445,7 @@ impl<'a> Cluster<'a> {
             mask_scratch: ClusterSnapshot { now_s: 0.0, replicas: Vec::new() },
             shards: 1,
             tracer: None,
+            health: None,
             rng: Pcg32::new(seed, 0x0707_2026),
         }
     }
@@ -446,6 +460,16 @@ impl<'a> Cluster<'a> {
             b.set_tracer(Rc::clone(&tracer));
         }
         self.tracer = Some(tracer);
+        self
+    }
+
+    /// Enable the streaming SLO health engine (`--health`, and implied
+    /// by `--pressure burn`): windowed burn-rate monitoring, anomaly
+    /// detection, and flight-recorder debug bundles over the run.
+    /// Observation never perturbs the schedule — the engine reads the
+    /// same snapshots the control plane already builds.
+    pub fn with_health(mut self, engine: HealthEngine) -> Self {
+        self.health = Some(engine);
         self
     }
 
@@ -603,6 +627,9 @@ impl<'a> Cluster<'a> {
                     victim,
                     thief,
                 });
+                if let Some(h) = &mut self.health {
+                    h.on_steal(victim, thief, now);
+                }
                 self.backends[thief].admit(req);
                 self.last_steal_s[thief] = now;
                 self.last_steal_s[victim] = now;
@@ -710,8 +737,23 @@ impl<'a> Cluster<'a> {
             }
         }
 
+        let burn_pressure = self
+            .controller
+            .as_ref()
+            .is_some_and(|c| c.policy.pressure == PressureMode::Burn);
+
         loop {
-            // 0. elasticity: the autoscaler consumes the same snapshot
+            // 0a. health observation: one Full-detail snapshot per
+            // instant feeds the sliding windows and anomaly detectors.
+            // The engine dedupes repeat instants, the snapshot read is
+            // `&self`-pure, and min-slack folding is deliberately NOT
+            // done here — a health-on run must keep every other output
+            // byte-identical to the health-off run.
+            if self.health.is_some() {
+                let snap = cached_snapshot!(self, full_cache, now);
+                self.health.as_mut().unwrap().observe(snap);
+            }
+            // 0b. elasticity: the autoscaler consumes the same snapshot
             // surface as every other control-plane decision and moves
             // replica slots through their lifecycle
             if self.scaler.is_some() {
@@ -735,8 +777,14 @@ impl<'a> Cluster<'a> {
                 // signal is the one that pays for the queue scans
                 let detail = match self.controller.as_ref().unwrap().policy.pressure {
                     PressureMode::Queue => TelemetryDetail::Load,
-                    PressureMode::Slack | PressureMode::SlackEwma => TelemetryDetail::Full,
+                    PressureMode::Slack | PressureMode::SlackEwma | PressureMode::Burn => {
+                        TelemetryDetail::Full
+                    }
                 };
+                if burn_pressure {
+                    let f = self.health.as_ref().and_then(|h| h.burn_frac());
+                    self.controller.as_mut().unwrap().set_burn_frac(f);
+                }
                 let snap = match detail {
                     TelemetryDetail::Load => cached_snapshot!(self, load_cache, now),
                     TelemetryDetail::Full => cached_snapshot!(self, full_cache, now),
@@ -752,6 +800,9 @@ impl<'a> Cluster<'a> {
                             replica: i,
                             rung: targets[i],
                         });
+                        if let Some(h) = &mut self.health {
+                            h.on_rung_switch(i, targets[i], now);
+                        }
                     }
                 }
             }
@@ -793,6 +844,10 @@ impl<'a> Cluster<'a> {
                 // work. A shed counts as a rejection (conservation) —
                 // the paired Shed event carries the attribution.
                 let shed_reason = if self.shedder.is_some() {
+                    if burn_pressure {
+                        let f = self.health.as_ref().and_then(|h| h.burn_frac());
+                        self.shedder.as_mut().unwrap().set_burn_frac(f);
+                    }
                     let snap = cached_snapshot!(self, full_cache, now);
                     observe_min_slack(snap, &mut min_slack_obs);
                     self.shedder
@@ -811,12 +866,20 @@ impl<'a> Cluster<'a> {
                         class: req.class,
                         reason,
                     });
+                    // the paired Reject hook below charges the burn
+                    // denominator; the shed hook only attributes it
+                    if let Some(h) = &mut self.health {
+                        h.on_shed(req.class, reason, now);
+                    }
                 }
                 if shed_reason.is_some() || !self.admission.try_admit(outstanding, req.class) {
                     record_opt(&self.tracer, now, || EventKind::Reject {
                         id: req.id,
                         class: req.class,
                     });
+                    if let Some(h) = &mut self.health {
+                        h.on_reject(req.class, now);
+                    }
                     // Closed loop: a rejected client is not destroyed —
                     // it backs off one think time and retries, keeping
                     // the scenario's concurrency contract. (Each retry
@@ -856,6 +919,11 @@ impl<'a> Cluster<'a> {
             // buffers merge in replica-index order)
             let before = completed.len();
             self.complete_shards(now, t_next, &mut shard_out, &mut completed);
+            if let Some(h) = &mut self.health {
+                for c in &completed[before..] {
+                    h.on_completion(c, scenario.slos[c.class], now);
+                }
+            }
             // closed loop: each completion frees a client, which thinks
             // and re-issues
             if let Some(spec) = &trace.closed_loop {
@@ -918,6 +986,7 @@ impl<'a> Cluster<'a> {
             step_samples_per_replica: stats.iter().map(|s| s.step_samples.clone()).collect(),
             residency_per_replica: stats.iter().map(|s| s.residency.clone()).collect(),
             trace: self.tracer.as_ref().map(|t| t.borrow_mut().finish()),
+            health: self.health.take().map(|h| h.finish(makespan_s)),
             completed,
         }
     }
@@ -976,6 +1045,7 @@ mod tests {
         assert!(res.shed_by_class.is_none() && res.replica_seconds.is_none());
         assert!(res.scale_events.is_none());
         assert!(res.trace.is_none());
+        assert!(res.health.is_none());
         assert!(res.step_time_per_replica.iter().all(|s| s.is_none()));
         assert!(res.residency_per_replica.iter().all(|r| r.is_none()));
     }
@@ -1109,6 +1179,23 @@ mod tests {
         for c in &traced.completed {
             assert!(log.prefill_start(c.id).is_some());
         }
+    }
+
+    #[test]
+    fn health_observation_never_perturbs_the_schedule() {
+        use crate::obs::health::HealthConfig;
+        use crate::util::json::Json;
+        let s = scenario();
+        let trace = s.generate(60, 1);
+        let base = cluster(PolicyKind::Jsq, 2).run(&s, &trace);
+        let engine = HealthEngine::new(HealthConfig::default(), s.profiles.len(), Json::obj(vec![]));
+        let mut c = cluster(PolicyKind::Jsq, 2).with_health(engine);
+        let res = c.run(&s, &trace);
+        assert_eq!(base.completed, res.completed, "health observation perturbed the run");
+        assert_eq!(base.makespan_s, res.makespan_s);
+        let h = res.health.expect("health-on run must carry its outcome");
+        assert_eq!(h.report.classes.iter().map(|c| c.n).sum::<u64>(), 60);
+        assert!(h.report.makespan_s > 0.0);
     }
 
     #[test]

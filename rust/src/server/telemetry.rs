@@ -109,6 +109,49 @@ impl ReplicaTelemetry {
         self.queue_len + self.active
     }
 
+    /// Full telemetry row as JSON (debug-bundle embedding; `Option`
+    /// fields emit as `null` so a bundle reader sees every column).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let opt = |v: Option<f64>| v.map_or(Json::Null, Json::Num);
+        Json::obj(vec![
+            ("replica", Json::Num(self.replica as f64)),
+            ("accepting", Json::Bool(self.accepting)),
+            ("rung", Json::Num(self.rung as f64)),
+            (
+                "last_switch_s",
+                if self.last_switch_s.is_finite() {
+                    Json::Num(self.last_switch_s)
+                } else {
+                    Json::Null
+                },
+            ),
+            ("queue_len", Json::Num(self.queue_len as f64)),
+            ("active", Json::Num(self.active as f64)),
+            ("load_cost", Json::Num(self.load_cost as f64)),
+            (
+                "class_occupancy",
+                Json::Arr(
+                    self.class_occupancy
+                        .iter()
+                        .map(|&c| Json::Num(c as f64))
+                        .collect(),
+                ),
+            ),
+            ("min_slack_s", opt(self.min_slack_s)),
+            (
+                "min_interactive_slack_frac",
+                opt(self.min_interactive_slack_frac),
+            ),
+            (
+                "projected_interactive_slack_frac",
+                opt(self.projected_interactive_slack_frac),
+            ),
+            ("step_ewma_s", Json::Num(self.step_ewma_s)),
+            ("hbm_pressure", opt(self.hbm_pressure)),
+        ])
+    }
+
     /// Fill the O(queue)-scan fields ([`TelemetryDetail::Full`]) from
     /// the local EDF queue plus the classes of currently running
     /// requests — shared by every backend so the two replica families
@@ -175,6 +218,19 @@ impl ClusterSnapshot {
             .iter()
             .filter_map(|t| t.projected_interactive_slack_frac)
             .fold(f64::INFINITY, f64::min)
+    }
+
+    /// The whole snapshot as JSON (the `cluster` section of a debug
+    /// bundle).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("now_s", Json::Num(self.now_s)),
+            (
+                "replicas",
+                Json::Arr(self.replicas.iter().map(|t| t.to_json()).collect()),
+            ),
+        ])
     }
 }
 
@@ -330,6 +386,28 @@ mod tests {
         };
         assert!(empty.min_slack_s().is_infinite());
         assert!(empty.min_interactive_slack_frac().is_infinite());
+    }
+
+    #[test]
+    fn snapshot_json_carries_every_column() {
+        let mut t = ReplicaTelemetry::idle(2);
+        t.queue_len = 5;
+        t.hbm_pressure = Some(0.25);
+        let snap = ClusterSnapshot {
+            now_s: 3.5,
+            replicas: vec![t],
+        };
+        let j = snap.to_json();
+        let re = crate::util::json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(re.get("now_s").unwrap().as_f64().unwrap(), 3.5);
+        let r = &re.get("replicas").unwrap().as_arr().unwrap()[0];
+        assert_eq!(r.get("replica").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(r.get("queue_len").unwrap().as_usize().unwrap(), 5);
+        assert_eq!(r.get("hbm_pressure").unwrap().as_f64().unwrap(), 0.25);
+        // None / -inf fields serialize as null, not as garbage numbers
+        use crate::util::json::Json;
+        assert!(matches!(r.get("min_slack_s").unwrap(), Json::Null));
+        assert!(matches!(r.get("last_switch_s").unwrap(), Json::Null));
     }
 
     #[test]

@@ -277,3 +277,132 @@ fn selfprof_records_event_loop_sections_around_a_run() {
     let entry = prof.to_json("integration");
     assert_eq!(entry.get("label").unwrap().as_str().unwrap(), "integration");
 }
+
+// ---------------------------------------------------------------------
+// SLO health engine: off by default, additive when on, bundles check
+// ---------------------------------------------------------------------
+
+/// `--health` is a pure observer: enabling it must not move a single
+/// byte of the serving CSV (the schedule is untouched), and the JSON
+/// report only *gains* the health digest.
+#[test]
+fn health_off_is_byte_identical_and_health_digest_is_additive() {
+    let m = spec("olmoe-1b-7b").unwrap();
+    let cfg = ServerConfig {
+        replicas: 2,
+        slots_per_replica: 4,
+        n_requests: 48,
+        scenario: ScenarioKind::Poisson,
+        service_in_len: 256,
+        service_out_len: 32,
+        ..Default::default()
+    };
+    let out_off = std::env::temp_dir().join("lexi_obs_health_off_test");
+    let out_on = std::env::temp_dir().join("lexi_obs_health_on_test");
+    let _ = std::fs::remove_dir_all(&out_off);
+    let _ = std::fs::remove_dir_all(&out_on);
+    let reports_off = server::bench_serve(&m, &cfg, None, &out_off).unwrap();
+    let healthy = ServerConfig {
+        health: true,
+        ..cfg
+    };
+    let reports_on = server::bench_serve(&m, &healthy, None, &out_on).unwrap();
+
+    let name = "bench_serve_olmoe-1b-7b_poisson.csv";
+    let off = std::fs::read(out_off.join(name)).unwrap();
+    let on = std::fs::read(out_on.join(name)).unwrap();
+    assert_eq!(off, on, "{name} differs once the health engine is on");
+
+    for (r_off, r_on) in reports_off.iter().zip(&reports_on) {
+        assert!(r_off.health.is_none(), "{}: health digest leaked", r_off.transform);
+        let h = r_on
+            .health
+            .as_ref()
+            .unwrap_or_else(|| panic!("{}: no health digest", r_on.transform));
+        assert_eq!(
+            h.classes.iter().map(|c| c.n).sum::<u64>(),
+            r_on.n_completed as u64 + r_on.n_rejected,
+            "{}: health digest lost outcomes",
+            r_on.transform
+        );
+        // the digest is additive: every schedule-derived number is
+        // unchanged by observation
+        assert_eq!(r_off.n_completed, r_on.n_completed);
+        assert_eq!(r_off.goodput_rps, r_on.goodput_rps);
+        assert_eq!(r_off.makespan_s, r_on.makespan_s);
+        assert_eq!(r_off.ttft_p99_s, r_on.ttft_p99_s);
+    }
+    let doc_off = json::parse_file(&out_off.join("bench_serve_olmoe-1b-7b_poisson.json")).unwrap();
+    let doc_on = json::parse_file(&out_on.join("bench_serve_olmoe-1b-7b_poisson.json")).unwrap();
+    let reports_key = |d: &json::Json, has_health: bool| {
+        let arr = d.as_arr().unwrap();
+        assert!(!arr.is_empty());
+        for r in arr {
+            assert_eq!(r.opt("health").is_some(), has_health);
+        }
+    };
+    reports_key(&doc_off, false);
+    reports_key(&doc_on, true);
+}
+
+/// A debug bundle frozen by the engine survives serialization to disk
+/// and re-validation — the exact `lexi bundle --check` code path.
+#[test]
+fn written_debug_bundle_round_trips_through_the_bundle_checker() {
+    use lexi_moe::obs::{check_bundle, HealthConfig, HealthEngine};
+    use lexi_moe::server::workload::SloTarget;
+    use lexi_moe::util::json::Json;
+
+    // sustained 25%-overload trace with a tight deadline: violations
+    // push a class critical and freeze a bundle
+    let mut scenario = burst_scenario();
+    scenario.slos = vec![
+        SloTarget {
+            ttft_s: 0.2,
+            tpot_s: 0.05,
+        };
+        scenario.profiles.len()
+    ];
+    let requests = (0..240)
+        .map(|i| TraceRequest {
+            id: i,
+            class: 0,
+            arrival_s: 0.1 * i as f64,
+            prompt_len: 32,
+            new_tokens: 50,
+        })
+        .collect();
+    let trace = Trace {
+        scenario: "obs-burst",
+        requests,
+        closed_loop: None,
+    };
+    let ladder = QualityLadder::fixed(
+        "base",
+        Allocation::uniform(4, 2),
+        ServiceModel::synthetic("base", 1e-5, 0.01, 2),
+    );
+    let engine = HealthEngine::new(
+        HealthConfig::default(),
+        scenario.profiles.len(),
+        Json::obj(vec![("seed", Json::Num(0.0))]),
+    );
+    let res = Cluster::new(2, 2, PolicyKind::Jsq, ladder, None, 25, 1, 0.0, 1)
+        .with_health(engine)
+        .run(&scenario, &trace);
+    let h = res.health.as_ref().unwrap();
+    assert!(!h.bundles.is_empty(), "overload froze no bundle");
+
+    let dir = std::env::temp_dir().join("lexi_obs_bundle_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("debug_bundle_roundtrip.json");
+    std::fs::write(&path, h.bundles[0].to_string_pretty()).unwrap();
+
+    let doc = json::parse_file(&path).unwrap();
+    let from_disk = check_bundle(&doc).unwrap();
+    let in_memory = check_bundle(&h.bundles[0]).unwrap();
+    assert_eq!(from_disk, in_memory, "bundle changed across the disk round trip");
+    assert_eq!(from_disk.n_replicas, 2);
+    assert!(from_disk.trigger.starts_with("burn_critical"), "{}", from_disk.trigger);
+}

@@ -607,3 +607,134 @@ fn every_scenario_completes_with_all_transforms() {
         assert_eq!(text.lines().next().unwrap(), report::CSV_HEADER.join(","));
     }
 }
+
+/// `--pressure burn` degrades on SLO error-budget burn directly, so on
+/// the same flash crowd it must do at least as well as the EDF-slack
+/// rule (the health engine's closed-loop acceptance criterion), and
+/// only the burn run carries the health digest in its report.
+#[test]
+fn burn_pressure_ladder_matches_or_beats_slack_ladder_on_flash_crowd() {
+    let m = spec("qwen1.5-moe-a2.7b").unwrap();
+    let base_cfg = ServerConfig {
+        replicas: 2,
+        slots_per_replica: 8,
+        n_requests: 350,
+        scenario: ScenarioKind::FlashCrowd,
+        policy: PolicyKind::Jsq,
+        degrade_above: 64,
+        upgrade_below: 4,
+        service_in_len: 256,
+        service_out_len: 32,
+        seed: 5,
+        pressure: PressureMode::Slack,
+        ..Default::default()
+    };
+    let out = std::env::temp_dir().join("lexi_server_burn_ladder_slack");
+    let _ = std::fs::remove_dir_all(&out);
+    let slack_reports = server::bench_serve(&m, &base_cfg, None, &out).unwrap();
+    let burn_cfg = ServerConfig {
+        pressure: PressureMode::Burn,
+        ..base_cfg
+    };
+    let out2 = std::env::temp_dir().join("lexi_server_burn_ladder_burn");
+    let _ = std::fs::remove_dir_all(&out2);
+    let burn_reports = server::bench_serve(&m, &burn_cfg, None, &out2).unwrap();
+
+    let ladder_of = |rs: &[server::TransformReport]| {
+        rs.iter()
+            .find(|r| r.transform == "lexi-ladder")
+            .unwrap()
+            .clone()
+    };
+    let s = ladder_of(&slack_reports);
+    let b = ladder_of(&burn_reports);
+    assert!(s.health.is_none(), "slack run must stay health-free");
+    let bh = b.health.as_ref().expect("burn run carries no health digest");
+    assert!(
+        bh.peak_fast_burn > 0.0,
+        "flash crowd never burned any error budget"
+    );
+    assert!(
+        b.goodput_rps >= s.goodput_rps * 0.999,
+        "burn-pressure goodput {:.4} rps below slack-pressure {:.4} rps",
+        b.goodput_rps,
+        s.goodput_rps
+    );
+}
+
+/// The health engine raises BurnCritical (and freezes a debug bundle)
+/// while sustained overload is still only blowing deadlines — strictly
+/// before the queue cap produces its first hard reject. The bundle
+/// must survive the `lexi bundle --check` validator.
+#[test]
+fn burn_critical_fires_before_the_first_hard_cap_reject() {
+    use lexi_moe::obs::{check_bundle, HealthConfig, HealthEngine, HealthEvent};
+    use lexi_moe::server::workload::SloTarget;
+    use lexi_moe::util::json::Json;
+
+    // one class with a tight deadline, arriving ~25% above capacity:
+    // the queue grows a couple of requests per second, so deadline
+    // violations accumulate long before the cap fills
+    let mut s = skewed_scenario();
+    let tight = SloTarget {
+        ttft_s: 0.2,
+        tpot_s: 0.05,
+    };
+    s.slos = vec![tight; s.profiles.len()];
+    let requests = (0..240)
+        .map(|i| TraceRequest {
+            id: i,
+            class: 0,
+            arrival_s: 0.1 * i as f64,
+            prompt_len: 32,
+            new_tokens: 50,
+        })
+        .collect();
+    let trace = Trace {
+        scenario: "skewed",
+        requests,
+        closed_loop: None,
+    };
+
+    let ladder = QualityLadder::fixed(
+        "base",
+        Allocation::uniform(4, 2),
+        ServiceModel::synthetic("base", 1e-5, 0.01, 2),
+    );
+    let hcfg = HealthConfig {
+        recorder_horizon_s: 0.0, // bundles carry the whole recorder ring
+        ..HealthConfig::default()
+    };
+    let engine = HealthEngine::new(hcfg, s.profiles.len(), Json::obj(vec![]));
+    let res = Cluster::new(2, 2, PolicyKind::Jsq, ladder, None, 25, 2, 0.0, 1)
+        .with_health(engine)
+        .run(&s, &trace);
+
+    assert!(
+        res.rejected_by_class.iter().sum::<u64>() > 0,
+        "cap never rejected: overload too mild for this fixture"
+    );
+    let h = res.health.as_ref().unwrap();
+    let critical = h
+        .events
+        .iter()
+        .find(|e| matches!(e.event, HealthEvent::BurnCritical { .. }))
+        .expect("no BurnCritical raised under sustained overload");
+    assert!(critical.t_s < res.makespan_s);
+
+    // the bundle frozen at the first critical carries every recorder
+    // entry so far (horizon 0 = unbounded), and none of them is a
+    // reject: the burn signal led the hard cap
+    assert!(!h.bundles.is_empty(), "critical event froze no bundle");
+    let bundle = &h.bundles[0];
+    let sum = check_bundle(bundle).expect("bundle fails `lexi bundle --check` validation");
+    assert!(sum.trigger.starts_with("burn_critical"), "{}", sum.trigger);
+    assert_eq!(sum.n_replicas, 2);
+    let entries = bundle.get("events").unwrap().as_arr().unwrap();
+    assert!(
+        entries
+            .iter()
+            .all(|e| e.get("kind").unwrap().as_str().unwrap() != "reject"),
+        "a hard-cap reject preceded the first BurnCritical"
+    );
+}

@@ -173,7 +173,7 @@ pub fn apply_to_ladder(
     include_stall: bool,
 ) -> Vec<usize> {
     let mut applied = Vec::new();
-    for (j, rung) in ladder.rungs.iter_mut().enumerate() {
+    for (j, rung) in ladder.points_mut().iter_mut().enumerate() {
         let Some(rs) = art.rungs.get(j) else { continue };
         let fit = fit_rung(rs);
         let slots = rung.service.slots();
@@ -308,16 +308,18 @@ mod tests {
     fn apply_to_ladder_recalibrates_observed_rungs_only() {
         use crate::moe::allocation::Allocation;
         let base = ServiceModel::synthetic("base", 1e-4, 0.01, 4);
-        let mut ladder = QualityLadder {
-            rungs: (0..2)
-                .map(|i| crate::server::ladder::Rung {
-                    label: format!("r{i}"),
-                    allocation: Allocation::uniform(4, 2),
-                    service: base.clone(),
-                    quality_loss: i as f64,
+        let mut ladder = QualityLadder::from_points_1d(
+            (0..2)
+                .map(|i| {
+                    crate::server::ladder::QualityPoint::k_only(
+                        &format!("r{i}"),
+                        Allocation::uniform(4, 2),
+                        base.clone(),
+                        i as f64,
+                    )
                 })
                 .collect(),
-        };
+        );
         let mut samples = Vec::new();
         for occ in 1..=4 {
             samples.push(decode(0, occ as f64, 0.1 + 0.01 * occ as f64));
@@ -326,11 +328,11 @@ mod tests {
         let applied = apply_to_ladder(&mut ladder, &art, false);
         assert_eq!(applied, vec![0]);
         // rung 0: decode recalibrated, prefill (unobserved) retained
-        let cal0 = &ladder.rungs[0].service;
+        let cal0 = &ladder.points()[0].service;
         assert!((cal0.step_time(2) - 0.12).abs() < 1e-9);
         assert!((cal0.prefill_time(100) - base.prefill_time(100)).abs() < 1e-12);
         assert!(cal0.label.ends_with("+cal"));
         // rung 1 untouched
-        assert_eq!(ladder.rungs[1].service.step_time(2), 0.01);
+        assert_eq!(ladder.points()[1].service.step_time(2), 0.01);
     }
 }

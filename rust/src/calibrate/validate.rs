@@ -242,8 +242,8 @@ pub(crate) fn collect(
     let full = QualityLadder::for_model(spec, &table, cfg, &pm)?;
     let baseline = QualityLadder::fixed(
         "base",
-        full.rungs[0].allocation.clone(),
-        full.rungs[0].service.clone(),
+        full.points()[0].allocation.clone(),
+        full.points()[0].service.clone(),
     );
     let line_up = vec![
         Contender {
@@ -257,7 +257,7 @@ pub(crate) fn collect(
             adaptive: true,
         },
     ];
-    let (scenario, trace) = server::scenario_and_trace(&full.rungs[0].service, cfg)?;
+    let (scenario, trace) = server::scenario_and_trace(&full.points()[0].service, cfg)?;
 
     let (runs, engine_source) = match server::try_real_runtime(spec, artifacts) {
         Some(model) => {

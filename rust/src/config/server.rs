@@ -86,6 +86,83 @@ impl PressureMode {
     }
 }
 
+/// Which axes span the quality lattice the ladder controller walks
+/// (`--ladder-axes`). The first axis is always the per-layer
+/// active-expert budget (the paper's Stage-2 k_vec rungs); the second —
+/// when enabled — is an intra-expert lever priced independently, so a
+/// rung becomes a [`PointId`](crate::server::ladder::PointId) in a 2-D
+/// lattice instead of an index into a Vec.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LadderAxes {
+    /// Active-expert budgets only: the historical 1-D ladder,
+    /// bit-identical to every earlier release.
+    K,
+    /// k_vec budgets x MoE-I2-style intra-expert FFN sparsity
+    /// (`--intra-fracs`).
+    KIntra,
+    /// k_vec budgets x NAEE dynamic-skip aggressiveness
+    /// (`--skip-thresholds`); construction fails on non-top-2 models.
+    KSkip,
+}
+
+impl LadderAxes {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "k" => LadderAxes::K,
+            "k-intra" | "kintra" => LadderAxes::KIntra,
+            "k-skip" | "kskip" => LadderAxes::KSkip,
+            other => bail!("unknown ladder axes '{other}' (k | k-intra | k-skip)"),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            LadderAxes::K => "k",
+            LadderAxes::KIntra => "k-intra",
+            LadderAxes::KSkip => "k-skip",
+        }
+    }
+}
+
+/// Validate quality-ladder budget fractions at config-parse time: each
+/// must be a finite fraction strictly inside (0, 1) — rung 0 is always
+/// the full-budget baseline, so 1.0 would duplicate it, and a NaN here
+/// used to reach `QualityLattice::for_model`'s sort and panic mid-build.
+pub fn validate_ladder_fracs(fracs: &[f64]) -> Result<()> {
+    for &f in fracs {
+        if !f.is_finite() || f <= 0.0 || f >= 1.0 {
+            bail!(
+                "--ladder frac {f} is not a fraction in (0, 1) exclusive \
+                 (rung 0 is always the full 1.0 budget)"
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Validate the second-axis sparsity levels (`--intra-fracs` FFN prune
+/// fractions in (0, 1); `--skip-thresholds` gate ratios in (0, 1]).
+/// Level 0 of the axis is always dense/off, so 0.0 entries are rejected
+/// as duplicates of it.
+pub fn validate_axis_levels(levels: &[f64], axes: LadderAxes) -> Result<()> {
+    let (name, hi_ok) = match axes {
+        LadderAxes::K => return Ok(()),
+        LadderAxes::KIntra => ("--intra-fracs", false),
+        LadderAxes::KSkip => ("--skip-thresholds", true),
+    };
+    for &v in levels {
+        let in_range = v.is_finite() && v > 0.0 && (v < 1.0 || (hi_ok && v == 1.0));
+        if !in_range {
+            bail!(
+                "{name} entry {v} is out of range (level 0 of the axis is always \
+                 dense/off; entries must be finite, > 0 and {})",
+                if hi_ok { "<= 1" } else { "< 1" }
+            );
+        }
+    }
+    Ok(())
+}
+
 /// HBM eviction policy of the expert residency store. The
 /// implementations live in [`crate::experts::policy`]
 /// (`EvictKind::build`, mirroring `PolicyKind::build`).
@@ -362,6 +439,18 @@ pub struct ServerConfig {
     /// LExI quality-ladder budgets as fractions of L * k_base, one rung
     /// per entry (descending); the baseline (1.0) is always rung 0.
     pub ladder_fracs: Vec<f64>,
+    /// Axes spanning the quality lattice (`--ladder-axes`). The default
+    /// [`LadderAxes::K`] keeps the historical 1-D budget ladder
+    /// bit-identical; the other settings add a second sparsity axis.
+    pub ladder_axes: LadderAxes,
+    /// Intra-expert FFN prune fractions for the second lattice axis
+    /// (`--ladder-axes k-intra`), one sparsity level per entry in
+    /// ascending aggressiveness; level 0 (dense) is always present.
+    pub intra_fracs: Vec<f64>,
+    /// Dynamic-skip gate thresholds for the second lattice axis
+    /// (`--ladder-axes k-skip`), ascending; level 0 (no skipping) is
+    /// always present.
+    pub skip_thresholds: Vec<f64>,
     /// Queue depth (requests) above which a replica steps DOWN a rung.
     pub degrade_above: usize,
     /// Queue depth below which a replica climbs back toward rung 0.
@@ -459,6 +548,9 @@ impl Default for ServerConfig {
             n_requests: 512,
             seed: 0,
             ladder_fracs: vec![0.8, 0.65, 0.5],
+            ladder_axes: LadderAxes::K,
+            intra_fracs: vec![0.25, 0.5],
+            skip_thresholds: vec![0.3, 0.6],
             degrade_above: 24,
             upgrade_below: 4,
             min_dwell_s: 0.5,
@@ -522,6 +614,11 @@ mod tests {
         for e in EvictKind::all() {
             assert_eq!(EvictKind::parse(e.label()).unwrap(), e);
         }
+        for a in [LadderAxes::K, LadderAxes::KIntra, LadderAxes::KSkip] {
+            assert_eq!(LadderAxes::parse(a.label()).unwrap(), a);
+        }
+        assert_eq!(LadderAxes::parse("kintra").unwrap(), LadderAxes::KIntra);
+        assert!(LadderAxes::parse("k-cubed").is_err());
         assert_eq!(EvictKind::parse("kvec-aware").unwrap(), EvictKind::KvecAware);
         assert!(EvictKind::parse("fifo").is_err());
         assert_eq!(PolicyKind::parse("classaware").unwrap(), PolicyKind::ClassAware);
@@ -562,11 +659,44 @@ mod tests {
     }
 
     #[test]
+    fn ladder_frac_validation_rejects_nan_and_out_of_range() {
+        // satellite of the lattice redesign: a bad frac must be a config
+        // error with a message, never a partial_cmp().unwrap() panic
+        // inside ladder construction
+        assert!(validate_ladder_fracs(&[0.8, 0.65, 0.5]).is_ok());
+        assert!(validate_ladder_fracs(&[]).is_ok());
+        for bad in [f64::NAN, f64::INFINITY, 0.0, -0.5, 1.0, 1.5] {
+            assert!(
+                validate_ladder_fracs(&[0.8, bad]).is_err(),
+                "frac {bad} accepted"
+            );
+        }
+    }
+
+    #[test]
+    fn axis_level_validation_matches_axis_semantics() {
+        assert!(validate_axis_levels(&[0.25, 0.5], LadderAxes::KIntra).is_ok());
+        assert!(validate_axis_levels(&[0.3, 1.0], LadderAxes::KSkip).is_ok());
+        // intra frac 1.0 would zero the whole FFN
+        assert!(validate_axis_levels(&[1.0], LadderAxes::KIntra).is_err());
+        for bad in [f64::NAN, 0.0, -0.1, 2.0] {
+            assert!(validate_axis_levels(&[bad], LadderAxes::KIntra).is_err());
+            assert!(validate_axis_levels(&[bad], LadderAxes::KSkip).is_err());
+        }
+        // the k axis carries no levels to validate
+        assert!(validate_axis_levels(&[f64::NAN], LadderAxes::K).is_ok());
+    }
+
+    #[test]
     fn defaults_are_sane() {
         let c = ServerConfig::default();
         assert!(c.replicas >= 1 && c.slots_per_replica >= 1);
         assert!(c.upgrade_below < c.degrade_above);
         assert!(c.ladder_fracs.iter().all(|&f| f > 0.0 && f < 1.0));
+        validate_ladder_fracs(&c.ladder_fracs).unwrap();
+        assert_eq!(c.ladder_axes, LadderAxes::K, "2-D lattice must default OFF");
+        validate_axis_levels(&c.intra_fracs, LadderAxes::KIntra).unwrap();
+        validate_axis_levels(&c.skip_thresholds, LadderAxes::KSkip).unwrap();
         assert_eq!(c.backend, BackendKind::Sim);
         assert_eq!(c.ladder_scope, LadderScope::PerReplica);
         assert!(c.max_switches_per_instant >= 1);

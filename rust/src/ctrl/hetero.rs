@@ -1,10 +1,11 @@
 //! Heterogeneous replica hardware tiers (mixed H100/A100 clusters).
 //!
 //! `--replica-tiers h100:4,a100:4` assigns each replica slot a
-//! [`Hardware`] constant set in spec order, and every rung of that
-//! replica's quality ladder gets a service model recomputed from the
-//! tier's perf model — so an A100 replica really is ~3x slower per
-//! step, and its `step_ewma_s` telemetry says so.
+//! [`Hardware`] constant set in spec order, and every point of that
+//! replica's quality lattice (every (k, s) coordinate, both axes) gets
+//! a service model recomputed from the tier's perf model — so an A100
+//! replica really is ~3x slower per step, and its `step_ewma_s`
+//! telemetry says so.
 //!
 //! Routing and stealing learn about speed through
 //! [`reweight_by_speed`]: the snapshot's token-backlog `load_cost` is

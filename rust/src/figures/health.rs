@@ -42,7 +42,7 @@ pub fn run(out_dir: &Path) -> Result<FigureOutput> {
         adaptive: true,
     };
     let (scenario, trace) =
-        server::scenario_and_trace(&contender.ladder.rungs[0].service, &cfg)?;
+        server::scenario_and_trace(&contender.ladder.points()[0].service, &cfg)?;
     let runs = server::sim_runs(&m, std::slice::from_ref(&contender), &scenario, &trace, &cfg);
     let res = &runs[0].1;
     let health = res

@@ -10,6 +10,7 @@ pub mod fig3;
 pub mod health;
 pub mod memory;
 pub mod pareto;
+pub mod quality_surface;
 pub mod series;
 pub mod table1;
 pub mod timeline;

@@ -1,0 +1,96 @@
+//! Quality-surface figure (`lexi figures --exp quality-surface`): the
+//! 2-D lattice priced analytically — one row per (k, s) point with its
+//! modeled decode step time, capacity, proxy quality loss, Pareto
+//! frontier membership, and how many pure-k rungs it dominates.
+//!
+//! The rows come straight from [`crate::server::bench_quality_surface`],
+//! so the figure shows exactly what the `quality_surface_*.csv`
+//! artifact reports. Both axis kinds are rendered: intra on a top-8
+//! model, skip on a top-2 model (dynamic skipping needs top-2 routing).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::config::model::spec;
+use crate::config::server::{LadderAxes, ServerConfig};
+use crate::server;
+
+use super::series::{f, FigureOutput};
+
+/// One small deterministic surface sweep per axis kind.
+pub fn run(out_dir: &Path) -> Result<FigureOutput> {
+    let mut fig = FigureOutput::new(
+        "fig_quality_surface",
+        &[
+            "model",
+            "axes",
+            "point",
+            "k",
+            "s",
+            "mean_active_experts",
+            "step_time_ms",
+            "capacity_rps",
+            "quality_loss",
+            "on_frontier",
+            "pure_k_dominated",
+        ],
+    );
+    for (model, axes) in [
+        ("olmoe-1b-7b", LadderAxes::KIntra),
+        ("mixtral-8x7b", LadderAxes::KSkip),
+    ] {
+        let m = spec(model)?;
+        let cfg = ServerConfig {
+            ladder_axes: axes,
+            ..Default::default()
+        };
+        let rows = server::bench_quality_surface(&m, &cfg, None, out_dir)?;
+        for r in &rows {
+            fig.row(vec![
+                r.model.clone(),
+                r.axes.clone(),
+                r.label.clone(),
+                r.k.to_string(),
+                r.s.to_string(),
+                f(r.mean_active_experts),
+                f(r.step_time_s * 1e3),
+                f(r.capacity_rps),
+                if r.quality_loss.is_finite() {
+                    f(r.quality_loss)
+                } else {
+                    String::new()
+                },
+                (r.on_frontier as u8).to_string(),
+                r.pure_k_dominated.to_string(),
+            ]);
+        }
+    }
+    fig.emit(out_dir)?;
+    Ok(fig)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quality_surface_figure_covers_both_axis_kinds() {
+        let dir = std::env::temp_dir().join("lexi_fig_quality_surface_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let fig = run(&dir).unwrap();
+        assert!(fig.rows.iter().any(|r| r[1] == "k-intra"));
+        assert!(fig.rows.iter().any(|r| r[1] == "k-skip"));
+        // every sweep has at least one frontier point, and the full
+        // lattice is bigger than either 1-D ladder
+        assert!(fig.rows.iter().any(|r| r[9] == "1"));
+        assert!(fig.rows.iter().filter(|r| r[0] == "olmoe-1b-7b").count() > 4);
+        assert!(dir.join("fig_quality_surface.csv").exists());
+        assert!(dir
+            .join("quality_surface_olmoe-1b-7b_k_intra.csv")
+            .exists());
+        assert!(dir
+            .join("quality_surface_mixtral-8x7b_k_skip.json")
+            .exists());
+    }
+}

@@ -36,6 +36,29 @@ impl SensitivityTable {
             .sum()
     }
 
+    /// Alg. 2 fitness at *fractional* per-layer k — the Stage-1 scale
+    /// extended to quality-lattice points whose effective active
+    /// experts are non-integer (intra-expert pruning scales capacity,
+    /// dynamic skipping sheds expected experts). Linear interpolation
+    /// between the bracketing integer entries, clamped to [1, k_base].
+    pub fn fitness_fractional(&self, k_eff: &[f64]) -> f64 {
+        debug_assert_eq!(k_eff.len(), self.n_layers());
+        k_eff
+            .iter()
+            .enumerate()
+            .map(|(j, &k)| {
+                let k = k.clamp(1.0, self.k_base as f64);
+                let lo = k.floor() as u32;
+                let hi = k.ceil() as u32;
+                if lo == hi {
+                    return self.d(j, lo);
+                }
+                let w = k - lo as f64;
+                self.d(j, lo) * (1.0 - w) + self.d(j, hi) * w
+            })
+            .sum()
+    }
+
     /// Row-normalized copy for heatmap rendering (Fig. 3/9 plots
     /// "normalized sensitivity").
     pub fn normalized(&self) -> Vec<Vec<f64>> {
@@ -135,6 +158,25 @@ mod tests {
         assert_eq!(t.fitness(&[1, 1]), 8.0);
         assert_eq!(t.fitness(&[2, 2]), 0.0);
         assert_eq!(t.fitness(&[1, 2]), 3.0);
+    }
+
+    #[test]
+    fn fractional_fitness_interpolates_and_clamps() {
+        let t = SensitivityTable {
+            model: "m".into(),
+            k_base: 2,
+            loss: vec![vec![3.0, 0.0], vec![5.0, 1.0]],
+            iters: 1,
+        };
+        // integer points match the exact fitness
+        assert_eq!(t.fitness_fractional(&[1.0, 1.0]), t.fitness(&[1, 1]));
+        assert_eq!(t.fitness_fractional(&[2.0, 2.0]), t.fitness(&[2, 2]));
+        // halfway between the entries: (3+0)/2 + (5+1)/2
+        assert!((t.fitness_fractional(&[1.5, 1.5]) - 4.5).abs() < 1e-12);
+        // out-of-range effective k clamps to the table bounds
+        assert_eq!(t.fitness_fractional(&[0.2, 9.0]), t.fitness(&[1, 2]));
+        // monotone: shedding experts never reduces the proxy loss
+        assert!(t.fitness_fractional(&[1.7, 1.7]) > t.fitness_fractional(&[1.9, 1.9]));
     }
 
     #[test]

@@ -31,7 +31,9 @@
 //!   SLO scheduling, the [`server::ReplicaBackend`] trait over
 //!   simulated/real replicas, and a telemetry-driven control plane
 //!   ([`server::ClusterSnapshot`] → routing incl. SLO-class-aware,
-//!   queue/EDF-slack adaptive LExI ladder, cross-replica work stealing)
+//!   queue/EDF-slack adaptive quality lattice — active-experts budgets
+//!   x optional intra-expert sparsity / dynamic-skip axis
+//!   ([`server::QualityLattice`]) — cross-replica work stealing)
 //! - [`ctrl`]    — elastic control plane over the same snapshots:
 //!   class-aware admission shedding ([`ctrl::Shedder`]), a replica
 //!   autoscaler pricing spin-up as expert prewarm + Stage-1 table load

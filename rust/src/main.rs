@@ -20,6 +20,11 @@
 //!                    [--replica-tiers h100:N,a100:M]
 //!                    elastic control plane sweep: fixed vs autoscaled
 //!                    provisioning (± shedding), hetero tiers x routing
+//!   lexi bench-quality-surface [--ladder-axes k|k-intra|k-skip]
+//!                    [--ladder-fracs F1,F2] [--intra-fracs F1,F2]
+//!                    [--skip-thresholds T1,T2]
+//!                    price every 2-D lattice point: (modeled latency,
+//!                    quality loss) frontier + pure-k dominance
 //!   lexi calibrate  [--scenario S] [--requests N] [--seed S]
 //!                    run the engine backend and fit a sim ServiceModel
 //!                    calibration artifact from its step-time telemetry
@@ -31,7 +36,7 @@
 //!   lexi trace    --check F [--prom F]   validate observability artifacts
 //!   lexi bundle   --check F              validate a flight-recorder debug bundle
 //!   lexi figures  --exp fig2|fig3|fig9|figs4-8|table1|memory|timeline|elasticity|
-//!                       health|all
+//!                       health|quality-surface|all
 //!
 //! Global flags: --artifacts DIR (default ./artifacts), --out DIR
 //! (default ./results), --iters N, --fast.
@@ -133,6 +138,7 @@ fn run() -> Result<()> {
         "bench-scale" => cmd_bench_scale(&args)?,
         "bench-memory" => cmd_bench_memory(&args)?,
         "bench-elasticity" => cmd_bench_elasticity(&args)?,
+        "bench-quality-surface" => cmd_bench_quality_surface(&args)?,
         "calibrate" => cmd_calibrate(&args)?,
         "cross-validate" => cmd_cross_validate(&args)?,
         "trace" => cmd_trace(&args)?,
@@ -151,11 +157,12 @@ fn print_help() {
     println!(
         "lexi — LExI MoE inference coordinator\n\
          commands: table1 | profile | search | optimize | eval | serve | bench-serve |\n\
-                   bench-scale | bench-memory | bench-elasticity | calibrate |\n\
+                   bench-scale | bench-memory | bench-elasticity |\n\
+                   bench-quality-surface | calibrate |\n\
                    cross-validate | trace | bundle | figures\n\
          flags: --model M --budget B --artifacts DIR --out DIR --iters N --fast\n\
          figures: --exp table1|fig2|fig3|fig9|figs4-8|ablations|memory|timeline|\n\
-                      elasticity|health|all [--models a,b]\n\
+                      elasticity|health|quality-surface|all [--models a,b]\n\
          bench-serve: --scenario poisson|bursty|diurnal|closed-loop|flash-crowd|trace-replay|all\n\
                       --replicas N --slots N --route rr|jsq|p2c|classaware --backend sim|engine\n\
                       --table auto|synthetic|measured --ladder replica|cluster\n\
@@ -177,7 +184,16 @@ fn print_help() {
                       burn rate; implies the health engine)\n\
                       --selfprof (wall-clock profile of the sim's own hot sections;\n\
                       appends to BENCH_selfprof.json, --selfprof-out F overrides)\n\
+                      --ladder-axes k|k-intra|k-skip (2-D quality lattice: active\n\
+                      experts x intra-expert sparsity / dynamic-skip aggressiveness;\n\
+                      default k keeps the historical 1-D ladder bit-identical)\n\
+                      --ladder-fracs F1,F2 (k-axis budget fractions, default .8,.65,.5)\n\
+                      --intra-fracs F1,F2 (FFN prune fractions per s level, (0,1))\n\
+                      --skip-thresholds T1,T2 (gate-ratio thresholds, (0,1]; top-2 only)\n\
                       --requests N --model M --seed S\n\
+         bench-quality-surface: bench-serve lattice flags; prices every lattice\n\
+                      point analytically, writes quality_surface_<model>_<axes>.{{csv,json}}\n\
+                      with Pareto frontier + pure-k dominance columns\n\
          bench-scale: event-loop scale benchmark on synthetic sim replicas\n\
                       --replicas N (default 1000) --requests N (default 1000000)\n\
                       --scenario S (default diurnal) --slots N --shards N --seed S\n\
@@ -381,13 +397,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse a comma-separated f64 list flag with the flag name in errors.
+fn parse_f64_list(list: &str, flag: &str) -> Result<Vec<f64>> {
+    list.split(',')
+        .map(|s| {
+            s.trim()
+                .parse::<f64>()
+                .with_context(|| format!("{flag} entry '{s}' is not a number"))
+        })
+        .collect()
+}
+
 /// Shared `ServerConfig` flag parsing for `bench-serve`/`bench-memory`
 /// (`--evict` is intentionally absent: bench-serve takes one policy,
 /// bench-memory sweeps a list).
 fn server_cfg_from_args(args: &Args) -> Result<lexi_moe::config::server::ServerConfig> {
     use lexi_moe::config::server::{
-        parse_autoscale, BackendKind, LadderScope, PolicyKind, PressureMode, ServerConfig,
-        TableMode, TierKind,
+        parse_autoscale, validate_axis_levels, validate_ladder_fracs, BackendKind, LadderAxes,
+        LadderScope, PolicyKind, PressureMode, ServerConfig, TableMode, TierKind,
     };
     let mut cfg = ServerConfig::default();
     if let Some(n) = args.get("replicas") {
@@ -413,6 +440,23 @@ fn server_cfg_from_args(args: &Args) -> Result<lexi_moe::config::server::ServerC
     }
     if let Some(p) = args.get("pressure") {
         cfg.pressure = PressureMode::parse(p)?;
+    }
+    if let Some(a) = args.get("ladder-axes") {
+        cfg.ladder_axes = LadderAxes::parse(a)?;
+    }
+    // axis levels are validated HERE, with the flag name in the error,
+    // not deep inside lattice construction
+    if let Some(list) = args.get("ladder-fracs") {
+        cfg.ladder_fracs = parse_f64_list(list, "--ladder-fracs")?;
+        validate_ladder_fracs(&cfg.ladder_fracs)?;
+    }
+    if let Some(list) = args.get("intra-fracs") {
+        cfg.intra_fracs = parse_f64_list(list, "--intra-fracs")?;
+        validate_axis_levels(&cfg.intra_fracs, LadderAxes::KIntra)?;
+    }
+    if let Some(list) = args.get("skip-thresholds") {
+        cfg.skip_thresholds = parse_f64_list(list, "--skip-thresholds")?;
+        validate_axis_levels(&cfg.skip_thresholds, LadderAxes::KSkip)?;
     }
     if let Some(n) = args.get("steal") {
         cfg.steal_bound = n.parse().context("--steal must be an integer (steals per instant)")?;
@@ -776,6 +820,41 @@ fn cmd_bench_memory(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Price every point of the 2-D quality lattice analytically and emit
+/// the (modeled latency, proxy quality loss) surface with Pareto
+/// frontier + pure-k dominance annotations
+/// (`lexi bench-quality-surface`).
+fn cmd_bench_quality_surface(args: &Args) -> Result<()> {
+    use lexi_moe::config::server::LadderAxes;
+
+    let model_name = args.get("model").unwrap_or("qwen1.5-moe-a2.7b");
+    let mspec = spec(model_name)?;
+    let mut cfg = server_cfg_from_args(args)?;
+    anyhow::ensure!(
+        cfg.calibration_file.is_none(),
+        "--calibration applies to bench-serve / cross-validate, not bench-quality-surface"
+    );
+    // the sweep is about the second axis; default it on (intra works on
+    // every model, skip needs a top-2 router) unless the user chose
+    if args.get("ladder-axes").is_none() {
+        cfg.ladder_axes = LadderAxes::KIntra;
+    }
+    let out = args.out_dir();
+    let artifacts = args.artifacts();
+    let artifacts_opt = artifacts.exists().then_some(artifacts.as_path());
+    println!(
+        "=== bench-quality-surface: {model_name}, axes {}, ladder fracs {:?}, \
+         intra fracs {:?}, skip thresholds {:?} ===\n",
+        cfg.ladder_axes.label(),
+        cfg.ladder_fracs,
+        cfg.intra_fracs,
+        cfg.skip_thresholds
+    );
+    lexi_moe::server::bench_quality_surface(&mspec, &cfg, artifacts_opt, &out)?;
+    println!("\nreports written to {}", out.display());
+    Ok(())
+}
+
 /// Shared setup of the calibration commands: model spec + `ServerConfig`
 /// with a calibration-sized request default (the engine backend pays
 /// real compute per request, so the default trace is smaller than
@@ -974,6 +1053,9 @@ fn cmd_figures(args: &Args) -> Result<()> {
     }
     if matches!(exp, "health" | "all") {
         figures::health::run(&out)?;
+    }
+    if matches!(exp, "quality-surface" | "all") {
+        figures::quality_surface::run(&out)?;
     }
     if matches!(exp, "ablations" | "all") {
         figures::ablation::limitations_memory(&out, &cfg)?;

@@ -35,6 +35,19 @@ pub enum Transform {
     /// ("our method can be effectively combined with existing MoE
     /// pruning methods").
     LexiPlusInter { allocation: Allocation, frac: f64 },
+    /// LExI combined with intra-expert pruning: the Stage-2 per-layer
+    /// allocation with every expert's FFN intermediate dim shrunk by
+    /// `frac` — one point on the 2-D quality lattice's
+    /// (active-experts x intra-sparsity) surface. Pruning cuts the
+    /// per-expert weight traffic the decode roofline streams, so this
+    /// axis buys latency where reducing k alone saturates.
+    LexiPlusIntra { allocation: Allocation, frac: f64 },
+    /// LExI combined with NAEE dynamic skipping: the Stage-2 allocation
+    /// with the weakest of each layer's top-2 experts dropped when its
+    /// gate weight falls below `threshold` x the top-1 weight. Only
+    /// layers whose allocated k is >= 2 can skip; like
+    /// [`Transform::DynamicSkip`] it is defined for k_base = 2 models.
+    LexiPlusSkip { allocation: Allocation, threshold: f64 },
 }
 
 impl Transform {
@@ -43,7 +56,9 @@ impl Transform {
     /// [`Transform::expected_k`] for it.)
     pub fn k_per_layer(&self, spec: &ModelSpec) -> Vec<u32> {
         match self {
-            Transform::Lexi { allocation } => allocation.k.clone(),
+            Transform::Lexi { allocation }
+            | Transform::LexiPlusIntra { allocation, .. }
+            | Transform::LexiPlusSkip { allocation, .. } => allocation.k.clone(),
             Transform::LexiPlusInter { allocation, .. } => {
                 let kept = self.experts_kept(spec) as u32;
                 allocation.k.iter().map(|&k| k.min(kept)).collect()
@@ -72,7 +87,7 @@ impl Transform {
     /// Per-expert FFN dim after the transform (paper-scale `ffn` input).
     pub fn ffn_dim(&self, ffn: usize) -> usize {
         match self {
-            Transform::IntraPrune { frac } => {
+            Transform::IntraPrune { frac } | Transform::LexiPlusIntra { frac, .. } => {
                 ((ffn as f64 * (1.0 - frac)).round() as usize).max(1)
             }
             _ => ffn,
@@ -87,7 +102,24 @@ impl Transform {
         match self {
             Transform::DynamicSkip { .. } => spec.top_k as f64 - skip_prob,
             Transform::Lexi { allocation }
+            | Transform::LexiPlusIntra { allocation, .. }
             | Transform::LexiPlusInter { allocation, .. } => allocation.mean_k(),
+            // skipping drops the 2nd expert, so only layers allocated
+            // k >= 2 have anything to skip
+            Transform::LexiPlusSkip { allocation, .. } => {
+                allocation
+                    .k
+                    .iter()
+                    .map(|&k| {
+                        if k >= 2 {
+                            (k as f64 - skip_prob).max(1.0)
+                        } else {
+                            k as f64
+                        }
+                    })
+                    .sum::<f64>()
+                    / allocation.k.len() as f64
+            }
             _ => self.k_per_layer(spec).iter().sum::<u32>() as f64
                 / spec.n_layers as f64,
         }
@@ -101,6 +133,7 @@ impl Transform {
             Transform::InterPrune { .. }
                 | Transform::IntraPrune { .. }
                 | Transform::LexiPlusInter { .. }
+                | Transform::LexiPlusIntra { .. }
         )
     }
 
@@ -124,6 +157,12 @@ impl Transform {
             Transform::Lexi { allocation } => format!("lexi-B{}", allocation.budget()),
             Transform::LexiPlusInter { allocation, frac } => {
                 format!("lexi-B{}+inter{:.0}", allocation.budget(), frac * 100.0)
+            }
+            Transform::LexiPlusIntra { allocation, frac } => {
+                format!("lexi-B{}+intra{:.0}", allocation.budget(), frac * 100.0)
+            }
+            Transform::LexiPlusSkip { allocation, threshold } => {
+                format!("lexi-B{}+skip{threshold:.2}", allocation.budget())
             }
         }
     }
@@ -189,6 +228,37 @@ mod tests {
         let m = spec("mixtral-8x7b").unwrap();
         let gib = Transform::Baseline.expert_memory_gib(&m);
         assert!((gib - 84.0).abs() < 2.0, "{gib}");
+    }
+
+    #[test]
+    fn lexi_plus_intra_composes_allocation_and_ffn() {
+        let m = spec("mixtral-8x7b").unwrap(); // E=8, k=2, L=32
+        let alloc = Allocation::uniform(32, 2);
+        let t = Transform::LexiPlusIntra { allocation: alloc.clone(), frac: 0.25 };
+        assert_eq!(t.k_per_layer(&m), alloc.k);
+        assert_eq!(t.ffn_dim(14336), 10752);
+        assert!(t.reduces_memory());
+        // footprint shrinks by exactly the pruned FFN fraction
+        let base = Transform::Baseline.expert_memory_gib(&m);
+        assert!((t.expert_memory_gib(&m) / base - 0.75).abs() < 1e-9);
+        assert_eq!(t.label(), "lexi-B64+intra25");
+    }
+
+    #[test]
+    fn lexi_plus_skip_only_thins_layers_with_headroom() {
+        let m = spec("mixtral-8x7b").unwrap(); // k=2
+        // half the layers allocated k=1 (nothing to skip), half k=2
+        let alloc = Allocation::new(
+            vec![1u32; 16].into_iter().chain(vec![2u32; 16]).collect(),
+        );
+        let t = Transform::LexiPlusSkip { allocation: alloc.clone(), threshold: 0.3 };
+        assert_eq!(t.k_per_layer(&m), alloc.k);
+        assert_eq!(t.ffn_dim(14336), 14336);
+        assert!(!t.reduces_memory());
+        // expected k: k=1 layers stay at 1, k=2 layers lose skip_prob
+        let ek = t.expected_k(&m, 0.4);
+        assert!((ek - (16.0 * 1.0 + 16.0 * 1.6) / 32.0).abs() < 1e-12, "{ek}");
+        assert_eq!(t.label(), "lexi-B48+skip0.30");
     }
 
     #[test]

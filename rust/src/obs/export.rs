@@ -6,7 +6,10 @@
 //! thread per request (queue → prefill → decode complete spans), and
 //! process `replica + 1` holds that replica's phase spans plus instant
 //! markers for rung switches and steals. Timestamps are microseconds,
-//! as the `trace_event` format requires.
+//! as the `trace_event` format requires. `rung` fields are linear
+//! quality-lattice indices (row-major `s * k_dim + k`; identical to
+//! the historical rung index on 1-D ladders), so traces from 2-D
+//! lattice runs stay shape-compatible with every earlier consumer.
 
 use std::path::Path;
 

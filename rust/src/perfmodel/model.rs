@@ -149,6 +149,22 @@ impl PerfModel {
                     (self.spec.top_k as f64 - p).max(1.0)
                 })
                 .collect(),
+            // allocation + skipping: only layers allocated k >= 2 have a
+            // 2nd expert to drop, and each sheds its layer's expected
+            // skip mass
+            Transform::LexiPlusSkip { allocation, threshold } => allocation
+                .k
+                .iter()
+                .enumerate()
+                .map(|(j, &k)| {
+                    if k >= 2 {
+                        let p = routing.skip_probability(j, *threshold, 256, self.seed + j as u64);
+                        (k as f64 - p).max(1.0)
+                    } else {
+                        k as f64
+                    }
+                })
+                .collect(),
             _ => t
                 .k_per_layer(&self.spec)
                 .iter()
@@ -423,6 +439,50 @@ mod tests {
         );
         let skip = pm.throughput(&Transform::DynamicSkip { threshold: 0.5 }, 16, 1024, 512);
         assert!(skip.throughput_tok_s >= base.throughput_tok_s * 0.98);
+        assert!(skip.throughput_tok_s <= k1.throughput_tok_s * 1.02);
+    }
+
+    #[test]
+    fn lattice_axis_transforms_price_honestly() {
+        // The 2-D quality lattice's second axis must buy real modeled
+        // latency: at a fixed Stage-2 allocation, shrinking the FFN dim
+        // (intra) or skipping weak 2nd experts must not be slower, and
+        // intra must strictly beat the same allocation dense — decode is
+        // memory-bound, so cutting weight bytes cuts step time.
+        let pm = model("mixtral-8x7b"); // k_base = 2: skip is applicable
+        let alloc = Allocation::uniform(32, 2);
+        let lexi = pm.throughput(
+            &Transform::Lexi { allocation: alloc.clone() },
+            16,
+            1024,
+            512,
+        );
+        let intra = pm.throughput(
+            &Transform::LexiPlusIntra { allocation: alloc.clone(), frac: 0.5 },
+            16,
+            1024,
+            512,
+        );
+        let skip = pm.throughput(
+            &Transform::LexiPlusSkip { allocation: alloc.clone(), threshold: 0.5 },
+            16,
+            1024,
+            512,
+        );
+        assert!(
+            intra.throughput_tok_s > lexi.throughput_tok_s,
+            "intra {} <= dense {}",
+            intra.throughput_tok_s,
+            lexi.throughput_tok_s
+        );
+        assert!(skip.throughput_tok_s >= lexi.throughput_tok_s * 0.98);
+        // skipping cannot beat running every layer at k=1 outright
+        let k1 = pm.throughput(
+            &Transform::Lexi { allocation: Allocation::uniform(32, 1) },
+            16,
+            1024,
+            512,
+        );
         assert!(skip.throughput_tok_s <= k1.throughput_tok_s * 1.02);
     }
 

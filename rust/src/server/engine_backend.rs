@@ -112,6 +112,16 @@ impl<'m, M: ModelBackend> EngineReplica<'m, M> {
             engine.queue_capacity(),
             slots
         );
+        // k is a runtime graph argument, but intra-expert pruning and
+        // gate skipping edit weights / the routing kernel — neither is
+        // reconfigurable online. Reject 2-D lattices at construction
+        // instead of silently serving dense experts at an s > 0 point.
+        anyhow::ensure!(
+            ladder.s_dim() == 1,
+            "engine backend supports k-axis ladders only (--ladder-axes k); \
+             the {}-level sparsity axis is sim-only",
+            ladder.s_dim() - 1
+        );
         let n_rungs = ladder.n_rungs().max(1);
         Ok(EngineReplica {
             id,
@@ -230,6 +240,10 @@ impl<'m, M: ModelBackend> ReplicaBackend for EngineReplica<'m, M> {
             replica: self.id,
             accepting: !self.failed,
             rung: self.rung,
+            point: self
+                .ladder
+                .point_id(self.rung)
+                .expect("replica rung off the quality lattice"),
             last_switch_s: self.last_switch_s,
             queue_len: self.queue.len(),
             active: self.inflight.len(),
@@ -275,7 +289,17 @@ impl<'m, M: ModelBackend> ReplicaBackend for EngineReplica<'m, M> {
             return;
         }
         self.telemetry_version += 1;
-        let k_vec = self.ladder.k_vec(rung);
+        let point = self
+            .ladder
+            .point(rung)
+            .expect("controller set an off-lattice rung index");
+        // the constructor rejects lattices with an s axis, so every
+        // reachable point reconfigures through k_vec alone
+        debug_assert!(
+            point.intra_frac == 0.0 && point.skip_threshold == 0.0,
+            "engine backend cannot reconfigure intra/skip online"
+        );
+        let k_vec = point.allocation.k.iter().map(|&k| k as i32).collect();
         self.engine
             .set_k_vec(k_vec)
             .expect("ladder allocation layer count must match the engine graph");

@@ -1,89 +1,179 @@
-//! Adaptive LExI quality ladder: precomputed Stage-2 allocations at
-//! descending budgets, swapped onto replicas under queue pressure.
+//! Adaptive LExI quality lattice: precomputed Stage-2 quality points,
+//! swapped onto replicas under pressure.
 //!
 //! The paper optimizes ONE static per-layer allocation for a fixed
 //! budget. Serving load is not static — so the ladder extends Stage 2
-//! into the time dimension: rung 0 is the pretrained baseline (full
-//! budget, zero quality loss), deeper rungs are LExI allocations at 80 /
-//! 65 / 50 % budgets, each the `exact_dp` optimum of the Stage-1
-//! sensitivity table (deterministic, so every run and replica agrees on
-//! the ladder).
+//! into the time dimension. Historically a rung was an index into a
+//! `Vec` of budgets (100 / 80 / 65 / 50 %); it is now a typed point in a
+//! 2-D **quality lattice**:
 //!
-//! Rung decisions are made by ONE [`LadderController`] per cluster — a
-//! pure function of the [`ClusterSnapshot`] telemetry layer. It runs in
+//! * **k axis** — the per-layer active-expert budget fraction, each
+//!   point the `exact_dp` optimum of the Stage-1 sensitivity table
+//!   (deterministic, so every run and replica agrees on the lattice).
+//! * **s axis** (optional, `--ladder-axes k-intra|k-skip`) — intra-expert
+//!   structured sparsity (MoE-I²-style FFN-dim pruning) or NAEE-style
+//!   dynamic top-2 gate skipping, layered on top of each k-axis
+//!   allocation. Points are priced through [`Transform::LexiPlusIntra`]
+//!   / [`Transform::LexiPlusSkip`] so each has an honest latency model,
+//!   and their quality loss is the Stage-1 proxy at the fractional
+//!   effective k (see [`SensitivityTable::fitness_fractional`]).
+//!
+//! Points are addressed two ways: a typed [`PointId`] `(k, s)` and the
+//! canonical **linear index** `idx = s * k_dim + k` — the wire format
+//! used by telemetry, traces, and `rung_time_s`. A 1-D lattice
+//! (`--ladder-axes k`, the default) has `s_dim == 1`, so linear indices
+//! coincide with the historical rung indices and every default artifact
+//! stays byte-identical.
+//!
+//! The **legal-move graph** restricts controller moves to lattice
+//! neighbors: one step along one axis. Rung decisions are made by ONE
+//! [`LadderController`] per cluster — a pure function of the
+//! [`ClusterSnapshot`] telemetry layer. Under pressure it degrades to
+//! the neighbor with the best *marginal latency per quality* (decode
+//! step time saved per Stage-1 loss added); when drained it recovers
+//! along the neighbor with the best quality recovered per latency paid.
+//! On a 1-D lattice both neighbor sets are singletons, so the decision
+//! reduces bit-identically to the historical ±1 rung walk. It runs in
 //! two scopes:
 //!
 //! * [`LadderScope::PerReplica`] — each replica follows its own
-//!   hysteretic rule (the original queue-depth controller, preserved
-//!   bit-for-bit: degrade one rung past `degrade_above`, climb back
-//!   below `upgrade_below`, dwell between switches).
+//!   hysteretic rule (the original queue-depth controller: degrade one
+//!   step past `degrade_above`, climb back below `upgrade_below`, dwell
+//!   between switches).
 //! * [`LadderScope::Cluster`] — the controller reads *aggregate*
 //!   pressure and co-optimizes the assignment: at most
 //!   `max_switches_per_instant` replicas move per event-loop instant,
 //!   most-pressured replicas degrade first and least-pressured replicas
-//!   recover first, so a cluster under a burst staggers down the ladder
-//!   instead of flapping every replica simultaneously.
+//!   recover first (ordered by lattice depth `k + s`), so a cluster
+//!   under a burst staggers down the lattice instead of flapping every
+//!   replica simultaneously.
 //!
-//! Both scopes support two pressure signals
-//! ([`PressureMode`], `--pressure queue|slack`):
-//!
-//! * `queue` — queue depth against the `degrade_above`/`upgrade_below`
-//!   thresholds (the PR 2 rule, bit-identical).
-//! * `slack` — normalized EDF slack of queued *interactive* requests:
-//!   degrade when the worst queued interactive request has burned more
-//!   than `1 - slack_degrade_frac` of its TTFT budget, recover when all
-//!   queued interactive slack is above `slack_upgrade_frac`. Reacts to
-//!   deadline collapse directly instead of waiting for mean depth to
-//!   rise, so a flash crowd is met before the SLO is already lost.
+//! Both scopes support the same pressure signals
+//! ([`PressureMode`], `--pressure queue|slack|slack-ewma|burn`):
+//! queue depth against the `degrade_above`/`upgrade_below` thresholds,
+//! normalized EDF slack of queued *interactive* requests (instantaneous
+//! or EWMA-projected), or the health engine's SLO burn fraction.
 
 use anyhow::{Context, Result};
 
 use crate::config::model::ModelSpec;
-use crate::config::server::{LadderScope, PressureMode, ServerConfig};
+use crate::config::server::{
+    validate_axis_levels, validate_ladder_fracs, LadderAxes, LadderScope, PressureMode,
+    ServerConfig,
+};
 use crate::lexi::evolution::exact_dp;
 use crate::lexi::SensitivityTable;
 use crate::moe::allocation::{Allocation, Bounds};
 use crate::moe::transform::Transform;
 use crate::perfmodel::PerfModel;
+use crate::pruning::dynamic_skip;
 
 use super::replica::ServiceModel;
 use super::telemetry::{ClusterSnapshot, ReplicaTelemetry};
 
-/// One quality level: allocation + calibrated service model + the
-/// Stage-1 proxy loss the allocation costs.
+/// Typed coordinate of a quality point: `k` steps along the
+/// active-expert budget axis (0 = full budget), `s` steps along the
+/// intra-expert sparsity / dynamic-skip axis (0 = dense, no skipping).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub struct PointId {
+    pub k: usize,
+    pub s: usize,
+}
+
+impl PointId {
+    /// Manhattan distance from the full-quality corner — the scalar
+    /// "how degraded" measure the cluster scope staggers by. On a 1-D
+    /// lattice `depth == k == linear index`, matching the historical
+    /// rung ordering exactly.
+    pub fn depth(&self) -> usize {
+        self.k + self.s
+    }
+}
+
+/// One quality point: allocation + axis knobs + calibrated service
+/// model + the Stage-1 proxy loss the configuration costs.
 #[derive(Clone, Debug)]
-pub struct Rung {
+pub struct QualityPoint {
     pub label: String,
     pub allocation: Allocation,
+    /// Intra-expert FFN-dim prune fraction in [0, 1); 0 = dense experts.
+    pub intra_frac: f64,
+    /// Dynamic top-2 skip gate threshold; 0 = skipping off.
+    pub skip_threshold: f64,
     pub service: ServiceModel,
-    /// Stage-1 proxy `phi(k) = sum_j D_j(k_j)`; 0 for the baseline.
-    /// NaN marks a transform whose loss is NOT on the Stage-1 scale
-    /// (e.g. expert pruning) — reports surface it as unknown, never 0.
+    /// Stage-1 proxy `phi(k) = sum_j D_j(k_j)` (fractional-k
+    /// interpolated for points off the dense k axis); 0 for the
+    /// baseline. NaN marks a transform whose loss is NOT on the Stage-1
+    /// scale (e.g. expert pruning) — reports surface it as unknown
+    /// (`null` in JSON), never 0.
     pub quality_loss: f64,
 }
 
-/// Rungs ordered best-quality-first (rung 0 = baseline).
-#[derive(Clone, Debug)]
-pub struct QualityLadder {
-    pub rungs: Vec<Rung>,
+impl QualityPoint {
+    /// A pure k-axis point: dense experts, no skipping. The constructor
+    /// every historical `Rung { .. }` literal maps onto.
+    pub fn k_only(
+        label: &str,
+        allocation: Allocation,
+        service: ServiceModel,
+        quality_loss: f64,
+    ) -> Self {
+        QualityPoint {
+            label: label.to_string(),
+            allocation,
+            intra_frac: 0.0,
+            skip_threshold: 0.0,
+            service,
+            quality_loss,
+        }
+    }
 }
 
-impl QualityLadder {
-    /// Build the ladder for a model: baseline rung + one LExI rung per
-    /// budget fraction, allocations from `exact_dp` over the Stage-1
-    /// table (measured when cached, synthetic depth profile otherwise).
+/// Historical name for a lattice point.
+pub type Rung = QualityPoint;
+
+/// The quality surface: `k_dim × s_dim` points in row-major order
+/// (`idx = s * k_dim + k`), best quality first on each axis, plus the
+/// legal-move graph (neighbors differ by one step on one axis).
+///
+/// Constructed once per run and shared (`Rc`) across replicas; the
+/// accessors are total over `0..n_points()` and return `None` beyond —
+/// callers `expect` so a controller emitting an out-of-lattice index
+/// fails loudly instead of silently serving the deepest point.
+#[derive(Clone, Debug)]
+pub struct QualityLattice {
+    k_dim: usize,
+    s_dim: usize,
+    points: Vec<QualityPoint>,
+}
+
+/// Historical name: a 1-D lattice is exactly the old quality ladder.
+pub type QualityLadder = QualityLattice;
+
+impl QualityLattice {
+    /// Build the lattice for a model. The k axis is the historical
+    /// ladder — baseline point + one LExI point per budget fraction,
+    /// allocations from `exact_dp` over the Stage-1 table. With
+    /// `--ladder-axes k-intra|k-skip`, each additional s level replays
+    /// the whole k axis through [`Transform::LexiPlusIntra`] /
+    /// [`Transform::LexiPlusSkip`] so every point carries its own
+    /// priced service model and a Stage-1-comparable quality loss.
     pub fn for_model(
         spec: &ModelSpec,
         table: &SensitivityTable,
         cfg: &ServerConfig,
         pm: &PerfModel,
     ) -> Result<Self> {
+        // re-validated here so programmatic configs fail as loudly as
+        // parsed ones (a NaN frac used to panic inside the sort below)
+        validate_ladder_fracs(&cfg.ladder_fracs)?;
         let k_base = spec.top_k as u32;
         let slots = cfg.slots_per_replica;
         let baseline = Allocation::uniform(spec.n_layers, k_base);
-        let mut rungs = vec![Rung {
-            label: "base".to_string(),
-            service: ServiceModel::from_perf(
+        let mut points = vec![QualityPoint::k_only(
+            "base",
+            baseline,
+            ServiceModel::from_perf(
                 pm,
                 &Transform::Baseline,
                 slots,
@@ -91,12 +181,11 @@ impl QualityLadder {
                 cfg.service_out_len,
                 "base",
             ),
-            allocation: baseline,
-            quality_loss: 0.0,
-        }];
+            0.0,
+        )];
         let bounds = Bounds::paper(k_base);
         let mut fracs = cfg.ladder_fracs.clone();
-        fracs.sort_by(|a, b| b.partial_cmp(a).unwrap()); // descending budget
+        fracs.sort_by(|a, b| b.total_cmp(a)); // descending budget
         for frac in fracs {
             let budget = ((spec.baseline_budget() as f64 * frac).round() as u32)
                 .max(spec.n_layers as u32);
@@ -106,70 +195,289 @@ impl QualityLadder {
             let t = Transform::Lexi {
                 allocation: allocation.clone(),
             };
-            rungs.push(Rung {
-                service: ServiceModel::from_perf(
+            let service = ServiceModel::from_perf(
+                pm,
+                &t,
+                slots,
+                cfg.service_in_len,
+                cfg.service_out_len,
+                &label,
+            );
+            let quality_loss = table.fitness(&allocation.k);
+            points.push(QualityPoint::k_only(&label, allocation, service, quality_loss));
+        }
+        let k_dim = points.len();
+
+        // ---- s axis: replay the k axis at each sparsity level ----
+        let s_levels: Vec<f64> = match cfg.ladder_axes {
+            LadderAxes::K => Vec::new(),
+            LadderAxes::KIntra => {
+                validate_axis_levels(&cfg.intra_fracs, LadderAxes::KIntra)?;
+                let mut v = cfg.intra_fracs.clone();
+                v.sort_by(f64::total_cmp); // mild -> aggressive as s grows
+                v.dedup();
+                v
+            }
+            LadderAxes::KSkip => {
+                dynamic_skip::check_applicable(spec.top_k).with_context(|| {
+                    format!(
+                        "--ladder-axes k-skip needs a top-2 router; {} routes top-{}",
+                        spec.name, spec.top_k
+                    )
+                })?;
+                validate_axis_levels(&cfg.skip_thresholds, LadderAxes::KSkip)?;
+                let mut v = cfg.skip_thresholds.clone();
+                v.sort_by(f64::total_cmp);
+                v.dedup();
+                v
+            }
+        };
+        let row0: Vec<(String, Allocation)> = points
+            .iter()
+            .map(|p| (p.label.clone(), p.allocation.clone()))
+            .collect();
+        for &level in &s_levels {
+            for (base_label, allocation) in &row0 {
+                let (t, label, intra_frac, skip_threshold) = match cfg.ladder_axes {
+                    LadderAxes::KIntra => (
+                        Transform::LexiPlusIntra {
+                            allocation: allocation.clone(),
+                            frac: level,
+                        },
+                        format!("{base_label}+intra{:.0}", level * 100.0),
+                        level,
+                        0.0,
+                    ),
+                    LadderAxes::KSkip => (
+                        Transform::LexiPlusSkip {
+                            allocation: allocation.clone(),
+                            threshold: level,
+                        },
+                        format!("{base_label}+skip{level:.2}"),
+                        0.0,
+                        level,
+                    ),
+                    LadderAxes::K => unreachable!("no s levels on a 1-D lattice"),
+                };
+                let service = ServiceModel::from_perf(
                     pm,
                     &t,
                     slots,
                     cfg.service_in_len,
                     cfg.service_out_len,
                     &label,
-                ),
-                quality_loss: table.fitness(&allocation.k),
-                allocation,
-                label,
-            });
+                );
+                let k_eff =
+                    effective_k(allocation, cfg.ladder_axes, level, k_base, pm);
+                let quality_loss = table.fitness_fractional(&k_eff);
+                points.push(QualityPoint {
+                    label,
+                    allocation: allocation.clone(),
+                    intra_frac,
+                    skip_threshold,
+                    service,
+                    quality_loss,
+                });
+            }
         }
-        Ok(QualityLadder { rungs })
+        Ok(QualityLattice {
+            k_dim,
+            s_dim: 1 + s_levels.len(),
+            points,
+        })
     }
 
-    /// Single-rung ladder: a fixed transform, no adaptation.
+    /// Single-point lattice: a fixed transform, no adaptation.
     pub fn fixed(label: &str, allocation: Allocation, service: ServiceModel) -> Self {
         Self::fixed_with_loss(label, allocation, service, 0.0)
     }
 
-    /// Single-rung ladder with an explicit Stage-1 proxy loss.
+    /// Single-point lattice with an explicit Stage-1 proxy loss.
     pub fn fixed_with_loss(
         label: &str,
         allocation: Allocation,
         service: ServiceModel,
         quality_loss: f64,
     ) -> Self {
-        QualityLadder {
-            rungs: vec![Rung {
-                label: label.to_string(),
-                allocation,
-                service,
-                quality_loss,
-            }],
+        Self::from_points_1d(vec![QualityPoint::k_only(
+            label,
+            allocation,
+            service,
+            quality_loss,
+        )])
+    }
+
+    /// 1-D lattice over explicit points (k axis only) — the historical
+    /// `QualityLadder { rungs }` literal.
+    pub fn from_points_1d(points: Vec<QualityPoint>) -> Self {
+        assert!(!points.is_empty(), "a lattice needs at least one point");
+        QualityLattice {
+            k_dim: points.len(),
+            s_dim: 1,
+            points,
         }
     }
 
+    /// Lattice over an explicit row-major grid (`points.len()` must be a
+    /// multiple of `k_dim`). Test/bench constructor.
+    pub fn from_grid(k_dim: usize, points: Vec<QualityPoint>) -> Self {
+        assert!(k_dim > 0 && !points.is_empty(), "empty lattice");
+        assert_eq!(
+            points.len() % k_dim,
+            0,
+            "grid of {} points is not a multiple of k_dim {k_dim}",
+            points.len()
+        );
+        let s_dim = points.len() / k_dim;
+        QualityLattice {
+            k_dim,
+            s_dim,
+            points,
+        }
+    }
+
+    pub fn n_points(&self) -> usize {
+        self.points.len()
+    }
+
+    /// Historical alias for [`n_points`](Self::n_points).
     pub fn n_rungs(&self) -> usize {
-        self.rungs.len()
+        self.n_points()
     }
 
-    pub fn service(&self, rung: usize) -> &ServiceModel {
-        &self.rungs[rung.min(self.rungs.len() - 1)].service
+    /// Points along the budget axis (s = 0 row length).
+    pub fn k_dim(&self) -> usize {
+        self.k_dim
     }
 
-    /// Per-layer top-k vector of a rung, in the engine's `k_vec` format.
-    pub fn k_vec(&self, rung: usize) -> Vec<i32> {
-        self.rungs[rung.min(self.rungs.len() - 1)]
-            .allocation
-            .k
-            .iter()
-            .map(|&k| k as i32)
-            .collect()
+    /// Levels along the sparsity axis (1 = the historical 1-D ladder).
+    pub fn s_dim(&self) -> usize {
+        self.s_dim
     }
+
+    /// All points in canonical (row-major) linear order.
+    pub fn points(&self) -> &[QualityPoint] {
+        &self.points
+    }
+
+    /// Mutable points view — calibration refits service models in
+    /// place; the grid shape itself is immutable.
+    pub fn points_mut(&mut self) -> &mut [QualityPoint] {
+        &mut self.points
+    }
+
+    pub fn point(&self, idx: usize) -> Option<&QualityPoint> {
+        self.points.get(idx)
+    }
+
+    /// Service model of a point, `None` when `idx` is off the lattice
+    /// (the historical accessor clamped to the deepest rung, hiding
+    /// controller bugs).
+    pub fn service(&self, idx: usize) -> Option<&ServiceModel> {
+        self.points.get(idx).map(|p| &p.service)
+    }
+
+    /// Per-layer top-k vector of a point in the engine's `k_vec`
+    /// format, `None` when `idx` is off the lattice.
+    pub fn k_vec(&self, idx: usize) -> Option<Vec<i32>> {
+        self.points
+            .get(idx)
+            .map(|p| p.allocation.k.iter().map(|&k| k as i32).collect())
+    }
+
+    /// Typed coordinate of a linear index.
+    pub fn point_id(&self, idx: usize) -> Option<PointId> {
+        (idx < self.points.len()).then(|| PointId {
+            k: idx % self.k_dim,
+            s: idx / self.k_dim,
+        })
+    }
+
+    /// Linear index of a typed coordinate.
+    pub fn index_of(&self, id: PointId) -> Option<usize> {
+        (id.k < self.k_dim && id.s < self.s_dim).then(|| id.s * self.k_dim + id.k)
+    }
+
+    /// Lattice depth (`k + s`) of a linear index; out-of-lattice
+    /// indices fall back to the index itself so orderings stay total.
+    pub fn depth_of(&self, idx: usize) -> usize {
+        self.point_id(idx).map_or(idx, |p| p.depth())
+    }
+
+    /// Legal quality-reducing moves from `idx`: one step deeper along
+    /// exactly one axis, k axis first. Empty at the worst corner.
+    pub fn degrade_neighbors(&self, idx: usize) -> Vec<usize> {
+        let Some(id) = self.point_id(idx) else {
+            return Vec::new();
+        };
+        let mut v = Vec::with_capacity(2);
+        if id.k + 1 < self.k_dim {
+            v.push(idx + 1);
+        }
+        if id.s + 1 < self.s_dim {
+            v.push(idx + self.k_dim);
+        }
+        v
+    }
+
+    /// Legal quality-recovering moves from `idx`: one step shallower
+    /// along exactly one axis, k axis first. Empty at full quality.
+    pub fn upgrade_neighbors(&self, idx: usize) -> Vec<usize> {
+        let Some(id) = self.point_id(idx) else {
+            return Vec::new();
+        };
+        let mut v = Vec::with_capacity(2);
+        if id.k > 0 {
+            v.push(idx - 1);
+        }
+        if id.s > 0 {
+            v.push(idx - self.k_dim);
+        }
+        v
+    }
+
+    /// The full legal-move neighborhood of `idx` (both directions).
+    pub fn neighbors(&self, idx: usize) -> Vec<usize> {
+        let mut v = self.upgrade_neighbors(idx);
+        v.extend(self.degrade_neighbors(idx));
+        v
+    }
+}
+
+/// Per-layer effective active experts of an s-axis point — the
+/// fractional k whose interpolated Stage-1 loss prices the point's
+/// quality. Intra pruning scales each layer's expert capacity by
+/// `1 - frac`; dynamic skipping sheds the per-layer skip probability
+/// from layers with top-2 headroom (matching the perf-model pricing's
+/// skip distribution exactly, same Monte-Carlo seed).
+pub(crate) fn effective_k(
+    allocation: &Allocation,
+    axes: LadderAxes,
+    level: f64,
+    k_base: u32,
+    pm: &PerfModel,
+) -> Vec<f64> {
+    allocation
+        .k
+        .iter()
+        .enumerate()
+        .map(|(j, &k)| match axes {
+            LadderAxes::KIntra => (k as f64 * (1.0 - level)).clamp(1.0, k_base as f64),
+            LadderAxes::KSkip if k >= 2 => {
+                let p = pm.routing.skip_probability(j, level, 256, pm.seed + j as u64);
+                (k as f64 - p).max(1.0)
+            }
+            _ => k as f64,
+        })
+        .collect()
 }
 
 /// Hysteretic rung policy (stateless decision rule + controller scope).
 #[derive(Clone, Copy, Debug)]
 pub struct LadderPolicy {
-    /// Queue depth at which a replica degrades one rung.
+    /// Queue depth at which a replica degrades one step.
     pub degrade_above: usize,
-    /// Queue depth below which it climbs back toward rung 0.
+    /// Queue depth below which it climbs back toward full quality.
     pub upgrade_below: usize,
     /// Minimum time between switches of one replica.
     pub min_dwell_s: f64,
@@ -217,9 +525,10 @@ impl LadderPolicy {
         }
     }
 
-    /// Next rung for a replica given its queue depth. One step at a
-    /// time, hysteresis band between the thresholds, dwell time between
-    /// switches.
+    /// The historical 1-D rule: next rung for a replica given its queue
+    /// depth. One step at a time, hysteresis band between the
+    /// thresholds, dwell time between switches. Kept as the parity
+    /// reference the lattice controller must reproduce on 1-D lattices.
     pub fn decide(
         &self,
         current: usize,
@@ -264,8 +573,11 @@ impl LadderPolicy {
     }
 }
 
-/// The cluster's single rung controller: a pure function from the
-/// telemetry snapshot to target rungs each event-loop instant.
+/// The cluster's single quality controller: a pure function from the
+/// telemetry snapshot to a target lattice point per replica each
+/// event-loop instant. Moves follow the lattice's legal-move graph; on
+/// a 1-D lattice every decision is bit-identical to the historical
+/// [`LadderPolicy`] walk.
 #[derive(Clone, Debug)]
 pub struct LadderController {
     pub policy: LadderPolicy,
@@ -310,48 +622,142 @@ impl LadderController {
         }
     }
 
-    /// Target rung per replica. The cluster applies any change via
+    /// Best quality-reducing neighbor of `current`: the legal move with
+    /// the most decode-step time saved per unit of Stage-1 loss added
+    /// (free moves rank +∞; unknown-scale losses fall back to raw speed
+    /// gain). Ties keep the k axis. `None` at the worst corner.
+    fn best_degrade(lattice: &QualityLattice, current: usize) -> Option<usize> {
+        let cur = lattice.point(current)?;
+        let t_cur = cur.service.step_time(cur.service.slots());
+        let mut best: Option<(usize, f64)> = None;
+        for n in lattice.degrade_neighbors(current) {
+            let p = lattice.point(n)?;
+            let gain = t_cur - p.service.step_time(p.service.slots());
+            let dloss = p.quality_loss - cur.quality_loss;
+            let score = if !dloss.is_finite() {
+                gain
+            } else if dloss <= 0.0 {
+                if gain > 0.0 {
+                    f64::INFINITY
+                } else {
+                    gain
+                }
+            } else {
+                gain / dloss
+            };
+            if best.map_or(true, |(_, b)| score > b) {
+                best = Some((n, score));
+            }
+        }
+        best.map(|(n, _)| n)
+    }
+
+    /// Best quality-recovering neighbor of `current`: the legal move
+    /// with the most Stage-1 loss recovered per decode-step time paid
+    /// (free recoveries rank +∞). Ties keep the k axis. `None` at full
+    /// quality.
+    fn best_upgrade(lattice: &QualityLattice, current: usize) -> Option<usize> {
+        let cur = lattice.point(current)?;
+        let t_cur = cur.service.step_time(cur.service.slots());
+        let mut best: Option<(usize, f64)> = None;
+        for n in lattice.upgrade_neighbors(current) {
+            let p = lattice.point(n)?;
+            let recovered = cur.quality_loss - p.quality_loss;
+            let paid = p.service.step_time(p.service.slots()) - t_cur;
+            let score = if !recovered.is_finite() {
+                -paid
+            } else if paid <= 0.0 {
+                f64::INFINITY
+            } else {
+                recovered / paid
+            };
+            if best.map_or(true, |(_, b)| score > b) {
+                best = Some((n, score));
+            }
+        }
+        best.map(|(n, _)| n)
+    }
+
+    /// One hysteretic lattice step for a single replica: degrade to the
+    /// best marginal neighbor under pressure, recover along the best
+    /// marginal neighbor when drained, hold in the band / during dwell.
+    /// With singleton neighbor sets (1-D lattice) this is exactly
+    /// [`LadderPolicy::decide`] / [`decide_slack`](LadderPolicy::decide_slack).
+    fn step_point(
+        &self,
+        lattice: &QualityLattice,
+        current: usize,
+        degrade: bool,
+        upgrade: bool,
+        now: f64,
+        last_switch_s: f64,
+    ) -> usize {
+        if lattice.n_points() <= 1 || now - last_switch_s < self.policy.min_dwell_s {
+            return current;
+        }
+        if degrade {
+            if let Some(n) = Self::best_degrade(lattice, current) {
+                return n;
+            }
+        }
+        if upgrade {
+            if let Some(n) = Self::best_upgrade(lattice, current) {
+                return n;
+            }
+        }
+        current
+    }
+
+    /// Target lattice point (linear index) per replica. The cluster
+    /// applies any change via
     /// [`ReplicaBackend::set_rung`](super::backend::ReplicaBackend::set_rung).
-    pub fn decide(&mut self, snap: &ClusterSnapshot, n_rungs: usize) -> Vec<usize> {
+    pub fn decide(&mut self, snap: &ClusterSnapshot, lattice: &QualityLattice) -> Vec<usize> {
         crate::prof_scope!("ladder.decide");
         let now = snap.now_s;
         match self.policy.scope {
             LadderScope::PerReplica => snap
                 .replicas
                 .iter()
-                .map(|t| match self.policy.pressure {
-                    PressureMode::Queue => self
-                        .policy
-                        .decide(t.rung, n_rungs, t.queue_len, now, t.last_switch_s),
-                    PressureMode::Slack | PressureMode::SlackEwma => self.policy.decide_slack(
-                        t.rung,
-                        n_rungs,
-                        Self::slack_frac_for(t, self.policy.pressure),
-                        now,
-                        t.last_switch_s,
-                    ),
-                    // burn is a cluster-wide signal; every replica reads
-                    // the same fraction through the slack hysteresis
-                    PressureMode::Burn => self.policy.decide_slack(
-                        t.rung,
-                        n_rungs,
-                        self.burn_frac.unwrap_or(f64::INFINITY),
-                        now,
-                        t.last_switch_s,
-                    ),
+                .map(|t| {
+                    let (degrade, upgrade) = match self.policy.pressure {
+                        PressureMode::Queue => (
+                            t.queue_len > self.policy.degrade_above,
+                            t.queue_len < self.policy.upgrade_below,
+                        ),
+                        PressureMode::Slack | PressureMode::SlackEwma => {
+                            let f = Self::slack_frac_for(t, self.policy.pressure);
+                            (
+                                f < self.policy.slack_degrade_frac,
+                                f > self.policy.slack_upgrade_frac,
+                            )
+                        }
+                        // burn is a cluster-wide signal; every replica
+                        // reads the same fraction through the slack
+                        // hysteresis
+                        PressureMode::Burn => {
+                            let f = self.burn_frac.unwrap_or(f64::INFINITY);
+                            (
+                                f < self.policy.slack_degrade_frac,
+                                f > self.policy.slack_upgrade_frac,
+                            )
+                        }
+                    };
+                    self.step_point(lattice, t.rung, degrade, upgrade, now, t.last_switch_s)
                 })
                 .collect(),
-            LadderScope::Cluster => self.decide_cluster(snap, n_rungs),
+            LadderScope::Cluster => self.decide_cluster(snap, lattice),
         }
     }
 
     /// Cluster-global co-optimization: one pressure reading for the
-    /// whole cluster, a bounded number of staggered moves per instant.
-    fn decide_cluster(&mut self, snap: &ClusterSnapshot, n_rungs: usize) -> Vec<usize> {
+    /// whole cluster, a bounded number of staggered moves per instant,
+    /// ordered by lattice depth (shallowest degrade first, deepest
+    /// recover first).
+    fn decide_cluster(&mut self, snap: &ClusterSnapshot, lattice: &QualityLattice) -> Vec<usize> {
         let views = &snap.replicas;
         let now = snap.now_s;
         let mut targets: Vec<usize> = views.iter().map(|v| v.rung).collect();
-        if n_rungs <= 1 || views.is_empty() {
+        if lattice.n_points() <= 1 || views.is_empty() {
             return targets;
         }
         // the instant budget makes staggering robust to the event loop
@@ -396,6 +802,7 @@ impl LadderController {
             }
         };
         let mode = self.policy.pressure;
+        let depth = |i: usize| lattice.depth_of(views[i].rung);
         let mut order: Vec<usize> = (0..views.len()).collect();
         if overloaded {
             // overload: spread degradation — highest-quality replicas
@@ -403,12 +810,11 @@ impl LadderController {
             match mode {
                 // burn has no per-replica reading: stagger by queue
                 PressureMode::Queue | PressureMode::Burn => order.sort_by_key(|&i| {
-                    (views[i].rung, std::cmp::Reverse(views[i].queue_len), i)
+                    (depth(i), std::cmp::Reverse(views[i].queue_len), i)
                 }),
                 PressureMode::Slack | PressureMode::SlackEwma => order.sort_by(|&a, &b| {
-                    views[a]
-                        .rung
-                        .cmp(&views[b].rung)
+                    depth(a)
+                        .cmp(&depth(b))
                         .then(
                             Self::slack_frac_for(&views[a], mode)
                                 .total_cmp(&Self::slack_frac_for(&views[b], mode)),
@@ -424,8 +830,8 @@ impl LadderController {
                 if now - v.last_switch_s < self.policy.min_dwell_s {
                     continue;
                 }
-                if v.rung + 1 < n_rungs {
-                    targets[i] = v.rung + 1;
+                if let Some(n) = Self::best_degrade(lattice, v.rung) {
+                    targets[i] = n;
                     budget -= 1;
                     self.switched_at_instant += 1;
                 }
@@ -435,12 +841,11 @@ impl LadderController {
             // least-pressured breaking ties
             match mode {
                 PressureMode::Queue | PressureMode::Burn => order.sort_by_key(|&i| {
-                    (std::cmp::Reverse(views[i].rung), views[i].queue_len, i)
+                    (std::cmp::Reverse(depth(i)), views[i].queue_len, i)
                 }),
                 PressureMode::Slack | PressureMode::SlackEwma => order.sort_by(|&a, &b| {
-                    views[b]
-                        .rung
-                        .cmp(&views[a].rung)
+                    depth(b)
+                        .cmp(&depth(a))
                         .then(
                             Self::slack_frac_for(&views[b], mode)
                                 .total_cmp(&Self::slack_frac_for(&views[a], mode)),
@@ -456,8 +861,8 @@ impl LadderController {
                 if now - v.last_switch_s < self.policy.min_dwell_s {
                     continue;
                 }
-                if v.rung > 0 {
-                    targets[i] = v.rung - 1;
+                if let Some(n) = Self::best_upgrade(lattice, v.rung) {
+                    targets[i] = n;
                     budget -= 1;
                     self.switched_at_instant += 1;
                 }
@@ -472,25 +877,36 @@ mod tests {
     use super::*;
     use crate::config::model::spec;
 
-    fn ladder() -> QualityLadder {
-        let m = spec("olmoe-1b-7b").unwrap();
-        let table = SensitivityTable::synthetic(m.name, m.n_layers, m.top_k as u32, |x| 0.8 + 2.4 * x, 0);
-        let cfg = ServerConfig {
+    fn cfg_with(axes: LadderAxes) -> ServerConfig {
+        ServerConfig {
             slots_per_replica: 4,
             service_in_len: 256,
             service_out_len: 32,
+            ladder_axes: axes,
             ..Default::default()
-        };
+        }
+    }
+
+    fn build(model: &str, axes: LadderAxes) -> Result<QualityLattice> {
+        let m = spec(model).unwrap();
+        let table =
+            SensitivityTable::synthetic(m.name, m.n_layers, m.top_k as u32, |x| 0.8 + 2.4 * x, 0);
+        let cfg = cfg_with(axes);
         let pm = PerfModel::new(m.clone(), 0);
-        QualityLadder::for_model(&m, &table, &cfg, &pm).unwrap()
+        QualityLattice::for_model(&m, &table, &cfg, &pm)
+    }
+
+    fn ladder() -> QualityLattice {
+        build("olmoe-1b-7b", LadderAxes::K).unwrap()
     }
 
     #[test]
     fn rungs_trade_quality_for_speed() {
         let l = ladder();
         assert_eq!(l.n_rungs(), 4); // base + 0.8 + 0.65 + 0.5
-        for w in l.rungs.windows(2) {
-            // monotone: each deeper rung loses quality...
+        assert_eq!((l.k_dim(), l.s_dim()), (4, 1));
+        for w in l.points().windows(2) {
+            // monotone: each deeper point loses quality...
             assert!(
                 w[1].quality_loss > w[0].quality_loss - 1e-12,
                 "{} -> {}",
@@ -506,9 +922,9 @@ mod tests {
             );
             assert!(w[1].allocation.budget() < w[0].allocation.budget());
         }
-        assert_eq!(l.rungs[0].quality_loss, 0.0);
+        assert_eq!(l.points()[0].quality_loss, 0.0);
         // k_vec export matches the allocation
-        let kv = l.k_vec(0);
+        let kv = l.k_vec(0).unwrap();
         assert_eq!(kv.len(), 16);
         assert!(kv.iter().all(|&k| k == 8));
     }
@@ -517,10 +933,96 @@ mod tests {
     fn ladder_is_deterministic() {
         let a = ladder();
         let b = ladder();
-        for (x, y) in a.rungs.iter().zip(&b.rungs) {
+        for (x, y) in a.points().iter().zip(b.points()) {
             assert_eq!(x.allocation, y.allocation);
             assert_eq!(x.quality_loss, y.quality_loss);
         }
+    }
+
+    #[test]
+    fn accessors_reject_out_of_lattice_indices() {
+        let l = ladder();
+        assert!(l.service(l.n_points()).is_none());
+        assert!(l.k_vec(l.n_points()).is_none());
+        assert!(l.point_id(l.n_points()).is_none());
+        assert!(l.service(l.n_points() - 1).is_some());
+    }
+
+    #[test]
+    fn intra_axis_builds_a_grid_with_honest_pricing() {
+        let l = build("olmoe-1b-7b", LadderAxes::KIntra).unwrap();
+        // defaults: 2 intra levels -> 3 s rows over the 4-point k axis
+        assert_eq!((l.k_dim(), l.s_dim(), l.n_points()), (4, 3, 12));
+        // the s = 0 row is byte-identical to the 1-D ladder
+        let flat = ladder();
+        for (a, b) in l.points()[..4].iter().zip(flat.points()) {
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.allocation, b.allocation);
+            assert_eq!(a.quality_loss, b.quality_loss);
+            assert_eq!(a.service.decode_step_s, b.service.decode_step_s);
+        }
+        for s in 1..l.s_dim() {
+            for k in 0..l.k_dim() {
+                let idx = l.index_of(PointId { k, s }).unwrap();
+                let p = l.point(idx).unwrap();
+                let above = l.point(idx - l.k_dim()).unwrap();
+                assert!(p.intra_frac > above.intra_frac - 1e-12, "{}", p.label);
+                // each s step cuts FFN bytes -> strictly faster decode...
+                assert!(
+                    p.service.step_time(4) < above.service.step_time(4),
+                    "{} not faster than {}",
+                    p.label,
+                    above.label
+                );
+                // ...and costs quality on the Stage-1 scale
+                assert!(
+                    p.quality_loss >= above.quality_loss,
+                    "{} lost less than {}",
+                    p.label,
+                    above.label
+                );
+                assert!(p.quality_loss.is_finite());
+            }
+        }
+    }
+
+    #[test]
+    fn skip_axis_requires_a_top2_router() {
+        // olmoe routes top-8: construction must fail loudly...
+        let err = build("olmoe-1b-7b", LadderAxes::KSkip).unwrap_err();
+        assert!(format!("{err:#}").contains("top-2"), "{err:#}");
+        // ...while a top-2 model builds a full grid
+        let l = build("mixtral-8x7b", LadderAxes::KSkip).unwrap();
+        assert_eq!(l.s_dim(), 3);
+        assert!(l.points().iter().skip(l.k_dim()).all(|p| p.skip_threshold > 0.0));
+        // skipping sheds fractional experts: loss strictly on-scale
+        for p in l.points().iter().skip(l.k_dim()) {
+            assert!(p.quality_loss.is_finite());
+        }
+    }
+
+    #[test]
+    fn legal_moves_are_single_axis_steps() {
+        let l = build("olmoe-1b-7b", LadderAxes::KIntra).unwrap();
+        for idx in 0..l.n_points() {
+            let id = l.point_id(idx).unwrap();
+            assert_eq!(l.index_of(id).unwrap(), idx);
+            for n in l.neighbors(idx) {
+                let nid = l.point_id(n).unwrap();
+                let dk = (nid.k as i64 - id.k as i64).abs();
+                let ds = (nid.s as i64 - id.s as i64).abs();
+                assert_eq!(dk + ds, 1, "{id:?} -> {nid:?} is not a single-axis step");
+            }
+            for n in l.degrade_neighbors(idx) {
+                assert_eq!(l.depth_of(n), id.depth() + 1);
+            }
+            for n in l.upgrade_neighbors(idx) {
+                assert_eq!(l.depth_of(n) + 1, id.depth());
+            }
+        }
+        // corners
+        assert!(l.upgrade_neighbors(0).is_empty());
+        assert!(l.degrade_neighbors(l.n_points() - 1).is_empty());
     }
 
     #[test]
@@ -543,6 +1045,29 @@ mod tests {
         assert_eq!(p.decide(3, 4, 100, 5.0, 0.0), 3);
         // single-rung ladders never switch
         assert_eq!(p.decide(0, 1, 100, 5.0, 0.0), 0);
+    }
+
+    /// 1-D lattice of `n` synthetic points with decreasing step time
+    /// and increasing loss — the controller-test stand-in for the
+    /// historical `n_rungs` argument.
+    fn lin(n: usize) -> QualityLattice {
+        QualityLattice::from_points_1d(
+            (0..n)
+                .map(|i| {
+                    QualityPoint::k_only(
+                        &format!("r{i}"),
+                        Allocation::uniform(4, 2),
+                        ServiceModel::synthetic(
+                            &format!("r{i}"),
+                            1e-4,
+                            0.01 / (i as f64 + 1.0),
+                            4,
+                        ),
+                        i as f64,
+                    )
+                })
+                .collect(),
+        )
     }
 
     fn view(replica: usize, rung: usize, queue_len: usize) -> ReplicaTelemetry {
@@ -571,8 +1096,73 @@ mod tests {
         };
         let mut ctl = LadderController::new(p);
         // per-replica ignores the stagger budget: both degrade at once
-        let t = ctl.decide(&snap(1.0, vec![view(0, 0, 20), view(1, 0, 20)]), 4);
+        let t = ctl.decide(&snap(1.0, vec![view(0, 0, 20), view(1, 0, 20)]), &lin(4));
         assert_eq!(t, vec![1, 1]);
+    }
+
+    #[test]
+    fn lattice_controller_matches_legacy_walk_on_1d() {
+        // the tentpole's fallback contract: on a 1-D lattice the
+        // marginal-neighbor controller IS the historical ±1 walk
+        let p = LadderPolicy {
+            degrade_above: 10,
+            upgrade_below: 2,
+            min_dwell_s: 0.0,
+            scope: LadderScope::PerReplica,
+            ..Default::default()
+        };
+        let mut ctl = LadderController::new(p);
+        let l = lin(4);
+        let mut legacy = 0usize;
+        let mut lattice_rung = 0usize;
+        for (i, &q) in [20, 40, 3, 0, 7, 100, 1, 0, 0, 50, 12, 0].iter().enumerate() {
+            let now = i as f64;
+            legacy = p.decide(legacy, 4, q, now, f64::NEG_INFINITY);
+            lattice_rung = ctl.decide(&snap(now, vec![view(0, lattice_rung, q)]), &l)[0];
+            assert_eq!(lattice_rung, legacy, "diverged at step {i} (queue {q})");
+        }
+    }
+
+    #[test]
+    fn controller_prefers_the_cheaper_axis_in_2d() {
+        // 2x2 grid: the s step buys MORE speed for LESS loss than the k
+        // step, so pressure must move down the s axis first
+        let mk = |label: &str, step: f64, loss: f64| {
+            QualityPoint::k_only(
+                label,
+                Allocation::uniform(4, 2),
+                ServiceModel::synthetic(label, 1e-4, step, 4),
+                loss,
+            )
+        };
+        let l = QualityLattice::from_grid(
+            2,
+            vec![
+                mk("k0s0", 0.010, 0.0),
+                mk("k1s0", 0.008, 2.0),
+                mk("k0s1", 0.007, 1.0),
+                mk("k1s1", 0.005, 3.0),
+            ],
+        );
+        let p = LadderPolicy {
+            degrade_above: 10,
+            upgrade_below: 2,
+            min_dwell_s: 0.0,
+            scope: LadderScope::PerReplica,
+            ..Default::default()
+        };
+        let mut ctl = LadderController::new(p);
+        // degrade from (0,0): s neighbor (idx 2) scores 0.003/1 over the
+        // k neighbor's 0.002/2
+        let t = ctl.decide(&snap(1.0, vec![view(0, 0, 20)]), &l);
+        assert_eq!(t, vec![2]);
+        // degrade again from (0,1): only the k move remains legal
+        let t = ctl.decide(&snap(2.0, vec![view(0, 2, 20)]), &l);
+        assert_eq!(t, vec![3]);
+        // recovery from the worst corner: undo the k step first (most
+        // loss recovered per second paid: 1/0.002 vs 2/0.003)
+        let t = ctl.decide(&snap(3.0, vec![view(0, 3, 0)]), &l);
+        assert_eq!(t, vec![2]);
     }
 
     #[test]
@@ -586,17 +1176,18 @@ mod tests {
             ..Default::default()
         };
         let mut ctl = LadderController::new(p);
+        let l = lin(4);
         // overload everywhere: only the deepest queue degrades now
-        let t = ctl.decide(&snap(1.0, vec![view(0, 0, 15), view(1, 0, 40)]), 4);
+        let t = ctl.decide(&snap(1.0, vec![view(0, 0, 15), view(1, 0, 40)]), &l);
         assert_eq!(t, vec![0, 1]);
         // same instant again: budget spent, nobody else moves
-        let t = ctl.decide(&snap(1.0, vec![view(0, 0, 15), view(1, 1, 40)]), 4);
+        let t = ctl.decide(&snap(1.0, vec![view(0, 0, 15), view(1, 1, 40)]), &l);
         assert_eq!(t, vec![0, 1]);
         // next instant: the other replica takes its step
-        let t = ctl.decide(&snap(2.0, vec![view(0, 0, 15), view(1, 1, 40)]), 4);
+        let t = ctl.decide(&snap(2.0, vec![view(0, 0, 15), view(1, 1, 40)]), &l);
         assert_eq!(t, vec![1, 1]);
         // drained cluster recovers shallowest-first, one per instant
-        let t = ctl.decide(&snap(3.0, vec![view(0, 2, 0), view(1, 2, 1)]), 4);
+        let t = ctl.decide(&snap(3.0, vec![view(0, 2, 0), view(1, 2, 1)]), &l);
         assert_eq!(t, vec![1, 2]);
     }
 
@@ -611,7 +1202,7 @@ mod tests {
             ..Default::default()
         };
         let mut ctl = LadderController::new(p);
-        let t = ctl.decide(&snap(1.0, vec![view(0, 1, 5), view(1, 1, 6)]), 4);
+        let t = ctl.decide(&snap(1.0, vec![view(0, 1, 5), view(1, 1, 6)]), &lin(4));
         assert_eq!(t, vec![1, 1]);
     }
 
@@ -636,6 +1227,7 @@ mod tests {
             ..Default::default()
         };
         let mut ctl = LadderController::new(p);
+        let l = lin(4);
         // replica 0: slack collapsed -> degrade; replica 1: plenty of
         // slack -> hold; replica 2: nothing interactive queued -> it
         // may recover (but is already at rung 0)
@@ -648,14 +1240,14 @@ mod tests {
                     slack_view(2, 0, None),
                 ],
             ),
-            4,
+            &l,
         );
         assert_eq!(t, vec![1, 0, 0]);
         // degraded replica recovers once slack is restored
-        let t = ctl.decide(&snap(2.0, vec![slack_view(0, 2, Some(0.9))]), 4);
+        let t = ctl.decide(&snap(2.0, vec![slack_view(0, 2, Some(0.9))]), &l);
         assert_eq!(t, vec![1]);
         // inside the hysteresis band: hold
-        let t = ctl.decide(&snap(3.0, vec![slack_view(0, 2, Some(0.5))]), 4);
+        let t = ctl.decide(&snap(3.0, vec![slack_view(0, 2, Some(0.5))]), &l);
         assert_eq!(t, vec![2]);
     }
 
@@ -671,6 +1263,7 @@ mod tests {
             upgrade_below: 0,
             ..Default::default()
         };
+        let l = lin(4);
         // instantaneous slack healthy (0.5) but the EWMA projection says
         // the backlog will burn it to 0.1 before service starts
         let mut t = ReplicaTelemetry::idle(0);
@@ -678,13 +1271,13 @@ mod tests {
         t.projected_interactive_slack_frac = Some(0.1);
 
         let mut predictive = LadderController::new(p);
-        assert_eq!(predictive.decide(&snap(1.0, vec![t.clone()]), 4), vec![1]);
+        assert_eq!(predictive.decide(&snap(1.0, vec![t.clone()]), &l), vec![1]);
         // the instantaneous controller holds on the same telemetry
         let mut inst = LadderController::new(LadderPolicy {
             pressure: PressureMode::Slack,
             ..p
         });
-        assert_eq!(inst.decide(&snap(1.0, vec![t.clone()]), 4), vec![0]);
+        assert_eq!(inst.decide(&snap(1.0, vec![t.clone()]), &l), vec![0]);
 
         // cluster scope consumes the projected aggregate the same way
         let mut cluster = LadderController::new(LadderPolicy {
@@ -692,7 +1285,7 @@ mod tests {
             max_switches_per_instant: 1,
             ..p
         });
-        assert_eq!(cluster.decide(&snap(2.0, vec![t]), 4), vec![1]);
+        assert_eq!(cluster.decide(&snap(2.0, vec![t]), &l), vec![1]);
     }
 
     #[test]
@@ -708,16 +1301,17 @@ mod tests {
             ..Default::default()
         };
         let mut ctl = LadderController::new(p);
+        let l = lin(4);
         // no burn evidence yet: +∞ reading, a degraded replica recovers
-        let t = ctl.decide(&snap(1.0, vec![view(0, 2, 0)]), 4);
+        let t = ctl.decide(&snap(1.0, vec![view(0, 2, 0)]), &l);
         assert_eq!(t, vec![1]);
         // burn beyond critical (negative fraction): degrade
         ctl.set_burn_frac(Some(-0.5));
-        let t = ctl.decide(&snap(2.0, vec![view(0, 0, 0)]), 4);
+        let t = ctl.decide(&snap(2.0, vec![view(0, 0, 0)]), &l);
         assert_eq!(t, vec![1]);
         // healthy burn: climb back
         ctl.set_burn_frac(Some(0.9));
-        let t = ctl.decide(&snap(3.0, vec![view(0, 2, 0)]), 4);
+        let t = ctl.decide(&snap(3.0, vec![view(0, 2, 0)]), &l);
         assert_eq!(t, vec![1]);
         // cluster scope consumes the same reading, staggered
         let mut cluster = LadderController::new(LadderPolicy {
@@ -726,7 +1320,7 @@ mod tests {
             ..p
         });
         cluster.set_burn_frac(Some(0.1));
-        let t = cluster.decide(&snap(4.0, vec![view(0, 0, 3), view(1, 0, 9)]), 4);
+        let t = cluster.decide(&snap(4.0, vec![view(0, 0, 3), view(1, 0, 9)]), &l);
         assert_eq!(t, vec![0, 1]);
     }
 
@@ -742,17 +1336,18 @@ mod tests {
             ..Default::default()
         };
         let mut ctl = LadderController::new(p);
+        let l = lin(4);
         // aggregate slack collapsed: the worst-slack replica degrades
         // first, one move per instant
         let t = ctl.decide(
             &snap(1.0, vec![slack_view(0, 0, Some(0.2)), slack_view(1, 0, Some(0.05))]),
-            4,
+            &l,
         );
         assert_eq!(t, vec![0, 1]);
         // fully recovered cluster climbs back, most-degraded first
         let t = ctl.decide(
             &snap(2.0, vec![slack_view(0, 1, None), slack_view(1, 2, None)]),
-            4,
+            &l,
         );
         assert_eq!(t, vec![1, 1]);
     }

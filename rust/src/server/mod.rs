@@ -84,9 +84,13 @@ use crate::runtime::{Manifest, ModelBackend, ModelRuntime, Runtime, SyntheticMod
 
 pub use backend::{BackendStats, CompletedRequest, ReplicaBackend};
 pub use engine_backend::EngineReplica;
-pub use ladder::{LadderController, LadderPolicy, QualityLadder, Rung};
+pub use ladder::{
+    LadderController, LadderPolicy, PointId, QualityLadder, QualityLattice, QualityPoint, Rung,
+};
 pub use replica::{Replica, ServiceModel};
-pub use report::{ElasticityReport, LatencySamples, MemoryReport, TransformReport};
+pub use report::{
+    ElasticityReport, LatencySamples, MemoryReport, QualitySurfaceReport, TransformReport,
+};
 pub use router::{Cluster, RoutingPolicy, RunResult};
 pub use scheduler::{AdmissionControl, EdfQueue, QueuedRequest};
 pub use telemetry::{
@@ -198,8 +202,12 @@ fn contenders(
             art.source
         );
     }
-    // fixed mid-ladder rung: the paper's static ~65% deployment
-    let fixed_rung = full.rungs.get(full.n_rungs() / 2).unwrap_or(&full.rungs[0]);
+    // fixed mid-ladder rung: the paper's static ~65% deployment (the
+    // middle of the k axis — s-axis points never seed fixed contenders)
+    let fixed_rung = full
+        .points()
+        .get(full.k_dim() / 2)
+        .unwrap_or(&full.points()[0]);
     let fixed = QualityLadder::fixed_with_loss(
         &fixed_rung.label,
         fixed_rung.allocation.clone(),
@@ -208,8 +216,8 @@ fn contenders(
     );
     let baseline = QualityLadder::fixed(
         "base",
-        full.rungs[0].allocation.clone(),
-        full.rungs[0].service.clone(),
+        full.points()[0].allocation.clone(),
+        full.points()[0].service.clone(),
     );
     // Expert removal's accuracy cost is not on the Stage-1 top-k scale:
     // NaN -> the report shows quality loss as unknown, not as zero.
@@ -266,7 +274,7 @@ pub fn bench_serve(
     let pm = PerfModel::new(spec.clone(), cfg.seed);
     let line_up = contenders(spec, &table, cfg, &pm, calibration.as_ref())?;
     let tiered = tier_line_ups(spec, &table, cfg)?;
-    let base_svc = &line_up[0].ladder.rungs[0].service;
+    let base_svc = &line_up[0].ladder.points()[0].service;
     let (scenario, trace) = scenario_and_trace(base_svc, cfg)?;
 
     let runs = match cfg.backend {
@@ -339,7 +347,7 @@ pub fn bench_memory(
     println!("ladder Stage-1 table source: {source}");
     let pm = PerfModel::new(spec.clone(), cfg.seed);
     let ladder = QualityLadder::for_model(spec, &table, cfg, &pm)?;
-    let base_svc = &ladder.rungs[0].service;
+    let base_svc = &ladder.points()[0].service;
 
     // the identical workload contract across every sweep cell
     let (scenario, trace) = scenario_and_trace(base_svc, cfg)?;
@@ -447,7 +455,7 @@ pub fn bench_elasticity(
         ladder,
         adaptive: true,
     };
-    let base_svc = &contender.ladder.rungs[0].service;
+    let base_svc = &contender.ladder.points()[0].service;
 
     // the identical workload contract across every sweep cell,
     // calibrated against the reference (uniform, fixed) cluster
@@ -582,6 +590,117 @@ pub fn bench_elasticity(
     let stem = format!("bench_elasticity_{}_{}", spec.name, scenario.name);
     report::write_elasticity_csv(&out_dir.join(format!("{stem}.csv")), &rows)?;
     report::write_elasticity_json(&out_dir.join(format!("{stem}.json")), &rows)?;
+    Ok(rows)
+}
+
+/// `lexi bench-quality-surface`: price every point of the quality
+/// lattice analytically and emit the (modeled latency, proxy quality
+/// loss) surface — modeled decode step time at full occupancy,
+/// single-replica capacity at the `--service-len` request shape, and
+/// the Stage-1-comparable loss per point — annotated with the Pareto
+/// frontier over the whole lattice and, per point, how many pure-k
+/// rungs (the legacy 1-D ladder) it strictly dominates. A 2-D point
+/// with `pure_k_dominated > 0` is the lattice earning its keep: equal
+/// or better modeled latency than a k-only rung at equal or lower
+/// quality loss.
+pub fn bench_quality_surface(
+    spec: &ModelSpec,
+    cfg: &ServerConfig,
+    artifacts: Option<&Path>,
+    out_dir: &Path,
+) -> Result<Vec<report::QualitySurfaceReport>> {
+    let (table, source) = sensitivity_table_sourced(spec, artifacts, cfg.seed, cfg.table_mode)?;
+    println!("ladder Stage-1 table source: {source}");
+    let pm = PerfModel::new(spec.clone(), cfg.seed);
+    let lattice = QualityLattice::for_model(spec, &table, cfg, &pm)?;
+
+    // order key for dominance: non-finite loss never dominates and is
+    // dominated by any finite-loss point at equal speed
+    let loss_key = |q: f64| if q.is_finite() { q } else { f64::INFINITY };
+    let step = |p: &QualityPoint| p.service.step_time(cfg.slots_per_replica);
+    let dominates = |a: &QualityPoint, b: &QualityPoint| {
+        let (sa, sb) = (step(a), step(b));
+        let (qa, qb) = (loss_key(a.quality_loss), loss_key(b.quality_loss));
+        sa <= sb && qa <= qb && (sa < sb || qa < qb)
+    };
+
+    let points = lattice.points();
+    let mut rows = Vec::with_capacity(points.len());
+    for (idx, p) in points.iter().enumerate() {
+        let id = lattice.point_id(idx).expect("enumerate stays on-lattice");
+        let on_frontier = !points
+            .iter()
+            .enumerate()
+            .any(|(j, q)| j != idx && dominates(q, p));
+        let pure_k_dominated = (0..lattice.k_dim())
+            .filter(|&k| {
+                let j = lattice
+                    .index_of(PointId { k, s: 0 })
+                    .expect("s=0 row always exists");
+                j != idx && dominates(p, &points[j])
+            })
+            .count();
+        let mean_active_experts = if id.s == 0 {
+            let a = &p.allocation;
+            a.k.iter().map(|&k| k as f64).sum::<f64>() / a.k.len().max(1) as f64
+        } else {
+            let level = match cfg.ladder_axes {
+                crate::config::server::LadderAxes::KIntra => p.intra_frac,
+                crate::config::server::LadderAxes::KSkip => p.skip_threshold,
+                crate::config::server::LadderAxes::K => 0.0,
+            };
+            let eff = ladder::effective_k(
+                &p.allocation,
+                cfg.ladder_axes,
+                level,
+                spec.top_k as u32,
+                &pm,
+            );
+            eff.iter().sum::<f64>() / eff.len().max(1) as f64
+        };
+        rows.push(report::QualitySurfaceReport {
+            model: spec.name.to_string(),
+            axes: cfg.ladder_axes.label().to_string(),
+            label: p.label.clone(),
+            k: id.k,
+            s: id.s,
+            intra_frac: p.intra_frac,
+            skip_threshold: p.skip_threshold,
+            mean_active_experts,
+            step_time_s: step(p),
+            capacity_rps: p
+                .service
+                .capacity_rps(cfg.service_in_len as f64, cfg.service_out_len as f64),
+            quality_loss: p.quality_loss,
+            on_frontier,
+            pure_k_dominated,
+        });
+    }
+
+    report::print_quality_surface_header();
+    report::print_quality_surface_rows(&rows);
+    let frontier = rows.iter().filter(|r| r.on_frontier).count();
+    let winners = rows
+        .iter()
+        .filter(|r| r.s > 0 && r.pure_k_dominated > 0)
+        .count();
+    println!(
+        "  -> {} lattice points ({} x {}), {} on the Pareto frontier, \
+         {} sparsity-axis points dominate at least one pure-k rung",
+        rows.len(),
+        lattice.k_dim(),
+        lattice.s_dim(),
+        frontier,
+        winners
+    );
+
+    let stem = format!(
+        "quality_surface_{}_{}",
+        spec.name,
+        cfg.ladder_axes.label().replace('-', "_")
+    );
+    report::write_quality_surface_csv(&out_dir.join(format!("{stem}.csv")), &rows)?;
+    report::write_quality_surface_json(&out_dir.join(format!("{stem}.json")), &rows)?;
     Ok(rows)
 }
 
@@ -917,7 +1036,7 @@ pub(crate) fn sim_runs_elastic(
         .map_or(cfg.replicas, |(_, max)| cfg.replicas.max(max));
     let mut runs = Vec::new();
     for (ci, c) in line_up.iter().enumerate() {
-        let quality: Vec<f64> = c.ladder.rungs.iter().map(|r| r.quality_loss).collect();
+        let quality: Vec<f64> = c.ladder.points().iter().map(|r| r.quality_loss).collect();
         let policy = c.adaptive.then(|| LadderPolicy::from_config(cfg));
         let ladder = Rc::new(c.ladder.clone());
         // match the tier's re-priced contender by label, not position:
@@ -937,7 +1056,7 @@ pub(crate) fn sim_runs_elastic(
             })
             .unwrap_or_default();
         // residency transfers overlap with one full-batch decode step
-        let overlap = ladder.rungs[0].service.step_time(cfg.slots_per_replica);
+        let overlap = ladder.points()[0].service.step_time(cfg.slots_per_replica);
         let backends: Vec<Box<dyn ReplicaBackend>> = (0..pool)
             .map(|i| {
                 let rungs = tier_idx
@@ -945,7 +1064,7 @@ pub(crate) fn sim_runs_elastic(
                     .map(|&ti| Rc::clone(&tier_ladders[ti]))
                     .unwrap_or_else(|| Rc::clone(&ladder));
                 let mut r = Replica::new(i, cfg.slots_per_replica, rungs);
-                let res = replica_residency(spec, cfg, ladder.k_vec(0), i, Some(overlap));
+                let res = replica_residency(spec, cfg, ladder.k_vec(0).unwrap(), i, Some(overlap));
                 if let Some(res) = res {
                     r = r.with_residency(res);
                 }
@@ -978,7 +1097,7 @@ pub(crate) fn sim_runs_elastic(
                 cfg.evict,
                 cfg.seed,
             );
-            let warmup_s = crate::ctrl::warmup_cost_s(&rc, &ladder.k_vec(0));
+            let warmup_s = crate::ctrl::warmup_cost_s(&rc, &ladder.k_vec(0).unwrap());
             let scale_policy = AutoscalePolicy::for_cluster(
                 min,
                 max,
@@ -1123,7 +1242,7 @@ pub(crate) fn engine_runs<M: ModelBackend>(
     };
     let mut runs = Vec::new();
     for c in line_up {
-        let quality: Vec<f64> = c.ladder.rungs.iter().map(|r| r.quality_loss).collect();
+        let quality: Vec<f64> = c.ladder.points().iter().map(|r| r.quality_loss).collect();
         let ladder = Rc::new(c.ladder.clone());
         let policy = c.adaptive.then(|| LadderPolicy::from_config(cfg));
         let mut backends: Vec<Box<dyn ReplicaBackend + '_>> = Vec::new();
@@ -1131,10 +1250,10 @@ pub(crate) fn engine_runs<M: ModelBackend>(
             let mut engine = Engine::new(
                 model,
                 scfg.clone(),
-                ladder.k_vec(0),
+                ladder.k_vec(0).unwrap(),
                 vec![0.0f32; entry.n_layers * entry.n_experts],
             )?;
-            if let Some(res) = replica_residency(spec, cfg, ladder.k_vec(0), i, None) {
+            if let Some(res) = replica_residency(spec, cfg, ladder.k_vec(0).unwrap(), i, None) {
                 engine.set_residency(res)?;
             }
             backends.push(Box::new(EngineReplica::new(i, engine, Rc::clone(&ladder))?));

@@ -183,7 +183,10 @@ impl Replica {
     pub fn with_residency(mut self, residency: ExpertResidency) -> Self {
         assert_eq!(
             residency.n_layers(),
-            self.ladder.k_vec(self.rung).len(),
+            self.ladder
+                .k_vec(self.rung)
+                .expect("replica rung off the quality lattice")
+                .len(),
             "residency layer count != ladder k_vec length"
         );
         self.residency = Some(residency);
@@ -239,7 +242,14 @@ impl Replica {
             self.rung_switches += 1;
             self.pending_penalty_s += penalty_s;
             if let Some(r) = &mut self.residency {
-                r.set_k_vec(&self.ladder.k_vec(rung));
+                // a controller emitting an off-lattice index is a bug;
+                // fail loudly instead of serving the deepest point
+                r.set_k_vec(
+                    &self
+                        .ladder
+                        .k_vec(rung)
+                        .expect("controller set an off-lattice rung index"),
+                );
             }
         }
     }
@@ -253,7 +263,9 @@ impl Replica {
             return false;
         }
         let ladder = Rc::clone(&self.ladder);
-        let svc = ladder.service(self.rung);
+        let svc = ladder
+            .service(self.rung)
+            .expect("replica rung off the quality lattice");
         let free: Vec<usize> = self
             .slots
             .iter()
@@ -346,6 +358,10 @@ impl Replica {
             replica: self.id,
             accepting: true,
             rung: self.rung,
+            point: self
+                .ladder
+                .point_id(self.rung)
+                .expect("replica rung off the quality lattice"),
             last_switch_s: self.last_switch_s,
             queue_len: self.queue.len(),
             active: self.n_active(),
@@ -532,9 +548,9 @@ mod tests {
             Allocation::uniform(4, 2),
             ServiceModel::synthetic("t", 1e-4, 0.01, slots),
         );
-        Rc::new(QualityLadder {
-            rungs: (0..n).map(|_| base.rungs[0].clone()).collect(),
-        })
+        Rc::new(QualityLadder::from_points_1d(
+            (0..n).map(|_| base.points()[0].clone()).collect(),
+        ))
     }
 
     #[test]
@@ -657,7 +673,7 @@ mod tests {
             // tight budget, no prefetch: cold misses must stall
             let mut cfg = ResidencyConfig::for_dims(4, 8, 1 << 20, 0.25, EvictKind::Lru, 3);
             cfg.prefetch = false;
-            ExpertResidency::new(&cfg, ladder.k_vec(0), 0)
+            ExpertResidency::new(&cfg, ladder.k_vec(0).unwrap(), 0)
         };
         let mut cold = Replica::new(0, 2, Rc::clone(&ladder)).with_residency(mk());
         let mut free = Replica::new(1, 2, Rc::clone(&ladder));

@@ -834,6 +834,157 @@ pub fn print_header() {
     );
 }
 
+/// One cell of the `lexi bench-quality-surface` sweep: a lattice point
+/// priced by its analytical [`ServiceModel`](super::replica::ServiceModel)
+/// and scored by its Stage-1-comparable proxy quality loss.
+#[derive(Clone, Debug)]
+pub struct QualitySurfaceReport {
+    pub model: String,
+    /// Ladder axes the lattice was built with ("k", "k-intra", "k-skip").
+    pub axes: String,
+    pub label: String,
+    /// Lattice coordinate: k-axis index (0 = full base rung).
+    pub k: usize,
+    /// Lattice coordinate: sparsity-axis index (0 = axis off).
+    pub s: usize,
+    pub intra_frac: f64,
+    pub skip_threshold: f64,
+    /// Mean active experts per layer after both axes are applied.
+    pub mean_active_experts: f64,
+    /// Modeled decode step time at full batch occupancy.
+    pub step_time_s: f64,
+    /// Single-replica capacity from the service model (req/s).
+    pub capacity_rps: f64,
+    /// Proxy quality loss on the Stage-1 scale; NaN = not comparable
+    /// (serialized as null in JSON, empty in CSV — never as zero).
+    pub quality_loss: f64,
+    /// Pareto-optimal over the whole lattice (no point is at least as
+    /// fast AND at least as accurate with one strict improvement).
+    pub on_frontier: bool,
+    /// How many pure-k rungs (s = 0) this point dominates: no worse on
+    /// both (step time, quality loss), strictly better on one.
+    pub pure_k_dominated: usize,
+}
+
+pub const QUALITY_SURFACE_CSV_HEADER: [&str; 13] = [
+    "model",
+    "axes",
+    "label",
+    "k",
+    "s",
+    "intra_frac",
+    "skip_threshold",
+    "mean_active_experts",
+    "step_time_ms",
+    "capacity_rps",
+    "quality_loss",
+    "on_frontier",
+    "pure_k_dominated",
+];
+
+/// Render a possibly-NaN quality loss for CSV: empty cell, not "NaN",
+/// so downstream tooling never mistakes "unknown" for a number.
+fn loss_csv(q: f64) -> String {
+    if q.is_finite() {
+        format!("{q:.4}")
+    } else {
+        String::new()
+    }
+}
+
+/// Write one CSV row per lattice point.
+pub fn write_quality_surface_csv(path: &Path, reports: &[QualitySurfaceReport]) -> Result<()> {
+    let mut w = CsvWriter::create(path, &QUALITY_SURFACE_CSV_HEADER)?;
+    for r in reports {
+        csv_row!(
+            w,
+            r.model,
+            r.axes,
+            r.label,
+            r.k,
+            r.s,
+            format!("{:.3}", r.intra_frac),
+            format!("{:.3}", r.skip_threshold),
+            format!("{:.3}", r.mean_active_experts),
+            format!("{:.4}", r.step_time_s * 1e3),
+            format!("{:.4}", r.capacity_rps),
+            loss_csv(r.quality_loss),
+            r.on_frontier,
+            r.pure_k_dominated,
+        )?;
+    }
+    Ok(())
+}
+
+/// Write the quality-surface sweep as JSON. Non-finite quality losses
+/// serialize as `null`, never as a number.
+pub fn write_quality_surface_json(path: &Path, reports: &[QualitySurfaceReport]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let v = Json::Arr(
+        reports
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("model", Json::Str(r.model.clone())),
+                    ("axes", Json::Str(r.axes.clone())),
+                    ("label", Json::Str(r.label.clone())),
+                    ("k", Json::Num(r.k as f64)),
+                    ("s", Json::Num(r.s as f64)),
+                    ("intra_frac", Json::Num(r.intra_frac)),
+                    ("skip_threshold", Json::Num(r.skip_threshold)),
+                    ("mean_active_experts", Json::Num(r.mean_active_experts)),
+                    ("step_time_s", Json::Num(r.step_time_s)),
+                    ("capacity_rps", Json::Num(r.capacity_rps)),
+                    (
+                        "quality_loss",
+                        if r.quality_loss.is_finite() {
+                            Json::Num(r.quality_loss)
+                        } else {
+                            Json::Null
+                        },
+                    ),
+                    ("on_frontier", Json::Num(r.on_frontier as u8 as f64)),
+                    ("pure_k_dominated", Json::Num(r.pure_k_dominated as f64)),
+                ])
+            })
+            .collect(),
+    );
+    std::fs::write(path, v.to_string_pretty())?;
+    Ok(())
+}
+
+/// Print the quality-surface sweep as a table.
+pub fn print_quality_surface_header() {
+    println!(
+        "{:<22} {:>3} {:>3} {:>7} {:>8} {:>9} {:>9} {:>8} {:>9} {:>9}",
+        "point", "k", "s", "mean_k", "step_ms", "cap_rps", "loss", "frontier", "dom_k", "axes"
+    );
+}
+
+pub fn print_quality_surface_rows(reports: &[QualitySurfaceReport]) {
+    for r in reports {
+        println!(
+            "{:<22} {:>3} {:>3} {:>7.2} {:>8.3} {:>9.3} {:>9} {:>8} {:>9} {:>9}",
+            r.label,
+            r.k,
+            r.s,
+            r.mean_active_experts,
+            r.step_time_s * 1e3,
+            r.capacity_rps,
+            if r.quality_loss.is_finite() {
+                format!("{:.3}", r.quality_loss)
+            } else {
+                "n/a".to_string()
+            },
+            if r.on_frontier { "*" } else { "" },
+            r.pure_k_dominated,
+            r.axes,
+        );
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1142,5 +1293,40 @@ mod tests {
         assert_eq!(arr.len(), 1);
         assert_eq!(arr[0].get("transform").unwrap().as_str().unwrap(), "ladder");
         assert_eq!(arr[0].get("n_slo_met").unwrap().as_usize().unwrap(), 10);
+    }
+
+    #[test]
+    fn nan_quality_loss_serializes_as_null_not_zero() {
+        let point = |label: &str, s: usize, loss: f64| QualitySurfaceReport {
+            model: "m".into(),
+            axes: "k-intra".into(),
+            label: label.to_string(),
+            k: 0,
+            s,
+            intra_frac: 0.25 * s as f64,
+            skip_threshold: 0.0,
+            mean_active_experts: 2.0,
+            step_time_s: 0.01,
+            capacity_rps: 1.0,
+            quality_loss: loss,
+            on_frontier: true,
+            pure_k_dominated: 0,
+        };
+        let reports = vec![point("base", 0, 0.0), point("odd", 1, f64::NAN)];
+        let dir = std::env::temp_dir().join("lexi_quality_surface_report_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        write_quality_surface_csv(&dir.join("qs.csv"), &reports).unwrap();
+        write_quality_surface_json(&dir.join("qs.json"), &reports).unwrap();
+
+        let csv = std::fs::read_to_string(dir.join("qs.csv")).unwrap();
+        assert!(!csv.contains("NaN"), "CSV leaked a NaN literal:\n{csv}");
+        let json = crate::util::json::parse_file(&dir.join("qs.json")).unwrap();
+        let arr = json.as_arr().unwrap();
+        assert_eq!(arr[0].get("quality_loss").unwrap().as_f64().unwrap(), 0.0);
+        assert!(
+            matches!(arr[1].get("quality_loss"), Some(Json::Null)),
+            "NaN loss must be null, got {:?}",
+            arr[1].get("quality_loss")
+        );
     }
 }

@@ -227,15 +227,21 @@ impl RoutingPolicy for ClassAware {
 
     fn route(&mut self, req: &QueuedRequest, snap: &ClusterSnapshot, _rng: &mut Pcg32) -> usize {
         let c = candidate_indices(snap);
-        let max_rung = c.clone().map(|i| snap.replicas[i].rung).max().unwrap_or(0);
+        // lattice depth (k + s) is the scalar "how degraded" measure; on
+        // a 1-D lattice it equals the historical rung index exactly
+        let max_depth = c
+            .clone()
+            .map(|i| snap.replicas[i].point.depth())
+            .max()
+            .unwrap_or(0);
         c.map(|i| &snap.replicas[i])
             .min_by_key(|t| {
-                let rung_pref = if req.priority == 0 {
-                    t.rung // interactive: best quality first
+                let depth_pref = if req.priority == 0 {
+                    t.point.depth() // interactive: best quality first
                 } else {
-                    max_rung - t.rung // batch: most degraded first
+                    max_depth - t.point.depth() // batch: most degraded first
                 };
-                (rung_pref, t.load_cost, t.replica)
+                (depth_pref, t.load_cost, t.replica)
             })
             .expect("no routing candidates")
             .replica
@@ -790,8 +796,8 @@ impl<'a> Cluster<'a> {
                     TelemetryDetail::Full => cached_snapshot!(self, full_cache, now),
                 };
                 observe_min_slack(snap, &mut min_slack_obs);
-                let n_rungs = self.ladder.n_rungs();
-                let targets = self.controller.as_mut().unwrap().decide(snap, n_rungs);
+                let ladder = Rc::clone(&self.ladder);
+                let targets = self.controller.as_mut().unwrap().decide(snap, &ladder);
                 for (i, b) in self.backends.iter_mut().enumerate() {
                     if targets[i] != snap.replicas[i].rung {
                         b.set_rung(targets[i], now, self.reconfig_penalty_s);
@@ -1254,6 +1260,7 @@ mod tests {
                 .map(|(i, &(rung, load))| {
                     let mut t = ReplicaTelemetry::idle(i);
                     t.rung = rung;
+                    t.point = crate::server::ladder::PointId { k: rung, s: 0 };
                     t.load_cost = load;
                     t
                 })

@@ -43,8 +43,14 @@ pub struct ReplicaTelemetry {
     /// engine-backed replica has failed mid-run — its `admit` would
     /// silently drop requests, so routing and stealing avoid it).
     pub accepting: bool,
-    /// Current quality-ladder rung (0 = full quality).
+    /// Current quality point as a canonical linear lattice index
+    /// (0 = full quality). The wire format for traces and stats; the
+    /// typed coordinate lives in [`Self::point`].
     pub rung: usize,
+    /// Typed lattice coordinate of [`Self::rung`]: `(k, s)` steps along
+    /// the budget and sparsity axes. On a 1-D lattice `point.k == rung`
+    /// and `point.s == 0`.
+    pub point: super::ladder::PointId,
     /// Event-loop time of the last rung switch (−∞ before the first).
     pub last_switch_s: f64,
     /// Requests waiting in the local queue.
@@ -91,6 +97,7 @@ impl ReplicaTelemetry {
             replica,
             accepting: true,
             rung: 0,
+            point: super::ladder::PointId::default(),
             last_switch_s: f64::NEG_INFINITY,
             queue_len: 0,
             active: 0,

@@ -89,7 +89,7 @@ fn run_engine(s: &Scenario, trace: &Trace) -> RunResult {
         let engine = Engine::new(
             &model,
             scfg.clone(),
-            ladder.k_vec(0),
+            ladder.k_vec(0).unwrap(),
             vec![0.0f32; N_LAYERS * N_EXPERTS],
         )
         .unwrap();
@@ -131,7 +131,7 @@ fn an_undersized_engine_queue_is_rejected_at_construction() {
     let engine = Engine::new(
         &model,
         scfg,
-        ladder.k_vec(0),
+        ladder.k_vec(0).unwrap(),
         vec![0.0f32; N_LAYERS * N_EXPERTS],
     )
     .unwrap();

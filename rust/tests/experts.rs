@@ -163,7 +163,7 @@ fn kvec_pinning_beats_lru_goodput_under_tight_hbm_budget() {
             .map(|i| {
                 let residency = ExpertResidency::with_routing(
                     &cfg(7.0, policy, false),
-                    ladder.k_vec(0),
+                    ladder.k_vec(0).unwrap(),
                     i as u64,
                     two_hot_routing(),
                 );

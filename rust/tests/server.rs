@@ -271,19 +271,19 @@ fn ladder_beats_fixed_baseline_goodput_under_bursty_load() {
 
 /// Three synthetic rungs: deeper = faster decode, higher proxy loss.
 fn three_rung_ladder(slots: usize) -> QualityLadder {
-    let rung = |label: &str, step_s: f64, loss: f64| Rung {
-        label: label.to_string(),
-        allocation: Allocation::uniform(4, 2),
-        service: ServiceModel::synthetic(label, 1e-5, step_s, slots),
-        quality_loss: loss,
+    let rung = |label: &str, step_s: f64, loss: f64| {
+        Rung::k_only(
+            label,
+            Allocation::uniform(4, 2),
+            ServiceModel::synthetic(label, 1e-5, step_s, slots),
+            loss,
+        )
     };
-    QualityLadder {
-        rungs: vec![
-            rung("r0", 0.020, 0.0),
-            rung("r1", 0.012, 1.0),
-            rung("r2", 0.008, 2.0),
-        ],
-    }
+    QualityLadder::from_points_1d(vec![
+        rung("r0", 0.020, 0.0),
+        rung("r1", 0.012, 1.0),
+        rung("r2", 0.008, 2.0),
+    ])
 }
 
 fn burst_scenario() -> Scenario {
@@ -736,5 +736,101 @@ fn burn_critical_fires_before_the_first_hard_cap_reject() {
             .iter()
             .all(|e| e.get("kind").unwrap().as_str().unwrap() != "reject"),
         "a hard-cap reject preceded the first BurnCritical"
+    );
+}
+
+// ---------------------------------------------------------------------
+// 2-D quality lattice (active experts x intra-expert sparsity)
+// ---------------------------------------------------------------------
+
+/// The lattice refactor must not perturb a single byte of the default
+/// single-axis path: same config + seed reproduce the full report set
+/// and the emitted CSV/JSON artifacts bit-for-bit, across scenario
+/// shapes and seeds.
+#[test]
+fn one_d_ladder_stays_bit_identical_across_scenarios_and_seeds() {
+    let m = spec("minicpm-moe-8x2b").unwrap();
+    for kind in [
+        ScenarioKind::Poisson,
+        ScenarioKind::Bursty,
+        ScenarioKind::FlashCrowd,
+    ] {
+        for seed in [7, 11] {
+            let cfg = ServerConfig {
+                replicas: 2,
+                slots_per_replica: 4,
+                n_requests: 48,
+                scenario: kind,
+                service_in_len: 256,
+                service_out_len: 32,
+                seed,
+                ..Default::default()
+            };
+            let out_a =
+                std::env::temp_dir().join(format!("lexi_1d_parity_a_{}_{seed}", kind.label()));
+            let out_b =
+                std::env::temp_dir().join(format!("lexi_1d_parity_b_{}_{seed}", kind.label()));
+            let _ = std::fs::remove_dir_all(&out_a);
+            let _ = std::fs::remove_dir_all(&out_b);
+            let a = server::bench_serve(&m, &cfg, None, &out_a).unwrap();
+            let b = server::bench_serve(&m, &cfg, None, &out_b).unwrap();
+            assert_eq!(a, b, "{} seed {seed} diverged", kind.label());
+            for ext in ["csv", "json"] {
+                let f = format!("bench_serve_minicpm-moe-8x2b_{}.{ext}", kind.label());
+                let x = std::fs::read(out_a.join(&f)).unwrap();
+                let y = std::fs::read(out_b.join(&f)).unwrap();
+                assert_eq!(x, y, "{f} differs between identical runs (seed {seed})");
+            }
+        }
+    }
+}
+
+/// On a flash crowd, the 2-D controller has strictly more legal moves
+/// than the 1-D walk (the intra axis sells quality cheaper per latency
+/// step on shallow rungs), so adaptive goodput must not regress, and
+/// the lattice itself must be a real grid.
+#[test]
+fn two_d_intra_lattice_matches_or_beats_one_d_on_flash_crowd() {
+    use lexi_moe::config::server::LadderAxes;
+
+    let m = spec("qwen1.5-moe-a2.7b").unwrap();
+    let base_cfg = ServerConfig {
+        replicas: 2,
+        slots_per_replica: 8,
+        n_requests: 350,
+        scenario: ScenarioKind::FlashCrowd,
+        policy: PolicyKind::Jsq,
+        degrade_above: 8,
+        upgrade_below: 2,
+        service_in_len: 256,
+        service_out_len: 32,
+        seed: 5,
+        ..Default::default()
+    };
+    let out1 = std::env::temp_dir().join("lexi_2d_vs_1d_flash_k");
+    let out2 = std::env::temp_dir().join("lexi_2d_vs_1d_flash_kintra");
+    let _ = std::fs::remove_dir_all(&out1);
+    let _ = std::fs::remove_dir_all(&out2);
+    let one_d = server::bench_serve(&m, &base_cfg, None, &out1).unwrap();
+    let two_d_cfg = ServerConfig {
+        ladder_axes: LadderAxes::KIntra,
+        ..base_cfg
+    };
+    let two_d = server::bench_serve(&m, &two_d_cfg, None, &out2).unwrap();
+
+    let ladder_of = |rs: &[server::TransformReport]| {
+        rs.iter()
+            .find(|r| r.transform == "lexi-ladder")
+            .unwrap()
+            .clone()
+    };
+    let a = ladder_of(&one_d);
+    let b = ladder_of(&two_d);
+    assert!(b.rung_switches > 0, "2-D controller never adapted");
+    assert!(
+        b.goodput_rps >= a.goodput_rps * 0.999,
+        "2-D lattice goodput {:.4} rps below 1-D {:.4} rps",
+        b.goodput_rps,
+        a.goodput_rps
     );
 }
